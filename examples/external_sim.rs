@@ -1,0 +1,88 @@
+//! External-process simulators (§2.2): run *any executable* as the
+//! simulator — here a small shell script that "simulates" a damped
+//! oscillator, writes `_results.txt` in its scratch directory, and exits.
+//!
+//! Demonstrates the full contract: parameters as argv, per-task temp
+//! directory, `_results.txt` parsed and returned to the search engine —
+//! and a grid search driving it.
+//!
+//! Usage: cargo run --release --example external_sim -- [--np 4]
+
+use std::io::Write;
+use std::sync::Arc;
+
+use caravan::config::SchedulerConfig;
+use caravan::engine::Session;
+use caravan::extproc::CommandExecutor;
+use caravan::tasklib::Payload;
+use caravan::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let np = args.get_usize("np", 4);
+
+    // Write the "user simulator": any language works; the framework only
+    // sees argv in and _results.txt out.
+    let dir = std::env::temp_dir().join(format!("caravan_extsim_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let sim = dir.join("oscillator.sh");
+    {
+        let mut f = std::fs::File::create(&sim).unwrap();
+        f.write_all(
+            br#"#!/bin/sh
+# usage: oscillator.sh <omega> <damping> -- writes _results.txt in $PWD
+omega="$1"; zeta="$2"
+awk -v w="$omega" -v z="$zeta" 'BEGIN {
+  x = 1.0; v = 0.0; dt = 0.01; peak = 0.0; energy = 0.0;
+  for (i = 0; i < 2000; i++) {
+    a = -2*z*w*v - w*w*x;
+    v += a*dt; x += v*dt;
+    if (x > peak) peak = x;
+    energy += (v*v + w*w*x*x)*dt;
+  }
+  printf "%.6f %.6f %.6f\n", x, peak, energy > "_results.txt"
+}'
+"#,
+        )
+        .unwrap();
+    }
+    let mut perms = std::fs::metadata(&sim).unwrap().permissions();
+    use std::os::unix::fs::PermissionsExt;
+    perms.set_mode(0o755);
+    std::fs::set_permissions(&sim, perms).unwrap();
+
+    let cfg = SchedulerConfig { np, consumers_per_buffer: 4, flush_interval_ms: 2, ..Default::default() };
+    let executor = Arc::new(CommandExecutor::new(dir.join("work")));
+    let session = Session::start(cfg, executor);
+
+    println!("# grid sweep over (omega, damping) via the external simulator");
+    println!("{:>7} {:>7} {:>12} {:>12} {:>12}", "omega", "zeta", "x_final", "x_peak", "energy");
+    let mut handles = Vec::new();
+    let mut points = Vec::new();
+    for wi in 1..=4 {
+        for zi in 0..4 {
+            let omega = wi as f64;
+            let zeta = zi as f64 * 0.15;
+            points.push((omega, zeta));
+            handles.push(session.create_task(Payload::Command {
+                cmdline: format!("{} {omega} {zeta}", sim.display()),
+            }));
+        }
+    }
+    let results = session.await_all(&handles);
+    for ((omega, zeta), r) in points.iter().zip(&results) {
+        assert!(r.ok(), "simulator failed: rc={}", r.rc);
+        assert_eq!(r.results.len(), 3, "expected 3 values in _results.txt");
+        println!(
+            "{omega:>7.2} {zeta:>7.2} {:>12.6} {:>12.6} {:>12.6}",
+            r.results[0], r.results[1], r.results[2]
+        );
+    }
+    let report = session.shutdown();
+    println!(
+        "# {} external runs, filling rate {:.1}%",
+        report.results.len(),
+        report.rate(np) * 100.0
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,77 @@
+//! Quickstart — the §2.3 API patterns, in Rust.
+//!
+//! Mirrors the three example programs of the paper:
+//!   1. a minimal batch of ten parallel tasks,
+//!   2. callbacks: each completion spawns a follow-up task,
+//!   3. async/await: three concurrent activities of five sequential tasks.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (uses time-compressed dummy tasks: one virtual second = 2 ms.)
+
+use std::sync::Arc;
+
+use caravan::config::SchedulerConfig;
+use caravan::engine::Session;
+use caravan::scheduler::SleepExecutor;
+use caravan::tasklib::Payload;
+
+fn main() {
+    let time_scale = 0.002;
+    let cfg = SchedulerConfig {
+        np: 8,
+        consumers_per_buffer: 4,
+        flush_interval_ms: 2,
+        time_scale,
+        ..Default::default()
+    };
+    let session = Arc::new(Session::start(cfg, Arc::new(SleepExecutor { time_scale })));
+
+    // --- 1. Ten parallel tasks -------------------------------------------
+    println!("== ten parallel tasks ==");
+    let tasks: Vec<_> = (0..10)
+        .map(|i| session.create_task(Payload::Sleep { seconds: (i % 3 + 1) as f64 }))
+        .collect();
+    for (i, r) in session.await_all(&tasks).iter().enumerate() {
+        println!("task {i}: consumer={} duration={:.3}s rc={}", r.consumer, r.duration(), r.rc);
+    }
+
+    // --- 2. Callbacks ----------------------------------------------------
+    println!("== callbacks: 10 tasks, each spawning one follow-up ==");
+    let firsts: Vec<_> = (0..10)
+        .map(|i| {
+            session.create_task_with_callback(
+                Payload::Sleep { seconds: (i % 3 + 1) as f64 },
+                Box::new(move |r, h| {
+                    println!("  callback for task {} (finished at {:.3}s) -> spawning one more", r.id, r.finish);
+                    h.create_task(Payload::Sleep { seconds: 1.0 });
+                }),
+            )
+        })
+        .collect();
+    session.await_all(&firsts);
+
+    // --- 3. Concurrent activities of sequential tasks --------------------
+    println!("== three concurrent activities x five sequential tasks ==");
+    let mut activities = Vec::new();
+    for n in 0..3u64 {
+        let s = Arc::clone(&session);
+        activities.push(std::thread::spawn(move || {
+            for t in 0..5u64 {
+                let task = s.create_task(Payload::Sleep { seconds: ((t + n) % 3 + 1) as f64 });
+                let r = s.await_task(&task);
+                println!("  activity {n} step {t}: [{:.2}, {:.2}] on consumer {}", r.begin, r.finish, r.consumer);
+            }
+        }));
+    }
+    for a in activities {
+        a.join().unwrap();
+    }
+
+    let report = session.shutdown();
+    println!(
+        "== done: {} tasks, filling rate {:.1}% (np=8), wall {:.2}s ==",
+        report.results.len(),
+        report.rate(8) * 100.0,
+        report.wall_secs
+    );
+}

@@ -1,0 +1,93 @@
+"""AOT export: lower the Layer-2 model to HLO *text* for the rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (one per scenario class; shapes must match
+``rust/src/evac/scenario.rs``):
+
+  artifacts/evac_tiny.hlo.txt   A=256,  L=98,   N=30,  S=3,  T=512
+  artifacts/evac_mini.hlo.txt   A=4096, L=1520, N=400, S=12, T=1024
+  artifacts/meta.json           shape + physics table consumed by rust
+
+Usage: python -m compile.aot --out ../artifacts   (from python/)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import evac_run
+
+# Physics constants — keep identical to SimParams::default() in
+# rust/src/evac/sim.rs.
+PHYSICS = dict(dt=2.0, v_free=1.4, rho_jam=4.0, v_min_frac=0.10,
+               penalty=600.0)
+
+# Scenario classes — keep identical to ScenarioParams::{tiny,yodogawa_mini}
+# (A = n_agents, L = padded full-grid links, N = nodes, S = shelters,
+# T = sim.max_steps).
+VARIANTS = {
+    "tiny": dict(A=256, L=98, N=30, S=3, T=512),
+    "mini": dict(A=4096, L=1520, N=400, S=12, T=1024),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_variant(spec):
+    a, l, n, s, t = spec["A"], spec["L"], spec["N"], spec["S"], spec["T"]
+
+    def fn(link, pos, dest, length, to, next_link, shelter_node):
+        return evac_run(link, pos, dest, length, to, next_link,
+                        shelter_node, steps=t, **PHYSICS)
+
+    args = (
+        jax.ShapeDtypeStruct((a,), jnp.int32),        # link
+        jax.ShapeDtypeStruct((a,), jnp.float32),      # pos
+        jax.ShapeDtypeStruct((a,), jnp.int32),        # dest
+        jax.ShapeDtypeStruct((l + 1,), jnp.float32),  # length
+        jax.ShapeDtypeStruct((l + 1,), jnp.int32),    # to
+        jax.ShapeDtypeStruct((n * s,), jnp.int32),    # next_link
+        jax.ShapeDtypeStruct((s,), jnp.int32),        # shelter_node
+    )
+    return jax.jit(fn).lower(*args)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts directory")
+    ap.add_argument("--variants", default="tiny,mini")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    meta = {"physics": PHYSICS, "variants": {}}
+    for name in args.variants.split(","):
+        spec = VARIANTS[name]
+        lowered = lower_variant(spec)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"evac_{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["variants"][name] = dict(spec, file=f"evac_{name}.hlo.txt")
+        print(f"wrote {path} ({len(text)} chars) spec={spec}")
+
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

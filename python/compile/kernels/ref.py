@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the speed/advance kernel and the full step.
+
+No pallas here: plain vectorized jax.numpy, structured for readability
+over speed. pytest (``python/tests``) asserts the Pallas kernel matches
+this oracle exactly (same f32 arithmetic), and the rust reference
+simulator is cross-checked against the compiled model built from the
+kernel.
+"""
+
+import jax.numpy as jnp
+
+
+def link_speeds(link, length, *, v_free, rho_jam, v_min_frac):
+    """Per-link congestion speeds from agent counts.
+
+    ``link`` i32[A] (sentinel = L), ``length`` f32[L+1] (sentinel row BIG).
+    Returns f32[L+1]; the sentinel row's speed is harmless (density ~ 0)
+    and is zeroed explicitly so arrived agents never move.
+    """
+    n_rows = length.shape[0]
+    cnt = jnp.zeros((n_rows,), jnp.float32).at[link].add(1.0)
+    rho = cnt / length
+    factor = jnp.clip(1.0 - rho / rho_jam, v_min_frac, 1.0)
+    v = v_free * factor
+    return v.at[n_rows - 1].set(0.0)
+
+
+def speed_advance_ref(link, pos, dest, v, length, to, next_link,
+                      shelter_node, *, dt):
+    """Oracle for kernels.speed_advance: identical update, plain jnp."""
+    n_links = v.shape[0] - 1
+    n_shelters = shelter_node.shape[0]
+    va = v[link]
+    ln = length[link]
+    p = pos + va * jnp.float32(dt)  # f32, matching the kernel and rust
+    at_end = p >= ln
+    node = to[link]
+    arrive = at_end & (node == shelter_node[dest])
+    nxt = next_link[node * n_shelters + dest]
+    new_link = jnp.where(at_end, jnp.where(arrive, n_links, nxt), link)
+    new_pos = jnp.where(at_end, jnp.where(arrive, 0.0, p - ln), p)
+    return new_link.astype(jnp.int32), new_pos.astype(jnp.float32)
+
+
+def step_ref(link, pos, dest, length, to, next_link, shelter_node, *,
+             dt, v_free, rho_jam, v_min_frac):
+    """One full canonical step (density -> speeds -> advance), oracle form."""
+    v = link_speeds(link, length, v_free=v_free, rho_jam=rho_jam,
+                    v_min_frac=v_min_frac)
+    return speed_advance_ref(link, pos, dest, v, length, to, next_link,
+                             shelter_node, dt=dt)

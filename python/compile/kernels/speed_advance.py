@@ -1,0 +1,120 @@
+"""Layer-1 Pallas kernel: the per-step agent update of the evacuation
+simulator — the compute hot-spot the whole stack schedules 10^5 times.
+
+For each agent tile the kernel fuses:
+
+  gather(link speed)  ->  position advance  ->  link-end test  ->
+  transition (next_link routing-table gather)  /  arrival test
+
+into one VMEM-resident pass. The agent arrays are tiled with ``BlockSpec``
+(``TILE`` agents per grid step); the per-link tables (speed, length,
+to-node) and the routing table are small (<= a few thousand entries) and
+are mapped whole into every grid step -- the TPU analogue of keeping the
+road network in shared memory (DESIGN.md par.Hardware-Adaptation).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode traces the kernel into plain HLO so the same
+artifact runs under the rust runtime. Real-TPU estimates live in
+DESIGN.md par.Perf.
+
+Semantics must stay in lock-step with ``rust/src/evac/sim.rs`` (the
+canonical reference) and ``kernels/ref.py`` (the jnp oracle).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Agent-tile sizing. Perf pass result (EXPERIMENTS.md par.Perf): on the CPU
+# interpret path, *fewer, larger* tiles win decisively -- each grid step
+# costs per-op dispatch + dynamic-slice overhead, so one 4096-agent tile
+# runs the mini scenario 3.3x faster than sixteen 256-agent tiles
+# (70 ms -> 21 ms per evaluation). On a real TPU the same choice holds at
+# these sizes: a 4096-agent tile is 6 arrays x 16 KiB = 96 KiB of VMEM,
+# plus ~32 KiB of tables -- far below the ~16 MiB budget, and the larger
+# tile keeps the VPU lanes full. MAX_TILE caps the tile for hypothetical
+# larger scenarios; agent counts must be a multiple of TILE (smaller
+# inputs) or of MAX_TILE.
+MAX_TILE = 4096
+TILE = 256  # minimum granularity; callers pad agent counts to this
+
+
+def tile_for(n_agents):
+    """Largest supported tile for `n_agents` (<= MAX_TILE, divides evenly)."""
+    if n_agents <= MAX_TILE:
+        return n_agents
+    assert n_agents % MAX_TILE == 0, n_agents
+    return MAX_TILE
+
+
+def _kernel(link_ref, pos_ref, dest_ref,
+            v_ref, length_ref, to_ref, next_ref, shelter_ref,
+            nlink_ref, npos_ref,
+            *, dt, n_links, n_shelters):
+    link = link_ref[...]          # i32[TILE] (n_links == arrived sentinel)
+    pos = pos_ref[...]            # f32[TILE]
+    dest = dest_ref[...]          # i32[TILE]
+
+    v = v_ref[link]               # gather: per-agent speed (0 on sentinel)
+    length = length_ref[link]     # gather: link length (BIG on sentinel)
+    # f32 throughout: interpret mode would otherwise promote the python
+    # float dt to f64 and diverge from the oracle/rust by one ulp.
+    p = pos + v * jnp.float32(dt)
+
+    at_end = p >= length
+    node = to_ref[link]
+    arrive = at_end & (node == shelter_ref[dest])
+    nxt = next_ref[node * n_shelters + dest]
+
+    new_link = jnp.where(at_end, jnp.where(arrive, n_links, nxt), link)
+    new_pos = jnp.where(at_end, jnp.where(arrive, 0.0, p - length), p)
+
+    nlink_ref[...] = new_link.astype(jnp.int32)
+    npos_ref[...] = new_pos.astype(jnp.float32)
+
+
+def speed_advance(link, pos, dest, v, length, to, next_link, shelter_node,
+                  *, dt):
+    """Advance all agents one step given per-link speeds ``v``.
+
+    Args:
+      link:  i32[A]  current link id (``n_links`` = arrived).
+      pos:   f32[A]  position along the link (metres).
+      dest:  i32[A]  destination shelter index.
+      v:     f32[L+1] per-link speed this step (sentinel row = 0).
+      length:f32[L+1] link lengths (sentinel row = BIG).
+      to:    i32[L+1] end node per link (sentinel row = 0).
+      next_link: i32[N*S] flattened routing table.
+      shelter_node: i32[S].
+      dt: time step (python float, baked).
+
+    Returns:
+      (new_link i32[A], new_pos f32[A]).
+    """
+    a = link.shape[0]
+    tile = tile_for(a)
+    assert a % tile == 0, f"agent count {a} must be a multiple of {tile}"
+    n_links = v.shape[0] - 1
+    n_shelters = shelter_node.shape[0]
+    grid = (a // tile,)
+
+    agent_spec = pl.BlockSpec((tile,), lambda i: (i,))
+    full = lambda n: pl.BlockSpec((n,), lambda i: (0,))
+
+    return pl.pallas_call(
+        partial(_kernel, dt=dt, n_links=n_links, n_shelters=n_shelters),
+        grid=grid,
+        in_specs=[
+            agent_spec, agent_spec, agent_spec,
+            full(v.shape[0]), full(length.shape[0]), full(to.shape[0]),
+            full(next_link.shape[0]), full(shelter_node.shape[0]),
+        ],
+        out_specs=[agent_spec, agent_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((a,), jnp.int32),
+            jax.ShapeDtypeStruct((a,), jnp.float32),
+        ],
+        interpret=True,
+    )(link, pos, dest, v, length, to, next_link, shelter_node)

@@ -1,0 +1,88 @@
+"""Layer-2 JAX model: the full evacuation simulation as a fixed-shape
+``lax.scan``, calling the Layer-1 Pallas kernel each step.
+
+One compiled artifact serves every evacuation plan on a given scenario
+class: the host (rust) computes the initial agent state and the network /
+routing arrays and passes them as inputs; scenario *shapes* (A, L, N, S)
+and physics constants (dt, v_free, rho_jam, v_min_frac, penalty, T) are
+baked at AOT time (``aot.py``).
+
+Outputs per run:
+  f1_seconds  f32[]   dt * (#steps with unfinished evacuation)
+                      + penalty * (#agents still en route at T)
+  remaining   f32[]   agents still en route at T
+  arrivals    f32[T]  cumulative arrivals after each step
+
+The update semantics are the canonical model of rust/src/evac/sim.rs.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.speed_advance import speed_advance
+from compile.kernels.ref import link_speeds
+
+
+@partial(jax.jit, static_argnames=(
+    "steps", "dt", "v_free", "rho_jam", "v_min_frac", "penalty"))
+def evac_run(link, pos, dest, length, to, next_link, shelter_node, *,
+             steps, dt, v_free, rho_jam, v_min_frac, penalty):
+    """Run the evacuation for ``steps`` steps. See module docstring."""
+    from compile.kernels.speed_advance import TILE
+
+    n_agents = link.shape[0]
+    # Pad the agent axis to the kernel tile with already-arrived sentinels
+    # (link = L): they never move, never count (subtracted from arrivals).
+    pad = (-n_agents) % TILE
+    if pad:
+        sentinel = length.shape[0] - 1
+        link = jnp.concatenate([link, jnp.full((pad,), sentinel, jnp.int32)])
+        pos = jnp.concatenate([pos, jnp.zeros((pad,), jnp.float32)])
+        dest = jnp.concatenate([dest, jnp.zeros((pad,), jnp.int32)])
+
+    def step(carry, _):
+        lnk, p = carry
+        # Density -> per-link speed (L2: scatter-add segment sum; the
+        # sentinel row is zeroed so arrived agents stay put).
+        v = link_speeds(lnk, length, v_free=v_free, rho_jam=rho_jam,
+                        v_min_frac=v_min_frac)
+        # L1 Pallas kernel: fused gather/advance/transition/arrival.
+        new_link, new_pos = speed_advance(
+            lnk, p, dest, v, length, to, next_link, shelter_node, dt=dt)
+        arrived = jnp.sum((new_link == length.shape[0] - 1).astype(jnp.float32))
+        return (new_link, new_pos), arrived
+
+    (final_link, _), arrivals = jax.lax.scan(
+        step, (link, pos), None, length=steps)
+    arrivals = arrivals - jnp.float32(pad)  # drop padded sentinels
+    n = jnp.float32(n_agents)
+    remaining = n - arrivals[-1]
+    steps_not_done = jnp.sum((arrivals < n).astype(jnp.float32))
+    f1 = dt * steps_not_done + penalty * remaining
+    del final_link
+    return f1, remaining, arrivals
+
+
+def evac_run_ref(link, pos, dest, length, to, next_link, shelter_node, *,
+                 steps, dt, v_free, rho_jam, v_min_frac, penalty):
+    """Oracle twin of ``evac_run`` built from ref.step_ref (no pallas)."""
+    from compile.kernels.ref import step_ref
+
+    n_agents = link.shape[0]
+
+    def step(carry, _):
+        lnk, p = carry
+        new_link, new_pos = step_ref(
+            lnk, p, dest, length, to, next_link, shelter_node,
+            dt=dt, v_free=v_free, rho_jam=rho_jam, v_min_frac=v_min_frac)
+        arrived = jnp.sum((new_link == length.shape[0] - 1).astype(jnp.float32))
+        return (new_link, new_pos), arrived
+
+    (_, _), arrivals = jax.lax.scan(step, (link, pos), None, length=steps)
+    n = jnp.float32(n_agents)
+    remaining = n - arrivals[-1]
+    steps_not_done = jnp.sum((arrivals < n).astype(jnp.float32))
+    f1 = dt * steps_not_done + penalty * remaining
+    return f1, remaining, arrivals

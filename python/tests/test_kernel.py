@@ -1,0 +1,147 @@
+"""Layer-1 correctness: the Pallas kernel against the pure-jnp oracle.
+
+This is the CORE correctness signal for the compiled stack: the kernel
+must match ``ref.speed_advance_ref`` bit-for-bit (identical f32 ops), over
+hypothesis-generated networks, agent states and physics parameters.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import link_speeds, speed_advance_ref, step_ref
+from compile.kernels.speed_advance import speed_advance, TILE
+
+jax.config.update("jax_platform_name", "cpu")
+
+BIG = 1e9
+
+
+def toy_network(n_links, n_nodes, n_shelters, rng):
+    """Random network arrays in canonical (padded) form."""
+    length = np.concatenate([
+        rng.uniform(5.0, 200.0, n_links).astype(np.float32), [BIG]])
+    to = np.concatenate([
+        rng.integers(0, n_nodes, n_links).astype(np.int32), [0]])
+    next_link = rng.integers(0, n_links, n_nodes * n_shelters).astype(np.int32)
+    shelter_node = rng.choice(n_nodes, size=n_shelters,
+                              replace=False).astype(np.int32)
+    return length, to, next_link, shelter_node
+
+
+def toy_agents(n_agents, n_links, n_shelters, rng, arrived_frac=0.1):
+    link = rng.integers(0, n_links, n_agents).astype(np.int32)
+    arrived = rng.uniform(size=n_agents) < arrived_frac
+    link[arrived] = n_links
+    pos = rng.uniform(0.0, 200.0, n_agents).astype(np.float32)
+    pos[arrived] = 0.0
+    dest = rng.integers(0, n_shelters, n_agents).astype(np.int32)
+    return link, pos, dest
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_kernel_matches_ref_exactly(seed):
+    rng = np.random.default_rng(seed)
+    n_links, n_nodes, n_shelters, n_agents = 37, 20, 4, 2 * TILE
+    length, to, next_link, shelter_node = toy_network(
+        n_links, n_nodes, n_shelters, rng)
+    link, pos, dest = toy_agents(n_agents, n_links, n_shelters, rng)
+    v = link_speeds(jnp.asarray(link), jnp.asarray(length),
+                    v_free=1.4, rho_jam=2.0, v_min_frac=0.05)
+
+    got_link, got_pos = speed_advance(
+        jnp.asarray(link), jnp.asarray(pos), jnp.asarray(dest), v,
+        jnp.asarray(length), jnp.asarray(to), jnp.asarray(next_link),
+        jnp.asarray(shelter_node), dt=2.0)
+    want_link, want_pos = speed_advance_ref(
+        jnp.asarray(link), jnp.asarray(pos), jnp.asarray(dest), v,
+        jnp.asarray(length), jnp.asarray(to), jnp.asarray(next_link),
+        jnp.asarray(shelter_node), dt=2.0)
+
+    # Discrete state must agree exactly; positions may differ by one ulp
+    # because XLA fuses mul+add into FMA differently per jit.
+    np.testing.assert_array_equal(np.asarray(got_link), np.asarray(want_link))
+    np.testing.assert_allclose(np.asarray(got_pos), np.asarray(want_pos),
+                               rtol=1e-6, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_links=st.integers(1, 300),
+    n_shelters=st.integers(1, 16),
+    tiles=st.integers(1, 3),
+    dt=st.floats(0.5, 5.0),
+    v_free=st.floats(0.5, 3.0),
+)
+def test_kernel_matches_ref_hypothesis(seed, n_links, n_shelters, tiles,
+                                       dt, v_free):
+    """Hypothesis sweep over shapes and physics parameters."""
+    rng = np.random.default_rng(seed)
+    n_nodes = max(n_shelters, rng.integers(n_shelters, n_shelters + 50))
+    n_agents = tiles * TILE
+    length, to, next_link, shelter_node = toy_network(
+        n_links, n_nodes, n_shelters, rng)
+    link, pos, dest = toy_agents(n_agents, n_links, n_shelters, rng)
+    v = link_speeds(jnp.asarray(link), jnp.asarray(length),
+                    v_free=v_free, rho_jam=2.0, v_min_frac=0.05)
+    args = (jnp.asarray(link), jnp.asarray(pos), jnp.asarray(dest), v,
+            jnp.asarray(length), jnp.asarray(to), jnp.asarray(next_link),
+            jnp.asarray(shelter_node))
+    got_link, got_pos = speed_advance(*args, dt=dt)
+    want_link, want_pos = speed_advance_ref(*args, dt=dt)
+    np.testing.assert_array_equal(np.asarray(got_link), np.asarray(want_link))
+    # One-ulp FMA slack (see test_kernel_matches_ref_exactly).
+    np.testing.assert_allclose(np.asarray(got_pos), np.asarray(want_pos),
+                               rtol=1e-6, atol=1e-4)
+
+
+def test_arrived_agents_never_move():
+    rng = np.random.default_rng(0)
+    n_links, n_nodes, n_shelters = 10, 8, 2
+    length, to, next_link, shelter_node = toy_network(
+        n_links, n_nodes, n_shelters, rng)
+    link = np.full(TILE, n_links, np.int32)  # everyone already arrived
+    pos = np.zeros(TILE, np.float32)
+    dest = np.zeros(TILE, np.int32)
+    v = link_speeds(jnp.asarray(link), jnp.asarray(length),
+                    v_free=1.4, rho_jam=2.0, v_min_frac=0.05)
+    new_link, new_pos = speed_advance(
+        jnp.asarray(link), jnp.asarray(pos), jnp.asarray(dest), v,
+        jnp.asarray(length), jnp.asarray(to), jnp.asarray(next_link),
+        jnp.asarray(shelter_node), dt=2.0)
+    np.testing.assert_array_equal(np.asarray(new_link), link)
+    np.testing.assert_array_equal(np.asarray(new_pos), pos)
+
+
+def test_congestion_reduces_speed():
+    # Crowded link slower than empty link.
+    length = jnp.asarray([100.0, 100.0, BIG], jnp.float32)
+    link = jnp.asarray([0] * 150 + [1], jnp.int32)
+    v = link_speeds(link, length, v_free=1.4, rho_jam=2.0, v_min_frac=0.05)
+    assert float(v[0]) < float(v[1])
+    assert float(v[0]) >= 1.4 * 0.05 - 1e-6
+    assert float(v[2]) == 0.0  # sentinel row zeroed
+
+
+def test_step_ref_transition_and_arrival():
+    # Two-link line, one agent at the end of link 0 moving to shelter at
+    # node 2: step 1 transitions to link 1; placing it at the end of link 1
+    # arrives next step.
+    length = jnp.asarray([10.0, 10.0, BIG], jnp.float32)
+    to = jnp.asarray([1, 2, 0], jnp.int32)
+    next_link = jnp.asarray([0, 1, 0], jnp.int32)  # N=3 nodes, S=1
+    shelter = jnp.asarray([2], jnp.int32)
+    link = jnp.asarray([0], jnp.int32)
+    pos = jnp.asarray([9.5], jnp.float32)
+    dest = jnp.asarray([0], jnp.int32)
+    kw = dict(dt=1.0, v_free=1.0, rho_jam=100.0, v_min_frac=0.05)
+    l1, p1 = step_ref(link, pos, dest, length, to, next_link, shelter, **kw)
+    assert int(l1[0]) == 1
+    assert 0.0 <= float(p1[0]) < 1.0
+    l2, p2 = step_ref(jnp.asarray([1], jnp.int32), jnp.asarray([9.9], jnp.float32),
+                      dest, length, to, next_link, shelter, **kw)
+    assert int(l2[0]) == 2  # sentinel: arrived
+    assert float(p2[0]) == 0.0

@@ -1,0 +1,89 @@
+//! §4.2 ablation: asynchronous generation update vs the conventional
+//! synchronous NSGA-II barrier.
+//!
+//! "If we wait for the completion of the calculations for all individuals,
+//! a significant amount of CPU resource is wasted because of the serious
+//! load imbalance."
+//!
+//! Both engines run the same toy problem on the DES with heavy-tailed
+//! evaluation durations (power-law exponent −2, [5,100] s — §3's TC2
+//! distribution) and with the paper's narrow 30–50 min band; the async
+//! variant should fill the machine, the sync variant idles at every
+//! generation boundary.
+
+mod common;
+
+use caravan::des::{run_des, DesConfig, DurationModel};
+use caravan::engine::{MoeaConfig, Nsga2Engine};
+use caravan::tasklib::{Payload, TaskSpec};
+use caravan::util::rng::Pcg64;
+use common::banner;
+
+struct EvalModel {
+    rng: Pcg64,
+    heavy_tail: bool,
+}
+
+impl DurationModel for EvalModel {
+    fn duration(&mut self, _t: &TaskSpec) -> f64 {
+        if self.heavy_tail {
+            self.rng.power_law(5.0, 100.0, -2.0)
+        } else {
+            self.rng.range_f64(1800.0, 3000.0) // paper: 30–50 min
+        }
+    }
+    fn results(&mut self, t: &TaskSpec) -> Vec<f64> {
+        match &t.payload {
+            Payload::Eval { input, .. } => {
+                let n = input.len() as f64;
+                let f1 = input.iter().sum::<f64>() / n;
+                let f2 = input.iter().map(|x| (1.0 - x) * (1.0 - x)).sum::<f64>() / n;
+                let f3 = input.iter().map(|x| (0.5 - x).abs()).sum::<f64>() / n;
+                vec![f1, f2, f3]
+            }
+            _ => vec![],
+        }
+    }
+}
+
+fn run(np: usize, synchronous: bool, heavy_tail: bool) -> (f64, f64, usize) {
+    let mut cfg = MoeaConfig::paper_defaults(vec![(0.0, 1.0); 8]);
+    cfg.p_ini = 256;
+    cfg.p_n = 128;
+    cfg.p_archive = 256;
+    cfg.generations = 12;
+    cfg.n_runs = 5;
+    cfg.synchronous = synchronous;
+    cfg.seed = 1;
+    let (engine, outcome) = Nsga2Engine::new(cfg);
+    let des = DesConfig::new(np);
+    let r = run_des(
+        &des,
+        Box::new(engine),
+        Box::new(EvalModel { rng: Pcg64::new(9), heavy_tail }),
+    );
+    let out = outcome.lock().unwrap();
+    (r.rate(np) * 100.0, r.makespan, out.tasks_completed)
+}
+
+fn main() {
+    banner(
+        "§4.2 ablation — asynchronous vs synchronous generation update",
+        "NSGA-II Pini=256 Pn=128 ×12 gens ×5 runs/ind on the DES; filling rate and makespan",
+    );
+    println!(
+        "{:>8} {:>22} | {:>9} {:>13} {:>8} | {:>9} {:>13} {:>8} | {:>8}",
+        "Np", "eval duration", "async r%", "makespan[s]", "tasks", "sync r%", "makespan[s]", "tasks", "speedup"
+    );
+    for &(np, heavy) in &[(256usize, true), (1024, true), (256, false), (1024, false)] {
+        let (ra, ma, ta) = run(np, false, heavy);
+        let (rs, ms, ts) = run(np, true, heavy);
+        let label = if heavy { "power-law [5,100]s" } else { "uniform 30-50min" };
+        println!(
+            "{:>8} {:>22} | {:>8.2}% {:>13.0} {:>8} | {:>8.2}% {:>13.0} {:>8} | {:>7.2}x",
+            np, label, ra, ma, ta, rs, ms, ts, ms / ma
+        );
+    }
+    println!("# expected: async keeps consumers busy (high r, shorter makespan);");
+    println!("# sync idles at every generation barrier, worst under heavy tails.");
+}

@@ -1,0 +1,92 @@
+//! §3 motivation ablation: the buffered layer vs a naive single master.
+//!
+//! "Without the buffered layer, the producer process must communicate with
+//! thousands or more consumer processes, which causes technical problems
+//! and the entire process cannot be completed normally."
+//!
+//! The DES models the producer as a serial server (50 µs/message): with
+//! short tasks and many consumers the naive design saturates (filling rate
+//! collapses, producer lag explodes) while the 1:384 buffered hierarchy
+//! keeps the master's message rate low. Sweeps N_p and task duration.
+
+mod common;
+
+use caravan::des::{run_des, DesConfig, SleepDurations};
+use caravan::tasklib::{Payload, SearchEngine, TaskResult, TaskSink};
+use common::banner;
+
+struct FixedTasks {
+    n: usize,
+    secs: f64,
+}
+
+impl SearchEngine for FixedTasks {
+    fn start(&mut self, sink: &mut dyn TaskSink) {
+        for _ in 0..self.n {
+            sink.submit(Payload::Sleep { seconds: self.secs });
+        }
+    }
+    fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn TaskSink) {}
+}
+
+fn run(np: usize, n: usize, secs: f64, direct: bool) -> (f64, f64, u64) {
+    let mut cfg = DesConfig::new(np);
+    cfg.direct = direct;
+    let r = run_des(&cfg, Box::new(FixedTasks { n, secs }), Box::new(SleepDurations));
+    assert_eq!(r.results.len(), n);
+    (r.rate(np) * 100.0, r.max_producer_lag, r.producer_msgs_in + r.producer_msgs_out)
+}
+
+fn main() {
+    banner(
+        "§3 ablation — buffered layer (1:384) vs naive single master",
+        "20 tasks/consumer; producer service 50 µs/message; filling rate r% and peak producer lag",
+    );
+    println!(
+        "{:>8} {:>8} | {:>10} {:>12} {:>11} | {:>10} {:>12} {:>11}",
+        "Np", "task[s]", "buf r%", "buf lag[s]", "buf msgs", "naive r%", "naive lag[s]", "naive msgs"
+    );
+    for &(np, secs) in &[
+        (1024usize, 2.0),
+        (4096, 2.0),
+        (16384, 2.0),
+        (16384, 0.5),
+        (16384, 8.0),
+    ] {
+        let n = np * 20;
+        let (rb, lb, mb) = run(np, n, secs, false);
+        let (rd, ld, md) = run(np, n, secs, true);
+        println!(
+            "{:>8} {:>8.1} | {:>9.2}% {:>12.4} {:>11} | {:>9.2}% {:>12.2} {:>11}",
+            np, secs, rb, lb, mb, rd, ld, md
+        );
+    }
+    println!("# expected: naive collapses once Np/duration exceeds the master's msg rate;");
+    println!("# buffered stays near 100% with orders-of-magnitude fewer producer messages.");
+
+    // ---- buffer-ratio sweep: why the paper defaults to 1:384 ------------
+    banner(
+        "§3 — consumers-per-buffer sweep (paper default 1:384)",
+        "Np=16384, 0.5 s tasks, 20/consumer; few buffers → buffers saturate; \
+         too many → producer traffic grows back toward the naive case",
+    );
+    println!("{:>12} {:>9} {:>10} {:>12} {:>12}", "cons/buffer", "buffers", "r%", "prod msgs", "max lag[s]");
+    for &ratio in &[64usize, 128, 384, 1024, 4096, 16384] {
+        let np = 16384;
+        let n = np * 20;
+        let mut cfg = DesConfig::new(np);
+        cfg.sched.consumers_per_buffer = ratio;
+        let r = run_des(&cfg, Box::new(FixedTasks { n, secs: 0.5 }), Box::new(SleepDurations));
+        assert_eq!(r.results.len(), n);
+        println!(
+            "{:>12} {:>9} {:>9.2}% {:>12} {:>12.4}",
+            ratio,
+            cfg.sched.num_buffers(),
+            r.rate(np) * 100.0,
+            r.producer_msgs_in + r.producer_msgs_out,
+            r.max_producer_lag
+        );
+    }
+    println!("# paper: \"CARAVAN allocates one buffer process to 384 MPI processes, which");
+    println!("# is a good parameter for a wide range of practical use cases.\"");
+}

@@ -1,0 +1,25 @@
+//! Shared harness for the benchmark binaries (`cargo bench`).
+//!
+//! criterion is not available offline, so each bench is a `harness = false`
+//! binary printing the paper-style table it regenerates. This module
+//! provides timing + table helpers so the benches stay declarative.
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+use std::time::Instant;
+
+pub struct Timed<T> {
+    pub value: T,
+    pub wall_secs: f64,
+}
+
+pub fn timed<T>(f: impl FnOnce() -> T) -> Timed<T> {
+    let t0 = Instant::now();
+    let value = f();
+    Timed { value, wall_secs: t0.elapsed().as_secs_f64() }
+}
+
+/// Print a markdown-ish header for a regenerated paper artifact.
+pub fn banner(artifact: &str, detail: &str) {
+    println!("\n## {artifact}");
+    println!("# {detail}");
+}

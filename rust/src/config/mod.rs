@@ -1,0 +1,119 @@
+//! Configuration for the scheduler, the DES latency model, and the
+//! application scenarios. All defaults follow the paper where it states
+//! them (e.g. one buffer per 384 consumers).
+
+/// Scheduler topology + flow-control parameters (threaded runtime and DES).
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Number of consumer processes N_p.
+    pub np: usize,
+    /// Consumers per buffer process. Paper default: 384.
+    pub consumers_per_buffer: usize,
+    /// A buffer keeps `credit_factor × consumers` tasks on hand.
+    pub credit_factor: usize,
+    /// Result-store batch size before a flush to the producer.
+    pub flush_every: usize,
+    /// Real seconds per virtual second for `Payload::Sleep` executors
+    /// (time compression in tests/examples; 1.0 = real time).
+    pub time_scale: f64,
+    /// Buffer tick interval (threaded mode) for flushing stale results.
+    pub flush_interval_ms: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            np: 8,
+            consumers_per_buffer: 384,
+            credit_factor: 2,
+            flush_every: 16,
+            time_scale: 1.0,
+            flush_interval_ms: 50,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// Number of buffer processes: ⌈np / consumers_per_buffer⌉.
+    pub fn num_buffers(&self) -> usize {
+        self.np.div_ceil(self.consumers_per_buffer).max(1)
+    }
+
+    /// Consumers assigned to each buffer (balanced; sums to `np`).
+    pub fn buffer_layout(&self) -> Vec<usize> {
+        let nb = self.num_buffers();
+        let base = self.np / nb;
+        let extra = self.np % nb;
+        (0..nb).map(|b| base + usize::from(b < extra)).collect()
+    }
+}
+
+/// Latency/overhead model for the discrete-event simulation of the
+/// scheduler (§3 evaluation on the K computer).
+///
+/// Values are seconds of virtual time. Defaults are of the order measured
+/// on commodity MPI clusters and give Fig. 3-like behaviour; the benches
+/// sweep them where the conclusion could be sensitive.
+#[derive(Clone, Debug)]
+pub struct DesLatencyConfig {
+    /// One-way point-to-point message latency.
+    pub msg_latency: f64,
+    /// Producer CPU time consumed per message handled (serialization,
+    /// queueing). This is what melts a single-master design at scale.
+    pub producer_service: f64,
+    /// Buffer CPU time per message handled.
+    pub buffer_service: f64,
+    /// Per-task consumer-side overhead: temp-dir creation + process spawn +
+    /// output parsing (§3 names these as the reason sub-second tasks are
+    /// out of scope).
+    pub task_overhead: f64,
+}
+
+impl Default for DesLatencyConfig {
+    fn default() -> Self {
+        Self {
+            msg_latency: 20e-6,
+            producer_service: 50e-6,
+            buffer_service: 50e-6,
+            task_overhead: 0.05,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_ratio() {
+        let c = SchedulerConfig::default();
+        assert_eq!(c.consumers_per_buffer, 384);
+    }
+
+    #[test]
+    fn buffer_layout_sums_and_balances() {
+        let c = SchedulerConfig { np: 1000, consumers_per_buffer: 384, ..Default::default() };
+        let layout = c.buffer_layout();
+        assert_eq!(layout.len(), 3);
+        assert_eq!(layout.iter().sum::<usize>(), 1000);
+        let (mn, mx) = (layout.iter().min().unwrap(), layout.iter().max().unwrap());
+        assert!(mx - mn <= 1, "{layout:?}");
+    }
+
+    #[test]
+    fn tiny_np_gets_single_buffer() {
+        let c = SchedulerConfig { np: 3, ..Default::default() };
+        assert_eq!(c.num_buffers(), 1);
+        assert_eq!(c.buffer_layout(), vec![3]);
+    }
+
+    #[test]
+    fn layout_property_total_is_np() {
+        use crate::testutil::{check, pair, usize_in};
+        check("layout sums to np", pair(usize_in(1..5000), usize_in(1..500)), |&(np, cpb)| {
+            let c = SchedulerConfig { np, consumers_per_buffer: cpb, ..Default::default() };
+            let l = c.buffer_layout();
+            l.iter().sum::<usize>() == np && !l.iter().any(|&x| x == 0)
+        });
+    }
+}

@@ -1,0 +1,125 @@
+//! Duration/result models for simulated task execution.
+//!
+//! In the DES a task does not actually run — a [`DurationModel`] decides
+//! how long it takes in virtual time and what result vector it produces.
+//! `Sleep` payloads carry their own duration; `Eval` payloads are resolved
+//! by a model (e.g. random objectives for scheduler-behaviour studies, or
+//! an actual in-process simulator for end-to-end DES optimization runs).
+
+use crate::tasklib::{Payload, TaskSpec};
+use crate::util::rng::Pcg64;
+
+/// Decides virtual duration and results of a simulated task.
+pub trait DurationModel: Send {
+    fn duration(&mut self, task: &TaskSpec) -> f64;
+    fn results(&mut self, task: &TaskSpec) -> Vec<f64> {
+        let _ = task;
+        Vec::new()
+    }
+}
+
+/// `Sleep` tasks take exactly their nominal seconds; `Eval`/`Command`
+/// payloads are rejected (use a model that understands them).
+pub struct SleepDurations;
+
+impl DurationModel for SleepDurations {
+    fn duration(&mut self, task: &TaskSpec) -> f64 {
+        match &task.payload {
+            Payload::Sleep { seconds } => *seconds,
+            other => panic!("SleepDurations cannot time {other:?}"),
+        }
+    }
+
+    fn results(&mut self, task: &TaskSpec) -> Vec<f64> {
+        match &task.payload {
+            Payload::Sleep { seconds } => vec![*seconds],
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// Evaluation tasks take a random duration from `[lo, hi]` (uniform or the
+/// paper's 30–50 min band) and produce `k` pseudo-random objective values
+/// derived from the input point — used by the sync-vs-async NSGA-II
+/// ablation, where only the *schedule* matters, not optimization progress.
+pub struct ConstResults {
+    pub lo: f64,
+    pub hi: f64,
+    pub k: usize,
+    rng: Pcg64,
+}
+
+impl ConstResults {
+    pub fn new(lo: f64, hi: f64, k: usize, seed: u64) -> Self {
+        Self { lo, hi, k, rng: Pcg64::new(seed) }
+    }
+}
+
+impl DurationModel for ConstResults {
+    fn duration(&mut self, task: &TaskSpec) -> f64 {
+        match &task.payload {
+            Payload::Sleep { seconds } => *seconds,
+            _ => self.rng.range_f64(self.lo, self.hi),
+        }
+    }
+
+    fn results(&mut self, task: &TaskSpec) -> Vec<f64> {
+        match &task.payload {
+            Payload::Eval { input, seed } => {
+                // Deterministic pseudo-objectives: hash of (input, seed).
+                let mut h = *seed ^ 0x5851_F42D_4C95_7F2D;
+                for x in input {
+                    h ^= x.to_bits().rotate_left(17);
+                    crate::util::rng::splitmix64(&mut h);
+                }
+                let mut r = Pcg64::new(h);
+                (0..self.k).map(|_| r.uniform()).collect()
+            }
+            Payload::Sleep { seconds } => vec![*seconds],
+            Payload::Command { .. } => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasklib::TaskSpec;
+
+    #[test]
+    fn sleep_durations_pass_through() {
+        let mut m = SleepDurations;
+        let t = TaskSpec::new(0, Payload::Sleep { seconds: 42.5 });
+        assert_eq!(m.duration(&t), 42.5);
+        assert_eq!(m.results(&t), vec![42.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot time")]
+    fn sleep_durations_reject_eval() {
+        let mut m = SleepDurations;
+        let t = TaskSpec::new(0, Payload::Eval { input: vec![], seed: 0 });
+        m.duration(&t);
+    }
+
+    #[test]
+    fn const_results_deterministic_per_input() {
+        let mut m = ConstResults::new(1.0, 2.0, 3, 0);
+        let t1 = TaskSpec::new(0, Payload::Eval { input: vec![0.5, 0.25], seed: 7 });
+        let t2 = TaskSpec::new(9, Payload::Eval { input: vec![0.5, 0.25], seed: 7 });
+        assert_eq!(m.results(&t1), m.results(&t2));
+        let t3 = TaskSpec::new(9, Payload::Eval { input: vec![0.5, 0.25], seed: 8 });
+        assert_ne!(m.results(&t1), m.results(&t3));
+        assert_eq!(m.results(&t1).len(), 3);
+    }
+
+    #[test]
+    fn const_results_duration_in_band() {
+        let mut m = ConstResults::new(30.0, 50.0, 3, 1);
+        let t = TaskSpec::new(0, Payload::Eval { input: vec![0.1], seed: 0 });
+        for _ in 0..100 {
+            let d = m.duration(&t);
+            assert!((30.0..=50.0).contains(&d));
+        }
+    }
+}

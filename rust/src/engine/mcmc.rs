@@ -1,0 +1,257 @@
+//! Markov-chain Monte Carlo sampling of a parameter space — one of the
+//! paper's motivating use cases (§1, §2.1): sampling points must be chosen
+//! *dynamically* from previous results, which a Map-Reduce framework can't
+//! express but CARAVAN's callback flow can.
+//!
+//! This engine runs `walkers` independent Metropolis chains. The target
+//! density is `exp(-f/temperature)` where `f` is the first value the
+//! simulator reports (e.g. evacuation time): chains concentrate where the
+//! simulated objective is low. Every proposal is one simulator task, so a
+//! chain of length L × W walkers = L·W tasks, scheduled concurrently across
+//! walkers while each walker's own chain stays sequential — the same
+//! concurrency pattern as §2.3's "three concurrent lines of sequential
+//! tasks".
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::tasklib::{Payload, SearchEngine, TaskId, TaskResult, TaskSink};
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct McmcConfig {
+    pub walkers: usize,
+    /// Proposals per walker (chain length, excluding the initial point).
+    pub steps: usize,
+    /// Proposal standard deviation, as a fraction of each bound's span.
+    pub step_frac: f64,
+    pub temperature: f64,
+    pub bounds: Vec<(f64, f64)>,
+    pub seed: u64,
+}
+
+impl McmcConfig {
+    pub fn new(bounds: Vec<(f64, f64)>) -> Self {
+        Self { walkers: 8, steps: 50, step_frac: 0.05, temperature: 1.0, bounds, seed: 0 }
+    }
+}
+
+/// Chain output: accepted samples per walker + acceptance statistics.
+#[derive(Debug, Default)]
+pub struct McmcOutcome {
+    /// One chain (sequence of accepted points) per walker.
+    pub chains: Vec<Vec<Vec<f64>>>,
+    /// Objective value trace per walker (parallel to `chains`).
+    pub values: Vec<Vec<f64>>,
+    pub proposals: usize,
+    pub accepted: usize,
+}
+
+impl McmcOutcome {
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposals == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposals as f64
+        }
+    }
+
+    /// All samples pooled across walkers.
+    pub fn pooled(&self) -> Vec<&Vec<f64>> {
+        self.chains.iter().flatten().collect()
+    }
+}
+
+pub type SharedMcmc = Arc<Mutex<McmcOutcome>>;
+
+struct Walker {
+    current: Vec<f64>,
+    current_f: f64,
+    proposal: Vec<f64>,
+    steps_done: usize,
+    initialized: bool,
+}
+
+/// Metropolis engine. Each completed task triggers the accept/reject step
+/// and the submission of the walker's next proposal (a callback chain).
+pub struct McmcEngine {
+    cfg: McmcConfig,
+    rng: Pcg64,
+    walkers: Vec<Walker>,
+    by_task: HashMap<TaskId, usize>,
+    outcome: SharedMcmc,
+    seeds: u64,
+}
+
+impl McmcEngine {
+    pub fn new(cfg: McmcConfig) -> (Self, SharedMcmc) {
+        assert!(cfg.walkers > 0 && cfg.temperature > 0.0);
+        let outcome: SharedMcmc = Arc::new(Mutex::new(McmcOutcome::default()));
+        outcome.lock().unwrap().chains = vec![Vec::new(); cfg.walkers];
+        outcome.lock().unwrap().values = vec![Vec::new(); cfg.walkers];
+        let rng = Pcg64::new(cfg.seed);
+        (
+            Self {
+                rng,
+                walkers: Vec::new(),
+                by_task: HashMap::new(),
+                outcome: Arc::clone(&outcome),
+                seeds: 1,
+                cfg,
+            },
+            outcome,
+        )
+    }
+
+    fn propose_from(&mut self, x: &[f64]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(x.len());
+        for (i, &(lo, hi)) in self.cfg.bounds.iter().enumerate() {
+            let sigma = (hi - lo) * self.cfg.step_frac;
+            let v = (x[i] + sigma * self.rng.normal()).clamp(lo, hi);
+            out.push(v);
+        }
+        out
+    }
+
+    fn submit_eval(&mut self, walker: usize, point: Vec<f64>, sink: &mut dyn TaskSink) {
+        let seed = self.seeds;
+        self.seeds += 1;
+        let id = sink.submit(Payload::Eval { input: point, seed });
+        self.by_task.insert(id, walker);
+    }
+}
+
+impl SearchEngine for McmcEngine {
+    fn start(&mut self, sink: &mut dyn TaskSink) {
+        for w in 0..self.cfg.walkers {
+            let init: Vec<f64> =
+                self.cfg.bounds.iter().map(|&(lo, hi)| self.rng.range_f64(lo, hi)).collect();
+            self.walkers.push(Walker {
+                current: init.clone(),
+                current_f: f64::INFINITY,
+                proposal: init.clone(),
+                steps_done: 0,
+                initialized: false,
+            });
+            self.submit_eval(w, init, sink);
+        }
+    }
+
+    fn on_done(&mut self, result: &TaskResult, sink: &mut dyn TaskSink) {
+        let Some(w) = self.by_task.remove(&result.id) else {
+            return;
+        };
+        let f = result.results.first().copied().unwrap_or(f64::INFINITY);
+        let (accept, first_eval) = {
+            let walker = &self.walkers[w];
+            if !walker.initialized {
+                (true, true)
+            } else {
+                let delta = f - walker.current_f;
+                let p = (-delta / self.cfg.temperature).exp();
+                (delta <= 0.0 || self.rng.uniform() < p, false)
+            }
+        };
+        {
+            let mut out = self.outcome.lock().unwrap();
+            if !first_eval {
+                out.proposals += 1;
+                if accept {
+                    out.accepted += 1;
+                }
+            }
+        }
+        {
+            let walker = &mut self.walkers[w];
+            walker.initialized = true;
+            if accept {
+                walker.current = walker.proposal.clone();
+                walker.current_f = f;
+            }
+            let (cur, cf) = (walker.current.clone(), walker.current_f);
+            let mut out = self.outcome.lock().unwrap();
+            out.chains[w].push(cur);
+            out.values[w].push(cf);
+        }
+        if self.walkers[w].steps_done < self.cfg.steps {
+            self.walkers[w].steps_done += 1;
+            let cur = self.walkers[w].current.clone();
+            let prop = self.propose_from(&cur);
+            self.walkers[w].proposal = prop.clone();
+            self.submit_eval(w, prop, sink);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::{run_des, DesConfig, DurationModel};
+    use crate::tasklib::TaskSpec;
+
+    /// Quadratic bowl: f = Σ (x−0.7)² — chains should concentrate near 0.7.
+    struct Bowl;
+    impl DurationModel for Bowl {
+        fn duration(&mut self, _t: &TaskSpec) -> f64 {
+            1.0
+        }
+        fn results(&mut self, t: &TaskSpec) -> Vec<f64> {
+            match &t.payload {
+                Payload::Eval { input, .. } => {
+                    vec![input.iter().map(|x| (x - 0.7) * (x - 0.7)).sum::<f64>()]
+                }
+                _ => vec![],
+            }
+        }
+    }
+
+    #[test]
+    fn chains_run_full_length_and_concentrate() {
+        let mut cfg = McmcConfig::new(vec![(0.0, 1.0); 2]);
+        cfg.walkers = 4;
+        cfg.steps = 120;
+        cfg.temperature = 0.01;
+        cfg.step_frac = 0.1;
+        cfg.seed = 2;
+        let (engine, outcome) = McmcEngine::new(cfg);
+        let r = run_des(&DesConfig::new(4), Box::new(engine), Box::new(Bowl));
+        // walkers × (1 init + steps) tasks
+        assert_eq!(r.results.len(), 4 * 121);
+        let out = outcome.lock().unwrap();
+        assert_eq!(out.chains.len(), 4);
+        assert!(out.chains.iter().all(|c| c.len() == 121));
+        assert!(out.proposals == 4 * 120);
+        let rate = out.acceptance_rate();
+        assert!(rate > 0.05 && rate < 0.99, "acceptance {rate}");
+        // Second half of each chain should be near the optimum.
+        for chain in &out.chains {
+            let tail = &chain[chain.len() / 2..];
+            let mean0 = tail.iter().map(|p| p[0]).sum::<f64>() / tail.len() as f64;
+            assert!((mean0 - 0.7).abs() < 0.15, "mean {mean0}");
+        }
+    }
+
+    #[test]
+    fn walkers_are_sequential_chains() {
+        // Each walker has at most one task in flight: with W walkers, no
+        // schedule point may have more than W concurrent MCMC tasks.
+        let mut cfg = McmcConfig::new(vec![(0.0, 1.0)]);
+        cfg.walkers = 3;
+        cfg.steps = 20;
+        let (engine, _outcome) = McmcEngine::new(cfg);
+        let r = run_des(&DesConfig::new(16), Box::new(engine), Box::new(Bowl));
+        // Count max concurrency from the schedule trace.
+        let mut events: Vec<(f64, i32)> = Vec::new();
+        for iv in r.filling.intervals() {
+            events.push((iv.begin, 1));
+            events.push((iv.finish, -1));
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let (mut cur, mut max) = (0, 0);
+        for (_, d) in events {
+            cur += d;
+            max = max.max(cur);
+        }
+        assert!(max <= 3, "max concurrency {max}");
+    }
+}

@@ -1,0 +1,21 @@
+//! Search engines — the module that "determines the policy on how
+//! parameter space is explored" (§2.1).
+//!
+//! * [`session`] — the await-style client API of §2.3 (`Task.create`,
+//!   `await_task`, callbacks, concurrent activities).
+//! * [`sweep`] — grid and random sampling (trivial parameter parallelism).
+//! * [`nsga2`] / [`moea`] — NSGA-II with the paper's asynchronous
+//!   generation update (§4.2) plus the synchronous baseline.
+//! * [`mcmc`] — Metropolis sampling (the dynamic-exploration use case).
+
+pub mod mcmc;
+pub mod moea;
+pub mod nsga2;
+pub mod session;
+pub mod sweep;
+
+pub use mcmc::{McmcConfig, McmcEngine, McmcOutcome};
+pub use moea::{MoeaConfig, MoeaOutcome, Nsga2Engine};
+pub use nsga2::{dominates, fast_non_dominated_sort, Individual};
+pub use session::{Session, SessionHandle, TaskHandle};
+pub use sweep::{GridEngine, RandomEngine};

@@ -1,0 +1,390 @@
+//! NSGA-II core machinery (Deb et al. 2000): Pareto domination, fast
+//! non-dominated sorting, crowding distance, the crowded-comparison
+//! tournament, simulated binary crossover (SBX) and polynomial mutation —
+//! the genetic operators the paper uses (§4.2: crossover rate 1.0,
+//! η_b = 15, mutation rate 0.01, η_p = 20).
+//!
+//! All objectives are *minimized*.
+
+use crate::util::rng::Pcg64;
+
+/// One evaluated solution: decision vector + objective vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Individual {
+    pub point: Vec<f64>,
+    pub objectives: Vec<f64>,
+}
+
+/// True iff `a` Pareto-dominates `b` (no worse in all objectives, strictly
+/// better in at least one; minimization).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Fast non-dominated sort. Returns fronts as index lists; front 0 is the
+/// Pareto front. O(M·N²) like the original.
+pub fn fast_non_dominated_sort(objs: &[Vec<f64>]) -> Vec<Vec<usize>> {
+    let n = objs.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
+    let mut count = vec![0usize; n]; // how many dominate i
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&objs[i], &objs[j]) {
+                dominated_by[i].push(j);
+                count[j] += 1;
+            } else if dominates(&objs[j], &objs[i]) {
+                dominated_by[j].push(i);
+                count[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                count[j] -= 1;
+                if count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Crowding distance of each member of a front (`objs[front[k]]`).
+/// Boundary solutions get `f64::INFINITY`.
+pub fn crowding_distance(objs: &[Vec<f64>], front: &[usize]) -> Vec<f64> {
+    let m = if front.is_empty() { 0 } else { objs[front[0]].len() };
+    let n = front.len();
+    let mut dist = vec![0.0f64; n];
+    if n <= 2 {
+        return vec![f64::INFINITY; n];
+    }
+    for obj in 0..m {
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            objs[front[a]][obj].partial_cmp(&objs[front[b]][obj]).unwrap()
+        });
+        let lo = objs[front[order[0]]][obj];
+        let hi = objs[front[order[n - 1]]][obj];
+        dist[order[0]] = f64::INFINITY;
+        dist[order[n - 1]] = f64::INFINITY;
+        let span = hi - lo;
+        if span <= 0.0 {
+            continue;
+        }
+        for k in 1..n - 1 {
+            let prev = objs[front[order[k - 1]]][obj];
+            let next = objs[front[order[k + 1]]][obj];
+            dist[order[k]] += (next - prev) / span;
+        }
+    }
+    dist
+}
+
+/// NSGA-II environmental selection: keep the best `n` of `pop` by
+/// (front rank, crowding distance). This is the archive-truncation step of
+/// the paper's asynchronous update.
+pub fn environmental_selection(pop: Vec<Individual>, n: usize) -> Vec<Individual> {
+    if pop.len() <= n {
+        return pop;
+    }
+    let objs: Vec<Vec<f64>> = pop.iter().map(|i| i.objectives.clone()).collect();
+    let fronts = fast_non_dominated_sort(&objs);
+    let mut keep: Vec<usize> = Vec::with_capacity(n);
+    for front in fronts {
+        if keep.len() + front.len() <= n {
+            keep.extend(front);
+        } else {
+            // Partial front: take the most crowded-distant members.
+            let dist = crowding_distance(&objs, &front);
+            let mut idx: Vec<usize> = (0..front.len()).collect();
+            idx.sort_by(|&a, &b| dist[b].partial_cmp(&dist[a]).unwrap());
+            for &k in idx.iter().take(n - keep.len()) {
+                keep.push(front[k]);
+            }
+            break;
+        }
+    }
+    let mut taken: Vec<Option<Individual>> = pop.into_iter().map(Some).collect();
+    keep.iter().map(|&i| taken[i].take().unwrap()).collect()
+}
+
+/// Rank + crowding for a whole population (used by the tournament).
+fn rank_and_crowding(objs: &[Vec<f64>]) -> (Vec<usize>, Vec<f64>) {
+    let fronts = fast_non_dominated_sort(objs);
+    let mut rank = vec![0usize; objs.len()];
+    let mut crowd = vec![0.0f64; objs.len()];
+    for (r, front) in fronts.iter().enumerate() {
+        let dist = crowding_distance(objs, front);
+        for (k, &i) in front.iter().enumerate() {
+            rank[i] = r;
+            crowd[i] = dist[k];
+        }
+    }
+    (rank, crowd)
+}
+
+/// Binary tournament with the crowded-comparison operator: lower rank wins;
+/// ties broken by larger crowding distance.
+pub struct CrowdedTournament {
+    rank: Vec<usize>,
+    crowd: Vec<f64>,
+    n: usize,
+}
+
+impl CrowdedTournament {
+    pub fn new(pop: &[Individual]) -> Self {
+        let objs: Vec<Vec<f64>> = pop.iter().map(|i| i.objectives.clone()).collect();
+        let (rank, crowd) = rank_and_crowding(&objs);
+        Self { rank, crowd, n: pop.len() }
+    }
+
+    pub fn select(&self, rng: &mut Pcg64) -> usize {
+        let a = rng.below(self.n as u64) as usize;
+        let b = rng.below(self.n as u64) as usize;
+        if self.rank[a] < self.rank[b] {
+            a
+        } else if self.rank[b] < self.rank[a] {
+            b
+        } else if self.crowd[a] >= self.crowd[b] {
+            a
+        } else {
+            b
+        }
+    }
+}
+
+/// Simulated binary crossover (Deb & Agrawal 1995). Returns two children.
+/// Applied per-variable with probability 0.5, as in the reference
+/// implementation; bounds are enforced by clipping.
+pub fn sbx_crossover(
+    p1: &[f64],
+    p2: &[f64],
+    bounds: &[(f64, f64)],
+    eta_c: f64,
+    rng: &mut Pcg64,
+) -> (Vec<f64>, Vec<f64>) {
+    let d = p1.len();
+    let mut c1 = p1.to_vec();
+    let mut c2 = p2.to_vec();
+    for i in 0..d {
+        if rng.uniform() > 0.5 || (p1[i] - p2[i]).abs() < 1e-14 {
+            continue;
+        }
+        let u: f64 = rng.uniform();
+        let beta = if u <= 0.5 {
+            (2.0 * u).powf(1.0 / (eta_c + 1.0))
+        } else {
+            (1.0 / (2.0 * (1.0 - u))).powf(1.0 / (eta_c + 1.0))
+        };
+        let (lo, hi) = bounds[i];
+        let x1 = 0.5 * ((1.0 + beta) * p1[i] + (1.0 - beta) * p2[i]);
+        let x2 = 0.5 * ((1.0 - beta) * p1[i] + (1.0 + beta) * p2[i]);
+        c1[i] = x1.clamp(lo, hi);
+        c2[i] = x2.clamp(lo, hi);
+    }
+    (c1, c2)
+}
+
+/// Polynomial mutation (Deb 2001): each variable mutates with probability
+/// `rate`; perturbation magnitude is governed by η_m.
+pub fn polynomial_mutation(
+    x: &mut [f64],
+    bounds: &[(f64, f64)],
+    rate: f64,
+    eta_m: f64,
+    rng: &mut Pcg64,
+) {
+    for i in 0..x.len() {
+        if rng.uniform() >= rate {
+            continue;
+        }
+        let (lo, hi) = bounds[i];
+        let span = hi - lo;
+        if span <= 0.0 {
+            continue;
+        }
+        let u: f64 = rng.uniform();
+        let delta = if u < 0.5 {
+            (2.0 * u).powf(1.0 / (eta_m + 1.0)) - 1.0
+        } else {
+            1.0 - (2.0 * (1.0 - u)).powf(1.0 / (eta_m + 1.0))
+        };
+        x[i] = (x[i] + delta * span).clamp(lo, hi);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ind(objs: &[f64]) -> Individual {
+        Individual { point: vec![], objectives: objs.to_vec() }
+    }
+
+    #[test]
+    fn domination_basics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 2.0], &[2.0, 1.0])); // incomparable
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0])); // equal
+    }
+
+    #[test]
+    fn sorting_splits_fronts_correctly() {
+        // f0: (1,1); f1: (2,2) and (1,3)? — (1,3): (1,1) dominates it.
+        let objs = vec![
+            vec![1.0, 1.0], // 0 — front 0
+            vec![2.0, 2.0], // 1 — dominated by 0
+            vec![0.5, 3.0], // 2 — front 0 (incomparable with 0)
+            vec![3.0, 3.0], // 3 — dominated by all above
+        ];
+        let fronts = fast_non_dominated_sort(&objs);
+        assert_eq!(fronts[0], vec![0, 2]);
+        assert_eq!(fronts[1], vec![1]);
+        assert_eq!(fronts[2], vec![3]);
+    }
+
+    #[test]
+    fn crowding_boundary_infinite_middle_finite() {
+        let objs = vec![
+            vec![0.0, 4.0],
+            vec![1.0, 2.0],
+            vec![2.0, 1.0],
+            vec![4.0, 0.0],
+        ];
+        let front: Vec<usize> = vec![0, 1, 2, 3];
+        let d = crowding_distance(&objs, &front);
+        assert!(d[0].is_infinite() && d[3].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+        assert!(d[2].is_finite() && d[2] > 0.0);
+    }
+
+    #[test]
+    fn environmental_selection_keeps_first_front() {
+        let pop = vec![
+            ind(&[1.0, 1.0]),
+            ind(&[5.0, 5.0]),
+            ind(&[0.5, 2.0]),
+            ind(&[4.0, 6.0]),
+        ];
+        let kept = environmental_selection(pop, 2);
+        let objs: Vec<Vec<f64>> = kept.iter().map(|i| i.objectives.clone()).collect();
+        assert!(objs.contains(&vec![1.0, 1.0]));
+        assert!(objs.contains(&vec![0.5, 2.0]));
+    }
+
+    #[test]
+    fn environmental_selection_uses_crowding_within_front() {
+        // Five mutually non-dominated points on a line; keeping 3 must
+        // retain both extremes (infinite crowding).
+        let pop = vec![
+            ind(&[0.0, 4.0]),
+            ind(&[1.0, 3.0]),
+            ind(&[1.1, 2.9]), // crowded next to previous
+            ind(&[2.0, 2.0]),
+            ind(&[4.0, 0.0]),
+        ];
+        let kept = environmental_selection(pop, 3);
+        let objs: Vec<Vec<f64>> = kept.iter().map(|i| i.objectives.clone()).collect();
+        assert!(objs.contains(&vec![0.0, 4.0]));
+        assert!(objs.contains(&vec![4.0, 0.0]));
+    }
+
+    #[test]
+    fn sbx_children_within_bounds_and_mean_preserving() {
+        let mut rng = Pcg64::new(5);
+        let bounds = vec![(0.0, 1.0); 8];
+        let p1 = vec![0.2; 8];
+        let p2 = vec![0.8; 8];
+        for _ in 0..200 {
+            let (c1, c2) = sbx_crossover(&p1, &p2, &bounds, 15.0, &mut rng);
+            for i in 0..8 {
+                assert!((0.0..=1.0).contains(&c1[i]));
+                assert!((0.0..=1.0).contains(&c2[i]));
+                // SBX is mean-preserving before clipping; with these
+                // parents clipping is rare, so allow small tolerance.
+                let mid = 0.5 * (c1[i] + c2[i]);
+                assert!((mid - 0.5).abs() < 0.25, "mid {mid}");
+            }
+        }
+    }
+
+    #[test]
+    fn mutation_respects_bounds_and_rate() {
+        let mut rng = Pcg64::new(6);
+        let bounds = vec![(0.0, 1.0); 1000];
+        let mut x = vec![0.5; 1000];
+        polynomial_mutation(&mut x, &bounds, 0.01, 20.0, &mut rng);
+        let changed = x.iter().filter(|&&v| v != 0.5).count();
+        // Expect ≈ 10 mutations of 1000 (allow wide slack).
+        assert!(changed < 40, "changed {changed}");
+        assert!(x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn tournament_prefers_lower_rank() {
+        let pop = vec![ind(&[0.0, 0.0]), ind(&[1.0, 1.0]), ind(&[2.0, 2.0])];
+        let t = CrowdedTournament::new(&pop);
+        let mut rng = Pcg64::new(9);
+        let mut wins = [0usize; 3];
+        for _ in 0..3000 {
+            wins[t.select(&mut rng)] += 1;
+        }
+        assert!(wins[0] > wins[1] && wins[1] > wins[2], "{wins:?}");
+    }
+
+    #[test]
+    fn sort_properties_hold_on_random_populations() {
+        use crate::testutil::{check, usize_in};
+        check("fronts partition and respect domination", usize_in(1..40), |&n| {
+            let mut rng = Pcg64::new(n as u64 + 1);
+            let objs: Vec<Vec<f64>> =
+                (0..n).map(|_| vec![rng.uniform(), rng.uniform(), rng.uniform()]).collect();
+            let fronts = fast_non_dominated_sort(&objs);
+            // Partition check.
+            let mut all: Vec<usize> = fronts.iter().flatten().cloned().collect();
+            all.sort();
+            if all != (0..n).collect::<Vec<_>>() {
+                return false;
+            }
+            // No member of front k may be dominated by a member of front ≥ k.
+            for (k, front) in fronts.iter().enumerate() {
+                for &i in front {
+                    for later in &fronts[k..] {
+                        for &j in later {
+                            if i != j && dominates(&objs[j], &objs[i]) && k == 0 {
+                                return false;
+                            }
+                        }
+                    }
+                }
+            }
+            // Front 0 is mutually non-dominated.
+            for &i in &fronts[0] {
+                for &j in &fronts[0] {
+                    if i != j && dominates(&objs[i], &objs[j]) && dominates(&objs[j], &objs[i]) {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
+}

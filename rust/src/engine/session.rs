@@ -1,0 +1,301 @@
+//! The await-style client API of §2.3 — the Rust analogue of
+//!
+//! ```python
+//! with Server.start():
+//!     task = Task.create("sleep 1")
+//!     Server.await_task(task)       # blocks until the task is finished
+//! ```
+//!
+//! [`Session::start`] launches the hierarchical scheduler on a background
+//! thread; any number of user threads ("concurrent activities", cf.
+//! `Server.async`) may then create tasks and block on their results:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use caravan::config::SchedulerConfig;
+//! use caravan::engine::Session;
+//! use caravan::scheduler::SleepExecutor;
+//! use caravan::tasklib::Payload;
+//!
+//! let session = Session::start(
+//!     SchedulerConfig { np: 4, ..Default::default() },
+//!     Arc::new(SleepExecutor { time_scale: 0.001 }),
+//! );
+//! let t = session.create_task(Payload::Sleep { seconds: 2.0 });
+//! let result = session.await_task(&t);
+//! assert_eq!(result.rc, 0);
+//! session.shutdown();
+//! ```
+//!
+//! Callbacks (`task.add_callback` in the Python API) are supported through
+//! [`Session::create_task_with_callback`]; the callback runs on the
+//! scheduler thread and may itself create tasks.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::config::SchedulerConfig;
+use crate::scheduler::threads::{run_scheduler, Executor, Report};
+use crate::tasklib::{Payload, SearchEngine, TaskId, TaskResult, TaskSink};
+
+/// Callback invoked on the scheduler thread when a task completes. It may
+/// submit follow-up tasks through the provided handle.
+pub type Callback = Box<dyn FnOnce(&TaskResult, &SessionHandle) + Send>;
+
+/// A created task: await it via [`Session::await_task`].
+///
+/// The task id is resolved lazily: creation does not block on the
+/// scheduler thread (callbacks run *on* that thread and may create tasks —
+/// blocking there would deadlock).
+pub struct TaskHandle {
+    id_rx: Receiver<TaskId>,
+    id: std::cell::Cell<Option<TaskId>>,
+    rx: Receiver<TaskResult>,
+}
+
+impl TaskHandle {
+    /// The scheduler-assigned task id (blocks briefly on first call).
+    pub fn id(&self) -> TaskId {
+        if let Some(id) = self.id.get() {
+            return id;
+        }
+        let id = self.id_rx.recv().expect("session closed");
+        self.id.set(Some(id));
+        id
+    }
+}
+
+enum Ctl {
+    Submit { payload: Payload, waiter: Sender<TaskResult>, reply: Sender<TaskId>, callback: Option<Callback> },
+    Close,
+}
+
+/// Cloneable handle used inside callbacks to create further tasks.
+#[derive(Clone)]
+pub struct SessionHandle {
+    ctl: Sender<Ctl>,
+}
+
+impl SessionHandle {
+    pub fn create_task(&self, payload: Payload) -> TaskHandle {
+        self.create_task_with(payload, None)
+    }
+
+    pub fn create_task_with_callback(&self, payload: Payload, cb: Callback) -> TaskHandle {
+        self.create_task_with(payload, Some(cb))
+    }
+
+    fn create_task_with(&self, payload: Payload, callback: Option<Callback>) -> TaskHandle {
+        let (wtx, wrx) = channel();
+        let (rtx, rrx) = channel();
+        self.ctl
+            .send(Ctl::Submit { payload, waiter: wtx, reply: rtx, callback })
+            .expect("session closed");
+        TaskHandle { id_rx: rrx, id: std::cell::Cell::new(None), rx: wrx }
+    }
+}
+
+/// The session engine: a [`SearchEngine`] that pulls submissions from the
+/// control channel during `poll`.
+struct SessionEngine {
+    ctl_rx: Receiver<Ctl>,
+    handle: SessionHandle,
+    waiters: HashMap<TaskId, Sender<TaskResult>>,
+    callbacks: HashMap<TaskId, Callback>,
+    closed: bool,
+}
+
+impl SearchEngine for SessionEngine {
+    fn start(&mut self, _sink: &mut dyn TaskSink) {}
+
+    fn on_done(&mut self, result: &TaskResult, sink: &mut dyn TaskSink) {
+        if let Some(cb) = self.callbacks.remove(&result.id) {
+            cb(result, &self.handle);
+            // The callback may have pushed submissions into the control
+            // channel; drain them immediately so follow-up tasks are
+            // scheduled without waiting for the next poll tick.
+            self.drain(sink);
+        }
+        if let Some(w) = self.waiters.remove(&result.id) {
+            let _ = w.send(result.clone());
+        }
+    }
+
+    fn poll(&mut self, sink: &mut dyn TaskSink) -> bool {
+        self.drain(sink);
+        self.closed
+    }
+}
+
+impl SessionEngine {
+    fn drain(&mut self, sink: &mut dyn TaskSink) {
+        while let Ok(msg) = self.ctl_rx.try_recv() {
+            match msg {
+                Ctl::Submit { payload, waiter, reply, callback } => {
+                    let id = sink.submit(payload);
+                    self.waiters.insert(id, waiter);
+                    if let Some(cb) = callback {
+                        self.callbacks.insert(id, cb);
+                    }
+                    let _ = reply.send(id);
+                }
+                Ctl::Close => {
+                    self.closed = true;
+                }
+            }
+        }
+    }
+}
+
+/// A running scheduler session (the `Server.start()` context).
+pub struct Session {
+    handle: SessionHandle,
+    thread: Mutex<Option<JoinHandle<Report>>>,
+}
+
+impl Session {
+    /// Start the scheduler with `cfg` on a background thread.
+    pub fn start(cfg: SchedulerConfig, executor: Arc<dyn Executor>) -> Session {
+        let (ctl_tx, ctl_rx) = channel();
+        let handle = SessionHandle { ctl: ctl_tx };
+        let engine = SessionEngine {
+            ctl_rx,
+            handle: handle.clone(),
+            waiters: HashMap::new(),
+            callbacks: HashMap::new(),
+            closed: false,
+        };
+        let thread = std::thread::Builder::new()
+            .name("caravan-session".into())
+            .spawn(move || run_scheduler(&cfg, Box::new(engine), executor))
+            .expect("spawn session");
+        Session { handle, thread: Mutex::new(Some(thread)) }
+    }
+
+    pub fn handle(&self) -> SessionHandle {
+        self.handle.clone()
+    }
+
+    /// `Task.create` — submit a task.
+    pub fn create_task(&self, payload: Payload) -> TaskHandle {
+        self.handle.create_task(payload)
+    }
+
+    /// `task.add_callback` at creation time.
+    pub fn create_task_with_callback(&self, payload: Payload, cb: Callback) -> TaskHandle {
+        self.handle.create_task_with_callback(payload, cb)
+    }
+
+    /// `Server.await_task` — block until the task finishes.
+    pub fn await_task(&self, task: &TaskHandle) -> TaskResult {
+        task.rx.recv().expect("scheduler dropped the task")
+    }
+
+    /// `Server.await_all_tasks` over an explicit set.
+    pub fn await_all(&self, tasks: &[TaskHandle]) -> Vec<TaskResult> {
+        tasks.iter().map(|t| self.await_task(t)).collect()
+    }
+
+    /// End the session: no more submissions; waits for in-flight tasks and
+    /// returns the scheduler report.
+    pub fn shutdown(&self) -> Report {
+        let _ = self.handle.ctl.send(Ctl::Close);
+        let th = self.thread.lock().unwrap().take().expect("already shut down");
+        th.join().expect("scheduler thread panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::SleepExecutor;
+
+    fn session(np: usize) -> Session {
+        Session::start(
+            SchedulerConfig {
+                np,
+                consumers_per_buffer: 4,
+                flush_interval_ms: 2,
+                ..Default::default()
+            },
+            Arc::new(SleepExecutor { time_scale: 0.001 }),
+        )
+    }
+
+    #[test]
+    fn await_single_task() {
+        let s = session(2);
+        let t = s.create_task(Payload::Sleep { seconds: 3.0 });
+        let r = s.await_task(&t);
+        assert_eq!(r.id, t.id());
+        assert_eq!(r.results, vec![3.0]);
+        let report = s.shutdown();
+        assert_eq!(report.results.len(), 1);
+    }
+
+    #[test]
+    fn paper_example_ten_tasks() {
+        // §2.3 minimal program: ten tasks in parallel.
+        let s = session(4);
+        let tasks: Vec<TaskHandle> =
+            (0..10).map(|i| s.create_task(Payload::Sleep { seconds: 1.0 + (i % 3) as f64 })).collect();
+        let results = s.await_all(&tasks);
+        assert_eq!(results.len(), 10);
+        assert!(results.iter().all(|r| r.ok()));
+        s.shutdown();
+    }
+
+    #[test]
+    fn callback_chains_ten_more_tasks() {
+        // §2.3 callback example: 10 tasks, each spawning one follow-up.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let s = session(4);
+        let spawned = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<TaskHandle> = (0..10)
+            .map(|i| {
+                let counter = Arc::clone(&spawned);
+                s.create_task_with_callback(
+                    Payload::Sleep { seconds: (i % 3 + 1) as f64 },
+                    Box::new(move |_r, h| {
+                        h.create_task(Payload::Sleep { seconds: 1.0 });
+                        counter.fetch_add(1, Ordering::SeqCst);
+                    }),
+                )
+            })
+            .collect();
+        s.await_all(&tasks);
+        let report = s.shutdown();
+        assert_eq!(spawned.load(Ordering::SeqCst), 10);
+        assert_eq!(report.results.len(), 20);
+    }
+
+    #[test]
+    fn concurrent_activities_of_sequential_tasks() {
+        // §2.3 async/await example: three concurrent activities, each
+        // running five sequential tasks.
+        let s = Arc::new(session(4));
+        let mut activities = Vec::new();
+        for n in 0..3u64 {
+            let s2 = Arc::clone(&s);
+            activities.push(std::thread::spawn(move || {
+                let mut finishes = Vec::new();
+                for t in 0..5u64 {
+                    let task = s2.create_task(Payload::Sleep { seconds: ((t + n) % 3 + 1) as f64 });
+                    let r = s2.await_task(&task);
+                    finishes.push(r.finish);
+                }
+                // Sequential within the activity: finishes increase.
+                for w in finishes.windows(2) {
+                    assert!(w[1] >= w[0]);
+                }
+            }));
+        }
+        for a in activities {
+            a.join().unwrap();
+        }
+        let report = Arc::try_unwrap(s).ok().map(|s| s.shutdown()).expect("sole owner");
+        assert_eq!(report.results.len(), 15);
+    }
+}

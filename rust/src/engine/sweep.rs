@@ -1,0 +1,155 @@
+//! Trivial parameter-parallel engines: grid sweeps and random sampling —
+//! the "embarrassingly parallel" use cases of §1 (parameter
+//! parallelization), complementing the dynamic engines (MOEA, MCMC).
+
+use std::sync::{Arc, Mutex};
+
+use crate::tasklib::{Payload, SearchEngine, TaskId, TaskResult, TaskSink};
+use crate::util::rng::Pcg64;
+
+/// Collected `(point, results)` pairs, shared out of a sweep engine.
+pub type SweepOutcome = Arc<Mutex<Vec<(Vec<f64>, Vec<f64>)>>>;
+
+/// Full-factorial grid over the given per-dimension values.
+pub struct GridEngine {
+    axes: Vec<Vec<f64>>,
+    seed: u64,
+    by_task: std::collections::HashMap<TaskId, Vec<f64>>,
+    outcome: SweepOutcome,
+}
+
+impl GridEngine {
+    pub fn new(axes: Vec<Vec<f64>>, seed: u64) -> (Self, SweepOutcome) {
+        assert!(!axes.is_empty() && axes.iter().all(|a| !a.is_empty()));
+        let outcome: SweepOutcome = Arc::new(Mutex::new(Vec::new()));
+        (
+            Self {
+                axes,
+                seed,
+                by_task: Default::default(),
+                outcome: Arc::clone(&outcome),
+            },
+            outcome,
+        )
+    }
+
+    /// Total number of grid points.
+    pub fn size(&self) -> usize {
+        self.axes.iter().map(Vec::len).product()
+    }
+}
+
+impl SearchEngine for GridEngine {
+    fn start(&mut self, sink: &mut dyn TaskSink) {
+        let dims = self.axes.len();
+        let mut idx = vec![0usize; dims];
+        loop {
+            let point: Vec<f64> = (0..dims).map(|d| self.axes[d][idx[d]]).collect();
+            let id = sink.submit(Payload::Eval { input: point.clone(), seed: self.seed });
+            self.by_task.insert(id, point);
+            // Odometer increment.
+            let mut d = 0;
+            loop {
+                if d == dims {
+                    return;
+                }
+                idx[d] += 1;
+                if idx[d] < self.axes[d].len() {
+                    break;
+                }
+                idx[d] = 0;
+                d += 1;
+            }
+        }
+    }
+
+    fn on_done(&mut self, result: &TaskResult, _sink: &mut dyn TaskSink) {
+        if let Some(point) = self.by_task.remove(&result.id) {
+            self.outcome.lock().unwrap().push((point, result.results.clone()));
+        }
+    }
+}
+
+/// `n` uniform random points in a bounding box.
+pub struct RandomEngine {
+    bounds: Vec<(f64, f64)>,
+    n: usize,
+    rng: Pcg64,
+    by_task: std::collections::HashMap<TaskId, Vec<f64>>,
+    outcome: SweepOutcome,
+}
+
+impl RandomEngine {
+    pub fn new(bounds: Vec<(f64, f64)>, n: usize, seed: u64) -> (Self, SweepOutcome) {
+        let outcome: SweepOutcome = Arc::new(Mutex::new(Vec::new()));
+        (
+            Self {
+                bounds,
+                n,
+                rng: Pcg64::new(seed),
+                by_task: Default::default(),
+                outcome: Arc::clone(&outcome),
+            },
+            outcome,
+        )
+    }
+}
+
+impl SearchEngine for RandomEngine {
+    fn start(&mut self, sink: &mut dyn TaskSink) {
+        for k in 0..self.n {
+            let point: Vec<f64> =
+                self.bounds.iter().map(|&(lo, hi)| self.rng.range_f64(lo, hi)).collect();
+            let id = sink.submit(Payload::Eval { input: point.clone(), seed: k as u64 });
+            self.by_task.insert(id, point);
+        }
+    }
+
+    fn on_done(&mut self, result: &TaskResult, _sink: &mut dyn TaskSink) {
+        if let Some(point) = self.by_task.remove(&result.id) {
+            self.outcome.lock().unwrap().push((point, result.results.clone()));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::{run_des, ConstResults, DesConfig};
+
+    #[test]
+    fn grid_enumerates_cartesian_product() {
+        let (engine, outcome) = GridEngine::new(vec![vec![0.0, 1.0], vec![0.0, 0.5, 1.0]], 0);
+        assert_eq!(engine.size(), 6);
+        let r = run_des(
+            &DesConfig::new(4),
+            Box::new(engine),
+            Box::new(ConstResults::new(1.0, 2.0, 2, 0)),
+        );
+        assert_eq!(r.results.len(), 6);
+        let got = outcome.lock().unwrap();
+        assert_eq!(got.len(), 6);
+        let mut points: Vec<Vec<f64>> = got.iter().map(|(p, _)| p.clone()).collect();
+        points.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(points[0], vec![0.0, 0.0]);
+        assert_eq!(points[5], vec![1.0, 1.0]);
+        assert!(got.iter().all(|(_, res)| res.len() == 2));
+    }
+
+    #[test]
+    fn random_engine_samples_in_bounds() {
+        let (engine, outcome) = RandomEngine::new(vec![(-1.0, 1.0), (10.0, 20.0)], 50, 7);
+        let r = run_des(
+            &DesConfig::new(8),
+            Box::new(engine),
+            Box::new(ConstResults::new(1.0, 2.0, 1, 0)),
+        );
+        assert_eq!(r.results.len(), 50);
+        let got = outcome.lock().unwrap();
+        assert_eq!(got.len(), 50);
+        for (p, _) in got.iter() {
+            assert!((-1.0..1.0).contains(&p[0]));
+            assert!((10.0..20.0).contains(&p[1]));
+        }
+    }
+}

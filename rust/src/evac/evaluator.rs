@@ -1,0 +1,175 @@
+//! Plan evaluation: genome → `[f1, f2, f3]`.
+//!
+//! The simulation backend is pluggable: [`RustSimBackend`] runs the
+//! reference simulator of [`super::sim`]; the PJRT backend in
+//! [`crate::runtime`] executes the AOT-compiled JAX/Pallas model. Both
+//! implement [`SimBackend`] so the optimizer, examples and benches switch
+//! between them with a flag — and the cross-check tests assert they agree.
+
+use std::sync::Arc;
+
+use super::plan::{f2_complexity, f3_excess, init_agents, PlanCodec};
+use super::scenario::Scenario;
+use super::sim::{run, AgentState, SimArrays, SimOutput};
+use crate::scheduler::threads::Executor;
+use crate::tasklib::{Payload, TaskSpec};
+
+/// A simulation backend: maps an initial agent state to the sim outputs.
+pub trait SimBackend: Send + Sync {
+    fn run(&self, init: AgentState) -> SimOutput;
+    /// Short name for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust reference backend.
+pub struct RustSimBackend {
+    pub arrays: SimArrays,
+    pub params: super::sim::SimParams,
+}
+
+impl RustSimBackend {
+    pub fn for_scenario(sc: &Scenario) -> Self {
+        Self { arrays: sc.sim_arrays(), params: sc.params }
+    }
+}
+
+impl SimBackend for RustSimBackend {
+    fn run(&self, init: AgentState) -> SimOutput {
+        run(&self.arrays, &self.params, init)
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-ref"
+    }
+}
+
+/// Evaluates plan genomes against a scenario through a backend.
+///
+/// Implements [`Executor`], so it plugs directly into the threaded
+/// scheduler as the consumer-side payload runner for `Payload::Eval`.
+pub struct EvacEvaluator {
+    pub scenario: Arc<Scenario>,
+    pub codec: PlanCodec,
+    pub backend: Arc<dyn SimBackend>,
+    /// f1 is reported in *minutes* (the paper quotes 30–50 min runs);
+    /// scale factor from simulated seconds.
+    pub f1_scale: f64,
+}
+
+impl EvacEvaluator {
+    pub fn new(scenario: Arc<Scenario>, backend: Arc<dyn SimBackend>) -> Self {
+        let codec = PlanCodec::for_scenario(&scenario);
+        Self { scenario, codec, backend, f1_scale: 1.0 / 60.0 }
+    }
+
+    /// Evaluate one genome with one seed → `[f1, f2, f3]`.
+    pub fn evaluate(&self, genome: &[f64], seed: u64) -> [f64; 3] {
+        let plan = self.codec.decode(genome);
+        let f2 = f2_complexity(&plan);
+        // f3 uses the real population numbers (persons), independent of the
+        // simulated agent count.
+        let f3 = f3_excess(&plan, &self.scenario);
+        let init = init_agents(&self.scenario, &plan, seed);
+        let out = self.backend.run(init);
+        let f1 = out.evac_time * self.f1_scale;
+        [f1, f2, f3]
+    }
+
+    pub fn bounds(&self) -> Vec<(f64, f64)> {
+        self.codec.bounds()
+    }
+}
+
+impl Executor for EvacEvaluator {
+    fn run(&self, task: &TaskSpec, _consumer: usize) -> (Vec<f64>, i32) {
+        match &task.payload {
+            Payload::Eval { input, seed } => {
+                let [f1, f2, f3] = self.evaluate(input, *seed);
+                (vec![f1, f2, f3], 0)
+            }
+            other => panic!("EvacEvaluator got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evac::plan::Plan;
+    use crate::evac::scenario::{build_scenario, ScenarioParams};
+
+    fn evaluator() -> EvacEvaluator {
+        let sc = Arc::new(build_scenario(&ScenarioParams::tiny(), 3));
+        let backend = Arc::new(RustSimBackend::for_scenario(&sc));
+        EvacEvaluator::new(sc, backend)
+    }
+
+    #[test]
+    fn evaluation_returns_three_finite_objectives() {
+        let ev = evaluator();
+        let genome: Vec<f64> = ev.bounds().iter().map(|&(lo, hi)| 0.5 * (lo + hi)).collect();
+        let [f1, f2, f3] = ev.evaluate(&genome, 0);
+        assert!(f1.is_finite() && f1 > 0.0, "f1={f1}");
+        assert!(f2.is_finite() && f2 >= 0.0);
+        assert!(f3.is_finite() && f3 >= 0.0);
+    }
+
+    #[test]
+    fn seeds_change_f1_not_f2_f3() {
+        let ev = evaluator();
+        let genome: Vec<f64> = ev.bounds().iter().map(|&(lo, hi)| 0.4 * (hi - lo) + lo).collect();
+        let a = ev.evaluate(&genome, 1);
+        let b = ev.evaluate(&genome, 2);
+        assert_eq!(a[1], b[1]);
+        assert_eq!(a[2], b[2]);
+        // f1 is seed-sensitive (different initial placements) but close.
+        assert!((a[0] - b[0]).abs() / a[0] < 0.5, "{} vs {}", a[0], b[0]);
+    }
+
+    #[test]
+    fn splitting_to_two_shelters_reduces_f1_demonstrating_tradeoff() {
+        // The paper's core trade-off: sending everyone to one shelter jams
+        // the roads (large f1, zero f2); splitting across shelters cuts f1
+        // at the cost of entropy. Compare the two plan archetypes.
+        let ev = evaluator();
+        let n_sub = ev.codec.n_subareas;
+        let single = Plan {
+            r: vec![1.0; n_sub],
+            dest_a: vec![0; n_sub],
+            dest_b: vec![0; n_sub],
+        };
+        // Split plan: each sub-area sends half to its two nearest shelters.
+        let sc = &ev.scenario;
+        let mut split = Plan { r: vec![0.5; n_sub], dest_a: vec![0; n_sub], dest_b: vec![0; n_sub] };
+        for (i, sub) in sc.subareas.iter().enumerate() {
+            let node = sub.nodes[0];
+            let mut order: Vec<usize> = (0..sc.shelters.len()).collect();
+            order.sort_by(|&a, &b| {
+                sc.routing.distance(node, a).partial_cmp(&sc.routing.distance(node, b)).unwrap()
+            });
+            split.dest_a[i] = order[0];
+            split.dest_b[i] = order[1];
+        }
+        let g_single = ev.codec.encode(&single);
+        let g_split = ev.codec.encode(&split);
+        let o_single = ev.evaluate(&g_single, 0);
+        let o_split = ev.evaluate(&g_split, 0);
+        assert!(
+            o_split[0] < o_single[0],
+            "split f1 {} should beat single-shelter f1 {}",
+            o_split[0],
+            o_single[0]
+        );
+        assert!(o_split[1] > o_single[1], "split is more complex");
+    }
+
+    #[test]
+    fn executor_contract() {
+        let ev = evaluator();
+        let genome: Vec<f64> = ev.bounds().iter().map(|&(lo, hi)| 0.3 * (hi - lo) + lo).collect();
+        let task = TaskSpec::new(0, Payload::Eval { input: genome, seed: 5 });
+        let (results, rc) = ev.run(&task, 0);
+        assert_eq!(rc, 0);
+        assert_eq!(results.len(), 3);
+    }
+}

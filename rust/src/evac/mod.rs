@@ -1,0 +1,19 @@
+//! The evacuation substrate — everything §4 of the paper needs: road
+//! networks ([`network`]), shortest-path routing ([`routing`]), the
+//! CrowdWalk-like pedestrian-flow simulator ([`sim`]), scenario generation
+//! ([`scenario`]), plan encoding + objectives ([`plan`]) and the evaluator
+//! gluing it to the scheduler ([`evaluator`]).
+
+pub mod evaluator;
+pub mod network;
+pub mod plan;
+pub mod routing;
+pub mod scenario;
+pub mod sim;
+
+pub use evaluator::{EvacEvaluator, RustSimBackend, SimBackend};
+pub use network::{grid_city, GridCityParams, RoadNetwork};
+pub use plan::{f2_complexity, f3_excess, init_agents, Plan, PlanCodec};
+pub use routing::RoutingTable;
+pub use scenario::{build_scenario, Scenario, ScenarioParams};
+pub use sim::{AgentState, SimArrays, SimOutput, SimParams};

@@ -1,0 +1,262 @@
+//! Road networks for the evacuation substrate.
+//!
+//! CrowdWalk (the paper's simulator) represents a city as one-dimensional
+//! roads: a directed graph of nodes and links on which agents move — "this
+//! design is advantageous for making simulations sufficiently fast to
+//! manage a large number of agents" (§4.3). We reproduce that model class.
+//!
+//! The paper's Yodogawa-ward map (2 933 nodes, 8 924 links) is not
+//! redistributable, so [`grid_city`] generates synthetic street grids with
+//! perturbed geometry and random street removals — the same structural
+//! family (mostly-planar, low-degree, strongly connected).
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Node {
+    pub x: f64,
+    pub y: f64,
+}
+
+/// A directed road segment. Every undirected street contributes two links.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    pub from: usize,
+    pub to: usize,
+    /// Metres.
+    pub length: f32,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RoadNetwork {
+    pub nodes: Vec<Node>,
+    pub links: Vec<Link>,
+    /// Outgoing link indices per node.
+    pub out_links: Vec<Vec<usize>>,
+    /// Incoming link indices per node.
+    pub in_links: Vec<Vec<usize>>,
+}
+
+impl RoadNetwork {
+    pub fn new(nodes: Vec<Node>) -> Self {
+        let n = nodes.len();
+        Self { nodes, links: Vec::new(), out_links: vec![Vec::new(); n], in_links: vec![Vec::new(); n] }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Add a directed link; length defaults to Euclidean distance.
+    pub fn add_link(&mut self, from: usize, to: usize, length: Option<f32>) -> usize {
+        assert!(from < self.n_nodes() && to < self.n_nodes() && from != to);
+        let length = length.unwrap_or_else(|| {
+            let (a, b) = (&self.nodes[from], &self.nodes[to]);
+            (((a.x - b.x).powi(2) + (a.y - b.y).powi(2)).sqrt() as f32).max(1.0)
+        });
+        let id = self.links.len();
+        self.links.push(Link { from, to, length });
+        self.out_links[from].push(id);
+        self.in_links[to].push(id);
+        id
+    }
+
+    /// Add both directions of an undirected street.
+    pub fn add_street(&mut self, a: usize, b: usize) -> (usize, usize) {
+        (self.add_link(a, b, None), self.add_link(b, a, None))
+    }
+
+    /// Nodes reachable from `start` following directed links.
+    pub fn reachable_from(&self, start: usize) -> Vec<bool> {
+        let mut seen = vec![false; self.n_nodes()];
+        let mut stack = vec![start];
+        seen[start] = true;
+        while let Some(u) = stack.pop() {
+            for &l in &self.out_links[u] {
+                let v = self.links[l].to;
+                if !seen[v] {
+                    seen[v] = true;
+                    stack.push(v);
+                }
+            }
+        }
+        seen
+    }
+
+    /// True when every node can reach every other (needed so every agent
+    /// can reach every shelter).
+    pub fn strongly_connected(&self) -> bool {
+        if self.n_nodes() == 0 {
+            return true;
+        }
+        if !self.reachable_from(0).iter().all(|&b| b) {
+            return false;
+        }
+        // Reverse reachability via in_links.
+        let mut seen = vec![false; self.n_nodes()];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(u) = stack.pop() {
+            for &l in &self.in_links[u] {
+                let v = self.links[l].from;
+                if !seen[v] {
+                    seen[v] = true;
+                    stack.push(v);
+                }
+            }
+        }
+        seen.iter().all(|&b| b)
+    }
+}
+
+/// Parameters for the synthetic street grid.
+#[derive(Clone, Debug)]
+pub struct GridCityParams {
+    /// Grid dimensions (intersections).
+    pub width: usize,
+    pub height: usize,
+    /// Block edge length in metres.
+    pub spacing: f64,
+    /// Random positional jitter as a fraction of spacing.
+    pub jitter: f64,
+    /// Probability of removing a street (kept only if removal preserves
+    /// strong connectivity).
+    pub removal: f64,
+}
+
+impl Default for GridCityParams {
+    fn default() -> Self {
+        Self { width: 16, height: 16, spacing: 80.0, jitter: 0.25, removal: 0.12 }
+    }
+}
+
+/// Generate a perturbed street grid. Guaranteed strongly connected.
+pub fn grid_city(p: &GridCityParams, seed: u64) -> RoadNetwork {
+    let mut rng = Pcg64::new(seed);
+    let (w, h) = (p.width, p.height);
+    assert!(w >= 2 && h >= 2);
+    let mut nodes = Vec::with_capacity(w * h);
+    for j in 0..h {
+        for i in 0..w {
+            let jx = rng.range_f64(-p.jitter, p.jitter) * p.spacing;
+            let jy = rng.range_f64(-p.jitter, p.jitter) * p.spacing;
+            nodes.push(Node { x: i as f64 * p.spacing + jx, y: j as f64 * p.spacing + jy });
+        }
+    }
+    let mut net = RoadNetwork::new(nodes);
+    let idx = |i: usize, j: usize| j * w + i;
+    // Candidate streets: all grid edges.
+    let mut streets = Vec::new();
+    for j in 0..h {
+        for i in 0..w {
+            if i + 1 < w {
+                streets.push((idx(i, j), idx(i + 1, j)));
+            }
+            if j + 1 < h {
+                streets.push((idx(i, j), idx(i, j + 1)));
+            }
+        }
+    }
+    for &(a, b) in &streets {
+        net.add_street(a, b);
+    }
+    // Random removals, keeping strong connectivity.
+    let mut order: Vec<usize> = (0..streets.len()).collect();
+    rng.shuffle(&mut order);
+    let target = (streets.len() as f64 * p.removal) as usize;
+    let mut removed = 0;
+    for &s in &order {
+        if removed >= target {
+            break;
+        }
+        let (a, b) = streets[s];
+        // Tentatively remove both directions and test connectivity.
+        let saved = net.clone();
+        net.links.retain(|l| !((l.from == a && l.to == b) || (l.from == b && l.to == a)));
+        rebuild_adjacency(&mut net);
+        if net.strongly_connected() {
+            removed += 1;
+        } else {
+            net = saved;
+        }
+    }
+    net
+}
+
+fn rebuild_adjacency(net: &mut RoadNetwork) {
+    let n = net.n_nodes();
+    net.out_links = vec![Vec::new(); n];
+    net.in_links = vec![Vec::new(); n];
+    for (i, l) in net.links.iter().enumerate() {
+        net.out_links[l.from].push(i);
+        net.in_links[l.to].push(i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_link_computes_euclidean_length() {
+        let mut net = RoadNetwork::new(vec![Node { x: 0.0, y: 0.0 }, Node { x: 3.0, y: 4.0 }]);
+        let l = net.add_link(0, 1, None);
+        assert!((net.links[l].length - 5.0).abs() < 1e-6);
+        assert_eq!(net.out_links[0], vec![l]);
+        assert_eq!(net.in_links[1], vec![l]);
+    }
+
+    #[test]
+    fn grid_city_is_strongly_connected_and_sized() {
+        let p = GridCityParams { width: 8, height: 6, ..Default::default() };
+        let net = grid_city(&p, 42);
+        assert_eq!(net.n_nodes(), 48);
+        assert!(net.strongly_connected());
+        // Full grid would have 2*(7*6 + 8*5) = 164 directed links; removal
+        // strips some but never below a spanning structure.
+        assert!(net.n_links() > 100 && net.n_links() <= 164);
+        // All lengths positive and near the spacing scale.
+        assert!(net.links.iter().all(|l| l.length > 1.0 && l.length < 300.0));
+    }
+
+    #[test]
+    fn grid_city_deterministic_per_seed() {
+        let p = GridCityParams::default();
+        let a = grid_city(&p, 7);
+        let b = grid_city(&p, 7);
+        let c = grid_city(&p, 8);
+        assert_eq!(a.links, b.links);
+        assert!(a.links != c.links || a.nodes != c.nodes);
+    }
+
+    #[test]
+    fn disconnected_graph_detected() {
+        let mut net = RoadNetwork::new(vec![
+            Node { x: 0.0, y: 0.0 },
+            Node { x: 1.0, y: 0.0 },
+            Node { x: 2.0, y: 0.0 },
+        ]);
+        net.add_street(0, 1);
+        assert!(!net.strongly_connected());
+        net.add_street(1, 2);
+        assert!(net.strongly_connected());
+    }
+
+    #[test]
+    fn one_way_cycle_is_strongly_connected() {
+        let mut net = RoadNetwork::new(vec![
+            Node { x: 0.0, y: 0.0 },
+            Node { x: 1.0, y: 0.0 },
+            Node { x: 0.5, y: 1.0 },
+        ]);
+        net.add_link(0, 1, None);
+        net.add_link(1, 2, None);
+        net.add_link(2, 0, None);
+        assert!(net.strongly_connected());
+        assert_eq!(net.reachable_from(1), vec![true, true, true]);
+    }
+}

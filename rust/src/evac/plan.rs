@@ -1,0 +1,280 @@
+//! Evacuation-plan encoding and the three objective functions (§4.3).
+//!
+//! A plan splits each sub-area's residents into two groups with ratio
+//! `r_i : 1−r_i` and assigns each group a destination shelter — 3 decision
+//! variables per sub-area (`r_i`, `dest_a_i`, `dest_b_i`), 1 599 in the
+//! paper's 533-sub-area case.
+//!
+//! Objectives (all minimized):
+//! * **f1** — time to complete the evacuation: from the simulation.
+//! * **f2** — plan complexity: the information entropy of the split,
+//!   `f2 = −Σᵢ (rᵢ·ln rᵢ + (1−rᵢ)·ln(1−rᵢ))` ≥ 0. The paper prints the
+//!   expression without the leading minus but describes *smaller entropy =
+//!   simpler plan* and minimizes it; we use the positive-entropy
+//!   convention so that minimizing f2 favours unsplit (simple) plans, as
+//!   described.
+//! * **f3** — excess evacuees: `Σ_s max(0, assigned(s) − capacity(s))`,
+//!   computed from the real population numbers.
+
+use super::scenario::{apportion, Scenario};
+use super::sim::AgentState;
+use crate::util::rng::Pcg64;
+
+/// Decoded plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    pub r: Vec<f64>,
+    pub dest_a: Vec<usize>,
+    pub dest_b: Vec<usize>,
+}
+
+/// Encodes/decodes plans to flat `Vec<f64>` genomes (the optimizer's
+/// decision vector) and computes the analytic objectives.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanCodec {
+    pub n_subareas: usize,
+    pub n_shelters: usize,
+}
+
+impl PlanCodec {
+    pub fn for_scenario(sc: &Scenario) -> Self {
+        Self { n_subareas: sc.subareas.len(), n_shelters: sc.shelters.len() }
+    }
+
+    /// Genome length: 3 variables per sub-area (the paper's 1 599 for 533).
+    pub fn dim(&self) -> usize {
+        3 * self.n_subareas
+    }
+
+    /// Optimizer bounds: `r ∈ [0,1]`, destinations as continuous indices in
+    /// `[0, n_shelters)` (floored at decode — standard integer handling
+    /// under SBX/polynomial-mutation).
+    pub fn bounds(&self) -> Vec<(f64, f64)> {
+        let mut out = Vec::with_capacity(self.dim());
+        let s_hi = self.n_shelters as f64 - 1e-9;
+        for _ in 0..self.n_subareas {
+            out.push((0.0, 1.0));
+            out.push((0.0, s_hi));
+            out.push((0.0, s_hi));
+        }
+        out
+    }
+
+    /// Layout: `[r_0, destA_0, destB_0, r_1, …]`.
+    pub fn decode(&self, genome: &[f64]) -> Plan {
+        assert_eq!(genome.len(), self.dim(), "genome length");
+        let mut plan = Plan {
+            r: Vec::with_capacity(self.n_subareas),
+            dest_a: Vec::with_capacity(self.n_subareas),
+            dest_b: Vec::with_capacity(self.n_subareas),
+        };
+        let hi = self.n_shelters - 1;
+        for i in 0..self.n_subareas {
+            plan.r.push(genome[3 * i].clamp(0.0, 1.0));
+            plan.dest_a.push((genome[3 * i + 1].max(0.0) as usize).min(hi));
+            plan.dest_b.push((genome[3 * i + 2].max(0.0) as usize).min(hi));
+        }
+        plan
+    }
+
+    pub fn encode(&self, plan: &Plan) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.dim());
+        for i in 0..self.n_subareas {
+            out.push(plan.r[i]);
+            out.push(plan.dest_a[i] as f64 + 0.5);
+            out.push(plan.dest_b[i] as f64 + 0.5);
+        }
+        out
+    }
+}
+
+/// f2: plan complexity (positive entropy; nats).
+pub fn f2_complexity(plan: &Plan) -> f64 {
+    let mut h = 0.0;
+    for &r in &plan.r {
+        // Effective split: identical destinations mean no real split.
+        if r > 0.0 && r < 1.0 {
+            h -= r * r.ln() + (1.0 - r) * (1.0 - r).ln();
+        }
+    }
+    h
+}
+
+/// f3: excess evacuees over shelter capacities (persons).
+pub fn f3_excess(plan: &Plan, sc: &Scenario) -> f64 {
+    let mut assigned = vec![0.0f64; sc.shelters.len()];
+    for (i, sub) in sc.subareas.iter().enumerate() {
+        assigned[plan.dest_a[i]] += plan.r[i] * sub.population;
+        assigned[plan.dest_b[i]] += (1.0 - plan.r[i]) * sub.population;
+    }
+    assigned
+        .iter()
+        .zip(&sc.shelters)
+        .map(|(&a, s)| (a - s.capacity).max(0.0))
+        .sum()
+}
+
+/// Build the initial agent state for a plan (the host-side input of both
+/// the Rust reference simulator and the compiled model).
+///
+/// Per sub-area: its agent allotment is split `r : 1−r` (largest
+/// remainder), start nodes cycle through the sub-area's nodes in a
+/// seed-shuffled order, and each agent starts on the first link of its
+/// shortest path with a small seeded position jitter — this is where the
+/// paper's "five independent runs with different random seeds" enter.
+pub fn init_agents(sc: &Scenario, plan: &Plan, seed: u64) -> AgentState {
+    let mut rng = Pcg64::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x1A17);
+    // The arrived-sentinel is the *padded* link budget — the sentinel row
+    // of the exported arrays — not the real link count.
+    let nl = sc.padded_links();
+    let mut st = AgentState {
+        link: Vec::with_capacity(sc.n_agents),
+        pos: Vec::with_capacity(sc.n_agents),
+        dest: Vec::with_capacity(sc.n_agents),
+    };
+    for (i, sub) in sc.subareas.iter().enumerate() {
+        let k = sc.agents_per_subarea[i];
+        if k == 0 {
+            continue;
+        }
+        let split = apportion(k, &[plan.r[i].max(1e-12), (1.0 - plan.r[i]).max(1e-12)]);
+        let mut nodes = sub.nodes.clone();
+        rng.shuffle(&mut nodes);
+        let mut node_cursor = 0usize;
+        for (g, &count) in split.iter().enumerate() {
+            let dest = if g == 0 { plan.dest_a[i] } else { plan.dest_b[i] };
+            for _ in 0..count {
+                let node = nodes[node_cursor % nodes.len()];
+                node_cursor += 1;
+                if node == sc.shelters[dest].node {
+                    // Already at the shelter: arrived from the start.
+                    st.link.push(nl as i32);
+                    st.pos.push(0.0);
+                } else {
+                    let l = sc.routing.next_link(node, dest);
+                    debug_assert!(l >= 0);
+                    let len = sc.net.links[l as usize].length;
+                    let jitter = (rng.uniform() as f32) * (len * 0.25).min(10.0);
+                    st.link.push(l);
+                    st.pos.push(jitter);
+                }
+                st.dest.push(dest as i32);
+            }
+        }
+    }
+    debug_assert_eq!(st.link.len(), sc.n_agents);
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evac::scenario::{build_scenario, ScenarioParams};
+
+    fn tiny() -> Scenario {
+        build_scenario(&ScenarioParams::tiny(), 3)
+    }
+
+    #[test]
+    fn codec_roundtrip_and_bounds() {
+        let sc = tiny();
+        let codec = PlanCodec::for_scenario(&sc);
+        assert_eq!(codec.dim(), 18);
+        let bounds = codec.bounds();
+        assert_eq!(bounds.len(), 18);
+        assert_eq!(bounds[0], (0.0, 1.0));
+        assert!(bounds[1].1 < 3.0 && bounds[1].1 > 2.9);
+        let plan = Plan {
+            r: vec![0.25; 6],
+            dest_a: vec![0, 1, 2, 0, 1, 2],
+            dest_b: vec![2, 2, 1, 0, 0, 1],
+        };
+        let decoded = codec.decode(&codec.encode(&plan));
+        assert_eq!(decoded, plan);
+    }
+
+    #[test]
+    fn decode_clamps_out_of_range() {
+        let sc = tiny();
+        let codec = PlanCodec::for_scenario(&sc);
+        let mut genome = vec![0.0; codec.dim()];
+        genome[0] = 1.7; // r > 1
+        genome[1] = 99.0; // dest too large
+        genome[2] = -3.0; // dest negative
+        let plan = codec.decode(&genome);
+        assert_eq!(plan.r[0], 1.0);
+        assert_eq!(plan.dest_a[0], 2);
+        assert_eq!(plan.dest_b[0], 0);
+    }
+
+    #[test]
+    fn f2_zero_for_unsplit_max_at_half() {
+        let mk = |r: f64| Plan { r: vec![r; 4], dest_a: vec![0; 4], dest_b: vec![1; 4] };
+        assert_eq!(f2_complexity(&mk(0.0)), 0.0);
+        assert_eq!(f2_complexity(&mk(1.0)), 0.0);
+        let half = f2_complexity(&mk(0.5));
+        assert!((half - 4.0 * std::f64::consts::LN_2).abs() < 1e-12);
+        assert!(f2_complexity(&mk(0.2)) < half);
+    }
+
+    #[test]
+    fn f3_counts_only_excess() {
+        let sc = tiny();
+        // Everyone to shelter 0: assigned = 3000, capacity₀ < 3000 ⇒ excess.
+        let all_to_0 = Plan {
+            r: vec![1.0; 6],
+            dest_a: vec![0; 6],
+            dest_b: vec![0; 6],
+        };
+        let excess = f3_excess(&all_to_0, &sc);
+        let cap0 = sc.shelters[0].capacity;
+        assert!((excess - (3000.0 - cap0)).abs() < 1e-6);
+        // Perfectly proportional split ⇒ some excess may remain only if a
+        // shelter is over-subscribed; a spread plan reduces f3.
+        let spread = Plan {
+            r: vec![0.5; 6],
+            dest_a: vec![0, 1, 2, 0, 1, 2],
+            dest_b: vec![1, 2, 0, 2, 0, 1],
+        };
+        assert!(f3_excess(&spread, &sc) < excess);
+    }
+
+    #[test]
+    fn init_agents_counts_and_split() {
+        let sc = tiny();
+        let codec = PlanCodec::for_scenario(&sc);
+        let genome: Vec<f64> = codec
+            .bounds()
+            .iter()
+            .enumerate()
+            .map(|(k, &(lo, hi))| lo + (hi - lo) * ((k % 3) as f64 / 3.0 + 0.1))
+            .collect();
+        let plan = codec.decode(&genome);
+        let st = init_agents(&sc, &plan, 0);
+        assert_eq!(st.n_agents(), sc.n_agents);
+        // All destinations valid; links are real or the padded sentinel.
+        let real = sc.net.n_links() as i32;
+        let sentinel = sc.padded_links() as i32;
+        assert!(st.dest.iter().all(|&d| (d as usize) < sc.shelters.len()));
+        assert!(st.link.iter().all(|&l| (l >= 0 && l < real) || l == sentinel));
+        assert!(st.pos.iter().all(|&p| p >= 0.0));
+    }
+
+    #[test]
+    fn init_agents_seed_dependent_but_deterministic() {
+        let sc = tiny();
+        let plan = Plan {
+            r: vec![0.5; 6],
+            dest_a: vec![0, 1, 2, 0, 1, 2],
+            dest_b: vec![1, 2, 0, 2, 0, 1],
+        };
+        let a = init_agents(&sc, &plan, 1);
+        let b = init_agents(&sc, &plan, 1);
+        let c = init_agents(&sc, &plan, 2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // Group sizes respect r: with r=0.5, dests split roughly evenly.
+        let to_a = a.dest.iter().filter(|&&d| d == 0).count();
+        assert!(to_a > 0 && to_a < sc.n_agents);
+    }
+}

@@ -1,0 +1,186 @@
+//! Shortest-path routing to shelters.
+//!
+//! Agents follow precomputed shortest paths: for every (node, shelter)
+//! pair, [`RoutingTable`] stores the outgoing link to take. Computed with
+//! one Dijkstra per shelter over the *reverse* graph (single-destination
+//! shortest paths), so building the table costs `S · (E log V)`.
+//!
+//! The flattened `next_link` array is also the routing input of the
+//! AOT-compiled JAX simulator — one compiled executable serves every plan
+//! on a given network (DESIGN.md, key decision 6).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::network::RoadNetwork;
+
+/// `next[node * n_shelters + s]` = outgoing link index leading toward
+/// shelter `s`, or `NO_ROUTE` when unreachable / already at the shelter.
+#[derive(Clone, Debug)]
+pub struct RoutingTable {
+    pub n_shelters: usize,
+    pub next: Vec<i32>,
+    /// Shortest distance (metres) from each node to each shelter.
+    pub dist: Vec<f32>,
+}
+
+pub const NO_ROUTE: i32 = -1;
+
+impl RoutingTable {
+    /// Build the table for `shelter_nodes`.
+    pub fn build(net: &RoadNetwork, shelter_nodes: &[usize]) -> Self {
+        let n = net.n_nodes();
+        let s_count = shelter_nodes.len();
+        let mut next = vec![NO_ROUTE; n * s_count];
+        let mut dist_all = vec![f32::INFINITY; n * s_count];
+        for (s, &shelter) in shelter_nodes.iter().enumerate() {
+            let (dist, via) = reverse_dijkstra(net, shelter);
+            for v in 0..n {
+                dist_all[v * s_count + s] = dist[v] as f32;
+                if let Some(link) = via[v] {
+                    next[v * s_count + s] = link as i32;
+                }
+            }
+        }
+        Self { n_shelters: s_count, next, dist: dist_all }
+    }
+
+    #[inline]
+    pub fn next_link(&self, node: usize, shelter: usize) -> i32 {
+        self.next[node * self.n_shelters + shelter]
+    }
+
+    #[inline]
+    pub fn distance(&self, node: usize, shelter: usize) -> f32 {
+        self.dist[node * self.n_shelters + shelter]
+    }
+
+    /// Index of the nearest shelter from `node`.
+    pub fn nearest_shelter(&self, node: usize) -> usize {
+        (0..self.n_shelters)
+            .min_by(|&a, &b| {
+                self.distance(node, a).partial_cmp(&self.distance(node, b)).unwrap()
+            })
+            .unwrap()
+    }
+}
+
+/// Dijkstra from `target` over reversed links. Returns, per node, the
+/// distance to the target and the *forward* link to take from that node.
+fn reverse_dijkstra(net: &RoadNetwork, target: usize) -> (Vec<f64>, Vec<Option<usize>>) {
+    let n = net.n_nodes();
+    let mut dist = vec![f64::INFINITY; n];
+    let mut via: Vec<Option<usize>> = vec![None; n];
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    // f64 distances ordered via their bit pattern (all non-negative).
+    let key = |d: f64| d.to_bits();
+    dist[target] = 0.0;
+    heap.push(Reverse((key(0.0), target)));
+    while let Some(Reverse((k, u))) = heap.pop() {
+        if k > key(dist[u]) {
+            continue;
+        }
+        // Relax reverse edges: forward link v --l--> u.
+        for &l in &net.in_links[u] {
+            let link = &net.links[l];
+            let v = link.from;
+            let nd = dist[u] + link.length as f64;
+            if nd < dist[v] {
+                dist[v] = nd;
+                via[v] = Some(l);
+                heap.push(Reverse((key(nd), v)));
+            }
+        }
+    }
+    (dist, via)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evac::network::{grid_city, GridCityParams, Node, RoadNetwork};
+
+    fn line_net() -> RoadNetwork {
+        // 0 — 1 — 2 — 3 in a line, bidirectional.
+        let mut net = RoadNetwork::new(
+            (0..4).map(|i| Node { x: i as f64 * 100.0, y: 0.0 }).collect(),
+        );
+        for i in 0..3 {
+            net.add_street(i, i + 1);
+        }
+        net
+    }
+
+    #[test]
+    fn line_routes_point_toward_shelter() {
+        let net = line_net();
+        let rt = RoutingTable::build(&net, &[3]);
+        // From node 0 the next link must head to node 1, etc.
+        for v in 0..3 {
+            let l = rt.next_link(v, 0);
+            assert!(l >= 0);
+            let link = net.links[l as usize];
+            assert_eq!(link.from, v);
+            assert_eq!(link.to, v + 1);
+        }
+        // At the shelter itself: no route needed.
+        assert_eq!(rt.next_link(3, 0), NO_ROUTE);
+        assert!((rt.distance(0, 0) - 300.0).abs() < 1e-3);
+        assert_eq!(rt.distance(3, 0), 0.0);
+    }
+
+    #[test]
+    fn multiple_shelters_nearest_is_correct() {
+        let net = line_net();
+        let rt = RoutingTable::build(&net, &[0, 3]);
+        assert_eq!(rt.nearest_shelter(1), 0);
+        assert_eq!(rt.nearest_shelter(2), 1);
+    }
+
+    #[test]
+    fn following_next_links_always_reaches_the_shelter() {
+        // Property over random city graphs: from every node, walking the
+        // table reaches the shelter within n_links steps, and the walked
+        // distance equals the table's distance.
+        let p = GridCityParams { width: 7, height: 5, ..Default::default() };
+        for seed in 0..4u64 {
+            let net = grid_city(&p, seed);
+            let shelters = [0usize, net.n_nodes() / 2, net.n_nodes() - 1];
+            let rt = RoutingTable::build(&net, &shelters);
+            for (s, &shelter) in shelters.iter().enumerate() {
+                for start in 0..net.n_nodes() {
+                    let mut node = start;
+                    let mut walked = 0.0f64;
+                    let mut hops = 0;
+                    while node != shelter {
+                        let l = rt.next_link(node, s);
+                        assert!(l >= 0, "no route {start}->{shelter}");
+                        let link = net.links[l as usize];
+                        assert_eq!(link.from, node);
+                        walked += link.length as f64;
+                        node = link.to;
+                        hops += 1;
+                        assert!(hops <= net.n_links(), "routing loop");
+                    }
+                    assert!(
+                        (walked - rt.distance(start, s) as f64).abs() < 0.5,
+                        "distance mismatch at {start}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shortest_distances_satisfy_triangle_relaxation() {
+        let p = GridCityParams { width: 6, height: 6, ..Default::default() };
+        let net = grid_city(&p, 9);
+        let rt = RoutingTable::build(&net, &[10]);
+        // For every link (u→v): dist(u) ≤ length + dist(v) (optimality).
+        for link in &net.links {
+            let du = rt.distance(link.from, 0);
+            let dv = rt.distance(link.to, 0);
+            assert!(du <= link.length + dv + 1e-3, "suboptimal at {}→{}", link.from, link.to);
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! Evacuation scenarios: a road network + shelters with capacities +
+//! populated sub-areas, plus the precomputed routing arrays.
+//!
+//! The paper's case study (§4.3): Yodogawa ward, 2 933 nodes / 8 924 links,
+//! 49 726 evacuees, 86 shelters, 533 sub-areas. That census/map data is not
+//! redistributable, so scenarios here are generated synthetically on
+//! [`grid_city`](crate::evac::network::grid_city) street grids with the
+//! same structure: sub-areas tile the city, each holds a population, each
+//! shelter has a capacity, and the *simulated* agent count is a scaled-down
+//! sample of the population (the plan objectives f2/f3 use the real
+//! population numbers; the simulation uses agents).
+
+use super::network::{grid_city, GridCityParams, RoadNetwork};
+use super::routing::RoutingTable;
+use super::sim::{SimArrays, SimParams, SENTINEL_LENGTH};
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct Shelter {
+    pub node: usize,
+    /// Capacity in *persons* (population units, not simulated agents).
+    pub capacity: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Subarea {
+    /// Nodes belonging to this sub-area (agents start at these).
+    pub nodes: Vec<usize>,
+    /// Resident population (persons).
+    pub population: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub net: RoadNetwork,
+    pub shelters: Vec<Shelter>,
+    pub subareas: Vec<Subarea>,
+    pub routing: RoutingTable,
+    pub params: SimParams,
+    /// Simulated agents (fixed shape of the compiled model).
+    pub n_agents: usize,
+    /// Agents allotted per sub-area (largest-remainder apportionment of
+    /// `n_agents` by population; sums to `n_agents`).
+    pub agents_per_subarea: Vec<usize>,
+    /// Fixed link budget (full-grid link count) for AOT shape stability.
+    pub pad_links: usize,
+}
+
+impl Scenario {
+    /// Flattened per-link / routing arrays (the compiled model's inputs).
+    ///
+    /// Links are padded up to [`Scenario::padded_links`] so the array
+    /// shapes depend only on the scenario *class* (grid dimensions), not on
+    /// the seed-dependent street removals — the AOT-compiled model bakes
+    /// these shapes. Padded rows behave like the sentinel row (no agent is
+    /// ever placed on them).
+    pub fn sim_arrays(&self) -> SimArrays {
+        let nl = self.padded_links();
+        let real = self.net.n_links();
+        assert!(real <= nl, "network exceeds padded link budget");
+        let s = self.shelters.len();
+        let mut length: Vec<f32> = self.net.links.iter().map(|l| l.length).collect();
+        length.resize(nl + 1, SENTINEL_LENGTH);
+        let mut to: Vec<i32> = self.net.links.iter().map(|l| l.to as i32).collect();
+        to.resize(nl + 1, 0);
+        // NO_ROUTE (−1) exported as 0: never consulted (see sim.rs header).
+        let next_link: Vec<i32> =
+            self.routing.next.iter().map(|&x| if x < 0 { 0 } else { x }).collect();
+        let shelter_node: Vec<i32> = self.shelters.iter().map(|sh| sh.node as i32).collect();
+        SimArrays { length, to, next_link, shelter_node, n_links: nl, n_shelters: s }
+    }
+
+    /// Fixed link budget of the scenario class: the unperturbed full grid
+    /// (removals only shrink the real count).
+    pub fn padded_links(&self) -> usize {
+        self.pad_links
+    }
+
+    pub fn total_population(&self) -> f64 {
+        self.subareas.iter().map(|a| a.population).sum()
+    }
+
+    pub fn total_capacity(&self) -> f64 {
+        self.shelters.iter().map(|s| s.capacity).sum()
+    }
+
+    /// Persons represented by one simulated agent.
+    pub fn persons_per_agent(&self) -> f64 {
+        self.total_population() / self.n_agents as f64
+    }
+}
+
+/// Generation knobs for synthetic scenarios.
+#[derive(Clone, Debug)]
+pub struct ScenarioParams {
+    pub grid: GridCityParams,
+    pub n_shelters: usize,
+    /// Sub-area tiling: the city is cut into `sub_w × sub_h` tiles.
+    pub sub_w: usize,
+    pub sub_h: usize,
+    pub total_population: f64,
+    /// Total shelter capacity as a fraction of the population (≤ 1 makes
+    /// f3 a real constraint, as in a dense ward).
+    pub capacity_ratio: f64,
+    pub n_agents: usize,
+    pub sim: SimParams,
+}
+
+impl ScenarioParams {
+    /// Small scenario for tests: ~30 nodes, 3 shelters, 6 sub-areas.
+    pub fn tiny() -> Self {
+        Self {
+            grid: GridCityParams { width: 6, height: 5, removal: 0.05, ..Default::default() },
+            n_shelters: 3,
+            sub_w: 3,
+            sub_h: 2,
+            total_population: 3000.0,
+            capacity_ratio: 0.9,
+            n_agents: 256,
+            sim: SimParams { max_steps: 512, ..Default::default() },
+        }
+    }
+
+    /// The default application scenario ("yodogawa-mini", DESIGN.md):
+    /// 20×20 grid ≈ 400 nodes / ~1300 links, 12 shelters, 64 sub-areas,
+    /// 49 726 persons represented by 4 096 agents.
+    pub fn yodogawa_mini() -> Self {
+        Self {
+            grid: GridCityParams { width: 20, height: 20, ..Default::default() },
+            n_shelters: 12,
+            sub_w: 8,
+            sub_h: 8,
+            total_population: 49_726.0,
+            capacity_ratio: 0.85,
+            n_agents: 4096,
+            sim: SimParams { max_steps: 1024, ..Default::default() },
+        }
+    }
+}
+
+/// Build a scenario deterministically from `seed`.
+pub fn build_scenario(p: &ScenarioParams, seed: u64) -> Scenario {
+    let mut rng = Pcg64::new(seed ^ EVAC_SEED_SALT);
+    let net = grid_city(&p.grid, rng.next_u64());
+    let n = net.n_nodes();
+    // Shelters: distinct random nodes, roughly spread by rejection on
+    // minimum pairwise grid distance.
+    let mut shelter_nodes: Vec<usize> = Vec::new();
+    let min_sep = ((p.grid.width.min(p.grid.height)) as f64 / (p.n_shelters as f64).sqrt()
+        * p.grid.spacing
+        * 0.5)
+        .max(p.grid.spacing);
+    let mut attempts = 0;
+    while shelter_nodes.len() < p.n_shelters {
+        attempts += 1;
+        let cand = rng.below(n as u64) as usize;
+        let ok = shelter_nodes.iter().all(|&s| {
+            let (a, b) = (&net.nodes[s], &net.nodes[cand]);
+            let d = ((a.x - b.x).powi(2) + (a.y - b.y).powi(2)).sqrt();
+            d >= min_sep || attempts > 50 * p.n_shelters
+        });
+        if ok && !shelter_nodes.contains(&cand) {
+            shelter_nodes.push(cand);
+        }
+    }
+    // Capacities: Dirichlet-ish random split of capacity_ratio × population.
+    let total_cap = p.total_population * p.capacity_ratio;
+    let mut weights: Vec<f64> = (0..p.n_shelters).map(|_| rng.range_f64(0.5, 2.0)).collect();
+    let wsum: f64 = weights.iter().sum();
+    for w in &mut weights {
+        *w *= total_cap / wsum;
+    }
+    let shelters: Vec<Shelter> = shelter_nodes
+        .iter()
+        .zip(&weights)
+        .map(|(&node, &capacity)| Shelter { node, capacity })
+        .collect();
+
+    // Sub-areas: tile the grid into sub_w × sub_h buckets by node index
+    // position (nodes are laid out row-major by grid_city).
+    let n_sub = p.sub_w * p.sub_h;
+    let mut nodes_per_sub: Vec<Vec<usize>> = vec![Vec::new(); n_sub];
+    for node in 0..n {
+        let (i, j) = (node % p.grid.width, node / p.grid.width);
+        let si = (i * p.sub_w / p.grid.width).min(p.sub_w - 1);
+        let sj = (j * p.sub_h / p.grid.height).min(p.sub_h - 1);
+        nodes_per_sub[sj * p.sub_w + si].push(node);
+    }
+    // Populations: random weights (heavier variance than capacities —
+    // residential density varies block to block).
+    let mut pops: Vec<f64> = (0..n_sub).map(|_| rng.range_f64(0.2, 3.0)).collect();
+    let psum: f64 = pops.iter().sum();
+    for q in &mut pops {
+        *q *= p.total_population / psum;
+    }
+    let subareas: Vec<Subarea> = nodes_per_sub
+        .into_iter()
+        .zip(&pops)
+        .map(|(nodes, &population)| Subarea { nodes, population })
+        .collect();
+    assert!(subareas.iter().all(|a| !a.nodes.is_empty()), "empty sub-area tile");
+
+    // Apportion simulated agents by population (largest remainder).
+    let agents_per_subarea = apportion(p.n_agents, &pops);
+
+    let routing = RoutingTable::build(&net, &shelter_nodes);
+    // Full-grid directed link count: every interior street in both
+    // directions — the upper bound regardless of removals.
+    let pad_links = 2 * (p.grid.width * (p.grid.height - 1) + p.grid.height * (p.grid.width - 1));
+    Scenario {
+        net,
+        shelters,
+        subareas,
+        routing,
+        params: p.sim,
+        n_agents: p.n_agents,
+        agents_per_subarea,
+        pad_links,
+    }
+}
+
+/// Salt so scenario seeds don't collide with other subsystem seeds.
+const EVAC_SEED_SALT: u64 = 0xE7AC_5EED;
+
+/// Largest-remainder apportionment of `total` items by `weights`.
+pub fn apportion(total: usize, weights: &[f64]) -> Vec<usize> {
+    let wsum: f64 = weights.iter().sum();
+    assert!(wsum > 0.0);
+    let quotas: Vec<f64> = weights.iter().map(|w| w / wsum * total as f64).collect();
+    let mut out: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+    let assigned: usize = out.iter().sum();
+    let mut rema: Vec<(f64, usize)> =
+        quotas.iter().enumerate().map(|(i, q)| (q - q.floor(), i)).collect();
+    rema.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    for k in 0..(total - assigned) {
+        out[rema[k % rema.len()].1] += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apportion_sums_and_tracks_weights() {
+        let out = apportion(100, &[1.0, 1.0, 2.0]);
+        assert_eq!(out.iter().sum::<usize>(), 100);
+        assert_eq!(out, vec![25, 25, 50]);
+        let out = apportion(7, &[0.5, 0.5]);
+        assert_eq!(out.iter().sum::<usize>(), 7);
+    }
+
+    #[test]
+    fn tiny_scenario_well_formed() {
+        let sc = build_scenario(&ScenarioParams::tiny(), 1);
+        assert_eq!(sc.shelters.len(), 3);
+        assert_eq!(sc.subareas.len(), 6);
+        assert_eq!(sc.n_agents, 256);
+        assert_eq!(sc.agents_per_subarea.iter().sum::<usize>(), 256);
+        assert!((sc.total_population() - 3000.0).abs() < 1e-6);
+        assert!((sc.total_capacity() - 2700.0).abs() < 1e-6);
+        // Every node appears in exactly one sub-area.
+        let mut all: Vec<usize> = sc.subareas.iter().flat_map(|a| a.nodes.clone()).collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), sc.net.n_nodes());
+        // Routing reaches every shelter from every node.
+        for v in 0..sc.net.n_nodes() {
+            for s in 0..sc.shelters.len() {
+                assert!(sc.routing.distance(v, s).is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_deterministic() {
+        let a = build_scenario(&ScenarioParams::tiny(), 5);
+        let b = build_scenario(&ScenarioParams::tiny(), 5);
+        assert_eq!(a.agents_per_subarea, b.agents_per_subarea);
+        assert_eq!(a.shelters.len(), b.shelters.len());
+        assert_eq!(a.net.links, b.net.links);
+    }
+
+    #[test]
+    fn sim_arrays_shapes_and_sentinel() {
+        let sc = build_scenario(&ScenarioParams::tiny(), 2);
+        let arr = sc.sim_arrays();
+        assert_eq!(arr.length.len(), sc.padded_links() + 1);
+        assert_eq!(arr.to.len(), sc.padded_links() + 1);
+        assert!(sc.padded_links() >= sc.net.n_links());
+        // Padded rows and the sentinel behave identically.
+        for l in sc.net.n_links()..=sc.padded_links() {
+            assert_eq!(arr.length[l], SENTINEL_LENGTH);
+            assert_eq!(arr.to[l], 0);
+        }
+        assert_eq!(arr.next_link.len(), sc.net.n_nodes() * 3);
+        assert!(arr.next_link.iter().all(|&x| x >= 0 && (x as usize) < sc.net.n_links()));
+        // tiny: 6×5 grid ⇒ 2·(6·4 + 5·5) = 98 padded links.
+        assert_eq!(sc.padded_links(), 98);
+    }
+
+    #[test]
+    fn yodogawa_mini_scale() {
+        let p = ScenarioParams::yodogawa_mini();
+        let sc = build_scenario(&p, 0);
+        assert_eq!(sc.net.n_nodes(), 400);
+        assert!(sc.net.n_links() > 1000, "links {}", sc.net.n_links());
+        assert_eq!(sc.subareas.len(), 64);
+        assert_eq!(sc.shelters.len(), 12);
+        assert_eq!(sc.n_agents, 4096);
+    }
+}

@@ -1,0 +1,327 @@
+//! The CrowdWalk-like 1-D pedestrian-flow simulator — **canonical model**.
+//!
+//! Agents move along links; each step every link's density sets a shared
+//! speed (mean-field congestion: `v = v_free · clip(1 − ρ/ρ_jam, v_min_frac, 1)`),
+//! agents advance, transition to the next link of their shortest path at
+//! link ends, and arrive when the link end is their destination shelter.
+//!
+//! This file defines the *reference semantics* in f32 arithmetic. The
+//! AOT-compiled JAX/Pallas model (`python/compile/model.py`) implements the
+//! identical update; `rust/tests/` cross-checks the two step by step. Keep
+//! the two in lock-step when changing either.
+//!
+//! Conventions shared with the compiled model:
+//! * arrived agents carry `link == L` (the sentinel row of the padded
+//!   per-link arrays: `length[L] = BIG`, `to[L] = 0`);
+//! * one link transition per step (time steps are small relative to link
+//!   traversal, so multi-hop steps cannot occur);
+//! * `next_link` is consulted only when the reached node is not the
+//!   destination shelter; its `NO_ROUTE` entries are exported as 0 and
+//!   never read.
+
+/// Large finite stand-in for "never transitions" on the sentinel row
+/// (finite so f32 arithmetic stays NaN-free).
+pub const SENTINEL_LENGTH: f32 = 1e9;
+
+/// Simulation parameters — baked as constants into the compiled model, so
+/// changing them requires `make artifacts`.
+#[derive(Clone, Copy, Debug)]
+pub struct SimParams {
+    /// Time step (seconds).
+    pub dt: f32,
+    /// Free walking speed (m/s); 1.4 is the standard pedestrian value.
+    pub v_free: f32,
+    /// Jam density (agents/metre of 1-D road).
+    pub rho_jam: f32,
+    /// Speed floor as a fraction of `v_free` (jams creep, never freeze —
+    /// also keeps the model deadlock-free).
+    pub v_min_frac: f32,
+    /// Simulated steps T (fixed shape in the compiled model).
+    pub max_steps: usize,
+    /// f1 penalty (seconds) per agent still en route at T.
+    pub penalty: f32,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        // rho_jam 4 agents/m models a ~2 m-wide street at 2 persons/m^2;
+        // v_min 10% keeps saturated links draining (CrowdWalk's queued
+        // agents also keep inching forward).
+        Self { dt: 2.0, v_free: 1.4, rho_jam: 4.0, v_min_frac: 0.10, max_steps: 512, penalty: 600.0 }
+    }
+}
+
+/// Per-link arrays padded with the sentinel row; flattened routing table.
+/// These are exactly the host-provided inputs of the compiled model.
+#[derive(Clone, Debug)]
+pub struct SimArrays {
+    /// `L + 1` entries; `length[L] = SENTINEL_LENGTH`.
+    pub length: Vec<f32>,
+    /// `L + 1` entries; `to[L] = 0`.
+    pub to: Vec<i32>,
+    /// `n_nodes × n_shelters`, NO_ROUTE exported as 0.
+    pub next_link: Vec<i32>,
+    pub shelter_node: Vec<i32>,
+    pub n_links: usize,
+    pub n_shelters: usize,
+}
+
+/// Mutable agent state (f32/i32 to match the compiled model exactly).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AgentState {
+    /// Current link id, or `n_links` when arrived.
+    pub link: Vec<i32>,
+    /// Position along the link (metres).
+    pub pos: Vec<f32>,
+    /// Destination shelter index.
+    pub dest: Vec<i32>,
+}
+
+impl AgentState {
+    pub fn n_agents(&self) -> usize {
+        self.link.len()
+    }
+
+    pub fn arrived_count(&self, n_links: usize) -> usize {
+        self.link.iter().filter(|&&l| l as usize >= n_links).count()
+    }
+}
+
+/// Output of a full simulation run.
+#[derive(Clone, Debug)]
+pub struct SimOutput {
+    /// f1: seconds until complete evacuation, incl. the penalty term when
+    /// the horizon was hit.
+    pub evac_time: f64,
+    /// Agents still en route at T.
+    pub remaining: usize,
+    /// Cumulative arrivals after each step (length T).
+    pub arrivals: Vec<u32>,
+    /// Steps actually needed (≤ T when everyone arrived).
+    pub steps_used: usize,
+}
+
+/// One canonical step, in place. Returns the number of arrived agents
+/// after the step.
+pub fn step(arrays: &SimArrays, params: &SimParams, st: &mut AgentState, density: &mut [f32]) -> usize {
+    let nl = arrays.n_links;
+    let s = arrays.n_shelters;
+    debug_assert_eq!(density.len(), nl + 1);
+    // 1. per-link agent counts → densities.
+    density.fill(0.0);
+    for &l in &st.link {
+        density[l as usize] += 1.0;
+    }
+    // 2. per-link speeds (sentinel row harmless: density/SENTINEL ≈ 0).
+    // Reuse `density` as the speed array to avoid a second buffer.
+    for l in 0..=nl {
+        let rho = density[l] / arrays.length[l];
+        let factor = (1.0 - rho / params.rho_jam).clamp(params.v_min_frac, 1.0);
+        density[l] = params.v_free * factor;
+    }
+    // 3.–5. advance, transition, arrive.
+    let mut arrived = 0usize;
+    for a in 0..st.link.len() {
+        let l = st.link[a] as usize;
+        if l >= nl {
+            arrived += 1;
+            continue;
+        }
+        let mut p = st.pos[a] + density[l] * params.dt;
+        let len = arrays.length[l];
+        if p >= len {
+            let node = arrays.to[l];
+            let dest = st.dest[a] as usize;
+            if node == arrays.shelter_node[dest] {
+                st.link[a] = nl as i32;
+                st.pos[a] = 0.0;
+                arrived += 1;
+                continue;
+            }
+            let nxt = arrays.next_link[node as usize * s + dest];
+            st.link[a] = nxt;
+            p -= len;
+        }
+        st.pos[a] = p;
+    }
+    arrived
+}
+
+/// Run the full horizon; the reference implementation of the compiled
+/// model's scan.
+pub fn run(arrays: &SimArrays, params: &SimParams, mut st: AgentState) -> SimOutput {
+    let n = st.n_agents();
+    let mut density = vec![0.0f32; arrays.n_links + 1];
+    let mut arrivals = Vec::with_capacity(params.max_steps);
+    let mut steps_not_done = 0usize;
+    let mut steps_used = params.max_steps;
+    for t in 0..params.max_steps {
+        let arrived = step(arrays, params, &mut st, &mut density);
+        arrivals.push(arrived as u32);
+        if arrived < n {
+            steps_not_done += 1;
+        } else {
+            // Early exit (perf pass): once everyone arrived the state is a
+            // fixed point — pad the curve and stop. Outputs are identical
+            // to the compiled model, which (fixed shapes) keeps scanning
+            // and records `n` for the remaining steps.
+            if steps_used == params.max_steps {
+                steps_used = t + 1;
+            }
+            arrivals.resize(params.max_steps, n as u32);
+            break;
+        }
+    }
+    let remaining = n - *arrivals.last().unwrap_or(&0) as usize;
+    let evac_time =
+        params.dt as f64 * steps_not_done as f64 + params.penalty as f64 * remaining as f64;
+    SimOutput { evac_time, remaining, arrivals, steps_used }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two links in a line: node0 --(100m)--> node1 --(100m)--> node2(shelter).
+    fn line_arrays() -> SimArrays {
+        SimArrays {
+            length: vec![100.0, 100.0, SENTINEL_LENGTH],
+            to: vec![1, 2, 0],
+            // next_link[node*1 + 0]: from node0 take link0, node1 link1.
+            next_link: vec![0, 1, 0],
+            shelter_node: vec![2],
+            n_links: 2,
+            n_shelters: 1,
+        }
+    }
+
+    fn params(max_steps: usize) -> SimParams {
+        SimParams { dt: 1.0, v_free: 1.0, rho_jam: 10.0, v_min_frac: 0.05, max_steps, penalty: 1000.0 }
+    }
+
+    #[test]
+    fn single_agent_walks_the_line_and_arrives() {
+        let arrays = line_arrays();
+        let p = params(400);
+        let st = AgentState { link: vec![0], pos: vec![0.0], dest: vec![0] };
+        let out = run(&arrays, &p, st);
+        assert_eq!(out.remaining, 0);
+        // 200 m at ~1 m/s (alone: rho=0.01 ⇒ v≈0.999): ~201 steps.
+        assert!((out.evac_time - 201.0).abs() <= 2.0, "evac_time {}", out.evac_time);
+        assert_eq!(*out.arrivals.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn congestion_slows_evacuation() {
+        let arrays = line_arrays();
+        // Jam density 2.0: 150 agents on a 100 m link give rho = 1.5 and
+        // the speed factor drops to 0.25 — ~4× slower than a lone agent.
+        let mut p = params(3000);
+        p.rho_jam = 2.0;
+        let lone = run(&arrays, &p, AgentState { link: vec![0], pos: vec![0.0], dest: vec![0] });
+        let crowd_n = 150;
+        let crowd = run(
+            &arrays,
+            &p,
+            AgentState {
+                link: vec![0; crowd_n],
+                pos: vec![0.0; crowd_n],
+                dest: vec![0; crowd_n],
+            },
+        );
+        assert_eq!(crowd.remaining, 0);
+        assert!(
+            crowd.evac_time > lone.evac_time * 1.5,
+            "crowd {} vs lone {}",
+            crowd.evac_time,
+            lone.evac_time
+        );
+    }
+
+    #[test]
+    fn horizon_hit_applies_penalty() {
+        let arrays = line_arrays();
+        let p = params(50); // not enough for 200 m.
+        let out = run(&arrays, &p, AgentState { link: vec![0], pos: vec![0.0], dest: vec![0] });
+        assert_eq!(out.remaining, 1);
+        assert!((out.evac_time - (50.0 + 1000.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn agent_already_arrived_stays_arrived() {
+        let arrays = line_arrays();
+        let p = params(10);
+        let st = AgentState { link: vec![2], pos: vec![0.0], dest: vec![0] };
+        let out = run(&arrays, &p, st.clone());
+        assert_eq!(out.remaining, 0);
+        assert_eq!(out.evac_time, 0.0);
+        assert_eq!(out.steps_used, 10usize.min(1).max(1)); // arrived from step 1
+    }
+
+    #[test]
+    fn speed_floor_prevents_deadlock() {
+        // Extreme overcrowding: 1000 agents on a 100 m link (ρ = 10 = ρ_jam
+        // of 10 ⇒ factor clamps to v_min_frac). They still creep forward.
+        let arrays = line_arrays();
+        let mut p = params(10);
+        p.rho_jam = 2.0;
+        let mut st = AgentState {
+            link: vec![0; 1000],
+            pos: vec![0.0; 1000],
+            dest: vec![0; 1000],
+        };
+        let mut density = vec![0.0; 3];
+        let before = st.pos.clone();
+        step(&arrays, &p, &mut st, &mut density);
+        for a in 0..1000 {
+            assert!(st.pos[a] > before[a], "agent {a} frozen");
+            assert!((st.pos[a] - p.v_free * p.v_min_frac * p.dt).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn one_transition_per_step_even_past_link_end() {
+        // Fast agent overshooting a short link: exactly one transition,
+        // residual carried over.
+        let arrays = SimArrays {
+            length: vec![0.5, 100.0, SENTINEL_LENGTH],
+            to: vec![1, 2, 0],
+            next_link: vec![0, 1, 0],
+            shelter_node: vec![2],
+            n_links: 2,
+            n_shelters: 1,
+        };
+        let p = params(1);
+        let mut st = AgentState { link: vec![0], pos: vec![0.0], dest: vec![0] };
+        let mut density = vec![0.0; 3];
+        step(&arrays, &p, &mut st, &mut density);
+        assert_eq!(st.link[0], 1);
+        // One agent on the 0.5 m link: rho = 2 ⇒ factor 0.8 ⇒ advance 0.8 m,
+        // transition once, carry over 0.3 m onto the next link.
+        assert!((st.pos[0] - 0.3).abs() < 1e-5, "carry-over 0.8 - 0.5, got {}", st.pos[0]);
+    }
+
+    #[test]
+    fn mass_conservation_property() {
+        // Property: at every step, #active + #arrived == n.
+        use crate::testutil::{check, usize_in};
+        check("agents conserved", usize_in(1..60), |&n| {
+            let arrays = line_arrays();
+            let p = params(64);
+            let mut st = AgentState {
+                link: vec![0; n],
+                pos: (0..n).map(|i| (i % 90) as f32).collect(),
+                dest: vec![0; n],
+            };
+            let mut density = vec![0.0; 3];
+            for _ in 0..p.max_steps {
+                let arrived = step(&arrays, &p, &mut st, &mut density);
+                let active = st.link.iter().filter(|&&l| (l as usize) < 2).count();
+                if active + arrived != n {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+}

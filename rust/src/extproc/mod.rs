@@ -1,0 +1,240 @@
+//! External-process simulators — the §2.2 contract.
+//!
+//! A user simulator is *any* executable that
+//!
+//! 1. accepts its parameters as command-line arguments,
+//! 2. writes its outputs into the current directory (the scheduler runs it
+//!    in a fresh per-task temporary directory), and
+//! 3. optionally writes a `_results.txt` file with whitespace/comma
+//!    separated floating-point values, which are parsed and sent back to
+//!    the search engine.
+//!
+//! [`CommandExecutor`] implements that contract for
+//! [`Payload::Command`](crate::tasklib::Payload::Command) tasks.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::scheduler::threads::Executor;
+use crate::tasklib::{Payload, TaskSpec};
+
+/// Name of the results file per §2.2.
+pub const RESULTS_FILE: &str = "_results.txt";
+
+/// Executes `Payload::Command` tasks as child processes in per-task
+/// temporary directories and parses `_results.txt`.
+pub struct CommandExecutor {
+    /// Root under which per-task work dirs are created.
+    pub work_root: PathBuf,
+    /// Remove each task's directory after the run (default true).
+    pub cleanup: bool,
+    counter: AtomicU64,
+}
+
+impl CommandExecutor {
+    pub fn new(work_root: impl Into<PathBuf>) -> Self {
+        Self { work_root: work_root.into(), cleanup: true, counter: AtomicU64::new(0) }
+    }
+
+    /// Keep work directories for debugging.
+    pub fn keep_dirs(mut self) -> Self {
+        self.cleanup = false;
+        self
+    }
+
+    fn task_dir(&self, task: &TaskSpec) -> PathBuf {
+        let uniq = self.counter.fetch_add(1, Ordering::Relaxed);
+        self.work_root.join(format!("task_{}_{}", task.id, uniq))
+    }
+}
+
+/// Split a command line into argv. Supports single/double quotes and
+/// backslash escapes — enough for §2.3-style command strings.
+pub fn split_cmdline(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut chars = s.chars().peekable();
+    let mut in_word = false;
+    while let Some(c) = chars.next() {
+        match c {
+            ' ' | '\t' => {
+                if in_word {
+                    out.push(std::mem::take(&mut cur));
+                    in_word = false;
+                }
+            }
+            '\'' => {
+                in_word = true;
+                for q in chars.by_ref() {
+                    if q == '\'' {
+                        break;
+                    }
+                    cur.push(q);
+                }
+            }
+            '"' => {
+                in_word = true;
+                while let Some(q) = chars.next() {
+                    match q {
+                        '"' => break,
+                        '\\' => {
+                            if let Some(e) = chars.next() {
+                                cur.push(e);
+                            }
+                        }
+                        _ => cur.push(q),
+                    }
+                }
+            }
+            '\\' => {
+                in_word = true;
+                if let Some(e) = chars.next() {
+                    cur.push(e);
+                }
+            }
+            _ => {
+                in_word = true;
+                cur.push(c);
+            }
+        }
+    }
+    if in_word {
+        out.push(cur);
+    }
+    out
+}
+
+/// Parse a `_results.txt` body: floats separated by whitespace, commas or
+/// newlines; `#`-comments ignored.
+pub fn parse_results(body: &str) -> Vec<f64> {
+    let mut out = Vec::new();
+    for line in body.lines() {
+        let line = line.split('#').next().unwrap_or("");
+        for tok in line.split(|c: char| c.is_whitespace() || c == ',') {
+            if tok.is_empty() {
+                continue;
+            }
+            if let Ok(v) = tok.parse::<f64>() {
+                out.push(v);
+            }
+        }
+    }
+    out
+}
+
+/// Read and parse `_results.txt` from `dir` (empty if absent — the file is
+/// optional per §2.2).
+pub fn read_results(dir: &Path) -> Vec<f64> {
+    match std::fs::read_to_string(dir.join(RESULTS_FILE)) {
+        Ok(body) => parse_results(&body),
+        Err(_) => Vec::new(),
+    }
+}
+
+impl Executor for CommandExecutor {
+    fn run(&self, task: &TaskSpec, _consumer: usize) -> (Vec<f64>, i32) {
+        let Payload::Command { cmdline } = &task.payload else {
+            panic!("CommandExecutor got {:?}", task.payload);
+        };
+        let argv = split_cmdline(cmdline);
+        if argv.is_empty() {
+            return (Vec::new(), 127);
+        }
+        let dir = self.task_dir(task);
+        if std::fs::create_dir_all(&dir).is_err() {
+            return (Vec::new(), 126);
+        }
+        let status = Command::new(&argv[0]).args(&argv[1..]).current_dir(&dir).status();
+        let rc = match status {
+            Ok(s) => s.code().unwrap_or(-1),
+            Err(_) => 127,
+        };
+        let results = read_results(&dir);
+        if self.cleanup {
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        (results, rc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasklib::TaskSpec;
+
+    #[test]
+    fn split_handles_quotes_and_escapes() {
+        assert_eq!(split_cmdline("echo hello world"), vec!["echo", "hello", "world"]);
+        assert_eq!(split_cmdline("sh -c 'echo a b'"), vec!["sh", "-c", "echo a b"]);
+        assert_eq!(split_cmdline(r#"prog "two words" x\ y"#), vec!["prog", "two words", "x y"]);
+        assert!(split_cmdline("   ").is_empty());
+    }
+
+    #[test]
+    fn parse_results_formats() {
+        assert_eq!(parse_results("1.5 2.5\n3"), vec![1.5, 2.5, 3.0]);
+        assert_eq!(parse_results("1,2,3"), vec![1.0, 2.0, 3.0]);
+        assert_eq!(parse_results("# comment\n4 # five\n"), vec![4.0]);
+        assert!(parse_results("").is_empty());
+    }
+
+    #[test]
+    fn runs_command_in_temp_dir_and_parses_results() {
+        let root = std::env::temp_dir().join(format!("caravan_test_{}", std::process::id()));
+        let exec = CommandExecutor::new(&root);
+        // sh -c "echo 42.5 1e3 > _results.txt"
+        let task = TaskSpec::new(
+            7,
+            Payload::Command { cmdline: "sh -c 'echo 42.5 1e3 > _results.txt'".into() },
+        );
+        let (results, rc) = exec.run(&task, 0);
+        assert_eq!(rc, 0);
+        assert_eq!(results, vec![42.5, 1000.0]);
+        // Cleanup removed the per-task dir.
+        let leftovers = std::fs::read_dir(&root).map(|d| d.count()).unwrap_or(0);
+        assert_eq!(leftovers, 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn nonzero_exit_code_reported() {
+        let root = std::env::temp_dir().join(format!("caravan_test_rc_{}", std::process::id()));
+        let exec = CommandExecutor::new(&root);
+        let task = TaskSpec::new(0, Payload::Command { cmdline: "sh -c 'exit 3'".into() });
+        let (_results, rc) = exec.run(&task, 0);
+        assert_eq!(rc, 3);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn missing_binary_is_127() {
+        let root = std::env::temp_dir().join(format!("caravan_test_nf_{}", std::process::id()));
+        let exec = CommandExecutor::new(&root);
+        let task = TaskSpec::new(
+            0,
+            Payload::Command { cmdline: "/definitely/not/a/binary arg".into() },
+        );
+        let (_results, rc) = exec.run(&task, 0);
+        assert_eq!(rc, 127);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn outputs_stay_in_task_dir() {
+        // §2.2: the simulator writes to its *current directory*; verify the
+        // framework isolates tasks from each other and from the CWD.
+        let root = std::env::temp_dir().join(format!("caravan_test_iso_{}", std::process::id()));
+        let exec = CommandExecutor::new(&root).keep_dirs();
+        let t1 = TaskSpec::new(1, Payload::Command { cmdline: "sh -c 'echo 1 > _results.txt; echo x > out.dat'".into() });
+        let t2 = TaskSpec::new(2, Payload::Command { cmdline: "sh -c 'echo 2 > _results.txt'".into() });
+        let (r1, _) = exec.run(&t1, 0);
+        let (r2, _) = exec.run(&t2, 0);
+        assert_eq!(r1, vec![1.0]);
+        assert_eq!(r2, vec![2.0]);
+        // Two distinct directories remain (keep_dirs).
+        let dirs = std::fs::read_dir(&root).unwrap().count();
+        assert_eq!(dirs, 2);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

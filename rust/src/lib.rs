@@ -1,0 +1,39 @@
+//! # CARAVAN — a framework for comprehensive simulations on massive parallel machines
+//!
+//! Reproduction of Murase, Matsushima, Noda & Kamada (2018),
+//! DOI 10.1007/978-3-030-20937-7_9, as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate provides:
+//!
+//! * [`tasklib`] — the task model (`Task`, `TaskResult`, `ParameterSet`, `Run`)
+//!   mirroring CARAVAN's Python API.
+//! * [`scheduler`] — the paper's system contribution: a hierarchical
+//!   producer → buffer → consumer scheduler (threads + channels standing in
+//!   for flat-MPI ranks), with the job-filling-rate metric of Eq. (1).
+//! * [`des`] — a virtual-time discrete-event simulation of the same scheduler
+//!   topology, used to reproduce the K-computer scaling results (Fig. 3) at
+//!   up to 16 384 simulated processes on a single host.
+//! * [`engine`] — search engines: grid / random sweeps, NSGA-II with the
+//!   paper's asynchronous generation update (§4.2), and MCMC sampling.
+//! * [`evac`] — the CrowdWalk-like evacuation substrate: road networks,
+//!   Dijkstra routing, a 1-D pedestrian-flow simulator, plan encoding and
+//!   the three objective functions f1/f2/f3 (§4.3).
+//! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
+//!   evacuation model (`artifacts/*.hlo.txt`) and executes it on the hot path.
+//! * [`extproc`] — external-process simulator support (§2.2): command-line
+//!   arguments, per-task temporary directories, `_results.txt` parsing.
+//! * [`workload`] — the TC1/TC2/TC3 synthetic workloads of §3.
+//! * [`util`] — self-contained infrastructure (deterministic RNG, statistics,
+//!   JSON, CLI, logging) so the crate builds offline.
+
+pub mod util;
+pub mod tasklib;
+pub mod scheduler;
+pub mod des;
+pub mod workload;
+pub mod engine;
+pub mod evac;
+pub mod runtime;
+pub mod extproc;
+pub mod config;
+pub mod testutil;

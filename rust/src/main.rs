@@ -1,0 +1,171 @@
+//! `caravan` — the command-line launcher.
+//!
+//! Subcommands:
+//!   run <cmdline>   run one external command N times through the scheduler
+//!                   (§2.2 contract: argv in, per-task temp dir,
+//!                   `_results.txt` out)
+//!   des             DES filling-rate experiment (Fig. 3 point)
+//!   evac            evaluate one random evacuation plan (tiny|mini)
+//!   info            print artifact + scenario inventory
+//!
+//! Examples:
+//!   caravan run "sh -c 'echo 1 > _results.txt'" --n 32 --np 4
+//!   caravan des --np 1024 --tc 2 --tasks-per-proc 100
+//!   caravan evac --variant tiny --backend pjrt --seed 3
+//!   caravan info
+
+use std::sync::Arc;
+
+use caravan::config::SchedulerConfig;
+use caravan::des::{run_des, DesConfig, SleepDurations};
+use caravan::evac::{build_scenario, EvacEvaluator, RustSimBackend, ScenarioParams, SimBackend};
+use caravan::extproc::CommandExecutor;
+use caravan::runtime::{ArtifactMeta, PjrtServer};
+use caravan::scheduler::run_scheduler;
+use caravan::tasklib::{Payload, SearchEngine, TaskResult, TaskSink};
+use caravan::util::cli::Args;
+use caravan::util::rng::Pcg64;
+use caravan::workload::{TestCase, TestCaseEngine};
+
+struct RepeatCmd {
+    n: usize,
+    cmd: String,
+}
+
+impl SearchEngine for RepeatCmd {
+    fn start(&mut self, sink: &mut dyn TaskSink) {
+        for _ in 0..self.n {
+            sink.submit(Payload::Command { cmdline: self.cmd.clone() });
+        }
+    }
+    fn on_done(&mut self, r: &TaskResult, _s: &mut dyn TaskSink) {
+        caravan::info!("task {} rc={} results={:?}", r.id, r.rc, r.results);
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    match args.subcommand() {
+        Some("run") => cmd_run(&args),
+        Some("des") => cmd_des(&args),
+        Some("evac") => cmd_evac(&args),
+        Some("info") => cmd_info(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}");
+            }
+            eprintln!("usage: caravan <run|des|evac|info> [--options]");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(args: &Args) {
+    let cmd = args
+        .positional()
+        .first()
+        .expect("usage: caravan run '<cmdline>' [--n 10] [--np 4]")
+        .clone();
+    let n = args.get_usize("n", 10);
+    let np = args.get_usize("np", 4);
+    let cfg = SchedulerConfig { np, flush_interval_ms: 5, ..Default::default() };
+    let work = std::env::temp_dir().join(format!("caravan_run_{}", std::process::id()));
+    let report = run_scheduler(
+        &cfg,
+        Box::new(RepeatCmd { n, cmd }),
+        Arc::new(CommandExecutor::new(&work)),
+    );
+    let failures = report.results.iter().filter(|r| !r.ok()).count();
+    println!(
+        "{} tasks, {} failures, filling {:.1}%, wall {:.2}s",
+        report.results.len(),
+        failures,
+        report.rate(np) * 100.0,
+        report.wall_secs
+    );
+    let _ = std::fs::remove_dir_all(&work);
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}
+
+fn cmd_des(args: &Args) {
+    let np = args.get_usize("np", 1024);
+    let case = TestCase::parse(args.get_str("tc", "2")).expect("--tc 1|2|3");
+    let n = args.get_usize("tasks-per-proc", 100) * np;
+    let mut cfg = DesConfig::new(np);
+    cfg.direct = args.has_flag("direct");
+    let t0 = std::time::Instant::now();
+    let r = run_des(
+        &cfg,
+        Box::new(TestCaseEngine::new(case, n, args.get_u64("seed", 7))),
+        Box::new(SleepDurations),
+    );
+    println!(
+        "{case:?} np={np} n={n}: filling {:.2}%, makespan {:.0}s (virtual), {} events in {:.2}s wall",
+        r.rate(np) * 100.0,
+        r.makespan,
+        r.events_processed,
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+fn cmd_evac(args: &Args) {
+    let variant = args.get_str("variant", "tiny").to_string();
+    let params = match variant.as_str() {
+        "tiny" => ScenarioParams::tiny(),
+        "mini" => ScenarioParams::yodogawa_mini(),
+        o => panic!("unknown variant {o:?}"),
+    };
+    let sc = Arc::new(build_scenario(&params, args.get_u64("scenario-seed", 1)));
+    let backend: Arc<dyn SimBackend> = match args.get_str("backend", "rust") {
+        "pjrt" => Arc::new(
+            PjrtServer::start("artifacts".into(), &variant, sc.sim_arrays())
+                .expect("run `make artifacts`"),
+        ),
+        _ => Arc::new(RustSimBackend::for_scenario(&sc)),
+    };
+    let ev = EvacEvaluator::new(Arc::clone(&sc), backend);
+    let mut rng = Pcg64::new(args.get_u64("seed", 0));
+    let genome: Vec<f64> = ev.bounds().iter().map(|&(lo, hi)| rng.range_f64(lo, hi)).collect();
+    let t0 = std::time::Instant::now();
+    let [f1, f2, f3] = ev.evaluate(&genome, args.get_u64("seed", 0));
+    println!(
+        "variant={variant} backend={}: f1={f1:.2} min, f2={f2:.3} nats, f3={f3:.0} persons ({:.0} ms)",
+        args.get_str("backend", "rust"),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+}
+
+fn cmd_info(args: &Args) {
+    let dir = args.get_str("artifacts", "artifacts").to_string();
+    match ArtifactMeta::load(&dir) {
+        Ok(meta) => {
+            println!(
+                "artifacts in {dir}/ (physics dt={} v_free={} rho_jam={}):",
+                meta.physics.dt, meta.physics.v_free, meta.physics.rho_jam
+            );
+            for v in &meta.variants {
+                println!(
+                    "  {:>6}: {} (A={} L={} N={} S={} T={})",
+                    v.name, v.file, v.a, v.l, v.n, v.s, v.t
+                );
+            }
+        }
+        Err(e) => println!("no artifacts: {e:#}"),
+    }
+    for (name, p) in [("tiny", ScenarioParams::tiny()), ("mini", ScenarioParams::yodogawa_mini())] {
+        let sc = build_scenario(&p, 1);
+        println!(
+            "scenario {name}: {} nodes, {} links (pad {}), {} shelters, {} sub-areas, {} agents, pop {:.0}, cap {:.0}",
+            sc.net.n_nodes(),
+            sc.net.n_links(),
+            sc.padded_links(),
+            sc.shelters.len(),
+            sc.subareas.len(),
+            sc.n_agents,
+            sc.total_population(),
+            sc.total_capacity()
+        );
+    }
+}

@@ -1,0 +1,216 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas evacuation
+//! model from the rust hot path. Python never runs at request time — the
+//! artifacts under `artifacts/` are produced once by `make artifacts`.
+//!
+//! Flow (see /opt/xla-example/load_hlo): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `PjRtClient::cpu()
+//! .compile` → `execute` per evaluation. Compilation happens once per
+//! variant; executions are cheap and reused across the whole optimization
+//! run (10^3–10^5 evaluations).
+
+mod server;
+
+pub use server::PjrtServer;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::evac::sim::{AgentState, SimArrays, SimOutput, SimParams};
+use crate::util::json::Json;
+
+/// Shape signature of one compiled variant (from `artifacts/meta.json`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct VariantSpec {
+    pub name: String,
+    pub file: String,
+    pub a: usize,
+    pub l: usize,
+    pub n: usize,
+    pub s: usize,
+    pub t: usize,
+}
+
+/// Parsed `artifacts/meta.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub dir: PathBuf,
+    pub variants: Vec<VariantSpec>,
+    pub physics: SimParams,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let body = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json — run `make artifacts`", dir.display()))?;
+        let json = Json::parse(&body).context("parsing meta.json")?;
+        let phys = json.get("physics").ok_or_else(|| anyhow!("meta.json: missing physics"))?;
+        let need = |k: &str| -> Result<f64> {
+            phys.get_f64(k).ok_or_else(|| anyhow!("meta.json: physics.{k} missing"))
+        };
+        let physics = SimParams {
+            dt: need("dt")? as f32,
+            v_free: need("v_free")? as f32,
+            rho_jam: need("rho_jam")? as f32,
+            v_min_frac: need("v_min_frac")? as f32,
+            penalty: need("penalty")? as f32,
+            max_steps: 0, // per-variant (T)
+        };
+        let vars = json
+            .get("variants")
+            .and_then(|v| match v {
+                Json::Obj(m) => Some(m),
+                _ => None,
+            })
+            .ok_or_else(|| anyhow!("meta.json: missing variants"))?;
+        let mut variants = Vec::new();
+        for (name, spec) in vars {
+            let g = |k: &str| -> Result<usize> {
+                spec.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("meta.json: variants.{name}.{k}"))
+            };
+            variants.push(VariantSpec {
+                name: name.clone(),
+                file: spec
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("meta.json: variants.{name}.file"))?
+                    .to_string(),
+                a: g("A")?,
+                l: g("L")?,
+                n: g("N")?,
+                s: g("S")?,
+                t: g("T")?,
+            });
+        }
+        Ok(Self { dir, variants, physics })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| anyhow!("variant {name:?} not in meta.json"))
+    }
+}
+
+/// A compiled evacuation model on the CPU PJRT client.
+///
+/// NOT `Send` (PJRT handles are thread-bound): use it on the thread that
+/// loaded it, or through [`PjrtServer`] — the executor actor that owns a
+/// model and serves evaluations over a channel.
+pub struct PjrtEvacModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: VariantSpec,
+    pub physics: SimParams,
+}
+
+impl PjrtEvacModel {
+    /// Load + compile `variant` from the artifacts directory.
+    pub fn load(dir: impl AsRef<Path>, variant: &str) -> Result<Self> {
+        let meta = ArtifactMeta::load(&dir)?;
+        let spec = meta.variant(variant)?.clone();
+        let path = meta.dir.join(&spec.file);
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compile: {e:?}"))?;
+        let mut physics = meta.physics;
+        physics.max_steps = spec.t;
+        crate::info!("compiled {} (A={} L={} T={})", spec.file, spec.a, spec.l, spec.t);
+        Ok(Self { exe, spec, physics })
+    }
+
+    /// Validate that scenario arrays fit this variant's baked shapes.
+    pub fn check_arrays(&self, arrays: &SimArrays) -> Result<()> {
+        if arrays.length.len() != self.spec.l + 1 {
+            bail!("length: {} != L+1 = {}", arrays.length.len(), self.spec.l + 1);
+        }
+        if arrays.next_link.len() != self.spec.n * self.spec.s {
+            bail!("next_link: {} != N*S = {}", arrays.next_link.len(), self.spec.n * self.spec.s);
+        }
+        if arrays.shelter_node.len() != self.spec.s {
+            bail!("shelter_node: {} != S = {}", arrays.shelter_node.len(), self.spec.s);
+        }
+        Ok(())
+    }
+
+    /// Execute one simulation. `init` must have exactly `A` agents.
+    pub fn run(&self, arrays: &SimArrays, init: &AgentState) -> Result<SimOutput> {
+        if init.n_agents() != self.spec.a {
+            bail!("agents: {} != A = {}", init.n_agents(), self.spec.a);
+        }
+        self.check_arrays(arrays)?;
+        let inputs = [
+            xla::Literal::vec1(&init.link),
+            xla::Literal::vec1(&init.pos),
+            xla::Literal::vec1(&init.dest),
+            xla::Literal::vec1(&arrays.length),
+            xla::Literal::vec1(&arrays.to),
+            xla::Literal::vec1(&arrays.next_link),
+            xla::Literal::vec1(&arrays.shelter_node),
+        ];
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (f1, remaining, arrivals) =
+            result.to_tuple3().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let f1: f32 = f1.get_first_element().map_err(|e| anyhow!("f1: {e:?}"))?;
+        let remaining: f32 =
+            remaining.get_first_element().map_err(|e| anyhow!("remaining: {e:?}"))?;
+        let curve: Vec<f32> = arrivals.to_vec().map_err(|e| anyhow!("arrivals: {e:?}"))?;
+        let n = init.n_agents() as f32;
+        let steps_used =
+            curve.iter().position(|&c| c >= n).map(|i| i + 1).unwrap_or(self.spec.t);
+        Ok(SimOutput {
+            evac_time: f1 as f64,
+            remaining: remaining.round() as usize,
+            arrivals: curve.iter().map(|&c| c.max(0.0) as u32).collect(),
+            steps_used,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Integration tests that need compiled artifacts live in rust/tests/;
+    // here only the pure parsing logic.
+
+    #[test]
+    fn meta_parsing_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("caravan_meta_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"physics": {"dt": 2.0, "v_free": 1.4, "rho_jam": 2.0,
+                 "v_min_frac": 0.05, "penalty": 600.0},
+                "variants": {"tiny": {"A": 256, "L": 98, "N": 30, "S": 3,
+                 "T": 512, "file": "evac_tiny.hlo.txt"}}}"#,
+        )
+        .unwrap();
+        let meta = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(meta.variants.len(), 1);
+        let v = meta.variant("tiny").unwrap();
+        assert_eq!((v.a, v.l, v.n, v.s, v.t), (256, 98, 30, 3, 512));
+        assert_eq!(meta.physics.dt, 2.0);
+        assert!(meta.variant("nope").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn meta_missing_fields_rejected() {
+        let dir = std::env::temp_dir().join(format!("caravan_meta_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("meta.json"), r#"{"variants": {}}"#).unwrap();
+        assert!(ArtifactMeta::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,107 @@
+//! The PJRT executor actor.
+//!
+//! PJRT handles are thread-bound (`!Send`), but consumers across the
+//! scheduler need a shared [`SimBackend`]. [`PjrtServer`] owns the
+//! compiled model on a dedicated thread and serves evaluation requests
+//! over a channel: compile once, execute many — the request path never
+//! touches Python *or* recompiles.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::PjrtEvacModel;
+use crate::evac::evaluator::SimBackend;
+use crate::evac::sim::{AgentState, SimArrays, SimOutput};
+
+enum Req {
+    Run { init: AgentState, reply: Sender<Result<SimOutput>> },
+    Stop,
+}
+
+/// Handle to the executor thread. Cloning is not supported — wrap in
+/// `Arc` to share across consumers (requests are serialized by the single
+/// model anyway, which matches the one-core host).
+pub struct PjrtServer {
+    tx: Mutex<Sender<Req>>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+    variant: String,
+}
+
+impl PjrtServer {
+    /// Spawn the actor: loads + compiles `variant` on its own thread.
+    /// Blocks until compilation finished (or failed).
+    pub fn start(artifacts_dir: PathBuf, variant: &str, arrays: SimArrays) -> Result<Self> {
+        let (tx, rx) = channel::<Req>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let var = variant.to_string();
+        let thread = std::thread::Builder::new()
+            .name(format!("pjrt-{var}"))
+            .spawn(move || {
+                let model = match PjrtEvacModel::load(&artifacts_dir, &var) {
+                    Ok(m) => {
+                        if let Err(e) = m.check_arrays(&arrays) {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                        let _ = ready_tx.send(Ok(()));
+                        m
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Run { init, reply } => {
+                            let _ = reply.send(model.run(&arrays, &init));
+                        }
+                        Req::Stop => break,
+                    }
+                }
+            })
+            .expect("spawn pjrt server");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt server thread died during startup"))??;
+        Ok(Self { tx: Mutex::new(tx), thread: Mutex::new(Some(thread)), variant: variant.into() })
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    /// Run one simulation (blocks for the result).
+    pub fn run_sim(&self, init: AgentState) -> Result<SimOutput> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Req::Run { init, reply: reply_tx })
+            .map_err(|_| anyhow!("pjrt server stopped"))?;
+        reply_rx.recv().map_err(|_| anyhow!("pjrt server dropped request"))?
+    }
+}
+
+impl Drop for PjrtServer {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Req::Stop);
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl SimBackend for PjrtServer {
+    fn run(&self, init: AgentState) -> SimOutput {
+        self.run_sim(init).expect("PJRT execution failed")
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-aot"
+    }
+}

@@ -1,0 +1,169 @@
+//! Scheduling metrics — most importantly the paper's job filling rate,
+//! Eq. (1):
+//!
+//! ```text
+//!         Σᵢ (tᵢ_end − tᵢ_begin)
+//!   r  =  ──────────────────────            T = max tᵢ_end − min tᵢ_begin
+//!               T · N_p
+//! ```
+//!
+//! `r` ≈ 1 means the consumers were busy for the whole makespan — ideal
+//! load balancing with negligible communication cost.
+
+use crate::tasklib::TaskResult;
+
+/// Per-task execution interval (the schedule trace).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Interval {
+    pub task_id: u64,
+    pub consumer: usize,
+    pub begin: f64,
+    pub finish: f64,
+}
+
+/// Accumulates the schedule trace and computes Eq. (1).
+#[derive(Clone, Debug, Default)]
+pub struct FillingRate {
+    intervals: Vec<Interval>,
+}
+
+impl FillingRate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, r: &TaskResult) {
+        self.intervals.push(Interval {
+            task_id: r.id,
+            consumer: r.consumer,
+            begin: r.begin,
+            finish: r.finish,
+        });
+    }
+
+    pub fn record_all<'a>(&mut self, rs: impl IntoIterator<Item = &'a TaskResult>) {
+        for r in rs {
+            self.record(r);
+        }
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.intervals.len()
+    }
+
+    pub fn intervals(&self) -> &[Interval] {
+        &self.intervals
+    }
+
+    /// Total busy time Σ(end−begin).
+    pub fn busy_time(&self) -> f64 {
+        self.intervals.iter().map(|iv| iv.finish - iv.begin).sum()
+    }
+
+    /// Makespan T = max end − min begin (0 if no tasks).
+    pub fn makespan(&self) -> f64 {
+        if self.intervals.is_empty() {
+            return 0.0;
+        }
+        let t0 = self.intervals.iter().map(|iv| iv.begin).fold(f64::INFINITY, f64::min);
+        let t1 = self.intervals.iter().map(|iv| iv.finish).fold(f64::NEG_INFINITY, f64::max);
+        t1 - t0
+    }
+
+    /// Job filling rate r for `np` consumer processes.
+    pub fn rate(&self, np: usize) -> f64 {
+        let t = self.makespan();
+        if t <= 0.0 || np == 0 {
+            return 0.0;
+        }
+        self.busy_time() / (t * np as f64)
+    }
+
+    /// Sanity check used by tests and the DES: no two intervals on the same
+    /// consumer may overlap (a consumer runs one task at a time).
+    /// Returns the number of violations.
+    pub fn overlap_violations(&self) -> usize {
+        let mut by_consumer: std::collections::HashMap<usize, Vec<(f64, f64)>> =
+            std::collections::HashMap::new();
+        for iv in &self.intervals {
+            by_consumer.entry(iv.consumer).or_default().push((iv.begin, iv.finish));
+        }
+        let mut violations = 0;
+        for (_, mut ivs) in by_consumer {
+            ivs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in ivs.windows(2) {
+                // Strict overlap; touching endpoints are fine.
+                if w[1].0 < w[0].1 - 1e-9 {
+                    violations += 1;
+                }
+            }
+        }
+        violations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn res(id: u64, consumer: usize, begin: f64, finish: f64) -> TaskResult {
+        TaskResult { id, consumer, results: vec![], begin, finish, rc: 0 }
+    }
+
+    #[test]
+    fn perfect_filling_is_one() {
+        let mut f = FillingRate::new();
+        // Two consumers, each busy [0,10] with two back-to-back tasks.
+        f.record(&res(0, 0, 0.0, 5.0));
+        f.record(&res(1, 0, 5.0, 10.0));
+        f.record(&res(2, 1, 0.0, 7.0));
+        f.record(&res(3, 1, 7.0, 10.0));
+        assert!((f.rate(2) - 1.0).abs() < 1e-12);
+        assert_eq!(f.overlap_violations(), 0);
+        assert!((f.makespan() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_consumer_halves_rate() {
+        let mut f = FillingRate::new();
+        f.record(&res(0, 0, 0.0, 10.0));
+        // Consumer 1 exists but never works.
+        assert!((f.rate(2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_trace_rate_zero() {
+        let f = FillingRate::new();
+        assert_eq!(f.rate(16), 0.0);
+        assert_eq!(f.makespan(), 0.0);
+    }
+
+    #[test]
+    fn overlap_detection() {
+        let mut f = FillingRate::new();
+        f.record(&res(0, 0, 0.0, 5.0));
+        f.record(&res(1, 0, 4.0, 6.0)); // overlaps on consumer 0
+        f.record(&res(2, 1, 4.0, 6.0)); // different consumer: fine
+        assert_eq!(f.overlap_violations(), 1);
+    }
+
+    #[test]
+    fn rate_never_exceeds_one_property() {
+        use crate::testutil::{check, f64_in, pair, vec_of};
+        check(
+            "filling rate ≤ 1 for serial-per-consumer traces",
+            vec_of(pair(f64_in(0.0, 100.0), f64_in(0.01, 10.0)), 1..50),
+            |spans| {
+                // Build a serialized schedule on one consumer from (gap, dur) pairs.
+                let mut f = FillingRate::new();
+                let mut t = 0.0;
+                for (i, (gap, dur)) in spans.iter().enumerate() {
+                    t += gap;
+                    f.record(&res(i as u64, 0, t, t + dur));
+                    t += dur;
+                }
+                f.rate(1) <= 1.0 + 1e-9 && f.overlap_violations() == 0
+            },
+        );
+    }
+}

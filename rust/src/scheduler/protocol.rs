@@ -1,0 +1,528 @@
+//! The scheduling protocol — pure state machines for the producer and
+//! buffer roles (Fig. 2 of the paper).
+//!
+//! CARAVAN's scheduler is a producer–consumer pattern with a *buffered
+//! layer*: the rank-0 producer talks only to a few hundred buffer
+//! processes; each buffer owns a task queue and feeds its own set of
+//! consumers "gradually", and batches results on the way back so the
+//! producer is never overwhelmed.
+//!
+//! The state machines here are *execution-agnostic*: the threaded runtime
+//! ([`super::threads`]) drives them with real channels, and the
+//! discrete-event simulator ([`crate::des`]) drives them in virtual time.
+//! Every statement the benchmarks make about scaling is therefore a
+//! statement about this exact code path.
+//!
+//! Flow control is demand-driven on both levels:
+//!
+//! * a buffer requests work from the producer whenever its queue (plus the
+//!   in-flight request) drops below its consumer count, asking for enough
+//!   to restore `credit_factor ×` its consumer count;
+//! * a consumer implicitly requests work by reporting `Done`; the buffer
+//!   replies with the next queued task or marks it idle.
+//!
+//! Results are buffered per the paper: a buffer flushes its result store to
+//! the producer when it reaches `flush_every`, or immediately when the
+//! buffer has nothing queued (so dynamically-generated workloads — TC3,
+//! optimization loops — never stall waiting for a batch to fill).
+
+use crate::tasklib::{TaskResult, TaskSpec};
+use std::collections::VecDeque;
+
+/// Actions the producer asks its runtime to carry out.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProducerAction {
+    /// Send these tasks to buffer `buffer`.
+    SendTasks { buffer: usize, tasks: Vec<TaskSpec> },
+    /// All work is done: tell every buffer to shut down.
+    BroadcastShutdown,
+}
+
+/// Actions a buffer asks its runtime to carry out.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BufferAction {
+    /// Start `task` on local consumer index `consumer`.
+    RunOn { consumer: usize, task: TaskSpec },
+    /// Ask the producer for up to `amount` more tasks.
+    RequestTasks { amount: usize },
+    /// Ship these results back to the producer.
+    FlushResults(Vec<TaskResult>),
+    /// Tell all local consumers to stop.
+    ShutdownConsumers,
+}
+
+/// Producer (rank 0) state: the global pending-task queue plus which
+/// buffers are waiting for work.
+#[derive(Debug)]
+pub struct ProducerState {
+    pending: VecDeque<TaskSpec>,
+    /// `deficit[b]` = number of tasks buffer `b` asked for but hasn't received.
+    deficit: Vec<usize>,
+    /// Round-robin cursor so replenishment is fair across buffers.
+    cursor: usize,
+    submitted: u64,
+    completed: u64,
+    engine_done: bool,
+    shutdown_sent: bool,
+    /// Message-count instrumentation (drives the buffered-layer ablation).
+    pub msgs_in: u64,
+    pub msgs_out: u64,
+}
+
+impl ProducerState {
+    pub fn new(num_buffers: usize) -> Self {
+        assert!(num_buffers > 0);
+        Self {
+            pending: VecDeque::new(),
+            deficit: vec![0; num_buffers],
+            cursor: 0,
+            submitted: 0,
+            completed: 0,
+            engine_done: false,
+            shutdown_sent: false,
+            msgs_in: 0,
+            msgs_out: 0,
+        }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.submitted - self.completed
+    }
+
+    /// Engine submitted new tasks: enqueue and satisfy outstanding deficits.
+    pub fn push_tasks(&mut self, tasks: Vec<TaskSpec>) -> Vec<ProducerAction> {
+        self.submitted += tasks.len() as u64;
+        self.pending.extend(tasks);
+        self.satisfy_deficits()
+    }
+
+    /// A buffer asked for `amount` more tasks.
+    pub fn on_request(&mut self, buffer: usize, amount: usize) -> Vec<ProducerAction> {
+        self.msgs_in += 1;
+        self.deficit[buffer] = self.deficit[buffer].saturating_add(amount);
+        self.satisfy_deficits()
+    }
+
+    /// A buffer flushed `n_results` results (the runtime hands the actual
+    /// values to the engine); tracked here for termination detection.
+    pub fn on_results(&mut self, n_results: usize) {
+        self.msgs_in += 1;
+        self.completed += n_results as u64;
+    }
+
+    /// The engine has no further unprompted tasks. (It may still create
+    /// tasks from completion callbacks — termination triggers only when
+    /// nothing is pending or in flight.)
+    pub fn set_engine_done(&mut self, done: bool) {
+        self.engine_done = done;
+    }
+
+    /// True once every submitted task completed and nothing is pending.
+    pub fn is_quiescent(&self) -> bool {
+        self.engine_done && self.pending.is_empty() && self.in_flight() == 0
+    }
+
+    /// Emit the shutdown broadcast exactly once, when quiescent.
+    pub fn maybe_shutdown(&mut self) -> Vec<ProducerAction> {
+        if self.is_quiescent() && !self.shutdown_sent {
+            self.shutdown_sent = true;
+            self.msgs_out += self.deficit.len() as u64;
+            vec![ProducerAction::BroadcastShutdown]
+        } else {
+            Vec::new()
+        }
+    }
+
+    fn satisfy_deficits(&mut self) -> Vec<ProducerAction> {
+        // Fairness under scarcity: when fewer tasks are pending than the
+        // total outstanding deficit, granting each buffer its full credit
+        // first-come-first-served would leave later buffers (and their
+        // hundreds of consumers) starved. Grant in bounded chunks, round-
+        // robin, until tasks or deficits run out — the paper's "repeatedly
+        // send them to their consumers gradually", applied one level up.
+        const GRANT_CHUNK: usize = 32;
+        let nb = self.deficit.len();
+        let mut granted: Vec<Vec<TaskSpec>> = vec![Vec::new(); nb];
+        let mut scanned = 0;
+        while !self.pending.is_empty() && scanned < nb {
+            let b = self.cursor;
+            self.cursor = (self.cursor + 1) % nb;
+            scanned += 1;
+            if self.deficit[b] == 0 {
+                continue;
+            }
+            let take = self.deficit[b].min(GRANT_CHUNK).min(self.pending.len());
+            granted[b].extend(self.pending.drain(..take));
+            self.deficit[b] -= take;
+            scanned = 0; // keep scanning while anyone still has deficit
+        }
+        let mut out = Vec::new();
+        for (b, tasks) in granted.into_iter().enumerate() {
+            if !tasks.is_empty() {
+                self.msgs_out += 1;
+                out.push(ProducerAction::SendTasks { buffer: b, tasks });
+            }
+        }
+        out
+    }
+}
+
+/// Buffer state: local task queue, idle-consumer list, result store.
+#[derive(Debug)]
+pub struct BufferState {
+    n_consumers: usize,
+    queue: VecDeque<TaskSpec>,
+    idle: VecDeque<usize>,
+    store: Vec<TaskResult>,
+    /// Tasks requested from the producer but not yet received.
+    outstanding_request: usize,
+    credit_factor: usize,
+    flush_every: usize,
+    shutting_down: bool,
+    pub msgs_in: u64,
+    pub msgs_out: u64,
+}
+
+impl BufferState {
+    pub fn new(n_consumers: usize, credit_factor: usize, flush_every: usize) -> Self {
+        assert!(n_consumers > 0);
+        Self {
+            n_consumers,
+            queue: VecDeque::new(),
+            idle: (0..n_consumers).collect(),
+            store: Vec::new(),
+            outstanding_request: 0,
+            credit_factor: credit_factor.max(1),
+            flush_every: flush_every.max(1),
+            shutting_down: false,
+            msgs_in: 0,
+            msgs_out: 0,
+        }
+    }
+
+    pub fn n_consumers(&self) -> usize {
+        self.n_consumers
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn idle_count(&self) -> usize {
+        self.idle.len()
+    }
+
+    pub fn busy_count(&self) -> usize {
+        self.n_consumers - self.idle.len()
+    }
+
+    pub fn store_len(&self) -> usize {
+        self.store.len()
+    }
+
+    /// Startup: prime the pump by requesting a full credit of tasks.
+    pub fn on_start(&mut self) -> Vec<BufferAction> {
+        self.request_if_low()
+    }
+
+    /// Tasks arrived from the producer.
+    pub fn on_assign(&mut self, tasks: Vec<TaskSpec>) -> Vec<BufferAction> {
+        self.msgs_in += 1;
+        self.outstanding_request = self.outstanding_request.saturating_sub(tasks.len().max(1));
+        self.queue.extend(tasks);
+        let mut out = self.dispatch_idle();
+        out.extend(self.request_if_low());
+        out
+    }
+
+    /// A local consumer finished a task (and is implicitly asking for more).
+    pub fn on_done(&mut self, consumer: usize, result: TaskResult) -> Vec<BufferAction> {
+        self.msgs_in += 1;
+        self.store.push(result);
+        let mut out = Vec::new();
+        if let Some(task) = self.queue.pop_front() {
+            self.msgs_out += 1;
+            out.push(BufferAction::RunOn { consumer, task });
+        } else {
+            self.idle.push_back(consumer);
+        }
+        out.extend(self.request_if_low());
+        out.extend(self.flush_if_due());
+        if self.shutting_down && self.busy_count() == 0 {
+            out.extend(self.final_flush());
+        }
+        out
+    }
+
+    /// Producer announced shutdown. Consumers still running finish first;
+    /// the final flush happens when the last one reports in.
+    pub fn on_shutdown(&mut self) -> Vec<BufferAction> {
+        self.msgs_in += 1;
+        self.shutting_down = true;
+        if self.busy_count() == 0 {
+            self.final_flush()
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// Periodic tick from the runtime (threaded mode): flush any results
+    /// that have been sitting in the store.
+    pub fn on_tick(&mut self) -> Vec<BufferAction> {
+        if self.store.is_empty() {
+            Vec::new()
+        } else {
+            self.flush_now()
+        }
+    }
+
+    fn dispatch_idle(&mut self) -> Vec<BufferAction> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() && !self.idle.is_empty() {
+            let consumer = self.idle.pop_front().unwrap();
+            let task = self.queue.pop_front().unwrap();
+            self.msgs_out += 1;
+            out.push(BufferAction::RunOn { consumer, task });
+        }
+        out
+    }
+
+    fn request_if_low(&mut self) -> Vec<BufferAction> {
+        if self.shutting_down {
+            return Vec::new();
+        }
+        let level = self.queue.len() + self.outstanding_request;
+        if level < self.n_consumers {
+            let target = self.credit_factor * self.n_consumers;
+            let amount = target - level;
+            self.outstanding_request += amount;
+            self.msgs_out += 1;
+            vec![BufferAction::RequestTasks { amount }]
+        } else {
+            Vec::new()
+        }
+    }
+
+    fn flush_if_due(&mut self) -> Vec<BufferAction> {
+        // Flush on batch-full, or as soon as there is nothing queued locally
+        // (dynamic workloads need results to reach the engine promptly).
+        if self.store.len() >= self.flush_every || (self.queue.is_empty() && !self.store.is_empty())
+        {
+            self.flush_now()
+        } else {
+            Vec::new()
+        }
+    }
+
+    fn flush_now(&mut self) -> Vec<BufferAction> {
+        self.msgs_out += 1;
+        vec![BufferAction::FlushResults(std::mem::take(&mut self.store))]
+    }
+
+    fn final_flush(&mut self) -> Vec<BufferAction> {
+        let mut out = Vec::new();
+        if !self.store.is_empty() {
+            out.extend(self.flush_now());
+        }
+        self.msgs_out += 1;
+        out.push(BufferAction::ShutdownConsumers);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasklib::Payload;
+
+    fn task(id: u64) -> TaskSpec {
+        TaskSpec::new(id, Payload::Sleep { seconds: 1.0 })
+    }
+
+    fn result(id: u64, consumer: usize) -> TaskResult {
+        TaskResult { id, consumer, results: vec![], begin: 0.0, finish: 1.0, rc: 0 }
+    }
+
+    #[test]
+    fn producer_satisfies_requests_in_round_robin() {
+        let mut p = ProducerState::new(2);
+        assert!(p.on_request(0, 3).is_empty()); // nothing pending yet
+        assert!(p.on_request(1, 3).is_empty());
+        let acts = p.push_tasks((0..4).map(task).collect());
+        // 4 tasks split across the two deficits, fairness via round-robin.
+        let mut granted = [0usize; 2];
+        for a in &acts {
+            if let ProducerAction::SendTasks { buffer, tasks } = a {
+                granted[*buffer] += tasks.len();
+            }
+        }
+        assert_eq!(granted[0] + granted[1], 4);
+        assert!(granted[0] > 0 && granted[1] > 0, "{granted:?}");
+        assert_eq!(p.pending_len(), 0);
+        assert_eq!(p.in_flight(), 4);
+    }
+
+    #[test]
+    fn producer_queues_tasks_without_deficit() {
+        let mut p = ProducerState::new(1);
+        let acts = p.push_tasks(vec![task(0)]);
+        assert!(acts.is_empty());
+        assert_eq!(p.pending_len(), 1);
+        let acts = p.on_request(0, 10);
+        assert_eq!(acts.len(), 1);
+        assert_eq!(p.pending_len(), 0);
+    }
+
+    #[test]
+    fn producer_shutdown_only_when_quiescent_and_once() {
+        let mut p = ProducerState::new(1);
+        p.push_tasks(vec![task(0)]);
+        p.set_engine_done(true);
+        assert!(p.maybe_shutdown().is_empty()); // pending
+        p.on_request(0, 1);
+        assert!(p.maybe_shutdown().is_empty()); // in flight
+        p.on_results(1);
+        assert_eq!(p.maybe_shutdown(), vec![ProducerAction::BroadcastShutdown]);
+        assert!(p.maybe_shutdown().is_empty()); // idempotent
+    }
+
+    #[test]
+    fn buffer_requests_on_start_and_dispatches_on_assign() {
+        let mut b = BufferState::new(4, 2, 100);
+        let acts = b.on_start();
+        assert_eq!(acts, vec![BufferAction::RequestTasks { amount: 8 }]);
+        let acts = b.on_assign((0..8).map(task).collect());
+        let runs = acts
+            .iter()
+            .filter(|a| matches!(a, BufferAction::RunOn { .. }))
+            .count();
+        assert_eq!(runs, 4); // all four consumers started
+        assert_eq!(b.queue_len(), 4);
+        assert_eq!(b.idle_count(), 0);
+    }
+
+    #[test]
+    fn buffer_done_feeds_next_task_and_requests_when_low() {
+        let mut b = BufferState::new(2, 2, 100);
+        b.on_start();
+        b.on_assign(vec![task(0), task(1), task(2)]);
+        // queue=1, outstanding=1 (asked 4, got 3): level 2 == n_consumers, no request.
+        let acts = b.on_done(0, result(0, 0));
+        assert!(acts.iter().any(|a| matches!(a, BufferAction::RunOn { consumer: 0, .. })));
+        // After dispatch queue=0, level=1 < 2 → request to restore credit 4.
+        assert!(acts.iter().any(|a| matches!(a, BufferAction::RequestTasks { amount: 3 })));
+        // Queue empty → results flush immediately.
+        assert!(acts
+            .iter()
+            .any(|a| matches!(a, BufferAction::FlushResults(rs) if rs.len() == 1)));
+    }
+
+    #[test]
+    fn buffer_batches_results_while_queue_nonempty() {
+        let mut b = BufferState::new(1, 8, 3);
+        b.on_start();
+        b.on_assign((0..8).map(task).collect());
+        // Two completions: queue still nonempty, store below flush_every → no flush.
+        let a1 = b.on_done(0, result(0, 0));
+        assert!(!a1.iter().any(|a| matches!(a, BufferAction::FlushResults(_))));
+        let a2 = b.on_done(0, result(1, 0));
+        assert!(!a2.iter().any(|a| matches!(a, BufferAction::FlushResults(_))));
+        // Third completion hits flush_every = 3.
+        let a3 = b.on_done(0, result(2, 0));
+        assert!(a3
+            .iter()
+            .any(|a| matches!(a, BufferAction::FlushResults(rs) if rs.len() == 3)));
+    }
+
+    #[test]
+    fn buffer_shutdown_waits_for_running_consumers() {
+        let mut b = BufferState::new(2, 1, 100);
+        b.on_start();
+        b.on_assign(vec![task(0), task(1)]);
+        let acts = b.on_shutdown();
+        assert!(acts.is_empty(), "must wait for busy consumers");
+        b.on_done(0, result(0, 0));
+        let acts = b.on_done(1, result(1, 1));
+        assert!(acts.iter().any(|a| matches!(a, BufferAction::ShutdownConsumers)));
+        // All results eventually flushed.
+        let flushed: usize = acts
+            .iter()
+            .filter_map(|a| match a {
+                BufferAction::FlushResults(rs) => Some(rs.len()),
+                _ => None,
+            })
+            .sum();
+        assert!(flushed >= 1);
+    }
+
+    #[test]
+    fn buffer_tick_flushes_stale_results() {
+        let mut b = BufferState::new(1, 4, 100);
+        b.on_start();
+        b.on_assign((0..4).map(task).collect());
+        b.on_done(0, result(0, 0));
+        assert_eq!(b.store_len(), 1);
+        let acts = b.on_tick();
+        assert!(acts.iter().any(|a| matches!(a, BufferAction::FlushResults(rs) if rs.len() == 1)));
+        assert_eq!(b.store_len(), 0);
+        assert!(b.on_tick().is_empty());
+    }
+
+    #[test]
+    fn no_task_lost_or_duplicated_through_buffer() {
+        // Property-style: drive a buffer with random assign/done interleavings
+        // and check conservation: every assigned task is run exactly once.
+        use crate::testutil::{check, pair, usize_in, u64_in};
+        check(
+            "buffer conserves tasks",
+            pair(usize_in(1..6), u64_in(1..40)),
+            |&(nc, n_tasks)| {
+                let mut b = BufferState::new(nc, 2, 5);
+                b.on_start();
+                let mut running: Vec<(usize, u64)> = Vec::new();
+                let mut ran: Vec<u64> = Vec::new();
+                let mut next = 0u64;
+                let mut actions = b.on_assign((0..n_tasks.min(7)).map(task).collect());
+                next += n_tasks.min(7);
+                loop {
+                    for a in actions.drain(..) {
+                        if let BufferAction::RunOn { consumer, task } = a {
+                            running.push((consumer, task.id));
+                        }
+                    }
+                    if let Some((c, id)) = running.pop() {
+                        ran.push(id);
+                        actions = b.on_done(c, result(id, c));
+                        if next < n_tasks {
+                            let push = (n_tasks - next).min(3);
+                            let mut more = b.on_assign((next..next + push).map(task).collect());
+                            next += push;
+                            actions.append(&mut more);
+                        }
+                    } else if next < n_tasks {
+                        let push = (n_tasks - next).min(3);
+                        actions = b.on_assign((next..next + push).map(task).collect());
+                        next += push;
+                    } else {
+                        break;
+                    }
+                }
+                ran.sort();
+                ran.dedup();
+                ran.len() as u64 == n_tasks
+            },
+        );
+    }
+}

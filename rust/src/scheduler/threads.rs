@@ -1,0 +1,446 @@
+//! The threaded scheduler runtime.
+//!
+//! Executes the protocol of [`super::protocol`] with real OS threads and
+//! channels: one producer thread (≈ MPI rank 0), one thread per buffer
+//! process, one thread per consumer process. The search engine runs inside
+//! the producer thread, exactly as CARAVAN runs the Python search engine
+//! attached to rank 0; consumers execute task payloads through a
+//! user-supplied [`Executor`].
+//!
+//! On a small host this is concurrency rather than parallelism, which is
+//! fine for the framework's own behaviour (dummy `Sleep` tasks idle, and
+//! in-process evaluations are serialized by the PJRT executor anyway).
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::metrics::FillingRate;
+use super::protocol::{BufferAction, BufferState, ProducerAction, ProducerState};
+use crate::config::SchedulerConfig;
+use crate::tasklib::{Payload, SearchEngine, TaskResult, TaskSink, TaskSpec};
+
+/// Runs task payloads on a consumer thread.
+pub trait Executor: Send + Sync {
+    /// Execute the payload; return (result vector, return code).
+    fn run(&self, task: &TaskSpec, consumer: usize) -> (Vec<f64>, i32);
+}
+
+/// Executor for dummy [`Payload::Sleep`] tasks with time compression:
+/// a virtual second lasts `time_scale` real seconds.
+pub struct SleepExecutor {
+    pub time_scale: f64,
+}
+
+impl Executor for SleepExecutor {
+    fn run(&self, task: &TaskSpec, _consumer: usize) -> (Vec<f64>, i32) {
+        match &task.payload {
+            Payload::Sleep { seconds } => {
+                let real = seconds * self.time_scale;
+                if real > 0.0 {
+                    thread::sleep(Duration::from_secs_f64(real));
+                }
+                (vec![*seconds], 0)
+            }
+            other => panic!("SleepExecutor got {other:?}"),
+        }
+    }
+}
+
+enum ToProducer {
+    Request { buffer: usize, amount: usize },
+    Results(Vec<TaskResult>),
+}
+
+enum ToBuffer {
+    Assign(Vec<TaskSpec>),
+    Done { consumer: usize, result: TaskResult },
+    Shutdown,
+}
+
+enum ToConsumer {
+    Run(TaskSpec),
+    Stop,
+}
+
+/// Outcome of a scheduler run.
+pub struct Report {
+    pub results: Vec<TaskResult>,
+    pub filling: FillingRate,
+    pub wall_secs: f64,
+    pub producer_msgs_in: u64,
+    pub producer_msgs_out: u64,
+}
+
+impl Report {
+    pub fn rate(&self, np: usize) -> f64 {
+        self.filling.rate(np)
+    }
+}
+
+/// Sink handing engine submissions to the producer state machine.
+struct ProducerSink {
+    next_id: u64,
+    staged: Vec<TaskSpec>,
+}
+
+impl TaskSink for ProducerSink {
+    fn submit(&mut self, payload: Payload) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.staged.push(TaskSpec::new(id, payload));
+        id
+    }
+}
+
+/// Run `engine`'s workload on the hierarchical scheduler.
+///
+/// Blocks until every task (including dynamically created ones) completed,
+/// then returns the full result set and the schedule metrics.
+pub fn run_scheduler(
+    cfg: &SchedulerConfig,
+    mut engine: Box<dyn SearchEngine>,
+    executor: Arc<dyn Executor>,
+) -> Report {
+    let np = cfg.np;
+    let layout = cfg.buffer_layout();
+    let nb = layout.len();
+    crate::debugln!("scheduler: np={} buffers={} layout={:?}", np, nb, layout);
+
+    let t0 = Instant::now();
+
+    // Channels.
+    let (prod_tx, prod_rx) = channel::<ToProducer>();
+    let mut buf_txs: Vec<Sender<ToBuffer>> = Vec::with_capacity(nb);
+    let mut buf_handles = Vec::new();
+    let mut consumer_handles = Vec::new();
+
+    let mut global_consumer = 0usize;
+    for (b, &nc) in layout.iter().enumerate() {
+        let (btx, brx) = channel::<ToBuffer>();
+        buf_txs.push(btx.clone());
+
+        // Spawn this buffer's consumers.
+        let mut cons_txs: Vec<Sender<ToConsumer>> = Vec::with_capacity(nc);
+        for local in 0..nc {
+            let (ctx, crx) = channel::<ToConsumer>();
+            cons_txs.push(ctx);
+            let rank = global_consumer;
+            global_consumer += 1;
+            let exec = Arc::clone(&executor);
+            let back = btx.clone();
+            let handle = thread::Builder::new()
+                .name(format!("consumer-{rank}"))
+                .stack_size(256 * 1024)
+                .spawn(move || consumer_loop(crx, back, exec, rank, local, t0))
+                .expect("spawn consumer");
+            consumer_handles.push(handle);
+        }
+
+        let ptx = prod_tx.clone();
+        let flush_interval = Duration::from_millis(cfg.flush_interval_ms);
+        let (credit, flush_every) = (cfg.credit_factor, cfg.flush_every);
+        let handle = thread::Builder::new()
+            .name(format!("buffer-{b}"))
+            .stack_size(256 * 1024)
+            .spawn(move || buffer_loop(b, nc, credit, flush_every, brx, ptx, cons_txs, flush_interval))
+            .expect("spawn buffer");
+        buf_handles.push(handle);
+    }
+    drop(prod_tx);
+
+    // --- producer loop (runs on the caller thread) ---
+    let mut state = ProducerState::new(nb);
+    let mut sink = ProducerSink { next_id: 0, staged: Vec::new() };
+    let mut filling = FillingRate::new();
+    let mut all_results: Vec<TaskResult> = Vec::new();
+
+    engine.start(&mut sink);
+    let acts = state_push(&mut state, &mut sink);
+    perform_producer(acts, &buf_txs);
+    let done = engine.poll(&mut sink);
+    let acts = state_push(&mut state, &mut sink);
+    perform_producer(acts, &buf_txs);
+    state.set_engine_done(done);
+
+    let poll_interval = Duration::from_millis(cfg.flush_interval_ms.max(1));
+    loop {
+        // Shutdown check (engine may have submitted nothing at all).
+        let shutdown_acts = state.maybe_shutdown();
+        if perform_producer(shutdown_acts, &buf_txs) {
+            break;
+        }
+        let msg = match prod_rx.recv_timeout(poll_interval) {
+            Ok(m) => m,
+            Err(RecvTimeoutError::Timeout) => {
+                // Give session-style engines a chance to inject work.
+                let done = engine.poll(&mut sink);
+                let acts = state_push(&mut state, &mut sink);
+                perform_producer(acts, &buf_txs);
+                state.set_engine_done(done);
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        match msg {
+            ToProducer::Request { buffer, amount } => {
+                let acts = state.on_request(buffer, amount);
+                perform_producer(acts, &buf_txs);
+            }
+            ToProducer::Results(results) => {
+                state.on_results(results.len());
+                for r in &results {
+                    filling.record(r);
+                    engine.on_done(r, &mut sink);
+                }
+                all_results.extend(results);
+                let acts = state_push(&mut state, &mut sink);
+                perform_producer(acts, &buf_txs);
+            }
+        }
+    }
+    engine.finish();
+
+    // Join everything.
+    drop(buf_txs);
+    for h in buf_handles {
+        let _ = h.join();
+    }
+    for h in consumer_handles {
+        let _ = h.join();
+    }
+
+    Report {
+        results: all_results,
+        filling,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        producer_msgs_in: state.msgs_in,
+        producer_msgs_out: state.msgs_out,
+    }
+}
+
+/// Push whatever the engine staged into the producer state machine.
+fn state_push(state: &mut ProducerState, sink: &mut ProducerSink) -> Vec<ProducerAction> {
+    if sink.staged.is_empty() {
+        Vec::new()
+    } else {
+        state.push_tasks(std::mem::take(&mut sink.staged))
+    }
+}
+
+/// Execute producer actions; returns true when shutdown was broadcast.
+fn perform_producer(actions: Vec<ProducerAction>, buf_txs: &[Sender<ToBuffer>]) -> bool {
+    let mut shutdown = false;
+    for act in actions {
+        match act {
+            ProducerAction::SendTasks { buffer, tasks } => {
+                let _ = buf_txs[buffer].send(ToBuffer::Assign(tasks));
+            }
+            ProducerAction::BroadcastShutdown => {
+                for tx in buf_txs {
+                    let _ = tx.send(ToBuffer::Shutdown);
+                }
+                shutdown = true;
+            }
+        }
+    }
+    shutdown
+}
+
+fn buffer_loop(
+    buffer_id: usize,
+    n_consumers: usize,
+    credit_factor: usize,
+    flush_every: usize,
+    rx: Receiver<ToBuffer>,
+    producer: Sender<ToProducer>,
+    consumers: Vec<Sender<ToConsumer>>,
+    flush_interval: Duration,
+) {
+    let mut state = BufferState::new(n_consumers, credit_factor, flush_every);
+    let mut stopping = false;
+    let perform = |state: &mut BufferState,
+                   acts: Vec<BufferAction>,
+                   stopping: &mut bool| {
+        for act in acts {
+            match act {
+                BufferAction::RunOn { consumer, task } => {
+                    let _ = consumers[consumer].send(ToConsumer::Run(task));
+                }
+                BufferAction::RequestTasks { amount } => {
+                    let _ = producer.send(ToProducer::Request { buffer: buffer_id, amount });
+                }
+                BufferAction::FlushResults(rs) => {
+                    if !rs.is_empty() {
+                        let _ = producer.send(ToProducer::Results(rs));
+                    }
+                }
+                BufferAction::ShutdownConsumers => {
+                    for c in &consumers {
+                        let _ = c.send(ToConsumer::Stop);
+                    }
+                    *stopping = true;
+                }
+            }
+        }
+        let _ = state;
+    };
+
+    let acts = state.on_start();
+    perform(&mut state, acts, &mut stopping);
+    while !stopping {
+        match rx.recv_timeout(flush_interval) {
+            Ok(ToBuffer::Assign(tasks)) => {
+                let acts = state.on_assign(tasks);
+                perform(&mut state, acts, &mut stopping);
+            }
+            Ok(ToBuffer::Done { consumer, result }) => {
+                let acts = state.on_done(consumer, result);
+                perform(&mut state, acts, &mut stopping);
+            }
+            Ok(ToBuffer::Shutdown) => {
+                let acts = state.on_shutdown();
+                perform(&mut state, acts, &mut stopping);
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                let acts = state.on_tick();
+                perform(&mut state, acts, &mut stopping);
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+}
+
+fn consumer_loop(
+    rx: Receiver<ToConsumer>,
+    back: Sender<ToBuffer>,
+    exec: Arc<dyn Executor>,
+    rank: usize,
+    local: usize,
+    t0: Instant,
+) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToConsumer::Run(task) => {
+                let begin = t0.elapsed().as_secs_f64();
+                let (results, rc) = exec.run(&task, rank);
+                let finish = t0.elapsed().as_secs_f64();
+                let result = TaskResult { id: task.id, consumer: rank, results, begin, finish, rc };
+                if back.send(ToBuffer::Done { consumer: local, result }).is_err() {
+                    break;
+                }
+            }
+            ToConsumer::Stop => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasklib::VecSink;
+
+    /// Engine that submits `n` sleep tasks up front.
+    struct StaticSleeps {
+        n: usize,
+        secs: f64,
+    }
+
+    impl SearchEngine for StaticSleeps {
+        fn start(&mut self, sink: &mut dyn TaskSink) {
+            for _ in 0..self.n {
+                sink.submit(Payload::Sleep { seconds: self.secs });
+            }
+        }
+        fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn TaskSink) {}
+    }
+
+    /// Engine that chains: each completion spawns one follow-up until a
+    /// total budget is exhausted (the TC3 pattern).
+    struct Chaining {
+        initial: usize,
+        total: usize,
+        created: usize,
+    }
+
+    impl SearchEngine for Chaining {
+        fn start(&mut self, sink: &mut dyn TaskSink) {
+            for _ in 0..self.initial {
+                sink.submit(Payload::Sleep { seconds: 0.5 });
+                self.created += 1;
+            }
+        }
+        fn on_done(&mut self, _r: &TaskResult, sink: &mut dyn TaskSink) {
+            if self.created < self.total {
+                sink.submit(Payload::Sleep { seconds: 0.5 });
+                self.created += 1;
+            }
+        }
+    }
+
+    fn quick_cfg(np: usize) -> SchedulerConfig {
+        SchedulerConfig {
+            np,
+            consumers_per_buffer: 4,
+            time_scale: 0.001, // 1 virtual s = 1 ms real
+            flush_interval_ms: 5,
+            ..SchedulerConfig::default()
+        }
+    }
+
+    #[test]
+    fn static_workload_runs_all_tasks() {
+        let report = run_scheduler(
+            &quick_cfg(8),
+            Box::new(StaticSleeps { n: 40, secs: 1.0 }),
+            Arc::new(SleepExecutor { time_scale: 0.001 }),
+        );
+        assert_eq!(report.results.len(), 40);
+        assert_eq!(report.filling.overlap_violations(), 0);
+        // All ids distinct.
+        let mut ids: Vec<u64> = report.results.iter().map(|r| r.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 40);
+    }
+
+    #[test]
+    fn empty_engine_terminates() {
+        let report = run_scheduler(
+            &quick_cfg(4),
+            Box::new(StaticSleeps { n: 0, secs: 0.0 }),
+            Arc::new(SleepExecutor { time_scale: 0.001 }),
+        );
+        assert!(report.results.is_empty());
+    }
+
+    #[test]
+    fn dynamic_chaining_completes_budget() {
+        let report = run_scheduler(
+            &quick_cfg(4),
+            Box::new(Chaining { initial: 4, total: 20, created: 0 }),
+            Arc::new(SleepExecutor { time_scale: 0.001 }),
+        );
+        assert_eq!(report.results.len(), 20);
+    }
+
+    #[test]
+    fn single_consumer_is_serial() {
+        let report = run_scheduler(
+            &quick_cfg(1),
+            Box::new(StaticSleeps { n: 5, secs: 1.0 }),
+            Arc::new(SleepExecutor { time_scale: 0.001 }),
+        );
+        assert_eq!(report.results.len(), 5);
+        assert_eq!(report.filling.overlap_violations(), 0);
+    }
+
+    #[test]
+    fn engine_sink_ids_match_results() {
+        let mut sink = VecSink::new();
+        let mut e = StaticSleeps { n: 3, secs: 0.0 };
+        e.start(&mut sink);
+        assert_eq!(sink.submitted.iter().map(|t| t.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,181 @@
+//! The task model — CARAVAN's unit of work.
+//!
+//! A *task* (§2.1) is a single execution of a user's simulator. The search
+//! engine creates tasks; the scheduler distributes them to consumer
+//! processes; consumers run them and send back a [`TaskResult`] whose
+//! `results` vector is what the simulator wrote to `_results.txt` (§2.2) —
+//! or, for in-process simulators, the objective values returned directly.
+//!
+//! [`ParameterSet`] / [`Run`] mirror the convenience classes of the Python
+//! API used for Monte-Carlo averaging: one parameter point, several runs
+//! with distinct random seeds, aggregated results.
+
+pub mod pset;
+
+pub use pset::{ParameterSet, PsetStore, Run};
+
+/// Globally unique task identifier (minted by the scheduler-side sink).
+pub type TaskId = u64;
+
+/// What a consumer should do for this task.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Dummy task: occupy the consumer for `seconds` (§3's test cases).
+    /// In the threaded runtime the duration is scaled by the configured
+    /// time-compression factor; in the DES it elapses in virtual time.
+    Sleep { seconds: f64 },
+    /// External simulator (§2.2): executed as a child process in a fresh
+    /// per-task temporary directory; `argv[0]` is the program.
+    Command { cmdline: String },
+    /// In-process simulator evaluation: `input` is the parameter point
+    /// handed to the registered simulator backend (PJRT-compiled model or
+    /// the pure-Rust reference simulator). `seed` selects the RNG stream.
+    Eval { input: Vec<f64>, seed: u64 },
+}
+
+impl Payload {
+    /// Human-readable one-liner for logs.
+    pub fn describe(&self) -> String {
+        match self {
+            Payload::Sleep { seconds } => format!("sleep {seconds:.3}s"),
+            Payload::Command { cmdline } => format!("cmd {cmdline}"),
+            Payload::Eval { input, seed } => {
+                format!("eval dim={} seed={seed}", input.len())
+            }
+        }
+    }
+}
+
+/// A schedulable task: id + payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskSpec {
+    pub id: TaskId,
+    pub payload: Payload,
+}
+
+impl TaskSpec {
+    pub fn new(id: TaskId, payload: Payload) -> Self {
+        Self { id, payload }
+    }
+}
+
+/// Completion record sent back to the search engine.
+///
+/// `begin`/`finish` are seconds since scheduler start — wall-clock in the
+/// threaded runtime, virtual time in the DES. They feed the job-filling-rate
+/// metric (Eq. 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskResult {
+    pub id: TaskId,
+    /// Rank of the consumer that executed the task.
+    pub consumer: usize,
+    /// Values parsed from `_results.txt` / returned by the in-process
+    /// simulator. Possibly empty (the file is optional in §2.2).
+    pub results: Vec<f64>,
+    pub begin: f64,
+    pub finish: f64,
+    /// Exit status: 0 = success. Non-zero marks a failed simulator run;
+    /// search engines decide whether to resubmit or drop.
+    pub rc: i32,
+}
+
+impl TaskResult {
+    pub fn duration(&self) -> f64 {
+        self.finish - self.begin
+    }
+
+    pub fn ok(&self) -> bool {
+        self.rc == 0
+    }
+}
+
+/// Where search engines hand new tasks to the scheduler. Mints ids so that
+/// every engine (grid sweep, NSGA-II, MCMC, the await-style session) gets
+/// globally unique, monotonically increasing task ids.
+pub trait TaskSink {
+    fn submit(&mut self, payload: Payload) -> TaskId;
+}
+
+/// A sink recording submissions locally — the building block used by the
+/// DES and the threaded runtime, and handy in unit tests.
+#[derive(Default, Debug)]
+pub struct VecSink {
+    pub next_id: TaskId,
+    pub submitted: Vec<TaskSpec>,
+}
+
+impl VecSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn drain(&mut self) -> Vec<TaskSpec> {
+        std::mem::take(&mut self.submitted)
+    }
+}
+
+impl TaskSink for VecSink {
+    fn submit(&mut self, payload: Payload) -> TaskId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.submitted.push(TaskSpec::new(id, payload));
+        id
+    }
+}
+
+/// A search engine decides *which* tasks to run — the paper's third module.
+///
+/// `start` is called once before scheduling begins; `on_done` every time a
+/// task completes (the analogue of the Python `add_callback`). Both may
+/// submit new tasks through the sink, which is how TC3-style and
+/// optimization workloads dynamically extend the task stream.
+pub trait SearchEngine: Send {
+    fn start(&mut self, sink: &mut dyn TaskSink);
+    fn on_done(&mut self, result: &TaskResult, sink: &mut dyn TaskSink);
+    /// Polled periodically by the threaded runtime between events. Lets an
+    /// engine pull in work from outside (the await-style [`crate::engine::Session`]
+    /// API). Returns `false` while the engine may still produce tasks
+    /// spontaneously — the scheduler will not shut down while `false`.
+    /// Default: `true` (everything happens in `start`/`on_done`).
+    fn poll(&mut self, sink: &mut dyn TaskSink) -> bool {
+        let _ = sink;
+        true
+    }
+    /// Called once when the scheduler drained all tasks; engines may use it
+    /// to report summaries. Default: no-op.
+    fn finish(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_sink_mints_sequential_ids() {
+        let mut s = VecSink::new();
+        let a = s.submit(Payload::Sleep { seconds: 1.0 });
+        let b = s.submit(Payload::Sleep { seconds: 2.0 });
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(s.submitted.len(), 2);
+        let drained = s.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(s.submitted.is_empty());
+        assert_eq!(s.submit(Payload::Sleep { seconds: 0.0 }), 2);
+    }
+
+    #[test]
+    fn result_duration_and_ok() {
+        let r = TaskResult { id: 1, consumer: 3, results: vec![1.5], begin: 2.0, finish: 5.5, rc: 0 };
+        assert!((r.duration() - 3.5).abs() < 1e-12);
+        assert!(r.ok());
+        let bad = TaskResult { rc: 1, ..r.clone() };
+        assert!(!bad.ok());
+    }
+
+    #[test]
+    fn payload_describe() {
+        assert_eq!(Payload::Sleep { seconds: 1.0 }.describe(), "sleep 1.000s");
+        assert!(Payload::Command { cmdline: "echo hi".into() }.describe().contains("echo"));
+        assert!(Payload::Eval { input: vec![0.0; 4], seed: 9 }.describe().contains("dim=4"));
+    }
+}

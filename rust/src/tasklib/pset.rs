@@ -1,0 +1,183 @@
+//! `ParameterSet` / `Run` — Monte-Carlo grouping (paper §2.3).
+//!
+//! The paper's application averages each individual's objectives over five
+//! runs with different random seeds. `PsetStore` tracks which task ids
+//! belong to which parameter set and aggregates their results when all runs
+//! of a set are in.
+
+use std::collections::HashMap;
+
+use super::{Payload, TaskId, TaskSink};
+
+/// One run (task) of a parameter set.
+#[derive(Clone, Debug)]
+pub struct Run {
+    pub task_id: TaskId,
+    pub seed: u64,
+    pub results: Option<Vec<f64>>,
+}
+
+/// A parameter point with several seeded runs.
+#[derive(Clone, Debug)]
+pub struct ParameterSet {
+    pub id: u64,
+    pub point: Vec<f64>,
+    pub runs: Vec<Run>,
+}
+
+impl ParameterSet {
+    pub fn completed_runs(&self) -> usize {
+        self.runs.iter().filter(|r| r.results.is_some()).count()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.completed_runs() == self.runs.len()
+    }
+
+    /// Element-wise mean over the result vectors of the completed runs.
+    /// Empty result vectors (failed simulator runs) are skipped; of the
+    /// rest, runs whose width differs from the first usable run are
+    /// ignored. Returns an empty vector only when *every* run failed.
+    pub fn mean_results(&self) -> Vec<f64> {
+        let vecs: Vec<&Vec<f64>> = self
+            .runs
+            .iter()
+            .filter_map(|r| r.results.as_ref())
+            .filter(|v| !v.is_empty())
+            .collect();
+        let Some(first) = vecs.first() else {
+            return Vec::new();
+        };
+        let width = first.len();
+        let good: Vec<&&Vec<f64>> = vecs.iter().filter(|v| v.len() == width).collect();
+        let mut out = vec![0.0; width];
+        for v in &good {
+            for (o, x) in out.iter_mut().zip(v.iter()) {
+                *o += x;
+            }
+        }
+        let n = good.len() as f64;
+        for o in &mut out {
+            *o /= n;
+        }
+        out
+    }
+}
+
+/// Bookkeeping for in-flight parameter sets.
+#[derive(Default)]
+pub struct PsetStore {
+    next_pset_id: u64,
+    by_task: HashMap<TaskId, u64>,
+    sets: HashMap<u64, ParameterSet>,
+}
+
+impl PsetStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create a parameter set and submit `n_runs` `Payload::Eval` tasks
+    /// with seeds `seed0 .. seed0 + n_runs`.
+    pub fn create(
+        &mut self,
+        point: Vec<f64>,
+        n_runs: usize,
+        seed0: u64,
+        sink: &mut dyn TaskSink,
+    ) -> u64 {
+        let pid = self.next_pset_id;
+        self.next_pset_id += 1;
+        let mut runs = Vec::with_capacity(n_runs);
+        for k in 0..n_runs {
+            let seed = seed0 + k as u64;
+            let tid = sink.submit(Payload::Eval { input: point.clone(), seed });
+            self.by_task.insert(tid, pid);
+            runs.push(Run { task_id: tid, seed, results: None });
+        }
+        self.sets.insert(pid, ParameterSet { id: pid, point, runs });
+        pid
+    }
+
+    /// Record a completed task. Returns the parameter set if this result
+    /// completed it (the set is removed from the store — ownership moves to
+    /// the caller, typically an optimizer archiving the individual).
+    pub fn record(&mut self, task_id: TaskId, results: Vec<f64>) -> Option<ParameterSet> {
+        let pid = self.by_task.remove(&task_id)?;
+        let set = self.sets.get_mut(&pid)?;
+        for run in &mut set.runs {
+            if run.task_id == task_id {
+                run.results = Some(results);
+                break;
+            }
+        }
+        if set.is_complete() {
+            self.sets.remove(&pid)
+        } else {
+            None
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.sets.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasklib::VecSink;
+
+    #[test]
+    fn create_submits_n_runs_with_distinct_seeds() {
+        let mut store = PsetStore::new();
+        let mut sink = VecSink::new();
+        let pid = store.create(vec![0.5, 0.25], 5, 100, &mut sink);
+        assert_eq!(pid, 0);
+        assert_eq!(sink.submitted.len(), 5);
+        let seeds: Vec<u64> = sink
+            .submitted
+            .iter()
+            .map(|t| match &t.payload {
+                Payload::Eval { seed, .. } => *seed,
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(seeds, vec![100, 101, 102, 103, 104]);
+        assert_eq!(store.in_flight(), 1);
+    }
+
+    #[test]
+    fn record_completes_only_when_all_runs_done() {
+        let mut store = PsetStore::new();
+        let mut sink = VecSink::new();
+        store.create(vec![1.0], 3, 0, &mut sink);
+        let ids: Vec<TaskId> = sink.submitted.iter().map(|t| t.id).collect();
+        assert!(store.record(ids[0], vec![2.0]).is_none());
+        assert!(store.record(ids[1], vec![4.0]).is_none());
+        let done = store.record(ids[2], vec![6.0]).expect("complete");
+        assert!(done.is_complete());
+        assert_eq!(done.mean_results(), vec![4.0]);
+        assert_eq!(store.in_flight(), 0);
+    }
+
+    #[test]
+    fn record_unknown_task_is_none() {
+        let mut store = PsetStore::new();
+        assert!(store.record(99, vec![]).is_none());
+    }
+
+    #[test]
+    fn mean_skips_mismatched_widths() {
+        let ps = ParameterSet {
+            id: 0,
+            point: vec![],
+            runs: vec![
+                Run { task_id: 0, seed: 0, results: Some(vec![1.0, 3.0]) },
+                Run { task_id: 1, seed: 1, results: Some(vec![]) },
+                Run { task_id: 2, seed: 2, results: Some(vec![3.0, 5.0]) },
+            ],
+        };
+        assert_eq!(ps.mean_results(), vec![2.0, 4.0]);
+    }
+}

@@ -1,0 +1,210 @@
+//! Mini property-based testing harness (offline stand-in for `proptest`).
+//!
+//! [`check`] runs a property over `CARAVAN_PROP_CASES` (default 128)
+//! randomly generated cases and, on failure, greedily shrinks the failing
+//! input via the strategy's `shrink` before panicking with the seed, so a
+//! failure reproduces with `CARAVAN_PROP_SEED=<seed>`.
+//!
+//! ```
+//! use caravan::testutil::{check, vec_of, f64_in};
+//! check("sum is finite", vec_of(f64_in(0.0, 1.0), 0..100), |xs| {
+//!     xs.iter().sum::<f64>().is_finite()
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// A generation + shrinking strategy for values of type `T`.
+pub trait Strat {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+    /// Candidate smaller versions of `v` (tried in order during shrinking).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+fn cases() -> usize {
+    std::env::var("CARAVAN_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(128)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("CARAVAN_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xCA7A)
+}
+
+/// Run `prop` over generated cases; panic (with reproduction seed) on the
+/// first — shrunk — counterexample.
+pub fn check<S: Strat>(name: &str, strat: S, prop: impl Fn(&S::Value) -> bool) {
+    let seed = base_seed();
+    let mut rng = Pcg64::new(seed);
+    for case in 0..cases() {
+        let v = strat.generate(&mut rng);
+        if !prop(&v) {
+            let shrunk = shrink_loop(&strat, v, &prop);
+            panic!(
+                "property {name:?} failed at case {case} (CARAVAN_PROP_SEED={seed}):\n  counterexample: {shrunk:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<S: Strat>(strat: &S, mut v: S::Value, prop: &impl Fn(&S::Value) -> bool) -> S::Value {
+    // Greedy descent: keep taking the first shrink candidate that still fails.
+    'outer: loop {
+        for cand in strat.shrink(&v) {
+            if !prop(&cand) {
+                v = cand;
+                continue 'outer;
+            }
+        }
+        return v;
+    }
+}
+
+// ---------------------------------------------------------------- strategies
+
+pub struct U64In(pub std::ops::Range<u64>);
+pub struct UsizeIn(pub std::ops::Range<usize>);
+pub struct F64In(pub f64, pub f64);
+pub struct VecOf<S>(pub S, pub std::ops::Range<usize>);
+pub struct Tuple2<A, B>(pub A, pub B);
+
+pub fn u64_in(r: std::ops::Range<u64>) -> U64In {
+    U64In(r)
+}
+pub fn usize_in(r: std::ops::Range<usize>) -> UsizeIn {
+    UsizeIn(r)
+}
+pub fn f64_in(lo: f64, hi: f64) -> F64In {
+    F64In(lo, hi)
+}
+pub fn vec_of<S: Strat>(s: S, len: std::ops::Range<usize>) -> VecOf<S> {
+    VecOf(s, len)
+}
+pub fn pair<A: Strat, B: Strat>(a: A, b: B) -> Tuple2<A, B> {
+    Tuple2(a, b)
+}
+
+impl Strat for U64In {
+    type Value = u64;
+    fn generate(&self, rng: &mut Pcg64) -> u64 {
+        rng.range_u64(self.0.start, self.0.end)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.0.start {
+            out.push(self.0.start);
+            out.push(self.0.start + (*v - self.0.start) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Strat for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        rng.range_u64(self.0.start as u64, self.0.end as u64) as usize
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        U64In(self.0.start as u64..self.0.end as u64)
+            .shrink(&(*v as u64))
+            .into_iter()
+            .map(|x| x as usize)
+            .collect()
+    }
+}
+
+impl Strat for F64In {
+    type Value = f64;
+    fn generate(&self, rng: &mut Pcg64) -> f64 {
+        rng.range_f64(self.0, self.1)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if *v != self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2.0);
+        }
+        out
+    }
+}
+
+impl<S: Strat> Strat for VecOf<S> {
+    type Value = Vec<S::Value>;
+    fn generate(&self, rng: &mut Pcg64) -> Vec<S::Value> {
+        let n = rng.range_u64(self.1.start as u64, self.1.end as u64) as usize;
+        (0..n).map(|_| self.0.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<S::Value>) -> Vec<Vec<S::Value>> {
+        let mut out = Vec::new();
+        // Structural shrinks: halve, drop one element.
+        if v.len() > self.1.start {
+            let half = (v.len() / 2).max(self.1.start);
+            out.push(v[..half].to_vec());
+            for i in 0..v.len().min(8) {
+                let mut c = v.clone();
+                c.remove(i);
+                if c.len() >= self.1.start {
+                    out.push(c);
+                }
+            }
+        }
+        // Element-wise shrinks on the first few elements.
+        for i in 0..v.len().min(4) {
+            for cand in self.0.shrink(&v[i]) {
+                let mut c = v.clone();
+                c[i] = cand;
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Strat, B: Strat> Strat for Tuple2<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        check("u64 in range", u64_in(3..10), |v| (3..10).contains(v));
+        check("vec lens", vec_of(f64_in(0.0, 1.0), 0..5), |v| v.len() < 5);
+        check("pairs", pair(usize_in(0..4), f64_in(-1.0, 1.0)), |(a, b)| {
+            *a < 4 && (-1.0..1.0).contains(b)
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let res = std::panic::catch_unwind(|| {
+            check("always ge 5 (false)", u64_in(0..100), |v| *v < 5 || *v >= 100)
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        // Minimal counterexample is 5.
+        assert!(msg.contains("counterexample: 5"), "{msg}");
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let res = std::panic::catch_unwind(|| {
+            check("short vecs only (false)", vec_of(u64_in(0..3), 0..50), |v| v.len() < 3)
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("counterexample: [0, 0, 0]"), "{msg}");
+    }
+}

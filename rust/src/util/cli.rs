@@ -1,0 +1,146 @@
+//! Tiny command-line parser for the `caravan` binary, examples and benches.
+//!
+//! Grammar: `prog [subcommand] [--key value | --flag] [positional…]`.
+//! Typed getters with defaults keep call sites short:
+//!
+//! ```
+//! use caravan::util::cli::Args;
+//! let a = Args::parse_from(vec!["des".into(), "--np".into(), "1024".into()]);
+//! assert_eq!(a.subcommand(), Some("des"));
+//! assert_eq!(a.get_usize("np", 256), 1024);
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    sub: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse_from(argv: Vec<String>) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        // First non-flag token is the subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.sub = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare flag.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.sub.as_deref()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opts.get(key).map(String::as_str).unwrap_or(default)
+    }
+
+    pub fn get_opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.opt_parse(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.opt_parse(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt_parse(key).unwrap_or(default)
+    }
+
+    fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.opts.get(key).map(|v| {
+            v.parse().unwrap_or_else(|_| panic!("--{key}: cannot parse {v:?}"))
+        })
+    }
+
+    /// Comma-separated list, e.g. `--np 256,1024,4096`.
+    pub fn get_list_usize(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.opts.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|t| t.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad item {t:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse_from(sv(&["des", "--np", "1024", "--tc", "2", "--verbose"]));
+        assert_eq!(a.subcommand(), Some("des"));
+        assert_eq!(a.get_usize("np", 1), 1024);
+        assert_eq!(a.get_str("tc", "1"), "2");
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = Args::parse_from(sv(&["--rate=0.5", "--name=x"]));
+        assert_eq!(a.subcommand(), None);
+        assert_eq!(a.get_f64("rate", 0.0), 0.5);
+        assert_eq!(a.get_str("name", ""), "x");
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn positional_and_lists() {
+        let a = Args::parse_from(sv(&["run", "cmd.sh", "--np", "1,2,3"]));
+        assert_eq!(a.positional(), &["cmd.sh".to_string()]);
+        assert_eq!(a.get_list_usize("np", &[]), vec![1, 2, 3]);
+        assert_eq!(a.get_list_usize("other", &[9]), vec![9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn bad_numeric_panics() {
+        let a = Args::parse_from(sv(&["--np", "abc"]));
+        a.get_usize("np", 0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Self-contained infrastructure: deterministic RNG, statistics, minimal
+//! JSON, CLI parsing and logging.
+//!
+//! The reproduction environment is fully offline (only the `xla` crate's
+//! dependency closure is vendored), so the usual ecosystem crates
+//! (`rand`, `serde`, `clap`, `criterion`, `proptest`) are re-implemented
+//! here at the scale this project needs. Everything is deterministic and
+//! seedable; nothing here touches global state except [`log`].
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod cli;
+pub mod log;
+
+pub use rng::Pcg64;
+pub use stats::{mean, variance, pearson, Histogram, Summary};

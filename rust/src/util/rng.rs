@@ -1,0 +1,234 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! [`Pcg64`] is the PCG-XSL-RR 128/64 generator (O'Neill 2014) — the same
+//! algorithm as `rand_pcg::Pcg64`. It is seeded through SplitMix64 so that
+//! small human-chosen seeds (0, 1, 2…) produce well-mixed streams, and it
+//! supports cheap independent sub-streams via [`Pcg64::split`], which the
+//! scheduler uses to give every simulated process its own generator.
+
+/// SplitMix64 step — used for seed expansion and cheap stateless hashing.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-low + random-rotate
+/// output. Period 2^128 per stream; distinct odd increments give independent
+/// streams.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128, // odd
+}
+
+impl Pcg64 {
+    /// Create a generator from a small seed. Two generators with different
+    /// seeds are statistically independent (seed is expanded via SplitMix64
+    /// into both the state and the stream-selector increment).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let a = splitmix64(&mut sm);
+        let b = splitmix64(&mut sm);
+        let c = splitmix64(&mut sm);
+        let d = splitmix64(&mut sm);
+        let state = ((a as u128) << 64) | b as u128;
+        let inc = (((c as u128) << 64) | d as u128) | 1;
+        let mut rng = Self { state: state.wrapping_add(inc), inc };
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent child generator (used to hand one RNG to each
+    /// simulated process / task without sharing state across threads).
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        let mut s = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        let a = splitmix64(&mut s);
+        Pcg64::new(a)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's unbiased method.
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal via Box–Muller (polar form avoided to stay branch-light).
+    pub fn normal(&mut self) -> f64 {
+        // Draw u in (0,1] to avoid ln(0).
+        let u = 1.0 - self.uniform();
+        let v = self.uniform();
+        (-2.0 * u.ln()).sqrt() * (std::f64::consts::TAU * v).cos()
+    }
+
+    /// Bounded power-law sample with density ∝ t^exponent on
+    /// `[t_min, t_max]` (exponent < -1 for the paper's heavy tail of −2).
+    /// Inverse-CDF sampling.
+    pub fn power_law(&mut self, t_min: f64, t_max: f64, exponent: f64) -> f64 {
+        debug_assert!(t_min > 0.0 && t_max > t_min);
+        let u = self.uniform();
+        if (exponent + 1.0).abs() < 1e-12 {
+            // ∝ 1/t : log-uniform
+            return t_min * (t_max / t_min).powf(u);
+        }
+        let a = exponent + 1.0;
+        let lo = t_min.powf(a);
+        let hi = t_max.powf(a);
+        (lo + u * (hi - lo)).powf(1.0 / a)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose one element uniformly.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        let mut c = Pcg64::new(43);
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..16).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_and_roughly_uniform() {
+        let mut rng = Pcg64::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let m = sum / n as f64;
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+    }
+
+    #[test]
+    fn below_is_unbiased_over_small_range() {
+        let mut rng = Pcg64::new(3);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[rng.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            let expect = n as f64 / 7.0;
+            assert!((c as f64 - expect).abs() < 5.0 * expect.sqrt(), "count {c}");
+        }
+    }
+
+    #[test]
+    fn power_law_bounds_and_heavy_tail() {
+        let mut rng = Pcg64::new(11);
+        let (lo, hi, ex) = (5.0, 100.0, -2.0);
+        let n = 200_000;
+        let mut below10 = 0usize;
+        for _ in 0..n {
+            let t = rng.power_law(lo, hi, ex);
+            assert!(t >= lo && t <= hi);
+            if t < 10.0 {
+                below10 += 1;
+            }
+        }
+        // For exponent -2 on [5,100]: P(t<10) = (1/5-1/10)/(1/5-1/100) ≈ 0.526.
+        let frac = below10 as f64 / n as f64;
+        assert!((frac - 0.526).abs() < 0.01, "frac {frac}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(5);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut root = Pcg64::new(1);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+}

@@ -1,0 +1,184 @@
+//! Synthetic workloads of the paper's §3 performance evaluation.
+//!
+//! * **TC1** — N tasks up front, durations ~ U[20, 30] s.
+//! * **TC2** — N tasks up front, durations ~ power-law exponent −2 on
+//!   [5, 100] s (heavy tail: most tasks < 10 s, a few near 100 s).
+//! * **TC3** — N/4 tasks up front; each completion spawns one more until
+//!   N tasks total (the dynamic pattern of optimization workloads).
+//!
+//! Each is a [`SearchEngine`] submitting [`Payload::Sleep`] tasks, so the
+//! same object drives both the threaded runtime and the DES.
+
+use crate::tasklib::{Payload, SearchEngine, TaskResult, TaskSink};
+use crate::util::rng::Pcg64;
+
+/// Which test case of §3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TestCase {
+    TC1,
+    TC2,
+    TC3,
+}
+
+impl TestCase {
+    pub fn parse(s: &str) -> Option<TestCase> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "1" | "tc1" => Some(TestCase::TC1),
+            "2" | "tc2" => Some(TestCase::TC2),
+            "3" | "tc3" => Some(TestCase::TC3),
+            _ => None,
+        }
+    }
+}
+
+/// Duration distributions used by the test cases.
+#[derive(Clone, Copy, Debug)]
+pub enum DurationDist {
+    /// U[lo, hi].
+    Uniform { lo: f64, hi: f64 },
+    /// Power law with the given exponent on [lo, hi].
+    PowerLaw { lo: f64, hi: f64, exponent: f64 },
+}
+
+impl DurationDist {
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        match *self {
+            DurationDist::Uniform { lo, hi } => rng.range_f64(lo, hi),
+            DurationDist::PowerLaw { lo, hi, exponent } => rng.power_law(lo, hi, exponent),
+        }
+    }
+
+    /// The paper's distributions.
+    pub fn tc1() -> Self {
+        DurationDist::Uniform { lo: 20.0, hi: 30.0 }
+    }
+
+    pub fn tc23() -> Self {
+        DurationDist::PowerLaw { lo: 5.0, hi: 100.0, exponent: -2.0 }
+    }
+}
+
+/// The §3 workload engine: generates `n_total` sleep tasks according to the
+/// chosen test case.
+pub struct TestCaseEngine {
+    case: TestCase,
+    n_total: usize,
+    created: usize,
+    rng: Pcg64,
+}
+
+impl TestCaseEngine {
+    pub fn new(case: TestCase, n_total: usize, seed: u64) -> Self {
+        Self { case, n_total, created: 0, rng: Pcg64::new(seed) }
+    }
+
+    fn dist(&self) -> DurationDist {
+        match self.case {
+            TestCase::TC1 => DurationDist::tc1(),
+            TestCase::TC2 | TestCase::TC3 => DurationDist::tc23(),
+        }
+    }
+
+    fn submit_one(&mut self, sink: &mut dyn TaskSink) {
+        let d = self.dist().sample(&mut self.rng);
+        sink.submit(Payload::Sleep { seconds: d });
+        self.created += 1;
+    }
+
+    pub fn created(&self) -> usize {
+        self.created
+    }
+}
+
+impl SearchEngine for TestCaseEngine {
+    fn start(&mut self, sink: &mut dyn TaskSink) {
+        let up_front = match self.case {
+            TestCase::TC1 | TestCase::TC2 => self.n_total,
+            TestCase::TC3 => (self.n_total / 4).max(1).min(self.n_total),
+        };
+        for _ in 0..up_front {
+            self.submit_one(sink);
+        }
+    }
+
+    fn on_done(&mut self, _r: &TaskResult, sink: &mut dyn TaskSink) {
+        if self.case == TestCase::TC3 && self.created < self.n_total {
+            self.submit_one(sink);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasklib::VecSink;
+
+    fn durations(sink: &VecSink) -> Vec<f64> {
+        sink.submitted
+            .iter()
+            .map(|t| match t.payload {
+                Payload::Sleep { seconds } => seconds,
+                _ => panic!(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tc1_submits_all_with_uniform_durations() {
+        let mut e = TestCaseEngine::new(TestCase::TC1, 100, 1);
+        let mut sink = VecSink::new();
+        e.start(&mut sink);
+        let ds = durations(&sink);
+        assert_eq!(ds.len(), 100);
+        assert!(ds.iter().all(|&d| (20.0..30.0).contains(&d)));
+    }
+
+    #[test]
+    fn tc2_has_heavy_tail_within_bounds() {
+        let mut e = TestCaseEngine::new(TestCase::TC2, 2000, 2);
+        let mut sink = VecSink::new();
+        e.start(&mut sink);
+        let ds = durations(&sink);
+        assert_eq!(ds.len(), 2000);
+        assert!(ds.iter().all(|&d| (5.0..=100.0).contains(&d)));
+        let short = ds.iter().filter(|&&d| d < 10.0).count();
+        // ~52.6% expected below 10 s for exponent −2 on [5,100].
+        assert!(short > 900 && short < 1200, "short={short}");
+    }
+
+    #[test]
+    fn tc3_starts_quarter_then_chains_to_total() {
+        let mut e = TestCaseEngine::new(TestCase::TC3, 40, 3);
+        let mut sink = VecSink::new();
+        e.start(&mut sink);
+        assert_eq!(sink.submitted.len(), 10);
+        // Simulate completions.
+        let mut done = 0;
+        while done < 40 {
+            let spec = sink.submitted[done].clone();
+            let r = TaskResult {
+                id: spec.id,
+                consumer: 0,
+                results: vec![],
+                begin: 0.0,
+                finish: 1.0,
+                rc: 0,
+            };
+            e.on_done(&r, &mut sink);
+            done += 1;
+        }
+        assert_eq!(sink.submitted.len(), 40);
+        assert_eq!(e.created(), 40);
+        // Further completions create nothing.
+        let r = TaskResult { id: 0, consumer: 0, results: vec![], begin: 0.0, finish: 1.0, rc: 0 };
+        e.on_done(&r, &mut sink);
+        assert_eq!(sink.submitted.len(), 40);
+    }
+
+    #[test]
+    fn parse_test_case() {
+        assert_eq!(TestCase::parse("tc1"), Some(TestCase::TC1));
+        assert_eq!(TestCase::parse("2"), Some(TestCase::TC2));
+        assert_eq!(TestCase::parse("x"), None);
+    }
+}

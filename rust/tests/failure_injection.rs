@@ -1,0 +1,252 @@
+//! Failure-injection and stress tests across the scheduler stack:
+//! failing simulators, pathological workloads, degenerate topologies, and
+//! larger property sweeps than the unit-level ones.
+
+use std::sync::Arc;
+
+use caravan::config::SchedulerConfig;
+use caravan::des::{run_des, ConstResults, DesConfig, SleepDurations};
+use caravan::engine::{GridEngine, McmcConfig, McmcEngine, MoeaConfig, Nsga2Engine, Session};
+use caravan::extproc::CommandExecutor;
+use caravan::scheduler::{run_scheduler, Executor, SleepExecutor};
+use caravan::tasklib::{Payload, SearchEngine, TaskResult, TaskSink, TaskSpec};
+use caravan::workload::{TestCase, TestCaseEngine};
+
+fn quick(np: usize) -> SchedulerConfig {
+    SchedulerConfig {
+        np,
+        consumers_per_buffer: 4,
+        flush_interval_ms: 2,
+        time_scale: 0.001,
+        ..Default::default()
+    }
+}
+
+struct NCommands {
+    n: usize,
+    cmd: String,
+}
+
+impl SearchEngine for NCommands {
+    fn start(&mut self, sink: &mut dyn TaskSink) {
+        for _ in 0..self.n {
+            sink.submit(Payload::Command { cmdline: self.cmd.clone() });
+        }
+    }
+    fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn TaskSink) {}
+}
+
+#[test]
+fn failing_simulator_propagates_rc_without_wedging() {
+    // A simulator that always exits 2: the scheduler must complete the
+    // workload and report rc=2 on every result, not hang or crash.
+    let work = std::env::temp_dir().join(format!("caravan_fail_{}", std::process::id()));
+    let report = run_scheduler(
+        &quick(4),
+        Box::new(NCommands { n: 12, cmd: "sh -c 'exit 2'".into() }),
+        Arc::new(CommandExecutor::new(&work)),
+    );
+    assert_eq!(report.results.len(), 12);
+    assert!(report.results.iter().all(|r| r.rc == 2 && r.results.is_empty()));
+    let _ = std::fs::remove_dir_all(&work);
+}
+
+#[test]
+fn mixed_success_failure_and_missing_results_file() {
+    // Odd tasks fail, even tasks succeed but write no _results.txt —
+    // both are legal per §2.2 (the file is optional).
+    struct Mixed(usize);
+    impl SearchEngine for Mixed {
+        fn start(&mut self, sink: &mut dyn TaskSink) {
+            for i in 0..self.0 {
+                let cmd = if i % 2 == 0 { "sh -c 'true'" } else { "sh -c 'exit 1'" };
+                sink.submit(Payload::Command { cmdline: cmd.into() });
+            }
+        }
+        fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn TaskSink) {}
+    }
+    let work = std::env::temp_dir().join(format!("caravan_mixed_{}", std::process::id()));
+    let report = run_scheduler(
+        &quick(3),
+        Box::new(Mixed(10)),
+        Arc::new(CommandExecutor::new(&work)),
+    );
+    let ok = report.results.iter().filter(|r| r.ok()).count();
+    assert_eq!(ok, 5);
+    assert!(report.results.iter().all(|r| r.results.is_empty()));
+    let _ = std::fs::remove_dir_all(&work);
+}
+
+#[test]
+fn moea_survives_failed_evaluations() {
+    // An executor that fails 20% of evaluations (empty results, rc=1):
+    // the parameter-set averaging must skip them and the optimizer must
+    // still finish all generations.
+    struct Flaky;
+    impl Executor for Flaky {
+        fn run(&self, task: &TaskSpec, _c: usize) -> (Vec<f64>, i32) {
+            match &task.payload {
+                Payload::Eval { input, seed } => {
+                    if seed % 5 == 0 {
+                        return (vec![], 1); // injected failure
+                    }
+                    let f1 = input.iter().sum::<f64>() / input.len() as f64;
+                    let f2 = input.iter().map(|x| (1.0 - x) * (1.0 - x)).sum::<f64>()
+                        / input.len() as f64;
+                    (vec![f1, f2], 0)
+                }
+                _ => (vec![], 1),
+            }
+        }
+    }
+    let mut cfg = MoeaConfig::small(vec![(0.0, 1.0); 3]);
+    cfg.n_runs = 3; // at least one seed per pset survives
+    cfg.generations = 3;
+    let (engine, outcome) = Nsga2Engine::new(cfg);
+    let report = run_scheduler(&quick(4), Box::new(engine), Arc::new(Flaky));
+    assert!(!report.results.is_empty());
+    let out = outcome.lock().unwrap();
+    assert_eq!(out.generations_done, 3);
+    // Archived objectives are finite despite injected failures.
+    assert!(out
+        .archive
+        .iter()
+        .all(|i| i.objectives.len() == 2 && i.objectives.iter().all(|o| o.is_finite())));
+}
+
+#[test]
+fn zero_duration_storm_des() {
+    // 100k zero-length tasks: pure overhead — DES must terminate and
+    // conserve all tasks.
+    struct Zeros(usize);
+    impl SearchEngine for Zeros {
+        fn start(&mut self, sink: &mut dyn TaskSink) {
+            for _ in 0..self.0 {
+                sink.submit(Payload::Sleep { seconds: 0.0 });
+            }
+        }
+        fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn TaskSink) {}
+    }
+    let r = run_des(&DesConfig::new(64), Box::new(Zeros(100_000)), Box::new(SleepDurations));
+    assert_eq!(r.results.len(), 100_000);
+    assert_eq!(r.filling.overlap_violations(), 0);
+}
+
+#[test]
+fn single_consumer_single_buffer_degenerate_topology() {
+    let mut cfg = DesConfig::new(1);
+    cfg.sched.consumers_per_buffer = 1;
+    let r = run_des(
+        &cfg,
+        Box::new(TestCaseEngine::new(TestCase::TC3, 50, 3)),
+        Box::new(SleepDurations),
+    );
+    assert_eq!(r.results.len(), 50);
+    // Serial: filling is essentially total-work/makespan ≈ 1 − overheads.
+    assert!(r.rate(1) > 0.9, "{}", r.rate(1));
+}
+
+#[test]
+fn np_not_divisible_by_buffer_ratio() {
+    // 1000 consumers / 384 per buffer = 3 buffers of 334/333/333.
+    let mut cfg = DesConfig::new(1000);
+    cfg.sched.consumers_per_buffer = 384;
+    let r = run_des(
+        &cfg,
+        Box::new(TestCaseEngine::new(TestCase::TC2, 20_000, 5)),
+        Box::new(SleepDurations),
+    );
+    assert_eq!(r.results.len(), 20_000);
+    // Heavy tail with only 20 tasks/consumer leaves a visible end tail.
+    assert!(r.rate(1000) > 0.75, "{}", r.rate(1000));
+    let ranks: std::collections::HashSet<usize> =
+        r.results.iter().map(|x| x.consumer).collect();
+    assert_eq!(ranks.len(), 1000, "all consumers participated");
+}
+
+#[test]
+fn grid_engine_on_threaded_scheduler_with_eval_executor() {
+    struct Quad;
+    impl Executor for Quad {
+        fn run(&self, task: &TaskSpec, _c: usize) -> (Vec<f64>, i32) {
+            match &task.payload {
+                Payload::Eval { input, .. } => {
+                    (vec![input.iter().map(|x| x * x).sum::<f64>()], 0)
+                }
+                _ => (vec![], 1),
+            }
+        }
+    }
+    let (engine, outcome) = GridEngine::new(vec![vec![0.0, 1.0, 2.0], vec![0.0, 1.0]], 0);
+    let report = run_scheduler(&quick(2), Box::new(engine), Arc::new(Quad));
+    assert_eq!(report.results.len(), 6);
+    let got = outcome.lock().unwrap();
+    for (p, r) in got.iter() {
+        let expect: f64 = p.iter().map(|x| x * x).sum();
+        assert!((r[0] - expect).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn mcmc_handles_constant_objective() {
+    // Flat target density: every proposal accepted; chain must still
+    // terminate with the right length.
+    struct Flat;
+    impl caravan::des::DurationModel for Flat {
+        fn duration(&mut self, _t: &TaskSpec) -> f64 {
+            1.0
+        }
+        fn results(&mut self, _t: &TaskSpec) -> Vec<f64> {
+            vec![1.0]
+        }
+    }
+    let mut cfg = McmcConfig::new(vec![(0.0, 1.0); 2]);
+    cfg.walkers = 2;
+    cfg.steps = 30;
+    let (engine, outcome) = McmcEngine::new(cfg);
+    let r = run_des(&DesConfig::new(2), Box::new(engine), Box::new(Flat));
+    assert_eq!(r.results.len(), 2 * 31);
+    let out = outcome.lock().unwrap();
+    assert!((out.acceptance_rate() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn session_shutdown_with_work_in_flight_completes_it() {
+    let s = Session::start(quick(2), Arc::new(SleepExecutor { time_scale: 0.001 }));
+    let tasks: Vec<_> = (0..6).map(|_| s.create_task(Payload::Sleep { seconds: 5.0 })).collect();
+    // Shut down immediately: in-flight tasks must finish first.
+    let report = s.shutdown();
+    assert_eq!(report.results.len(), 6);
+    let _ = tasks;
+}
+
+#[test]
+fn des_conserves_tasks_under_random_topologies_property() {
+    use caravan::testutil::{check, pair, usize_in};
+    check(
+        "DES conserves tasks over random (np, ratio) topologies",
+        pair(usize_in(1..40), usize_in(1..10)),
+        |&(np, ratio)| {
+            let mut cfg = DesConfig::new(np);
+            cfg.sched.consumers_per_buffer = ratio;
+            let n = np * 5;
+            let r = run_des(
+                &cfg,
+                Box::new(TestCaseEngine::new(TestCase::TC3, n, np as u64)),
+                Box::new(SleepDurations),
+            );
+            r.results.len() == n && r.filling.overlap_violations() == 0
+        },
+    );
+}
+
+#[test]
+fn eval_results_deterministic_under_retry() {
+    // ConstResults must be a pure function of (input, seed) so engines can
+    // safely resubmit failed tasks.
+    let mut m1 = ConstResults::new(1.0, 2.0, 3, 0);
+    let mut m2 = ConstResults::new(1.0, 2.0, 3, 99); // different model seed
+    use caravan::des::DurationModel;
+    let t = TaskSpec::new(0, Payload::Eval { input: vec![0.25, 0.75], seed: 42 });
+    assert_eq!(m1.results(&t), m2.results(&t));
+}

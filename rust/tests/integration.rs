@@ -1,0 +1,160 @@
+//! Cross-layer integration tests.
+//!
+//! The heart of the three-layer validation: the AOT-compiled JAX/Pallas
+//! model (L1+L2, loaded via PJRT) must agree with the pure-Rust reference
+//! simulator (the canonical semantics) on real scenarios, and the whole
+//! stack must run end-to-end through the scheduler.
+//!
+//! Requires `make artifacts` (the `test` target guarantees ordering).
+
+use std::sync::Arc;
+
+use caravan::config::SchedulerConfig;
+use caravan::engine::{MoeaConfig, Nsga2Engine};
+use caravan::evac::{
+    build_scenario, init_agents, EvacEvaluator, PlanCodec, RustSimBackend, ScenarioParams,
+    SimBackend,
+};
+use caravan::runtime::{ArtifactMeta, PjrtEvacModel, PjrtServer};
+use caravan::scheduler::run_scheduler;
+use caravan::util::rng::Pcg64;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("meta.json").exists()
+}
+
+macro_rules! need_artifacts {
+    () => {
+        if !have_artifacts() {
+            panic!("artifacts/ missing — run `make artifacts` first");
+        }
+    };
+}
+
+#[test]
+fn meta_matches_rust_scenario_shapes() {
+    need_artifacts!();
+    let meta = ArtifactMeta::load(artifacts_dir()).unwrap();
+    let sc = build_scenario(&ScenarioParams::tiny(), 1);
+    let v = meta.variant("tiny").unwrap();
+    assert_eq!(v.a, sc.n_agents);
+    assert_eq!(v.l, sc.padded_links());
+    assert_eq!(v.n, sc.net.n_nodes());
+    assert_eq!(v.s, sc.shelters.len());
+    assert_eq!(v.t, sc.params.max_steps);
+    // Physics constants must be in lock-step with SimParams::default().
+    assert_eq!(meta.physics.dt, sc.params.dt);
+    assert_eq!(meta.physics.v_free, sc.params.v_free);
+    assert_eq!(meta.physics.rho_jam, sc.params.rho_jam);
+}
+
+#[test]
+fn pjrt_model_agrees_with_rust_reference() {
+    need_artifacts!();
+    let sc = Arc::new(build_scenario(&ScenarioParams::tiny(), 1));
+    let arrays = sc.sim_arrays();
+    let model = PjrtEvacModel::load(artifacts_dir(), "tiny").unwrap();
+    let rust = RustSimBackend::for_scenario(&sc);
+    let codec = PlanCodec::for_scenario(&sc);
+    let mut rng = Pcg64::new(77);
+
+    for trial in 0..5u64 {
+        let genome: Vec<f64> =
+            codec.bounds().iter().map(|&(lo, hi)| rng.range_f64(lo, hi)).collect();
+        let plan = codec.decode(&genome);
+        let init = init_agents(&sc, &plan, trial);
+        let out_pjrt = model.run(&arrays, &init).unwrap();
+        let out_rust = rust.run(init);
+        // Discrete outcomes must agree: the two implementations execute
+        // the same canonical update in f32. Allow a 1-step / 1-agent slack
+        // for FMA-borderline transitions.
+        assert!(
+            (out_pjrt.remaining as i64 - out_rust.remaining as i64).abs() <= 1,
+            "trial {trial}: remaining {} vs {}",
+            out_pjrt.remaining,
+            out_rust.remaining
+        );
+        let dt = sc.params.dt as f64;
+        assert!(
+            (out_pjrt.evac_time - out_rust.evac_time).abs() <= 2.0 * dt + 1e-3,
+            "trial {trial}: f1 {} vs {}",
+            out_pjrt.evac_time,
+            out_rust.evac_time
+        );
+        // Arrival curves track each other closely.
+        let max_diff = out_pjrt
+            .arrivals
+            .iter()
+            .zip(&out_rust.arrivals)
+            .map(|(&a, &b)| (a as i64 - b as i64).unsigned_abs())
+            .max()
+            .unwrap();
+        assert!(max_diff <= 2, "trial {trial}: curve diverges by {max_diff}");
+    }
+}
+
+#[test]
+fn evaluator_through_pjrt_backend() {
+    need_artifacts!();
+    let sc = Arc::new(build_scenario(&ScenarioParams::tiny(), 1));
+    let arrays = sc.sim_arrays();
+    let backend = Arc::new(PjrtServer::start(artifacts_dir(), "tiny", arrays).unwrap());
+    let ev = EvacEvaluator::new(Arc::clone(&sc), backend);
+    let genome: Vec<f64> = ev.bounds().iter().map(|&(lo, hi)| 0.5 * (lo + hi)).collect();
+    let [f1, f2, f3] = ev.evaluate(&genome, 0);
+    assert!(f1.is_finite() && f1 > 0.0);
+    assert!(f2 >= 0.0 && f3 >= 0.0);
+}
+
+#[test]
+fn end_to_end_nsga2_over_pjrt_on_scheduler() {
+    // The full stack: NSGA-II engine → hierarchical scheduler (threads) →
+    // EvacEvaluator → PJRT-compiled JAX/Pallas model.
+    need_artifacts!();
+    let sc = Arc::new(build_scenario(&ScenarioParams::tiny(), 1));
+    let arrays = sc.sim_arrays();
+    let backend = Arc::new(PjrtServer::start(artifacts_dir(), "tiny", arrays).unwrap());
+    let ev = Arc::new(EvacEvaluator::new(Arc::clone(&sc), backend));
+
+    let mut moea = MoeaConfig::small(ev.bounds());
+    moea.p_ini = 8;
+    moea.p_n = 4;
+    moea.p_archive = 8;
+    moea.generations = 2;
+    moea.n_runs = 1;
+    let (engine, outcome) = Nsga2Engine::new(moea);
+    let cfg = SchedulerConfig { np: 2, consumers_per_buffer: 2, flush_interval_ms: 2, ..Default::default() };
+    let report = run_scheduler(&cfg, Box::new(engine), ev);
+    assert!(!report.results.is_empty());
+    let out = outcome.lock().unwrap();
+    assert_eq!(out.generations_done, 2);
+    assert!(!out.archive.is_empty());
+    for ind in &out.archive {
+        assert_eq!(ind.objectives.len(), 3);
+        assert!(ind.objectives.iter().all(|o| o.is_finite()));
+    }
+}
+
+#[test]
+fn rust_and_pjrt_backends_rank_plans_identically() {
+    // The optimizer only needs consistent *ordering*: check that the two
+    // backends agree on which of two contrasting plans evacuates faster.
+    need_artifacts!();
+    let sc = Arc::new(build_scenario(&ScenarioParams::tiny(), 1));
+    let arrays = sc.sim_arrays();
+    let pjrt = Arc::new(PjrtServer::start(artifacts_dir(), "tiny", arrays).unwrap());
+    let rust = Arc::new(RustSimBackend::for_scenario(&sc));
+    let ev_pjrt = EvacEvaluator::new(Arc::clone(&sc), pjrt);
+    let ev_rust = EvacEvaluator::new(Arc::clone(&sc), rust);
+    let mut rng = Pcg64::new(3);
+    let bounds = ev_pjrt.bounds();
+    let g1: Vec<f64> = bounds.iter().map(|&(lo, hi)| rng.range_f64(lo, hi)).collect();
+    let g2: Vec<f64> = bounds.iter().map(|&(lo, hi)| rng.range_f64(lo, hi)).collect();
+    let (a1, a2) = (ev_pjrt.evaluate(&g1, 0)[0], ev_pjrt.evaluate(&g2, 0)[0]);
+    let (b1, b2) = (ev_rust.evaluate(&g1, 0)[0], ev_rust.evaluate(&g2, 0)[0]);
+    assert_eq!(a1 < a2, b1 < b2, "backends disagree on ranking: {a1},{a2} vs {b1},{b2}");
+}
