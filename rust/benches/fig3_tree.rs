@@ -1,0 +1,86 @@
+//! **Fig. 3 extension** — job filling rate of the N-level buffer tree at
+//! scales the flat two-level layout cannot sustain, via the virtual-time
+//! DES of the scheduler protocol (same state machines as the real runtime).
+//!
+//! Sweeps tree depth ∈ {1, 2, 3} at 16 384 simulated consumers (the
+//! paper's K-computer ceiling) and runs a depth-3 tree at 10⁵ consumers,
+//! reporting the per-level filling rate (mean/min subtree rate) and the
+//! producer's message load. The claim under test: stacking relay levels
+//! bounds rank 0's fan-in, so the filling rate holds as N_p grows, and
+//! sibling work stealing tightens the min-subtree rate under the
+//! heavy-tailed TC2 durations.
+
+mod common;
+
+use caravan::des::{run_des, DesConfig, SleepDurations};
+use caravan::workload::{TestCase, TestCaseEngine};
+use common::{banner, timed};
+
+fn run_point(np: usize, depth: usize, steal: bool, tasks_per_proc: usize) {
+    let n = tasks_per_proc * np;
+    let mut cfg = DesConfig::new(np);
+    cfg.sched.depth = depth;
+    cfg.sched.fanout = 8;
+    cfg.sched.steal = steal;
+    let run = timed(|| {
+        run_des(
+            &cfg,
+            Box::new(TestCaseEngine::new(TestCase::TC2, n, 7 + depth as u64)),
+            Box::new(SleepDurations),
+        )
+    });
+    let r = run.value;
+    assert_eq!(r.results.len(), n, "task conservation");
+    assert_eq!(r.filling.overlap_violations(), 0);
+    for s in &r.node_stats {
+        assert!(s.max_queue <= s.credit_bound, "credit bound violated at node {}", s.node);
+        assert!(s.saw_shutdown, "shutdown missed node {}", s.node);
+    }
+    let levels: Vec<String> = r
+        .level_fill
+        .iter()
+        .map(|l| {
+            format!(
+                "L{}×{}: {:.1}/{:.1}%",
+                l.level,
+                l.n_nodes,
+                l.mean_rate * 100.0,
+                l.min_rate * 100.0
+            )
+        })
+        .collect();
+    println!(
+        "{:>7} {:>6} {:>6} {:>9} | {:>7.2}% | {:>9} {:>7} {:>8.2} | {}",
+        np,
+        depth,
+        if steal { "yes" } else { "no" },
+        n,
+        r.rate(np) * 100.0,
+        r.producer_msgs_in + r.producer_msgs_out,
+        r.tasks_stolen(),
+        run.wall_secs,
+        levels.join("  ")
+    );
+}
+
+fn main() {
+    banner(
+        "Fig. 3 extension — filling rate vs buffer-tree depth (DES, TC2)",
+        "per-level fill = mean/min subtree rate; prod-msgs = rank 0 messages in+out",
+    );
+    println!(
+        "{:>7} {:>6} {:>6} {:>9} | {:>8} | {:>9} {:>7} {:>8} | per-level fill",
+        "Np", "depth", "steal", "N", "fill", "prod-msg", "stolen", "bench-s"
+    );
+    // The paper's ceiling: depth sweep at 16 384 consumers, 43 leaf buffers.
+    for depth in 1..=3usize {
+        run_point(16_384, depth, false, 25);
+    }
+    // Stealing tightens the per-leaf minimum under the heavy tail.
+    run_point(16_384, 3, true, 25);
+    // Beyond the paper: 10⁵ consumers only make sense with a deep tree —
+    // rank 0 now talks to ⌈261/8/8⌉ = 5 children instead of 261 buffers.
+    run_point(100_000, 3, true, 20);
+    println!("# claim: depth ≥ 2 holds filling near the flat-layout optimum while");
+    println!("# cutting rank 0 fan-in; stealing lifts the min-subtree rate.");
+}

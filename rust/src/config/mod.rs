@@ -3,15 +3,29 @@
 //! them (e.g. one buffer per 384 consumers).
 
 /// Scheduler topology + flow-control parameters (threaded runtime and DES).
+///
+/// The buffered layer generalizes to an *N-level tree*: `depth = 1` is the
+/// paper's fixed producer → buffer → consumer shape; `depth ≥ 2` inserts
+/// interior relay levels (fan-out `fanout`) between the producer and the
+/// leaf buffers, so rank 0 talks to `⌈num_buffers / fanout^(depth-1)⌉`
+/// children instead of to every buffer.
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
     /// Number of consumer processes N_p.
     pub np: usize,
-    /// Consumers per buffer process. Paper default: 384.
+    /// Consumers per leaf buffer process. Paper default: 384.
     pub consumers_per_buffer: usize,
-    /// A buffer keeps `credit_factor × consumers` tasks on hand.
+    /// Number of buffer levels between the producer and the consumers.
+    /// 1 = the paper's two-party protocol (producer → buffers).
+    pub depth: usize,
+    /// Children per interior buffer node (levels above the leaves).
+    pub fanout: usize,
+    /// Allow starved buffer nodes to steal queued tasks from a sibling
+    /// before escalating demand to their parent.
+    pub steal: bool,
+    /// A buffer keeps `credit_factor × subtree-consumers` tasks on hand.
     pub credit_factor: usize,
-    /// Result-store batch size before a flush to the producer.
+    /// Result-store batch size before a flush to the parent.
     pub flush_every: usize,
     /// Real seconds per virtual second for `Payload::Sleep` executors
     /// (time compression in tests/examples; 1.0 = real time).
@@ -25,6 +39,9 @@ impl Default for SchedulerConfig {
         Self {
             np: 8,
             consumers_per_buffer: 384,
+            depth: 1,
+            fanout: 8,
+            steal: false,
             credit_factor: 2,
             flush_every: 16,
             time_scale: 1.0,
@@ -34,17 +51,177 @@ impl Default for SchedulerConfig {
 }
 
 impl SchedulerConfig {
-    /// Number of buffer processes: ⌈np / consumers_per_buffer⌉.
+    /// Number of leaf buffer processes: ⌈np / consumers_per_buffer⌉.
     pub fn num_buffers(&self) -> usize {
         self.np.div_ceil(self.consumers_per_buffer).max(1)
     }
 
-    /// Consumers assigned to each buffer (balanced; sums to `np`).
+    /// Consumers assigned to each leaf buffer (balanced; sums to `np`).
     pub fn buffer_layout(&self) -> Vec<usize> {
         let nb = self.num_buffers();
         let base = self.np / nb;
         let extra = self.np % nb;
         (0..nb).map(|b| base + usize::from(b < extra)).collect()
+    }
+
+    /// Materialize the buffer tree this configuration describes.
+    pub fn tree(&self) -> TreeTopology {
+        TreeTopology::build(self.np, self.consumers_per_buffer, self.depth, self.fanout)
+    }
+}
+
+/// Role of a node in the buffer tree.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TreeNodeKind {
+    /// Feeds consumer processes directly.
+    Leaf {
+        n_consumers: usize,
+        /// Global rank of this leaf's first consumer (ranks are contiguous).
+        rank_base: usize,
+    },
+    /// Relays tasks downward and batches results upward between its parent
+    /// and its child buffer nodes.
+    Interior { children: Vec<usize> },
+}
+
+/// One node of the buffer tree (the producer itself is not a node here —
+/// it is the implicit parent of [`TreeTopology::roots`]).
+#[derive(Clone, Debug)]
+pub struct TreeNode {
+    /// Parent node id; `None` = direct child of the producer.
+    pub parent: Option<usize>,
+    /// Index of this node within its parent's child list.
+    pub slot: usize,
+    /// Buffer level: 1 = directly under the producer, `depth` = leaf level.
+    pub level: usize,
+    pub kind: TreeNodeKind,
+    /// Consumers in this node's subtree.
+    pub subtree_consumers: usize,
+    /// Siblings sharing this node's parent (excluding the node itself).
+    pub n_siblings: usize,
+}
+
+impl TreeNode {
+    pub fn is_leaf(&self) -> bool {
+        matches!(self.kind, TreeNodeKind::Leaf { .. })
+    }
+}
+
+/// The N-level buffer tree: leaves first (in consumer-rank order), then
+/// interior levels bottom-up. Subtree consumer ranks are contiguous by
+/// construction, so per-level filling rates reduce to rank ranges.
+#[derive(Clone, Debug)]
+pub struct TreeTopology {
+    pub nodes: Vec<TreeNode>,
+    /// Node ids that are direct children of the producer (level 1).
+    pub roots: Vec<usize>,
+    pub depth: usize,
+    pub np: usize,
+}
+
+impl TreeTopology {
+    pub fn build(np: usize, consumers_per_buffer: usize, depth: usize, fanout: usize) -> Self {
+        let depth = depth.max(1);
+        let fanout = fanout.max(1);
+        let cfg = SchedulerConfig {
+            np,
+            consumers_per_buffer,
+            ..SchedulerConfig::default()
+        };
+        let layout = cfg.buffer_layout();
+
+        let mut nodes: Vec<TreeNode> = Vec::new();
+        let mut level_nodes: Vec<usize> = Vec::new();
+        let mut rank_base = 0usize;
+        for &nc in &layout {
+            let id = nodes.len();
+            nodes.push(TreeNode {
+                parent: None,
+                slot: 0,
+                level: depth,
+                kind: TreeNodeKind::Leaf { n_consumers: nc, rank_base },
+                subtree_consumers: nc,
+                n_siblings: 0,
+            });
+            rank_base += nc;
+            level_nodes.push(id);
+        }
+
+        // Interior levels from depth-1 down to 1, grouping `fanout` children
+        // per parent. Children stay contiguous in rank order.
+        for level in (1..depth).rev() {
+            let mut next_level = Vec::new();
+            let groups: Vec<Vec<usize>> =
+                level_nodes.chunks(fanout).map(|c| c.to_vec()).collect();
+            for children in groups {
+                let id = nodes.len();
+                let subtree: usize =
+                    children.iter().map(|&c| nodes[c].subtree_consumers).sum();
+                let n_ch = children.len();
+                for (slot, &c) in children.iter().enumerate() {
+                    nodes[c].parent = Some(id);
+                    nodes[c].slot = slot;
+                    nodes[c].n_siblings = n_ch - 1;
+                }
+                nodes.push(TreeNode {
+                    parent: None,
+                    slot: 0,
+                    level,
+                    kind: TreeNodeKind::Interior { children },
+                    subtree_consumers: subtree,
+                    n_siblings: 0,
+                });
+                next_level.push(id);
+            }
+            level_nodes = next_level;
+        }
+
+        let n_roots = level_nodes.len();
+        for (slot, &r) in level_nodes.iter().enumerate() {
+            nodes[r].slot = slot;
+            nodes[r].n_siblings = n_roots - 1;
+        }
+        TreeTopology { nodes, roots: level_nodes, depth, np }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn leaf_ids(&self) -> Vec<usize> {
+        (0..self.nodes.len()).filter(|&i| self.nodes[i].is_leaf()).collect()
+    }
+
+    /// First consumer rank in `node`'s subtree (ranks are contiguous).
+    pub fn subtree_rank_base(&self, node: usize) -> usize {
+        match &self.nodes[node].kind {
+            TreeNodeKind::Leaf { rank_base, .. } => *rank_base,
+            TreeNodeKind::Interior { children } => self.subtree_rank_base(children[0]),
+        }
+    }
+
+    /// `(first_rank, n_consumers)` of every node at buffer level `level`.
+    pub fn level_groups(&self, level: usize) -> Vec<(usize, usize)> {
+        (0..self.nodes.len())
+            .filter(|&i| self.nodes[i].level == level)
+            .map(|i| (self.subtree_rank_base(i), self.nodes[i].subtree_consumers))
+            .collect()
+    }
+
+    /// Child node ids of `node` (empty for leaves).
+    pub fn children_of(&self, node: usize) -> &[usize] {
+        match &self.nodes[node].kind {
+            TreeNodeKind::Leaf { .. } => &[],
+            TreeNodeKind::Interior { children } => children,
+        }
+    }
+
+    /// Node ids sharing `node`'s parent, in slot order (including `node`).
+    pub fn sibling_group(&self, node: usize) -> Vec<usize> {
+        match self.nodes[node].parent {
+            None => self.roots.clone(),
+            Some(p) => self.children_of(p).to_vec(),
+        }
     }
 }
 
@@ -88,6 +265,7 @@ mod tests {
     fn default_matches_paper_ratio() {
         let c = SchedulerConfig::default();
         assert_eq!(c.consumers_per_buffer, 384);
+        assert_eq!(c.depth, 1);
     }
 
     #[test]
@@ -115,5 +293,87 @@ mod tests {
             let l = c.buffer_layout();
             l.iter().sum::<usize>() == np && !l.iter().any(|&x| x == 0)
         });
+    }
+
+    #[test]
+    fn depth1_tree_is_flat_buffer_layer() {
+        let c = SchedulerConfig { np: 1000, consumers_per_buffer: 384, ..Default::default() };
+        let t = c.tree();
+        assert_eq!(t.depth, 1);
+        assert_eq!(t.roots.len(), 3);
+        assert_eq!(t.nodes.len(), 3);
+        assert!(t.nodes.iter().all(|n| n.is_leaf() && n.parent.is_none() && n.level == 1));
+        assert_eq!(t.nodes.iter().map(|n| n.subtree_consumers).sum::<usize>(), 1000);
+    }
+
+    #[test]
+    fn depth3_tree_reduces_root_fanin() {
+        // 16384 consumers / 384 per leaf = 43 leaves; fanout 8 →
+        // level 2 has 6 relays, level 1 has 1 relay: rank 0 talks to 1 child.
+        let c = SchedulerConfig {
+            np: 16384,
+            consumers_per_buffer: 384,
+            depth: 3,
+            fanout: 8,
+            ..Default::default()
+        };
+        let t = c.tree();
+        assert_eq!(t.leaf_ids().len(), 43);
+        assert_eq!(t.level_groups(3).len(), 43);
+        assert_eq!(t.level_groups(2).len(), 6);
+        assert_eq!(t.level_groups(1).len(), 1);
+        assert_eq!(t.roots.len(), 1);
+        // Every level partitions the full rank space.
+        for level in 1..=3 {
+            let groups = t.level_groups(level);
+            let total: usize = groups.iter().map(|&(_, n)| n).sum();
+            assert_eq!(total, 16384, "level {level}");
+        }
+    }
+
+    #[test]
+    fn tree_subtrees_are_contiguous_and_partition_ranks_property() {
+        use crate::testutil::{check, pair, usize_in};
+        check(
+            "tree partitions consumer ranks at every level",
+            pair(pair(usize_in(1..300), usize_in(1..20)), pair(usize_in(1..5), usize_in(1..6))),
+            |&((np, cpb), (depth, fanout))| {
+                let t = TreeTopology::build(np, cpb, depth, fanout);
+                // Roots exist and subtree totals are consistent.
+                if t.roots.is_empty() {
+                    return false;
+                }
+                let root_total: usize =
+                    t.roots.iter().map(|&r| t.nodes[r].subtree_consumers).sum();
+                if root_total != np {
+                    return false;
+                }
+                for level in 1..=t.depth {
+                    let mut groups = t.level_groups(level);
+                    groups.sort();
+                    let mut next = 0usize;
+                    for (base, n) in groups {
+                        if base != next || n == 0 {
+                            return false;
+                        }
+                        next = base + n;
+                    }
+                    if next != np {
+                        return false;
+                    }
+                }
+                // Parent/slot links are mutually consistent.
+                for (id, n) in t.nodes.iter().enumerate() {
+                    if let Some(p) = n.parent {
+                        if t.children_of(p).get(n.slot) != Some(&id) {
+                            return false;
+                        }
+                    } else if t.roots.get(n.slot) != Some(&id) {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
     }
 }

@@ -351,6 +351,70 @@ mod tests {
     }
 
     #[test]
+    fn front0_is_exactly_the_pareto_optimal_set_property() {
+        use crate::testutil::{check, pair, u64_in, usize_in};
+        check(
+            "front 0 == brute-force non-dominated set",
+            pair(usize_in(1..40), u64_in(0..1000)),
+            |&(n, seed)| {
+                let mut rng = Pcg64::new(seed.wrapping_mul(0x9E37_79B9).wrapping_add(n as u64));
+                // Quantized objectives force ties and exact duplicates —
+                // the cases where a sloppy sort misclassifies.
+                let m = 2 + (seed % 2) as usize;
+                let objs: Vec<Vec<f64>> = (0..n)
+                    .map(|_| (0..m).map(|_| (rng.uniform() * 4.0).floor()).collect())
+                    .collect();
+                let fronts = fast_non_dominated_sort(&objs);
+                let brute: Vec<usize> = (0..n)
+                    .filter(|&i| !(0..n).any(|j| dominates(&objs[j], &objs[i])))
+                    .collect();
+                let mut f0 = fronts[0].clone();
+                f0.sort();
+                f0 == brute
+            },
+        );
+    }
+
+    #[test]
+    fn crowding_boundary_points_get_infinity_property() {
+        use crate::testutil::{check, pair, u64_in, usize_in};
+        check(
+            "per-objective extremes get infinite crowding distance",
+            pair(usize_in(3..30), u64_in(0..500)),
+            |&(n, seed)| {
+                let mut rng = Pcg64::new(seed ^ 0xC0FF_EE00);
+                let objs: Vec<Vec<f64>> =
+                    (0..n).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
+                let front: Vec<usize> = (0..n).collect();
+                let d = crowding_distance(&objs, &front);
+                // Continuous draws are distinct a.s., so each objective has
+                // a unique min and max — both must be infinite.
+                for obj in 0..2 {
+                    let mn = (0..n)
+                        .min_by(|&a, &b| objs[a][obj].partial_cmp(&objs[b][obj]).unwrap())
+                        .unwrap();
+                    let mx = (0..n)
+                        .max_by(|&a, &b| objs[a][obj].partial_cmp(&objs[b][obj]).unwrap())
+                        .unwrap();
+                    if !d[mn].is_infinite() || !d[mx].is_infinite() {
+                        return false;
+                    }
+                }
+                // Distances are nonnegative, and any non-extreme point is
+                // finite (it has neighbours on both sides in every objective).
+                d.iter().all(|&x| x >= 0.0)
+                    && (0..n).all(|k| {
+                        let extreme = (0..2).any(|obj| {
+                            objs.iter().all(|o| o[obj] >= objs[k][obj])
+                                || objs.iter().all(|o| o[obj] <= objs[k][obj])
+                        });
+                        extreme || d[k].is_finite()
+                    })
+            },
+        );
+    }
+
+    #[test]
     fn sort_properties_hold_on_random_populations() {
         use crate::testutil::{check, usize_in};
         check("fronts partition and respect domination", usize_in(1..40), |&n| {

@@ -248,6 +248,34 @@ mod tests {
     }
 
     #[test]
+    fn session_runs_over_deep_buffer_tree() {
+        // The await-style API is runtime-agnostic: the same session works
+        // when the scheduler runs a depth-3 buffer tree with stealing.
+        let s = Session::start(
+            SchedulerConfig {
+                np: 8,
+                consumers_per_buffer: 2, // 4 leaves
+                depth: 3,
+                fanout: 2,
+                steal: true,
+                flush_interval_ms: 2,
+                ..Default::default()
+            },
+            Arc::new(SleepExecutor { time_scale: 0.001 }),
+        );
+        let tasks: Vec<TaskHandle> =
+            (0..12).map(|i| s.create_task(Payload::Sleep { seconds: 1.0 + (i % 4) as f64 })).collect();
+        let results = s.await_all(&tasks);
+        assert_eq!(results.len(), 12);
+        assert!(results.iter().all(|r| r.ok()));
+        let report = s.shutdown();
+        assert_eq!(report.results.len(), 12);
+        // 4 leaves + 2 relays + 1 root relay.
+        assert_eq!(report.node_stats.len(), 7);
+        assert!(report.node_stats.iter().all(|st| st.saw_shutdown));
+    }
+
+    #[test]
     fn callback_chains_ten_more_tasks() {
         // §2.3 callback example: 10 tasks, each spawning one follow-up.
         use std::sync::atomic::{AtomicUsize, Ordering};

@@ -105,30 +105,62 @@ pub fn split_cmdline(s: &str) -> Vec<String> {
     out
 }
 
-/// Parse a `_results.txt` body: floats separated by whitespace, commas or
-/// newlines; `#`-comments ignored.
-pub fn parse_results(body: &str) -> Vec<f64> {
+/// Why a present `_results.txt` could not be used.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ResultsError {
+    /// The file exists but could not be read.
+    Unreadable(String),
+    /// A token was not a floating-point number (1-based line number).
+    BadToken { line: usize, token: String },
+}
+
+impl std::fmt::Display for ResultsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResultsError::Unreadable(e) => write!(f, "{RESULTS_FILE} unreadable: {e}"),
+            ResultsError::BadToken { line, token } => {
+                write!(f, "{RESULTS_FILE}:{line}: not a number: {token:?}")
+            }
+        }
+    }
+}
+
+/// Exit code reported when the simulator exited 0 but wrote a malformed
+/// `_results.txt` (BSD `EX_DATAERR`). A silently-dropped garbage token
+/// would otherwise feed a *shorter* result vector to the search engine,
+/// which misindexes objectives — so malformed output is a task failure.
+pub const RC_BAD_RESULTS: i32 = 65;
+
+/// Strictly parse a `_results.txt` body: floats separated by whitespace,
+/// commas or newlines; `#`-comments ignored; anything else is an error.
+pub fn try_parse_results(body: &str) -> Result<Vec<f64>, ResultsError> {
     let mut out = Vec::new();
-    for line in body.lines() {
+    for (idx, line) in body.lines().enumerate() {
         let line = line.split('#').next().unwrap_or("");
         for tok in line.split(|c: char| c.is_whitespace() || c == ',') {
             if tok.is_empty() {
                 continue;
             }
-            if let Ok(v) = tok.parse::<f64>() {
-                out.push(v);
+            match tok.parse::<f64>() {
+                Ok(v) => out.push(v),
+                Err(_) => {
+                    return Err(ResultsError::BadToken { line: idx + 1, token: tok.to_string() })
+                }
             }
         }
     }
-    out
+    Ok(out)
 }
 
-/// Read and parse `_results.txt` from `dir` (empty if absent — the file is
-/// optional per §2.2).
-pub fn read_results(dir: &Path) -> Vec<f64> {
-    match std::fs::read_to_string(dir.join(RESULTS_FILE)) {
-        Ok(body) => parse_results(&body),
-        Err(_) => Vec::new(),
+/// Read and strictly parse `_results.txt` from `dir`. A missing file is
+/// `Ok(empty)` — the file is optional per §2.2; a present-but-broken file
+/// is an error.
+pub fn read_results_checked(dir: &Path) -> Result<Vec<f64>, ResultsError> {
+    let path = dir.join(RESULTS_FILE);
+    match std::fs::read_to_string(&path) {
+        Ok(body) => try_parse_results(&body),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Vec::new()),
+        Err(e) => Err(ResultsError::Unreadable(e.to_string())),
     }
 }
 
@@ -150,7 +182,15 @@ impl Executor for CommandExecutor {
             Ok(s) => s.code().unwrap_or(-1),
             Err(_) => 127,
         };
-        let results = read_results(&dir);
+        let (results, rc) = match read_results_checked(&dir) {
+            Ok(results) => (results, rc),
+            Err(e) => {
+                crate::warnln!("task {}: {e}", task.id);
+                // The child's own failure code wins; otherwise flag the
+                // malformed results file.
+                (Vec::new(), if rc != 0 { rc } else { RC_BAD_RESULTS })
+            }
+        };
         if self.cleanup {
             let _ = std::fs::remove_dir_all(&dir);
         }
@@ -173,10 +213,90 @@ mod tests {
 
     #[test]
     fn parse_results_formats() {
-        assert_eq!(parse_results("1.5 2.5\n3"), vec![1.5, 2.5, 3.0]);
-        assert_eq!(parse_results("1,2,3"), vec![1.0, 2.0, 3.0]);
-        assert_eq!(parse_results("# comment\n4 # five\n"), vec![4.0]);
-        assert!(parse_results("").is_empty());
+        assert_eq!(try_parse_results("1.5 2.5\n3"), Ok(vec![1.5, 2.5, 3.0]));
+        assert_eq!(try_parse_results("1,2,3"), Ok(vec![1.0, 2.0, 3.0]));
+        assert_eq!(try_parse_results("# comment\n4 # five\n"), Ok(vec![4.0]));
+        assert_eq!(try_parse_results(""), Ok(vec![]));
+    }
+
+    #[test]
+    fn strict_parse_accepts_all_legal_separator_mixes() {
+        // Comma vs whitespace vs newline separators, in any combination.
+        assert_eq!(try_parse_results("1.5 2.5\n3"), Ok(vec![1.5, 2.5, 3.0]));
+        assert_eq!(try_parse_results("1,2,3"), Ok(vec![1.0, 2.0, 3.0]));
+        assert_eq!(try_parse_results("1, 2,\t3 ,4"), Ok(vec![1.0, 2.0, 3.0, 4.0]));
+        assert_eq!(try_parse_results("1e-3,2.5E2 -7"), Ok(vec![1e-3, 250.0, -7.0]));
+        // Trailing newline(s), CRLF, and trailing separators are all fine.
+        assert_eq!(try_parse_results("1 2\n"), Ok(vec![1.0, 2.0]));
+        assert_eq!(try_parse_results("1\r\n2\r\n"), Ok(vec![1.0, 2.0]));
+        assert_eq!(try_parse_results("5,\n"), Ok(vec![5.0]));
+        // Empty and comment-only bodies are legal (the file is optional
+        // anyway, so an empty one must not be an error).
+        assert_eq!(try_parse_results(""), Ok(vec![]));
+        assert_eq!(try_parse_results("\n\n"), Ok(vec![]));
+        assert_eq!(try_parse_results("# nothing\n  # here\n"), Ok(vec![]));
+    }
+
+    #[test]
+    fn strict_parse_rejects_non_numeric_tokens_with_location() {
+        match try_parse_results("1.0\nbanana 2.0") {
+            Err(ResultsError::BadToken { line, token }) => {
+                assert_eq!(line, 2);
+                assert_eq!(token, "banana");
+            }
+            other => panic!("expected BadToken, got {other:?}"),
+        }
+        assert!(try_parse_results("1.0.0").is_err());
+        assert!(try_parse_results("0x10").is_err());
+    }
+
+    #[test]
+    fn read_results_checked_missing_file_is_ok_empty() {
+        let dir = std::env::temp_dir().join(format!("caravan_absent_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        assert_eq!(read_results_checked(&dir), Ok(vec![]));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn executor_flags_malformed_results_as_failure() {
+        // Simulator exits 0 but writes garbage → RC_BAD_RESULTS, no values.
+        let root = std::env::temp_dir().join(format!("caravan_bad_{}", std::process::id()));
+        let exec = CommandExecutor::new(&root);
+        let task = TaskSpec::new(
+            0,
+            Payload::Command { cmdline: "sh -c 'echo 1.5 oops > _results.txt'".into() },
+        );
+        let (results, rc) = exec.run(&task, 0);
+        assert_eq!(rc, RC_BAD_RESULTS);
+        assert!(results.is_empty());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn child_failure_code_wins_over_parse_failure() {
+        let root = std::env::temp_dir().join(format!("caravan_badrc_{}", std::process::id()));
+        let exec = CommandExecutor::new(&root);
+        let task = TaskSpec::new(
+            0,
+            Payload::Command { cmdline: "sh -c 'echo junk > _results.txt; exit 4'".into() },
+        );
+        let (results, rc) = exec.run(&task, 0);
+        assert_eq!(rc, 4);
+        assert!(results.is_empty());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn executor_empty_results_file_is_success() {
+        let root = std::env::temp_dir().join(format!("caravan_empty_{}", std::process::id()));
+        let exec = CommandExecutor::new(&root);
+        let task =
+            TaskSpec::new(0, Payload::Command { cmdline: "sh -c ': > _results.txt'".into() });
+        let (results, rc) = exec.run(&task, 0);
+        assert_eq!(rc, 0);
+        assert!(results.is_empty());
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

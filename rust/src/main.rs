@@ -95,6 +95,9 @@ fn cmd_des(args: &Args) {
     let n = args.get_usize("tasks-per-proc", 100) * np;
     let mut cfg = DesConfig::new(np);
     cfg.direct = args.has_flag("direct");
+    cfg.sched.depth = args.get_usize("depth", 1);
+    cfg.sched.fanout = args.get_usize("fanout", 8);
+    cfg.sched.steal = args.has_flag("steal");
     let t0 = std::time::Instant::now();
     let r = run_des(
         &cfg,
@@ -108,6 +111,19 @@ fn cmd_des(args: &Args) {
         r.events_processed,
         t0.elapsed().as_secs_f64()
     );
+    for lf in &r.level_fill {
+        println!(
+            "  level {}: {} nodes, fill mean {:.2}% min {:.2}%",
+            lf.level,
+            lf.n_nodes,
+            lf.mean_rate * 100.0,
+            lf.min_rate * 100.0
+        );
+    }
+    let stolen = r.tasks_stolen();
+    if stolen > 0 {
+        println!("  tasks stolen sideways: {stolen}");
+    }
 }
 
 fn cmd_evac(args: &Args) {

@@ -12,6 +12,37 @@
 
 use crate::tasklib::TaskResult;
 
+/// Counter snapshot of one buffer-tree node after a run (threaded runtime
+/// or DES). `node` indexes [`crate::config::TreeTopology::nodes`].
+#[derive(Clone, Debug)]
+pub struct NodeStats {
+    pub node: usize,
+    /// Buffer level: 1 = directly under the producer.
+    pub level: usize,
+    pub subtree_consumers: usize,
+    /// `credit_factor × subtree_consumers` — the queue's allowed maximum.
+    pub credit_bound: usize,
+    /// Largest local queue observed; the protocol guarantees
+    /// `max_queue ≤ credit_bound`.
+    pub max_queue: usize,
+    pub msgs_in: u64,
+    pub msgs_out: u64,
+    pub steals_attempted: u64,
+    pub steals_received: u64,
+    pub steals_given: u64,
+    /// Whether the shutdown broadcast reached this node.
+    pub saw_shutdown: bool,
+}
+
+/// Filling-rate summary of one buffer level (see [`FillingRate::level_fill`]).
+#[derive(Clone, Copy, Debug)]
+pub struct LevelFill {
+    pub level: usize,
+    pub n_nodes: usize,
+    pub mean_rate: f64,
+    pub min_rate: f64,
+}
+
 /// Per-task execution interval (the schedule trace).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Interval {
@@ -77,6 +108,67 @@ impl FillingRate {
             return 0.0;
         }
         self.busy_time() / (t * np as f64)
+    }
+
+    /// Filling rate of the consumer-rank range `[lo, hi)` against the
+    /// *global* makespan — the per-subtree view used for per-level rates
+    /// in the buffer tree (subtree ranks are contiguous by construction).
+    pub fn rate_for_range(&self, lo: usize, hi: usize) -> f64 {
+        let t = self.makespan();
+        if t <= 0.0 || hi <= lo {
+            return 0.0;
+        }
+        let busy: f64 = self
+            .intervals
+            .iter()
+            .filter(|iv| (lo..hi).contains(&iv.consumer))
+            .map(|iv| iv.finish - iv.begin)
+            .sum();
+        busy / (t * (hi - lo) as f64)
+    }
+
+    /// Per-level filling statistics for a buffer tree: for each level, the
+    /// unweighted mean and the minimum of the subtree rates. (The weighted
+    /// mean is just the global rate, so mean/min is what exposes imbalance.)
+    ///
+    /// Single pass over the trace: per-rank busy time is accumulated once
+    /// and each subtree is a contiguous rank slice.
+    pub fn level_fill(&self, topo: &crate::config::TreeTopology) -> Vec<LevelFill> {
+        let t = self.makespan();
+        let mut busy = vec![0.0f64; topo.np];
+        for iv in &self.intervals {
+            if iv.consumer < topo.np {
+                busy[iv.consumer] += iv.finish - iv.begin;
+            }
+        }
+        (1..=topo.depth)
+            .map(|level| {
+                let groups = topo.level_groups(level);
+                let rates: Vec<f64> = groups
+                    .iter()
+                    .map(|&(lo, n)| {
+                        if t <= 0.0 || n == 0 {
+                            0.0
+                        } else {
+                            busy[lo..lo + n].iter().sum::<f64>() / (t * n as f64)
+                        }
+                    })
+                    .collect();
+                let n_nodes = rates.len();
+                let mean = if n_nodes == 0 {
+                    0.0
+                } else {
+                    rates.iter().sum::<f64>() / n_nodes as f64
+                };
+                let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+                LevelFill {
+                    level,
+                    n_nodes,
+                    mean_rate: mean,
+                    min_rate: if min.is_finite() { min } else { 0.0 },
+                }
+            })
+            .collect()
     }
 
     /// Sanity check used by tests and the DES: no two intervals on the same
@@ -145,6 +237,31 @@ mod tests {
         f.record(&res(1, 0, 4.0, 6.0)); // overlaps on consumer 0
         f.record(&res(2, 1, 4.0, 6.0)); // different consumer: fine
         assert_eq!(f.overlap_violations(), 1);
+    }
+
+    #[test]
+    fn per_range_rates_expose_imbalance() {
+        let mut f = FillingRate::new();
+        // Ranks 0–1 fully busy over [0,10]; ranks 2–3 idle half the time.
+        f.record(&res(0, 0, 0.0, 10.0));
+        f.record(&res(1, 1, 0.0, 10.0));
+        f.record(&res(2, 2, 0.0, 5.0));
+        f.record(&res(3, 3, 5.0, 10.0));
+        assert!((f.rate_for_range(0, 2) - 1.0).abs() < 1e-12);
+        assert!((f.rate_for_range(2, 4) - 0.5).abs() < 1e-12);
+        assert!((f.rate(4) - 0.75).abs() < 1e-12);
+        let topo = crate::config::TreeTopology::build(4, 2, 2, 2);
+        let lf = f.level_fill(&topo);
+        assert_eq!(lf.len(), 2);
+        // Leaf level (2 leaves of 2 ranks): mean (1.0 + 0.5)/2, min 0.5.
+        let leaf = lf.iter().find(|l| l.level == 2).unwrap();
+        assert_eq!(leaf.n_nodes, 2);
+        assert!((leaf.mean_rate - 0.75).abs() < 1e-12);
+        assert!((leaf.min_rate - 0.5).abs() < 1e-12);
+        // Level 1 is one relay spanning everything → the global rate.
+        let top = lf.iter().find(|l| l.level == 1).unwrap();
+        assert_eq!(top.n_nodes, 1);
+        assert!((top.mean_rate - 0.75).abs() < 1e-12);
     }
 
     #[test]

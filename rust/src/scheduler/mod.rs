@@ -1,12 +1,13 @@
-//! The hierarchical scheduler (the paper's Fig. 2): a producer (rank 0), a
-//! buffered layer, and consumer processes, realized as pure protocol state
-//! machines ([`protocol`]) plus a threaded runtime ([`threads`]) that
-//! executes them for real. The DES in [`crate::des`] runs the *same*
-//! protocol in virtual time for K-computer-scale experiments.
+//! The hierarchical scheduler (the paper's Fig. 2, generalized to an
+//! N-level buffer tree): a producer (rank 0), one or more buffer levels,
+//! and consumer processes, realized as pure protocol state machines
+//! ([`protocol`]) plus a threaded runtime ([`threads`]) that executes them
+//! for real. The DES in [`crate::des`] runs the *same* protocol in virtual
+//! time for K-computer-scale experiments.
 
 pub mod metrics;
 pub mod protocol;
 pub mod threads;
 
-pub use metrics::FillingRate;
+pub use metrics::{FillingRate, LevelFill, NodeStats};
 pub use threads::{run_scheduler, Executor, Report, SleepExecutor};

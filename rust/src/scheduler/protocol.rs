@@ -1,5 +1,5 @@
 //! The scheduling protocol — pure state machines for the producer and
-//! buffer roles (Fig. 2 of the paper).
+//! buffer roles (Fig. 2 of the paper), generalized to an N-level tree.
 //!
 //! CARAVAN's scheduler is a producer–consumer pattern with a *buffered
 //! layer*: the rank-0 producer talks only to a few hundred buffer
@@ -7,58 +7,82 @@
 //! consumers "gradually", and batches results on the way back so the
 //! producer is never overwhelmed.
 //!
+//! The seed reproduced the paper's fixed two-party shape; this module
+//! generalizes the buffer role so a buffer's children may be *consumers*
+//! (a leaf, the original role) or *other buffers* (an interior relay).
+//! Stacking relay levels bounds the fan-in at every node — the producer
+//! talks to `O(fanout)` children instead of to every buffer, which is what
+//! keeps rank 0 off the critical path at 10⁴–10⁵ consumers.
+//!
 //! The state machines here are *execution-agnostic*: the threaded runtime
 //! ([`super::threads`]) drives them with real channels, and the
 //! discrete-event simulator ([`crate::des`]) drives them in virtual time.
 //! Every statement the benchmarks make about scaling is therefore a
 //! statement about this exact code path.
 //!
-//! Flow control is demand-driven on both levels:
+//! Flow control is demand-driven at every level:
 //!
-//! * a buffer requests work from the producer whenever its queue (plus the
-//!   in-flight request) drops below its consumer count, asking for enough
-//!   to restore `credit_factor ×` its consumer count;
-//! * a consumer implicitly requests work by reporting `Done`; the buffer
-//!   replies with the next queued task or marks it idle.
+//! * a buffer node requests work from its parent whenever its local level
+//!   (queue + outstanding requests) drops below its subtree's consumer
+//!   count, asking for enough to restore `credit_factor ×` that count;
+//! * a consumer implicitly requests work by reporting `Done`; an interior
+//!   child explicitly requests with `on_child_request`;
+//! * optionally, a starved node first tries to *steal* queued tasks from a
+//!   sibling (round-robin victim; the victim surrenders up to half its
+//!   queue) and only escalates to the parent when the steal comes back
+//!   empty — sideways moves are invisible to the parent's accounting.
 //!
-//! Results are buffered per the paper: a buffer flushes its result store to
-//! the producer when it reaches `flush_every`, or immediately when the
-//! buffer has nothing queued (so dynamically-generated workloads — TC3,
+//! Results are buffered per the paper: a node flushes its result store to
+//! its parent when it reaches `flush_every`, or immediately when the node
+//! has nothing queued (so dynamically-generated workloads — TC3,
 //! optimization loops — never stall waiting for a batch to fill).
 
+use super::metrics::NodeStats;
+use crate::config::{SchedulerConfig, TreeNodeKind, TreeTopology};
 use crate::tasklib::{TaskResult, TaskSpec};
 use std::collections::VecDeque;
 
 /// Actions the producer asks its runtime to carry out.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ProducerAction {
-    /// Send these tasks to buffer `buffer`.
+    /// Send these tasks to child `buffer` (slot index among the producer's
+    /// direct children — the level-1 nodes of the tree).
     SendTasks { buffer: usize, tasks: Vec<TaskSpec> },
-    /// All work is done: tell every buffer to shut down.
+    /// All work is done: tell every child to shut down.
     BroadcastShutdown,
 }
 
-/// Actions a buffer asks its runtime to carry out.
+/// Actions a buffer node asks its runtime to carry out.
 #[derive(Clone, Debug, PartialEq)]
 pub enum BufferAction {
-    /// Start `task` on local consumer index `consumer`.
+    /// Leaf: start `task` on local consumer index `consumer`.
     RunOn { consumer: usize, task: TaskSpec },
-    /// Ask the producer for up to `amount` more tasks.
+    /// Interior: forward these tasks to child slot `child`.
+    SendToChild { child: usize, tasks: Vec<TaskSpec> },
+    /// Ask the parent for up to `amount` more tasks.
     RequestTasks { amount: usize },
-    /// Ship these results back to the producer.
+    /// Ship these results to the parent.
     FlushResults(Vec<TaskResult>),
-    /// Tell all local consumers to stop.
+    /// Ask sibling slot `victim` (within the shared parent) for queued
+    /// tasks. `thief` in the reply is an opaque token echoed back by the
+    /// victim — the runtime chooses what it routes by.
+    StealRequest { victim: usize, amount: usize },
+    /// Reply to a steal request; `tasks` may be empty.
+    StealGrant { thief: usize, tasks: Vec<TaskSpec> },
+    /// Leaf: tell all local consumers to stop.
     ShutdownConsumers,
+    /// Interior: forward the shutdown notice to all children.
+    ShutdownChildren,
 }
 
 /// Producer (rank 0) state: the global pending-task queue plus which
-/// buffers are waiting for work.
+/// children are waiting for work.
 #[derive(Debug)]
 pub struct ProducerState {
     pending: VecDeque<TaskSpec>,
-    /// `deficit[b]` = number of tasks buffer `b` asked for but hasn't received.
+    /// `deficit[b]` = number of tasks child `b` asked for but hasn't received.
     deficit: Vec<usize>,
-    /// Round-robin cursor so replenishment is fair across buffers.
+    /// Round-robin cursor so replenishment is fair across children.
     cursor: usize,
     submitted: u64,
     completed: u64,
@@ -108,14 +132,14 @@ impl ProducerState {
         self.satisfy_deficits()
     }
 
-    /// A buffer asked for `amount` more tasks.
+    /// A child asked for `amount` more tasks.
     pub fn on_request(&mut self, buffer: usize, amount: usize) -> Vec<ProducerAction> {
         self.msgs_in += 1;
         self.deficit[buffer] = self.deficit[buffer].saturating_add(amount);
         self.satisfy_deficits()
     }
 
-    /// A buffer flushed `n_results` results (the runtime hands the actual
+    /// A child flushed `n_results` results (the runtime hands the actual
     /// values to the engine); tracked here for termination detection.
     pub fn on_results(&mut self, n_results: usize) {
         self.msgs_in += 1;
@@ -147,8 +171,8 @@ impl ProducerState {
 
     fn satisfy_deficits(&mut self) -> Vec<ProducerAction> {
         // Fairness under scarcity: when fewer tasks are pending than the
-        // total outstanding deficit, granting each buffer its full credit
-        // first-come-first-served would leave later buffers (and their
+        // total outstanding deficit, granting each child its full credit
+        // first-come-first-served would leave later children (and their
         // hundreds of consumers) starved. Grant in bounded chunks, round-
         // robin, until tasks or deficits run out — the paper's "repeatedly
         // send them to their consumers gradually", applied one level up.
@@ -179,84 +203,247 @@ impl ProducerState {
     }
 }
 
-/// Buffer state: local task queue, idle-consumer list, result store.
+/// What a buffer node feeds: consumers (leaf) or child buffers (interior).
+#[derive(Debug)]
+enum Children {
+    Consumers { n: usize, idle: VecDeque<usize> },
+    Buffers { deficit: Vec<usize>, cursor: usize, subtree: usize },
+}
+
+/// Buffer-node state: local task queue, children, result store, and the
+/// demand-driven credit held against the parent.
 #[derive(Debug)]
 pub struct BufferState {
-    n_consumers: usize,
+    children: Children,
     queue: VecDeque<TaskSpec>,
-    idle: VecDeque<usize>,
     store: Vec<TaskResult>,
-    /// Tasks requested from the producer but not yet received.
+    /// Tasks requested from the parent but not yet received.
     outstanding_request: usize,
+    /// Tasks requested from a sibling (steal) but not yet answered.
+    steal_outstanding: usize,
+    /// True after an unanswered-or-failed steal attempt; cleared whenever
+    /// new tasks arrive. Starts true so startup credit goes to the parent.
+    steal_tried: bool,
+    steal_enabled: bool,
+    my_slot: usize,
+    n_siblings: usize,
+    steal_cursor: usize,
     credit_factor: usize,
     flush_every: usize,
     shutting_down: bool,
+    max_queue: usize,
+    pub steals_attempted: u64,
+    /// Tasks gained from siblings.
+    pub steals_received: u64,
+    /// Tasks surrendered to siblings.
+    pub steals_given: u64,
     pub msgs_in: u64,
     pub msgs_out: u64,
 }
 
 impl BufferState {
+    /// A leaf buffer feeding `n_consumers` consumers (stealing disabled) —
+    /// the original two-level role.
     pub fn new(n_consumers: usize, credit_factor: usize, flush_every: usize) -> Self {
         assert!(n_consumers > 0);
         Self {
-            n_consumers,
+            children: Children::Consumers { n: n_consumers, idle: (0..n_consumers).collect() },
             queue: VecDeque::new(),
-            idle: (0..n_consumers).collect(),
             store: Vec::new(),
             outstanding_request: 0,
+            steal_outstanding: 0,
+            steal_tried: true,
+            steal_enabled: false,
+            my_slot: 0,
+            n_siblings: 0,
+            steal_cursor: 0,
             credit_factor: credit_factor.max(1),
             flush_every: flush_every.max(1),
             shutting_down: false,
+            max_queue: 0,
+            steals_attempted: 0,
+            steals_received: 0,
+            steals_given: 0,
             msgs_in: 0,
             msgs_out: 0,
         }
     }
 
+    /// An interior relay node with `n_children` child buffers covering
+    /// `subtree_consumers` consumers in total.
+    pub fn interior(
+        n_children: usize,
+        subtree_consumers: usize,
+        credit_factor: usize,
+        flush_every: usize,
+    ) -> Self {
+        assert!(n_children > 0 && subtree_consumers > 0);
+        Self {
+            children: Children::Buffers {
+                deficit: vec![0; n_children],
+                cursor: 0,
+                subtree: subtree_consumers,
+            },
+            queue: VecDeque::new(),
+            store: Vec::new(),
+            outstanding_request: 0,
+            steal_outstanding: 0,
+            steal_tried: true,
+            steal_enabled: false,
+            my_slot: 0,
+            n_siblings: 0,
+            steal_cursor: 0,
+            credit_factor: credit_factor.max(1),
+            flush_every: flush_every.max(1),
+            shutting_down: false,
+            max_queue: 0,
+            steals_attempted: 0,
+            steals_received: 0,
+            steals_given: 0,
+            msgs_in: 0,
+            msgs_out: 0,
+        }
+    }
+
+    /// Enable sibling work stealing. `my_slot` is this node's index among
+    /// its parent's `n_siblings + 1` children.
+    pub fn with_stealing(mut self, my_slot: usize, n_siblings: usize) -> Self {
+        self.steal_enabled = n_siblings > 0;
+        self.my_slot = my_slot;
+        self.n_siblings = n_siblings;
+        self.steal_cursor = my_slot;
+        self
+    }
+
+    /// Build the protocol state for tree node `id` — the single
+    /// constructor both runtimes (threads, DES) use, so they can never
+    /// disagree on a node's role, credit, or steal wiring.
+    pub fn for_tree_node(topo: &TreeTopology, id: usize, cfg: &SchedulerConfig) -> Self {
+        let n = &topo.nodes[id];
+        let state = match &n.kind {
+            TreeNodeKind::Leaf { n_consumers, .. } => {
+                BufferState::new(*n_consumers, cfg.credit_factor, cfg.flush_every)
+            }
+            TreeNodeKind::Interior { children } => BufferState::interior(
+                children.len(),
+                n.subtree_consumers,
+                cfg.credit_factor,
+                cfg.flush_every,
+            ),
+        };
+        if cfg.steal {
+            state.with_stealing(n.slot, n.n_siblings)
+        } else {
+            state
+        }
+    }
+
+    pub fn is_leaf(&self) -> bool {
+        matches!(self.children, Children::Consumers { .. })
+    }
+
+    /// Local consumers (0 for interior nodes).
     pub fn n_consumers(&self) -> usize {
-        self.n_consumers
+        match &self.children {
+            Children::Consumers { n, .. } => *n,
+            Children::Buffers { .. } => 0,
+        }
+    }
+
+    /// Consumers in this node's subtree — the unit its credit is sized in.
+    pub fn subtree_consumers(&self) -> usize {
+        match &self.children {
+            Children::Consumers { n, .. } => *n,
+            Children::Buffers { subtree, .. } => *subtree,
+        }
+    }
+
+    /// Upper bound the local queue is allowed to reach.
+    pub fn credit_bound(&self) -> usize {
+        self.credit_factor * self.subtree_consumers()
     }
 
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
 
+    pub fn max_queue(&self) -> usize {
+        self.max_queue
+    }
+
     pub fn idle_count(&self) -> usize {
-        self.idle.len()
+        match &self.children {
+            Children::Consumers { idle, .. } => idle.len(),
+            Children::Buffers { .. } => 0,
+        }
     }
 
     pub fn busy_count(&self) -> usize {
-        self.n_consumers - self.idle.len()
+        match &self.children {
+            Children::Consumers { n, idle } => n - idle.len(),
+            Children::Buffers { .. } => 0,
+        }
     }
 
     pub fn store_len(&self) -> usize {
         self.store.len()
     }
 
-    /// Startup: prime the pump by requesting a full credit of tasks.
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutting_down
+    }
+
+    /// Counter snapshot for reports (`node`/`level`/`saw_shutdown` are
+    /// caller-supplied context).
+    pub fn stats(&self, node: usize, level: usize) -> NodeStats {
+        NodeStats {
+            node,
+            level,
+            subtree_consumers: self.subtree_consumers(),
+            credit_bound: self.credit_bound(),
+            max_queue: self.max_queue,
+            msgs_in: self.msgs_in,
+            msgs_out: self.msgs_out,
+            steals_attempted: self.steals_attempted,
+            steals_received: self.steals_received,
+            steals_given: self.steals_given,
+            saw_shutdown: self.shutting_down,
+        }
+    }
+
+    /// Startup: prime the pump by requesting a full credit of tasks from
+    /// the parent (stealing is skipped — nobody has work yet).
     pub fn on_start(&mut self) -> Vec<BufferAction> {
         self.request_if_low()
     }
 
-    /// Tasks arrived from the producer.
+    /// Tasks arrived from the parent.
     pub fn on_assign(&mut self, tasks: Vec<TaskSpec>) -> Vec<BufferAction> {
         self.msgs_in += 1;
         self.outstanding_request = self.outstanding_request.saturating_sub(tasks.len().max(1));
-        self.queue.extend(tasks);
-        let mut out = self.dispatch_idle();
+        self.accept(tasks);
+        let mut out = self.deliver();
         out.extend(self.request_if_low());
         out
     }
 
-    /// A local consumer finished a task (and is implicitly asking for more).
+    /// Leaf: a local consumer finished a task (and is implicitly asking for
+    /// more).
     pub fn on_done(&mut self, consumer: usize, result: TaskResult) -> Vec<BufferAction> {
         self.msgs_in += 1;
         self.store.push(result);
         let mut out = Vec::new();
-        if let Some(task) = self.queue.pop_front() {
-            self.msgs_out += 1;
-            out.push(BufferAction::RunOn { consumer, task });
-        } else {
-            self.idle.push_back(consumer);
+        let next = self.queue.pop_front();
+        match &mut self.children {
+            Children::Consumers { idle, .. } => {
+                if let Some(task) = next {
+                    self.msgs_out += 1;
+                    out.push(BufferAction::RunOn { consumer, task });
+                } else {
+                    idle.push_back(consumer);
+                }
+            }
+            Children::Buffers { .. } => panic!("on_done called on an interior buffer node"),
         }
         out.extend(self.request_if_low());
         out.extend(self.flush_if_due());
@@ -266,15 +453,87 @@ impl BufferState {
         out
     }
 
-    /// Producer announced shutdown. Consumers still running finish first;
-    /// the final flush happens when the last one reports in.
+    /// Interior: child slot `child` asked for `amount` more tasks.
+    pub fn on_child_request(&mut self, child: usize, amount: usize) -> Vec<BufferAction> {
+        self.msgs_in += 1;
+        match &mut self.children {
+            Children::Buffers { deficit, .. } => {
+                deficit[child] = deficit[child].saturating_add(amount);
+            }
+            Children::Consumers { .. } => {
+                panic!("on_child_request called on a leaf buffer node")
+            }
+        }
+        let mut out = self.deliver();
+        out.extend(self.request_if_low());
+        out
+    }
+
+    /// Interior: a child flushed results; batch them toward the parent.
+    pub fn on_child_results(&mut self, results: Vec<TaskResult>) -> Vec<BufferAction> {
+        self.msgs_in += 1;
+        self.store.extend(results);
+        if self.shutting_down {
+            self.flush_now()
+        } else {
+            self.flush_if_due()
+        }
+    }
+
+    /// A sibling asked to steal up to `amount` queued tasks. Surrender at
+    /// most half the queue (taken from the back — the coldest tasks); the
+    /// grant is sent even when empty so the thief can escalate.
+    pub fn on_steal_request(&mut self, thief: usize, amount: usize) -> Vec<BufferAction> {
+        self.msgs_in += 1;
+        let give = if self.shutting_down { 0 } else { amount.min(self.queue.len() / 2) };
+        let tasks: Vec<TaskSpec> = if give == 0 {
+            Vec::new()
+        } else {
+            self.queue.split_off(self.queue.len() - give).into_iter().collect()
+        };
+        self.steals_given += tasks.len() as u64;
+        self.msgs_out += 1;
+        let mut out = vec![BufferAction::StealGrant { thief, tasks }];
+        // Losing queue depth may put us below the low-water mark.
+        out.extend(self.request_if_low());
+        out
+    }
+
+    /// The answer to our steal request arrived (possibly empty).
+    pub fn on_steal_grant(&mut self, tasks: Vec<TaskSpec>) -> Vec<BufferAction> {
+        self.msgs_in += 1;
+        self.steal_outstanding = 0;
+        if !tasks.is_empty() {
+            self.steals_received += tasks.len() as u64;
+            self.steal_tried = false;
+        }
+        self.accept(tasks);
+        let mut out = self.deliver();
+        // An empty grant leaves steal_tried set, so this escalates upstream.
+        out.extend(self.request_if_low());
+        out
+    }
+
+    /// Parent announced shutdown. A leaf waits for running consumers; an
+    /// interior node flushes and forwards immediately (the producer only
+    /// broadcasts at quiescence, so no results are in flight below us).
     pub fn on_shutdown(&mut self) -> Vec<BufferAction> {
         self.msgs_in += 1;
         self.shutting_down = true;
-        if self.busy_count() == 0 {
-            self.final_flush()
+        if self.is_leaf() {
+            if self.busy_count() == 0 {
+                self.final_flush()
+            } else {
+                Vec::new()
+            }
         } else {
-            Vec::new()
+            let mut out = Vec::new();
+            if !self.store.is_empty() {
+                out.extend(self.flush_now());
+            }
+            self.msgs_out += 1;
+            out.push(BufferAction::ShutdownChildren);
+            out
         }
     }
 
@@ -288,31 +547,90 @@ impl BufferState {
         }
     }
 
-    fn dispatch_idle(&mut self) -> Vec<BufferAction> {
-        let mut out = Vec::new();
-        while !self.queue.is_empty() && !self.idle.is_empty() {
-            let consumer = self.idle.pop_front().unwrap();
-            let task = self.queue.pop_front().unwrap();
-            self.msgs_out += 1;
-            out.push(BufferAction::RunOn { consumer, task });
+    /// Take tasks into the local queue (common to assigns and steals).
+    fn accept(&mut self, tasks: Vec<TaskSpec>) {
+        if !tasks.is_empty() {
+            self.steal_tried = false;
         }
-        out
+        self.queue.extend(tasks);
+        self.max_queue = self.max_queue.max(self.queue.len());
+    }
+
+    /// Move queued tasks to whoever is asking below us.
+    fn deliver(&mut self) -> Vec<BufferAction> {
+        match &mut self.children {
+            Children::Consumers { idle, .. } => {
+                let mut out = Vec::new();
+                while !self.queue.is_empty() && !idle.is_empty() {
+                    let consumer = idle.pop_front().unwrap();
+                    let task = self.queue.pop_front().unwrap();
+                    self.msgs_out += 1;
+                    out.push(BufferAction::RunOn { consumer, task });
+                }
+                out
+            }
+            Children::Buffers { deficit, cursor, .. } => {
+                // Same bounded round-robin as the producer, one level down.
+                const GRANT_CHUNK: usize = 32;
+                let nb = deficit.len();
+                let mut granted: Vec<Vec<TaskSpec>> = vec![Vec::new(); nb];
+                let mut scanned = 0;
+                while !self.queue.is_empty() && scanned < nb {
+                    let b = *cursor;
+                    *cursor = (*cursor + 1) % nb;
+                    scanned += 1;
+                    if deficit[b] == 0 {
+                        continue;
+                    }
+                    let take = deficit[b].min(GRANT_CHUNK).min(self.queue.len());
+                    granted[b].extend(self.queue.drain(..take));
+                    deficit[b] -= take;
+                    scanned = 0;
+                }
+                let mut out = Vec::new();
+                for (b, tasks) in granted.into_iter().enumerate() {
+                    if !tasks.is_empty() {
+                        self.msgs_out += 1;
+                        out.push(BufferAction::SendToChild { child: b, tasks });
+                    }
+                }
+                out
+            }
+        }
     }
 
     fn request_if_low(&mut self) -> Vec<BufferAction> {
         if self.shutting_down {
             return Vec::new();
         }
-        let level = self.queue.len() + self.outstanding_request;
-        if level < self.n_consumers {
-            let target = self.credit_factor * self.n_consumers;
-            let amount = target - level;
+        let low = self.subtree_consumers();
+        let level = self.queue.len() + self.outstanding_request + self.steal_outstanding;
+        if level >= low {
+            return Vec::new();
+        }
+        let amount = self.credit_bound() - level;
+        if self.steal_enabled && !self.steal_tried && self.steal_outstanding == 0 {
+            self.steal_tried = true;
+            self.steal_outstanding = amount;
+            self.steals_attempted += 1;
+            let victim = self.next_victim();
+            self.msgs_out += 1;
+            vec![BufferAction::StealRequest { victim, amount }]
+        } else {
             self.outstanding_request += amount;
             self.msgs_out += 1;
             vec![BufferAction::RequestTasks { amount }]
-        } else {
-            Vec::new()
         }
+    }
+
+    /// Round-robin over sibling slots, skipping our own.
+    fn next_victim(&mut self) -> usize {
+        let total = self.n_siblings + 1;
+        self.steal_cursor = (self.steal_cursor + 1) % total;
+        if self.steal_cursor == self.my_slot {
+            self.steal_cursor = (self.steal_cursor + 1) % total;
+        }
+        self.steal_cursor
     }
 
     fn flush_if_due(&mut self) -> Vec<BufferAction> {
@@ -478,6 +796,148 @@ mod tests {
         assert!(acts.iter().any(|a| matches!(a, BufferAction::FlushResults(rs) if rs.len() == 1)));
         assert_eq!(b.store_len(), 0);
         assert!(b.on_tick().is_empty());
+    }
+
+    #[test]
+    fn interior_node_relays_demand_and_results() {
+        // A relay over two children covering 4 consumers each.
+        let mut r = BufferState::interior(2, 8, 2, 4);
+        let acts = r.on_start();
+        assert_eq!(acts, vec![BufferAction::RequestTasks { amount: 16 }]);
+        // Child 1 asks for 6; nothing queued yet, and the relay already has
+        // a full outstanding credit, so no duplicate upstream request.
+        let acts = r.on_child_request(1, 6);
+        assert!(acts.is_empty(), "{acts:?}");
+        // Parent delivers 10: 6 go straight to child 1, 4 stay queued.
+        let acts = r.on_assign((0..10).map(task).collect());
+        let sent: usize = acts
+            .iter()
+            .filter_map(|a| match a {
+                BufferAction::SendToChild { child: 1, tasks } => Some(tasks.len()),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(sent, 6);
+        assert_eq!(r.queue_len(), 4);
+        // Child 0 asks for 2 → served from the local queue, no upstream hop.
+        let acts = r.on_child_request(0, 2);
+        assert!(acts
+            .iter()
+            .any(|a| matches!(a, BufferAction::SendToChild { child: 0, tasks } if tasks.len() == 2)));
+        // Results batch until flush_every (4) — queue still holds 2 tasks.
+        let rs: Vec<TaskResult> = (0..3).map(|i| result(i, 0)).collect();
+        let acts = r.on_child_results(rs);
+        assert!(acts.is_empty(), "{acts:?}");
+        let acts = r.on_child_results(vec![result(3, 1)]);
+        assert!(acts
+            .iter()
+            .any(|a| matches!(a, BufferAction::FlushResults(rs) if rs.len() == 4)));
+    }
+
+    #[test]
+    fn interior_shutdown_forwards_to_children() {
+        let mut r = BufferState::interior(3, 12, 2, 16);
+        r.on_start();
+        let acts = r.on_shutdown();
+        assert!(acts.iter().any(|a| matches!(a, BufferAction::ShutdownChildren)));
+        assert!(r.is_shutting_down());
+        // After shutdown a node no longer requests work.
+        assert!(r.on_child_request(0, 5).is_empty());
+    }
+
+    #[test]
+    fn starved_node_steals_before_escalating() {
+        let mut thief = BufferState::new(2, 2, 100).with_stealing(0, 1);
+        let mut victim = BufferState::new(2, 2, 100).with_stealing(1, 1);
+        // Startup requests go upstream, not sideways.
+        assert_eq!(thief.on_start(), vec![BufferAction::RequestTasks { amount: 4 }]);
+        victim.on_start();
+        // Both receive their full credit; the victim's consumers are slow.
+        victim.on_assign((0..8).map(task).collect()); // 2 dispatched, queue = 6
+        thief.on_assign((100..104).map(task).collect()); // 2 dispatched, queue = 2
+        // First completion: queue drops to 1 < n_consumers → steal attempt
+        // at sibling slot 1, not an upstream request.
+        let acts = thief.on_done(0, result(100, 0));
+        let steal = acts.iter().find_map(|a| match a {
+            BufferAction::StealRequest { victim, amount } => Some((*victim, *amount)),
+            _ => None,
+        });
+        assert!(steal.is_some(), "{acts:?}");
+        let (vslot, amount) = steal.unwrap();
+        assert_eq!(vslot, 1);
+        assert_eq!(amount, 3); // restore credit 4 from level 1
+        assert!(!acts.iter().any(|a| matches!(a, BufferAction::RequestTasks { .. })));
+        // Victim surrenders up to half its queue (queue = 6 → gives 3).
+        let acts = victim.on_steal_request(0, amount);
+        let granted = acts
+            .iter()
+            .find_map(|a| match a {
+                BufferAction::StealGrant { thief: 0, tasks } => Some(tasks.clone()),
+                _ => None,
+            })
+            .expect("victim must reply");
+        assert_eq!(granted.len(), 3);
+        assert_eq!(victim.queue_len(), 3);
+        // Thief drains its queue; consumer 1 goes idle before the loot lands.
+        thief.on_done(0, result(102, 0));
+        thief.on_done(1, result(101, 1));
+        let acts = thief.on_steal_grant(granted);
+        assert!(acts.iter().any(|a| matches!(a, BufferAction::RunOn { .. })), "{acts:?}");
+        assert_eq!(thief.steals_received, 3);
+        assert_eq!(victim.steals_given, 3);
+    }
+
+    #[test]
+    fn empty_steal_grant_escalates_upstream() {
+        let mut thief = BufferState::new(2, 1, 100).with_stealing(0, 2);
+        thief.on_start(); // upstream request for 2 (outstanding = 2)
+        // Full credit arrives but dispatch drains the queue to 0, which is
+        // below the low-water mark → a steal attempt, not an upstream request.
+        let acts = thief.on_assign(vec![task(0), task(1)]);
+        assert!(acts.iter().any(|a| matches!(a, BufferAction::StealRequest { .. })), "{acts:?}");
+        assert!(!acts.iter().any(|a| matches!(a, BufferAction::RequestTasks { .. })));
+        // The sibling had nothing.
+        let acts = thief.on_steal_grant(Vec::new());
+        let req = acts.iter().find_map(|a| match a {
+            BufferAction::RequestTasks { amount } => Some(*amount),
+            _ => None,
+        });
+        assert!(req.is_some(), "empty grant must escalate to the parent: {acts:?}");
+        // No second steal until new tasks arrive.
+        assert!(!acts.iter().any(|a| matches!(a, BufferAction::StealRequest { .. })));
+    }
+
+    #[test]
+    fn steal_victim_rotates_round_robin_skipping_self() {
+        let mut b = BufferState::new(1, 1, 100).with_stealing(1, 3); // slots 0..4, me=1
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            seen.push(b.next_victim());
+        }
+        assert!(!seen.contains(&1), "{seen:?}");
+        assert_eq!(seen, vec![2, 3, 0, 2, 3, 0]);
+    }
+
+    #[test]
+    fn queue_never_exceeds_credit_bound() {
+        let mut b = BufferState::new(3, 2, 5);
+        b.on_start();
+        b.on_assign((0..6).map(task).collect());
+        assert!(b.max_queue() <= b.credit_bound());
+        // Work through everything; the bound must hold throughout.
+        let mut next_id = 6u64;
+        for round in 0..20u64 {
+            let acts = b.on_done(round as usize % 3, result(round, round as usize % 3));
+            for a in acts {
+                if let BufferAction::RequestTasks { amount } = a {
+                    let grant: Vec<TaskSpec> =
+                        (next_id..next_id + amount as u64).map(task).collect();
+                    next_id += amount as u64;
+                    b.on_assign(grant);
+                }
+            }
+            assert!(b.max_queue() <= b.credit_bound(), "round {round}: {b:?}");
+        }
     }
 
     #[test]

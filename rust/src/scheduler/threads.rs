@@ -1,24 +1,30 @@
 //! The threaded scheduler runtime.
 //!
 //! Executes the protocol of [`super::protocol`] with real OS threads and
-//! channels: one producer thread (≈ MPI rank 0), one thread per buffer
-//! process, one thread per consumer process. The search engine runs inside
-//! the producer thread, exactly as CARAVAN runs the Python search engine
-//! attached to rank 0; consumers execute task payloads through a
-//! user-supplied [`Executor`].
+//! channels: one producer thread (≈ MPI rank 0), one thread per buffer-tree
+//! node (leaf and interior), one thread per consumer process. The search
+//! engine runs inside the producer thread, exactly as CARAVAN runs the
+//! Python search engine attached to rank 0; consumers execute task
+//! payloads through a user-supplied [`Executor`].
+//!
+//! The buffer layer is the N-level tree described by
+//! [`SchedulerConfig::depth`]: interior nodes relay demand-driven credit
+//! downward and batched results upward, and (with
+//! [`SchedulerConfig::steal`]) siblings exchange queued tasks directly
+//! through their own channels — the producer never sees sideways moves.
 //!
 //! On a small host this is concurrency rather than parallelism, which is
 //! fine for the framework's own behaviour (dummy `Sleep` tasks idle, and
 //! in-process evaluations are serialized by the PJRT executor anyway).
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use super::metrics::FillingRate;
+use super::metrics::{FillingRate, NodeStats};
 use super::protocol::{BufferAction, BufferState, ProducerAction, ProducerState};
-use crate::config::SchedulerConfig;
+use crate::config::{SchedulerConfig, TreeNodeKind};
 use crate::tasklib::{Payload, SearchEngine, TaskResult, TaskSink, TaskSpec};
 
 /// Runs task payloads on a consumer thread.
@@ -56,12 +62,30 @@ enum ToProducer {
 enum ToBuffer {
     Assign(Vec<TaskSpec>),
     Done { consumer: usize, result: TaskResult },
+    ChildRequest { child: usize, amount: usize },
+    ChildResults(Vec<TaskResult>),
+    /// Steal request from the sibling at slot `thief`.
+    Steal { thief: usize, amount: usize },
+    /// Reply to our steal request (possibly empty).
+    Stolen(Vec<TaskSpec>),
     Shutdown,
 }
 
 enum ToConsumer {
     Run(TaskSpec),
     Stop,
+}
+
+/// Where a node's upstream messages go: rank 0 or an interior parent.
+enum ParentLink {
+    Producer(Sender<ToProducer>),
+    Buffer(Sender<ToBuffer>),
+}
+
+/// What a node feeds: consumer threads (leaf) or child node threads.
+enum ChildLink {
+    Consumers(Vec<Sender<ToConsumer>>),
+    Buffers(Vec<Sender<ToBuffer>>),
 }
 
 /// Outcome of a scheduler run.
@@ -71,6 +95,8 @@ pub struct Report {
     pub wall_secs: f64,
     pub producer_msgs_in: u64,
     pub producer_msgs_out: u64,
+    /// Per-node counters of the buffer tree, in node-id order.
+    pub node_stats: Vec<NodeStats>,
 }
 
 impl Report {
@@ -104,71 +130,104 @@ pub fn run_scheduler(
     executor: Arc<dyn Executor>,
 ) -> Report {
     let np = cfg.np;
-    let layout = cfg.buffer_layout();
-    let nb = layout.len();
-    crate::debugln!("scheduler: np={} buffers={} layout={:?}", np, nb, layout);
+    let topo = cfg.tree();
+    let n_nodes = topo.n_nodes();
+    crate::debugln!(
+        "scheduler: np={} nodes={} depth={} roots={:?}",
+        np,
+        n_nodes,
+        topo.depth,
+        topo.roots
+    );
 
     let t0 = Instant::now();
 
-    // Channels.
+    // One channel per tree node, created up front so siblings/children can
+    // be wired regardless of spawn order.
     let (prod_tx, prod_rx) = channel::<ToProducer>();
-    let mut buf_txs: Vec<Sender<ToBuffer>> = Vec::with_capacity(nb);
-    let mut buf_handles = Vec::new();
+    let mut node_txs: Vec<Sender<ToBuffer>> = Vec::with_capacity(n_nodes);
+    let mut node_rxs: Vec<Option<Receiver<ToBuffer>>> = Vec::with_capacity(n_nodes);
+    for _ in 0..n_nodes {
+        let (tx, rx) = channel::<ToBuffer>();
+        node_txs.push(tx);
+        node_rxs.push(Some(rx));
+    }
+
+    let stats: Arc<Mutex<Vec<Option<NodeStats>>>> = Arc::new(Mutex::new(vec![None; n_nodes]));
+    let mut node_handles = Vec::new();
     let mut consumer_handles = Vec::new();
+    let flush_interval = Duration::from_millis(cfg.flush_interval_ms);
 
-    let mut global_consumer = 0usize;
-    for (b, &nc) in layout.iter().enumerate() {
-        let (btx, brx) = channel::<ToBuffer>();
-        buf_txs.push(btx.clone());
-
-        // Spawn this buffer's consumers.
-        let mut cons_txs: Vec<Sender<ToConsumer>> = Vec::with_capacity(nc);
-        for local in 0..nc {
-            let (ctx, crx) = channel::<ToConsumer>();
-            cons_txs.push(ctx);
-            let rank = global_consumer;
-            global_consumer += 1;
-            let exec = Arc::clone(&executor);
-            let back = btx.clone();
-            let handle = thread::Builder::new()
-                .name(format!("consumer-{rank}"))
-                .stack_size(256 * 1024)
-                .spawn(move || consumer_loop(crx, back, exec, rank, local, t0))
-                .expect("spawn consumer");
-            consumer_handles.push(handle);
-        }
-
-        let ptx = prod_tx.clone();
-        let flush_interval = Duration::from_millis(cfg.flush_interval_ms);
-        let (credit, flush_every) = (cfg.credit_factor, cfg.flush_every);
+    for id in 0..n_nodes {
+        let state = BufferState::for_tree_node(&topo, id, cfg);
+        let level = topo.nodes[id].level;
+        let slot = topo.nodes[id].slot;
+        let rx = node_rxs[id].take().expect("receiver taken once");
+        let parent = match topo.nodes[id].parent {
+            None => ParentLink::Producer(prod_tx.clone()),
+            Some(p) => ParentLink::Buffer(node_txs[p].clone()),
+        };
+        let siblings: Vec<Sender<ToBuffer>> =
+            topo.sibling_group(id).iter().map(|&s| node_txs[s].clone()).collect();
+        let children = match &topo.nodes[id].kind {
+            TreeNodeKind::Leaf { n_consumers, rank_base } => {
+                let mut cons_txs = Vec::with_capacity(*n_consumers);
+                for local in 0..*n_consumers {
+                    let (ctx, crx) = channel::<ToConsumer>();
+                    cons_txs.push(ctx);
+                    let rank = rank_base + local;
+                    let exec = Arc::clone(&executor);
+                    let back = node_txs[id].clone();
+                    let handle = thread::Builder::new()
+                        .name(format!("consumer-{rank}"))
+                        .stack_size(256 * 1024)
+                        .spawn(move || consumer_loop(crx, back, exec, rank, local, t0))
+                        .expect("spawn consumer");
+                    consumer_handles.push(handle);
+                }
+                ChildLink::Consumers(cons_txs)
+            }
+            TreeNodeKind::Interior { children } => {
+                ChildLink::Buffers(children.iter().map(|&c| node_txs[c].clone()).collect())
+            }
+        };
+        let stats = Arc::clone(&stats);
         let handle = thread::Builder::new()
-            .name(format!("buffer-{b}"))
+            .name(format!("buffer-{id}"))
             .stack_size(256 * 1024)
-            .spawn(move || buffer_loop(b, nc, credit, flush_every, brx, ptx, cons_txs, flush_interval))
-            .expect("spawn buffer");
-        buf_handles.push(handle);
+            .spawn(move || {
+                node_loop(state, rx, parent, slot, siblings, children, flush_interval, |s| {
+                    stats.lock().unwrap()[id] = Some(s.stats(id, level));
+                })
+            })
+            .expect("spawn buffer node");
+        node_handles.push(handle);
     }
     drop(prod_tx);
 
+    // Senders to the producer's direct children, indexed by root slot.
+    let root_txs: Vec<Sender<ToBuffer>> =
+        topo.roots.iter().map(|&r| node_txs[r].clone()).collect();
+
     // --- producer loop (runs on the caller thread) ---
-    let mut state = ProducerState::new(nb);
+    let mut state = ProducerState::new(topo.roots.len());
     let mut sink = ProducerSink { next_id: 0, staged: Vec::new() };
     let mut filling = FillingRate::new();
     let mut all_results: Vec<TaskResult> = Vec::new();
 
     engine.start(&mut sink);
     let acts = state_push(&mut state, &mut sink);
-    perform_producer(acts, &buf_txs);
+    perform_producer(acts, &root_txs);
     let done = engine.poll(&mut sink);
     let acts = state_push(&mut state, &mut sink);
-    perform_producer(acts, &buf_txs);
+    perform_producer(acts, &root_txs);
     state.set_engine_done(done);
 
     let poll_interval = Duration::from_millis(cfg.flush_interval_ms.max(1));
     loop {
         // Shutdown check (engine may have submitted nothing at all).
         let shutdown_acts = state.maybe_shutdown();
-        if perform_producer(shutdown_acts, &buf_txs) {
+        if perform_producer(shutdown_acts, &root_txs) {
             break;
         }
         let msg = match prod_rx.recv_timeout(poll_interval) {
@@ -177,7 +236,7 @@ pub fn run_scheduler(
                 // Give session-style engines a chance to inject work.
                 let done = engine.poll(&mut sink);
                 let acts = state_push(&mut state, &mut sink);
-                perform_producer(acts, &buf_txs);
+                perform_producer(acts, &root_txs);
                 state.set_engine_done(done);
                 continue;
             }
@@ -186,7 +245,7 @@ pub fn run_scheduler(
         match msg {
             ToProducer::Request { buffer, amount } => {
                 let acts = state.on_request(buffer, amount);
-                perform_producer(acts, &buf_txs);
+                perform_producer(acts, &root_txs);
             }
             ToProducer::Results(results) => {
                 state.on_results(results.len());
@@ -196,20 +255,35 @@ pub fn run_scheduler(
                 }
                 all_results.extend(results);
                 let acts = state_push(&mut state, &mut sink);
-                perform_producer(acts, &buf_txs);
+                perform_producer(acts, &root_txs);
             }
         }
     }
     engine.finish();
 
     // Join everything.
-    drop(buf_txs);
-    for h in buf_handles {
+    drop(root_txs);
+    drop(node_txs);
+    for h in node_handles {
         let _ = h.join();
     }
     for h in consumer_handles {
         let _ = h.join();
     }
+
+    let node_stats: Vec<NodeStats> = stats
+        .lock()
+        .unwrap()
+        .iter()
+        .enumerate()
+        .map(|(id, s)| {
+            s.clone().unwrap_or_else(|| {
+                // Node thread died without reporting; synthesize an empty row
+                // so the report stays index-aligned with the topology.
+                BufferState::for_tree_node(&topo, id, cfg).stats(id, topo.nodes[id].level)
+            })
+        })
+        .collect();
 
     Report {
         results: all_results,
@@ -217,6 +291,7 @@ pub fn run_scheduler(
         wall_secs: t0.elapsed().as_secs_f64(),
         producer_msgs_in: state.msgs_in,
         producer_msgs_out: state.msgs_out,
+        node_stats,
     }
 }
 
@@ -230,15 +305,15 @@ fn state_push(state: &mut ProducerState, sink: &mut ProducerSink) -> Vec<Produce
 }
 
 /// Execute producer actions; returns true when shutdown was broadcast.
-fn perform_producer(actions: Vec<ProducerAction>, buf_txs: &[Sender<ToBuffer>]) -> bool {
+fn perform_producer(actions: Vec<ProducerAction>, root_txs: &[Sender<ToBuffer>]) -> bool {
     let mut shutdown = false;
     for act in actions {
         match act {
             ProducerAction::SendTasks { buffer, tasks } => {
-                let _ = buf_txs[buffer].send(ToBuffer::Assign(tasks));
+                let _ = root_txs[buffer].send(ToBuffer::Assign(tasks));
             }
             ProducerAction::BroadcastShutdown => {
-                for tx in buf_txs {
+                for tx in root_txs {
                     let _ = tx.send(ToBuffer::Shutdown);
                 }
                 shutdown = true;
@@ -248,68 +323,104 @@ fn perform_producer(actions: Vec<ProducerAction>, buf_txs: &[Sender<ToBuffer>]) 
     shutdown
 }
 
-fn buffer_loop(
-    buffer_id: usize,
-    n_consumers: usize,
-    credit_factor: usize,
-    flush_every: usize,
-    rx: Receiver<ToBuffer>,
-    producer: Sender<ToProducer>,
-    consumers: Vec<Sender<ToConsumer>>,
-    flush_interval: Duration,
-) {
-    let mut state = BufferState::new(n_consumers, credit_factor, flush_every);
+/// Route one batch of protocol actions out of a node. Returns true when the
+/// node initiated its own stop (shutdown forwarded / consumers stopped).
+fn perform_node_actions(
+    acts: Vec<BufferAction>,
+    parent: &ParentLink,
+    slot: usize,
+    siblings: &[Sender<ToBuffer>],
+    children: &ChildLink,
+) -> bool {
     let mut stopping = false;
-    let perform = |state: &mut BufferState,
-                   acts: Vec<BufferAction>,
-                   stopping: &mut bool| {
-        for act in acts {
-            match act {
-                BufferAction::RunOn { consumer, task } => {
-                    let _ = consumers[consumer].send(ToConsumer::Run(task));
+    for act in acts {
+        match act {
+            BufferAction::RunOn { consumer, task } => {
+                if let ChildLink::Consumers(cons) = children {
+                    let _ = cons[consumer].send(ToConsumer::Run(task));
                 }
-                BufferAction::RequestTasks { amount } => {
-                    let _ = producer.send(ToProducer::Request { buffer: buffer_id, amount });
+            }
+            BufferAction::SendToChild { child, tasks } => {
+                if let ChildLink::Buffers(bufs) = children {
+                    let _ = bufs[child].send(ToBuffer::Assign(tasks));
                 }
-                BufferAction::FlushResults(rs) => {
-                    if !rs.is_empty() {
-                        let _ = producer.send(ToProducer::Results(rs));
+            }
+            BufferAction::RequestTasks { amount } => match parent {
+                ParentLink::Producer(tx) => {
+                    let _ = tx.send(ToProducer::Request { buffer: slot, amount });
+                }
+                ParentLink::Buffer(tx) => {
+                    let _ = tx.send(ToBuffer::ChildRequest { child: slot, amount });
+                }
+            },
+            BufferAction::FlushResults(rs) => {
+                if !rs.is_empty() {
+                    match parent {
+                        ParentLink::Producer(tx) => {
+                            let _ = tx.send(ToProducer::Results(rs));
+                        }
+                        ParentLink::Buffer(tx) => {
+                            let _ = tx.send(ToBuffer::ChildResults(rs));
+                        }
                     }
                 }
-                BufferAction::ShutdownConsumers => {
-                    for c in &consumers {
+            }
+            BufferAction::StealRequest { victim, amount } => {
+                let _ = siblings[victim].send(ToBuffer::Steal { thief: slot, amount });
+            }
+            BufferAction::StealGrant { thief, tasks } => {
+                let _ = siblings[thief].send(ToBuffer::Stolen(tasks));
+            }
+            BufferAction::ShutdownConsumers => {
+                if let ChildLink::Consumers(cons) = children {
+                    for c in cons {
                         let _ = c.send(ToConsumer::Stop);
                     }
-                    *stopping = true;
                 }
+                stopping = true;
             }
-        }
-        let _ = state;
-    };
-
-    let acts = state.on_start();
-    perform(&mut state, acts, &mut stopping);
-    while !stopping {
-        match rx.recv_timeout(flush_interval) {
-            Ok(ToBuffer::Assign(tasks)) => {
-                let acts = state.on_assign(tasks);
-                perform(&mut state, acts, &mut stopping);
+            BufferAction::ShutdownChildren => {
+                if let ChildLink::Buffers(bufs) = children {
+                    for c in bufs {
+                        let _ = c.send(ToBuffer::Shutdown);
+                    }
+                }
+                stopping = true;
             }
-            Ok(ToBuffer::Done { consumer, result }) => {
-                let acts = state.on_done(consumer, result);
-                perform(&mut state, acts, &mut stopping);
-            }
-            Ok(ToBuffer::Shutdown) => {
-                let acts = state.on_shutdown();
-                perform(&mut state, acts, &mut stopping);
-            }
-            Err(RecvTimeoutError::Timeout) => {
-                let acts = state.on_tick();
-                perform(&mut state, acts, &mut stopping);
-            }
-            Err(RecvTimeoutError::Disconnected) => break,
         }
     }
+    stopping
+}
+
+#[allow(clippy::too_many_arguments)]
+fn node_loop(
+    mut state: BufferState,
+    rx: Receiver<ToBuffer>,
+    parent: ParentLink,
+    slot: usize,
+    siblings: Vec<Sender<ToBuffer>>,
+    children: ChildLink,
+    flush_interval: Duration,
+    report_stats: impl FnOnce(&BufferState),
+) {
+    let mut stopping = false;
+    let acts = state.on_start();
+    stopping |= perform_node_actions(acts, &parent, slot, &siblings, &children);
+    while !stopping {
+        let acts = match rx.recv_timeout(flush_interval) {
+            Ok(ToBuffer::Assign(tasks)) => state.on_assign(tasks),
+            Ok(ToBuffer::Done { consumer, result }) => state.on_done(consumer, result),
+            Ok(ToBuffer::ChildRequest { child, amount }) => state.on_child_request(child, amount),
+            Ok(ToBuffer::ChildResults(rs)) => state.on_child_results(rs),
+            Ok(ToBuffer::Steal { thief, amount }) => state.on_steal_request(thief, amount),
+            Ok(ToBuffer::Stolen(tasks)) => state.on_steal_grant(tasks),
+            Ok(ToBuffer::Shutdown) => state.on_shutdown(),
+            Err(RecvTimeoutError::Timeout) => state.on_tick(),
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        stopping |= perform_node_actions(acts, &parent, slot, &siblings, &children);
+    }
+    report_stats(&state);
 }
 
 fn consumer_loop(
@@ -434,6 +545,44 @@ mod tests {
         );
         assert_eq!(report.results.len(), 5);
         assert_eq!(report.filling.overlap_violations(), 0);
+    }
+
+    #[test]
+    fn depth2_tree_runs_all_tasks_through_relays() {
+        let mut cfg = quick_cfg(8); // 2 leaves of 4 consumers
+        cfg.depth = 2;
+        cfg.fanout = 2; // one relay over the two leaves
+        let report = run_scheduler(
+            &cfg,
+            Box::new(StaticSleeps { n: 60, secs: 1.0 }),
+            Arc::new(SleepExecutor { time_scale: 0.001 }),
+        );
+        assert_eq!(report.results.len(), 60);
+        assert_eq!(report.filling.overlap_violations(), 0);
+        // 2 leaves + 1 relay, all saw the shutdown.
+        assert_eq!(report.node_stats.len(), 3);
+        assert!(report.node_stats.iter().all(|s| s.saw_shutdown));
+        assert!(report.node_stats.iter().all(|s| s.max_queue <= s.credit_bound));
+    }
+
+    #[test]
+    fn depth3_tree_with_stealing_conserves_tasks() {
+        let mut cfg = quick_cfg(8); // 2 leaves of 4
+        cfg.depth = 3;
+        cfg.fanout = 2;
+        cfg.steal = true;
+        let report = run_scheduler(
+            &cfg,
+            Box::new(Chaining { initial: 8, total: 40, created: 0 }),
+            Arc::new(SleepExecutor { time_scale: 0.001 }),
+        );
+        assert_eq!(report.results.len(), 40);
+        let mut ids: Vec<u64> = report.results.iter().map(|r| r.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 40, "no duplicates under stealing");
+        assert!(report.node_stats.iter().all(|s| s.saw_shutdown));
+        assert!(report.node_stats.iter().all(|s| s.max_queue <= s.credit_bound));
     }
 
     #[test]

@@ -1,0 +1,168 @@
+//! Protocol invariants of the N-level buffer tree, checked with the
+//! in-repo `testutil` property harness across random tree shapes and task
+//! counts:
+//!
+//! * **conservation** — no task is lost or duplicated, on any topology,
+//!   with and without work stealing;
+//! * **credit bound** — every node's queue stays within
+//!   `credit_factor × subtree_consumers`;
+//! * **shutdown** — the broadcast reaches every level of the tree;
+//! * **runtime agreement** — the threaded runtime and the DES execute the
+//!   same state machines, so they must agree on tasks-executed counts.
+
+use std::sync::Arc;
+
+use caravan::config::SchedulerConfig;
+use caravan::des::{run_des, DesConfig, DesReport, SleepDurations};
+use caravan::scheduler::{run_scheduler, SleepExecutor};
+use caravan::testutil::{check, pair, usize_in};
+use caravan::util::rng::Pcg64;
+use caravan::workload::{TestCase, TestCaseEngine};
+
+/// Random tree shape drawn from the property inputs.
+fn shape(np: usize, cpb: usize, depth: usize, fanout: usize, steal: bool) -> SchedulerConfig {
+    SchedulerConfig {
+        np,
+        consumers_per_buffer: cpb,
+        depth,
+        fanout,
+        steal,
+        ..Default::default()
+    }
+}
+
+fn des_run(cfg: &SchedulerConfig, case: TestCase, n: usize, seed: u64) -> DesReport {
+    let mut dcfg = DesConfig::new(cfg.np);
+    dcfg.sched = cfg.clone();
+    run_des(
+        &dcfg,
+        Box::new(TestCaseEngine::new(case, n, seed)),
+        Box::new(SleepDurations),
+    )
+}
+
+/// All ids 0..n present exactly once.
+fn ids_complete(r: &DesReport, n: usize) -> bool {
+    let mut ids: Vec<u64> = r.results.iter().map(|x| x.id).collect();
+    ids.sort();
+    ids.dedup();
+    ids.len() == n && ids.last().copied() == Some(n as u64 - 1)
+}
+
+#[test]
+fn random_trees_conserve_tasks_and_respect_credit_bounds() {
+    check(
+        "tree conserves tasks, bounds queues, shuts down every level",
+        pair(pair(usize_in(1..48), usize_in(1..9)), pair(usize_in(1..4), usize_in(2..5))),
+        |&((np, cpb), (depth, fanout))| {
+            let steal = (np + depth) % 2 == 0;
+            let cfg = shape(np, cpb, depth, fanout, steal);
+            let n = (np * 4).max(3);
+            let r = des_run(&cfg, TestCase::TC3, n, np as u64 + depth as u64);
+            ids_complete(&r, n)
+                && r.filling.overlap_violations() == 0
+                && r.node_stats.iter().all(|s| s.max_queue <= s.credit_bound)
+                && r.node_stats.iter().all(|s| s.saw_shutdown)
+        },
+    );
+}
+
+#[test]
+fn stealing_never_duplicates_or_drops_under_imbalance() {
+    // TC2's heavy tail plus tiny leaves maximizes sideways traffic.
+    check(
+        "stealing preserves exactly-once execution",
+        pair(usize_in(2..40), usize_in(1..4)),
+        |&(np, depth)| {
+            let cfg = shape(np, 2, depth, 2, true);
+            let n = np * 6;
+            let r = des_run(&cfg, TestCase::TC2, n, 0xBEEF + np as u64);
+            ids_complete(&r, n) && r.filling.overlap_violations() == 0
+        },
+    );
+}
+
+#[test]
+fn depth_sweep_passes_full_suite() {
+    // The acceptance sweep: depth ∈ {1, 2, 3} at a fixed realistic shape.
+    for depth in 1..=3usize {
+        for steal in [false, true] {
+            let cfg = shape(96, 8, depth, 4, steal);
+            let n = 96 * 20;
+            let r = des_run(&cfg, TestCase::TC2, n, 11);
+            assert!(ids_complete(&r, n), "depth={depth} steal={steal}");
+            assert_eq!(r.filling.overlap_violations(), 0, "depth={depth}");
+            assert!(
+                r.node_stats.iter().all(|s| s.max_queue <= s.credit_bound),
+                "depth={depth} steal={steal}: credit bound violated"
+            );
+            assert!(
+                r.node_stats.iter().all(|s| s.saw_shutdown),
+                "depth={depth} steal={steal}: shutdown missed a level"
+            );
+            let rate = r.rate(96);
+            assert!(rate > 0.85, "depth={depth} steal={steal}: rate={rate}");
+            assert_eq!(r.level_fill.len(), depth);
+        }
+    }
+}
+
+#[test]
+fn shutdown_reaches_all_levels_even_with_no_work() {
+    struct Nothing;
+    impl caravan::tasklib::SearchEngine for Nothing {
+        fn start(&mut self, _s: &mut dyn caravan::tasklib::TaskSink) {}
+        fn on_done(
+            &mut self,
+            _r: &caravan::tasklib::TaskResult,
+            _s: &mut dyn caravan::tasklib::TaskSink,
+        ) {
+        }
+    }
+    let mut dcfg = DesConfig::new(24);
+    dcfg.sched = shape(24, 3, 3, 2, true);
+    let r = run_des(&dcfg, Box::new(Nothing), Box::new(SleepDurations));
+    assert!(r.results.is_empty());
+    assert!(r.node_stats.iter().all(|s| s.saw_shutdown), "{:?}", r.node_stats);
+}
+
+#[test]
+fn threaded_runtime_and_des_agree_on_tasks_executed() {
+    // The two runtimes drive the same state machines; on identical
+    // workloads they must execute the same task set. Hand-rolled shape
+    // sampling (the threaded runtime is wall-clock bound, so a handful of
+    // shapes rather than the full 128-case harness sweep).
+    let mut rng = Pcg64::new(2024);
+    for trial in 0..6u64 {
+        let np = 2 + rng.below(7) as usize; // 2..=8
+        let cpb = 1 + rng.below(4) as usize;
+        let depth = 1 + rng.below(3) as usize; // 1..=3
+        let fanout = 2 + rng.below(2) as usize;
+        let steal = trial % 2 == 0;
+        let mut cfg = shape(np, cpb, depth, fanout, steal);
+        cfg.time_scale = 0.001;
+        cfg.flush_interval_ms = 2;
+        let case = [TestCase::TC1, TestCase::TC2, TestCase::TC3][(trial % 3) as usize];
+        let n = np * 3;
+
+        let threaded = run_scheduler(
+            &cfg,
+            Box::new(TestCaseEngine::new(case, n, trial)),
+            Arc::new(SleepExecutor { time_scale: 0.001 }),
+        );
+        let des = des_run(&cfg, case, n, trial);
+
+        assert_eq!(
+            threaded.results.len(),
+            des.results.len(),
+            "trial {trial} (np={np} cpb={cpb} depth={depth} steal={steal})"
+        );
+        let mut t_ids: Vec<u64> = threaded.results.iter().map(|r| r.id).collect();
+        let mut d_ids: Vec<u64> = des.results.iter().map(|r| r.id).collect();
+        t_ids.sort();
+        d_ids.sort();
+        assert_eq!(t_ids, d_ids, "trial {trial}: executed task sets differ");
+        assert!(threaded.node_stats.iter().all(|s| s.saw_shutdown));
+        assert!(threaded.node_stats.iter().all(|s| s.max_queue <= s.credit_bound));
+    }
+}
