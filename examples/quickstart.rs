@@ -3,13 +3,15 @@
 //! Mirrors the three example programs of the paper:
 //!   1. a minimal batch of ten parallel tasks,
 //!   2. callbacks: each completion spawns a follow-up task,
-//!   3. async/await: three concurrent activities of five sequential tasks.
+//!   3. async/await: three concurrent activities of five sequential tasks,
+//! plus the Job API v2 extras: priorities, cancellation and status.
 //!
 //! Run: `cargo run --release --example quickstart`
 //! (uses time-compressed dummy tasks: one virtual second = 2 ms.)
 
 use std::sync::Arc;
 
+use caravan::api::JobSpec;
 use caravan::config::SchedulerConfig;
 use caravan::engine::Session;
 use caravan::scheduler::SleepExecutor;
@@ -66,6 +68,19 @@ fn main() {
     for a in activities {
         a.join().unwrap();
     }
+
+    // --- 4. Job API v2: priority + cancellation ---------------------------
+    println!("== v2: a prioritized job and a cancelled one ==");
+    // Occupy every consumer so the cancellation target is still queued.
+    let blockers: Vec<_> = (0..8).map(|_| session.submit(JobSpec::sleep(5.0))).collect();
+    let urgent = session.submit(JobSpec::sleep(1.0).priority(9).tag("urgent"));
+    let doomed = session.submit(JobSpec::sleep(30.0));
+    session.cancel(&doomed);
+    session.await_all(&blockers);
+    let r = session.await_task(&urgent);
+    println!("  urgent: rc={} attempt={}", r.rc, r.attempt);
+    let r = session.await_task(&doomed);
+    println!("  doomed: cancelled={} (status {:?})", r.cancelled(), session.status(&doomed));
 
     let report = session.shutdown();
     println!(

@@ -11,6 +11,7 @@
 
 mod common;
 
+use caravan::api::JobSink;
 use caravan::des::{run_des, DesConfig, SleepDurations};
 use caravan::tasklib::{Payload, SearchEngine, TaskResult, TaskSink};
 use common::banner;
@@ -21,12 +22,12 @@ struct FixedTasks {
 }
 
 impl SearchEngine for FixedTasks {
-    fn start(&mut self, sink: &mut dyn TaskSink) {
+    fn start(&mut self, sink: &mut dyn JobSink) {
         for _ in 0..self.n {
             sink.submit(Payload::Sleep { seconds: self.secs });
         }
     }
-    fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn TaskSink) {}
+    fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn JobSink) {}
 }
 
 fn run(np: usize, n: usize, secs: f64, direct: bool) -> (f64, f64, u64) {

@@ -13,6 +13,7 @@
 mod common;
 
 use caravan::des::{run_des, DesConfig, SleepDurations};
+use caravan::util::cli::Args;
 use caravan::workload::{TestCase, TestCaseEngine};
 use common::{banner, timed};
 
@@ -64,6 +65,7 @@ fn run_point(np: usize, depth: usize, steal: bool, tasks_per_proc: usize) {
 }
 
 fn main() {
+    let args = Args::parse();
     banner(
         "Fig. 3 extension — filling rate vs buffer-tree depth (DES, TC2)",
         "per-level fill = mean/min subtree rate; prod-msgs = rank 0 messages in+out",
@@ -72,6 +74,21 @@ fn main() {
         "{:>7} {:>6} {:>6} {:>9} | {:>8} | {:>9} {:>7} {:>8} | per-level fill",
         "Np", "depth", "steal", "N", "fill", "prod-msg", "stolen", "bench-s"
     );
+    if args.has_flag("quick") {
+        // CI smoke config: same depth sweep and assertions (conservation,
+        // credit bounds, shutdown), tiny scale so protocol regressions
+        // surface in seconds.
+        // 1024 consumers = 3 leaf buffers of 384, so depth ≥ 2 still
+        // exercises real relay nodes.
+        let np = args.get_usize("np", 1024);
+        let tpp = args.get_usize("tasks-per-proc", 5);
+        for depth in 1..=3usize {
+            run_point(np, depth, false, tpp);
+        }
+        run_point(np, 3, true, tpp);
+        println!("# quick smoke config (--quick): protocol invariants asserted at tiny scale.");
+        return;
+    }
     // The paper's ceiling: depth sweep at 16 384 consumers, 43 leaf buffers.
     for depth in 1..=3usize {
         run_point(16_384, depth, false, 25);

@@ -13,6 +13,7 @@ mod common;
 
 use std::sync::Arc;
 
+use caravan::api::JobSink;
 use caravan::config::SchedulerConfig;
 use caravan::extproc::CommandExecutor;
 use caravan::scheduler::{run_scheduler, SleepExecutor};
@@ -25,12 +26,12 @@ struct Cmds {
 }
 
 impl SearchEngine for Cmds {
-    fn start(&mut self, sink: &mut dyn TaskSink) {
+    fn start(&mut self, sink: &mut dyn JobSink) {
         for _ in 0..self.n {
             sink.submit(Payload::Command { cmdline: self.cmd.clone() });
         }
     }
-    fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn TaskSink) {}
+    fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn JobSink) {}
 }
 
 struct Sleeps {
@@ -39,12 +40,12 @@ struct Sleeps {
 }
 
 impl SearchEngine for Sleeps {
-    fn start(&mut self, sink: &mut dyn TaskSink) {
+    fn start(&mut self, sink: &mut dyn JobSink) {
         for _ in 0..self.n {
             sink.submit(Payload::Sleep { seconds: self.secs });
         }
     }
-    fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn TaskSink) {}
+    fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn JobSink) {}
 }
 
 fn main() {

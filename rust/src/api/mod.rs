@@ -1,0 +1,374 @@
+//! Job API v2 — typed submissions with priority, retry and cancellation.
+//!
+//! CARAVAN's promise (§2.1) is that search engines only say *what* to run
+//! while the framework owns distribution. The original `TaskSink::submit
+//! (Payload) -> TaskId` surface undercut that: every engine kept its own
+//! `TaskId -> context` map, failed runs had no recourse beyond "engines
+//! decide whether to resubmit", and there was no priority or cancellation.
+//! This module is the redesigned surface:
+//!
+//! * [`JobSpec`] — a typed job description with a builder
+//!   (`JobSpec::eval(point).priority(2).retries(3)`): payload plus
+//!   priority, retry budget, optional timeout and an optional tag.
+//! * [`JobSink`] — the submission surface both runtimes implement.
+//!   It extends the legacy [`TaskSink`] (which still works — a plain
+//!   `submit(payload)` is `submit_job(JobSpec::new(payload))`), adding
+//!   `submit_job` and `cancel`.
+//! * [`JobEngine`] — the typed engine trait: `submit` takes an
+//!   engine-owned context value that is handed back with the final
+//!   [`TaskResult`] in `on_done`. The framework keeps the `TaskId ->
+//!   context` map exactly once (in [`JobAdapter`]), killing the per-engine
+//!   `by_task` HashMaps.
+//! * [`JobAdapter`] — wraps a [`JobEngine`] into the object-safe
+//!   [`SearchEngine`] the runtimes drive, so typed engines run unchanged
+//!   on the threaded scheduler and the DES.
+//! * [`JobStatus`] — coarse lifecycle state surfaced through
+//!   [`Session`](crate::engine::Session).
+//!
+//! Semantics owned by the scheduler (identical in both runtimes, see
+//! [`crate::scheduler::protocol`]):
+//!
+//! * **priority** — queues at every tree level are priority-ordered
+//!   (higher `priority` first, FIFO within a level);
+//! * **retry** — a task finishing with `rc != 0` and remaining retries is
+//!   re-queued at its leaf transparently; the final [`TaskResult`] carries
+//!   the attempt index;
+//! * **cancel** — best-effort: a cancelled task still queued anywhere in
+//!   the tree is dropped (counted in `NodeStats::cancelled_dropped`) and
+//!   completes with `rc == RC_CANCELLED`; a task already running finishes
+//!   normally.
+
+use std::collections::HashMap;
+
+use crate::tasklib::{Payload, SearchEngine, TaskId, TaskResult, TaskSink, TaskSpec};
+
+/// A typed job submission: what to run plus how to schedule it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub payload: Payload,
+    /// Scheduling priority: higher runs first (default 0). Ties are FIFO.
+    pub priority: u8,
+    /// Transparent scheduler-side resubmissions after `rc != 0` (default 0).
+    pub max_retries: u32,
+    /// Per-attempt wall/virtual-time budget. Enforced by the executors:
+    /// the DES truncates the attempt at the budget with `rc == RC_TIMEOUT`;
+    /// the external-process executor kills the child. Timed-out attempts
+    /// consume a retry like any other failure.
+    pub timeout_s: Option<f64>,
+    /// Free-form label carried on the task (for logs and debugging).
+    pub tag: Option<String>,
+}
+
+impl JobSpec {
+    pub fn new(payload: Payload) -> Self {
+        Self { payload, priority: 0, max_retries: 0, timeout_s: None, tag: None }
+    }
+
+    /// In-process evaluation of a parameter point (seed 0; see [`Self::seed`]).
+    pub fn eval(input: Vec<f64>) -> Self {
+        Self::new(Payload::Eval { input, seed: 0 })
+    }
+
+    /// Dummy sleep task (tests, §3 workloads).
+    pub fn sleep(seconds: f64) -> Self {
+        Self::new(Payload::Sleep { seconds })
+    }
+
+    /// External simulator command line (§2.2 contract).
+    pub fn command(cmdline: impl Into<String>) -> Self {
+        Self::new(Payload::Command { cmdline: cmdline.into() })
+    }
+
+    /// RNG stream selector for [`Payload::Eval`] (no-op on other payloads).
+    pub fn seed(mut self, seed: u64) -> Self {
+        if let Payload::Eval { seed: s, .. } = &mut self.payload {
+            *s = seed;
+        }
+        self
+    }
+
+    pub fn priority(mut self, priority: u8) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn retries(mut self, max_retries: u32) -> Self {
+        self.max_retries = max_retries;
+        self
+    }
+
+    pub fn timeout(mut self, seconds: f64) -> Self {
+        self.timeout_s = Some(seconds);
+        self
+    }
+
+    pub fn tag(mut self, tag: impl Into<String>) -> Self {
+        self.tag = Some(tag.into());
+        self
+    }
+
+    /// Materialize as a scheduler task with the given id (attempt 0).
+    pub fn into_task(self, id: TaskId) -> TaskSpec {
+        TaskSpec {
+            id,
+            payload: self.payload,
+            priority: self.priority,
+            max_retries: self.max_retries,
+            attempt: 0,
+            timeout_s: self.timeout_s,
+            tag: self.tag,
+        }
+    }
+}
+
+/// Where engines hand jobs to the scheduler. Extends the legacy
+/// [`TaskSink`]: `sink.submit(payload)` still works and is equivalent to
+/// `sink.submit_job(JobSpec::new(payload))`.
+pub trait JobSink: TaskSink {
+    /// Submit a typed job; mints and returns the task id.
+    fn submit_job(&mut self, spec: JobSpec) -> TaskId;
+    /// Request best-effort cancellation of a previously submitted job.
+    /// If the task is still queued anywhere it is dropped and completes
+    /// with `rc == RC_CANCELLED`; if it is already running (or done) the
+    /// request is a no-op.
+    fn cancel(&mut self, id: TaskId);
+}
+
+/// Coarse lifecycle state of a job, surfaced through
+/// [`Session::status`](crate::engine::Session::status).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Submitted; no final result yet (queued, running, or retrying).
+    Queued,
+    /// Finished with `rc == 0`.
+    Done,
+    /// Finished with a non-zero `rc` (after exhausting any retries).
+    Failed,
+    /// Dropped by a cancellation before it ran.
+    Cancelled,
+}
+
+impl JobStatus {
+    pub fn from_result(r: &TaskResult) -> Self {
+        if r.cancelled() {
+            JobStatus::Cancelled
+        } else if r.ok() {
+            JobStatus::Done
+        } else {
+            JobStatus::Failed
+        }
+    }
+}
+
+/// The engine-facing submission surface handed to [`JobEngine`] callbacks:
+/// a [`JobSink`] plus the framework-owned `TaskId -> context` map.
+pub struct Jobs<'a, C> {
+    sink: &'a mut dyn JobSink,
+    ctx: &'a mut HashMap<TaskId, C>,
+}
+
+impl<C> Jobs<'_, C> {
+    /// Submit a job together with an engine-owned context value; the
+    /// context is returned with the final result in
+    /// [`JobEngine::on_done`].
+    pub fn submit(&mut self, spec: JobSpec, ctx: C) -> TaskId {
+        let id = self.sink.submit_job(spec);
+        self.ctx.insert(id, ctx);
+        id
+    }
+
+    /// Best-effort cancellation (see [`JobSink::cancel`]). The context is
+    /// *not* dropped here: every submitted job yields exactly one final
+    /// result (normal or cancelled), which consumes it.
+    pub fn cancel(&mut self, id: TaskId) {
+        self.sink.cancel(id);
+    }
+
+    /// Jobs submitted but not yet completed (or cancelled).
+    pub fn in_flight(&self) -> usize {
+        self.ctx.len()
+    }
+}
+
+/// A search engine on the v2 API: typed submissions, no id bookkeeping.
+///
+/// `on_done` receives the context value stored at submission alongside the
+/// final [`TaskResult`] — which may be a transparent-retry survivor
+/// (`result.attempt > 0`) or a cancellation (`result.cancelled()`).
+pub trait JobEngine: Send {
+    /// Engine-owned per-job context (a parameter point, a walker index…).
+    type Ctx: Send;
+
+    fn start(&mut self, jobs: &mut Jobs<'_, Self::Ctx>);
+
+    fn on_done(&mut self, result: &TaskResult, ctx: Self::Ctx, jobs: &mut Jobs<'_, Self::Ctx>);
+
+    /// Polled between events by the threaded runtime (see
+    /// [`SearchEngine::poll`]). Return `false` while the engine may still
+    /// produce tasks spontaneously.
+    fn poll(&mut self, jobs: &mut Jobs<'_, Self::Ctx>) -> bool {
+        let _ = jobs;
+        true
+    }
+
+    /// Called once after the scheduler drained all tasks.
+    fn finish(&mut self) {}
+}
+
+/// Adapter running a typed [`JobEngine`] on the object-safe
+/// [`SearchEngine`] interface both runtimes drive. Owns the single
+/// `TaskId -> context` map so engines do not have to.
+///
+/// Derefs to the inner engine so constructors can return the adapter
+/// without hiding engine-specific accessors.
+pub struct JobAdapter<E: JobEngine> {
+    engine: E,
+    ctx: HashMap<TaskId, E::Ctx>,
+}
+
+impl<E: JobEngine> JobAdapter<E> {
+    pub fn new(engine: E) -> Self {
+        Self { engine, ctx: HashMap::new() }
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.engine
+    }
+}
+
+impl<E: JobEngine> std::ops::Deref for JobAdapter<E> {
+    type Target = E;
+    fn deref(&self) -> &E {
+        &self.engine
+    }
+}
+
+impl<E: JobEngine> std::ops::DerefMut for JobAdapter<E> {
+    fn deref_mut(&mut self) -> &mut E {
+        &mut self.engine
+    }
+}
+
+impl<E: JobEngine> SearchEngine for JobAdapter<E> {
+    fn start(&mut self, sink: &mut dyn JobSink) {
+        let Self { engine, ctx } = self;
+        engine.start(&mut Jobs { sink, ctx });
+    }
+
+    fn on_done(&mut self, result: &TaskResult, sink: &mut dyn JobSink) {
+        let Self { engine, ctx } = self;
+        // Retried attempts never reach the producer, so exactly one final
+        // result consumes each context. A missing context means the result
+        // was not submitted through this adapter — ignore it.
+        if let Some(c) = ctx.remove(&result.id) {
+            engine.on_done(result, c, &mut Jobs { sink, ctx });
+        }
+    }
+
+    fn poll(&mut self, sink: &mut dyn JobSink) -> bool {
+        let Self { engine, ctx } = self;
+        engine.poll(&mut Jobs { sink, ctx })
+    }
+
+    fn finish(&mut self) {
+        self.engine.finish();
+    }
+}
+
+/// Box a typed engine as a runtime-ready [`SearchEngine`].
+pub fn job_engine<E: JobEngine + 'static>(engine: E) -> Box<dyn SearchEngine> {
+    Box::new(JobAdapter::new(engine))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasklib::VecSink;
+
+    #[test]
+    fn builder_sets_all_fields() {
+        let spec = JobSpec::eval(vec![0.5, 1.0])
+            .seed(7)
+            .priority(3)
+            .retries(2)
+            .timeout(4.5)
+            .tag("gen0");
+        assert_eq!(spec.priority, 3);
+        assert_eq!(spec.max_retries, 2);
+        assert_eq!(spec.timeout_s, Some(4.5));
+        assert_eq!(spec.tag.as_deref(), Some("gen0"));
+        match &spec.payload {
+            Payload::Eval { input, seed } => {
+                assert_eq!(input, &vec![0.5, 1.0]);
+                assert_eq!(*seed, 7);
+            }
+            other => panic!("unexpected payload {other:?}"),
+        }
+        let task = spec.into_task(9);
+        assert_eq!(task.id, 9);
+        assert_eq!(task.attempt, 0);
+        assert_eq!(task.priority, 3);
+    }
+
+    #[test]
+    fn seed_is_noop_on_non_eval_payloads() {
+        let spec = JobSpec::sleep(1.0).seed(42);
+        assert_eq!(spec.payload, Payload::Sleep { seconds: 1.0 });
+    }
+
+    #[test]
+    fn adapter_round_trips_context() {
+        struct Echo {
+            got: Vec<(u64, String)>,
+        }
+        impl JobEngine for Echo {
+            type Ctx = String;
+            fn start(&mut self, jobs: &mut Jobs<'_, String>) {
+                jobs.submit(JobSpec::sleep(1.0), "a".into());
+                jobs.submit(JobSpec::sleep(2.0).priority(5), "b".into());
+                assert_eq!(jobs.in_flight(), 2);
+            }
+            fn on_done(&mut self, r: &TaskResult, ctx: String, _jobs: &mut Jobs<'_, String>) {
+                self.got.push((r.id, ctx));
+            }
+        }
+        let mut adapter = JobAdapter::new(Echo { got: Vec::new() });
+        let mut sink = VecSink::new();
+        SearchEngine::start(&mut adapter, &mut sink);
+        assert_eq!(sink.submitted.len(), 2);
+        assert_eq!(sink.submitted[1].priority, 5);
+        let r = TaskResult {
+            id: 1,
+            consumer: 0,
+            results: vec![],
+            begin: 0.0,
+            finish: 1.0,
+            rc: 0,
+            attempt: 0,
+        };
+        SearchEngine::on_done(&mut adapter, &r, &mut sink);
+        assert_eq!(adapter.inner().got, vec![(1, "b".to_string())]);
+        // Unknown ids (no context) are ignored, not a panic.
+        let unknown = TaskResult { id: 99, ..r };
+        SearchEngine::on_done(&mut adapter, &unknown, &mut sink);
+        assert_eq!(adapter.inner().got.len(), 1);
+    }
+
+    #[test]
+    fn status_from_result() {
+        let ok = TaskResult {
+            id: 0,
+            consumer: 0,
+            results: vec![],
+            begin: 0.0,
+            finish: 0.0,
+            rc: 0,
+            attempt: 0,
+        };
+        assert_eq!(JobStatus::from_result(&ok), JobStatus::Done);
+        let failed = TaskResult { rc: 3, ..ok.clone() };
+        assert_eq!(JobStatus::from_result(&failed), JobStatus::Failed);
+        let cancelled = TaskResult { rc: crate::tasklib::RC_CANCELLED, ..ok };
+        assert_eq!(JobStatus::from_result(&cancelled), JobStatus::Cancelled);
+    }
+}

@@ -2,6 +2,19 @@
 //! application scenarios. All defaults follow the paper where it states
 //! them (e.g. one buffer per 384 consumers).
 
+/// How a starved buffer node picks the sibling to steal queued tasks from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StealPolicy {
+    /// Blind rotation over sibling slots (the PR 1 behaviour).
+    RoundRobin,
+    /// Prefer the sibling with the deepest *known* queue. Depth estimates
+    /// come from steal replies (each grant reports the victim's remaining
+    /// queue) and from incoming steal requests (the thief is starved, so
+    /// its depth is ~0); unknown siblings are treated as deepest, so the
+    /// first attempts explore in rotation before exploiting.
+    DeepestQueue,
+}
+
 /// Scheduler topology + flow-control parameters (threaded runtime and DES).
 ///
 /// The buffered layer generalizes to an *N-level tree*: `depth = 1` is the
@@ -23,6 +36,8 @@ pub struct SchedulerConfig {
     /// Allow starved buffer nodes to steal queued tasks from a sibling
     /// before escalating demand to their parent.
     pub steal: bool,
+    /// Victim-selection policy when `steal` is enabled.
+    pub steal_policy: StealPolicy,
     /// A buffer keeps `credit_factor × subtree-consumers` tasks on hand.
     pub credit_factor: usize,
     /// Result-store batch size before a flush to the parent.
@@ -42,6 +57,7 @@ impl Default for SchedulerConfig {
             depth: 1,
             fanout: 8,
             steal: false,
+            steal_policy: StealPolicy::DeepestQueue,
             credit_factor: 2,
             flush_every: 16,
             time_scale: 1.0,

@@ -22,6 +22,11 @@
 //! steal queued tasks from a sibling — all driven here in virtual time, so
 //! a depth-3 tree over 10⁵ simulated consumers runs in seconds of wall
 //! clock and the resulting job filling rate (Eq. 1) is exact, not sampled.
+//!
+//! Because the DES runs the identical state machines, the Job API v2
+//! semantics — priority ordering, transparent retry (a failed attempt's
+//! `rc` comes from [`DurationModel::rc`]), per-attempt timeouts and
+//! cancellation — are all testable deterministically here.
 
 mod model;
 
@@ -30,10 +35,11 @@ pub use model::{ConstResults, DurationModel, SleepDurations};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::api::{JobSink, JobSpec};
 use crate::config::{DesLatencyConfig, SchedulerConfig, TreeNodeKind, TreeTopology};
 use crate::scheduler::metrics::{FillingRate, LevelFill, NodeStats};
 use crate::scheduler::protocol::{BufferAction, BufferState, ProducerAction, ProducerState};
-use crate::tasklib::{Payload, SearchEngine, TaskResult, TaskSink, TaskSpec};
+use crate::tasklib::{Payload, SearchEngine, TaskId, TaskResult, TaskSink, TaskSpec, RC_TIMEOUT};
 
 /// Virtual-time event payloads. `node` indexes the buffer tree.
 #[derive(Debug)]
@@ -50,10 +56,13 @@ enum Ev {
     NodeRequest { node: usize, child: usize, amount: usize },
     /// Interior child flushes results to its parent `node`.
     NodeResults { node: usize, results: Vec<TaskResult> },
-    /// Steal request from node id `thief` arrives at `node`.
-    NodeSteal { node: usize, thief: usize, amount: usize },
+    /// Steal request from node id `thief` (sibling slot `thief_slot`)
+    /// arrives at `node`.
+    NodeSteal { node: usize, thief: usize, thief_slot: usize, amount: usize },
     /// Steal reply (possibly empty) arrives back at `node`.
-    NodeStolen { node: usize, tasks: Vec<TaskSpec> },
+    NodeStolen { node: usize, from_slot: usize, left: usize, tasks: Vec<TaskSpec> },
+    /// Cancellation notice arrives at a node.
+    NodeCancel { node: usize, id: TaskId },
     /// Shutdown notice arrives at a node.
     NodeShutdown { node: usize },
 }
@@ -131,19 +140,45 @@ impl DesReport {
     pub fn tasks_stolen(&self) -> u64 {
         self.node_stats.iter().map(|s| s.steals_received).sum()
     }
+
+    /// Steal attempts that came back empty, tree-wide.
+    pub fn steals_failed(&self) -> u64 {
+        self.node_stats.iter().map(|s| s.steals_failed).sum()
+    }
+
+    /// Results that were cancelled before running.
+    pub fn cancelled(&self) -> usize {
+        self.results.iter().filter(|r| r.cancelled()).count()
+    }
+
+    /// Failed attempts transparently retried, tree-wide.
+    pub fn retried(&self) -> u64 {
+        self.node_stats.iter().map(|s| s.retried).sum()
+    }
 }
 
 struct MintSink<'a> {
     next_id: &'a mut u64,
     staged: &'a mut Vec<TaskSpec>,
+    cancels: &'a mut Vec<TaskId>,
 }
 
 impl TaskSink for MintSink<'_> {
     fn submit(&mut self, payload: Payload) -> u64 {
+        self.submit_job(JobSpec::new(payload))
+    }
+}
+
+impl JobSink for MintSink<'_> {
+    fn submit_job(&mut self, spec: JobSpec) -> u64 {
         let id = *self.next_id;
         *self.next_id += 1;
-        self.staged.push(TaskSpec::new(id, payload));
+        self.staged.push(spec.into_task(id));
         id
+    }
+
+    fn cancel(&mut self, id: TaskId) {
+        self.cancels.push(id);
     }
 }
 
@@ -160,6 +195,7 @@ struct Des<'a> {
     max_producer_lag: f64,
     next_id: u64,
     staged: Vec<TaskSpec>,
+    pending_cancels: Vec<TaskId>,
     filling: FillingRate,
     all_results: Vec<TaskResult>,
     events: u64,
@@ -203,9 +239,15 @@ impl<'a> Des<'a> {
                     let node = self.topo.roots[buffer];
                     self.push(t + lat, Ev::NodeAssign { node, tasks });
                 }
+                ProducerAction::BroadcastCancel { id } => {
+                    let roots = self.topo.roots.clone();
+                    for node in roots {
+                        self.push(t + lat, Ev::NodeCancel { node, id });
+                    }
+                }
                 ProducerAction::BroadcastShutdown => {
-                    for i in 0..self.topo.roots.len() {
-                        let node = self.topo.roots[i];
+                    let roots = self.topo.roots.clone();
+                    for node in roots {
                         self.push(t + lat, Ev::NodeShutdown { node });
                     }
                 }
@@ -226,16 +268,29 @@ impl<'a> Des<'a> {
                         TreeNodeKind::Interior { .. } => unreachable!("RunOn from interior"),
                     };
                     let begin = t + lat + overhead;
-                    let dur = self.durations.duration(&task);
+                    let mut dur = self.durations.duration(&task);
+                    let mut rc = self.durations.rc(&task);
+                    let mut results =
+                        if rc == 0 { self.durations.results(&task) } else { Vec::new() };
+                    // Per-attempt budget: the attempt is cut short and
+                    // reported as a timeout failure (retryable like any
+                    // other failure).
+                    if let Some(to) = task.timeout_s {
+                        if dur > to {
+                            dur = to;
+                            rc = RC_TIMEOUT;
+                            results = Vec::new();
+                        }
+                    }
                     let finish = begin + dur;
-                    let results = self.durations.results(&task);
                     let result = TaskResult {
                         id: task.id,
                         consumer: rank_base + consumer,
                         results,
                         begin,
                         finish,
-                        rc: 0,
+                        rc,
+                        attempt: task.attempt,
                     };
                     self.push(finish + lat, Ev::NodeDone { node: n, consumer, result });
                 }
@@ -262,17 +317,26 @@ impl<'a> Des<'a> {
                         None => self.topo.roots[victim],
                         Some(p) => self.topo.children_of(p)[victim],
                     };
-                    self.push(t + lat, Ev::NodeSteal { node: victim_id, thief: n, amount });
+                    self.push(
+                        t + lat,
+                        Ev::NodeSteal { node: victim_id, thief: n, thief_slot: slot, amount },
+                    );
                 }
-                BufferAction::StealGrant { thief, tasks } => {
-                    self.push(t + lat, Ev::NodeStolen { node: thief, tasks });
+                BufferAction::StealGrant { thief, from_slot, left, tasks } => {
+                    self.push(t + lat, Ev::NodeStolen { node: thief, from_slot, left, tasks });
+                }
+                BufferAction::CancelChildren { id } => {
+                    let children = self.topo.children_of(n).to_vec();
+                    for child_id in children {
+                        self.push(t + lat, Ev::NodeCancel { node: child_id, id });
+                    }
                 }
                 BufferAction::ShutdownConsumers => {
                     // Consumers are passive in the DES; nothing to schedule.
                 }
                 BufferAction::ShutdownChildren => {
-                    for i in 0..self.topo.children_of(n).len() {
-                        let child_id = self.topo.children_of(n)[i];
+                    let children = self.topo.children_of(n).to_vec();
+                    for child_id in children {
                         self.push(t + lat, Ev::NodeShutdown { node: child_id });
                     }
                 }
@@ -280,22 +344,56 @@ impl<'a> Des<'a> {
         }
     }
 
+    /// Flush engine-staged submissions and cancellations into the producer
+    /// state machine, then re-check termination. Cancellations that drop a
+    /// still-pending task synthesize their `RC_CANCELLED` result here and
+    /// feed it straight back to the engine, which may stage more work —
+    /// hence the loop.
+    fn pump_engine(&mut self, t: f64) {
+        while !self.staged.is_empty() || !self.pending_cancels.is_empty() {
+            let acts = self.producer.push_tasks(std::mem::take(&mut self.staged));
+            self.perform_producer(acts, t);
+            for id in std::mem::take(&mut self.pending_cancels) {
+                let (dropped, acts) = self.producer.on_cancel(id);
+                self.perform_producer(acts, t);
+                if let Some(spec) = dropped {
+                    let r = TaskResult::cancelled_for(&spec);
+                    {
+                        let mut sink = MintSink {
+                            next_id: &mut self.next_id,
+                            staged: &mut self.staged,
+                            cancels: &mut self.pending_cancels,
+                        };
+                        self.engine.on_done(&r, &mut sink);
+                    }
+                    self.all_results.push(r);
+                }
+            }
+        }
+        let sd = self.producer.maybe_shutdown();
+        self.perform_producer(sd, t);
+    }
+
     /// Run engine callbacks for a result batch, then hand any newly staged
     /// tasks to the producer.
     fn producer_ingest(&mut self, results: Vec<TaskResult>, t: f64) {
         self.producer.on_results(results.len());
         {
-            let mut sink = MintSink { next_id: &mut self.next_id, staged: &mut self.staged };
+            let mut sink = MintSink {
+                next_id: &mut self.next_id,
+                staged: &mut self.staged,
+                cancels: &mut self.pending_cancels,
+            };
             for r in &results {
-                self.filling.record(r);
+                // Cancelled tasks never ran: keep them out of the trace.
+                if !r.cancelled() {
+                    self.filling.record(r);
+                }
                 self.engine.on_done(r, &mut sink);
             }
         }
         self.all_results.extend(results);
-        let acts = self.producer.push_tasks(std::mem::take(&mut self.staged));
-        self.perform_producer(acts, t);
-        let sd = self.producer.maybe_shutdown();
-        self.perform_producer(sd, t);
+        self.pump_engine(t);
     }
 }
 
@@ -327,6 +425,7 @@ pub fn run_des(
         max_producer_lag: 0.0,
         next_id: 0,
         staged: Vec::new(),
+        pending_cancels: Vec::new(),
         filling: FillingRate::new(),
         all_results: Vec::new(),
         events: 0,
@@ -336,15 +435,16 @@ pub fn run_des(
 
     // Bootstrap: engine start, producer intake, buffer credit requests.
     {
-        let mut sink = MintSink { next_id: &mut des.next_id, staged: &mut des.staged };
+        let mut sink = MintSink {
+            next_id: &mut des.next_id,
+            staged: &mut des.staged,
+            cancels: &mut des.pending_cancels,
+        };
         des.engine.start(&mut sink);
     }
-    let acts = des.producer.push_tasks(std::mem::take(&mut des.staged));
-    des.perform_producer(acts, 0.0);
     des.producer.set_engine_done(true);
-    // Degenerate case: engine submitted nothing at all.
-    let sd = des.producer.maybe_shutdown();
-    des.perform_producer(sd, 0.0);
+    // Also covers the degenerate case of an engine submitting nothing.
+    des.pump_engine(0.0);
     for n in 0..n_nodes {
         let acts = des.nodes[n].on_start();
         des.perform_node(n, acts, 0.0);
@@ -385,14 +485,19 @@ pub fn run_des(
                 let acts = des.nodes[node].on_child_results(results);
                 des.perform_node(node, acts, t);
             }
-            Ev::NodeSteal { node, thief, amount } => {
+            Ev::NodeSteal { node, thief, thief_slot, amount } => {
                 let t = des.node_serve(node, time);
-                let acts = des.nodes[node].on_steal_request(thief, amount);
+                let acts = des.nodes[node].on_steal_request(thief, thief_slot, amount);
                 des.perform_node(node, acts, t);
             }
-            Ev::NodeStolen { node, tasks } => {
+            Ev::NodeStolen { node, from_slot, left, tasks } => {
                 let t = des.node_serve(node, time);
-                let acts = des.nodes[node].on_steal_grant(tasks);
+                let acts = des.nodes[node].on_steal_grant(from_slot, left, tasks);
+                des.perform_node(node, acts, t);
+            }
+            Ev::NodeCancel { node, id } => {
+                let t = des.node_serve(node, time);
+                let acts = des.nodes[node].on_cancel(id);
                 des.perform_node(node, acts, t);
             }
             Ev::NodeShutdown { node } => {
@@ -472,8 +577,8 @@ mod tests {
     fn des_empty(cfg: &DesConfig) -> DesReport {
         struct Nothing;
         impl SearchEngine for Nothing {
-            fn start(&mut self, _s: &mut dyn TaskSink) {}
-            fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn TaskSink) {}
+            fn start(&mut self, _s: &mut dyn JobSink) {}
+            fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn JobSink) {}
         }
         run_des(cfg, Box::new(Nothing), Box::new(SleepDurations))
     }
@@ -577,12 +682,12 @@ mod tests {
         // buffered layer does not.
         struct ShortTasks(usize);
         impl SearchEngine for ShortTasks {
-            fn start(&mut self, sink: &mut dyn TaskSink) {
+            fn start(&mut self, sink: &mut dyn JobSink) {
                 for _ in 0..self.0 {
                     sink.submit(Payload::Sleep { seconds: 0.5 });
                 }
             }
-            fn on_done(&mut self, _: &TaskResult, _: &mut dyn TaskSink) {}
+            fn on_done(&mut self, _: &TaskResult, _: &mut dyn JobSink) {}
         }
         // 16384 consumers completing a 0.5-s task each 0.5 s generate
         // ≈ 33 000 Done messages/s; at 50 µs service the single master can

@@ -9,12 +9,19 @@
 use crate::tasklib::{Payload, TaskSpec};
 use crate::util::rng::Pcg64;
 
-/// Decides virtual duration and results of a simulated task.
+/// Decides virtual duration, results and exit status of a simulated task.
 pub trait DurationModel: Send {
     fn duration(&mut self, task: &TaskSpec) -> f64;
     fn results(&mut self, task: &TaskSpec) -> Vec<f64> {
         let _ = task;
         Vec::new()
+    }
+    /// Exit status of the attempt (default 0 = success). The attempt index
+    /// is visible as `task.attempt`, so failure-injection models can make
+    /// the scheduler-side retry path deterministic.
+    fn rc(&mut self, task: &TaskSpec) -> i32 {
+        let _ = task;
+        0
     }
 }
 

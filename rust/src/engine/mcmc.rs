@@ -11,11 +11,14 @@
 //! walkers while each walker's own chain stays sequential — the same
 //! concurrency pattern as §2.3's "three concurrent lines of sequential
 //! tasks".
+//!
+//! A [`JobEngine`] on the Job API v2: the walker index is the job context,
+//! so the engine holds no `TaskId -> walker` map.
 
-use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::tasklib::{Payload, SearchEngine, TaskId, TaskResult, TaskSink};
+use crate::api::{JobAdapter, JobEngine, JobSpec, Jobs};
+use crate::tasklib::TaskResult;
 use crate::util::rng::Pcg64;
 
 #[derive(Clone, Debug)]
@@ -78,27 +81,25 @@ pub struct McmcEngine {
     cfg: McmcConfig,
     rng: Pcg64,
     walkers: Vec<Walker>,
-    by_task: HashMap<TaskId, usize>,
     outcome: SharedMcmc,
     seeds: u64,
 }
 
 impl McmcEngine {
-    pub fn new(cfg: McmcConfig) -> (Self, SharedMcmc) {
+    pub fn new(cfg: McmcConfig) -> (JobAdapter<Self>, SharedMcmc) {
         assert!(cfg.walkers > 0 && cfg.temperature > 0.0);
         let outcome: SharedMcmc = Arc::new(Mutex::new(McmcOutcome::default()));
         outcome.lock().unwrap().chains = vec![Vec::new(); cfg.walkers];
         outcome.lock().unwrap().values = vec![Vec::new(); cfg.walkers];
         let rng = Pcg64::new(cfg.seed);
         (
-            Self {
+            JobAdapter::new(Self {
                 rng,
                 walkers: Vec::new(),
-                by_task: HashMap::new(),
                 outcome: Arc::clone(&outcome),
                 seeds: 1,
                 cfg,
-            },
+            }),
             outcome,
         )
     }
@@ -113,16 +114,17 @@ impl McmcEngine {
         out
     }
 
-    fn submit_eval(&mut self, walker: usize, point: Vec<f64>, sink: &mut dyn TaskSink) {
+    fn submit_eval(&mut self, walker: usize, point: Vec<f64>, jobs: &mut Jobs<'_, usize>) {
         let seed = self.seeds;
         self.seeds += 1;
-        let id = sink.submit(Payload::Eval { input: point, seed });
-        self.by_task.insert(id, walker);
+        jobs.submit(JobSpec::eval(point).seed(seed), walker);
     }
 }
 
-impl SearchEngine for McmcEngine {
-    fn start(&mut self, sink: &mut dyn TaskSink) {
+impl JobEngine for McmcEngine {
+    type Ctx = usize;
+
+    fn start(&mut self, jobs: &mut Jobs<'_, usize>) {
         for w in 0..self.cfg.walkers {
             let init: Vec<f64> =
                 self.cfg.bounds.iter().map(|&(lo, hi)| self.rng.range_f64(lo, hi)).collect();
@@ -133,14 +135,11 @@ impl SearchEngine for McmcEngine {
                 steps_done: 0,
                 initialized: false,
             });
-            self.submit_eval(w, init, sink);
+            self.submit_eval(w, init, jobs);
         }
     }
 
-    fn on_done(&mut self, result: &TaskResult, sink: &mut dyn TaskSink) {
-        let Some(w) = self.by_task.remove(&result.id) else {
-            return;
-        };
+    fn on_done(&mut self, result: &TaskResult, w: usize, jobs: &mut Jobs<'_, usize>) {
         let f = result.results.first().copied().unwrap_or(f64::INFINITY);
         let (accept, first_eval) = {
             let walker = &self.walkers[w];
@@ -178,7 +177,7 @@ impl SearchEngine for McmcEngine {
             let cur = self.walkers[w].current.clone();
             let prop = self.propose_from(&cur);
             self.walkers[w].proposal = prop.clone();
-            self.submit_eval(w, prop, sink);
+            self.submit_eval(w, prop, jobs);
         }
     }
 }
@@ -187,7 +186,7 @@ impl SearchEngine for McmcEngine {
 mod tests {
     use super::*;
     use crate::des::{run_des, DesConfig, DurationModel};
-    use crate::tasklib::TaskSpec;
+    use crate::tasklib::{Payload, TaskSpec};
 
     /// Quadratic bowl: f = Σ (x−0.7)² — chains should concentrate near 0.7.
     struct Bowl;

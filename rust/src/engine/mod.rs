@@ -7,6 +7,13 @@
 //! * [`nsga2`] / [`moea`] — NSGA-II with the paper's asynchronous
 //!   generation update (§4.2) plus the synchronous baseline.
 //! * [`mcmc`] — Metropolis sampling (the dynamic-exploration use case).
+//!
+//! All engines are built on the Job API v2 ([`crate::api`]): they submit
+//! typed [`JobSpec`](crate::api::JobSpec)s with an engine-owned context
+//! value, so none of them keeps a `TaskId -> context` map. Constructors
+//! return a ready-to-run [`JobAdapter`](crate::api::JobAdapter) (it derefs
+//! to the engine), so `Box::new(engine)` still plugs into `run_scheduler`
+//! and `run_des` unchanged.
 
 pub mod mcmc;
 pub mod moea;

@@ -14,14 +14,24 @@
 //! Each individual is evaluated as a [`ParameterSet`](crate::tasklib::ParameterSet)
 //! of `n_runs` seeded simulator runs whose objective vectors are averaged,
 //! exactly as the paper's application (5 runs per individual).
+//!
+//! A [`JobEngine`] on the Job API v2: each run's job context is its
+//! `(parameter-set id, run index)`, so neither the engine nor
+//! [`PsetStore`] keeps a `TaskId` map. Failed runs arrive with a non-zero
+//! `rc` (after any transparent scheduler-side retries) and contribute an
+//! empty result vector, which the run-averaging skips.
 
 use std::sync::{Arc, Mutex};
 
 use super::nsga2::{
     environmental_selection, polynomial_mutation, sbx_crossover, CrowdedTournament, Individual,
 };
-use crate::tasklib::{PsetStore, SearchEngine, TaskResult, TaskSink};
+use crate::api::{JobAdapter, JobEngine, JobSpec, Jobs};
+use crate::tasklib::{PsetStore, TaskResult};
 use crate::util::rng::Pcg64;
+
+/// Job context of one run: `(parameter-set id, run index)`.
+type RunCtx = (u64, usize);
 
 /// MOEA configuration. Defaults mirror §4.2: `P_ini`=1000, `P_n`=500,
 /// `P_archive`=1000, crossover rate 1.0 with η_b=15, mutation rate 0.01
@@ -40,6 +50,9 @@ pub struct MoeaConfig {
     pub crossover_rate: f64,
     pub mutation_rate: f64,
     pub seed: u64,
+    /// Scheduler-side retries per run (simulator hiccups are retried
+    /// transparently before the run counts as failed).
+    pub run_retries: u32,
     /// `false` = the paper's asynchronous update; `true` = barrier baseline.
     pub synchronous: bool,
 }
@@ -58,6 +71,7 @@ impl MoeaConfig {
             crossover_rate: 1.0,
             mutation_rate: 0.01,
             seed: 0,
+            run_retries: 0,
             synchronous: false,
         }
     }
@@ -108,13 +122,13 @@ pub struct Nsga2Engine {
 }
 
 impl Nsga2Engine {
-    pub fn new(cfg: MoeaConfig) -> (Self, SharedOutcome) {
+    pub fn new(cfg: MoeaConfig) -> (JobAdapter<Self>, SharedOutcome) {
         assert!(cfg.p_n <= cfg.p_ini, "P_n must not exceed P_ini or the first update never fires");
         assert!(!cfg.bounds.is_empty());
         let outcome: SharedOutcome = Arc::new(Mutex::new(MoeaOutcome::default()));
         let rng = Pcg64::new(cfg.seed);
         (
-            Self {
+            JobAdapter::new(Self {
                 rng,
                 psets: PsetStore::new(),
                 archive: Vec::new(),
@@ -126,7 +140,7 @@ impl Nsga2Engine {
                 outcome: Arc::clone(&outcome),
                 seed_counter: 10_000,
                 cfg,
-            },
+            }),
             outcome,
         )
     }
@@ -139,10 +153,18 @@ impl Nsga2Engine {
             .collect()
     }
 
-    fn launch(&mut self, point: Vec<f64>, sink: &mut dyn TaskSink) {
+    fn launch(&mut self, point: Vec<f64>, jobs: &mut Jobs<'_, RunCtx>) {
         let seed0 = self.seed_counter;
         self.seed_counter += self.cfg.n_runs as u64;
-        self.psets.create(point, self.cfg.n_runs, seed0, sink);
+        let pid = self.psets.create_set(point.clone(), self.cfg.n_runs, seed0);
+        for k in 0..self.cfg.n_runs {
+            jobs.submit(
+                JobSpec::eval(point.clone())
+                    .seed(seed0 + k as u64)
+                    .retries(self.cfg.run_retries),
+                (pid, k),
+            );
+        }
         self.launched += 1;
         self.in_flight += 1;
     }
@@ -174,7 +196,7 @@ impl Nsga2Engine {
 
     /// Archive the ready set and, if the update condition holds, run a
     /// generation update and launch offspring.
-    fn maybe_update(&mut self, sink: &mut dyn TaskSink) {
+    fn maybe_update(&mut self, jobs: &mut Jobs<'_, RunCtx>) {
         loop {
             let threshold = if self.cfg.synchronous {
                 // Barrier: wait until nothing is in flight.
@@ -217,23 +239,28 @@ impl Nsga2Engine {
             let tournament = CrowdedTournament::new(&self.archive);
             for _ in 0..self.cfg.p_n {
                 let child = self.make_offspring(&tournament);
-                self.launch(child, sink);
+                self.launch(child, jobs);
             }
         }
     }
 }
 
-impl SearchEngine for Nsga2Engine {
-    fn start(&mut self, sink: &mut dyn TaskSink) {
+impl JobEngine for Nsga2Engine {
+    type Ctx = RunCtx;
+
+    fn start(&mut self, jobs: &mut Jobs<'_, RunCtx>) {
         for _ in 0..self.cfg.p_ini {
             let p = self.random_point();
-            self.launch(p, sink);
+            self.launch(p, jobs);
         }
     }
 
-    fn on_done(&mut self, result: &TaskResult, sink: &mut dyn TaskSink) {
+    fn on_done(&mut self, result: &TaskResult, (pid, run): RunCtx, jobs: &mut Jobs<'_, RunCtx>) {
         self.tasks_completed += 1;
-        if let Some(ps) = self.psets.record(result.id, result.results.clone()) {
+        // Failed runs (after any transparent retries) contribute an empty
+        // vector; mean_results skips them.
+        let values = if result.ok() { result.results.clone() } else { Vec::new() };
+        if let Some(ps) = self.psets.record_run(pid, run, values) {
             self.in_flight -= 1;
             let objectives = ps.mean_results();
             if objectives.is_empty() {
@@ -241,11 +268,11 @@ impl SearchEngine for Nsga2Engine {
                 // random point so the generation pipeline keeps its size.
                 crate::warnln!("individual with all-failed runs; resubmitting");
                 let p = self.random_point();
-                self.launch(p, sink);
+                self.launch(p, jobs);
                 return;
             }
             self.ready.push(Individual { point: ps.point, objectives });
-            self.maybe_update(sink);
+            self.maybe_update(jobs);
         }
     }
 
@@ -329,6 +356,40 @@ mod tests {
         let (out, _) = run_toy(true);
         assert!(out.generations_done >= 1);
         assert!(!out.archive.is_empty());
+    }
+
+    #[test]
+    fn failed_runs_are_skipped_by_run_averaging() {
+        // Every third seed fails (rc 1 after retries = 0): the pset mean
+        // must come from the surviving runs, and the optimizer must still
+        // complete all generations.
+        struct Flaky;
+        impl DurationModel for Flaky {
+            fn duration(&mut self, _t: &TaskSpec) -> f64 {
+                1.0
+            }
+            fn results(&mut self, t: &TaskSpec) -> Vec<f64> {
+                Toy2D.results(t)
+            }
+            fn rc(&mut self, t: &TaskSpec) -> i32 {
+                match &t.payload {
+                    Payload::Eval { seed, .. } if seed % 3 == 0 => 1,
+                    _ => 0,
+                }
+            }
+        }
+        let mut cfg = MoeaConfig::small(vec![(0.0, 1.0); 3]);
+        cfg.n_runs = 3;
+        cfg.generations = 3;
+        let (engine, outcome) = Nsga2Engine::new(cfg);
+        let r = run_des(&DesConfig::new(8), Box::new(engine), Box::new(Flaky));
+        assert!(!r.results.is_empty());
+        let out = outcome.lock().unwrap();
+        assert_eq!(out.generations_done, 3);
+        assert!(out
+            .archive
+            .iter()
+            .all(|i| i.objectives.len() == 2 && i.objectives.iter().all(|o| o.is_finite())));
     }
 
     #[test]

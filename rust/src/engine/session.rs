@@ -12,33 +12,45 @@
 //!
 //! ```no_run
 //! use std::sync::Arc;
+//! use caravan::api::JobSpec;
 //! use caravan::config::SchedulerConfig;
 //! use caravan::engine::Session;
 //! use caravan::scheduler::SleepExecutor;
-//! use caravan::tasklib::Payload;
 //!
 //! let session = Session::start(
 //!     SchedulerConfig { np: 4, ..Default::default() },
 //!     Arc::new(SleepExecutor { time_scale: 0.001 }),
 //! );
-//! let t = session.create_task(Payload::Sleep { seconds: 2.0 });
+//! let t = session.submit(JobSpec::sleep(2.0).priority(3).retries(1));
 //! let result = session.await_task(&t);
 //! assert_eq!(result.rc, 0);
 //! session.shutdown();
 //! ```
 //!
+//! The session is built on the Job API v2: [`Session::submit`] takes a
+//! [`JobSpec`] (priority, retries, timeout, tag), [`Session::cancel`]
+//! requests best-effort cancellation, [`Session::await_any`] blocks on a
+//! set of handles, and [`Session::status`] reports a handle's
+//! [`JobStatus`]. The legacy `create_task(payload)` calls still work.
+//!
 //! Callbacks (`task.add_callback` in the Python API) are supported through
 //! [`Session::create_task_with_callback`]; the callback runs on the
 //! scheduler thread and may itself create tasks.
+//!
+//! Internally the session engine is a [`JobEngine`] whose per-job context
+//! carries the waiter channel and the optional callback — the framework's
+//! context map replaces the session's old `waiters`/`callbacks` HashMaps.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
+use crate::api::{JobAdapter, JobEngine, JobSpec, JobStatus, Jobs};
 use crate::config::SchedulerConfig;
 use crate::scheduler::threads::{run_scheduler, Executor, Report};
-use crate::tasklib::{Payload, SearchEngine, TaskId, TaskResult, TaskSink};
+use crate::tasklib::{Payload, TaskId, TaskResult};
 
 /// Callback invoked on the scheduler thread when a task completes. It may
 /// submit follow-up tasks through the provided handle.
@@ -48,27 +60,62 @@ pub type Callback = Box<dyn FnOnce(&TaskResult, &SessionHandle) + Send>;
 ///
 /// The task id is resolved lazily: creation does not block on the
 /// scheduler thread (callbacks run *on* that thread and may create tasks —
-/// blocking there would deadlock).
+/// blocking there would deadlock). The id lives in a shared [`OnceLock`]
+/// cell the scheduler thread fills during its next drain, so handles are
+/// `Sync`, and [`SessionHandle::cancel`] / [`Session::status`] never have
+/// to block — safe to call from completion callbacks.
 pub struct TaskHandle {
-    id_rx: Receiver<TaskId>,
-    id: std::cell::Cell<Option<TaskId>>,
-    rx: Receiver<TaskResult>,
+    id: Arc<OnceLock<TaskId>>,
+    rx: Mutex<Receiver<TaskResult>>,
+    /// Used by `Drop` to retire this task's status entry.
+    ctl: Sender<Ctl>,
 }
 
 impl TaskHandle {
-    /// The scheduler-assigned task id (blocks briefly on first call).
+    /// The scheduler-assigned task id, if already resolved (non-blocking).
+    pub fn try_id(&self) -> Option<TaskId> {
+        self.id.get().copied()
+    }
+
+    /// The scheduler-assigned task id (waits briefly on first call while
+    /// the scheduler thread registers the submission).
     pub fn id(&self) -> TaskId {
-        if let Some(id) = self.id.get() {
-            return id;
+        // 200 µs × 150 000 = 30 s: far beyond any healthy drain tick.
+        for _ in 0..150_000u32 {
+            if let Some(id) = self.try_id() {
+                return id;
+            }
+            std::thread::sleep(Duration::from_micros(200));
         }
-        let id = self.id_rx.recv().expect("session closed");
-        self.id.set(Some(id));
-        id
+        panic!("session closed or wedged before assigning a task id");
+    }
+}
+
+impl Drop for TaskHandle {
+    fn drop(&mut self) {
+        // Nobody can query this task's status any more: let the session
+        // retire the entry so long-lived sessions do not accumulate one
+        // per task ever submitted. (An unresolved id means the submission
+        // never registered; there is nothing to retire.)
+        if let Some(id) = self.try_id() {
+            let _ = self.ctl.send(Ctl::Forget { id });
+        }
     }
 }
 
 enum Ctl {
-    Submit { payload: Payload, waiter: Sender<TaskResult>, reply: Sender<TaskId>, callback: Option<Callback> },
+    Submit {
+        spec: JobSpec,
+        waiter: Sender<TaskResult>,
+        reply: Arc<OnceLock<TaskId>>,
+        callback: Option<Callback>,
+    },
+    /// Cancel the task whose id lives in the shared cell. The cell is
+    /// always filled by the time this is drained: the corresponding
+    /// `Submit` precedes it on this same FIFO channel.
+    Cancel { id: Arc<OnceLock<TaskId>> },
+    /// A handle was dropped: retire its status entry.
+    Forget { id: TaskId },
     Close,
 }
 
@@ -79,67 +126,96 @@ pub struct SessionHandle {
 }
 
 impl SessionHandle {
+    /// Submit a typed job (the v2 entry point).
+    pub fn submit(&self, spec: JobSpec) -> TaskHandle {
+        self.submit_with(spec, None)
+    }
+
     pub fn create_task(&self, payload: Payload) -> TaskHandle {
-        self.create_task_with(payload, None)
+        self.submit_with(JobSpec::new(payload), None)
     }
 
     pub fn create_task_with_callback(&self, payload: Payload, cb: Callback) -> TaskHandle {
-        self.create_task_with(payload, Some(cb))
+        self.submit_with(JobSpec::new(payload), Some(cb))
     }
 
-    fn create_task_with(&self, payload: Payload, callback: Option<Callback>) -> TaskHandle {
+    pub fn submit_with_callback(&self, spec: JobSpec, cb: Callback) -> TaskHandle {
+        self.submit_with(spec, Some(cb))
+    }
+
+    /// Request best-effort cancellation. Never blocks — the id resolution
+    /// happens on the scheduler thread, so this is safe inside callbacks.
+    pub fn cancel(&self, task: &TaskHandle) {
+        let _ = self.ctl.send(Ctl::Cancel { id: Arc::clone(&task.id) });
+    }
+
+    fn submit_with(&self, spec: JobSpec, callback: Option<Callback>) -> TaskHandle {
         let (wtx, wrx) = channel();
-        let (rtx, rrx) = channel();
+        let id = Arc::new(OnceLock::new());
         self.ctl
-            .send(Ctl::Submit { payload, waiter: wtx, reply: rtx, callback })
+            .send(Ctl::Submit { spec, waiter: wtx, reply: Arc::clone(&id), callback })
             .expect("session closed");
-        TaskHandle { id_rx: rrx, id: std::cell::Cell::new(None), rx: wrx }
+        TaskHandle { id, rx: Mutex::new(wrx), ctl: self.ctl.clone() }
     }
 }
 
-/// The session engine: a [`SearchEngine`] that pulls submissions from the
+/// Per-job context the session engine attaches to every submission: who is
+/// waiting for the result, and what (if anything) to run on completion.
+struct SessionCtx {
+    waiter: Sender<TaskResult>,
+    callback: Option<Callback>,
+}
+
+/// The session engine: a [`JobEngine`] that pulls submissions from the
 /// control channel during `poll`.
 struct SessionEngine {
     ctl_rx: Receiver<Ctl>,
     handle: SessionHandle,
-    waiters: HashMap<TaskId, Sender<TaskResult>>,
-    callbacks: HashMap<TaskId, Callback>,
+    status: Arc<Mutex<HashMap<TaskId, JobStatus>>>,
     closed: bool,
 }
 
-impl SearchEngine for SessionEngine {
-    fn start(&mut self, _sink: &mut dyn TaskSink) {}
+impl JobEngine for SessionEngine {
+    type Ctx = SessionCtx;
 
-    fn on_done(&mut self, result: &TaskResult, sink: &mut dyn TaskSink) {
-        if let Some(cb) = self.callbacks.remove(&result.id) {
+    fn start(&mut self, _jobs: &mut Jobs<'_, SessionCtx>) {}
+
+    fn on_done(&mut self, result: &TaskResult, ctx: SessionCtx, jobs: &mut Jobs<'_, SessionCtx>) {
+        if let Some(cb) = ctx.callback {
             cb(result, &self.handle);
             // The callback may have pushed submissions into the control
             // channel; drain them immediately so follow-up tasks are
             // scheduled without waiting for the next poll tick.
-            self.drain(sink);
+            self.drain(jobs);
         }
-        if let Some(w) = self.waiters.remove(&result.id) {
-            let _ = w.send(result.clone());
-        }
+        self.status.lock().unwrap().insert(result.id, JobStatus::from_result(result));
+        let _ = ctx.waiter.send(result.clone());
     }
 
-    fn poll(&mut self, sink: &mut dyn TaskSink) -> bool {
-        self.drain(sink);
+    fn poll(&mut self, jobs: &mut Jobs<'_, SessionCtx>) -> bool {
+        self.drain(jobs);
         self.closed
     }
 }
 
 impl SessionEngine {
-    fn drain(&mut self, sink: &mut dyn TaskSink) {
+    fn drain(&mut self, jobs: &mut Jobs<'_, SessionCtx>) {
         while let Ok(msg) = self.ctl_rx.try_recv() {
             match msg {
-                Ctl::Submit { payload, waiter, reply, callback } => {
-                    let id = sink.submit(payload);
-                    self.waiters.insert(id, waiter);
-                    if let Some(cb) = callback {
-                        self.callbacks.insert(id, cb);
+                Ctl::Submit { spec, waiter, reply, callback } => {
+                    let id = jobs.submit(spec, SessionCtx { waiter, callback });
+                    self.status.lock().unwrap().insert(id, JobStatus::Queued);
+                    let _ = reply.set(id);
+                }
+                Ctl::Cancel { id } => {
+                    // The Submit that fills the cell precedes this message
+                    // on the FIFO control channel, so it is always set.
+                    if let Some(&id) = id.get() {
+                        jobs.cancel(id);
                     }
-                    let _ = reply.send(id);
+                }
+                Ctl::Forget { id } => {
+                    self.status.lock().unwrap().remove(&id);
                 }
                 Ctl::Close => {
                     self.closed = true;
@@ -152,6 +228,7 @@ impl SessionEngine {
 /// A running scheduler session (the `Server.start()` context).
 pub struct Session {
     handle: SessionHandle,
+    status: Arc<Mutex<HashMap<TaskId, JobStatus>>>,
     thread: Mutex<Option<JoinHandle<Report>>>,
 }
 
@@ -160,25 +237,30 @@ impl Session {
     pub fn start(cfg: SchedulerConfig, executor: Arc<dyn Executor>) -> Session {
         let (ctl_tx, ctl_rx) = channel();
         let handle = SessionHandle { ctl: ctl_tx };
+        let status: Arc<Mutex<HashMap<TaskId, JobStatus>>> = Arc::new(Mutex::new(HashMap::new()));
         let engine = SessionEngine {
             ctl_rx,
             handle: handle.clone(),
-            waiters: HashMap::new(),
-            callbacks: HashMap::new(),
+            status: Arc::clone(&status),
             closed: false,
         };
         let thread = std::thread::Builder::new()
             .name("caravan-session".into())
-            .spawn(move || run_scheduler(&cfg, Box::new(engine), executor))
+            .spawn(move || run_scheduler(&cfg, Box::new(JobAdapter::new(engine)), executor))
             .expect("spawn session");
-        Session { handle, thread: Mutex::new(Some(thread)) }
+        Session { handle, status, thread: Mutex::new(Some(thread)) }
     }
 
     pub fn handle(&self) -> SessionHandle {
         self.handle.clone()
     }
 
-    /// `Task.create` — submit a task.
+    /// Submit a typed job: `session.submit(JobSpec::sleep(1.0).priority(2))`.
+    pub fn submit(&self, spec: JobSpec) -> TaskHandle {
+        self.handle.submit(spec)
+    }
+
+    /// `Task.create` — submit a task with default scheduling.
     pub fn create_task(&self, payload: Payload) -> TaskHandle {
         self.handle.create_task(payload)
     }
@@ -188,9 +270,45 @@ impl Session {
         self.handle.create_task_with_callback(payload, cb)
     }
 
+    /// Request best-effort cancellation of `task`. If it was still queued,
+    /// its waiters receive an `RC_CANCELLED` result. Never blocks.
+    pub fn cancel(&self, task: &TaskHandle) {
+        self.handle.cancel(task);
+    }
+
+    /// Lifecycle state of `task`. Non-blocking: an id not yet registered
+    /// by the scheduler thread reports as `Queued`.
+    pub fn status(&self, task: &TaskHandle) -> JobStatus {
+        match task.try_id() {
+            None => JobStatus::Queued,
+            Some(id) => {
+                self.status.lock().unwrap().get(&id).copied().unwrap_or(JobStatus::Queued)
+            }
+        }
+    }
+
     /// `Server.await_task` — block until the task finishes.
     pub fn await_task(&self, task: &TaskHandle) -> TaskResult {
-        task.rx.recv().expect("scheduler dropped the task")
+        task.rx.lock().unwrap().recv().expect("scheduler dropped the task")
+    }
+
+    /// Block until *any* of the given (still-pending) tasks finishes;
+    /// returns its index and result. Handles whose receiver is currently
+    /// held by a concurrent `await_task` are skipped rather than waited on
+    /// (that caller will consume the result), so one blocked handle never
+    /// stalls the scan past other finished tasks. Panics on an empty slice.
+    pub fn await_any(&self, tasks: &[TaskHandle]) -> (usize, TaskResult) {
+        assert!(!tasks.is_empty(), "await_any on an empty task set");
+        loop {
+            for (i, t) in tasks.iter().enumerate() {
+                if let Ok(rx) = t.rx.try_lock() {
+                    if let Ok(r) = rx.try_recv() {
+                        return (i, r);
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
     }
 
     /// `Server.await_all_tasks` over an explicit set.
@@ -211,6 +329,7 @@ impl Session {
 mod tests {
     use super::*;
     use crate::scheduler::SleepExecutor;
+    use crate::tasklib::RC_CANCELLED;
 
     fn session(np: usize) -> Session {
         Session::start(
@@ -244,6 +363,22 @@ mod tests {
         let results = s.await_all(&tasks);
         assert_eq!(results.len(), 10);
         assert!(results.iter().all(|r| r.ok()));
+        s.shutdown();
+    }
+
+    #[test]
+    fn task_handles_are_sync() {
+        // OnceLock-based handles can be shared by reference across
+        // threads (the std::cell::Cell version was !Sync).
+        fn assert_sync<T: Sync>() {}
+        assert_sync::<TaskHandle>();
+        let s = Arc::new(session(2));
+        let t = Arc::new(s.create_task(Payload::Sleep { seconds: 1.0 }));
+        let t2 = Arc::clone(&t);
+        let joiner = std::thread::spawn(move || t2.id());
+        let id_here = t.id();
+        assert_eq!(joiner.join().unwrap(), id_here);
+        s.await_task(&t);
         s.shutdown();
     }
 
@@ -325,5 +460,51 @@ mod tests {
         }
         let report = Arc::try_unwrap(s).ok().map(|s| s.shutdown()).expect("sole owner");
         assert_eq!(report.results.len(), 15);
+    }
+
+    #[test]
+    fn cancel_queued_tasks_resolves_waiters() {
+        // One consumer; the first task occupies it long enough that the
+        // rest are certainly still queued when the cancellations land.
+        let s = Session::start(
+            SchedulerConfig {
+                np: 1,
+                consumers_per_buffer: 1,
+                flush_interval_ms: 2,
+                time_scale: 0.02, // first task ≈ 200 ms real
+                ..Default::default()
+            },
+            Arc::new(SleepExecutor { time_scale: 0.02 }),
+        );
+        let long = s.submit(JobSpec::sleep(10.0));
+        let queued: Vec<TaskHandle> = (0..3).map(|_| s.submit(JobSpec::sleep(5.0))).collect();
+        for t in &queued {
+            s.cancel(t);
+        }
+        for t in &queued {
+            let r = s.await_task(t);
+            assert_eq!(r.rc, RC_CANCELLED, "queued task must be dropped");
+            assert_eq!(s.status(t), JobStatus::Cancelled);
+        }
+        let r = s.await_task(&long);
+        assert!(r.ok(), "running task is unaffected by other cancellations");
+        assert_eq!(s.status(&long), JobStatus::Done);
+        let report = s.shutdown();
+        assert_eq!(report.results.len(), 4);
+        assert_eq!(report.cancelled(), 3);
+    }
+
+    #[test]
+    fn await_any_returns_a_finished_task() {
+        let s = session(2);
+        let tasks: Vec<TaskHandle> = vec![
+            s.submit(JobSpec::sleep(50.0)),
+            s.submit(JobSpec::sleep(1.0)),
+        ];
+        let (idx, r) = s.await_any(&tasks);
+        assert_eq!(idx, 1, "the short task finishes first");
+        assert!(r.ok());
+        s.await_task(&tasks[0]);
+        s.shutdown();
     }
 }

@@ -1,10 +1,17 @@
 //! Trivial parameter-parallel engines: grid sweeps and random sampling —
 //! the "embarrassingly parallel" use cases of §1 (parameter
 //! parallelization), complementing the dynamic engines (MOEA, MCMC).
+//!
+//! Both engines are [`JobEngine`]s on the Job API v2: the parameter point
+//! rides along as the job context, so there is no engine-side `TaskId ->
+//! point` bookkeeping. Constructors return the ready-to-run
+//! [`JobAdapter`] (it derefs to the engine for accessors like
+//! [`GridEngine::size`]).
 
 use std::sync::{Arc, Mutex};
 
-use crate::tasklib::{Payload, SearchEngine, TaskId, TaskResult, TaskSink};
+use crate::api::{JobAdapter, JobEngine, JobSpec, Jobs};
+use crate::tasklib::TaskResult;
 use crate::util::rng::Pcg64;
 
 /// Collected `(point, results)` pairs, shared out of a sweep engine.
@@ -14,21 +21,15 @@ pub type SweepOutcome = Arc<Mutex<Vec<(Vec<f64>, Vec<f64>)>>>;
 pub struct GridEngine {
     axes: Vec<Vec<f64>>,
     seed: u64,
-    by_task: std::collections::HashMap<TaskId, Vec<f64>>,
     outcome: SweepOutcome,
 }
 
 impl GridEngine {
-    pub fn new(axes: Vec<Vec<f64>>, seed: u64) -> (Self, SweepOutcome) {
+    pub fn new(axes: Vec<Vec<f64>>, seed: u64) -> (JobAdapter<Self>, SweepOutcome) {
         assert!(!axes.is_empty() && axes.iter().all(|a| !a.is_empty()));
         let outcome: SweepOutcome = Arc::new(Mutex::new(Vec::new()));
         (
-            Self {
-                axes,
-                seed,
-                by_task: Default::default(),
-                outcome: Arc::clone(&outcome),
-            },
+            JobAdapter::new(Self { axes, seed, outcome: Arc::clone(&outcome) }),
             outcome,
         )
     }
@@ -39,14 +40,15 @@ impl GridEngine {
     }
 }
 
-impl SearchEngine for GridEngine {
-    fn start(&mut self, sink: &mut dyn TaskSink) {
+impl JobEngine for GridEngine {
+    type Ctx = Vec<f64>;
+
+    fn start(&mut self, jobs: &mut Jobs<'_, Vec<f64>>) {
         let dims = self.axes.len();
         let mut idx = vec![0usize; dims];
         loop {
             let point: Vec<f64> = (0..dims).map(|d| self.axes[d][idx[d]]).collect();
-            let id = sink.submit(Payload::Eval { input: point.clone(), seed: self.seed });
-            self.by_task.insert(id, point);
+            jobs.submit(JobSpec::eval(point.clone()).seed(self.seed), point);
             // Odometer increment.
             let mut d = 0;
             loop {
@@ -63,10 +65,8 @@ impl SearchEngine for GridEngine {
         }
     }
 
-    fn on_done(&mut self, result: &TaskResult, _sink: &mut dyn TaskSink) {
-        if let Some(point) = self.by_task.remove(&result.id) {
-            self.outcome.lock().unwrap().push((point, result.results.clone()));
-        }
+    fn on_done(&mut self, result: &TaskResult, point: Vec<f64>, _jobs: &mut Jobs<'_, Vec<f64>>) {
+        self.outcome.lock().unwrap().push((point, result.results.clone()));
     }
 }
 
@@ -75,40 +75,41 @@ pub struct RandomEngine {
     bounds: Vec<(f64, f64)>,
     n: usize,
     rng: Pcg64,
-    by_task: std::collections::HashMap<TaskId, Vec<f64>>,
     outcome: SweepOutcome,
 }
 
 impl RandomEngine {
-    pub fn new(bounds: Vec<(f64, f64)>, n: usize, seed: u64) -> (Self, SweepOutcome) {
+    pub fn new(
+        bounds: Vec<(f64, f64)>,
+        n: usize,
+        seed: u64,
+    ) -> (JobAdapter<Self>, SweepOutcome) {
         let outcome: SweepOutcome = Arc::new(Mutex::new(Vec::new()));
         (
-            Self {
+            JobAdapter::new(Self {
                 bounds,
                 n,
                 rng: Pcg64::new(seed),
-                by_task: Default::default(),
                 outcome: Arc::clone(&outcome),
-            },
+            }),
             outcome,
         )
     }
 }
 
-impl SearchEngine for RandomEngine {
-    fn start(&mut self, sink: &mut dyn TaskSink) {
+impl JobEngine for RandomEngine {
+    type Ctx = Vec<f64>;
+
+    fn start(&mut self, jobs: &mut Jobs<'_, Vec<f64>>) {
         for k in 0..self.n {
             let point: Vec<f64> =
                 self.bounds.iter().map(|&(lo, hi)| self.rng.range_f64(lo, hi)).collect();
-            let id = sink.submit(Payload::Eval { input: point.clone(), seed: k as u64 });
-            self.by_task.insert(id, point);
+            jobs.submit(JobSpec::eval(point.clone()).seed(k as u64), point);
         }
     }
 
-    fn on_done(&mut self, result: &TaskResult, _sink: &mut dyn TaskSink) {
-        if let Some(point) = self.by_task.remove(&result.id) {
-            self.outcome.lock().unwrap().push((point, result.results.clone()));
-        }
+    fn on_done(&mut self, result: &TaskResult, point: Vec<f64>, _jobs: &mut Jobs<'_, Vec<f64>>) {
+        self.outcome.lock().unwrap().push((point, result.results.clone()));
     }
 }
 

@@ -15,9 +15,10 @@
 use std::path::{Path, PathBuf};
 use std::process::Command;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
 use crate::scheduler::threads::Executor;
-use crate::tasklib::{Payload, TaskSpec};
+use crate::tasklib::{Payload, TaskSpec, RC_TIMEOUT};
 
 /// Name of the results file per §2.2.
 pub const RESULTS_FILE: &str = "_results.txt";
@@ -164,6 +165,41 @@ pub fn read_results_checked(dir: &Path) -> Result<Vec<f64>, ResultsError> {
     }
 }
 
+/// Run the child to completion, enforcing the per-attempt timeout from
+/// [`crate::api::JobSpec::timeout`] if set: the child is polled until the
+/// deadline, then killed and reported as [`RC_TIMEOUT`] (the GNU `timeout`
+/// convention). Timed-out attempts consume a scheduler-side retry like any
+/// other failure.
+fn run_child(argv: &[String], dir: &Path, timeout_s: Option<f64>) -> i32 {
+    let mut cmd = Command::new(&argv[0]);
+    cmd.args(&argv[1..]).current_dir(dir);
+    let Some(timeout_s) = timeout_s else {
+        return match cmd.status() {
+            Ok(s) => s.code().unwrap_or(-1),
+            Err(_) => 127,
+        };
+    };
+    let mut child = match cmd.spawn() {
+        Ok(c) => c,
+        Err(_) => return 127,
+    };
+    let deadline = Instant::now() + Duration::from_secs_f64(timeout_s.max(0.0));
+    loop {
+        match child.try_wait() {
+            Ok(Some(status)) => return status.code().unwrap_or(-1),
+            Ok(None) => {
+                if Instant::now() >= deadline {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return RC_TIMEOUT;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => return 127,
+        }
+    }
+}
+
 impl Executor for CommandExecutor {
     fn run(&self, task: &TaskSpec, _consumer: usize) -> (Vec<f64>, i32) {
         let Payload::Command { cmdline } = &task.payload else {
@@ -177,11 +213,7 @@ impl Executor for CommandExecutor {
         if std::fs::create_dir_all(&dir).is_err() {
             return (Vec::new(), 126);
         }
-        let status = Command::new(&argv[0]).args(&argv[1..]).current_dir(&dir).status();
-        let rc = match status {
-            Ok(s) => s.code().unwrap_or(-1),
-            Err(_) => 127,
-        };
+        let rc = run_child(&argv, &dir, task.timeout_s);
         let (results, rc) = match read_results_checked(&dir) {
             Ok(results) => (results, rc),
             Err(e) => {
@@ -324,6 +356,35 @@ mod tests {
         let task = TaskSpec::new(0, Payload::Command { cmdline: "sh -c 'exit 3'".into() });
         let (_results, rc) = exec.run(&task, 0);
         assert_eq!(rc, 3);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn timeout_kills_runaway_child() {
+        let root = std::env::temp_dir().join(format!("caravan_test_to_{}", std::process::id()));
+        let exec = CommandExecutor::new(&root);
+        let mut task = TaskSpec::new(0, Payload::Command { cmdline: "sleep 30".into() });
+        task.timeout_s = Some(0.1);
+        let t0 = Instant::now();
+        let (results, rc) = exec.run(&task, 0);
+        assert_eq!(rc, RC_TIMEOUT);
+        assert!(results.is_empty());
+        assert!(t0.elapsed() < Duration::from_secs(10), "child must be killed, not awaited");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn timeout_is_inert_for_fast_children() {
+        let root = std::env::temp_dir().join(format!("caravan_test_tof_{}", std::process::id()));
+        let exec = CommandExecutor::new(&root);
+        let mut task = TaskSpec::new(
+            0,
+            Payload::Command { cmdline: "sh -c 'echo 7 > _results.txt'".into() },
+        );
+        task.timeout_s = Some(30.0);
+        let (results, rc) = exec.run(&task, 0);
+        assert_eq!(rc, 0);
+        assert_eq!(results, vec![7.0]);
         let _ = std::fs::remove_dir_all(&root);
     }
 

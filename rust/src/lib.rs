@@ -5,6 +5,10 @@
 //!
 //! The crate provides:
 //!
+//! * [`api`] — the Job API v2: typed [`api::JobSpec`] submissions with
+//!   priority, retry, timeout and cancellation; the typed
+//!   [`api::JobEngine`] trait whose per-job context values replace
+//!   engine-side `TaskId` maps.
 //! * [`tasklib`] — the task model (`Task`, `TaskResult`, `ParameterSet`, `Run`)
 //!   mirroring CARAVAN's Python API.
 //! * [`scheduler`] — the paper's system contribution: a hierarchical
@@ -27,6 +31,7 @@
 //!   JSON, CLI, logging) so the crate builds offline.
 
 pub mod util;
+pub mod api;
 pub mod tasklib;
 pub mod scheduler;
 pub mod des;

@@ -9,42 +9,79 @@
 //!   info            print artifact + scenario inventory
 //!
 //! Examples:
-//!   caravan run "sh -c 'echo 1 > _results.txt'" --n 32 --np 4
+//!   caravan run "sh -c 'echo 1 > _results.txt'" --n 32 --np 4 --retries 2
 //!   caravan des --np 1024 --tc 2 --tasks-per-proc 100
 //!   caravan evac --variant tiny --backend pjrt --seed 3
 //!   caravan info
 
 use std::sync::Arc;
 
+use caravan::api::{JobSink, JobSpec};
 use caravan::config::SchedulerConfig;
 use caravan::des::{run_des, DesConfig, SleepDurations};
 use caravan::evac::{build_scenario, EvacEvaluator, RustSimBackend, ScenarioParams, SimBackend};
 use caravan::extproc::CommandExecutor;
 use caravan::runtime::{ArtifactMeta, PjrtServer};
 use caravan::scheduler::run_scheduler;
-use caravan::tasklib::{Payload, SearchEngine, TaskResult, TaskSink};
+use caravan::tasklib::{SearchEngine, TaskResult};
 use caravan::util::cli::Args;
 use caravan::util::rng::Pcg64;
 use caravan::workload::{TestCase, TestCaseEngine};
 
 struct RepeatCmd {
     n: usize,
-    cmd: String,
+    spec: JobSpec,
 }
 
 impl SearchEngine for RepeatCmd {
-    fn start(&mut self, sink: &mut dyn TaskSink) {
+    fn start(&mut self, sink: &mut dyn JobSink) {
         for _ in 0..self.n {
-            sink.submit(Payload::Command { cmdline: self.cmd.clone() });
+            sink.submit_job(self.spec.clone());
         }
     }
-    fn on_done(&mut self, r: &TaskResult, _s: &mut dyn TaskSink) {
-        caravan::info!("task {} rc={} results={:?}", r.id, r.rc, r.results);
+    fn on_done(&mut self, r: &TaskResult, _s: &mut dyn JobSink) {
+        caravan::info!(
+            "task {} rc={} attempt={} results={:?}",
+            r.id,
+            r.rc,
+            r.attempt,
+            r.results
+        );
     }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: caravan <run|des|evac|info> [--options]
+
+  run '<cmdline>'   run an external command through the scheduler
+      --n N           number of tasks (default 10)
+      --np N          consumer processes (default 4)
+      --retries N     transparent scheduler-side retries per task on
+                      rc != 0 (default 0); the final result carries the
+                      attempt count
+      --priority P    scheduling priority 0-255, higher runs first
+                      (default 0)
+      --timeout S     per-attempt budget in seconds; overrunning attempts
+                      are killed with rc 124 and retried if retries remain
+
+  des               DES filling-rate experiment (Fig. 3 point)
+      --np N --tc 1|2|3 --tasks-per-proc N --depth D --fanout F
+      --steal --steal-round-robin --direct --seed S
+
+  evac              evaluate one random evacuation plan
+      --variant tiny|mini --backend rust|pjrt --seed S
+
+  info              print artifact + scenario inventory"
+    );
 }
 
 fn main() {
     let args = Args::parse();
+    if args.has_flag("help") {
+        usage();
+        return;
+    }
     match args.subcommand() {
         Some("run") => cmd_run(&args),
         Some("des") => cmd_des(&args),
@@ -54,32 +91,39 @@ fn main() {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}");
             }
-            eprintln!("usage: caravan <run|des|evac|info> [--options]");
+            usage();
             std::process::exit(2);
         }
     }
 }
 
 fn cmd_run(args: &Args) {
-    let cmd = args
-        .positional()
-        .first()
-        .expect("usage: caravan run '<cmdline>' [--n 10] [--np 4]")
-        .clone();
+    let Some(cmd) = args.positional().first().cloned() else {
+        usage();
+        std::process::exit(2);
+    };
     let n = args.get_usize("n", 10);
     let np = args.get_usize("np", 4);
+    let mut spec = JobSpec::command(cmd)
+        .retries(args.get_u64("retries", 0) as u32)
+        .priority(args.get_usize("priority", 0).min(u8::MAX as usize) as u8);
+    if let Some(t) = args.get_opt("timeout") {
+        spec = spec.timeout(t.parse().expect("--timeout: seconds"));
+    }
     let cfg = SchedulerConfig { np, flush_interval_ms: 5, ..Default::default() };
     let work = std::env::temp_dir().join(format!("caravan_run_{}", std::process::id()));
     let report = run_scheduler(
         &cfg,
-        Box::new(RepeatCmd { n, cmd }),
+        Box::new(RepeatCmd { n, spec }),
         Arc::new(CommandExecutor::new(&work)),
     );
     let failures = report.results.iter().filter(|r| !r.ok()).count();
+    let retried: u64 = report.node_stats.iter().map(|s| s.retried).sum();
     println!(
-        "{} tasks, {} failures, filling {:.1}%, wall {:.2}s",
+        "{} tasks, {} failures, {} retries, filling {:.1}%, wall {:.2}s",
         report.results.len(),
         failures,
+        retried,
         report.rate(np) * 100.0,
         report.wall_secs
     );
@@ -97,7 +141,10 @@ fn cmd_des(args: &Args) {
     cfg.direct = args.has_flag("direct");
     cfg.sched.depth = args.get_usize("depth", 1);
     cfg.sched.fanout = args.get_usize("fanout", 8);
-    cfg.sched.steal = args.has_flag("steal");
+    cfg.sched.steal = args.has_flag("steal") || args.has_flag("steal-round-robin");
+    if args.has_flag("steal-round-robin") {
+        cfg.sched.steal_policy = caravan::config::StealPolicy::RoundRobin;
+    }
     let t0 = std::time::Instant::now();
     let r = run_des(
         &cfg,

@@ -28,8 +28,14 @@ pub struct NodeStats {
     pub msgs_in: u64,
     pub msgs_out: u64,
     pub steals_attempted: u64,
+    /// Steal attempts answered with an empty grant.
+    pub steals_failed: u64,
     pub steals_received: u64,
     pub steals_given: u64,
+    /// Queued tasks dropped at this node by a cancellation.
+    pub cancelled_dropped: u64,
+    /// Failed attempts transparently re-queued at this node (leafs only).
+    pub retried: u64,
     /// Whether the shutdown broadcast reached this node.
     pub saw_shutdown: bool,
 }
@@ -199,7 +205,7 @@ mod tests {
     use super::*;
 
     fn res(id: u64, consumer: usize, begin: f64, finish: f64) -> TaskResult {
-        TaskResult { id, consumer, results: vec![], begin, finish, rc: 0 }
+        TaskResult { id, consumer, results: vec![], begin, finish, rc: 0, attempt: 0 }
     }
 
     #[test]

@@ -28,19 +28,105 @@
 //! * a consumer implicitly requests work by reporting `Done`; an interior
 //!   child explicitly requests with `on_child_request`;
 //! * optionally, a starved node first tries to *steal* queued tasks from a
-//!   sibling (round-robin victim; the victim surrenders up to half its
-//!   queue) and only escalates to the parent when the steal comes back
+//!   sibling (victim per [`StealPolicy`]; the victim surrenders up to half
+//!   its queue) and only escalates to the parent when the steal comes back
 //!   empty — sideways moves are invisible to the parent's accounting.
 //!
 //! Results are buffered per the paper: a node flushes its result store to
 //! its parent when it reaches `flush_every`, or immediately when the node
 //! has nothing queued (so dynamically-generated workloads — TC3,
 //! optimization loops — never stall waiting for a batch to fill).
+//!
+//! Job API v2 semantics live here so both runtimes inherit them:
+//!
+//! * every queue ([`PrioQueue`]) is **priority-ordered** — higher
+//!   [`TaskSpec::priority`] first, FIFO within a level, and steals take
+//!   the lowest-priority (coldest) tasks from the victim's back;
+//! * **retry**: a leaf remembers which spec each consumer is running; an
+//!   attempt finishing with `rc != 0` while retries remain is re-queued
+//!   transparently (the producer never sees the failed attempt), and the
+//!   final [`TaskResult`] carries the attempt index;
+//! * **cancellation**: `on_cancel` drops the task from the local queue if
+//!   present — synthesizing an `RC_CANCELLED` result that flows upstream
+//!   like any other, so conservation and termination detection are
+//!   untouched — and otherwise forwards the notice toward the leaves.
 
 use super::metrics::NodeStats;
-use crate::config::{SchedulerConfig, TreeNodeKind, TreeTopology};
-use crate::tasklib::{TaskResult, TaskSpec};
-use std::collections::VecDeque;
+use crate::config::{SchedulerConfig, StealPolicy, TreeNodeKind, TreeTopology};
+use crate::tasklib::{TaskId, TaskResult, TaskSpec, RC_CANCELLED};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, VecDeque};
+
+/// A priority-ordered task queue: pop returns the highest-priority,
+/// earliest-submitted task; the "back" (what sibling steals take) is the
+/// lowest-priority, latest-submitted end.
+#[derive(Debug, Default)]
+pub struct PrioQueue {
+    map: BTreeMap<(Reverse<u8>, u64), TaskSpec>,
+    seq: u64,
+}
+
+impl PrioQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn push(&mut self, task: TaskSpec) {
+        self.seq += 1;
+        self.map.insert((Reverse(task.priority), self.seq), task);
+    }
+
+    pub fn extend(&mut self, tasks: Vec<TaskSpec>) {
+        for t in tasks {
+            self.push(t);
+        }
+    }
+
+    /// Highest priority, FIFO within a priority level.
+    pub fn pop(&mut self) -> Option<TaskSpec> {
+        self.map.pop_first().map(|(_, t)| t)
+    }
+
+    /// Up to `n` tasks off the front (priority order).
+    pub fn pop_n(&mut self, n: usize) -> Vec<TaskSpec> {
+        let mut out = Vec::with_capacity(n.min(self.map.len()));
+        for _ in 0..n {
+            match self.map.pop_first() {
+                Some((_, t)) => out.push(t),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Up to `n` tasks off the back — the coldest work, surrendered to
+    /// sibling steals.
+    pub fn take_back(&mut self, n: usize) -> Vec<TaskSpec> {
+        let mut out = Vec::with_capacity(n.min(self.map.len()));
+        for _ in 0..n {
+            match self.map.pop_last() {
+                Some((_, t)) => out.push(t),
+                None => break,
+            }
+        }
+        out.reverse();
+        out
+    }
+
+    /// Remove the task with the given id, if queued here.
+    pub fn remove(&mut self, id: TaskId) -> Option<TaskSpec> {
+        let key = self.map.iter().find(|(_, t)| t.id == id).map(|(k, _)| *k)?;
+        self.map.remove(&key)
+    }
+}
 
 /// Actions the producer asks its runtime to carry out.
 #[derive(Clone, Debug, PartialEq)]
@@ -48,6 +134,9 @@ pub enum ProducerAction {
     /// Send these tasks to child `buffer` (slot index among the producer's
     /// direct children — the level-1 nodes of the tree).
     SendTasks { buffer: usize, tasks: Vec<TaskSpec> },
+    /// Forward a cancellation notice to every child (the producer does not
+    /// know where — or whether — the task is queued).
+    BroadcastCancel { id: TaskId },
     /// All work is done: tell every child to shut down.
     BroadcastShutdown,
 }
@@ -67,8 +156,12 @@ pub enum BufferAction {
     /// tasks. `thief` in the reply is an opaque token echoed back by the
     /// victim — the runtime chooses what it routes by.
     StealRequest { victim: usize, amount: usize },
-    /// Reply to a steal request; `tasks` may be empty.
-    StealGrant { thief: usize, tasks: Vec<TaskSpec> },
+    /// Reply to a steal request; `tasks` may be empty. `from_slot` is the
+    /// victim's own slot and `left` its remaining queue depth — the thief
+    /// uses them to maintain its victim-selection estimates.
+    StealGrant { thief: usize, from_slot: usize, left: usize, tasks: Vec<TaskSpec> },
+    /// Interior: forward a cancellation notice to all children.
+    CancelChildren { id: TaskId },
     /// Leaf: tell all local consumers to stop.
     ShutdownConsumers,
     /// Interior: forward the shutdown notice to all children.
@@ -79,13 +172,14 @@ pub enum BufferAction {
 /// children are waiting for work.
 #[derive(Debug)]
 pub struct ProducerState {
-    pending: VecDeque<TaskSpec>,
+    pending: PrioQueue,
     /// `deficit[b]` = number of tasks child `b` asked for but hasn't received.
     deficit: Vec<usize>,
     /// Round-robin cursor so replenishment is fair across children.
     cursor: usize,
     submitted: u64,
     completed: u64,
+    cancelled: u64,
     engine_done: bool,
     shutdown_sent: bool,
     /// Message-count instrumentation (drives the buffered-layer ablation).
@@ -97,11 +191,12 @@ impl ProducerState {
     pub fn new(num_buffers: usize) -> Self {
         assert!(num_buffers > 0);
         Self {
-            pending: VecDeque::new(),
+            pending: PrioQueue::new(),
             deficit: vec![0; num_buffers],
             cursor: 0,
             submitted: 0,
             completed: 0,
+            cancelled: 0,
             engine_done: false,
             shutdown_sent: false,
             msgs_in: 0,
@@ -119,6 +214,11 @@ impl ProducerState {
 
     pub fn completed(&self) -> u64 {
         self.completed
+    }
+
+    /// Tasks dropped by cancellation while still pending at the producer.
+    pub fn cancelled_pending(&self) -> u64 {
+        self.cancelled
     }
 
     pub fn in_flight(&self) -> u64 {
@@ -141,9 +241,26 @@ impl ProducerState {
 
     /// A child flushed `n_results` results (the runtime hands the actual
     /// values to the engine); tracked here for termination detection.
+    /// Cancelled tasks dropped inside the tree arrive through this same
+    /// path, so conservation is untouched.
     pub fn on_results(&mut self, n_results: usize) {
         self.msgs_in += 1;
         self.completed += n_results as u64;
+    }
+
+    /// The engine asked to cancel `id`. If the task is still pending here
+    /// it is dropped and returned — the runtime synthesizes the
+    /// `RC_CANCELLED` result for the engine; the drop already counts as a
+    /// completion. Otherwise the notice is broadcast down the tree.
+    pub fn on_cancel(&mut self, id: TaskId) -> (Option<TaskSpec>, Vec<ProducerAction>) {
+        if let Some(spec) = self.pending.remove(id) {
+            self.completed += 1;
+            self.cancelled += 1;
+            (Some(spec), Vec::new())
+        } else {
+            self.msgs_out += self.deficit.len() as u64;
+            (None, vec![ProducerAction::BroadcastCancel { id }])
+        }
     }
 
     /// The engine has no further unprompted tasks. (It may still create
@@ -176,6 +293,8 @@ impl ProducerState {
         // hundreds of consumers) starved. Grant in bounded chunks, round-
         // robin, until tasks or deficits run out — the paper's "repeatedly
         // send them to their consumers gradually", applied one level up.
+        // Grants pop the pending queue in priority order, so the highest-
+        // priority work reaches the tree first.
         const GRANT_CHUNK: usize = 32;
         let nb = self.deficit.len();
         let mut granted: Vec<Vec<TaskSpec>> = vec![Vec::new(); nb];
@@ -188,7 +307,7 @@ impl ProducerState {
                 continue;
             }
             let take = self.deficit[b].min(GRANT_CHUNK).min(self.pending.len());
-            granted[b].extend(self.pending.drain(..take));
+            granted[b].extend(self.pending.pop_n(take));
             self.deficit[b] -= take;
             scanned = 0; // keep scanning while anyone still has deficit
         }
@@ -204,9 +323,11 @@ impl ProducerState {
 }
 
 /// What a buffer node feeds: consumers (leaf) or child buffers (interior).
+/// A leaf remembers which spec each consumer is executing so failed
+/// attempts can be retried transparently.
 #[derive(Debug)]
 enum Children {
-    Consumers { n: usize, idle: VecDeque<usize> },
+    Consumers { n: usize, idle: VecDeque<usize>, running: Vec<Option<TaskSpec>> },
     Buffers { deficit: Vec<usize>, cursor: usize, subtree: usize },
 }
 
@@ -215,7 +336,7 @@ enum Children {
 #[derive(Debug)]
 pub struct BufferState {
     children: Children,
-    queue: VecDeque<TaskSpec>,
+    queue: PrioQueue,
     store: Vec<TaskResult>,
     /// Tasks requested from the parent but not yet received.
     outstanding_request: usize,
@@ -225,6 +346,10 @@ pub struct BufferState {
     /// new tasks arrive. Starts true so startup credit goes to the parent.
     steal_tried: bool,
     steal_enabled: bool,
+    steal_policy: StealPolicy,
+    /// Last known queue depth per sibling slot (`usize::MAX` = unknown),
+    /// maintained from steal replies and incoming steal requests.
+    sibling_depth: Vec<usize>,
     my_slot: usize,
     n_siblings: usize,
     steal_cursor: usize,
@@ -233,10 +358,16 @@ pub struct BufferState {
     shutting_down: bool,
     max_queue: usize,
     pub steals_attempted: u64,
+    /// Steal attempts answered with an empty grant.
+    pub steals_failed: u64,
     /// Tasks gained from siblings.
     pub steals_received: u64,
     /// Tasks surrendered to siblings.
     pub steals_given: u64,
+    /// Queued tasks dropped here by cancellation.
+    pub cancelled_dropped: u64,
+    /// Failed attempts transparently re-queued here.
+    pub retried: u64,
     pub msgs_in: u64,
     pub msgs_out: u64,
 }
@@ -247,13 +378,19 @@ impl BufferState {
     pub fn new(n_consumers: usize, credit_factor: usize, flush_every: usize) -> Self {
         assert!(n_consumers > 0);
         Self {
-            children: Children::Consumers { n: n_consumers, idle: (0..n_consumers).collect() },
-            queue: VecDeque::new(),
+            children: Children::Consumers {
+                n: n_consumers,
+                idle: (0..n_consumers).collect(),
+                running: vec![None; n_consumers],
+            },
+            queue: PrioQueue::new(),
             store: Vec::new(),
             outstanding_request: 0,
             steal_outstanding: 0,
             steal_tried: true,
             steal_enabled: false,
+            steal_policy: StealPolicy::DeepestQueue,
+            sibling_depth: Vec::new(),
             my_slot: 0,
             n_siblings: 0,
             steal_cursor: 0,
@@ -262,8 +399,11 @@ impl BufferState {
             shutting_down: false,
             max_queue: 0,
             steals_attempted: 0,
+            steals_failed: 0,
             steals_received: 0,
             steals_given: 0,
+            cancelled_dropped: 0,
+            retried: 0,
             msgs_in: 0,
             msgs_out: 0,
         }
@@ -284,12 +424,14 @@ impl BufferState {
                 cursor: 0,
                 subtree: subtree_consumers,
             },
-            queue: VecDeque::new(),
+            queue: PrioQueue::new(),
             store: Vec::new(),
             outstanding_request: 0,
             steal_outstanding: 0,
             steal_tried: true,
             steal_enabled: false,
+            steal_policy: StealPolicy::DeepestQueue,
+            sibling_depth: Vec::new(),
             my_slot: 0,
             n_siblings: 0,
             steal_cursor: 0,
@@ -298,8 +440,11 @@ impl BufferState {
             shutting_down: false,
             max_queue: 0,
             steals_attempted: 0,
+            steals_failed: 0,
             steals_received: 0,
             steals_given: 0,
+            cancelled_dropped: 0,
+            retried: 0,
             msgs_in: 0,
             msgs_out: 0,
         }
@@ -307,11 +452,13 @@ impl BufferState {
 
     /// Enable sibling work stealing. `my_slot` is this node's index among
     /// its parent's `n_siblings + 1` children.
-    pub fn with_stealing(mut self, my_slot: usize, n_siblings: usize) -> Self {
+    pub fn with_stealing(mut self, my_slot: usize, n_siblings: usize, policy: StealPolicy) -> Self {
         self.steal_enabled = n_siblings > 0;
+        self.steal_policy = policy;
         self.my_slot = my_slot;
         self.n_siblings = n_siblings;
         self.steal_cursor = my_slot;
+        self.sibling_depth = vec![usize::MAX; n_siblings + 1];
         self
     }
 
@@ -332,7 +479,7 @@ impl BufferState {
             ),
         };
         if cfg.steal {
-            state.with_stealing(n.slot, n.n_siblings)
+            state.with_stealing(n.slot, n.n_siblings, cfg.steal_policy)
         } else {
             state
         }
@@ -380,7 +527,7 @@ impl BufferState {
 
     pub fn busy_count(&self) -> usize {
         match &self.children {
-            Children::Consumers { n, idle } => n - idle.len(),
+            Children::Consumers { n, idle, .. } => n - idle.len(),
             Children::Buffers { .. } => 0,
         }
     }
@@ -405,8 +552,11 @@ impl BufferState {
             msgs_in: self.msgs_in,
             msgs_out: self.msgs_out,
             steals_attempted: self.steals_attempted,
+            steals_failed: self.steals_failed,
             steals_received: self.steals_received,
             steals_given: self.steals_given,
+            cancelled_dropped: self.cancelled_dropped,
+            retried: self.retried,
             saw_shutdown: self.shutting_down,
         }
     }
@@ -427,23 +577,51 @@ impl BufferState {
         out
     }
 
-    /// Leaf: a local consumer finished a task (and is implicitly asking for
-    /// more).
-    pub fn on_done(&mut self, consumer: usize, result: TaskResult) -> Vec<BufferAction> {
+    /// Leaf: a local consumer finished a task (and is implicitly asking
+    /// for more). A failed attempt with retries left is re-queued here —
+    /// transparently to everything upstream.
+    pub fn on_done(&mut self, consumer: usize, mut result: TaskResult) -> Vec<BufferAction> {
         self.msgs_in += 1;
-        self.store.push(result);
+        let spec = match &mut self.children {
+            Children::Consumers { running, .. } => {
+                running.get_mut(consumer).and_then(|slot| slot.take())
+            }
+            Children::Buffers { .. } => panic!("on_done called on an interior buffer node"),
+        };
+        match spec {
+            Some(mut spec) => {
+                result.attempt = spec.attempt;
+                if result.rc != 0 && result.rc != RC_CANCELLED && spec.attempt < spec.max_retries {
+                    spec.attempt += 1;
+                    self.retried += 1;
+                    self.queue.push(spec);
+                    self.max_queue = self.max_queue.max(self.queue.len());
+                } else {
+                    self.store.push(result);
+                }
+            }
+            // No tracked spec: the task had no retry budget (the common
+            // case — dispatch skips the clone then), so the result passes
+            // through unchanged with the attempt the consumer stamped.
+            None => self.store.push(result),
+        }
         let mut out = Vec::new();
-        let next = self.queue.pop_front();
+        let next = self.queue.pop();
         match &mut self.children {
-            Children::Consumers { idle, .. } => {
+            Children::Consumers { idle, running, .. } => {
                 if let Some(task) = next {
+                    // Track the spec only when retry bookkeeping can fire —
+                    // the runtimes stamp `attempt` on the result themselves,
+                    // so retry-less tasks skip the payload clone.
+                    running[consumer] =
+                        if task.max_retries > 0 { Some(task.clone()) } else { None };
                     self.msgs_out += 1;
                     out.push(BufferAction::RunOn { consumer, task });
                 } else {
                     idle.push_back(consumer);
                 }
             }
-            Children::Buffers { .. } => panic!("on_done called on an interior buffer node"),
+            Children::Buffers { .. } => unreachable!(),
         }
         out.extend(self.request_if_low());
         out.extend(self.flush_if_due());
@@ -480,30 +658,76 @@ impl BufferState {
         }
     }
 
-    /// A sibling asked to steal up to `amount` queued tasks. Surrender at
-    /// most half the queue (taken from the back — the coldest tasks); the
-    /// grant is sent even when empty so the thief can escalate.
-    pub fn on_steal_request(&mut self, thief: usize, amount: usize) -> Vec<BufferAction> {
+    /// A cancellation notice arrived. If the task is queued here, drop it
+    /// and emit an `RC_CANCELLED` result through the normal result path;
+    /// otherwise forward the notice toward the leaves (an interior node
+    /// does not know which child — if any — holds the task). A leaf that
+    /// does not hold the task ignores the notice: the task is either
+    /// already running (cancellation is best-effort) or finished.
+    pub fn on_cancel(&mut self, id: TaskId) -> Vec<BufferAction> {
         self.msgs_in += 1;
-        let give = if self.shutting_down { 0 } else { amount.min(self.queue.len() / 2) };
-        let tasks: Vec<TaskSpec> = if give == 0 {
-            Vec::new()
+        if let Some(spec) = self.queue.remove(id) {
+            self.cancelled_dropped += 1;
+            self.store.push(TaskResult::cancelled_for(&spec));
+            let mut out = self.flush_if_due();
+            // Losing queue depth may put us below the low-water mark.
+            out.extend(self.request_if_low());
+            out
+        } else if let Children::Buffers { deficit, .. } = &self.children {
+            self.msgs_out += deficit.len() as u64;
+            vec![BufferAction::CancelChildren { id }]
         } else {
-            self.queue.split_off(self.queue.len() - give).into_iter().collect()
-        };
+            Vec::new()
+        }
+    }
+
+    /// A sibling asked to steal up to `amount` queued tasks. Surrender at
+    /// most half the queue (taken from the back — the coldest,
+    /// lowest-priority tasks); the grant is sent even when empty so the
+    /// thief can escalate. `thief` is the runtime's opaque routing token
+    /// (echoed in the grant); `thief_slot` is the thief's sibling slot —
+    /// it is evidently starved, so its depth estimate drops to zero.
+    pub fn on_steal_request(
+        &mut self,
+        thief: usize,
+        thief_slot: usize,
+        amount: usize,
+    ) -> Vec<BufferAction> {
+        self.msgs_in += 1;
+        if let Some(d) = self.sibling_depth.get_mut(thief_slot) {
+            *d = 0;
+        }
+        let give = if self.shutting_down { 0 } else { amount.min(self.queue.len() / 2) };
+        let tasks = self.queue.take_back(give);
         self.steals_given += tasks.len() as u64;
         self.msgs_out += 1;
-        let mut out = vec![BufferAction::StealGrant { thief, tasks }];
+        let mut out = vec![BufferAction::StealGrant {
+            thief,
+            from_slot: self.my_slot,
+            left: self.queue.len(),
+            tasks,
+        }];
         // Losing queue depth may put us below the low-water mark.
         out.extend(self.request_if_low());
         out
     }
 
-    /// The answer to our steal request arrived (possibly empty).
-    pub fn on_steal_grant(&mut self, tasks: Vec<TaskSpec>) -> Vec<BufferAction> {
+    /// The answer to our steal request arrived (possibly empty), reporting
+    /// the victim's remaining queue depth.
+    pub fn on_steal_grant(
+        &mut self,
+        from_slot: usize,
+        left: usize,
+        tasks: Vec<TaskSpec>,
+    ) -> Vec<BufferAction> {
         self.msgs_in += 1;
         self.steal_outstanding = 0;
-        if !tasks.is_empty() {
+        if let Some(d) = self.sibling_depth.get_mut(from_slot) {
+            *d = left;
+        }
+        if tasks.is_empty() {
+            self.steals_failed += 1;
+        } else {
             self.steals_received += tasks.len() as u64;
             self.steal_tried = false;
         }
@@ -559,11 +783,13 @@ impl BufferState {
     /// Move queued tasks to whoever is asking below us.
     fn deliver(&mut self) -> Vec<BufferAction> {
         match &mut self.children {
-            Children::Consumers { idle, .. } => {
+            Children::Consumers { idle, running, .. } => {
                 let mut out = Vec::new();
                 while !self.queue.is_empty() && !idle.is_empty() {
                     let consumer = idle.pop_front().unwrap();
-                    let task = self.queue.pop_front().unwrap();
+                    let task = self.queue.pop().unwrap();
+                    running[consumer] =
+                        if task.max_retries > 0 { Some(task.clone()) } else { None };
                     self.msgs_out += 1;
                     out.push(BufferAction::RunOn { consumer, task });
                 }
@@ -583,7 +809,7 @@ impl BufferState {
                         continue;
                     }
                     let take = deficit[b].min(GRANT_CHUNK).min(self.queue.len());
-                    granted[b].extend(self.queue.drain(..take));
+                    granted[b].extend(self.queue.pop_n(take));
                     deficit[b] -= take;
                     scanned = 0;
                 }
@@ -623,14 +849,38 @@ impl BufferState {
         }
     }
 
-    /// Round-robin over sibling slots, skipping our own.
+    /// Pick the steal victim: blind rotation (`RoundRobin`) or the sibling
+    /// with the deepest known queue (`DeepestQueue`; unknown = deepest, so
+    /// early attempts explore in rotation before exploiting estimates).
     fn next_victim(&mut self) -> usize {
         let total = self.n_siblings + 1;
-        self.steal_cursor = (self.steal_cursor + 1) % total;
-        if self.steal_cursor == self.my_slot {
-            self.steal_cursor = (self.steal_cursor + 1) % total;
+        match self.steal_policy {
+            StealPolicy::RoundRobin => {
+                self.steal_cursor = (self.steal_cursor + 1) % total;
+                if self.steal_cursor == self.my_slot {
+                    self.steal_cursor = (self.steal_cursor + 1) % total;
+                }
+                self.steal_cursor
+            }
+            StealPolicy::DeepestQueue => {
+                let mut best: Option<usize> = None;
+                let mut best_depth = 0usize;
+                for off in 1..=total {
+                    let slot = (self.steal_cursor + off) % total;
+                    if slot == self.my_slot {
+                        continue;
+                    }
+                    let d = self.sibling_depth.get(slot).copied().unwrap_or(usize::MAX);
+                    if best.is_none() || d > best_depth {
+                        best = Some(slot);
+                        best_depth = d;
+                    }
+                }
+                let victim = best.expect("stealing enabled implies at least one sibling");
+                self.steal_cursor = victim;
+                victim
+            }
         }
-        self.steal_cursor
     }
 
     fn flush_if_due(&mut self) -> Vec<BufferAction> {
@@ -669,8 +919,53 @@ mod tests {
         TaskSpec::new(id, Payload::Sleep { seconds: 1.0 })
     }
 
+    fn prio_task(id: u64, priority: u8) -> TaskSpec {
+        let mut t = task(id);
+        t.priority = priority;
+        t
+    }
+
     fn result(id: u64, consumer: usize) -> TaskResult {
-        TaskResult { id, consumer, results: vec![], begin: 0.0, finish: 1.0, rc: 0 }
+        TaskResult {
+            id,
+            consumer,
+            results: vec![],
+            begin: 0.0,
+            finish: 1.0,
+            rc: 0,
+            attempt: 0,
+        }
+    }
+
+    fn failed(id: u64, consumer: usize) -> TaskResult {
+        TaskResult { rc: 1, ..result(id, consumer) }
+    }
+
+    #[test]
+    fn prio_queue_orders_by_priority_then_fifo() {
+        let mut q = PrioQueue::new();
+        q.push(prio_task(0, 1));
+        q.push(prio_task(1, 5));
+        q.push(prio_task(2, 1));
+        q.push(prio_task(3, 5));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|t| t.id).collect();
+        assert_eq!(order, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn prio_queue_back_is_coldest_and_remove_by_id() {
+        let mut q = PrioQueue::new();
+        for (id, p) in [(0u64, 9u8), (1, 0), (2, 0), (3, 9)] {
+            q.push(prio_task(id, p));
+        }
+        assert!(q.remove(2).is_some());
+        assert!(q.remove(2).is_none());
+        // Back = lowest priority, latest first; take_back returns them in
+        // (reversed) queue order.
+        let back = q.take_back(1);
+        assert_eq!(back.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().unwrap().id, 0);
     }
 
     #[test]
@@ -693,6 +988,24 @@ mod tests {
     }
 
     #[test]
+    fn producer_grants_highest_priority_first() {
+        let mut p = ProducerState::new(1);
+        p.push_tasks(vec![prio_task(0, 0), prio_task(1, 9), prio_task(2, 5)]);
+        let acts = p.on_request(0, 2);
+        let ids: Vec<u64> = acts
+            .iter()
+            .flat_map(|a| match a {
+                ProducerAction::SendTasks { tasks, .. } => {
+                    tasks.iter().map(|t| t.id).collect::<Vec<_>>()
+                }
+                _ => Vec::new(),
+            })
+            .collect();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(p.pending_len(), 1);
+    }
+
+    #[test]
     fn producer_queues_tasks_without_deficit() {
         let mut p = ProducerState::new(1);
         let acts = p.push_tasks(vec![task(0)]);
@@ -701,6 +1014,27 @@ mod tests {
         let acts = p.on_request(0, 10);
         assert_eq!(acts.len(), 1);
         assert_eq!(p.pending_len(), 0);
+    }
+
+    #[test]
+    fn producer_cancel_drops_pending_or_broadcasts() {
+        let mut p = ProducerState::new(2);
+        p.push_tasks(vec![task(0), task(1)]);
+        p.set_engine_done(true);
+        // Task 1 is still pending: dropped locally, counts as completed.
+        let (dropped, acts) = p.on_cancel(1);
+        assert_eq!(dropped.unwrap().id, 1);
+        assert!(acts.is_empty());
+        assert_eq!(p.cancelled_pending(), 1);
+        assert_eq!(p.in_flight(), 1);
+        // Task 0 leaves the producer; a later cancel becomes a broadcast.
+        p.on_request(0, 1);
+        let (dropped, acts) = p.on_cancel(0);
+        assert!(dropped.is_none());
+        assert_eq!(acts, vec![ProducerAction::BroadcastCancel { id: 0 }]);
+        // The cancelled-at-a-node result flows back like any other.
+        p.on_results(1);
+        assert_eq!(p.maybe_shutdown(), vec![ProducerAction::BroadcastShutdown]);
     }
 
     #[test]
@@ -745,6 +1079,117 @@ mod tests {
         assert!(acts
             .iter()
             .any(|a| matches!(a, BufferAction::FlushResults(rs) if rs.len() == 1)));
+    }
+
+    #[test]
+    fn buffer_dispatches_high_priority_first() {
+        let mut b = BufferState::new(1, 4, 100);
+        b.on_start();
+        let acts = b.on_assign(vec![prio_task(0, 0), prio_task(1, 7), prio_task(2, 3)]);
+        // The single consumer gets the priority-7 task first.
+        assert!(acts
+            .iter()
+            .any(|a| matches!(a, BufferAction::RunOn { consumer: 0, task } if task.id == 1)));
+        let acts = b.on_done(0, result(1, 0));
+        assert!(acts
+            .iter()
+            .any(|a| matches!(a, BufferAction::RunOn { consumer: 0, task } if task.id == 2)));
+    }
+
+    #[test]
+    fn failed_attempt_with_retries_is_requeued_transparently() {
+        let mut b = BufferState::new(1, 2, 1);
+        b.on_start();
+        let mut t = task(0);
+        t.max_retries = 2;
+        b.on_assign(vec![t]);
+        // Attempt 0 fails: re-queued (attempt 1) and re-dispatched; nothing
+        // is flushed upstream.
+        let acts = b.on_done(0, failed(0, 0));
+        assert!(!acts.iter().any(|a| matches!(a, BufferAction::FlushResults(_))), "{acts:?}");
+        let redisp = acts.iter().find_map(|a| match a {
+            BufferAction::RunOn { task, .. } => Some(task.clone()),
+            _ => None,
+        });
+        assert_eq!(redisp.as_ref().map(|t| t.attempt), Some(1));
+        assert_eq!(b.retried, 1);
+        // Attempt 1 fails: one retry left.
+        let acts = b.on_done(0, failed(0, 0));
+        assert!(acts.iter().any(|a| matches!(a, BufferAction::RunOn { task, .. } if task.attempt == 2)));
+        // Attempt 2 fails: retries exhausted → the failure is flushed with
+        // the attempt count on it.
+        let acts = b.on_done(0, failed(0, 0));
+        let flushed = acts
+            .iter()
+            .find_map(|a| match a {
+                BufferAction::FlushResults(rs) => Some(rs.clone()),
+                _ => None,
+            })
+            .expect("final failure must flush");
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].rc, 1);
+        assert_eq!(flushed[0].attempt, 2);
+        assert_eq!(b.retried, 2);
+    }
+
+    #[test]
+    fn successful_retry_reports_attempt_index() {
+        let mut b = BufferState::new(1, 2, 1);
+        b.on_start();
+        let mut t = task(7);
+        t.max_retries = 3;
+        b.on_assign(vec![t]);
+        b.on_done(0, failed(7, 0));
+        let acts = b.on_done(0, result(7, 0));
+        let flushed = acts
+            .iter()
+            .find_map(|a| match a {
+                BufferAction::FlushResults(rs) => Some(rs.clone()),
+                _ => None,
+            })
+            .expect("success must flush");
+        assert_eq!(flushed[0].rc, 0);
+        assert_eq!(flushed[0].attempt, 1);
+    }
+
+    #[test]
+    fn cancel_drops_queued_task_and_reports_it() {
+        let mut b = BufferState::new(1, 4, 1);
+        b.on_start();
+        b.on_assign(vec![task(0), task(1), task(2)]);
+        // Task 0 runs; 1 and 2 are queued. Cancel 2: dropped, reported.
+        let acts = b.on_cancel(2);
+        let flushed = acts
+            .iter()
+            .find_map(|a| match a {
+                BufferAction::FlushResults(rs) => Some(rs.clone()),
+                _ => None,
+            })
+            .expect("cancellation must flush a result");
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].id, 2);
+        assert!(flushed[0].cancelled());
+        assert_eq!(b.cancelled_dropped, 1);
+        assert_eq!(b.queue_len(), 1);
+        // Cancelling the *running* task is a no-op at a leaf.
+        let acts = b.on_cancel(0);
+        assert!(acts.is_empty(), "{acts:?}");
+        assert_eq!(b.cancelled_dropped, 1);
+    }
+
+    #[test]
+    fn interior_cancel_forwards_when_not_queued_here() {
+        let mut r = BufferState::interior(3, 6, 2, 16);
+        r.on_start();
+        let acts = r.on_cancel(42);
+        assert_eq!(acts, vec![BufferAction::CancelChildren { id: 42 }]);
+        // But a task queued at the relay is dropped right here.
+        r.on_assign(vec![task(5)]);
+        let acts = r.on_cancel(5);
+        assert!(acts
+            .iter()
+            .any(|a| matches!(a, BufferAction::FlushResults(rs) if rs[0].cancelled())));
+        assert_eq!(r.cancelled_dropped, 1);
     }
 
     #[test]
@@ -847,8 +1292,8 @@ mod tests {
 
     #[test]
     fn starved_node_steals_before_escalating() {
-        let mut thief = BufferState::new(2, 2, 100).with_stealing(0, 1);
-        let mut victim = BufferState::new(2, 2, 100).with_stealing(1, 1);
+        let mut thief = BufferState::new(2, 2, 100).with_stealing(0, 1, StealPolicy::RoundRobin);
+        let mut victim = BufferState::new(2, 2, 100).with_stealing(1, 1, StealPolicy::RoundRobin);
         // Startup requests go upstream, not sideways.
         assert_eq!(thief.on_start(), vec![BufferAction::RequestTasks { amount: 4 }]);
         victim.on_start();
@@ -867,29 +1312,34 @@ mod tests {
         assert_eq!(vslot, 1);
         assert_eq!(amount, 3); // restore credit 4 from level 1
         assert!(!acts.iter().any(|a| matches!(a, BufferAction::RequestTasks { .. })));
-        // Victim surrenders up to half its queue (queue = 6 → gives 3).
-        let acts = victim.on_steal_request(0, amount);
-        let granted = acts
+        // Victim surrenders up to half its queue (queue = 6 → gives 3) and
+        // reports what it has left.
+        let acts = victim.on_steal_request(0, 0, amount);
+        let (granted, left) = acts
             .iter()
             .find_map(|a| match a {
-                BufferAction::StealGrant { thief: 0, tasks } => Some(tasks.clone()),
+                BufferAction::StealGrant { thief: 0, from_slot: 1, left, tasks } => {
+                    Some((tasks.clone(), *left))
+                }
                 _ => None,
             })
             .expect("victim must reply");
         assert_eq!(granted.len(), 3);
+        assert_eq!(left, 3);
         assert_eq!(victim.queue_len(), 3);
         // Thief drains its queue; consumer 1 goes idle before the loot lands.
         thief.on_done(0, result(102, 0));
         thief.on_done(1, result(101, 1));
-        let acts = thief.on_steal_grant(granted);
+        let acts = thief.on_steal_grant(1, left, granted);
         assert!(acts.iter().any(|a| matches!(a, BufferAction::RunOn { .. })), "{acts:?}");
         assert_eq!(thief.steals_received, 3);
+        assert_eq!(thief.steals_failed, 0);
         assert_eq!(victim.steals_given, 3);
     }
 
     #[test]
     fn empty_steal_grant_escalates_upstream() {
-        let mut thief = BufferState::new(2, 1, 100).with_stealing(0, 2);
+        let mut thief = BufferState::new(2, 1, 100).with_stealing(0, 2, StealPolicy::RoundRobin);
         thief.on_start(); // upstream request for 2 (outstanding = 2)
         // Full credit arrives but dispatch drains the queue to 0, which is
         // below the low-water mark → a steal attempt, not an upstream request.
@@ -897,7 +1347,7 @@ mod tests {
         assert!(acts.iter().any(|a| matches!(a, BufferAction::StealRequest { .. })), "{acts:?}");
         assert!(!acts.iter().any(|a| matches!(a, BufferAction::RequestTasks { .. })));
         // The sibling had nothing.
-        let acts = thief.on_steal_grant(Vec::new());
+        let acts = thief.on_steal_grant(1, 0, Vec::new());
         let req = acts.iter().find_map(|a| match a {
             BufferAction::RequestTasks { amount } => Some(*amount),
             _ => None,
@@ -905,17 +1355,36 @@ mod tests {
         assert!(req.is_some(), "empty grant must escalate to the parent: {acts:?}");
         // No second steal until new tasks arrive.
         assert!(!acts.iter().any(|a| matches!(a, BufferAction::StealRequest { .. })));
+        assert_eq!(thief.steals_failed, 1);
     }
 
     #[test]
     fn steal_victim_rotates_round_robin_skipping_self() {
-        let mut b = BufferState::new(1, 1, 100).with_stealing(1, 3); // slots 0..4, me=1
+        let mut b = BufferState::new(1, 1, 100).with_stealing(1, 3, StealPolicy::RoundRobin);
         let mut seen = Vec::new();
         for _ in 0..6 {
             seen.push(b.next_victim());
         }
         assert!(!seen.contains(&1), "{seen:?}");
         assert_eq!(seen, vec![2, 3, 0, 2, 3, 0]);
+    }
+
+    #[test]
+    fn deepest_queue_explores_then_picks_deepest_known() {
+        let mut b = BufferState::new(1, 1, 100).with_stealing(1, 3, StealPolicy::DeepestQueue);
+        // All unknown: explores in rotation, skipping self.
+        assert_eq!(b.next_victim(), 2);
+        assert_eq!(b.next_victim(), 3);
+        assert_eq!(b.next_victim(), 0);
+        // Learn depths from grants: slot 2 empty, slot 0 deep, slot 3 shallow.
+        b.on_steal_grant(2, 0, Vec::new());
+        b.on_steal_grant(0, 4, vec![task(90)]);
+        b.on_steal_grant(3, 1, vec![task(91)]);
+        assert_eq!(b.next_victim(), 0);
+        assert_eq!(b.next_victim(), 0, "sticks to the deepest known sibling");
+        // An incoming steal request marks that thief as starved.
+        b.on_steal_request(0, 0, 1);
+        assert_eq!(b.next_victim(), 3);
     }
 
     #[test]

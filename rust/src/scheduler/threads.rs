@@ -13,6 +13,12 @@
 //! [`SchedulerConfig::steal`]) siblings exchange queued tasks directly
 //! through their own channels — the producer never sees sideways moves.
 //!
+//! Job API v2 semantics (priority, transparent retry, cancellation) live
+//! in the protocol state machines; this runtime only routes the extra
+//! messages: `Cancel` notices fan out from the producer toward the
+//! leaves, and cancelled-task results flow back through the ordinary
+//! result path.
+//!
 //! On a small host this is concurrency rather than parallelism, which is
 //! fine for the framework's own behaviour (dummy `Sleep` tasks idle, and
 //! in-process evaluations are serialized by the PJRT executor anyway).
@@ -24,8 +30,9 @@ use std::time::{Duration, Instant};
 
 use super::metrics::{FillingRate, NodeStats};
 use super::protocol::{BufferAction, BufferState, ProducerAction, ProducerState};
+use crate::api::{JobSink, JobSpec};
 use crate::config::{SchedulerConfig, TreeNodeKind};
-use crate::tasklib::{Payload, SearchEngine, TaskResult, TaskSink, TaskSpec};
+use crate::tasklib::{Payload, SearchEngine, TaskId, TaskResult, TaskSink, TaskSpec};
 
 /// Runs task payloads on a consumer thread.
 pub trait Executor: Send + Sync {
@@ -66,8 +73,11 @@ enum ToBuffer {
     ChildResults(Vec<TaskResult>),
     /// Steal request from the sibling at slot `thief`.
     Steal { thief: usize, amount: usize },
-    /// Reply to our steal request (possibly empty).
-    Stolen(Vec<TaskSpec>),
+    /// Reply to our steal request (possibly empty): the victim's slot, its
+    /// remaining queue depth, and the surrendered tasks.
+    Stolen { from_slot: usize, left: usize, tasks: Vec<TaskSpec> },
+    /// Cancellation notice fanning out toward the leaves.
+    Cancel { id: TaskId },
     Shutdown,
 }
 
@@ -103,20 +113,37 @@ impl Report {
     pub fn rate(&self, np: usize) -> f64 {
         self.filling.rate(np)
     }
+
+    /// Results that were cancelled before running.
+    pub fn cancelled(&self) -> usize {
+        self.results.iter().filter(|r| r.cancelled()).count()
+    }
 }
 
-/// Sink handing engine submissions to the producer state machine.
+/// Sink handing engine submissions (and cancellations) to the producer
+/// state machine.
 struct ProducerSink {
     next_id: u64,
     staged: Vec<TaskSpec>,
+    cancels: Vec<TaskId>,
 }
 
 impl TaskSink for ProducerSink {
     fn submit(&mut self, payload: Payload) -> u64 {
+        self.submit_job(JobSpec::new(payload))
+    }
+}
+
+impl JobSink for ProducerSink {
+    fn submit_job(&mut self, spec: JobSpec) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.staged.push(TaskSpec::new(id, payload));
+        self.staged.push(spec.into_task(id));
         id
+    }
+
+    fn cancel(&mut self, id: TaskId) {
+        self.cancels.push(id);
     }
 }
 
@@ -211,16 +238,14 @@ pub fn run_scheduler(
 
     // --- producer loop (runs on the caller thread) ---
     let mut state = ProducerState::new(topo.roots.len());
-    let mut sink = ProducerSink { next_id: 0, staged: Vec::new() };
+    let mut sink = ProducerSink { next_id: 0, staged: Vec::new(), cancels: Vec::new() };
     let mut filling = FillingRate::new();
     let mut all_results: Vec<TaskResult> = Vec::new();
 
     engine.start(&mut sink);
-    let acts = state_push(&mut state, &mut sink);
-    perform_producer(acts, &root_txs);
+    drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
     let done = engine.poll(&mut sink);
-    let acts = state_push(&mut state, &mut sink);
-    perform_producer(acts, &root_txs);
+    drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
     state.set_engine_done(done);
 
     let poll_interval = Duration::from_millis(cfg.flush_interval_ms.max(1));
@@ -235,8 +260,7 @@ pub fn run_scheduler(
             Err(RecvTimeoutError::Timeout) => {
                 // Give session-style engines a chance to inject work.
                 let done = engine.poll(&mut sink);
-                let acts = state_push(&mut state, &mut sink);
-                perform_producer(acts, &root_txs);
+                drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
                 state.set_engine_done(done);
                 continue;
             }
@@ -250,12 +274,15 @@ pub fn run_scheduler(
             ToProducer::Results(results) => {
                 state.on_results(results.len());
                 for r in &results {
-                    filling.record(r);
+                    // Cancelled tasks never ran: keep them out of the
+                    // filling-rate trace.
+                    if !r.cancelled() {
+                        filling.record(r);
+                    }
                     engine.on_done(r, &mut sink);
                 }
                 all_results.extend(results);
-                let acts = state_push(&mut state, &mut sink);
-                perform_producer(acts, &root_txs);
+                drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
             }
         }
     }
@@ -295,12 +322,30 @@ pub fn run_scheduler(
     }
 }
 
-/// Push whatever the engine staged into the producer state machine.
-fn state_push(state: &mut ProducerState, sink: &mut ProducerSink) -> Vec<ProducerAction> {
-    if sink.staged.is_empty() {
-        Vec::new()
-    } else {
-        state.push_tasks(std::mem::take(&mut sink.staged))
+/// Flush everything the engine staged — submissions *and* cancellations —
+/// into the producer state machine. A cancellation that drops a
+/// still-pending task synthesizes its `RC_CANCELLED` result here and hands
+/// it straight back to the engine, which may stage more work, so the loop
+/// runs until the sink is drained.
+fn drain_engine(
+    state: &mut ProducerState,
+    sink: &mut ProducerSink,
+    engine: &mut dyn SearchEngine,
+    root_txs: &[Sender<ToBuffer>],
+    all_results: &mut Vec<TaskResult>,
+) {
+    while !sink.staged.is_empty() || !sink.cancels.is_empty() {
+        let acts = state.push_tasks(std::mem::take(&mut sink.staged));
+        perform_producer(acts, root_txs);
+        for id in std::mem::take(&mut sink.cancels) {
+            let (dropped, acts) = state.on_cancel(id);
+            perform_producer(acts, root_txs);
+            if let Some(spec) = dropped {
+                let r = TaskResult::cancelled_for(&spec);
+                engine.on_done(&r, sink);
+                all_results.push(r);
+            }
+        }
     }
 }
 
@@ -311,6 +356,11 @@ fn perform_producer(actions: Vec<ProducerAction>, root_txs: &[Sender<ToBuffer>])
         match act {
             ProducerAction::SendTasks { buffer, tasks } => {
                 let _ = root_txs[buffer].send(ToBuffer::Assign(tasks));
+            }
+            ProducerAction::BroadcastCancel { id } => {
+                for tx in root_txs {
+                    let _ = tx.send(ToBuffer::Cancel { id });
+                }
             }
             ProducerAction::BroadcastShutdown => {
                 for tx in root_txs {
@@ -368,8 +418,15 @@ fn perform_node_actions(
             BufferAction::StealRequest { victim, amount } => {
                 let _ = siblings[victim].send(ToBuffer::Steal { thief: slot, amount });
             }
-            BufferAction::StealGrant { thief, tasks } => {
-                let _ = siblings[thief].send(ToBuffer::Stolen(tasks));
+            BufferAction::StealGrant { thief, from_slot, left, tasks } => {
+                let _ = siblings[thief].send(ToBuffer::Stolen { from_slot, left, tasks });
+            }
+            BufferAction::CancelChildren { id } => {
+                if let ChildLink::Buffers(bufs) = children {
+                    for c in bufs {
+                        let _ = c.send(ToBuffer::Cancel { id });
+                    }
+                }
             }
             BufferAction::ShutdownConsumers => {
                 if let ChildLink::Consumers(cons) = children {
@@ -412,8 +469,12 @@ fn node_loop(
             Ok(ToBuffer::Done { consumer, result }) => state.on_done(consumer, result),
             Ok(ToBuffer::ChildRequest { child, amount }) => state.on_child_request(child, amount),
             Ok(ToBuffer::ChildResults(rs)) => state.on_child_results(rs),
-            Ok(ToBuffer::Steal { thief, amount }) => state.on_steal_request(thief, amount),
-            Ok(ToBuffer::Stolen(tasks)) => state.on_steal_grant(tasks),
+            // In the threaded runtime the routing token IS the slot.
+            Ok(ToBuffer::Steal { thief, amount }) => state.on_steal_request(thief, thief, amount),
+            Ok(ToBuffer::Stolen { from_slot, left, tasks }) => {
+                state.on_steal_grant(from_slot, left, tasks)
+            }
+            Ok(ToBuffer::Cancel { id }) => state.on_cancel(id),
             Ok(ToBuffer::Shutdown) => state.on_shutdown(),
             Err(RecvTimeoutError::Timeout) => state.on_tick(),
             Err(RecvTimeoutError::Disconnected) => break,
@@ -437,7 +498,15 @@ fn consumer_loop(
                 let begin = t0.elapsed().as_secs_f64();
                 let (results, rc) = exec.run(&task, rank);
                 let finish = t0.elapsed().as_secs_f64();
-                let result = TaskResult { id: task.id, consumer: rank, results, begin, finish, rc };
+                let result = TaskResult {
+                    id: task.id,
+                    consumer: rank,
+                    results,
+                    begin,
+                    finish,
+                    rc,
+                    attempt: task.attempt,
+                };
                 if back.send(ToBuffer::Done { consumer: local, result }).is_err() {
                     break;
                 }
@@ -459,12 +528,12 @@ mod tests {
     }
 
     impl SearchEngine for StaticSleeps {
-        fn start(&mut self, sink: &mut dyn TaskSink) {
+        fn start(&mut self, sink: &mut dyn JobSink) {
             for _ in 0..self.n {
                 sink.submit(Payload::Sleep { seconds: self.secs });
             }
         }
-        fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn TaskSink) {}
+        fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn JobSink) {}
     }
 
     /// Engine that chains: each completion spawns one follow-up until a
@@ -476,13 +545,13 @@ mod tests {
     }
 
     impl SearchEngine for Chaining {
-        fn start(&mut self, sink: &mut dyn TaskSink) {
+        fn start(&mut self, sink: &mut dyn JobSink) {
             for _ in 0..self.initial {
                 sink.submit(Payload::Sleep { seconds: 0.5 });
                 self.created += 1;
             }
         }
-        fn on_done(&mut self, _r: &TaskResult, sink: &mut dyn TaskSink) {
+        fn on_done(&mut self, _r: &TaskResult, sink: &mut dyn JobSink) {
             if self.created < self.total {
                 sink.submit(Payload::Sleep { seconds: 0.5 });
                 self.created += 1;

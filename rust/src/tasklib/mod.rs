@@ -6,6 +6,12 @@
 //! `results` vector is what the simulator wrote to `_results.txt` (§2.2) —
 //! or, for in-process simulators, the objective values returned directly.
 //!
+//! Since the Job API v2 redesign ([`crate::api`]), a [`TaskSpec`] carries
+//! scheduling metadata alongside the payload: a priority, a retry budget
+//! (consumed transparently by the scheduler when an attempt fails), an
+//! optional per-attempt timeout and an optional tag. Engines normally
+//! build these through [`crate::api::JobSpec`]'s builder.
+//!
 //! [`ParameterSet`] / [`Run`] mirror the convenience classes of the Python
 //! API used for Monte-Carlo averaging: one parameter point, several runs
 //! with distinct random seeds, aggregated results.
@@ -14,8 +20,22 @@ pub mod pset;
 
 pub use pset::{ParameterSet, PsetStore, Run};
 
+use crate::api::{JobSink, JobSpec};
+
 /// Globally unique task identifier (minted by the scheduler-side sink).
 pub type TaskId = u64;
+
+/// `rc` reported for a task dropped by a cancellation before it ran.
+/// `i32::MIN` is unreachable by any real exit status (the external-process
+/// executor maps signal-killed children to -1), so a crashed simulator can
+/// never be mistaken for a user-requested cancellation — which matters
+/// because cancelled results are exempt from retry and from the
+/// filling-rate trace.
+pub const RC_CANCELLED: i32 = i32::MIN;
+
+/// `rc` reported for an attempt that exceeded its `timeout_s` budget
+/// (mirrors GNU `timeout`'s exit code).
+pub const RC_TIMEOUT: i32 = 124;
 
 /// What a consumer should do for this task.
 #[derive(Clone, Debug, PartialEq)]
@@ -46,16 +66,37 @@ impl Payload {
     }
 }
 
-/// A schedulable task: id + payload.
+/// A schedulable task: id + payload + scheduling metadata.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TaskSpec {
     pub id: TaskId,
     pub payload: Payload,
+    /// Higher runs first; FIFO within a priority level.
+    pub priority: u8,
+    /// Remaining transparent resubmissions after a failed attempt.
+    pub max_retries: u32,
+    /// Attempt index: 0 on first execution, incremented per retry.
+    pub attempt: u32,
+    /// Per-attempt execution budget (executor-enforced; see
+    /// [`RC_TIMEOUT`]).
+    pub timeout_s: Option<f64>,
+    /// Free-form label from [`JobSpec::tag`].
+    pub tag: Option<String>,
 }
 
 impl TaskSpec {
+    /// A plain task with default scheduling metadata (priority 0, no
+    /// retries, no timeout).
     pub fn new(id: TaskId, payload: Payload) -> Self {
-        Self { id, payload }
+        Self {
+            id,
+            payload,
+            priority: 0,
+            max_retries: 0,
+            attempt: 0,
+            timeout_s: None,
+            tag: None,
+        }
     }
 }
 
@@ -67,16 +108,21 @@ impl TaskSpec {
 #[derive(Clone, Debug, PartialEq)]
 pub struct TaskResult {
     pub id: TaskId,
-    /// Rank of the consumer that executed the task.
+    /// Rank of the consumer that executed the task (`usize::MAX` for a
+    /// task cancelled before it ever reached a consumer).
     pub consumer: usize,
     /// Values parsed from `_results.txt` / returned by the in-process
     /// simulator. Possibly empty (the file is optional in §2.2).
     pub results: Vec<f64>,
     pub begin: f64,
     pub finish: f64,
-    /// Exit status: 0 = success. Non-zero marks a failed simulator run;
-    /// search engines decide whether to resubmit or drop.
+    /// Exit status of the final attempt: 0 = success, [`RC_CANCELLED`] =
+    /// dropped by cancellation, [`RC_TIMEOUT`] = budget exceeded. The
+    /// scheduler retries failed attempts transparently while the task has
+    /// retries left; engines only ever see the final attempt.
     pub rc: i32,
+    /// Attempt index of this (final) execution: 0 = succeeded first try.
+    pub attempt: u32,
 }
 
 impl TaskResult {
@@ -87,11 +133,28 @@ impl TaskResult {
     pub fn ok(&self) -> bool {
         self.rc == 0
     }
+
+    pub fn cancelled(&self) -> bool {
+        self.rc == RC_CANCELLED
+    }
+
+    /// Synthesized completion for a task dropped by cancellation.
+    pub fn cancelled_for(spec: &TaskSpec) -> Self {
+        Self {
+            id: spec.id,
+            consumer: usize::MAX,
+            results: Vec::new(),
+            begin: 0.0,
+            finish: 0.0,
+            rc: RC_CANCELLED,
+            attempt: spec.attempt,
+        }
+    }
 }
 
-/// Where search engines hand new tasks to the scheduler. Mints ids so that
-/// every engine (grid sweep, NSGA-II, MCMC, the await-style session) gets
-/// globally unique, monotonically increasing task ids.
+/// Legacy submission surface (v1): payload in, task id out. Still fully
+/// supported — [`JobSink`] extends it, so `sink.submit(payload)` works on
+/// any v2 sink and is equivalent to submitting a default [`JobSpec`].
 pub trait TaskSink {
     fn submit(&mut self, payload: Payload) -> TaskId;
 }
@@ -102,6 +165,8 @@ pub trait TaskSink {
 pub struct VecSink {
     pub next_id: TaskId,
     pub submitted: Vec<TaskSpec>,
+    /// Ids whose cancellation was requested through [`JobSink::cancel`].
+    pub cancelled: Vec<TaskId>,
 }
 
 impl VecSink {
@@ -116,28 +181,45 @@ impl VecSink {
 
 impl TaskSink for VecSink {
     fn submit(&mut self, payload: Payload) -> TaskId {
+        self.submit_job(JobSpec::new(payload))
+    }
+}
+
+impl JobSink for VecSink {
+    fn submit_job(&mut self, spec: JobSpec) -> TaskId {
         let id = self.next_id;
         self.next_id += 1;
-        self.submitted.push(TaskSpec::new(id, payload));
+        self.submitted.push(spec.into_task(id));
         id
+    }
+
+    fn cancel(&mut self, id: TaskId) {
+        self.cancelled.push(id);
     }
 }
 
 /// A search engine decides *which* tasks to run — the paper's third module.
+///
+/// This is the object-safe trait both runtimes drive. Engines written
+/// against the typed v2 API implement [`crate::api::JobEngine`] instead
+/// and run through [`crate::api::JobAdapter`]; hand-rolled engines (the §3
+/// workloads, tests, benches) implement this directly. The sink is a
+/// [`JobSink`], so plain `sink.submit(payload)` (v1) and
+/// `sink.submit_job(spec)` / `sink.cancel(id)` (v2) are both available.
 ///
 /// `start` is called once before scheduling begins; `on_done` every time a
 /// task completes (the analogue of the Python `add_callback`). Both may
 /// submit new tasks through the sink, which is how TC3-style and
 /// optimization workloads dynamically extend the task stream.
 pub trait SearchEngine: Send {
-    fn start(&mut self, sink: &mut dyn TaskSink);
-    fn on_done(&mut self, result: &TaskResult, sink: &mut dyn TaskSink);
+    fn start(&mut self, sink: &mut dyn JobSink);
+    fn on_done(&mut self, result: &TaskResult, sink: &mut dyn JobSink);
     /// Polled periodically by the threaded runtime between events. Lets an
     /// engine pull in work from outside (the await-style [`crate::engine::Session`]
     /// API). Returns `false` while the engine may still produce tasks
     /// spontaneously — the scheduler will not shut down while `false`.
     /// Default: `true` (everything happens in `start`/`on_done`).
-    fn poll(&mut self, sink: &mut dyn TaskSink) -> bool {
+    fn poll(&mut self, sink: &mut dyn JobSink) -> bool {
         let _ = sink;
         true
     }
@@ -164,12 +246,42 @@ mod tests {
     }
 
     #[test]
+    fn vec_sink_records_job_specs_and_cancels() {
+        let mut s = VecSink::new();
+        let id = s.submit_job(JobSpec::sleep(1.0).priority(7).retries(2));
+        assert_eq!(s.submitted[0].priority, 7);
+        assert_eq!(s.submitted[0].max_retries, 2);
+        s.cancel(id);
+        assert_eq!(s.cancelled, vec![id]);
+    }
+
+    #[test]
     fn result_duration_and_ok() {
-        let r = TaskResult { id: 1, consumer: 3, results: vec![1.5], begin: 2.0, finish: 5.5, rc: 0 };
+        let r = TaskResult {
+            id: 1,
+            consumer: 3,
+            results: vec![1.5],
+            begin: 2.0,
+            finish: 5.5,
+            rc: 0,
+            attempt: 0,
+        };
         assert!((r.duration() - 3.5).abs() < 1e-12);
         assert!(r.ok());
         let bad = TaskResult { rc: 1, ..r.clone() };
         assert!(!bad.ok());
+        let cancelled = TaskResult { rc: RC_CANCELLED, ..r };
+        assert!(cancelled.cancelled() && !cancelled.ok());
+    }
+
+    #[test]
+    fn cancelled_result_carries_attempt() {
+        let mut spec = TaskSpec::new(4, Payload::Sleep { seconds: 1.0 });
+        spec.attempt = 2;
+        let r = TaskResult::cancelled_for(&spec);
+        assert_eq!(r.id, 4);
+        assert_eq!(r.attempt, 2);
+        assert!(r.cancelled());
     }
 
     #[test]

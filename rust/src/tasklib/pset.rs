@@ -1,18 +1,20 @@
 //! `ParameterSet` / `Run` — Monte-Carlo grouping (paper §2.3).
 //!
 //! The paper's application averages each individual's objectives over five
-//! runs with different random seeds. `PsetStore` tracks which task ids
-//! belong to which parameter set and aggregates their results when all runs
-//! of a set are in.
+//! runs with different random seeds. `PsetStore` tracks in-flight
+//! parameter sets and aggregates their run results when all runs of a set
+//! are in.
+//!
+//! Since the Job API v2 redesign the store no longer maps task ids to
+//! sets: the submitting engine attaches `(pset_id, run_index)` as the job
+//! context (see [`crate::api::JobEngine`]) and records completions with
+//! [`PsetStore::record_run`]. The framework owns the id bookkeeping.
 
 use std::collections::HashMap;
 
-use super::{Payload, TaskId, TaskSink};
-
-/// One run (task) of a parameter set.
+/// One run of a parameter set.
 #[derive(Clone, Debug)]
 pub struct Run {
-    pub task_id: TaskId,
     pub seed: u64,
     pub results: Option<Vec<f64>>,
 }
@@ -68,7 +70,6 @@ impl ParameterSet {
 #[derive(Default)]
 pub struct PsetStore {
     next_pset_id: u64,
-    by_task: HashMap<TaskId, u64>,
     sets: HashMap<u64, ParameterSet>,
 }
 
@@ -77,42 +78,33 @@ impl PsetStore {
         Self::default()
     }
 
-    /// Create a parameter set and submit `n_runs` `Payload::Eval` tasks
-    /// with seeds `seed0 .. seed0 + n_runs`.
-    pub fn create(
-        &mut self,
-        point: Vec<f64>,
-        n_runs: usize,
-        seed0: u64,
-        sink: &mut dyn TaskSink,
-    ) -> u64 {
+    /// Register a parameter set of `n_runs` runs seeded `seed0 .. seed0 +
+    /// n_runs` and return its id. The caller submits the actual jobs
+    /// (typically `JobSpec::eval(point).seed(seed0 + k)` with context
+    /// `(pset_id, k)`).
+    pub fn create_set(&mut self, point: Vec<f64>, n_runs: usize, seed0: u64) -> u64 {
         let pid = self.next_pset_id;
         self.next_pset_id += 1;
-        let mut runs = Vec::with_capacity(n_runs);
-        for k in 0..n_runs {
-            let seed = seed0 + k as u64;
-            let tid = sink.submit(Payload::Eval { input: point.clone(), seed });
-            self.by_task.insert(tid, pid);
-            runs.push(Run { task_id: tid, seed, results: None });
-        }
+        let runs = (0..n_runs).map(|k| Run { seed: seed0 + k as u64, results: None }).collect();
         self.sets.insert(pid, ParameterSet { id: pid, point, runs });
         pid
     }
 
-    /// Record a completed task. Returns the parameter set if this result
-    /// completed it (the set is removed from the store — ownership moves to
-    /// the caller, typically an optimizer archiving the individual).
-    pub fn record(&mut self, task_id: TaskId, results: Vec<f64>) -> Option<ParameterSet> {
-        let pid = self.by_task.remove(&task_id)?;
-        let set = self.sets.get_mut(&pid)?;
-        for run in &mut set.runs {
-            if run.task_id == task_id {
-                run.results = Some(results);
-                break;
-            }
-        }
+    /// Record run `run` of set `pset`. Returns the parameter set if this
+    /// result completed it (the set is removed from the store — ownership
+    /// moves to the caller, typically an optimizer archiving the
+    /// individual). Unknown sets or out-of-range run indices are ignored.
+    pub fn record_run(
+        &mut self,
+        pset: u64,
+        run: usize,
+        results: Vec<f64>,
+    ) -> Option<ParameterSet> {
+        let set = self.sets.get_mut(&pset)?;
+        let slot = set.runs.get_mut(run)?;
+        slot.results = Some(results);
         if set.is_complete() {
-            self.sets.remove(&pid)
+            self.sets.remove(&pset)
         } else {
             None
         }
@@ -126,45 +118,42 @@ impl PsetStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tasklib::VecSink;
 
     #[test]
-    fn create_submits_n_runs_with_distinct_seeds() {
+    fn create_registers_n_runs_with_distinct_seeds() {
         let mut store = PsetStore::new();
-        let mut sink = VecSink::new();
-        let pid = store.create(vec![0.5, 0.25], 5, 100, &mut sink);
+        let pid = store.create_set(vec![0.5, 0.25], 5, 100);
         assert_eq!(pid, 0);
-        assert_eq!(sink.submitted.len(), 5);
-        let seeds: Vec<u64> = sink
-            .submitted
-            .iter()
-            .map(|t| match &t.payload {
-                Payload::Eval { seed, .. } => *seed,
-                _ => panic!(),
-            })
-            .collect();
-        assert_eq!(seeds, vec![100, 101, 102, 103, 104]);
         assert_eq!(store.in_flight(), 1);
+        // Completing all runs returns the set with its seeds intact.
+        for k in 0..4 {
+            assert!(store.record_run(pid, k, vec![1.0]).is_none());
+        }
+        let done = store.record_run(pid, 4, vec![1.0]).expect("complete");
+        let seeds: Vec<u64> = done.runs.iter().map(|r| r.seed).collect();
+        assert_eq!(seeds, vec![100, 101, 102, 103, 104]);
+        assert_eq!(store.in_flight(), 0);
     }
 
     #[test]
     fn record_completes_only_when_all_runs_done() {
         let mut store = PsetStore::new();
-        let mut sink = VecSink::new();
-        store.create(vec![1.0], 3, 0, &mut sink);
-        let ids: Vec<TaskId> = sink.submitted.iter().map(|t| t.id).collect();
-        assert!(store.record(ids[0], vec![2.0]).is_none());
-        assert!(store.record(ids[1], vec![4.0]).is_none());
-        let done = store.record(ids[2], vec![6.0]).expect("complete");
+        let pid = store.create_set(vec![1.0], 3, 0);
+        assert!(store.record_run(pid, 0, vec![2.0]).is_none());
+        assert!(store.record_run(pid, 1, vec![4.0]).is_none());
+        let done = store.record_run(pid, 2, vec![6.0]).expect("complete");
         assert!(done.is_complete());
         assert_eq!(done.mean_results(), vec![4.0]);
         assert_eq!(store.in_flight(), 0);
     }
 
     #[test]
-    fn record_unknown_task_is_none() {
+    fn record_unknown_set_or_run_is_none() {
         let mut store = PsetStore::new();
-        assert!(store.record(99, vec![]).is_none());
+        assert!(store.record_run(99, 0, vec![]).is_none());
+        let pid = store.create_set(vec![1.0], 2, 0);
+        assert!(store.record_run(pid, 7, vec![]).is_none());
+        assert_eq!(store.in_flight(), 1);
     }
 
     #[test]
@@ -173,9 +162,9 @@ mod tests {
             id: 0,
             point: vec![],
             runs: vec![
-                Run { task_id: 0, seed: 0, results: Some(vec![1.0, 3.0]) },
-                Run { task_id: 1, seed: 1, results: Some(vec![]) },
-                Run { task_id: 2, seed: 2, results: Some(vec![3.0, 5.0]) },
+                Run { seed: 0, results: Some(vec![1.0, 3.0]) },
+                Run { seed: 1, results: Some(vec![]) },
+                Run { seed: 2, results: Some(vec![3.0, 5.0]) },
             ],
         };
         assert_eq!(ps.mean_results(), vec![2.0, 4.0]);

@@ -9,6 +9,7 @@
 //! Each is a [`SearchEngine`] submitting [`Payload::Sleep`] tasks, so the
 //! same object drives both the threaded runtime and the DES.
 
+use crate::api::JobSink;
 use crate::tasklib::{Payload, SearchEngine, TaskResult, TaskSink};
 use crate::util::rng::Pcg64;
 
@@ -79,7 +80,7 @@ impl TestCaseEngine {
         }
     }
 
-    fn submit_one(&mut self, sink: &mut dyn TaskSink) {
+    fn submit_one(&mut self, sink: &mut dyn JobSink) {
         let d = self.dist().sample(&mut self.rng);
         sink.submit(Payload::Sleep { seconds: d });
         self.created += 1;
@@ -91,7 +92,7 @@ impl TestCaseEngine {
 }
 
 impl SearchEngine for TestCaseEngine {
-    fn start(&mut self, sink: &mut dyn TaskSink) {
+    fn start(&mut self, sink: &mut dyn JobSink) {
         let up_front = match self.case {
             TestCase::TC1 | TestCase::TC2 => self.n_total,
             TestCase::TC3 => (self.n_total / 4).max(1).min(self.n_total),
@@ -101,7 +102,7 @@ impl SearchEngine for TestCaseEngine {
         }
     }
 
-    fn on_done(&mut self, _r: &TaskResult, sink: &mut dyn TaskSink) {
+    fn on_done(&mut self, _r: &TaskResult, sink: &mut dyn JobSink) {
         if self.case == TestCase::TC3 && self.created < self.n_total {
             self.submit_one(sink);
         }
@@ -163,6 +164,7 @@ mod tests {
                 begin: 0.0,
                 finish: 1.0,
                 rc: 0,
+                attempt: 0,
             };
             e.on_done(&r, &mut sink);
             done += 1;
@@ -170,7 +172,15 @@ mod tests {
         assert_eq!(sink.submitted.len(), 40);
         assert_eq!(e.created(), 40);
         // Further completions create nothing.
-        let r = TaskResult { id: 0, consumer: 0, results: vec![], begin: 0.0, finish: 1.0, rc: 0 };
+        let r = TaskResult {
+            id: 0,
+            consumer: 0,
+            results: vec![],
+            begin: 0.0,
+            finish: 1.0,
+            rc: 0,
+            attempt: 0,
+        };
         e.on_done(&r, &mut sink);
         assert_eq!(sink.submitted.len(), 40);
     }

@@ -8,6 +8,7 @@ use caravan::config::SchedulerConfig;
 use caravan::des::{run_des, ConstResults, DesConfig, SleepDurations};
 use caravan::engine::{GridEngine, McmcConfig, McmcEngine, MoeaConfig, Nsga2Engine, Session};
 use caravan::extproc::CommandExecutor;
+use caravan::api::JobSink;
 use caravan::scheduler::{run_scheduler, Executor, SleepExecutor};
 use caravan::tasklib::{Payload, SearchEngine, TaskResult, TaskSink, TaskSpec};
 use caravan::workload::{TestCase, TestCaseEngine};
@@ -28,12 +29,12 @@ struct NCommands {
 }
 
 impl SearchEngine for NCommands {
-    fn start(&mut self, sink: &mut dyn TaskSink) {
+    fn start(&mut self, sink: &mut dyn JobSink) {
         for _ in 0..self.n {
             sink.submit(Payload::Command { cmdline: self.cmd.clone() });
         }
     }
-    fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn TaskSink) {}
+    fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn JobSink) {}
 }
 
 #[test]
@@ -57,13 +58,13 @@ fn mixed_success_failure_and_missing_results_file() {
     // both are legal per §2.2 (the file is optional).
     struct Mixed(usize);
     impl SearchEngine for Mixed {
-        fn start(&mut self, sink: &mut dyn TaskSink) {
+        fn start(&mut self, sink: &mut dyn JobSink) {
             for i in 0..self.0 {
                 let cmd = if i % 2 == 0 { "sh -c 'true'" } else { "sh -c 'exit 1'" };
                 sink.submit(Payload::Command { cmdline: cmd.into() });
             }
         }
-        fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn TaskSink) {}
+        fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn JobSink) {}
     }
     let work = std::env::temp_dir().join(format!("caravan_mixed_{}", std::process::id()));
     let report = run_scheduler(
@@ -120,12 +121,12 @@ fn zero_duration_storm_des() {
     // conserve all tasks.
     struct Zeros(usize);
     impl SearchEngine for Zeros {
-        fn start(&mut self, sink: &mut dyn TaskSink) {
+        fn start(&mut self, sink: &mut dyn JobSink) {
             for _ in 0..self.0 {
                 sink.submit(Payload::Sleep { seconds: 0.0 });
             }
         }
-        fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn TaskSink) {}
+        fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn JobSink) {}
     }
     let r = run_des(&DesConfig::new(64), Box::new(Zeros(100_000)), Box::new(SleepDurations));
     assert_eq!(r.results.len(), 100_000);

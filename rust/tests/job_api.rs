@@ -1,0 +1,395 @@
+//! Job API v2 semantics, exercised end-to-end in both runtimes.
+//!
+//! The DES drives the exact protocol state machines of the threaded
+//! scheduler in virtual time, so retry, priority and cancellation are
+//! asserted *deterministically* there; the threaded tests mirror each
+//! semantic with timing-robust constructions (a single consumer serializes
+//! dispatch order; a long head task pins the queue state).
+
+use std::sync::Arc;
+
+use caravan::api::{job_engine, JobEngine, JobSink, JobSpec, Jobs};
+use caravan::config::{SchedulerConfig, StealPolicy};
+use caravan::des::{run_des, DesConfig, DesReport, DurationModel, SleepDurations};
+use caravan::scheduler::{run_scheduler, Executor};
+use caravan::tasklib::{Payload, TaskResult, TaskSink, TaskSpec, RC_TIMEOUT};
+use caravan::workload::{TestCase, TestCaseEngine};
+
+/// Submits `n` sleep jobs with a fixed retry budget; records contexts.
+struct NJobs {
+    n: usize,
+    retries: u32,
+}
+
+impl JobEngine for NJobs {
+    type Ctx = usize;
+    fn start(&mut self, jobs: &mut Jobs<'_, usize>) {
+        for i in 0..self.n {
+            jobs.submit(JobSpec::sleep(1.0).retries(self.retries), i);
+        }
+    }
+    fn on_done(&mut self, _r: &TaskResult, _i: usize, _jobs: &mut Jobs<'_, usize>) {}
+}
+
+/// DES failure model: every attempt below `fail_attempts` exits 1. Purely
+/// a function of `task.attempt`, so runs are deterministic.
+struct FailFirst {
+    fail_attempts: u32,
+}
+
+impl DurationModel for FailFirst {
+    fn duration(&mut self, _t: &TaskSpec) -> f64 {
+        1.0
+    }
+    fn results(&mut self, t: &TaskSpec) -> Vec<f64> {
+        vec![t.id as f64]
+    }
+    fn rc(&mut self, t: &TaskSpec) -> i32 {
+        if t.attempt < self.fail_attempts {
+            1
+        } else {
+            0
+        }
+    }
+}
+
+// ---------------------------------------------------------------- retry
+
+#[test]
+fn retries_never_duplicate_results_property() {
+    // For any (n, fail_attempts, retries): every task id yields exactly one
+    // final result; its rc and attempt count follow from the retry budget.
+    use caravan::testutil::{check, pair, usize_in};
+    check(
+        "retries never duplicate results for a task id",
+        pair(pair(usize_in(1..40), usize_in(0..4)), pair(usize_in(0..4), usize_in(1..9))),
+        |&((n, fail_attempts), (retries, np))| {
+            let fail_attempts = fail_attempts as u32;
+            let retries = retries as u32;
+            let mut cfg = DesConfig::new(np);
+            cfg.sched.consumers_per_buffer = 4;
+            let r = run_des(
+                &cfg,
+                job_engine(NJobs { n, retries }),
+                Box::new(FailFirst { fail_attempts }),
+            );
+            if r.results.len() != n {
+                return false;
+            }
+            let mut ids: Vec<u64> = r.results.iter().map(|x| x.id).collect();
+            ids.sort();
+            ids.dedup();
+            if ids.len() != n {
+                return false;
+            }
+            let expected_attempt = fail_attempts.min(retries);
+            r.results.iter().all(|x| {
+                x.attempt == expected_attempt
+                    && if fail_attempts <= retries { x.rc == 0 } else { x.rc == 1 }
+            }) && r.retried() == (expected_attempt as u64) * n as u64
+                && r.filling.overlap_violations() == 0
+        },
+    );
+}
+
+#[test]
+fn des_retry_reports_attempts_in_deep_tree() {
+    let mut cfg = DesConfig::new(16);
+    cfg.sched.consumers_per_buffer = 4;
+    cfg.sched.depth = 2;
+    cfg.sched.fanout = 2;
+    let r = run_des(&cfg, job_engine(NJobs { n: 64, retries: 2 }), Box::new(FailFirst {
+        fail_attempts: 1,
+    }));
+    assert_eq!(r.results.len(), 64);
+    assert!(r.results.iter().all(|x| x.ok() && x.attempt == 1));
+    assert_eq!(r.retried(), 64);
+}
+
+#[test]
+fn threaded_retry_succeeds_on_second_attempt() {
+    // Executor failing every first attempt: with one retry allowed, every
+    // task must come back ok with attempt == 1 — same semantics as the DES
+    // test above, running on real threads.
+    struct FlakyExec;
+    impl Executor for FlakyExec {
+        fn run(&self, task: &TaskSpec, _c: usize) -> (Vec<f64>, i32) {
+            if task.attempt == 0 {
+                (Vec::new(), 1)
+            } else {
+                (vec![task.id as f64], 0)
+            }
+        }
+    }
+    let cfg = SchedulerConfig {
+        np: 4,
+        consumers_per_buffer: 4,
+        flush_interval_ms: 2,
+        ..Default::default()
+    };
+    let report = run_scheduler(&cfg, job_engine(NJobs { n: 12, retries: 1 }), Arc::new(FlakyExec));
+    assert_eq!(report.results.len(), 12);
+    assert!(report.results.iter().all(|r| r.ok() && r.attempt == 1), "all succeed on retry");
+    let mut ids: Vec<u64> = report.results.iter().map(|r| r.id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), 12, "no duplicated results under retry");
+    let retried: u64 = report.node_stats.iter().map(|s| s.retried).sum();
+    assert_eq!(retried, 12);
+}
+
+#[test]
+fn threaded_retry_exhaustion_reports_failure() {
+    struct AlwaysFail;
+    impl Executor for AlwaysFail {
+        fn run(&self, _t: &TaskSpec, _c: usize) -> (Vec<f64>, i32) {
+            (Vec::new(), 7)
+        }
+    }
+    let cfg = SchedulerConfig {
+        np: 2,
+        consumers_per_buffer: 2,
+        flush_interval_ms: 2,
+        ..Default::default()
+    };
+    let report = run_scheduler(&cfg, job_engine(NJobs { n: 6, retries: 2 }), Arc::new(AlwaysFail));
+    assert_eq!(report.results.len(), 6);
+    assert!(report.results.iter().all(|r| r.rc == 7 && r.attempt == 2));
+}
+
+// ---------------------------------------------------------------- timeout
+
+#[test]
+fn des_timeout_truncates_overrunning_attempts() {
+    // Jobs whose nominal duration exceeds their budget are cut at the
+    // budget with RC_TIMEOUT; with no retries the failure is final.
+    struct TimedJobs;
+    impl JobEngine for TimedJobs {
+        type Ctx = ();
+        fn start(&mut self, jobs: &mut Jobs<'_, ()>) {
+            for _ in 0..8 {
+                jobs.submit(JobSpec::sleep(10.0).timeout(2.0), ());
+            }
+            for _ in 0..8 {
+                jobs.submit(JobSpec::sleep(1.0).timeout(2.0), ());
+            }
+        }
+        fn on_done(&mut self, _r: &TaskResult, _c: (), _jobs: &mut Jobs<'_, ()>) {}
+    }
+    let cfg = DesConfig::new(4);
+    let r = run_des(&cfg, job_engine(TimedJobs), Box::new(SleepDurations));
+    assert_eq!(r.results.len(), 16);
+    let timed_out: Vec<&TaskResult> = r.results.iter().filter(|x| x.rc == RC_TIMEOUT).collect();
+    assert_eq!(timed_out.len(), 8);
+    for t in &timed_out {
+        assert!((t.duration() - 2.0).abs() < 1e-9, "attempt truncated at the budget");
+    }
+    assert!(r.results.iter().filter(|x| x.ok()).count() == 8);
+}
+
+// ---------------------------------------------------------------- priority
+
+#[test]
+fn des_priority_orders_starts_exactly_on_single_leaf() {
+    // Single leaf, everything submitted up front: with priority queues at
+    // the producer and the leaf, no low-priority task may begin before any
+    // high-priority one (ties at identical virtual times allowed).
+    struct TwoTiers;
+    impl JobEngine for TwoTiers {
+        type Ctx = bool;
+        fn start(&mut self, jobs: &mut Jobs<'_, bool>) {
+            // Lows submitted first on purpose.
+            for _ in 0..20 {
+                jobs.submit(JobSpec::sleep(1.0), false);
+            }
+            for _ in 0..20 {
+                jobs.submit(JobSpec::sleep(1.0).priority(9), true);
+            }
+        }
+        fn on_done(&mut self, _r: &TaskResult, _hi: bool, _jobs: &mut Jobs<'_, bool>) {}
+    }
+    let mut cfg = DesConfig::new(4);
+    cfg.sched.consumers_per_buffer = 4; // one leaf
+    let r = run_des(&cfg, job_engine(TwoTiers), Box::new(SleepDurations));
+    assert_eq!(r.results.len(), 40);
+    let max_high_begin = r
+        .results
+        .iter()
+        .filter(|x| x.id >= 20)
+        .map(|x| x.begin)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let min_low_begin = r
+        .results
+        .iter()
+        .filter(|x| x.id < 20)
+        .map(|x| x.begin)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        max_high_begin <= min_low_begin + 1e-9,
+        "every high-priority start ({max_high_begin}) must precede every low start ({min_low_begin})"
+    );
+}
+
+#[test]
+fn threaded_priority_orders_single_consumer() {
+    // One consumer serializes execution; a long head task keeps the rest
+    // queued while they are submitted. The high-priority tier must run
+    // before the low tier regardless of submission order.
+    struct HeadThenTiers;
+    impl JobEngine for HeadThenTiers {
+        type Ctx = u8;
+        fn start(&mut self, jobs: &mut Jobs<'_, u8>) {
+            jobs.submit(JobSpec::sleep(5.0).priority(10), 2);
+            for _ in 0..3 {
+                jobs.submit(JobSpec::sleep(1.0), 0);
+            }
+            for _ in 0..3 {
+                jobs.submit(JobSpec::sleep(1.0).priority(5), 1);
+            }
+        }
+        fn on_done(&mut self, _r: &TaskResult, _tier: u8, _jobs: &mut Jobs<'_, u8>) {}
+    }
+    let cfg = SchedulerConfig {
+        np: 1,
+        consumers_per_buffer: 1,
+        flush_interval_ms: 2,
+        time_scale: 0.002,
+        ..Default::default()
+    };
+    let report = run_scheduler(
+        &cfg,
+        job_engine(HeadThenTiers),
+        Arc::new(caravan::scheduler::SleepExecutor { time_scale: 0.002 }),
+    );
+    assert_eq!(report.results.len(), 7);
+    // ids: 0 = head, 1..=3 low, 4..=6 high.
+    let begin_of = |id: u64| report.results.iter().find(|r| r.id == id).unwrap().begin;
+    let max_high = (4..=6).map(begin_of).fold(f64::NEG_INFINITY, f64::max);
+    let min_low = (1..=3).map(begin_of).fold(f64::INFINITY, f64::min);
+    assert!(
+        max_high < min_low,
+        "high tier (last begin {max_high}) must fully precede low tier (first begin {min_low})"
+    );
+}
+
+// ---------------------------------------------------------------- cancel
+
+#[test]
+fn des_cancel_drops_exactly_the_queued_targets() {
+    // Single leaf, long distinct durations, flush_every = 1 so the first
+    // completion reaches the engine while the queue state is still known
+    // exactly: ids 0-3 running, 4 dispatched on completion of 0, 5-7
+    // queued at the leaf, 8+ pending at the producer.
+    struct CancelSome {
+        fired: bool,
+    }
+    impl JobEngine for CancelSome {
+        type Ctx = ();
+        fn start(&mut self, jobs: &mut Jobs<'_, ()>) {
+            for i in 0..40 {
+                jobs.submit(JobSpec::sleep(10.0 + i as f64), ());
+            }
+        }
+        fn on_done(&mut self, r: &TaskResult, _c: (), jobs: &mut Jobs<'_, ()>) {
+            if !self.fired {
+                self.fired = true;
+                assert_eq!(r.id, 0, "shortest task completes first");
+                // 5 and 6 are queued at the leaf; 20..30 pending at the
+                // producer; 1 is running (no-op best-effort cancel).
+                jobs.cancel(5);
+                jobs.cancel(6);
+                for id in 20..30 {
+                    jobs.cancel(id);
+                }
+                jobs.cancel(1);
+            }
+        }
+    }
+    let mut cfg = DesConfig::new(4);
+    cfg.sched.consumers_per_buffer = 4;
+    cfg.sched.flush_every = 1;
+    let r = run_des(&cfg, job_engine(CancelSome { fired: false }), Box::new(SleepDurations));
+    // Conservation: one result per id.
+    assert_eq!(r.results.len(), 40);
+    let mut ids: Vec<u64> = r.results.iter().map(|x| x.id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), 40);
+    // Exactly the queued targets were cancelled; the running task (1) and
+    // everything never targeted completed normally.
+    let cancelled: Vec<u64> = {
+        let mut v: Vec<u64> =
+            r.results.iter().filter(|x| x.cancelled()).map(|x| x.id).collect();
+        v.sort();
+        v
+    };
+    let expected: Vec<u64> = [5u64, 6].iter().copied().chain(20..30).collect();
+    assert_eq!(cancelled, expected);
+    assert!(r.results.iter().find(|x| x.id == 1).unwrap().ok());
+    // The two leaf-queued drops are visible in NodeStats; the producer
+    // drops are not node drops.
+    let dropped_in_tree: u64 = r.node_stats.iter().map(|s| s.cancelled_dropped).sum();
+    assert_eq!(dropped_in_tree, 2);
+    assert_eq!(r.cancelled(), 12);
+}
+
+// ---------------------------------------------------------- steal victims
+
+fn steal_run(policy: StealPolicy, seed: u64) -> DesReport {
+    let mut cfg = DesConfig::new(8);
+    cfg.sched.consumers_per_buffer = 2; // 4 leaves
+    cfg.sched.steal = true;
+    cfg.sched.steal_policy = policy;
+    run_des(
+        &cfg,
+        Box::new(TestCaseEngine::new(TestCase::TC2, 8 * 50, seed)),
+        Box::new(SleepDurations),
+    )
+}
+
+#[test]
+fn deepest_queue_victims_fail_no_more_than_round_robin() {
+    // Identical heavy-tailed workload under both victim-selection
+    // policies: depth-aware selection must not produce *more* failed
+    // (empty-grant) steal attempts, and typically produces fewer.
+    let mut rr_failed = 0u64;
+    let mut dq_failed = 0u64;
+    for seed in [3u64, 11, 42] {
+        let rr = steal_run(StealPolicy::RoundRobin, seed);
+        let dq = steal_run(StealPolicy::DeepestQueue, seed);
+        // Same workload completes under both policies.
+        assert_eq!(rr.results.len(), 400, "seed {seed}");
+        assert_eq!(dq.results.len(), 400, "seed {seed}");
+        assert_eq!(rr.filling.overlap_violations(), 0);
+        assert_eq!(dq.filling.overlap_violations(), 0);
+        rr_failed += rr.steals_failed();
+        dq_failed += dq.steals_failed();
+    }
+    println!("failed steal attempts: round-robin {rr_failed}, deepest-queue {dq_failed}");
+    assert!(
+        dq_failed <= rr_failed,
+        "deepest-queue victim selection must not fail more often \
+         (round-robin {rr_failed} vs deepest-queue {dq_failed})"
+    );
+}
+
+// -------------------------------------------------- legacy sink adapter
+
+#[test]
+fn legacy_task_sink_path_still_works_through_job_sink() {
+    // Old-style engines call `sink.submit(payload)` (the v1 TaskSink
+    // method); it must behave exactly like a default JobSpec submission.
+    struct Legacy;
+    impl caravan::tasklib::SearchEngine for Legacy {
+        fn start(&mut self, sink: &mut dyn JobSink) {
+            for _ in 0..5 {
+                sink.submit(Payload::Sleep { seconds: 1.0 });
+            }
+            sink.submit_job(JobSpec::sleep(1.0).priority(3));
+        }
+        fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn JobSink) {}
+    }
+    let r = run_des(&DesConfig::new(2), Box::new(Legacy), Box::new(SleepDurations));
+    assert_eq!(r.results.len(), 6);
+    assert!(r.results.iter().all(|x| x.ok() && x.attempt == 0));
+}

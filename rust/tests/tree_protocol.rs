@@ -111,11 +111,11 @@ fn depth_sweep_passes_full_suite() {
 fn shutdown_reaches_all_levels_even_with_no_work() {
     struct Nothing;
     impl caravan::tasklib::SearchEngine for Nothing {
-        fn start(&mut self, _s: &mut dyn caravan::tasklib::TaskSink) {}
+        fn start(&mut self, _s: &mut dyn caravan::api::JobSink) {}
         fn on_done(
             &mut self,
             _r: &caravan::tasklib::TaskResult,
-            _s: &mut dyn caravan::tasklib::TaskSink,
+            _s: &mut dyn caravan::api::JobSink,
         ) {
         }
     }
@@ -124,6 +124,147 @@ fn shutdown_reaches_all_levels_even_with_no_work() {
     let r = run_des(&dcfg, Box::new(Nothing), Box::new(SleepDurations));
     assert!(r.results.is_empty());
     assert!(r.node_stats.iter().all(|s| s.saw_shutdown), "{:?}", r.node_stats);
+}
+
+#[test]
+fn cancellation_conserves_task_counts() {
+    // Every submitted task must yield exactly one result — executed or
+    // cancelled — on any tree shape, so termination detection and the
+    // conservation invariant survive cancellations. The engine cancels a
+    // fixed block of ids as soon as the first result arrives; whatever is
+    // still queued (at the producer or inside the tree) is dropped, and
+    // anything already running completes normally.
+    use caravan::api::{JobEngine, JobSpec, Jobs};
+    use caravan::testutil::{check, pair, usize_in};
+
+    struct CancelHalf {
+        n: usize,
+        ids: Vec<u64>,
+        fired: bool,
+    }
+    impl JobEngine for CancelHalf {
+        type Ctx = ();
+        fn start(&mut self, jobs: &mut Jobs<'_, ()>) {
+            for i in 0..self.n {
+                let id = jobs.submit(JobSpec::sleep(10.0 + i as f64), ());
+                self.ids.push(id);
+            }
+        }
+        fn on_done(&mut self, _r: &caravan::tasklib::TaskResult, _ctx: (), jobs: &mut Jobs<'_, ()>) {
+            if !self.fired {
+                self.fired = true;
+                for &id in &self.ids[self.ids.len() / 2..] {
+                    jobs.cancel(id);
+                }
+            }
+        }
+    }
+
+    check(
+        "cancellation conserves task counts",
+        pair(pair(usize_in(1..24), usize_in(1..6)), usize_in(1..4)),
+        |&((np, cpb), depth)| {
+            let cfg = shape(np, cpb, depth, 2, np % 2 == 0);
+            let n = (np * 5).max(4);
+            let mut dcfg = DesConfig::new(cfg.np);
+            dcfg.sched = cfg;
+            let engine = CancelHalf { n, ids: Vec::new(), fired: false };
+            let r = run_des(
+                &dcfg,
+                caravan::api::job_engine(engine),
+                Box::new(SleepDurations),
+            );
+            // Exactly one result per id, cancelled ones flagged as such.
+            let mut ids: Vec<u64> = r.results.iter().map(|x| x.id).collect();
+            ids.sort();
+            ids.dedup();
+            let dropped_in_tree: u64 =
+                r.node_stats.iter().map(|s| s.cancelled_dropped).sum();
+            r.results.len() == n
+                && ids.len() == n
+                && r.filling.overlap_violations() == 0
+                && dropped_in_tree as usize <= r.cancelled()
+                && r.results.iter().all(|x| x.rc == 0 || x.cancelled())
+        },
+    );
+}
+
+#[test]
+fn priority_inversion_is_bounded_under_stealing() {
+    // High-priority jobs submitted together with a crowd of low-priority
+    // ones must start (almost) first: with priority queues at every level,
+    // the only lows that may begin before the last high are those already
+    // resident in node queues / on consumers when the highs were handed
+    // out, plus sideways steal traffic. Bound: total queue credit + np +
+    // tasks stolen.
+    use caravan::api::{JobEngine, JobSpec, Jobs};
+
+    const N_HIGH: usize = 30;
+    const N_LOW: usize = 90;
+
+    struct Mixed;
+    impl JobEngine for Mixed {
+        type Ctx = bool; // "is high priority"
+        fn start(&mut self, jobs: &mut Jobs<'_, bool>) {
+            // Lows first, so any priority respect comes from the queues,
+            // not submission order.
+            for _ in 0..N_LOW {
+                jobs.submit(JobSpec::sleep(1.0), false);
+            }
+            for _ in 0..N_HIGH {
+                jobs.submit(JobSpec::sleep(1.0).priority(9), true);
+            }
+        }
+        fn on_done(
+            &mut self,
+            _r: &caravan::tasklib::TaskResult,
+            _hi: bool,
+            _jobs: &mut Jobs<'_, bool>,
+        ) {
+        }
+    }
+
+    for (np, cpb, depth) in [(8, 2, 1), (8, 2, 2), (12, 3, 1)] {
+        let cfg = shape(np, cpb, depth, 2, true);
+        let mut dcfg = DesConfig::new(cfg.np);
+        dcfg.sched = cfg;
+        let r = run_des(&dcfg, caravan::api::job_engine(Mixed), Box::new(SleepDurations));
+        assert_eq!(r.results.len(), N_HIGH + N_LOW, "np={np} depth={depth}");
+        // High ids are N_LOW..N_LOW+N_HIGH (submission order mints ids).
+        let is_high = |id: u64| id >= N_LOW as u64;
+        let last_high_begin = r
+            .results
+            .iter()
+            .filter(|x| is_high(x.id))
+            .map(|x| x.begin)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let lows_before = r
+            .results
+            .iter()
+            .filter(|x| !is_high(x.id) && x.begin < last_high_begin)
+            .count();
+        let credit: usize = r.node_stats.iter().map(|s| s.credit_bound).sum();
+        let bound = credit + np + r.tasks_stolen() as usize;
+        assert!(
+            lows_before <= bound,
+            "np={np} depth={depth}: {lows_before} low-priority tasks began before \
+             the last high-priority one (bound {bound})"
+        );
+        // And the high tier must clearly lead on average.
+        let mean = |hi: bool| {
+            let xs: Vec<f64> = r
+                .results
+                .iter()
+                .filter(|x| is_high(x.id) == hi)
+                .map(|x| x.begin)
+                .collect();
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        assert!(
+            mean(true) < mean(false),
+            "np={np} depth={depth}: high-priority mean begin must precede low"
+        );
+    }
 }
 
 #[test]
