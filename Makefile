@@ -1,0 +1,24 @@
+# Top-level convenience targets.
+#
+# `artifacts` builds the AOT-compiled JAX/Pallas artifacts consumed by
+# the PJRT integration tests (rust/tests/integration.rs) and by
+# `caravan evac --backend pjrt`. It needs the python toolchain (jax +
+# xla_extension); the rust crate builds and tests fine without it — the
+# PJRT-dependent test cases skip when artifacts/meta.json is absent.
+
+ARTIFACTS := rust/artifacts
+
+.PHONY: artifacts test bench-smoke clean-artifacts
+
+artifacts:
+	cd python && python -m compile.aot --out ../$(ARTIFACTS)
+
+test:
+	cargo build --release
+	cargo test -q
+
+bench-smoke:
+	cargo bench --bench fig3_tree -- --quick
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

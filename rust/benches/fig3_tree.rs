@@ -13,9 +13,37 @@
 mod common;
 
 use caravan::des::{run_des, DesConfig, SleepDurations};
+use caravan::scheduler::NodeStats;
 use caravan::util::cli::Args;
 use caravan::workload::{TestCase, TestCaseEngine};
 use common::{banner, timed};
+
+/// Aggregate the per-node counters level by level: `NodeStats` rows are
+/// the raw observability surface, this is the digest the table prints.
+fn node_stats_by_level(stats: &[NodeStats]) -> Vec<String> {
+    let max_level = stats.iter().map(|s| s.level).max().unwrap_or(0);
+    (1..=max_level)
+        .map(|level| {
+            let rows: Vec<&NodeStats> = stats.iter().filter(|s| s.level == level).collect();
+            let msgs: u64 = rows.iter().map(|s| s.msgs_in + s.msgs_out).sum();
+            let queue_frac = rows
+                .iter()
+                .map(|s| s.max_queue as f64 / s.credit_bound.max(1) as f64)
+                .fold(0.0f64, f64::max);
+            let steals: u64 = rows.iter().map(|s| s.steals_received).sum();
+            let retried: u64 = rows.iter().map(|s| s.retried).sum();
+            format!(
+                "L{}×{}: msg {} q/cred {:.0}% stolen {} retried {}",
+                level,
+                rows.len(),
+                msgs,
+                queue_frac * 100.0,
+                steals,
+                retried
+            )
+        })
+        .collect()
+}
 
 fn run_point(np: usize, depth: usize, steal: bool, tasks_per_proc: usize) {
     let n = tasks_per_proc * np;
@@ -62,6 +90,7 @@ fn run_point(np: usize, depth: usize, steal: bool, tasks_per_proc: usize) {
         run.wall_secs,
         levels.join("  ")
     );
+    println!("        node-stats: {}", node_stats_by_level(&r.node_stats).join("  "));
 }
 
 fn main() {

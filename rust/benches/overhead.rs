@@ -85,6 +85,33 @@ fn main() {
         n as f64 / run.wall_secs,
         run.wall_secs / n as f64 * 1e6
     );
+    // Per-node / per-level observability of the threaded runtime — the
+    // same NodeStats + LevelFill surface the DES benches report.
+    for lf in &run.value.level_fill {
+        println!(
+            "  level {}: {} node(s), fill mean {:>5.1}% min {:>5.1}%",
+            lf.level,
+            lf.n_nodes,
+            lf.mean_rate * 100.0,
+            lf.min_rate * 100.0
+        );
+    }
+    for s in &run.value.node_stats {
+        println!(
+            "  node {:>2} (L{}): msgs {:>7}/{:<7} max-queue {:>5}/{:<5} steals {}/{} retried {} cancelled {}+{}",
+            s.node,
+            s.level,
+            s.msgs_in,
+            s.msgs_out,
+            s.max_queue,
+            s.credit_bound,
+            s.steals_received,
+            s.steals_given,
+            s.retried,
+            s.cancelled_dropped,
+            s.cancelled_killed
+        );
+    }
 
     // 3. efficiency knee vs task duration (external path): the paper's
     // granularity claim. Efficiency = useful simulated seconds / consumer

@@ -35,8 +35,10 @@
 //!   the attempt index;
 //! * **cancel** — best-effort: a cancelled task still queued anywhere in
 //!   the tree is dropped (counted in `NodeStats::cancelled_dropped`) and
-//!   completes with `rc == RC_CANCELLED`; a task already running finishes
-//!   normally.
+//!   completes with `rc == RC_CANCELLED`; a task already *running* has
+//!   its attempt killed by the executor (counted in
+//!   `NodeStats::cancelled_killed`) and reports `RC_CANCELLED` without
+//!   consuming a retry.
 
 use std::collections::HashMap;
 
@@ -107,7 +109,8 @@ impl JobSpec {
         self
     }
 
-    /// Materialize as a scheduler task with the given id (attempt 0).
+    /// Materialize as a scheduler task with the given id (attempt 0; the
+    /// scheduler stamps `enqueued_t` when the task first enters a queue).
     pub fn into_task(self, id: TaskId) -> TaskSpec {
         TaskSpec {
             id,
@@ -117,6 +120,7 @@ impl JobSpec {
             attempt: 0,
             timeout_s: self.timeout_s,
             tag: self.tag,
+            enqueued_t: None,
         }
     }
 }
@@ -128,9 +132,14 @@ pub trait JobSink: TaskSink {
     /// Submit a typed job; mints and returns the task id.
     fn submit_job(&mut self, spec: JobSpec) -> TaskId;
     /// Request best-effort cancellation of a previously submitted job.
-    /// If the task is still queued anywhere it is dropped and completes
-    /// with `rc == RC_CANCELLED`; if it is already running (or done) the
-    /// request is a no-op.
+    /// If the task is still queued anywhere it is dropped; if it is
+    /// already *running*, the leaf asks its executor to kill the attempt
+    /// (the external-process executor kills the child within its poll
+    /// interval) and no retry is ever consumed — an attempt that fails
+    /// naturally while the cancel is pending reports `RC_CANCELLED`
+    /// instead of retrying. The one exception: an attempt that *succeeds*
+    /// before the kill lands keeps its real result; a job that already
+    /// finished is unaffected.
     fn cancel(&mut self, id: TaskId);
 }
 
@@ -345,6 +354,7 @@ mod tests {
             finish: 1.0,
             rc: 0,
             attempt: 0,
+            timed_out: false,
         };
         SearchEngine::on_done(&mut adapter, &r, &mut sink);
         assert_eq!(adapter.inner().got, vec![(1, "b".to_string())]);
@@ -364,6 +374,7 @@ mod tests {
             finish: 0.0,
             rc: 0,
             attempt: 0,
+            timed_out: false,
         };
         assert_eq!(JobStatus::from_result(&ok), JobStatus::Done);
         let failed = TaskResult { rc: 3, ..ok.clone() };

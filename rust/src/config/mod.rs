@@ -2,6 +2,50 @@
 //! application scenarios. All defaults follow the paper where it states
 //! them (e.g. one buffer per 384 consumers).
 
+/// How every queue in the scheduler (the producer's pending queue and
+/// each buffer-tree node's local queue) orders its tasks. Implemented once
+/// in [`crate::scheduler::protocol::PrioQueue`], so the threaded runtime
+/// and the DES can never disagree on scheduling semantics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SchedPolicy {
+    /// Strict priority bands, FIFO within a band — the Job-API-v2
+    /// behaviour. A sustained high-priority stream starves lower bands.
+    Strict,
+    /// Strict priority bands; within a band, least *slack* first. A
+    /// task's effective deadline is `enqueue time + timeout_s` (tasks
+    /// without a timeout sort last, FIFO among themselves), so urgent
+    /// work runs before work that can afford to wait.
+    Deadline,
+    /// [`SchedPolicy::Deadline`] within a band, plus **priority aging**
+    /// across bands: a band's effective priority rises by one level per
+    /// `step` seconds its head task has been waiting. A priority-`p` task
+    /// facing a sustained priority-`q` stream is popped after at most
+    /// `(q_eff − p + 1) × step` seconds of queueing, where `q_eff` is the
+    /// stream's own effective priority (`q` plus the boost of its backlog
+    /// head) — bounded by the backlog, never by the stream's length (the
+    /// bounded-wait property; see the README's starvation bound).
+    Aging {
+        /// Seconds of queue wait per effective-priority level gained.
+        step: f64,
+    },
+}
+
+impl SchedPolicy {
+    /// Parse a CLI spelling: `strict`, `deadline`, `aging` (default
+    /// 30 s/level) or `aging:SECONDS`.
+    pub fn parse(s: &str) -> Option<SchedPolicy> {
+        match s {
+            "strict" => Some(SchedPolicy::Strict),
+            "deadline" => Some(SchedPolicy::Deadline),
+            "aging" => Some(SchedPolicy::Aging { step: 30.0 }),
+            _ => {
+                let step = s.strip_prefix("aging:")?.parse().ok()?;
+                Some(SchedPolicy::Aging { step })
+            }
+        }
+    }
+}
+
 /// How a starved buffer node picks the sibling to steal queued tasks from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StealPolicy {
@@ -38,6 +82,8 @@ pub struct SchedulerConfig {
     pub steal: bool,
     /// Victim-selection policy when `steal` is enabled.
     pub steal_policy: StealPolicy,
+    /// Queue-ordering policy at every level (producer + buffer tree).
+    pub policy: SchedPolicy,
     /// A buffer keeps `credit_factor × subtree-consumers` tasks on hand.
     pub credit_factor: usize,
     /// Result-store batch size before a flush to the parent.
@@ -58,6 +104,7 @@ impl Default for SchedulerConfig {
             fanout: 8,
             steal: false,
             steal_policy: StealPolicy::DeepestQueue,
+            policy: SchedPolicy::Strict,
             credit_factor: 2,
             flush_every: 16,
             time_scale: 1.0,
@@ -260,6 +307,10 @@ pub struct DesLatencyConfig {
     /// output parsing (§3 names these as the reason sub-second tasks are
     /// out of scope).
     pub task_overhead: f64,
+    /// Delay between a kill-on-cancel notice reaching a leaf and the
+    /// running attempt actually dying — the virtual-time analogue of the
+    /// external-process executor's cancellation poll interval.
+    pub cancel_poll: f64,
 }
 
 impl Default for DesLatencyConfig {
@@ -269,6 +320,7 @@ impl Default for DesLatencyConfig {
             producer_service: 50e-6,
             buffer_service: 50e-6,
             task_overhead: 0.05,
+            cancel_poll: 0.01,
         }
     }
 }
@@ -276,6 +328,16 @@ impl Default for DesLatencyConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sched_policy_parses_cli_spellings() {
+        assert_eq!(SchedPolicy::parse("strict"), Some(SchedPolicy::Strict));
+        assert_eq!(SchedPolicy::parse("deadline"), Some(SchedPolicy::Deadline));
+        assert_eq!(SchedPolicy::parse("aging"), Some(SchedPolicy::Aging { step: 30.0 }));
+        assert_eq!(SchedPolicy::parse("aging:2.5"), Some(SchedPolicy::Aging { step: 2.5 }));
+        assert_eq!(SchedPolicy::parse("bogus"), None);
+        assert_eq!(SchedPolicy::parse("aging:x"), None);
+    }
 
     #[test]
     fn default_matches_paper_ratio() {

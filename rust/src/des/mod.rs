@@ -33,13 +33,15 @@ mod model;
 pub use model::{ConstResults, DurationModel, SleepDurations};
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap, HashSet};
 
 use crate::api::{JobSink, JobSpec};
 use crate::config::{DesLatencyConfig, SchedulerConfig, TreeNodeKind, TreeTopology};
 use crate::scheduler::metrics::{FillingRate, LevelFill, NodeStats};
 use crate::scheduler::protocol::{BufferAction, BufferState, ProducerAction, ProducerState};
-use crate::tasklib::{Payload, SearchEngine, TaskId, TaskResult, TaskSink, TaskSpec, RC_TIMEOUT};
+use crate::tasklib::{
+    Payload, SearchEngine, TaskId, TaskResult, TaskSink, TaskSpec, RC_CANCELLED, RC_TIMEOUT,
+};
 
 /// Virtual-time event payloads. `node` indexes the buffer tree.
 #[derive(Debug)]
@@ -52,6 +54,10 @@ enum Ev {
     NodeAssign { node: usize, tasks: Vec<TaskSpec> },
     /// Leaf consumer finished; `Done` arrives at its leaf node.
     NodeDone { node: usize, consumer: usize, result: TaskResult },
+    /// Synthetic completion of an attempt killed by cancellation. A
+    /// separate variant so the voided *original* `NodeDone` (same node /
+    /// consumer / id) can be skipped without swallowing this one.
+    NodeKilled { node: usize, consumer: usize, result: TaskResult },
     /// Interior child (slot `child`) asks its parent `node` for tasks.
     NodeRequest { node: usize, child: usize, amount: usize },
     /// Interior child flushes results to its parent `node`.
@@ -59,8 +65,15 @@ enum Ev {
     /// Steal request from node id `thief` (sibling slot `thief_slot`)
     /// arrives at `node`.
     NodeSteal { node: usize, thief: usize, thief_slot: usize, amount: usize },
-    /// Steal reply (possibly empty) arrives back at `node`.
-    NodeStolen { node: usize, from_slot: usize, left: usize, tasks: Vec<TaskSpec> },
+    /// Steal reply (possibly empty) arrives back at `node`, carrying the
+    /// victim's pending cancellation notices alongside the loot.
+    NodeStolen {
+        node: usize,
+        from_slot: usize,
+        left: usize,
+        cancels: Vec<TaskId>,
+        tasks: Vec<TaskSpec>,
+    },
     /// Cancellation notice arrives at a node.
     NodeCancel { node: usize, id: TaskId },
     /// Shutdown notice arrives at a node.
@@ -155,6 +168,12 @@ impl DesReport {
     pub fn retried(&self) -> u64 {
         self.node_stats.iter().map(|s| s.retried).sum()
     }
+
+    /// Kill requests issued for running attempts, tree-wide (a request
+    /// may lose the race to the attempt's natural completion).
+    pub fn cancelled_killed(&self) -> u64 {
+        self.node_stats.iter().map(|s| s.cancelled_killed).sum()
+    }
 }
 
 struct MintSink<'a> {
@@ -201,6 +220,13 @@ struct Des<'a> {
     events: u64,
     engine: Box<dyn SearchEngine>,
     durations: Box<dyn DurationModel>,
+    /// `(node, consumer)` → (task id, begin, scheduled finish, attempt) of
+    /// the attempt currently running there — the state kill-on-cancel
+    /// needs to truncate an in-flight execution.
+    running: HashMap<(usize, usize), (TaskId, f64, f64, u32)>,
+    /// Completions voided by a kill: the original `NodeDone` is skipped
+    /// when it surfaces (the synthetic cancelled one already delivered).
+    voided: HashSet<(usize, usize, TaskId)>,
 }
 
 impl<'a> Des<'a> {
@@ -274,15 +300,21 @@ impl<'a> Des<'a> {
                         if rc == 0 { self.durations.results(&task) } else { Vec::new() };
                     // Per-attempt budget: the attempt is cut short and
                     // reported as a timeout failure (retryable like any
-                    // other failure).
+                    // other failure). Only this executor-side truncation
+                    // sets `timed_out` — a duration model returning
+                    // RC_TIMEOUT of its own accord simulates a user
+                    // simulator that happens to exit 124.
+                    let mut timed_out = false;
                     if let Some(to) = task.timeout_s {
                         if dur > to {
                             dur = to;
                             rc = RC_TIMEOUT;
                             results = Vec::new();
+                            timed_out = true;
                         }
                     }
                     let finish = begin + dur;
+                    self.running.insert((n, consumer), (task.id, begin, finish, task.attempt));
                     let result = TaskResult {
                         id: task.id,
                         consumer: rank_base + consumer,
@@ -291,6 +323,7 @@ impl<'a> Des<'a> {
                         finish,
                         rc,
                         attempt: task.attempt,
+                        timed_out,
                     };
                     self.push(finish + lat, Ev::NodeDone { node: n, consumer, result });
                 }
@@ -322,8 +355,45 @@ impl<'a> Des<'a> {
                         Ev::NodeSteal { node: victim_id, thief: n, thief_slot: slot, amount },
                     );
                 }
-                BufferAction::StealGrant { thief, from_slot, left, tasks } => {
-                    self.push(t + lat, Ev::NodeStolen { node: thief, from_slot, left, tasks });
+                BufferAction::StealGrant { thief, from_slot, left, cancels, tasks } => {
+                    self.push(
+                        t + lat,
+                        Ev::NodeStolen { node: thief, from_slot, left, cancels, tasks },
+                    );
+                }
+                BufferAction::CancelRunning { consumer, id } => {
+                    // Kill-on-cancel in virtual time: if the targeted
+                    // attempt is still in flight once the cancellation
+                    // poll fires, void its scheduled completion and
+                    // deliver a truncated RC_CANCELLED one instead. A
+                    // kill arriving after the natural finish loses the
+                    // race — the attempt completes normally, exactly as
+                    // in the threaded runtime.
+                    let rank_base = match &self.topo.nodes[n].kind {
+                        TreeNodeKind::Leaf { rank_base, .. } => *rank_base,
+                        TreeNodeKind::Interior { .. } => {
+                            unreachable!("CancelRunning from interior")
+                        }
+                    };
+                    if let Some(&(rid, begin, finish, attempt)) = self.running.get(&(n, consumer))
+                    {
+                        let kill_t = t + self.cfg.lat.cancel_poll;
+                        if rid == id && kill_t < finish {
+                            self.voided.insert((n, consumer, id));
+                            self.running.remove(&(n, consumer));
+                            let result = TaskResult {
+                                id,
+                                consumer: rank_base + consumer,
+                                results: Vec::new(),
+                                begin,
+                                finish: kill_t,
+                                rc: RC_CANCELLED,
+                                attempt,
+                                timed_out: false,
+                            };
+                            self.push(kill_t + lat, Ev::NodeKilled { node: n, consumer, result });
+                        }
+                    }
                 }
                 BufferAction::CancelChildren { id } => {
                     let children = self.topo.children_of(n).to_vec();
@@ -415,7 +485,7 @@ pub fn run_des(
 
     let mut des = Des {
         cfg,
-        producer: ProducerState::new(topo.roots.len()),
+        producer: ProducerState::new(topo.roots.len()).with_policy(cfg.sched.policy),
         nodes: (0..n_nodes).map(|i| BufferState::for_tree_node(&topo, i, &cfg.sched)).collect(),
         topo,
         heap: BinaryHeap::new(),
@@ -431,6 +501,8 @@ pub fn run_des(
         events: 0,
         engine,
         durations,
+        running: HashMap::new(),
+        voided: HashSet::new(),
     };
 
     // Bootstrap: engine start, producer intake, buffer credit requests.
@@ -456,6 +528,7 @@ pub fn run_des(
         match ev {
             Ev::ProdRequest { slot, amount } => {
                 let t = des.producer_serve(time);
+                des.producer.set_now(t);
                 let acts = des.producer.on_request(slot, amount);
                 des.perform_producer(acts, t);
                 let sd = des.producer.maybe_shutdown();
@@ -463,45 +536,70 @@ pub fn run_des(
             }
             Ev::ProdResults { results } => {
                 let t = des.producer_serve(time);
+                des.producer.set_now(t);
                 des.producer_ingest(results, t);
             }
             Ev::NodeAssign { node, tasks } => {
                 let t = des.node_serve(node, time);
+                des.nodes[node].set_now(t);
                 let acts = des.nodes[node].on_assign(tasks);
                 des.perform_node(node, acts, t);
             }
             Ev::NodeDone { node, consumer, result } => {
+                // A completion voided by kill-on-cancel: the synthetic
+                // cancelled Done already went through; skip the original
+                // (and do not touch `running` — the consumer may already
+                // be executing its next task).
+                if des.voided.remove(&(node, consumer, result.id)) {
+                    continue;
+                }
+                if des.running.get(&(node, consumer)).is_some_and(|&(id, ..)| id == result.id) {
+                    des.running.remove(&(node, consumer));
+                }
                 let t = des.node_serve(node, time);
+                des.nodes[node].set_now(t);
+                let acts = des.nodes[node].on_done(consumer, result);
+                des.perform_node(node, acts, t);
+            }
+            Ev::NodeKilled { node, consumer, result } => {
+                let t = des.node_serve(node, time);
+                des.nodes[node].set_now(t);
                 let acts = des.nodes[node].on_done(consumer, result);
                 des.perform_node(node, acts, t);
             }
             Ev::NodeRequest { node, child, amount } => {
                 let t = des.node_serve(node, time);
+                des.nodes[node].set_now(t);
                 let acts = des.nodes[node].on_child_request(child, amount);
                 des.perform_node(node, acts, t);
             }
             Ev::NodeResults { node, results } => {
                 let t = des.node_serve(node, time);
+                des.nodes[node].set_now(t);
                 let acts = des.nodes[node].on_child_results(results);
                 des.perform_node(node, acts, t);
             }
             Ev::NodeSteal { node, thief, thief_slot, amount } => {
                 let t = des.node_serve(node, time);
+                des.nodes[node].set_now(t);
                 let acts = des.nodes[node].on_steal_request(thief, thief_slot, amount);
                 des.perform_node(node, acts, t);
             }
-            Ev::NodeStolen { node, from_slot, left, tasks } => {
+            Ev::NodeStolen { node, from_slot, left, cancels, tasks } => {
                 let t = des.node_serve(node, time);
-                let acts = des.nodes[node].on_steal_grant(from_slot, left, tasks);
+                des.nodes[node].set_now(t);
+                let acts = des.nodes[node].on_steal_grant(from_slot, left, cancels, tasks);
                 des.perform_node(node, acts, t);
             }
             Ev::NodeCancel { node, id } => {
                 let t = des.node_serve(node, time);
+                des.nodes[node].set_now(t);
                 let acts = des.nodes[node].on_cancel(id);
                 des.perform_node(node, acts, t);
             }
             Ev::NodeShutdown { node } => {
                 let t = des.node_serve(node, time);
+                des.nodes[node].set_now(t);
                 let acts = des.nodes[node].on_shutdown();
                 des.perform_node(node, acts, t);
             }

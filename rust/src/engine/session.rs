@@ -188,7 +188,12 @@ impl JobEngine for SessionEngine {
             // scheduled without waiting for the next poll tick.
             self.drain(jobs);
         }
-        self.status.lock().unwrap().insert(result.id, JobStatus::from_result(result));
+        // Update-only: if the handle was already dropped, its `Forget`
+        // retired the entry — re-inserting here would leak one status row
+        // per fire-and-forget task for the session's lifetime.
+        if let Some(slot) = self.status.lock().unwrap().get_mut(&result.id) {
+            *slot = JobStatus::from_result(result);
+        }
         let _ = ctx.waiter.send(result.clone());
     }
 
@@ -270,8 +275,11 @@ impl Session {
         self.handle.create_task_with_callback(payload, cb)
     }
 
-    /// Request best-effort cancellation of `task`. If it was still queued,
-    /// its waiters receive an `RC_CANCELLED` result. Never blocks.
+    /// Request best-effort cancellation of `task`. If it was still
+    /// queued, it is dropped; if it is already *running*, the executor is
+    /// asked to kill the attempt (the external-process executor kills the
+    /// child within its poll interval). Either way the waiters receive an
+    /// `RC_CANCELLED` result and no retry is consumed. Never blocks.
     pub fn cancel(&self, task: &TaskHandle) {
         self.handle.cancel(task);
     }
@@ -296,16 +304,26 @@ impl Session {
     /// returns its index and result. Handles whose receiver is currently
     /// held by a concurrent `await_task` are skipped rather than waited on
     /// (that caller will consume the result), so one blocked handle never
-    /// stalls the scan past other finished tasks. Panics on an empty slice.
+    /// stalls the scan past other finished tasks. Panics on an empty
+    /// slice, and — mirroring [`Session::await_task`] — when *no* handle
+    /// can ever produce a result (every result already consumed, or the
+    /// scheduler exited), instead of spinning forever.
     pub fn await_any(&self, tasks: &[TaskHandle]) -> (usize, TaskResult) {
+        use std::sync::mpsc::TryRecvError;
         assert!(!tasks.is_empty(), "await_any on an empty task set");
         loop {
+            let mut dead = 0;
             for (i, t) in tasks.iter().enumerate() {
                 if let Ok(rx) = t.rx.try_lock() {
-                    if let Ok(r) = rx.try_recv() {
-                        return (i, r);
+                    match rx.try_recv() {
+                        Ok(r) => return (i, r),
+                        Err(TryRecvError::Disconnected) => dead += 1,
+                        Err(TryRecvError::Empty) => {}
                     }
                 }
+            }
+            if dead == tasks.len() {
+                panic!("await_any: every result was already consumed or the scheduler exited");
             }
             std::thread::sleep(Duration::from_millis(1));
         }
@@ -492,6 +510,41 @@ mod tests {
         let report = s.shutdown();
         assert_eq!(report.results.len(), 4);
         assert_eq!(report.cancelled(), 3);
+    }
+
+    #[test]
+    fn cancel_kills_running_task_without_consuming_retry() {
+        // One consumer, real-time scale: uncancelled, the task would hold
+        // the consumer for ~30 s. Cancelling it mid-flight must kill the
+        // attempt within the executor's poll interval, resolve the waiter
+        // with RC_CANCELLED, and leave the retry budget untouched.
+        let s = Session::start(
+            SchedulerConfig {
+                np: 1,
+                consumers_per_buffer: 1,
+                flush_interval_ms: 2,
+                ..Default::default()
+            },
+            Arc::new(SleepExecutor { time_scale: 1.0 }),
+        );
+        let t = s.submit(JobSpec::sleep(30.0).retries(3));
+        // Give the scheduler ample time to dispatch it onto the consumer.
+        std::thread::sleep(Duration::from_millis(300));
+        s.cancel(&t);
+        let t0 = std::time::Instant::now();
+        let r = s.await_task(&t);
+        assert_eq!(r.rc, RC_CANCELLED, "running attempt must be killed");
+        assert_eq!(r.attempt, 0, "kill-on-cancel must not consume a retry");
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "kill must land within the poll interval, not after the 30 s sleep"
+        );
+        assert_eq!(s.status(&t), JobStatus::Cancelled);
+        let report = s.shutdown();
+        assert_eq!(report.results.len(), 1);
+        assert_eq!(report.cancelled(), 1);
+        let killed: u64 = report.node_stats.iter().map(|st| st.cancelled_killed).sum();
+        assert_eq!(killed, 1, "the leaf must have requested exactly one kill");
     }
 
     #[test]

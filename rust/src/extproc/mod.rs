@@ -17,8 +17,8 @@ use std::process::Command;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
-use crate::scheduler::threads::Executor;
-use crate::tasklib::{Payload, TaskSpec, RC_TIMEOUT};
+use crate::scheduler::threads::{CancelSet, ExecOutcome, Executor};
+use crate::tasklib::{Payload, TaskSpec, RC_CANCELLED, RC_TIMEOUT};
 
 /// Name of the results file per §2.2.
 pub const RESULTS_FILE: &str = "_results.txt";
@@ -165,68 +165,89 @@ pub fn read_results_checked(dir: &Path) -> Result<Vec<f64>, ResultsError> {
     }
 }
 
-/// Run the child to completion, enforcing the per-attempt timeout from
-/// [`crate::api::JobSpec::timeout`] if set: the child is polled until the
-/// deadline, then killed and reported as [`RC_TIMEOUT`] (the GNU `timeout`
-/// convention). Timed-out attempts consume a scheduler-side retry like any
-/// other failure.
-fn run_child(argv: &[String], dir: &Path, timeout_s: Option<f64>) -> i32 {
+/// Cancellation + timeout poll period for running children.
+const CHILD_POLL: Duration = Duration::from_millis(2);
+
+/// Run the child to completion, polling every [`CHILD_POLL`] for two kill
+/// conditions: the per-attempt timeout from
+/// [`crate::api::JobSpec::timeout`] (killed, reported `(RC_TIMEOUT,
+/// timed_out = true)` — the executor-side flag is what distinguishes a
+/// framework kill from a simulator that happens to exit 124), and a
+/// [`CancelSet`] kill request (killed, reported [`RC_CANCELLED`], which
+/// the scheduler exempts from retry). Timed-out attempts consume a
+/// scheduler-side retry like any other failure.
+fn run_child(
+    argv: &[String],
+    dir: &Path,
+    timeout_s: Option<f64>,
+    task_id: u64,
+    cancel: &CancelSet,
+) -> (i32, bool) {
     let mut cmd = Command::new(&argv[0]);
     cmd.args(&argv[1..]).current_dir(dir);
-    let Some(timeout_s) = timeout_s else {
-        return match cmd.status() {
-            Ok(s) => s.code().unwrap_or(-1),
-            Err(_) => 127,
-        };
-    };
     let mut child = match cmd.spawn() {
         Ok(c) => c,
-        Err(_) => return 127,
+        Err(_) => return (127, false),
     };
-    let deadline = Instant::now() + Duration::from_secs_f64(timeout_s.max(0.0));
+    let deadline = timeout_s.map(|s| Instant::now() + Duration::from_secs_f64(s.max(0.0)));
     loop {
         match child.try_wait() {
-            Ok(Some(status)) => return status.code().unwrap_or(-1),
+            Ok(Some(status)) => return (status.code().unwrap_or(-1), false),
             Ok(None) => {
-                if Instant::now() >= deadline {
+                if cancel.is_cancelled(task_id) {
                     let _ = child.kill();
                     let _ = child.wait();
-                    return RC_TIMEOUT;
+                    return (RC_CANCELLED, false);
                 }
-                std::thread::sleep(Duration::from_millis(2));
+                if deadline.is_some_and(|d| Instant::now() >= d) {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return (RC_TIMEOUT, true);
+                }
+                std::thread::sleep(CHILD_POLL);
             }
-            Err(_) => return 127,
+            Err(_) => return (127, false),
         }
     }
 }
 
 impl Executor for CommandExecutor {
-    fn run(&self, task: &TaskSpec, _consumer: usize) -> (Vec<f64>, i32) {
+    fn run(&self, task: &TaskSpec, consumer: usize) -> (Vec<f64>, i32) {
+        let out = self.run_cancellable(task, consumer, &CancelSet::new());
+        (out.results, out.rc)
+    }
+
+    fn run_cancellable(&self, task: &TaskSpec, _consumer: usize, cancel: &CancelSet) -> ExecOutcome {
         let Payload::Command { cmdline } = &task.payload else {
             panic!("CommandExecutor got {:?}", task.payload);
         };
         let argv = split_cmdline(cmdline);
         if argv.is_empty() {
-            return (Vec::new(), 127);
+            return ExecOutcome { results: Vec::new(), rc: 127, timed_out: false };
         }
         let dir = self.task_dir(task);
         if std::fs::create_dir_all(&dir).is_err() {
-            return (Vec::new(), 126);
+            return ExecOutcome { results: Vec::new(), rc: 126, timed_out: false };
         }
-        let rc = run_child(&argv, &dir, task.timeout_s);
-        let (results, rc) = match read_results_checked(&dir) {
-            Ok(results) => (results, rc),
-            Err(e) => {
-                crate::warnln!("task {}: {e}", task.id);
-                // The child's own failure code wins; otherwise flag the
-                // malformed results file.
-                (Vec::new(), if rc != 0 { rc } else { RC_BAD_RESULTS })
+        let (rc, timed_out) = run_child(&argv, &dir, task.timeout_s, task.id, cancel);
+        let (results, rc) = if rc == RC_CANCELLED {
+            // Killed mid-flight: whatever the child wrote is partial.
+            (Vec::new(), rc)
+        } else {
+            match read_results_checked(&dir) {
+                Ok(results) => (results, rc),
+                Err(e) => {
+                    crate::warnln!("task {}: {e}", task.id);
+                    // The child's own failure code wins; otherwise flag the
+                    // malformed results file.
+                    (Vec::new(), if rc != 0 { rc } else { RC_BAD_RESULTS })
+                }
             }
         };
         if self.cleanup {
             let _ = std::fs::remove_dir_all(&dir);
         }
-        (results, rc)
+        ExecOutcome { results, rc, timed_out }
     }
 }
 
@@ -366,10 +387,50 @@ mod tests {
         let mut task = TaskSpec::new(0, Payload::Command { cmdline: "sleep 30".into() });
         task.timeout_s = Some(0.1);
         let t0 = Instant::now();
-        let (results, rc) = exec.run(&task, 0);
-        assert_eq!(rc, RC_TIMEOUT);
-        assert!(results.is_empty());
+        let out = exec.run_cancellable(&task, 0, &CancelSet::new());
+        assert_eq!(out.rc, RC_TIMEOUT);
+        assert!(out.timed_out, "executor-enforced budget must set the flag");
+        assert!(out.results.is_empty());
         assert!(t0.elapsed() < Duration::from_secs(10), "child must be killed, not awaited");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn legitimate_exit_124_is_not_flagged_as_timeout() {
+        // A simulator that exits with GNU timeout's code on its own: the
+        // rc passes through but `timed_out` stays false, so the job layer
+        // can tell it apart from a framework kill.
+        let root = std::env::temp_dir().join(format!("caravan_test_124_{}", std::process::id()));
+        let exec = CommandExecutor::new(&root);
+        let mut task = TaskSpec::new(0, Payload::Command { cmdline: "sh -c 'exit 124'".into() });
+        task.timeout_s = Some(30.0);
+        let out = exec.run_cancellable(&task, 0, &CancelSet::new());
+        assert_eq!(out.rc, RC_TIMEOUT);
+        assert!(!out.timed_out, "user exit code 124 must not read as a timeout");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn cancel_kills_running_child_within_poll_interval() {
+        let root = std::env::temp_dir().join(format!("caravan_test_kill_{}", std::process::id()));
+        let exec = CommandExecutor::new(&root);
+        let task = TaskSpec::new(7, Payload::Command { cmdline: "sleep 30".into() });
+        let cancel = std::sync::Arc::new(CancelSet::new());
+        let killer = std::sync::Arc::clone(&cancel);
+        let arm = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            killer.request(7);
+        });
+        let t0 = Instant::now();
+        let out = exec.run_cancellable(&task, 0, &cancel);
+        arm.join().unwrap();
+        assert_eq!(out.rc, RC_CANCELLED);
+        assert!(!out.timed_out);
+        assert!(out.results.is_empty());
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "child must die within the cancellation poll interval, not run 30 s"
+        );
         let _ = std::fs::remove_dir_all(&root);
     }
 

@@ -17,7 +17,7 @@
 use std::sync::Arc;
 
 use caravan::api::{JobSink, JobSpec};
-use caravan::config::SchedulerConfig;
+use caravan::config::{SchedPolicy, SchedulerConfig};
 use caravan::des::{run_des, DesConfig, SleepDurations};
 use caravan::evac::{build_scenario, EvacEvaluator, RustSimBackend, ScenarioParams, SimBackend};
 use caravan::extproc::CommandExecutor;
@@ -64,16 +64,31 @@ fn usage() {
                       (default 0)
       --timeout S     per-attempt budget in seconds; overrunning attempts
                       are killed with rc 124 and retried if retries remain
+      --policy P      queue ordering: strict (default), deadline (least
+                      timeout slack within a priority band), aging or
+                      aging:SECONDS (deadline order + priority aging, one
+                      level per SECONDS waited; prevents starvation)
 
   des               DES filling-rate experiment (Fig. 3 point)
       --np N --tc 1|2|3 --tasks-per-proc N --depth D --fanout F
       --steal --steal-round-robin --direct --seed S
+      --policy strict|deadline|aging[:SECONDS]
 
   evac              evaluate one random evacuation plan
       --variant tiny|mini --backend rust|pjrt --seed S
 
   info              print artifact + scenario inventory"
     );
+}
+
+fn parse_policy(args: &Args) -> SchedPolicy {
+    match args.get_opt("policy") {
+        None => SchedPolicy::Strict,
+        Some(s) => SchedPolicy::parse(s).unwrap_or_else(|| {
+            eprintln!("--policy: expected strict|deadline|aging[:SECONDS], got {s:?}");
+            std::process::exit(2);
+        }),
+    }
 }
 
 fn main() {
@@ -110,7 +125,12 @@ fn cmd_run(args: &Args) {
     if let Some(t) = args.get_opt("timeout") {
         spec = spec.timeout(t.parse().expect("--timeout: seconds"));
     }
-    let cfg = SchedulerConfig { np, flush_interval_ms: 5, ..Default::default() };
+    let cfg = SchedulerConfig {
+        np,
+        flush_interval_ms: 5,
+        policy: parse_policy(args),
+        ..Default::default()
+    };
     let work = std::env::temp_dir().join(format!("caravan_run_{}", std::process::id()));
     let report = run_scheduler(
         &cfg,
@@ -145,6 +165,7 @@ fn cmd_des(args: &Args) {
     if args.has_flag("steal-round-robin") {
         cfg.sched.steal_policy = caravan::config::StealPolicy::RoundRobin;
     }
+    cfg.sched.policy = parse_policy(args);
     let t0 = std::time::Instant::now();
     let r = run_des(
         &cfg,

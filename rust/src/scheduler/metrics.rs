@@ -34,6 +34,10 @@ pub struct NodeStats {
     pub steals_given: u64,
     /// Queued tasks dropped at this node by a cancellation.
     pub cancelled_dropped: u64,
+    /// Kill requests this (leaf) node issued for running attempts on a
+    /// cancellation notice. A request can lose the race to the attempt's
+    /// natural completion, so this counts kills asked for, not landed.
+    pub cancelled_killed: u64,
     /// Failed attempts transparently re-queued at this node (leafs only).
     pub retried: u64,
     /// Whether the shutdown broadcast reached this node.
@@ -205,7 +209,16 @@ mod tests {
     use super::*;
 
     fn res(id: u64, consumer: usize, begin: f64, finish: f64) -> TaskResult {
-        TaskResult { id, consumer, results: vec![], begin, finish, rc: 0, attempt: 0 }
+        TaskResult {
+            id,
+            consumer,
+            results: vec![],
+            begin,
+            finish,
+            rc: 0,
+            attempt: 0,
+            timed_out: false,
+        }
     }
 
     #[test]

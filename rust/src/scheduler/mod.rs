@@ -10,4 +10,5 @@ pub mod protocol;
 pub mod threads;
 
 pub use metrics::{FillingRate, LevelFill, NodeStats};
-pub use threads::{run_scheduler, Executor, Report, SleepExecutor};
+pub use protocol::PrioQueue;
+pub use threads::{run_scheduler, CancelSet, ExecOutcome, Executor, Report, SleepExecutor};

@@ -37,33 +37,89 @@
 //! has nothing queued (so dynamically-generated workloads — TC3,
 //! optimization loops — never stall waiting for a batch to fill).
 //!
-//! Job API v2 semantics live here so both runtimes inherit them:
+//! Job API semantics live here so both runtimes inherit them:
 //!
-//! * every queue ([`PrioQueue`]) is **priority-ordered** — higher
-//!   [`TaskSpec::priority`] first, FIFO within a level, and steals take
-//!   the lowest-priority (coldest) tasks from the victim's back;
-//! * **retry**: a leaf remembers which spec each consumer is running; an
+//! * every queue ([`PrioQueue`]) is ordered by the configured
+//!   [`SchedPolicy`] — strict priority bands with FIFO within a band
+//!   (`Strict`), least deadline slack within a band (`Deadline`), or
+//!   slack ordering plus **priority aging** (`Aging`), where a band's
+//!   effective priority rises with the wait of its head task so a
+//!   sustained high-priority stream cannot starve priority-0 work;
+//!   steals always take the coldest tasks from the victim's back;
+//! * **retry**: a leaf remembers what each consumer is running; an
 //!   attempt finishing with `rc != 0` while retries remain is re-queued
 //!   transparently (the producer never sees the failed attempt), and the
 //!   final [`TaskResult`] carries the attempt index;
 //! * **cancellation**: `on_cancel` drops the task from the local queue if
 //!   present — synthesizing an `RC_CANCELLED` result that flows upstream
 //!   like any other, so conservation and termination detection are
-//!   untouched — and otherwise forwards the notice toward the leaves.
+//!   untouched. A task *running* on a leaf consumer is killed through
+//!   [`BufferAction::CancelRunning`] (the executor reports
+//!   `RC_CANCELLED`, exempt from retry); a notice that finds no local
+//!   target is kept as a tombstone and forwarded with steal grants, so a
+//!   cancel racing a sideways task move is applied when the task lands.
 
 use super::metrics::NodeStats;
-use crate::config::{SchedulerConfig, StealPolicy, TreeNodeKind, TreeTopology};
+use crate::config::{SchedPolicy, SchedulerConfig, StealPolicy, TreeNodeKind, TreeTopology};
 use crate::tasklib::{TaskId, TaskResult, TaskSpec, RC_CANCELLED};
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, VecDeque};
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
-/// A priority-ordered task queue: pop returns the highest-priority,
-/// earliest-submitted task; the "back" (what sibling steals take) is the
-/// lowest-priority, latest-submitted end.
-#[derive(Debug, Default)]
+/// Total order over f64 deadline keys (NaN-free by construction).
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct OrdF64(f64);
+
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Within-band position: deadline (constant 0 under [`SchedPolicy::Strict`],
+/// so pure FIFO), then arrival sequence to break exact-deadline ties FIFO.
+type BandKey = (OrdF64, u64);
+
+/// The policy-driven task queue used at *every* level of the scheduler —
+/// the producer's pending queue and each buffer-tree node's local queue.
+///
+/// Tasks live in priority *bands* (the base [`TaskSpec::priority`]); the
+/// configured [`SchedPolicy`] decides both the within-band order (FIFO, or
+/// least deadline slack first — slack ordering at a common "now" equals
+/// absolute-deadline ordering, so keys stay static) and which band pops
+/// next (highest base priority, or highest *effective* priority under
+/// aging, where a band gains one level per `step` seconds its head task
+/// has waited). The "back" — what sibling steals take — is always the
+/// coldest end: lowest band, loosest deadline, latest arrival.
+///
+/// The queue stamps [`TaskSpec::enqueued_t`] on first entry using the
+/// clock its owner advances via [`PrioQueue::set_now`] (wall-clock in the
+/// threaded runtime, virtual time in the DES), so both runtimes age and
+/// order tasks identically.
+#[derive(Debug)]
 pub struct PrioQueue {
-    map: BTreeMap<(Reverse<u8>, u64), TaskSpec>,
+    bands: BTreeMap<Reverse<u8>, BTreeMap<BandKey, TaskSpec>>,
     seq: u64,
+    len: usize,
+    policy: SchedPolicy,
+    now: f64,
+}
+
+impl Default for PrioQueue {
+    fn default() -> Self {
+        Self {
+            bands: BTreeMap::new(),
+            seq: 0,
+            len: 0,
+            policy: SchedPolicy::Strict,
+            now: 0.0,
+        }
+    }
 }
 
 impl PrioQueue {
@@ -71,17 +127,48 @@ impl PrioQueue {
         Self::default()
     }
 
+    pub fn with_policy(policy: SchedPolicy) -> Self {
+        Self { policy, ..Self::default() }
+    }
+
+    /// Switch the ordering policy (only sensible while empty — existing
+    /// keys are not rebuilt).
+    pub fn set_policy(&mut self, policy: SchedPolicy) {
+        self.policy = policy;
+    }
+
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
+    }
+
+    /// Advance the queue's clock (drives enqueue stamps, slack and aging).
+    pub fn set_now(&mut self, now: f64) {
+        self.now = now;
+    }
+
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.len == 0
     }
 
-    pub fn push(&mut self, task: TaskSpec) {
+    fn band_key(&self, task: &TaskSpec, seq: u64) -> BandKey {
+        match self.policy {
+            SchedPolicy::Strict => (OrdF64(0.0), seq),
+            SchedPolicy::Deadline | SchedPolicy::Aging { .. } => (OrdF64(task.deadline()), seq),
+        }
+    }
+
+    pub fn push(&mut self, mut task: TaskSpec) {
         self.seq += 1;
-        self.map.insert((Reverse(task.priority), self.seq), task);
+        if task.enqueued_t.is_none() {
+            task.enqueued_t = Some(self.now);
+        }
+        let key = self.band_key(&task, self.seq);
+        self.bands.entry(Reverse(task.priority)).or_default().insert(key, task);
+        self.len += 1;
     }
 
     pub fn extend(&mut self, tasks: Vec<TaskSpec>) {
@@ -90,32 +177,75 @@ impl PrioQueue {
         }
     }
 
-    /// Highest priority, FIFO within a priority level.
-    pub fn pop(&mut self) -> Option<TaskSpec> {
-        self.map.pop_first().map(|(_, t)| t)
+    /// The band the next pop comes from: the highest base priority, or —
+    /// under aging — the highest *effective* priority, where a band gains
+    /// one level per `step` seconds its head task has been queued. Ties go
+    /// to the higher base band (iteration order), keeping aging a strict
+    /// generalization of the static policies.
+    fn pop_band(&self) -> Option<Reverse<u8>> {
+        match self.policy {
+            SchedPolicy::Strict | SchedPolicy::Deadline => self.bands.keys().next().copied(),
+            SchedPolicy::Aging { step } => {
+                let mut best: Option<(u64, Reverse<u8>)> = None;
+                for (band, sub) in &self.bands {
+                    let head = sub.values().next().expect("bands are never empty");
+                    let wait = (self.now - head.enqueued_t.unwrap_or(self.now)).max(0.0);
+                    let boost =
+                        if step > 0.0 { ((wait / step) as u64).min(u8::MAX as u64) } else { 0 };
+                    let eff = band.0 as u64 + boost;
+                    if best.map_or(true, |(b, _)| eff > b) {
+                        best = Some((eff, *band));
+                    }
+                }
+                best.map(|(_, b)| b)
+            }
+        }
     }
 
-    /// Up to `n` tasks off the front (priority order).
+    fn pop_from(&mut self, band: Reverse<u8>) -> Option<TaskSpec> {
+        let sub = self.bands.get_mut(&band)?;
+        let (_, task) = sub.pop_first()?;
+        if sub.is_empty() {
+            self.bands.remove(&band);
+        }
+        self.len -= 1;
+        Some(task)
+    }
+
+    /// Next task per the policy (see [`PrioQueue::pop_band`]).
+    pub fn pop(&mut self) -> Option<TaskSpec> {
+        let band = self.pop_band()?;
+        self.pop_from(band)
+    }
+
+    /// Up to `n` tasks off the front (policy order).
     pub fn pop_n(&mut self, n: usize) -> Vec<TaskSpec> {
-        let mut out = Vec::with_capacity(n.min(self.map.len()));
+        let mut out = Vec::with_capacity(n.min(self.len));
         for _ in 0..n {
-            match self.map.pop_first() {
-                Some((_, t)) => out.push(t),
+            match self.pop() {
+                Some(t) => out.push(t),
                 None => break,
             }
         }
         out
     }
 
-    /// Up to `n` tasks off the back — the coldest work, surrendered to
-    /// sibling steals.
+    /// Up to `n` tasks off the back — the coldest work (lowest band,
+    /// loosest deadline, latest arrival), surrendered to sibling steals.
     pub fn take_back(&mut self, n: usize) -> Vec<TaskSpec> {
-        let mut out = Vec::with_capacity(n.min(self.map.len()));
+        let mut out = Vec::with_capacity(n.min(self.len));
         for _ in 0..n {
-            match self.map.pop_last() {
-                Some((_, t)) => out.push(t),
+            let band = match self.bands.keys().next_back() {
+                Some(&b) => b,
                 None => break,
+            };
+            let sub = self.bands.get_mut(&band).expect("band key just observed");
+            let (_, t) = sub.pop_last().expect("bands are never empty");
+            if sub.is_empty() {
+                self.bands.remove(&band);
             }
+            self.len -= 1;
+            out.push(t);
         }
         out.reverse();
         out
@@ -123,8 +253,25 @@ impl PrioQueue {
 
     /// Remove the task with the given id, if queued here.
     pub fn remove(&mut self, id: TaskId) -> Option<TaskSpec> {
-        let key = self.map.iter().find(|(_, t)| t.id == id).map(|(k, _)| *k)?;
-        self.map.remove(&key)
+        let mut hit: Option<(Reverse<u8>, BandKey)> = None;
+        'scan: for (band, sub) in &self.bands {
+            for (key, t) in sub {
+                if t.id == id {
+                    hit = Some((*band, *key));
+                    break 'scan;
+                }
+            }
+        }
+        let (band, key) = hit?;
+        let sub = self.bands.get_mut(&band).expect("band key just observed");
+        let task = sub.remove(&key);
+        if sub.is_empty() {
+            self.bands.remove(&band);
+        }
+        if task.is_some() {
+            self.len -= 1;
+        }
+        task
     }
 }
 
@@ -158,8 +305,22 @@ pub enum BufferAction {
     StealRequest { victim: usize, amount: usize },
     /// Reply to a steal request; `tasks` may be empty. `from_slot` is the
     /// victim's own slot and `left` its remaining queue depth — the thief
-    /// uses them to maintain its victim-selection estimates.
-    StealGrant { thief: usize, from_slot: usize, left: usize, tasks: Vec<TaskSpec> },
+    /// uses them to maintain its victim-selection estimates. `cancels`
+    /// are the victim's pending (unmatched) cancellation notices,
+    /// forwarded so a cancel racing a sideways task move can never be
+    /// lost (the thief merges them before accepting the loot).
+    StealGrant {
+        thief: usize,
+        from_slot: usize,
+        left: usize,
+        cancels: Vec<TaskId>,
+        tasks: Vec<TaskSpec>,
+    },
+    /// Leaf: the cancelled task is *running* on local consumer index
+    /// `consumer` — the runtime must kill the attempt; the consumer then
+    /// reports `RC_CANCELLED` through the ordinary `Done` path (which is
+    /// exempt from retry).
+    CancelRunning { consumer: usize, id: TaskId },
     /// Interior: forward a cancellation notice to all children.
     CancelChildren { id: TaskId },
     /// Leaf: tell all local consumers to stop.
@@ -202,6 +363,18 @@ impl ProducerState {
             msgs_in: 0,
             msgs_out: 0,
         }
+    }
+
+    /// Use `policy` for the pending queue (builder; call before any push).
+    pub fn with_policy(mut self, policy: SchedPolicy) -> Self {
+        self.pending.set_policy(policy);
+        self
+    }
+
+    /// Advance the producer's clock: newly pushed tasks are stamped with
+    /// this time and policy ordering (slack, aging) is evaluated at it.
+    pub fn set_now(&mut self, now: f64) {
+        self.pending.set_now(now);
     }
 
     pub fn pending_len(&self) -> usize {
@@ -322,13 +495,34 @@ impl ProducerState {
     }
 }
 
+/// What one leaf consumer is currently executing. The id/attempt pair is
+/// always tracked (it drives attempt stamping and kill-on-cancel); the
+/// full spec is kept only when a retry could fire, so retry-less dispatch
+/// still skips the payload clone.
+#[derive(Clone, Debug)]
+struct RunningTask {
+    id: TaskId,
+    attempt: u32,
+    spec: Option<TaskSpec>,
+}
+
 /// What a buffer node feeds: consumers (leaf) or child buffers (interior).
-/// A leaf remembers which spec each consumer is executing so failed
-/// attempts can be retried transparently.
+/// A leaf remembers what each consumer is executing so failed attempts can
+/// be retried transparently and running attempts can be cancelled.
 #[derive(Debug)]
 enum Children {
-    Consumers { n: usize, idle: VecDeque<usize>, running: Vec<Option<TaskSpec>> },
+    Consumers { n: usize, idle: VecDeque<usize>, running: Vec<Option<RunningTask>> },
     Buffers { deficit: Vec<usize>, cursor: usize, subtree: usize },
+}
+
+impl RunningTask {
+    fn track(task: &TaskSpec) -> Self {
+        RunningTask {
+            id: task.id,
+            attempt: task.attempt,
+            spec: if task.max_retries > 0 { Some(task.clone()) } else { None },
+        }
+    }
 }
 
 /// Buffer-node state: local task queue, children, result store, and the
@@ -366,11 +560,30 @@ pub struct BufferState {
     pub steals_given: u64,
     /// Queued tasks dropped here by cancellation.
     pub cancelled_dropped: u64,
+    /// Kill requests this leaf issued for a running attempt. A request
+    /// may still lose the race to the attempt's natural completion, so
+    /// this counts kills *asked for*, not kills that landed.
+    pub cancelled_killed: u64,
     /// Failed attempts transparently re-queued here.
     pub retried: u64,
+    /// Pending cancellation notices: ids cancelled while not locally
+    /// queued — the task may be in flight *sideways* (inside a steal
+    /// grant), so a later arrival is dropped on sight, or *running* here,
+    /// so the final `Done` consumes the notice (suppressing any retry).
+    /// Most such notices target tasks that already finished elsewhere
+    /// (ids are never reused within a run), so the set is bounded: beyond
+    /// [`TOMBSTONE_CAP`] the oldest notice is evicted — cancellation
+    /// stays best-effort. Ordered so steal grants ship it
+    /// deterministically.
+    tombstones: BTreeSet<TaskId>,
+    /// Insertion order of `tombstones`, for capped eviction.
+    tombstone_order: VecDeque<TaskId>,
     pub msgs_in: u64,
     pub msgs_out: u64,
 }
+
+/// Upper bound on remembered unmatched cancellation notices per node.
+const TOMBSTONE_CAP: usize = 1024;
 
 impl BufferState {
     /// A leaf buffer feeding `n_consumers` consumers (stealing disabled) —
@@ -403,7 +616,10 @@ impl BufferState {
             steals_received: 0,
             steals_given: 0,
             cancelled_dropped: 0,
+            cancelled_killed: 0,
             retried: 0,
+            tombstones: BTreeSet::new(),
+            tombstone_order: VecDeque::new(),
             msgs_in: 0,
             msgs_out: 0,
         }
@@ -444,10 +660,25 @@ impl BufferState {
             steals_received: 0,
             steals_given: 0,
             cancelled_dropped: 0,
+            cancelled_killed: 0,
             retried: 0,
+            tombstones: BTreeSet::new(),
+            tombstone_order: VecDeque::new(),
             msgs_in: 0,
             msgs_out: 0,
         }
+    }
+
+    /// Use `policy` for the local queue (builder; call before any push).
+    pub fn with_policy(mut self, policy: SchedPolicy) -> Self {
+        self.queue.set_policy(policy);
+        self
+    }
+
+    /// Advance this node's clock (forwarded to the local queue: enqueue
+    /// stamps, deadline slack and aging are all evaluated against it).
+    pub fn set_now(&mut self, now: f64) {
+        self.queue.set_now(now);
     }
 
     /// Enable sibling work stealing. `my_slot` is this node's index among
@@ -478,6 +709,7 @@ impl BufferState {
                 cfg.flush_every,
             ),
         };
+        let state = state.with_policy(cfg.policy);
         if cfg.steal {
             state.with_stealing(n.slot, n.n_siblings, cfg.steal_policy)
         } else {
@@ -556,6 +788,7 @@ impl BufferState {
             steals_received: self.steals_received,
             steals_given: self.steals_given,
             cancelled_dropped: self.cancelled_dropped,
+            cancelled_killed: self.cancelled_killed,
             retried: self.retried,
             saw_shutdown: self.shutting_down,
         }
@@ -574,6 +807,8 @@ impl BufferState {
         self.accept(tasks);
         let mut out = self.deliver();
         out.extend(self.request_if_low());
+        // Tombstoned arrivals synthesize results straight into the store.
+        out.extend(self.flush_if_due());
         out
     }
 
@@ -582,16 +817,32 @@ impl BufferState {
     /// transparently to everything upstream.
     pub fn on_done(&mut self, consumer: usize, mut result: TaskResult) -> Vec<BufferAction> {
         self.msgs_in += 1;
-        let spec = match &mut self.children {
+        let slot = match &mut self.children {
             Children::Consumers { running, .. } => {
                 running.get_mut(consumer).and_then(|slot| slot.take())
             }
             Children::Buffers { .. } => panic!("on_done called on an interior buffer node"),
         };
-        match spec {
-            Some(mut spec) => {
-                result.attempt = spec.attempt;
-                if result.rc != 0 && result.rc != RC_CANCELLED && spec.attempt < spec.max_retries {
+        // A pending cancel for this id (kill requested while the attempt
+        // raced to completion) is consumed by the final Done: it must
+        // suppress any retry, and is moot once a result is in.
+        let cancel_pending = self.consume_tombstone(result.id);
+        match slot {
+            Some(slot) => {
+                result.attempt = slot.attempt;
+                // Cancelled (killed) attempts are exempt from retry.
+                let failed = result.rc != 0 && result.rc != RC_CANCELLED;
+                let has_budget =
+                    slot.spec.as_ref().map_or(false, |s| s.attempt < s.max_retries);
+                if failed && has_budget && cancel_pending {
+                    // The attempt failed naturally while a cancel was
+                    // pending: honour the cancel instead of burning a
+                    // retry on a dead task.
+                    let spec = slot.spec.expect("retry budget implies tracked spec");
+                    self.cancelled_dropped += 1;
+                    self.store.push(TaskResult::cancelled_for(&spec));
+                } else if failed && has_budget {
+                    let mut spec = slot.spec.expect("retry budget implies tracked spec");
                     spec.attempt += 1;
                     self.retried += 1;
                     self.queue.push(spec);
@@ -600,9 +851,8 @@ impl BufferState {
                     self.store.push(result);
                 }
             }
-            // No tracked spec: the task had no retry budget (the common
-            // case — dispatch skips the clone then), so the result passes
-            // through unchanged with the attempt the consumer stamped.
+            // No tracked slot (e.g. a unit test driving Done directly):
+            // the result passes through with the consumer-stamped attempt.
             None => self.store.push(result),
         }
         let mut out = Vec::new();
@@ -610,11 +860,7 @@ impl BufferState {
         match &mut self.children {
             Children::Consumers { idle, running, .. } => {
                 if let Some(task) = next {
-                    // Track the spec only when retry bookkeeping can fire —
-                    // the runtimes stamp `attempt` on the result themselves,
-                    // so retry-less tasks skip the payload clone.
-                    running[consumer] =
-                        if task.max_retries > 0 { Some(task.clone()) } else { None };
+                    running[consumer] = Some(RunningTask::track(&task));
                     self.msgs_out += 1;
                     out.push(BufferAction::RunOn { consumer, task });
                 } else {
@@ -659,11 +905,14 @@ impl BufferState {
     }
 
     /// A cancellation notice arrived. If the task is queued here, drop it
-    /// and emit an `RC_CANCELLED` result through the normal result path;
-    /// otherwise forward the notice toward the leaves (an interior node
-    /// does not know which child — if any — holds the task). A leaf that
-    /// does not hold the task ignores the notice: the task is either
-    /// already running (cancellation is best-effort) or finished.
+    /// and emit an `RC_CANCELLED` result through the normal result path.
+    /// If it is *running* on a local consumer, ask the runtime to kill the
+    /// attempt ([`BufferAction::CancelRunning`]); the consumer reports
+    /// `RC_CANCELLED` through the ordinary `Done` path without consuming
+    /// a retry. Otherwise remember the id as a tombstone — the task may
+    /// be in flight sideways in a steal grant and is dropped on arrival —
+    /// and (at an interior node) keep fanning the notice toward the
+    /// leaves.
     pub fn on_cancel(&mut self, id: TaskId) -> Vec<BufferAction> {
         self.msgs_in += 1;
         if let Some(spec) = self.queue.remove(id) {
@@ -672,8 +921,24 @@ impl BufferState {
             let mut out = self.flush_if_due();
             // Losing queue depth may put us below the low-water mark.
             out.extend(self.request_if_low());
-            out
-        } else if let Children::Buffers { deficit, .. } = &self.children {
+            return out;
+        }
+        if let Children::Consumers { running, .. } = &self.children {
+            if let Some(consumer) = running
+                .iter()
+                .position(|slot| slot.as_ref().is_some_and(|r| r.id == id))
+            {
+                self.cancelled_killed += 1;
+                self.msgs_out += 1;
+                // Persist the notice: if the attempt beats the kill with a
+                // natural *failure*, the pending cancel must suppress the
+                // transparent retry (a success keeps its real result).
+                self.remember_tombstone(id);
+                return vec![BufferAction::CancelRunning { consumer, id }];
+            }
+        }
+        self.remember_tombstone(id);
+        if let Children::Buffers { deficit, .. } = &self.children {
             self.msgs_out += deficit.len() as u64;
             vec![BufferAction::CancelChildren { id }]
         } else {
@@ -701,10 +966,15 @@ impl BufferState {
         let tasks = self.queue.take_back(give);
         self.steals_given += tasks.len() as u64;
         self.msgs_out += 1;
+        // Ship our pending (unmatched) cancellation notices with the
+        // grant: if one of them targets a task currently moving sideways,
+        // the thief must learn about it (BTreeSet order is deterministic).
+        let cancels: Vec<TaskId> = self.tombstones.iter().copied().collect();
         let mut out = vec![BufferAction::StealGrant {
             thief,
             from_slot: self.my_slot,
             left: self.queue.len(),
+            cancels,
             tasks,
         }];
         // Losing queue depth may put us below the low-water mark.
@@ -713,15 +983,21 @@ impl BufferState {
     }
 
     /// The answer to our steal request arrived (possibly empty), reporting
-    /// the victim's remaining queue depth.
+    /// the victim's remaining queue depth and carrying the victim's
+    /// pending cancellation notices (merged before the loot is accepted,
+    /// so a cancel racing the sideways move cannot be lost).
     pub fn on_steal_grant(
         &mut self,
         from_slot: usize,
         left: usize,
+        cancels: Vec<TaskId>,
         tasks: Vec<TaskSpec>,
     ) -> Vec<BufferAction> {
         self.msgs_in += 1;
         self.steal_outstanding = 0;
+        for id in cancels {
+            self.remember_tombstone(id);
+        }
         if let Some(d) = self.sibling_depth.get_mut(from_slot) {
             *d = left;
         }
@@ -735,6 +1011,8 @@ impl BufferState {
         let mut out = self.deliver();
         // An empty grant leaves steal_tried set, so this escalates upstream.
         out.extend(self.request_if_low());
+        // Tombstoned loot synthesizes results straight into the store.
+        out.extend(self.flush_if_due());
         out
     }
 
@@ -771,12 +1049,49 @@ impl BufferState {
         }
     }
 
-    /// Take tasks into the local queue (common to assigns and steals).
+    /// Remember an unmatched cancellation notice, evicting the oldest
+    /// once the capped set is full (ids are unique per run, so eviction
+    /// can only downgrade an exotic late cancel back to best-effort).
+    fn remember_tombstone(&mut self, id: TaskId) {
+        if self.tombstones.insert(id) {
+            self.tombstone_order.push_back(id);
+            if self.tombstone_order.len() > TOMBSTONE_CAP {
+                if let Some(old) = self.tombstone_order.pop_front() {
+                    self.tombstones.remove(&old);
+                }
+            }
+        }
+    }
+
+    /// Consume a pending cancellation notice, keeping the eviction order
+    /// free of stale entries so the cap bounds *live* notices.
+    fn consume_tombstone(&mut self, id: TaskId) -> bool {
+        if self.tombstones.remove(&id) {
+            if let Some(pos) = self.tombstone_order.iter().position(|&x| x == id) {
+                self.tombstone_order.remove(pos);
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Take tasks into the local queue (common to assigns and steals). A
+    /// task whose cancellation notice already passed through here was
+    /// moving sideways when the cancel fired: drop it on arrival and
+    /// report it cancelled through the normal result path.
     fn accept(&mut self, tasks: Vec<TaskSpec>) {
         if !tasks.is_empty() {
             self.steal_tried = false;
         }
-        self.queue.extend(tasks);
+        for task in tasks {
+            if self.consume_tombstone(task.id) {
+                self.cancelled_dropped += 1;
+                self.store.push(TaskResult::cancelled_for(&task));
+            } else {
+                self.queue.push(task);
+            }
+        }
         self.max_queue = self.max_queue.max(self.queue.len());
     }
 
@@ -788,8 +1103,7 @@ impl BufferState {
                 while !self.queue.is_empty() && !idle.is_empty() {
                     let consumer = idle.pop_front().unwrap();
                     let task = self.queue.pop().unwrap();
-                    running[consumer] =
-                        if task.max_retries > 0 { Some(task.clone()) } else { None };
+                    running[consumer] = Some(RunningTask::track(&task));
                     self.msgs_out += 1;
                     out.push(BufferAction::RunOn { consumer, task });
                 }
@@ -934,6 +1248,7 @@ mod tests {
             finish: 1.0,
             rc: 0,
             attempt: 0,
+            timed_out: false,
         }
     }
 
@@ -966,6 +1281,136 @@ mod tests {
         assert_eq!(back.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1]);
         assert_eq!(q.len(), 2);
         assert_eq!(q.pop().unwrap().id, 0);
+    }
+
+    /// A task with a deadline: enqueued at `t`, budget `timeout` seconds.
+    fn deadline_task(id: u64, priority: u8, t: f64, timeout: f64) -> TaskSpec {
+        let mut task = prio_task(id, priority);
+        task.enqueued_t = Some(t);
+        task.timeout_s = Some(timeout);
+        task
+    }
+
+    #[test]
+    fn deadline_policy_pops_least_slack_within_a_band() {
+        let mut q = PrioQueue::with_policy(SchedPolicy::Deadline);
+        q.push(deadline_task(0, 0, 0.0, 100.0)); // deadline 100
+        q.push(deadline_task(1, 0, 0.0, 10.0)); // deadline 10
+        q.push(prio_task(2, 0)); // no deadline: sorts last in the band
+        q.push(deadline_task(3, 0, 5.0, 20.0)); // deadline 25
+        q.push(deadline_task(4, 9, 0.0, 500.0)); // higher band still wins
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|t| t.id).collect();
+        assert_eq!(order, vec![4, 1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn deadline_policy_back_is_loosest_deadline() {
+        let mut q = PrioQueue::with_policy(SchedPolicy::Deadline);
+        q.push(deadline_task(0, 0, 0.0, 10.0));
+        q.push(deadline_task(1, 0, 0.0, 99.0));
+        q.push(deadline_task(2, 5, 0.0, 1.0));
+        // Steals take the cold end: lowest band, loosest deadline.
+        let back = q.take_back(1);
+        assert_eq!(back.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(q.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn aging_promotes_starved_band_after_step_waits() {
+        // The sustained-stream shape: fresh priority-3 tasks keep
+        // arriving (each with a new enqueue stamp, so their band's boost
+        // stays 0), while the priority-0 probe from t = 0 waits. The
+        // probe's boost grows with its wait and wins once it clears the
+        // stream's *effective* priority.
+        let mut q = PrioQueue::with_policy(SchedPolicy::Aging { step: 10.0 });
+        q.set_now(0.0);
+        q.push(prio_task(0, 0)); // the probe
+        q.push(prio_task(100, 3));
+        assert_eq!(q.pop().unwrap().id, 100, "no boost yet: base bands rule");
+        // t = 35: probe boost = 3 → effective 3; a fresh priority-3 task
+        // also sits at effective 3 — ties go to the higher base band.
+        q.set_now(35.0);
+        q.push(prio_task(101, 3));
+        assert_eq!(q.pop().unwrap().id, 101);
+        // t = 41: probe boost = 4 → effective 4 beats any fresh band-3.
+        q.set_now(41.0);
+        q.push(prio_task(102, 3));
+        assert_eq!(q.pop().unwrap().id, 0);
+        assert_eq!(q.pop().unwrap().id, 102);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn aging_zero_or_negative_step_degrades_to_deadline_order() {
+        let mut q = PrioQueue::with_policy(SchedPolicy::Aging { step: 0.0 });
+        q.set_now(100.0);
+        q.push(prio_task(0, 0));
+        q.push(prio_task(1, 7));
+        assert_eq!(q.pop().unwrap().id, 1, "no boost when step is 0");
+    }
+
+    #[test]
+    fn queue_stamps_enqueue_time_once() {
+        let mut q = PrioQueue::new();
+        q.set_now(7.5);
+        q.push(task(0));
+        let mut t = task(1);
+        t.enqueued_t = Some(2.0); // already stamped upstream: preserved
+        q.push(t);
+        let a = q.pop().unwrap();
+        let b = q.pop().unwrap();
+        assert_eq!(a.enqueued_t, Some(7.5));
+        assert_eq!(b.enqueued_t, Some(2.0));
+    }
+
+    #[test]
+    fn every_policy_is_fifo_within_an_equal_priority_equal_slack_band() {
+        // Satellite property: same-priority, same-deadline jobs may never
+        // be reordered — FIFO within a band under every policy, so the
+        // two runtimes cannot disagree on tie order.
+        use crate::testutil::{check, pair, u64_in, usize_in, vec_of};
+        check(
+            "PrioQueue is FIFO within an equal-priority/equal-slack band",
+            pair(vec_of(pair(usize_in(0..3), usize_in(0..3)), 1..40), u64_in(0..3)),
+            |case: &(Vec<(usize, usize)>, u64)| {
+                let (jobs, policy_idx) = case;
+                let policy = [
+                    SchedPolicy::Strict,
+                    SchedPolicy::Deadline,
+                    SchedPolicy::Aging { step: 5.0 },
+                ][*policy_idx as usize];
+                let mut q = PrioQueue::with_policy(policy);
+                q.set_now(0.0);
+                // Priority from the generator; deadline class fixed per
+                // (priority, class) pair so bands contain exact ties.
+                for (id, &(prio, class)) in jobs.iter().enumerate() {
+                    let mut t = prio_task(id as u64, prio as u8);
+                    t.enqueued_t = Some(0.0);
+                    t.timeout_s = Some(10.0 * (class as f64 + 1.0));
+                    q.push(t);
+                }
+                q.set_now(1.0);
+                let popped: Vec<TaskSpec> = std::iter::from_fn(|| q.pop()).collect();
+                if popped.len() != jobs.len() {
+                    return false;
+                }
+                // Within every (priority, deadline) class, ids must come
+                // out in submission (= id) order.
+                for (prio, class) in
+                    popped.iter().map(|t| (t.priority, t.timeout_s.unwrap() as u64))
+                {
+                    let ids: Vec<u64> = popped
+                        .iter()
+                        .filter(|t| t.priority == prio && t.timeout_s.unwrap() as u64 == class)
+                        .map(|t| t.id)
+                        .collect();
+                    if ids.windows(2).any(|w| w[0] > w[1]) {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
     }
 
     #[test]
@@ -1171,10 +1616,133 @@ mod tests {
         assert!(flushed[0].cancelled());
         assert_eq!(b.cancelled_dropped, 1);
         assert_eq!(b.queue_len(), 1);
-        // Cancelling the *running* task is a no-op at a leaf.
+        // Cancelling the *running* task asks the runtime to kill it.
         let acts = b.on_cancel(0);
-        assert!(acts.is_empty(), "{acts:?}");
+        assert_eq!(acts, vec![BufferAction::CancelRunning { consumer: 0, id: 0 }]);
         assert_eq!(b.cancelled_dropped, 1);
+        assert_eq!(b.cancelled_killed, 1);
+        // The killed attempt reports RC_CANCELLED through the normal Done
+        // path and must not be retried even with budget left.
+        let killed = TaskResult { rc: RC_CANCELLED, ..result(0, 0) };
+        let acts = b.on_done(0, killed);
+        assert!(
+            acts.iter().any(
+                |a| matches!(a, BufferAction::FlushResults(rs) if rs.iter().any(|r| r.id == 0 && r.cancelled()))
+            ),
+            "{acts:?}"
+        );
+        assert_eq!(b.retried, 0);
+    }
+
+    #[test]
+    fn cancel_pending_on_running_task_suppresses_retry_on_natural_failure() {
+        let mut b = BufferState::new(1, 2, 1);
+        b.on_start();
+        let mut t = task(3);
+        t.max_retries = 5;
+        b.on_assign(vec![t]);
+        // Cancel while running: kill requested, the notice is kept.
+        let acts = b.on_cancel(3);
+        assert_eq!(acts, vec![BufferAction::CancelRunning { consumer: 0, id: 3 }]);
+        // The attempt fails naturally before the kill lands: the pending
+        // cancel wins — no retry is burned, a cancelled result flows.
+        let acts = b.on_done(0, failed(3, 0));
+        let flushed = acts
+            .iter()
+            .find_map(|a| match a {
+                BufferAction::FlushResults(rs) => Some(rs.clone()),
+                _ => None,
+            })
+            .expect("must flush");
+        assert!(flushed[0].cancelled(), "{flushed:?}");
+        assert_eq!(b.retried, 0);
+        // A success beating the kill keeps its real result.
+        let mut t = task(4);
+        t.max_retries = 5;
+        b.on_assign(vec![t]);
+        let acts = b.on_cancel(4);
+        assert!(
+            acts.iter().any(|a| matches!(a, BufferAction::CancelRunning { .. })),
+            "{acts:?}"
+        );
+        let acts = b.on_done(0, result(4, 0));
+        let flushed = acts
+            .iter()
+            .find_map(|a| match a {
+                BufferAction::FlushResults(rs) => Some(rs.clone()),
+                _ => None,
+            })
+            .expect("must flush");
+        assert!(flushed[0].ok(), "{flushed:?}");
+    }
+
+    #[test]
+    fn cancel_for_unknown_task_leaves_tombstone_that_drops_later_arrival() {
+        // Satellite repro: a cancel racing a sideways steal. The thief
+        // receives the cancel notice *before* the stolen task arrives; the
+        // tombstone must drop the task on arrival instead of running it.
+        let mut thief = BufferState::new(1, 4, 1).with_stealing(0, 1, StealPolicy::RoundRobin);
+        thief.on_start();
+        thief.on_assign(vec![task(0)]); // consumer busy with task 0
+        let acts = thief.on_cancel(42); // not queued, not running here
+        assert!(acts.is_empty(), "{acts:?}");
+        // The stolen task lands afterwards: dropped, reported cancelled.
+        let acts = thief.on_steal_grant(1, 0, Vec::new(), vec![task(42), task(43)]);
+        assert!(
+            acts.iter().any(
+                |a| matches!(a, BufferAction::FlushResults(rs) if rs.iter().any(|r| r.id == 42 && r.cancelled()))
+            ),
+            "{acts:?}"
+        );
+        assert_eq!(thief.cancelled_dropped, 1);
+        assert_eq!(thief.queue_len(), 1, "the untargeted loot is queued");
+        // A second grant with the same id cannot double-report: the
+        // tombstone was consumed (ids are unique per run anyway).
+        let acts = thief.on_steal_grant(1, 0, Vec::new(), vec![task(44)]);
+        assert!(
+            !acts.iter().any(
+                |a| matches!(a, BufferAction::FlushResults(rs) if rs.iter().any(|r| r.cancelled()))
+            ),
+            "{acts:?}"
+        );
+    }
+
+    #[test]
+    fn steal_grant_forwards_victims_pending_cancels() {
+        // The other ordering of the race: the victim hears the cancel
+        // while the steal is in flight and must forward the notice with
+        // the grant so the thief can apply it.
+        let mut victim = BufferState::new(1, 8, 100).with_stealing(1, 1, StealPolicy::RoundRobin);
+        victim.on_start();
+        victim.on_assign((0..6).map(task).collect()); // task 0 runs, 1-5 queued
+        // Cancel for a task the victim does not hold → tombstoned.
+        victim.on_cancel(99);
+        let acts = victim.on_steal_request(0, 0, 2);
+        let (cancels, tasks) = acts
+            .iter()
+            .find_map(|a| match a {
+                BufferAction::StealGrant { cancels, tasks, .. } => {
+                    Some((cancels.clone(), tasks.clone()))
+                }
+                _ => None,
+            })
+            .expect("victim must reply");
+        assert_eq!(cancels, vec![99]);
+        assert_eq!(tasks.len(), 2);
+        // The thief merges the forwarded notice: when task 99 later
+        // reaches it (e.g. via a relayed assign), it is dropped on sight.
+        let mut thief = BufferState::new(1, 8, 1).with_stealing(0, 1, StealPolicy::RoundRobin);
+        thief.on_start();
+        thief.on_assign(vec![task(50)]); // keep the consumer busy
+        thief.on_steal_grant(1, 4, cancels, tasks);
+        let acts = thief.on_assign(vec![task(99)]);
+        assert!(
+            acts.iter().any(
+                |a| matches!(a, BufferAction::FlushResults(rs) if rs.iter().any(|r| r.id == 99 && r.cancelled()))
+            ),
+            "{acts:?}"
+        );
+        assert_eq!(thief.cancelled_dropped, 1);
     }
 
     #[test]
@@ -1318,7 +1886,7 @@ mod tests {
         let (granted, left) = acts
             .iter()
             .find_map(|a| match a {
-                BufferAction::StealGrant { thief: 0, from_slot: 1, left, tasks } => {
+                BufferAction::StealGrant { thief: 0, from_slot: 1, left, tasks, .. } => {
                     Some((tasks.clone(), *left))
                 }
                 _ => None,
@@ -1330,7 +1898,7 @@ mod tests {
         // Thief drains its queue; consumer 1 goes idle before the loot lands.
         thief.on_done(0, result(102, 0));
         thief.on_done(1, result(101, 1));
-        let acts = thief.on_steal_grant(1, left, granted);
+        let acts = thief.on_steal_grant(1, left, Vec::new(), granted);
         assert!(acts.iter().any(|a| matches!(a, BufferAction::RunOn { .. })), "{acts:?}");
         assert_eq!(thief.steals_received, 3);
         assert_eq!(thief.steals_failed, 0);
@@ -1347,7 +1915,7 @@ mod tests {
         assert!(acts.iter().any(|a| matches!(a, BufferAction::StealRequest { .. })), "{acts:?}");
         assert!(!acts.iter().any(|a| matches!(a, BufferAction::RequestTasks { .. })));
         // The sibling had nothing.
-        let acts = thief.on_steal_grant(1, 0, Vec::new());
+        let acts = thief.on_steal_grant(1, 0, Vec::new(), Vec::new());
         let req = acts.iter().find_map(|a| match a {
             BufferAction::RequestTasks { amount } => Some(*amount),
             _ => None,
@@ -1377,9 +1945,9 @@ mod tests {
         assert_eq!(b.next_victim(), 3);
         assert_eq!(b.next_victim(), 0);
         // Learn depths from grants: slot 2 empty, slot 0 deep, slot 3 shallow.
-        b.on_steal_grant(2, 0, Vec::new());
-        b.on_steal_grant(0, 4, vec![task(90)]);
-        b.on_steal_grant(3, 1, vec![task(91)]);
+        b.on_steal_grant(2, 0, Vec::new(), Vec::new());
+        b.on_steal_grant(0, 4, Vec::new(), vec![task(90)]);
+        b.on_steal_grant(3, 1, Vec::new(), vec![task(91)]);
         assert_eq!(b.next_victim(), 0);
         assert_eq!(b.next_victim(), 0, "sticks to the deepest known sibling");
         // An incoming steal request marks that thief as starved.

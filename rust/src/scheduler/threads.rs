@@ -23,21 +23,74 @@
 //! fine for the framework's own behaviour (dummy `Sleep` tasks idle, and
 //! in-process evaluations are serialized by the PJRT executor anyway).
 
+use std::collections::HashSet;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use super::metrics::{FillingRate, NodeStats};
+use super::metrics::{FillingRate, LevelFill, NodeStats};
 use super::protocol::{BufferAction, BufferState, ProducerAction, ProducerState};
 use crate::api::{JobSink, JobSpec};
 use crate::config::{SchedulerConfig, TreeNodeKind};
-use crate::tasklib::{Payload, SearchEngine, TaskId, TaskResult, TaskSink, TaskSpec};
+use crate::tasklib::{
+    Payload, SearchEngine, TaskId, TaskResult, TaskSink, TaskSpec, RC_CANCELLED, RC_TIMEOUT,
+};
+
+/// Kill switch shared between a leaf node and its consumers: ids whose
+/// *running* attempt should be aborted. The leaf's node thread marks an
+/// id when the protocol emits [`BufferAction::CancelRunning`]; executors
+/// poll [`CancelSet::is_cancelled`] from their wait loops and report
+/// [`RC_CANCELLED`] when it fires. Executors that never poll simply let
+/// the attempt finish — cancellation stays best-effort for them.
+#[derive(Default)]
+pub struct CancelSet(Mutex<HashSet<TaskId>>);
+
+impl CancelSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark `id`: its running attempt should be killed.
+    pub fn request(&self, id: TaskId) {
+        self.0.lock().unwrap().insert(id);
+    }
+
+    pub fn is_cancelled(&self, id: TaskId) -> bool {
+        self.0.lock().unwrap().contains(&id)
+    }
+
+    /// Retire the mark once the attempt finished (killed or not).
+    pub fn clear(&self, id: TaskId) {
+        self.0.lock().unwrap().remove(&id);
+    }
+}
+
+/// What one attempt produced, as reported by an [`Executor`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ExecOutcome {
+    pub results: Vec<f64>,
+    pub rc: i32,
+    /// True iff the executor cut the attempt short at its `timeout_s`
+    /// budget — the authoritative timeout signal (a simulator may
+    /// legitimately exit with status [`crate::tasklib::RC_TIMEOUT`]).
+    pub timed_out: bool,
+}
 
 /// Runs task payloads on a consumer thread.
 pub trait Executor: Send + Sync {
     /// Execute the payload; return (result vector, return code).
     fn run(&self, task: &TaskSpec, consumer: usize) -> (Vec<f64>, i32);
+
+    /// Cancellation-aware variant driven by the scheduler runtime.
+    /// Executors that can abort mid-flight (child processes, chunked
+    /// sleeps) override this and poll `cancel`; the default ignores it
+    /// and runs the attempt to completion.
+    fn run_cancellable(&self, task: &TaskSpec, consumer: usize, cancel: &CancelSet) -> ExecOutcome {
+        let _ = cancel;
+        let (results, rc) = self.run(task, consumer);
+        ExecOutcome { results, rc, timed_out: false }
+    }
 }
 
 /// Executor for dummy [`Payload::Sleep`] tasks with time compression:
@@ -46,18 +99,49 @@ pub struct SleepExecutor {
     pub time_scale: f64,
 }
 
-impl Executor for SleepExecutor {
-    fn run(&self, task: &TaskSpec, _consumer: usize) -> (Vec<f64>, i32) {
+impl SleepExecutor {
+    fn seconds(task: &TaskSpec) -> f64 {
         match &task.payload {
-            Payload::Sleep { seconds } => {
-                let real = seconds * self.time_scale;
-                if real > 0.0 {
-                    thread::sleep(Duration::from_secs_f64(real));
-                }
-                (vec![*seconds], 0)
-            }
+            Payload::Sleep { seconds } => *seconds,
             other => panic!("SleepExecutor got {other:?}"),
         }
+    }
+}
+
+impl Executor for SleepExecutor {
+    fn run(&self, task: &TaskSpec, _consumer: usize) -> (Vec<f64>, i32) {
+        let seconds = Self::seconds(task);
+        let real = seconds * self.time_scale;
+        if real > 0.0 {
+            thread::sleep(Duration::from_secs_f64(real));
+        }
+        (vec![seconds], 0)
+    }
+
+    /// Sleep in small slices so a kill-on-cancel lands within ~1 ms, and
+    /// enforce the per-attempt budget: `timeout_s` is in *virtual*
+    /// seconds (the same unit as the sleep itself), scaled like the
+    /// sleep, so the threaded runtime truncates exactly where the DES
+    /// does.
+    fn run_cancellable(&self, task: &TaskSpec, _consumer: usize, cancel: &CancelSet) -> ExecOutcome {
+        let seconds = Self::seconds(task);
+        let mut remaining = seconds * self.time_scale;
+        let budget = task.timeout_s.map(|s| s * self.time_scale);
+        let mut elapsed = 0.0f64;
+        const POLL: f64 = 0.001;
+        while remaining > 0.0 {
+            if cancel.is_cancelled(task.id) {
+                return ExecOutcome { results: Vec::new(), rc: RC_CANCELLED, timed_out: false };
+            }
+            if budget.is_some_and(|b| elapsed >= b) {
+                return ExecOutcome { results: Vec::new(), rc: RC_TIMEOUT, timed_out: true };
+            }
+            let slice = remaining.min(POLL);
+            thread::sleep(Duration::from_secs_f64(slice));
+            remaining -= slice;
+            elapsed += slice;
+        }
+        ExecOutcome { results: vec![seconds], rc: 0, timed_out: false }
     }
 }
 
@@ -74,8 +158,9 @@ enum ToBuffer {
     /// Steal request from the sibling at slot `thief`.
     Steal { thief: usize, amount: usize },
     /// Reply to our steal request (possibly empty): the victim's slot, its
-    /// remaining queue depth, and the surrendered tasks.
-    Stolen { from_slot: usize, left: usize, tasks: Vec<TaskSpec> },
+    /// remaining queue depth, its pending cancellation notices, and the
+    /// surrendered tasks.
+    Stolen { from_slot: usize, left: usize, cancels: Vec<TaskId>, tasks: Vec<TaskSpec> },
     /// Cancellation notice fanning out toward the leaves.
     Cancel { id: TaskId },
     Shutdown,
@@ -107,6 +192,9 @@ pub struct Report {
     pub producer_msgs_out: u64,
     /// Per-node counters of the buffer tree, in node-id order.
     pub node_stats: Vec<NodeStats>,
+    /// Per-level filling statistics (mean/min subtree rate), mirroring
+    /// the DES report so both runtimes expose the same observability.
+    pub level_fill: Vec<LevelFill>,
 }
 
 impl Report {
@@ -168,6 +256,10 @@ pub fn run_scheduler(
     );
 
     let t0 = Instant::now();
+    // Queue clocks run in *virtual* seconds (wall seconds ÷ time_scale),
+    // the unit `timeout_s`, deadlines and aging steps are expressed in —
+    // so policy ordering matches the DES exactly under time compression.
+    let clock_scale = 1.0 / cfg.time_scale.max(1e-9);
 
     // One channel per tree node, created up front so siblings/children can
     // be wired regardless of spawn order.
@@ -196,6 +288,9 @@ pub fn run_scheduler(
         };
         let siblings: Vec<Sender<ToBuffer>> =
             topo.sibling_group(id).iter().map(|&s| node_txs[s].clone()).collect();
+        // Kill switch shared by this leaf and its consumers (unused but
+        // harmless at interior nodes).
+        let cancel = Arc::new(CancelSet::new());
         let children = match &topo.nodes[id].kind {
             TreeNodeKind::Leaf { n_consumers, rank_base } => {
                 let mut cons_txs = Vec::with_capacity(*n_consumers);
@@ -205,10 +300,11 @@ pub fn run_scheduler(
                     let rank = rank_base + local;
                     let exec = Arc::clone(&executor);
                     let back = node_txs[id].clone();
+                    let cancel = Arc::clone(&cancel);
                     let handle = thread::Builder::new()
                         .name(format!("consumer-{rank}"))
                         .stack_size(256 * 1024)
-                        .spawn(move || consumer_loop(crx, back, exec, rank, local, t0))
+                        .spawn(move || consumer_loop(crx, back, exec, rank, local, t0, cancel))
                         .expect("spawn consumer");
                     consumer_handles.push(handle);
                 }
@@ -223,9 +319,21 @@ pub fn run_scheduler(
             .name(format!("buffer-{id}"))
             .stack_size(256 * 1024)
             .spawn(move || {
-                node_loop(state, rx, parent, slot, siblings, children, flush_interval, |s| {
-                    stats.lock().unwrap()[id] = Some(s.stats(id, level));
-                })
+                node_loop(
+                    state,
+                    rx,
+                    parent,
+                    slot,
+                    siblings,
+                    children,
+                    cancel,
+                    flush_interval,
+                    t0,
+                    clock_scale,
+                    |s| {
+                        stats.lock().unwrap()[id] = Some(s.stats(id, level));
+                    },
+                )
             })
             .expect("spawn buffer node");
         node_handles.push(handle);
@@ -237,11 +345,12 @@ pub fn run_scheduler(
         topo.roots.iter().map(|&r| node_txs[r].clone()).collect();
 
     // --- producer loop (runs on the caller thread) ---
-    let mut state = ProducerState::new(topo.roots.len());
+    let mut state = ProducerState::new(topo.roots.len()).with_policy(cfg.policy);
     let mut sink = ProducerSink { next_id: 0, staged: Vec::new(), cancels: Vec::new() };
     let mut filling = FillingRate::new();
     let mut all_results: Vec<TaskResult> = Vec::new();
 
+    state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
     engine.start(&mut sink);
     drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
     let done = engine.poll(&mut sink);
@@ -250,6 +359,7 @@ pub fn run_scheduler(
 
     let poll_interval = Duration::from_millis(cfg.flush_interval_ms.max(1));
     loop {
+        state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
         // Shutdown check (engine may have submitted nothing at all).
         let shutdown_acts = state.maybe_shutdown();
         if perform_producer(shutdown_acts, &root_txs) {
@@ -266,6 +376,7 @@ pub fn run_scheduler(
             }
             Err(RecvTimeoutError::Disconnected) => break,
         };
+        state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
         match msg {
             ToProducer::Request { buffer, amount } => {
                 let acts = state.on_request(buffer, amount);
@@ -312,6 +423,7 @@ pub fn run_scheduler(
         })
         .collect();
 
+    let level_fill = filling.level_fill(&topo);
     Report {
         results: all_results,
         filling,
@@ -319,6 +431,7 @@ pub fn run_scheduler(
         producer_msgs_in: state.msgs_in,
         producer_msgs_out: state.msgs_out,
         node_stats,
+        level_fill,
     }
 }
 
@@ -381,6 +494,7 @@ fn perform_node_actions(
     slot: usize,
     siblings: &[Sender<ToBuffer>],
     children: &ChildLink,
+    cancel: &CancelSet,
 ) -> bool {
     let mut stopping = false;
     for act in acts {
@@ -418,8 +532,14 @@ fn perform_node_actions(
             BufferAction::StealRequest { victim, amount } => {
                 let _ = siblings[victim].send(ToBuffer::Steal { thief: slot, amount });
             }
-            BufferAction::StealGrant { thief, from_slot, left, tasks } => {
-                let _ = siblings[thief].send(ToBuffer::Stolen { from_slot, left, tasks });
+            BufferAction::StealGrant { thief, from_slot, left, cancels, tasks } => {
+                let _ = siblings[thief].send(ToBuffer::Stolen { from_slot, left, cancels, tasks });
+            }
+            BufferAction::CancelRunning { consumer: _, id } => {
+                // The set is shared by every consumer of this leaf, so the
+                // id alone identifies the attempt to kill; the executor
+                // notices at its next cancellation poll.
+                cancel.request(id);
             }
             BufferAction::CancelChildren { id } => {
                 if let ChildLink::Buffers(bufs) = children {
@@ -457,33 +577,46 @@ fn node_loop(
     slot: usize,
     siblings: Vec<Sender<ToBuffer>>,
     children: ChildLink,
+    cancel: Arc<CancelSet>,
     flush_interval: Duration,
+    t0: Instant,
+    clock_scale: f64,
     report_stats: impl FnOnce(&BufferState),
 ) {
     let mut stopping = false;
+    state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
     let acts = state.on_start();
-    stopping |= perform_node_actions(acts, &parent, slot, &siblings, &children);
+    stopping |= perform_node_actions(acts, &parent, slot, &siblings, &children, &cancel);
     while !stopping {
-        let acts = match rx.recv_timeout(flush_interval) {
+        let msg = rx.recv_timeout(flush_interval);
+        state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
+        let acts = match msg {
             Ok(ToBuffer::Assign(tasks)) => state.on_assign(tasks),
-            Ok(ToBuffer::Done { consumer, result }) => state.on_done(consumer, result),
+            Ok(ToBuffer::Done { consumer, result }) => {
+                // Retire any kill mark that lost the race to this
+                // completion — the consumer-side clear can run *before*
+                // the mark is even set, which would leak it forever.
+                cancel.clear(result.id);
+                state.on_done(consumer, result)
+            }
             Ok(ToBuffer::ChildRequest { child, amount }) => state.on_child_request(child, amount),
             Ok(ToBuffer::ChildResults(rs)) => state.on_child_results(rs),
             // In the threaded runtime the routing token IS the slot.
             Ok(ToBuffer::Steal { thief, amount }) => state.on_steal_request(thief, thief, amount),
-            Ok(ToBuffer::Stolen { from_slot, left, tasks }) => {
-                state.on_steal_grant(from_slot, left, tasks)
+            Ok(ToBuffer::Stolen { from_slot, left, cancels, tasks }) => {
+                state.on_steal_grant(from_slot, left, cancels, tasks)
             }
             Ok(ToBuffer::Cancel { id }) => state.on_cancel(id),
             Ok(ToBuffer::Shutdown) => state.on_shutdown(),
             Err(RecvTimeoutError::Timeout) => state.on_tick(),
             Err(RecvTimeoutError::Disconnected) => break,
         };
-        stopping |= perform_node_actions(acts, &parent, slot, &siblings, &children);
+        stopping |= perform_node_actions(acts, &parent, slot, &siblings, &children, &cancel);
     }
     report_stats(&state);
 }
 
+#[allow(clippy::too_many_arguments)]
 fn consumer_loop(
     rx: Receiver<ToConsumer>,
     back: Sender<ToBuffer>,
@@ -491,21 +624,26 @@ fn consumer_loop(
     rank: usize,
     local: usize,
     t0: Instant,
+    cancel: Arc<CancelSet>,
 ) {
     while let Ok(msg) = rx.recv() {
         match msg {
             ToConsumer::Run(task) => {
                 let begin = t0.elapsed().as_secs_f64();
-                let (results, rc) = exec.run(&task, rank);
+                let out = exec.run_cancellable(&task, rank, &cancel);
+                // Retire any kill mark: it either fired (rc is
+                // RC_CANCELLED) or lost the race to completion.
+                cancel.clear(task.id);
                 let finish = t0.elapsed().as_secs_f64();
                 let result = TaskResult {
                     id: task.id,
                     consumer: rank,
-                    results,
+                    results: out.results,
                     begin,
                     finish,
-                    rc,
+                    rc: out.rc,
                     attempt: task.attempt,
+                    timed_out: out.timed_out,
                 };
                 if back.send(ToBuffer::Done { consumer: local, result }).is_err() {
                     break;

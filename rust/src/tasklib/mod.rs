@@ -34,7 +34,11 @@ pub type TaskId = u64;
 pub const RC_CANCELLED: i32 = i32::MIN;
 
 /// `rc` reported for an attempt that exceeded its `timeout_s` budget
-/// (mirrors GNU `timeout`'s exit code).
+/// (mirrors GNU `timeout`'s exit code). This is a *reporting convention
+/// only*: a user simulator may legitimately exit 124, so executors that
+/// actually enforced the budget additionally set
+/// [`TaskResult::timed_out`] — that flag, not the exit code, is the
+/// authoritative signal that the framework cut the attempt short.
 pub const RC_TIMEOUT: i32 = 124;
 
 /// What a consumer should do for this task.
@@ -82,6 +86,14 @@ pub struct TaskSpec {
     pub timeout_s: Option<f64>,
     /// Free-form label from [`JobSpec::tag`].
     pub tag: Option<String>,
+    /// When the task first entered a scheduler queue, in *virtual*
+    /// seconds since run start — the unit `timeout_s` and aging steps are
+    /// expressed in (the threaded runtime divides wall time by its
+    /// `time_scale`; the DES uses virtual time directly). Stamped by the
+    /// first queue the task lands in and carried across node hops, steals
+    /// and retries, so deadline slack and priority aging measure the
+    /// *total* time in the system.
+    pub enqueued_t: Option<f64>,
 }
 
 impl TaskSpec {
@@ -96,6 +108,18 @@ impl TaskSpec {
             attempt: 0,
             timeout_s: None,
             tag: None,
+            enqueued_t: None,
+        }
+    }
+
+    /// Effective deadline under [`crate::config::SchedPolicy::Deadline`]:
+    /// first-enqueue time plus the per-attempt budget. Tasks without a
+    /// timeout (or not yet enqueued) have no deadline pressure and sort
+    /// after every deadlined task in their priority band.
+    pub fn deadline(&self) -> f64 {
+        match (self.enqueued_t, self.timeout_s) {
+            (Some(t), Some(budget)) => t + budget,
+            _ => f64::INFINITY,
         }
     }
 }
@@ -117,12 +141,18 @@ pub struct TaskResult {
     pub begin: f64,
     pub finish: f64,
     /// Exit status of the final attempt: 0 = success, [`RC_CANCELLED`] =
-    /// dropped by cancellation, [`RC_TIMEOUT`] = budget exceeded. The
+    /// dropped (or killed) by cancellation, [`RC_TIMEOUT`] = budget
+    /// exceeded (by convention — check [`Self::timed_out`]). The
     /// scheduler retries failed attempts transparently while the task has
     /// retries left; engines only ever see the final attempt.
     pub rc: i32,
     /// Attempt index of this (final) execution: 0 = succeeded first try.
     pub attempt: u32,
+    /// True iff the *executor* cut this attempt short at its `timeout_s`
+    /// budget. A simulator that happens to exit with status 124 leaves
+    /// this false, so it is retried/reported as an ordinary failure
+    /// rather than misdiagnosed as a timeout.
+    pub timed_out: bool,
 }
 
 impl TaskResult {
@@ -148,6 +178,7 @@ impl TaskResult {
             finish: 0.0,
             rc: RC_CANCELLED,
             attempt: spec.attempt,
+            timed_out: false,
         }
     }
 }
@@ -265,6 +296,7 @@ mod tests {
             finish: 5.5,
             rc: 0,
             attempt: 0,
+            timed_out: false,
         };
         assert!((r.duration() - 3.5).abs() < 1e-12);
         assert!(r.ok());
@@ -282,6 +314,18 @@ mod tests {
         assert_eq!(r.id, 4);
         assert_eq!(r.attempt, 2);
         assert!(r.cancelled());
+    }
+
+    #[test]
+    fn deadline_requires_enqueue_stamp_and_budget() {
+        let mut spec = TaskSpec::new(0, Payload::Sleep { seconds: 1.0 });
+        assert_eq!(spec.deadline(), f64::INFINITY);
+        spec.timeout_s = Some(30.0);
+        assert_eq!(spec.deadline(), f64::INFINITY, "unstamped task has no deadline yet");
+        spec.enqueued_t = Some(5.0);
+        assert!((spec.deadline() - 35.0).abs() < 1e-12);
+        spec.timeout_s = None;
+        assert_eq!(spec.deadline(), f64::INFINITY);
     }
 
     #[test]

@@ -165,6 +165,7 @@ mod tests {
                 finish: 1.0,
                 rc: 0,
                 attempt: 0,
+                timed_out: false,
             };
             e.on_done(&r, &mut sink);
             done += 1;
@@ -180,6 +181,7 @@ mod tests {
             finish: 1.0,
             rc: 0,
             attempt: 0,
+            timed_out: false,
         };
         e.on_done(&r, &mut sink);
         assert_eq!(sink.submitted.len(), 40);

@@ -9,9 +9,9 @@
 use std::sync::Arc;
 
 use caravan::api::{job_engine, JobEngine, JobSink, JobSpec, Jobs};
-use caravan::config::{SchedulerConfig, StealPolicy};
+use caravan::config::{SchedPolicy, SchedulerConfig, StealPolicy};
 use caravan::des::{run_des, DesConfig, DesReport, DurationModel, SleepDurations};
-use caravan::scheduler::{run_scheduler, Executor};
+use caravan::scheduler::{run_scheduler, Executor, SleepExecutor};
 use caravan::tasklib::{Payload, TaskResult, TaskSink, TaskSpec, RC_TIMEOUT};
 use caravan::workload::{TestCase, TestCaseEngine};
 
@@ -183,8 +183,180 @@ fn des_timeout_truncates_overrunning_attempts() {
     assert_eq!(timed_out.len(), 8);
     for t in &timed_out {
         assert!((t.duration() - 2.0).abs() < 1e-9, "attempt truncated at the budget");
+        assert!(t.timed_out, "executor-enforced truncation must set the flag");
     }
     assert!(r.results.iter().filter(|x| x.ok()).count() == 8);
+    assert!(r.results.iter().filter(|x| x.ok()).all(|x| !x.timed_out));
+}
+
+#[test]
+fn threaded_timeout_truncates_sleep_attempts() {
+    // Mirror of the DES truncation on real threads: SleepExecutor
+    // enforces the per-attempt budget in virtual seconds (scaled like the
+    // sleep itself), so the two runtimes agree on timeout semantics.
+    struct TimedJobs;
+    impl JobEngine for TimedJobs {
+        type Ctx = ();
+        fn start(&mut self, jobs: &mut Jobs<'_, ()>) {
+            for _ in 0..2 {
+                jobs.submit(JobSpec::sleep(100.0).timeout(10.0), ()); // overruns
+            }
+            for _ in 0..2 {
+                jobs.submit(JobSpec::sleep(1.0).timeout(10.0), ()); // inert budget
+            }
+        }
+        fn on_done(&mut self, _r: &TaskResult, _c: (), _jobs: &mut Jobs<'_, ()>) {}
+    }
+    let cfg = SchedulerConfig {
+        np: 2,
+        consumers_per_buffer: 2,
+        flush_interval_ms: 2,
+        time_scale: 0.002, // 100 virtual s = 200 ms real; budget = 20 ms
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let report = run_scheduler(
+        &cfg,
+        job_engine(TimedJobs),
+        Arc::new(SleepExecutor { time_scale: 0.002 }),
+    );
+    assert_eq!(report.results.len(), 4);
+    let timed: Vec<&TaskResult> =
+        report.results.iter().filter(|x| x.rc == RC_TIMEOUT).collect();
+    assert_eq!(timed.len(), 2, "both overrunning attempts must be cut at the budget");
+    assert!(timed.iter().all(|x| x.timed_out && x.id < 2));
+    assert!(report.results.iter().filter(|x| x.ok()).all(|x| x.id >= 2 && !x.timed_out));
+    assert!(
+        t0.elapsed() < std::time::Duration::from_millis(2000),
+        "truncated attempts must not sleep their nominal 200 ms × retries"
+    );
+}
+
+#[test]
+fn user_exit_code_124_is_not_flagged_as_timeout() {
+    // A simulated simulator that *returns* GNU timeout's exit code on its
+    // own: the rc passes through as an ordinary failure, but `timed_out`
+    // stays false — only executor-enforced budget kills set it — so the
+    // job layer can tell the two apart (the codes collide by design).
+    struct Exit124;
+    impl DurationModel for Exit124 {
+        fn duration(&mut self, _t: &TaskSpec) -> f64 {
+            1.0
+        }
+        fn rc(&mut self, _t: &TaskSpec) -> i32 {
+            124
+        }
+    }
+    let cfg = DesConfig::new(2);
+    let r = run_des(&cfg, job_engine(NJobs { n: 4, retries: 0 }), Box::new(Exit124));
+    assert_eq!(r.results.len(), 4);
+    for x in &r.results {
+        assert_eq!(x.rc, RC_TIMEOUT, "the user's exit code is reported verbatim");
+        assert!(!x.timed_out, "a legitimate exit 124 must not read as a framework timeout");
+    }
+}
+
+// ---------------------------------------------------------------- policy
+
+#[test]
+fn deadline_policy_runs_least_slack_first() {
+    // One consumer serializes execution. Jobs are submitted with budgets
+    // in shuffled order; under SchedPolicy::Deadline they must start in
+    // ascending-deadline order, with the budget-less job last (it has no
+    // deadline pressure). Budgets are far above the actual waits, so
+    // nothing really times out — only the *ordering* is under test.
+    struct Tiers;
+    impl JobEngine for Tiers {
+        type Ctx = ();
+        fn start(&mut self, jobs: &mut Jobs<'_, ()>) {
+            jobs.submit(JobSpec::sleep(1.0), ()); // id 0: no deadline
+            jobs.submit(JobSpec::sleep(1.0).timeout(900.0), ()); // id 1
+            jobs.submit(JobSpec::sleep(1.0).timeout(300.0), ()); // id 2
+            jobs.submit(JobSpec::sleep(1.0).timeout(600.0), ()); // id 3
+        }
+        fn on_done(&mut self, _r: &TaskResult, _c: (), _jobs: &mut Jobs<'_, ()>) {}
+    }
+    let mut cfg = DesConfig::new(1);
+    cfg.sched.consumers_per_buffer = 1;
+    cfg.sched.policy = SchedPolicy::Deadline;
+    let r = run_des(&cfg, job_engine(Tiers), Box::new(SleepDurations));
+    assert_eq!(r.results.len(), 4);
+    let begin = |id: u64| r.results.iter().find(|x| x.id == id).unwrap().begin;
+    assert!(
+        begin(2) < begin(3) && begin(3) < begin(1) && begin(1) < begin(0),
+        "least slack first, no-deadline last: {:?}",
+        (begin(0), begin(1), begin(2), begin(3))
+    );
+}
+
+/// Sustained priority-9 stream: each completion spawns the next hi job
+/// until `total` were created; a single priority-0 job rides along.
+struct SustainedStream {
+    total: usize,
+    created: usize,
+}
+
+impl JobEngine for SustainedStream {
+    type Ctx = ();
+    fn start(&mut self, jobs: &mut Jobs<'_, ()>) {
+        jobs.submit(JobSpec::sleep(1.0), ()); // id 0: the priority-0 probe
+        // A deep initial burst keeps the producer's pending queue stocked
+        // with priority-9 work for the whole run, so under Strict the
+        // probe can never slip out through a momentarily-empty band.
+        for _ in 0..30 {
+            jobs.submit(JobSpec::sleep(1.0).priority(9), ());
+            self.created += 1;
+        }
+    }
+    fn on_done(&mut self, _r: &TaskResult, _c: (), jobs: &mut Jobs<'_, ()>) {
+        if self.created < self.total {
+            jobs.submit(JobSpec::sleep(1.0).priority(9), ());
+            self.created += 1;
+        }
+    }
+}
+
+fn stream_run(policy: SchedPolicy, total: usize) -> DesReport {
+    let mut cfg = DesConfig::new(2);
+    cfg.sched.consumers_per_buffer = 2;
+    cfg.sched.policy = policy;
+    run_des(&cfg, job_engine(SustainedStream { total, created: 0 }), Box::new(SleepDurations))
+}
+
+#[test]
+fn aging_bounds_priority_zero_wait_under_sustained_high_stream() {
+    // The bounded-wait property (deterministic in the DES): under Strict,
+    // the priority-0 probe starves until the priority-9 stream dries up
+    // (~150 virtual seconds: 300 one-second tasks on 2 consumers). With
+    // Aging{step: 3}, the probe's effective priority climbs one level per
+    // 3 s; the stream's effective priority is 9 plus the boost of its own
+    // backlog head (≈ 26 queued tasks / 2 per second ≈ 13 s of wait), so
+    // the probe overtakes it after roughly (9 + 13/3 + 1) × 3 ≈ 43 s —
+    // several times earlier than Strict, and bounded by the formula, not
+    // by the stream length.
+    const TOTAL: usize = 300;
+    let probe_begin = |r: &DesReport| {
+        r.results.iter().find(|x| x.id == 0).expect("probe completed").begin
+    };
+
+    let strict = stream_run(SchedPolicy::Strict, TOTAL);
+    assert_eq!(strict.results.len(), TOTAL + 1);
+    let strict_begin = probe_begin(&strict);
+    assert!(
+        strict_begin > 120.0,
+        "under Strict the probe must starve behind the stream (begin={strict_begin})"
+    );
+
+    let aging = stream_run(SchedPolicy::Aging { step: 3.0 }, TOTAL);
+    assert_eq!(aging.results.len(), TOTAL + 1);
+    let aging_begin = probe_begin(&aging);
+    assert!(
+        aging_begin < 80.0,
+        "aging must bound the probe's wait to ~(9 + backlog/step + 1)*step (begin={aging_begin})"
+    );
+    assert!(aging_begin < strict_begin / 2.0, "{aging_begin} vs {strict_begin}");
+    // The stream itself is barely disturbed: one probe task out of 300.
+    assert!(aging.rate(2) > 0.9, "rate={}", aging.rate(2));
 }
 
 // ---------------------------------------------------------------- priority
@@ -295,7 +467,7 @@ fn des_cancel_drops_exactly_the_queued_targets() {
                 self.fired = true;
                 assert_eq!(r.id, 0, "shortest task completes first");
                 // 5 and 6 are queued at the leaf; 20..30 pending at the
-                // producer; 1 is running (no-op best-effort cancel).
+                // producer; 1 is *running* — its attempt gets killed.
                 jobs.cancel(5);
                 jobs.cancel(6);
                 for id in 20..30 {
@@ -315,22 +487,105 @@ fn des_cancel_drops_exactly_the_queued_targets() {
     ids.sort();
     ids.dedup();
     assert_eq!(ids.len(), 40);
-    // Exactly the queued targets were cancelled; the running task (1) and
-    // everything never targeted completed normally.
+    // Exactly the targets were cancelled: the queued ones dropped, the
+    // running one (id 1) killed mid-attempt; everything never targeted
+    // completed normally.
     let cancelled: Vec<u64> = {
         let mut v: Vec<u64> =
             r.results.iter().filter(|x| x.cancelled()).map(|x| x.id).collect();
         v.sort();
         v
     };
-    let expected: Vec<u64> = [5u64, 6].iter().copied().chain(20..30).collect();
+    let expected: Vec<u64> = [1u64, 5, 6].iter().copied().chain(20..30).collect();
     assert_eq!(cancelled, expected);
-    assert!(r.results.iter().find(|x| x.id == 1).unwrap().ok());
+    // The killed attempt died long before its nominal 11-second duration.
+    let killed = r.results.iter().find(|x| x.id == 1).unwrap();
+    assert!(killed.finish - killed.begin < 11.0, "attempt truncated by the kill");
     // The two leaf-queued drops are visible in NodeStats; the producer
-    // drops are not node drops.
+    // drops are not node drops; the kill is counted separately.
     let dropped_in_tree: u64 = r.node_stats.iter().map(|s| s.cancelled_dropped).sum();
     assert_eq!(dropped_in_tree, 2);
-    assert_eq!(r.cancelled(), 12);
+    assert_eq!(r.cancelled_killed(), 1);
+    assert_eq!(r.cancelled(), 13);
+}
+
+/// Cancels the long job (id 0) as soon as the short one (id 1) completes —
+/// at which point id 0 is certainly *running*, so the cancellation must
+/// kill the attempt rather than find a queue entry.
+struct CancelTheRunningOne {
+    fired: bool,
+}
+
+impl JobEngine for CancelTheRunningOne {
+    type Ctx = ();
+    fn start(&mut self, jobs: &mut Jobs<'_, ()>) {
+        jobs.submit(JobSpec::sleep(3000.0).retries(3), ()); // id 0
+        jobs.submit(JobSpec::sleep(1.0), ()); // id 1
+    }
+    fn on_done(&mut self, r: &TaskResult, _c: (), jobs: &mut Jobs<'_, ()>) {
+        if !self.fired && r.id == 1 {
+            self.fired = true;
+            jobs.cancel(0);
+        }
+    }
+}
+
+#[test]
+fn des_cancel_kills_running_task_within_poll_interval() {
+    // Two consumers: id 0 (3000 virtual seconds) runs on one, id 1 on the
+    // other. The kill must land one cancellation poll after the notice
+    // reaches the leaf — not at id 0's natural finish — and must not
+    // consume a retry.
+    let mut cfg = DesConfig::new(2);
+    cfg.sched.consumers_per_buffer = 2;
+    let r = run_des(
+        &cfg,
+        job_engine(CancelTheRunningOne { fired: false }),
+        Box::new(SleepDurations),
+    );
+    assert_eq!(r.results.len(), 2);
+    let killed = r.results.iter().find(|x| x.id == 0).expect("one result per id");
+    assert!(killed.cancelled(), "running attempt must report RC_CANCELLED");
+    assert_eq!(killed.attempt, 0, "kill-on-cancel must not consume a retry");
+    assert!(
+        killed.finish < 5.0,
+        "killed within the poll interval of the notice, not at 3000 s (finish={})",
+        killed.finish
+    );
+    assert_eq!(r.cancelled_killed(), 1);
+    assert_eq!(r.cancelled(), 1);
+    assert!(r.results.iter().find(|x| x.id == 1).unwrap().ok());
+}
+
+#[test]
+fn threaded_cancel_kills_running_task_within_poll_interval() {
+    // Real-thread mirror: at time_scale 0.001 the long job holds its
+    // consumer for ~3 s unless the kill lands; the whole run finishing in
+    // well under that proves the child was killed, and the stats show the
+    // leaf requested exactly one kill.
+    let cfg = SchedulerConfig {
+        np: 2,
+        consumers_per_buffer: 2,
+        flush_interval_ms: 2,
+        time_scale: 0.001,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let report = run_scheduler(
+        &cfg,
+        job_engine(CancelTheRunningOne { fired: false }),
+        Arc::new(SleepExecutor { time_scale: 0.001 }),
+    );
+    assert_eq!(report.results.len(), 2);
+    let killed = report.results.iter().find(|x| x.id == 0).expect("one result per id");
+    assert!(killed.cancelled(), "running attempt must report RC_CANCELLED");
+    assert_eq!(killed.attempt, 0, "kill-on-cancel must not consume a retry");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(2),
+        "the 3 s attempt must be killed, not awaited"
+    );
+    let killed_stat: u64 = report.node_stats.iter().map(|s| s.cancelled_killed).sum();
+    assert_eq!(killed_stat, 1);
 }
 
 // ---------------------------------------------------------- steal victims

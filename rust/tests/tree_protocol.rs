@@ -190,6 +190,79 @@ fn cancellation_conserves_task_counts() {
 }
 
 #[test]
+fn cancel_racing_a_steal_is_never_lost() {
+    // Deterministic DES repro of the lost-cancellation race: two sibling
+    // leaves; leaf A churns through short tasks and steals from leaf B's
+    // queue of long ones exactly when the engine cancels the task being
+    // stolen. Depending on the message latency, the cancel notice reaches
+    // the thief before the loot (tombstone path), reaches the victim
+    // before the grant leaves (queue-drop path), or finds the task
+    // already dispatched (kill path) — in every interleaving the cancel
+    // must be honoured: the 500-second task may never run to completion.
+    use caravan::api::{JobEngine, JobSpec, Jobs};
+
+    struct StealRace {
+        trigger: u64,
+    }
+    impl JobEngine for StealRace {
+        type Ctx = ();
+        fn start(&mut self, jobs: &mut Jobs<'_, ()>) {
+            // Ids 0-3: short churn for leaf A. Ids 4-6: long work keeping
+            // leaf B busy and queued. Id 7: the steal target (the back of
+            // B's queue — what a steal takes first).
+            for _ in 0..4 {
+                jobs.submit(JobSpec::sleep(1.0), ());
+            }
+            for _ in 0..3 {
+                jobs.submit(JobSpec::sleep(30.0), ());
+            }
+            jobs.submit(JobSpec::sleep(500.0), ());
+        }
+        fn on_done(&mut self, r: &caravan::tasklib::TaskResult, _c: (), jobs: &mut Jobs<'_, ()>) {
+            if r.id == self.trigger {
+                jobs.cancel(7);
+            }
+        }
+    }
+
+    // Sweep the cancel trigger and the network latency: together they
+    // slide the broadcast across the steal's in-flight window, covering
+    // before / during / after orderings deterministically.
+    for trigger in [1u64, 2, 3] {
+        for msg_latency in [0.25f64, 0.5] {
+            let mut dcfg = DesConfig::new(2);
+            dcfg.sched = shape(2, 1, 1, 2, true); // two sibling leaves
+            dcfg.sched.credit_factor = 4;
+            dcfg.sched.flush_every = 1;
+            dcfg.lat.msg_latency = msg_latency;
+            let r = run_des(
+                &dcfg,
+                caravan::api::job_engine(StealRace { trigger }),
+                Box::new(SleepDurations),
+            );
+            let label = format!("trigger={trigger} lat={msg_latency}");
+            assert_eq!(r.results.len(), 8, "{label}: conservation");
+            assert!(ids_complete(&r, 8), "{label}: one result per id");
+            let target = r.results.iter().find(|x| x.id == 7).unwrap();
+            assert!(
+                target.cancelled(),
+                "{label}: the cancel was lost — task 7 ran to rc={}",
+                target.rc
+            );
+            assert!(
+                r.makespan < 200.0,
+                "{label}: task 7's 500-second body must never complete (makespan={})",
+                r.makespan
+            );
+            assert!(
+                r.results.iter().filter(|x| x.id != 7).all(|x| x.ok()),
+                "{label}: untargeted tasks unaffected"
+            );
+        }
+    }
+}
+
+#[test]
 fn priority_inversion_is_bounded_under_stealing() {
     // High-priority jobs submitted together with a crowd of low-priority
     // ones must start (almost) first: with priority queues at every level,
