@@ -8,7 +8,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: artifacts test bench-smoke clean-artifacts
+.PHONY: artifacts test bench-smoke fig3-artifact clean-artifacts
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -18,7 +18,13 @@ test:
 	cargo test -q
 
 bench-smoke:
-	cargo bench --bench fig3_tree -- --quick
+	cargo bench --bench fig3_tree -- --quick --check-schema BENCH_fig3.json
+
+# Regenerate the tracked full-scale depth-sweep table (deterministic DES:
+# same code + config => identical metric values). CI schema-checks it on
+# every run via bench-smoke.
+fig3-artifact:
+	cargo bench --bench fig3_tree -- --json BENCH_fig3.json
 
 clean-artifacts:
 	rm -rf $(ARTIFACTS)

@@ -97,8 +97,12 @@ fn main() {
         );
     }
     for s in &run.value.node_stats {
+        // Wait-histogram digest: total pops and the share answered within
+        // the first bucket (sub-millisecond queue wait).
+        let hist_total: u64 = s.wait_hist.iter().map(|h| h.total()).sum();
+        let fast: u64 = s.wait_hist.iter().map(|h| h.counts[0]).sum();
         println!(
-            "  node {:>2} (L{}): msgs {:>7}/{:<7} max-queue {:>5}/{:<5} steals {}/{} retried {} cancelled {}+{}",
+            "  node {:>2} (L{}): msgs {:>7}/{:<7} max-queue {:>5}/{:<5} steals {}/{} retried {} cancelled {}+{} popped {} (<1ms {:.0}%) req-lag {:.2}/{:.2}ms",
             s.node,
             s.level,
             s.msgs_in,
@@ -109,9 +113,34 @@ fn main() {
             s.steals_given,
             s.retried,
             s.cancelled_dropped,
-            s.cancelled_killed
+            s.cancelled_killed,
+            s.popped,
+            if hist_total == 0 { 0.0 } else { fast as f64 / hist_total as f64 * 100.0 },
+            s.req_lag_mean * 1e3,
+            s.req_lag_max * 1e3
         );
     }
+
+    // 2b. adaptive shaping on the real runtime: the calibration phase
+    // (channel round-trip probe + two inline task executions) runs before
+    // the tree is built; the row reports what the controller picked.
+    let n = 2_000;
+    let mut auto_cfg = cfg.clone();
+    auto_cfg.shape = caravan::config::TreeShape::Auto;
+    let run = timed(|| {
+        run_scheduler(
+            &auto_cfg,
+            Box::new(Sleeps { n, secs: 0.0 }),
+            Arc::new(SleepExecutor { time_scale: 1.0 }),
+        )
+    });
+    assert_eq!(run.value.results.len(), n);
+    println!(
+        "auto tree shaping (threaded)   : depth {} fanout {} chosen by calibration, {:>6.0} tasks/s",
+        run.value.depth,
+        run.value.fanout,
+        n as f64 / run.wall_secs
+    );
 
     // 3. efficiency knee vs task duration (external path): the paper's
     // granularity claim. Efficiency = useful simulated seconds / consumer

@@ -46,6 +46,55 @@ impl SchedPolicy {
     }
 }
 
+/// Measured inputs to the adaptive tree-shaping controller
+/// ([`crate::scheduler::protocol::choose_shape`]). All values are in
+/// *virtual* seconds — the DES derives them exactly from its latency
+/// model, the threaded runtime measures wall clock and divides by its
+/// `time_scale` — so both runtimes feed the controller the same units and
+/// the same inputs always yield the same shape.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Calibration {
+    /// Producer request→grant round trip as seen by a direct child
+    /// (two message hops plus the producer's service + queueing time).
+    /// This is the signal that blows up when rank 0 saturates.
+    pub producer_rtt: f64,
+    /// Mean task duration. Together with the consumer count this gives
+    /// the leaf drain rate the producer must keep up with.
+    pub mean_task_s: f64,
+}
+
+impl Calibration {
+    /// Fallbacks when a measurement is impossible (no tasks staged, probe
+    /// failed): a fast producer and second-scale tasks — the regime where
+    /// the paper's flat layout is known to work.
+    pub fn fallback() -> Self {
+        Self { producer_rtt: 1e-4, mean_task_s: 1.0 }
+    }
+}
+
+/// How the buffer tree's depth and fanout are decided.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TreeShape {
+    /// Use [`SchedulerConfig::depth`] / [`SchedulerConfig::fanout`] as
+    /// given — the PR 1 knobs.
+    Manual,
+    /// Run a short calibration phase at startup (producer round-trip and
+    /// mean task duration), then let the controller pick depth/fanout.
+    /// The user never sets a shape knob.
+    Auto,
+    /// Auto with the measurement already supplied — what [`TreeShape::Auto`]
+    /// becomes once its calibration phase resolves. Lets tests (and users
+    /// with known environments) get deterministic auto-shaping without a
+    /// measurement phase.
+    Calibrated(Calibration),
+}
+
+impl TreeShape {
+    pub fn is_auto(&self) -> bool {
+        !matches!(self, TreeShape::Manual)
+    }
+}
+
 /// How a starved buffer node picks the sibling to steal queued tasks from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StealPolicy {
@@ -73,10 +122,16 @@ pub struct SchedulerConfig {
     /// Consumers per leaf buffer process. Paper default: 384.
     pub consumers_per_buffer: usize,
     /// Number of buffer levels between the producer and the consumers.
-    /// 1 = the paper's two-party protocol (producer → buffers).
+    /// 1 = the paper's two-party protocol (producer → buffers). Used when
+    /// `shape` is [`TreeShape::Manual`]; under auto shaping the controller
+    /// overrides it.
     pub depth: usize,
-    /// Children per interior buffer node (levels above the leaves).
+    /// Children per interior buffer node (levels above the leaves). Under
+    /// auto shaping this is the *upper bound* the controller may pick.
     pub fanout: usize,
+    /// How depth/fanout are decided: the manual knobs above, or the
+    /// adaptive controller fed by a calibration measurement.
+    pub shape: TreeShape,
     /// Allow starved buffer nodes to steal queued tasks from a sibling
     /// before escalating demand to their parent.
     pub steal: bool,
@@ -102,6 +157,7 @@ impl Default for SchedulerConfig {
             consumers_per_buffer: 384,
             depth: 1,
             fanout: 8,
+            shape: TreeShape::Manual,
             steal: false,
             steal_policy: StealPolicy::DeepestQueue,
             policy: SchedPolicy::Strict,

@@ -36,9 +36,13 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
 
 use crate::api::{JobSink, JobSpec};
-use crate::config::{DesLatencyConfig, SchedulerConfig, TreeNodeKind, TreeTopology};
+use crate::config::{
+    Calibration, DesLatencyConfig, SchedulerConfig, TreeNodeKind, TreeShape, TreeTopology,
+};
 use crate::scheduler::metrics::{FillingRate, LevelFill, NodeStats};
-use crate::scheduler::protocol::{BufferAction, BufferState, ProducerAction, ProducerState};
+use crate::scheduler::protocol::{
+    resolve_shape, BufferAction, BufferState, ProducerAction, ProducerState,
+};
 use crate::tasklib::{
     Payload, SearchEngine, TaskId, TaskResult, TaskSink, TaskSpec, RC_CANCELLED, RC_TIMEOUT,
 };
@@ -142,6 +146,12 @@ pub struct DesReport {
     pub node_stats: Vec<NodeStats>,
     /// Per-level filling statistics (mean/min subtree rate).
     pub level_fill: Vec<LevelFill>,
+    /// Effective tree depth this run used (resolved from
+    /// [`crate::config::TreeShape`] — the auto controller's choice when
+    /// shaping adaptively).
+    pub depth: usize,
+    /// Effective interior fanout this run used.
+    pub fanout: usize,
 }
 
 impl DesReport {
@@ -467,19 +477,66 @@ impl<'a> Des<'a> {
     }
 }
 
+/// Duration-model samples the DES calibration takes from the engine's
+/// first staged tasks.
+const CAL_SAMPLE: usize = 32;
+
+/// The DES side of the [`crate::config::TreeShape::Auto`] calibration
+/// phase, exact and deterministic in virtual time: the latency model gives
+/// the unloaded producer round trip (two hops + one service), and the mean
+/// task duration is sampled from the duration model over the engine's
+/// first staged tasks. (Sampling advances stochastic duration models by up
+/// to [`CAL_SAMPLE`] draws; runs remain fully deterministic.)
+fn des_calibration(
+    lat: &DesLatencyConfig,
+    staged: &[TaskSpec],
+    durations: &mut dyn DurationModel,
+) -> Calibration {
+    let producer_rtt = 2.0 * lat.msg_latency + lat.producer_service;
+    let sample: Vec<f64> = staged.iter().take(CAL_SAMPLE).map(|t| durations.duration(t)).collect();
+    let mean_task_s = if sample.is_empty() {
+        Calibration::fallback().mean_task_s
+    } else {
+        sample.iter().sum::<f64>() / sample.len() as f64
+    };
+    Calibration { producer_rtt, mean_task_s }
+}
+
 /// Run `engine`'s workload through the simulated scheduler.
 pub fn run_des(
     cfg: &DesConfig,
-    engine: Box<dyn SearchEngine>,
-    durations: Box<dyn DurationModel>,
+    mut engine: Box<dyn SearchEngine>,
+    mut durations: Box<dyn DurationModel>,
 ) -> DesReport {
     let np = cfg.sched.np;
+    // Stage the engine's initial submissions up front: adaptive shaping
+    // samples their durations during its calibration phase.
+    let mut next_id = 0u64;
+    let mut staged: Vec<TaskSpec> = Vec::new();
+    let mut pending_cancels: Vec<TaskId> = Vec::new();
+    {
+        let mut sink = MintSink {
+            next_id: &mut next_id,
+            staged: &mut staged,
+            cancels: &mut pending_cancels,
+        };
+        engine.start(&mut sink);
+    }
     // Direct mode: a single leaf holding every consumer, with its message
     // handling charged to the producer's serial server.
-    let topo = if cfg.direct {
-        TreeTopology::build(np, np, 1, cfg.sched.fanout)
+    let (topo, depth, fanout) = if cfg.direct {
+        (TreeTopology::build(np, np, 1, cfg.sched.fanout), 1, cfg.sched.fanout)
     } else {
-        cfg.sched.tree()
+        // Only TreeShape::Auto pays for a measurement (sampling advances
+        // stochastic duration models); Manual and Calibrated resolve from
+        // the config alone.
+        let measured = if matches!(cfg.sched.shape, TreeShape::Auto) {
+            des_calibration(&cfg.lat, &staged, durations.as_mut())
+        } else {
+            Calibration::fallback()
+        };
+        let (depth, fanout) = resolve_shape(&cfg.sched, measured);
+        (TreeTopology::build(np, cfg.sched.consumers_per_buffer, depth, fanout), depth, fanout)
     };
     let n_nodes = topo.n_nodes();
 
@@ -493,9 +550,9 @@ pub fn run_des(
         prod_free: 0.0,
         node_free: vec![0.0; n_nodes],
         max_producer_lag: 0.0,
-        next_id: 0,
-        staged: Vec::new(),
-        pending_cancels: Vec::new(),
+        next_id,
+        staged,
+        pending_cancels,
         filling: FillingRate::new(),
         all_results: Vec::new(),
         events: 0,
@@ -505,15 +562,7 @@ pub fn run_des(
         voided: HashSet::new(),
     };
 
-    // Bootstrap: engine start, producer intake, buffer credit requests.
-    {
-        let mut sink = MintSink {
-            next_id: &mut des.next_id,
-            staged: &mut des.staged,
-            cancels: &mut des.pending_cancels,
-        };
-        des.engine.start(&mut sink);
-    }
+    // Bootstrap: producer intake, buffer credit requests.
     des.producer.set_engine_done(true);
     // Also covers the degenerate case of an engine submitting nothing.
     des.pump_engine(0.0);
@@ -625,6 +674,8 @@ pub fn run_des(
         max_producer_lag: des.max_producer_lag,
         node_stats,
         level_fill,
+        depth,
+        fanout,
     }
 }
 

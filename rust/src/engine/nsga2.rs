@@ -7,6 +7,22 @@
 //! All objectives are *minimized*.
 
 use crate::util::rng::Pcg64;
+use std::cmp::Ordering;
+
+/// Total order over objective values with **NaN ranked strictly worst**
+/// (minimization, so NaN compares greater than everything, including
+/// +∞). A failed simulator reporting NaN must lose every comparison —
+/// never panic one — so a single bad evaluation cannot crash or pollute
+/// the MOEA. Built on `f64::total_cmp`, with the NaN cases made
+/// sign-independent (`total_cmp` alone would rank a negative NaN *best*).
+fn nan_worst(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.total_cmp(&b),
+    }
+}
 
 /// One evaluated solution: decision vector + objective vector.
 #[derive(Clone, Debug, PartialEq)]
@@ -33,12 +49,19 @@ pub fn dominates(a: &[f64], b: &[f64]) -> bool {
 
 /// Fast non-dominated sort. Returns fronts as index lists; front 0 is the
 /// Pareto front. O(M·N²) like the original.
+///
+/// Individuals with any NaN objective are ranked **strictly worst**: they
+/// are excluded from domination comparisons (NaN is incomparable, so they
+/// would otherwise masquerade as non-dominated and land in front 0) and
+/// appended as one final front after every finite-objective front.
 pub fn fast_non_dominated_sort(objs: &[Vec<f64>]) -> Vec<Vec<usize>> {
     let n = objs.len();
+    let (clean, bad): (Vec<usize>, Vec<usize>) =
+        (0..n).partition(|&i| !objs[i].iter().any(|x| x.is_nan()));
     let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
     let mut count = vec![0usize; n]; // how many dominate i
-    for i in 0..n {
-        for j in (i + 1)..n {
+    for (ci, &i) in clean.iter().enumerate() {
+        for &j in &clean[ci + 1..] {
             if dominates(&objs[i], &objs[j]) {
                 dominated_by[i].push(j);
                 count[j] += 1;
@@ -49,7 +72,7 @@ pub fn fast_non_dominated_sort(objs: &[Vec<f64>]) -> Vec<Vec<usize>> {
         }
     }
     let mut fronts: Vec<Vec<usize>> = Vec::new();
-    let mut current: Vec<usize> = (0..n).filter(|&i| count[i] == 0).collect();
+    let mut current: Vec<usize> = clean.iter().copied().filter(|&i| count[i] == 0).collect();
     while !current.is_empty() {
         let mut next = Vec::new();
         for &i in &current {
@@ -62,6 +85,9 @@ pub fn fast_non_dominated_sort(objs: &[Vec<f64>]) -> Vec<Vec<usize>> {
         }
         fronts.push(std::mem::take(&mut current));
         current = next;
+    }
+    if !bad.is_empty() {
+        fronts.push(bad);
     }
     fronts
 }
@@ -77,15 +103,17 @@ pub fn crowding_distance(objs: &[Vec<f64>], front: &[usize]) -> Vec<f64> {
     }
     for obj in 0..m {
         let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by(|&a, &b| {
-            objs[front[a]][obj].partial_cmp(&objs[front[b]][obj]).unwrap()
-        });
+        // NaN objectives sort strictly worst instead of panicking the
+        // comparator — one bad simulator result must not kill the MOEA.
+        order.sort_by(|&a, &b| nan_worst(objs[front[a]][obj], objs[front[b]][obj]));
         let lo = objs[front[order[0]]][obj];
         let hi = objs[front[order[n - 1]]][obj];
         dist[order[0]] = f64::INFINITY;
         dist[order[n - 1]] = f64::INFINITY;
         let span = hi - lo;
-        if span <= 0.0 {
+        // A NaN span (a NaN objective at the worst end) skips the
+        // objective exactly like a degenerate zero-width one.
+        if span.is_nan() || span <= 0.0 {
             continue;
         }
         for k in 1..n - 1 {
@@ -111,10 +139,17 @@ pub fn environmental_selection(pop: Vec<Individual>, n: usize) -> Vec<Individual
         if keep.len() + front.len() <= n {
             keep.extend(front);
         } else {
-            // Partial front: take the most crowded-distant members.
+            // Partial front: take the most crowded-distant members,
+            // descending with NaN distances last — a NaN crowding value
+            // must be truncated first, never panic the comparator.
             let dist = crowding_distance(&objs, &front);
             let mut idx: Vec<usize> = (0..front.len()).collect();
-            idx.sort_by(|&a, &b| dist[b].partial_cmp(&dist[a]).unwrap());
+            idx.sort_by(|&a, &b| match (dist[a].is_nan(), dist[b].is_nan()) {
+                (true, true) => Ordering::Equal,
+                (true, false) => Ordering::Greater,
+                (false, true) => Ordering::Less,
+                (false, false) => dist[b].total_cmp(&dist[a]),
+            });
             for &k in idx.iter().take(n - keep.len()) {
                 keep.push(front[k]);
             }
@@ -391,10 +426,10 @@ mod tests {
                 // a unique min and max — both must be infinite.
                 for obj in 0..2 {
                     let mn = (0..n)
-                        .min_by(|&a, &b| objs[a][obj].partial_cmp(&objs[b][obj]).unwrap())
+                        .min_by(|&a, &b| objs[a][obj].total_cmp(&objs[b][obj]))
                         .unwrap();
                     let mx = (0..n)
-                        .max_by(|&a, &b| objs[a][obj].partial_cmp(&objs[b][obj]).unwrap())
+                        .max_by(|&a, &b| objs[a][obj].total_cmp(&objs[b][obj]))
                         .unwrap();
                     if !d[mn].is_infinite() || !d[mx].is_infinite() {
                         return false;
@@ -412,6 +447,80 @@ mod tests {
                     })
             },
         );
+    }
+
+    #[test]
+    fn nan_objectives_rank_strictly_worst_and_never_panic() {
+        // Regression: a single NaN objective from a failed simulator used
+        // to panic `partial_cmp().unwrap()`. Now NaN individuals form the
+        // last front and are truncated first.
+        let objs = vec![
+            vec![1.0, 1.0],
+            vec![f64::NAN, 0.5],
+            vec![0.5, 2.0],
+            vec![0.2, f64::NAN],
+        ];
+        let fronts = fast_non_dominated_sort(&objs);
+        let last = fronts.last().unwrap().clone();
+        assert_eq!(last, vec![1, 3], "NaN individuals form the final front");
+        assert!(fronts[0].iter().all(|&i| i == 0 || i == 2));
+        // Crowding over the NaN front must not panic.
+        let d = crowding_distance(&objs, &last);
+        assert_eq!(d.len(), 2);
+        // Environmental selection drops the NaN individuals first.
+        let pop = vec![
+            ind(&[1.0, 1.0]),
+            ind(&[f64::NAN, 0.5]),
+            ind(&[0.5, 2.0]),
+            ind(&[0.2, f64::NAN]),
+        ];
+        let kept = environmental_selection(pop, 2);
+        assert_eq!(kept.len(), 2);
+        assert!(
+            kept.iter().all(|i| i.objectives.iter().all(|x| x.is_finite())),
+            "{kept:?}"
+        );
+    }
+
+    #[test]
+    fn generation_with_nan_objectives_completes() {
+        // The full generation machinery — sort, crowding, environmental
+        // selection, tournament, offspring — survives a population where
+        // some members carry NaN objectives (and NaN-objective parents
+        // lose tournaments to any finite-objective member).
+        let mut pop: Vec<Individual> = (0..8)
+            .map(|i| Individual {
+                point: vec![i as f64 / 8.0, 0.5],
+                objectives: vec![i as f64, 8.0 - i as f64],
+            })
+            .collect();
+        pop.push(Individual { point: vec![0.1, 0.2], objectives: vec![f64::NAN, f64::NAN] });
+        pop.push(Individual { point: vec![0.3, 0.4], objectives: vec![0.5, f64::NAN] });
+        let archive = environmental_selection(pop, 8);
+        assert_eq!(archive.len(), 8);
+        let t = CrowdedTournament::new(&archive);
+        let mut rng = Pcg64::new(11);
+        let bounds = vec![(0.0, 1.0); 2];
+        for _ in 0..50 {
+            let (i, j) = (t.select(&mut rng), t.select(&mut rng));
+            let (c1, mut c2) =
+                sbx_crossover(&archive[i].point, &archive[j].point, &bounds, 15.0, &mut rng);
+            polynomial_mutation(&mut c2, &bounds, 0.1, 20.0, &mut rng);
+            assert!(c1.iter().chain(&c2).all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn nan_worst_total_order_is_sign_independent() {
+        use std::cmp::Ordering;
+        let neg_nan = f64::from_bits(f64::NAN.to_bits() | (1 << 63));
+        assert!(neg_nan.is_nan());
+        for bad in [f64::NAN, neg_nan] {
+            assert_eq!(nan_worst(bad, f64::INFINITY), Ordering::Greater);
+            assert_eq!(nan_worst(f64::NEG_INFINITY, bad), Ordering::Less);
+            assert_eq!(nan_worst(bad, bad), Ordering::Equal);
+        }
+        assert_eq!(nan_worst(1.0, 2.0), Ordering::Less);
     }
 
     #[test]

@@ -113,6 +113,11 @@ pub enum ResultsError {
     Unreadable(String),
     /// A token was not a floating-point number (1-based line number).
     BadToken { line: usize, token: String },
+    /// A token parsed as a float but is not finite (`nan`, `inf`, …).
+    /// `str::parse::<f64>` accepts these spellings, but a non-finite
+    /// objective silently poisons every engine downstream (NSGA-II
+    /// ranking, histograms, means), so they are rejected at the boundary.
+    NonFinite { line: usize, token: String },
 }
 
 impl std::fmt::Display for ResultsError {
@@ -121,6 +126,9 @@ impl std::fmt::Display for ResultsError {
             ResultsError::Unreadable(e) => write!(f, "{RESULTS_FILE} unreadable: {e}"),
             ResultsError::BadToken { line, token } => {
                 write!(f, "{RESULTS_FILE}:{line}: not a number: {token:?}")
+            }
+            ResultsError::NonFinite { line, token } => {
+                write!(f, "{RESULTS_FILE}:{line}: non-finite value: {token:?}")
             }
         }
     }
@@ -132,8 +140,10 @@ impl std::fmt::Display for ResultsError {
 /// which misindexes objectives — so malformed output is a task failure.
 pub const RC_BAD_RESULTS: i32 = 65;
 
-/// Strictly parse a `_results.txt` body: floats separated by whitespace,
-/// commas or newlines; `#`-comments ignored; anything else is an error.
+/// Strictly parse a `_results.txt` body: *finite* floats separated by
+/// whitespace, commas or newlines; `#`-comments ignored; anything else —
+/// including the `nan`/`inf`/`-inf` spellings `str::parse` would accept —
+/// is an error ([`RC_BAD_RESULTS`] at the executor).
 pub fn try_parse_results(body: &str) -> Result<Vec<f64>, ResultsError> {
     let mut out = Vec::new();
     for (idx, line) in body.lines().enumerate() {
@@ -143,7 +153,10 @@ pub fn try_parse_results(body: &str) -> Result<Vec<f64>, ResultsError> {
                 continue;
             }
             match tok.parse::<f64>() {
-                Ok(v) => out.push(v),
+                Ok(v) if v.is_finite() => out.push(v),
+                Ok(_) => {
+                    return Err(ResultsError::NonFinite { line: idx + 1, token: tok.to_string() })
+                }
                 Err(_) => {
                     return Err(ResultsError::BadToken { line: idx + 1, token: tok.to_string() })
                 }
@@ -288,6 +301,44 @@ mod tests {
         assert_eq!(try_parse_results(""), Ok(vec![]));
         assert_eq!(try_parse_results("\n\n"), Ok(vec![]));
         assert_eq!(try_parse_results("# nothing\n  # here\n"), Ok(vec![]));
+    }
+
+    #[test]
+    fn strict_parse_rejects_non_finite_values_with_location() {
+        // `str::parse::<f64>` accepts every spelling below; the contract
+        // does not — a NaN objective must become RC_BAD_RESULTS, not a
+        // value inside the engines.
+        for tok in ["nan", "NaN", "-nan", "inf", "Inf", "-inf", "infinity", "-Infinity"] {
+            match try_parse_results(&format!("1.0\n2.0 {tok}")) {
+                Err(ResultsError::NonFinite { line, token }) => {
+                    assert_eq!(line, 2, "{tok}");
+                    assert_eq!(token, tok);
+                }
+                other => panic!("{tok:?}: expected NonFinite, got {other:?}"),
+            }
+        }
+        // Large-but-finite still parses; overflow to infinity does not.
+        assert_eq!(try_parse_results("1e308"), Ok(vec![1e308]));
+        assert!(matches!(
+            try_parse_results("1e309"),
+            Err(ResultsError::NonFinite { .. })
+        ));
+    }
+
+    #[test]
+    fn executor_flags_nan_results_as_failure() {
+        // A simulator exiting 0 but writing `nan` fails gracefully with
+        // RC_BAD_RESULTS — the acceptance case for the NaN result path.
+        let root = std::env::temp_dir().join(format!("caravan_nan_{}", std::process::id()));
+        let exec = CommandExecutor::new(&root);
+        let task = TaskSpec::new(
+            0,
+            Payload::Command { cmdline: "sh -c 'echo 1.5 nan > _results.txt'".into() },
+        );
+        let (results, rc) = exec.run(&task, 0);
+        assert_eq!(rc, RC_BAD_RESULTS);
+        assert!(results.is_empty());
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

@@ -17,7 +17,7 @@
 use std::sync::Arc;
 
 use caravan::api::{JobSink, JobSpec};
-use caravan::config::{SchedPolicy, SchedulerConfig};
+use caravan::config::{SchedPolicy, SchedulerConfig, TreeShape};
 use caravan::des::{run_des, DesConfig, SleepDurations};
 use caravan::evac::{build_scenario, EvacEvaluator, RustSimBackend, ScenarioParams, SimBackend};
 use caravan::extproc::CommandExecutor;
@@ -68,9 +68,13 @@ fn usage() {
                       timeout slack within a priority band), aging or
                       aging:SECONDS (deadline order + priority aging, one
                       level per SECONDS waited; prevents starvation)
+      --depth D|auto  buffer-tree depth; 'auto' runs a short calibration
+                      (producer round trip + mean task duration) and lets
+                      the controller pick depth and fanout
+      --fanout F      interior fanout (upper bound under --depth auto)
 
   des               DES filling-rate experiment (Fig. 3 point)
-      --np N --tc 1|2|3 --tasks-per-proc N --depth D --fanout F
+      --np N --tc 1|2|3 --tasks-per-proc N --depth D|auto --fanout F
       --steal --steal-round-robin --direct --seed S
       --policy strict|deadline|aging[:SECONDS]
 
@@ -79,6 +83,24 @@ fn usage() {
 
   info              print artifact + scenario inventory"
     );
+}
+
+/// Apply `--depth D|auto` and `--fanout F` to a scheduler config.
+/// `--depth auto` turns on adaptive tree shaping: a short calibration
+/// phase measures the producer round trip and mean task duration, and the
+/// controller picks depth/fanout — the user never tunes the shape.
+fn apply_shape(args: &Args, cfg: &mut SchedulerConfig) {
+    cfg.fanout = args.get_usize("fanout", cfg.fanout);
+    match args.get_opt("depth") {
+        None => {}
+        Some("auto") => cfg.shape = TreeShape::Auto,
+        Some(d) => {
+            cfg.depth = d.parse().unwrap_or_else(|_| {
+                eprintln!("--depth: expected an integer or 'auto', got {d:?}");
+                std::process::exit(2);
+            })
+        }
+    }
 }
 
 fn parse_policy(args: &Args) -> SchedPolicy {
@@ -125,12 +147,13 @@ fn cmd_run(args: &Args) {
     if let Some(t) = args.get_opt("timeout") {
         spec = spec.timeout(t.parse().expect("--timeout: seconds"));
     }
-    let cfg = SchedulerConfig {
+    let mut cfg = SchedulerConfig {
         np,
         flush_interval_ms: 5,
         policy: parse_policy(args),
         ..Default::default()
     };
+    apply_shape(args, &mut cfg);
     let work = std::env::temp_dir().join(format!("caravan_run_{}", std::process::id()));
     let report = run_scheduler(
         &cfg,
@@ -140,10 +163,13 @@ fn cmd_run(args: &Args) {
     let failures = report.results.iter().filter(|r| !r.ok()).count();
     let retried: u64 = report.node_stats.iter().map(|s| s.retried).sum();
     println!(
-        "{} tasks, {} failures, {} retries, filling {:.1}%, wall {:.2}s",
+        "{} tasks, {} failures, {} retries, depth {} fanout {}{}, filling {:.1}%, wall {:.2}s",
         report.results.len(),
         failures,
         retried,
+        report.depth,
+        report.fanout,
+        if cfg.shape.is_auto() { " (auto)" } else { "" },
         report.rate(np) * 100.0,
         report.wall_secs
     );
@@ -159,8 +185,7 @@ fn cmd_des(args: &Args) {
     let n = args.get_usize("tasks-per-proc", 100) * np;
     let mut cfg = DesConfig::new(np);
     cfg.direct = args.has_flag("direct");
-    cfg.sched.depth = args.get_usize("depth", 1);
-    cfg.sched.fanout = args.get_usize("fanout", 8);
+    apply_shape(args, &mut cfg.sched);
     cfg.sched.steal = args.has_flag("steal") || args.has_flag("steal-round-robin");
     if args.has_flag("steal-round-robin") {
         cfg.sched.steal_policy = caravan::config::StealPolicy::RoundRobin;
@@ -172,8 +197,13 @@ fn cmd_des(args: &Args) {
         Box::new(TestCaseEngine::new(case, n, args.get_u64("seed", 7))),
         Box::new(SleepDurations),
     );
+    // Direct mode pins the topology (single-master ablation), so auto
+    // shaping never runs there — don't claim it did.
+    let shape_note = if cfg.sched.shape.is_auto() && !cfg.direct { " (auto)" } else { "" };
     println!(
-        "{case:?} np={np} n={n}: filling {:.2}%, makespan {:.0}s (virtual), {} events in {:.2}s wall",
+        "{case:?} np={np} n={n} depth={} fanout={}{shape_note}: filling {:.2}%, makespan {:.0}s (virtual), {} events in {:.2}s wall",
+        r.depth,
+        r.fanout,
         r.rate(np) * 100.0,
         r.makespan,
         r.events_processed,

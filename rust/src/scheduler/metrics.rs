@@ -12,6 +12,38 @@
 
 use crate::tasklib::TaskResult;
 
+/// Upper edges (seconds) of the queue-wait histogram buckets; the last
+/// bin is open-ended. Log-spaced so sub-millisecond queue hops and
+/// kilosecond starvation land in distinct bins, in both virtual (DES) and
+/// scaled wall time (threaded runtime).
+pub const WAIT_BUCKET_EDGES: [f64; 7] = [1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0, 1000.0];
+
+/// Number of wait-histogram bins: one per edge plus the open tail.
+pub const N_WAIT_BINS: usize = WAIT_BUCKET_EDGES.len() + 1;
+
+/// Bin index for a queue wait of `wait` seconds.
+pub fn wait_bin(wait: f64) -> usize {
+    WAIT_BUCKET_EDGES.iter().position(|&e| wait <= e).unwrap_or(WAIT_BUCKET_EDGES.len())
+}
+
+/// Queue-wait histogram of one priority band at one node: how long tasks
+/// of that band sat in the local queue before being popped for dispatch.
+/// Counts conserve pops — Σ counts over all bands equals the node's
+/// `popped` counter — so the histograms are an exact decomposition of the
+/// queue traffic, not a sample.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BandWaitHist {
+    /// Base priority band ([`crate::tasklib::TaskSpec::priority`]).
+    pub band: u8,
+    pub counts: [u64; N_WAIT_BINS],
+}
+
+impl BandWaitHist {
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
 /// Counter snapshot of one buffer-tree node after a run (threaded runtime
 /// or DES). `node` indexes [`crate::config::TreeTopology::nodes`].
 #[derive(Clone, Debug)]
@@ -40,6 +72,19 @@ pub struct NodeStats {
     pub cancelled_killed: u64,
     /// Failed attempts transparently re-queued at this node (leafs only).
     pub retried: u64,
+    /// Tasks popped from this node's local queue for dispatch — the unit
+    /// the wait histograms count.
+    pub popped: u64,
+    /// Per-band queue-wait histograms, ascending band order. Σ of all
+    /// counts equals `popped`.
+    pub wait_hist: Vec<BandWaitHist>,
+    /// Completed parent-request→first-grant round trips observed here —
+    /// the per-node producer-lag measurement driving adaptive shaping.
+    pub req_lag_n: u64,
+    /// Mean request→grant lag in (virtual) seconds; 0 when `req_lag_n` is 0.
+    pub req_lag_mean: f64,
+    /// Worst request→grant lag observed.
+    pub req_lag_max: f64,
     /// Whether the shutdown broadcast reached this node.
     pub saw_shutdown: bool,
 }
@@ -192,7 +237,7 @@ impl FillingRate {
         }
         let mut violations = 0;
         for (_, mut ivs) in by_consumer {
-            ivs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            ivs.sort_by(|a, b| a.0.total_cmp(&b.0));
             for w in ivs.windows(2) {
                 // Strict overlap; touching endpoints are fine.
                 if w[1].0 < w[0].1 - 1e-9 {

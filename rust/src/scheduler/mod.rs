@@ -9,6 +9,6 @@ pub mod metrics;
 pub mod protocol;
 pub mod threads;
 
-pub use metrics::{FillingRate, LevelFill, NodeStats};
-pub use protocol::PrioQueue;
+pub use metrics::{BandWaitHist, FillingRate, LevelFill, NodeStats, N_WAIT_BINS, WAIT_BUCKET_EDGES};
+pub use protocol::{choose_shape, resolve_shape, PrioQueue, MAX_AUTO_DEPTH};
 pub use threads::{run_scheduler, CancelSet, ExecOutcome, Executor, Report, SleepExecutor};

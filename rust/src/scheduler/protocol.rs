@@ -59,8 +59,10 @@
 //!   target is kept as a tombstone and forwarded with steal grants, so a
 //!   cancel racing a sideways task move is applied when the task lands.
 
-use super::metrics::NodeStats;
-use crate::config::{SchedPolicy, SchedulerConfig, StealPolicy, TreeNodeKind, TreeTopology};
+use super::metrics::{wait_bin, BandWaitHist, NodeStats, N_WAIT_BINS};
+use crate::config::{
+    Calibration, SchedPolicy, SchedulerConfig, StealPolicy, TreeNodeKind, TreeTopology,
+};
 use crate::tasklib::{TaskId, TaskResult, TaskSpec, RC_CANCELLED};
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
@@ -108,6 +110,13 @@ pub struct PrioQueue {
     len: usize,
     policy: SchedPolicy,
     now: f64,
+    /// Tasks popped for dispatch (front pops only — steal surrenders and
+    /// cancellation removals are not dispatches).
+    popped: u64,
+    /// Per-band queue-wait histogram: every front pop records
+    /// `now − enqueued_t` for the popped task's base priority band, so
+    /// Σ counts == `popped` by construction.
+    wait_hist: BTreeMap<u8, [u64; N_WAIT_BINS]>,
 }
 
 impl Default for PrioQueue {
@@ -118,6 +127,8 @@ impl Default for PrioQueue {
             len: 0,
             policy: SchedPolicy::Strict,
             now: 0.0,
+            popped: 0,
+            wait_hist: BTreeMap::new(),
         }
     }
 }
@@ -209,7 +220,23 @@ impl PrioQueue {
             self.bands.remove(&band);
         }
         self.len -= 1;
+        self.popped += 1;
+        let wait = (self.now - task.enqueued_t.unwrap_or(self.now)).max(0.0);
+        self.wait_hist.entry(task.priority).or_insert([0; N_WAIT_BINS])[wait_bin(wait)] += 1;
         Some(task)
+    }
+
+    /// Tasks popped for dispatch so far (the wait histograms' total).
+    pub fn popped(&self) -> u64 {
+        self.popped
+    }
+
+    /// Per-band queue-wait histograms, ascending band order.
+    pub fn wait_hist(&self) -> Vec<BandWaitHist> {
+        self.wait_hist
+            .iter()
+            .map(|(&band, &counts)| BandWaitHist { band, counts })
+            .collect()
     }
 
     /// Next task per the policy (see [`PrioQueue::pop_band`]).
@@ -272,6 +299,97 @@ impl PrioQueue {
             self.len -= 1;
         }
         task
+    }
+}
+
+/// Deepest tree the auto-shaping controller will pick. Each level adds a
+/// message hop of latency to every task, so the controller deepens only
+/// while it predicts a producer benefit.
+pub const MAX_AUTO_DEPTH: usize = 3;
+
+/// Predicted producer busy-fraction the controller shapes for: the
+/// shallowest tree whose predicted utilization clears this target wins.
+const TARGET_PRODUCER_UTIL: f64 = 0.5;
+
+/// Smallest fanout `f ≥ 2` (capped at `max_fanout`) such that `f^depth ≥
+/// nb`: with `nb` leaves spread over `depth` buffer levels, this bounds
+/// *every* fan-in — including the producer's own, since the root count
+/// `⌈nb / f^(depth−1)⌉` is then at most `f`.
+fn balanced_fanout(nb: usize, depth: usize, max_fanout: usize) -> usize {
+    let max_fanout = max_fanout.max(2);
+    (2..max_fanout)
+        .find(|f| f.saturating_pow(depth as u32) >= nb)
+        .unwrap_or(max_fanout)
+}
+
+/// Producer direct children for `nb` leaves at the given depth/fanout.
+fn root_count(nb: usize, depth: usize, fanout: usize) -> usize {
+    nb.div_ceil(fanout.max(1).saturating_pow(depth as u32 - 1)).max(1)
+}
+
+/// The adaptive tree-shaping controller: pick `(depth, fanout)` for the
+/// configured scale from a [`Calibration`] measurement. Pure and
+/// deterministic — both runtimes call this one function, so the same
+/// calibration inputs always select the same shape (and the DES choice is
+/// deterministic in virtual time).
+///
+/// Cost model, from the protocol's own flow control:
+///
+/// * a leaf with `C` consumers drains `C / mean_task_s` tasks/s; result
+///   flushes reach the producer batched by `flush_every` at *every* depth
+///   (interior nodes re-batch to the same size), so the result-message
+///   rate `np / (mean_task_s · flush_every)` is depth-independent;
+/// * each direct child of the producer refills its credit once per
+///   `(credit_factor − 1) × mean_task_s` window (one request + one grant
+///   message), so the request traffic is `2 · roots / window` — this is
+///   the term a deeper tree shrinks, by cutting `roots`;
+/// * the per-message producer cost is approximated as half the measured
+///   request→grant round trip (the other half being the two wire hops).
+///
+/// The controller walks depth 1 → [`MAX_AUTO_DEPTH`] with the balanced
+/// fanout for each depth and returns the first shape whose predicted
+/// producer utilization is at most the target — or the deepest candidate
+/// when the producer lag dominates so hard that no shape clears it
+/// (utilization still strictly improves with every level until the root
+/// count hits 1).
+pub fn choose_shape(cfg: &SchedulerConfig, cal: &Calibration) -> (usize, usize) {
+    let nb = cfg.num_buffers();
+    if nb <= 1 {
+        // A single leaf: no layer to restructure.
+        return (1, cfg.fanout.max(1));
+    }
+    let tau = cal.mean_task_s.max(1e-9);
+    let per_msg_cost = (cal.producer_rtt / 2.0).max(0.0);
+    let refill_window = (cfg.credit_factor.max(2) - 1) as f64 * tau;
+    let result_rate = cfg.np as f64 / (tau * cfg.flush_every.max(1) as f64);
+    let mut chosen = (1, cfg.fanout.max(1));
+    for depth in 1..=MAX_AUTO_DEPTH {
+        let fanout = if depth == 1 {
+            cfg.fanout.max(1)
+        } else {
+            balanced_fanout(nb, depth, cfg.fanout)
+        };
+        let roots = root_count(nb, depth, fanout);
+        let request_rate = 2.0 * roots as f64 / refill_window;
+        let util = per_msg_cost * (result_rate + request_rate);
+        chosen = (depth, fanout);
+        if util <= TARGET_PRODUCER_UTIL || roots == 1 {
+            break;
+        }
+    }
+    chosen
+}
+
+/// Resolve a config's effective `(depth, fanout)`: manual knobs pass
+/// through; auto modes consult [`choose_shape`] with the given
+/// calibration (the runtime's own measurement for [`TreeShape::Auto`],
+/// the preset for [`TreeShape::Calibrated`]).
+pub fn resolve_shape(cfg: &SchedulerConfig, measured: Calibration) -> (usize, usize) {
+    use crate::config::TreeShape;
+    match cfg.shape {
+        TreeShape::Manual => (cfg.depth, cfg.fanout),
+        TreeShape::Auto => choose_shape(cfg, &measured),
+        TreeShape::Calibrated(cal) => choose_shape(cfg, &cal),
     }
 }
 
@@ -578,6 +696,16 @@ pub struct BufferState {
     tombstones: BTreeSet<TaskId>,
     /// Insertion order of `tombstones`, for capped eviction.
     tombstone_order: VecDeque<TaskId>,
+    /// This node's clock (mirrors the queue's; see [`BufferState::set_now`]).
+    now: f64,
+    /// When the oldest unanswered upstream request was sent — the start of
+    /// the request→grant round trip being measured.
+    request_sent_t: Option<f64>,
+    /// Producer-lag accumulators: completed request→first-grant round
+    /// trips (count / total / worst), per node, in (virtual) seconds.
+    req_lag_n: u64,
+    req_lag_sum: f64,
+    req_lag_max: f64,
     pub msgs_in: u64,
     pub msgs_out: u64,
 }
@@ -620,6 +748,11 @@ impl BufferState {
             retried: 0,
             tombstones: BTreeSet::new(),
             tombstone_order: VecDeque::new(),
+            now: 0.0,
+            request_sent_t: None,
+            req_lag_n: 0,
+            req_lag_sum: 0.0,
+            req_lag_max: 0.0,
             msgs_in: 0,
             msgs_out: 0,
         }
@@ -664,6 +797,11 @@ impl BufferState {
             retried: 0,
             tombstones: BTreeSet::new(),
             tombstone_order: VecDeque::new(),
+            now: 0.0,
+            request_sent_t: None,
+            req_lag_n: 0,
+            req_lag_sum: 0.0,
+            req_lag_max: 0.0,
             msgs_in: 0,
             msgs_out: 0,
         }
@@ -676,8 +814,10 @@ impl BufferState {
     }
 
     /// Advance this node's clock (forwarded to the local queue: enqueue
-    /// stamps, deadline slack and aging are all evaluated against it).
+    /// stamps, deadline slack, aging, and the request→grant lag
+    /// measurement are all evaluated against it).
     pub fn set_now(&mut self, now: f64) {
+        self.now = now;
         self.queue.set_now(now);
     }
 
@@ -790,6 +930,15 @@ impl BufferState {
             cancelled_dropped: self.cancelled_dropped,
             cancelled_killed: self.cancelled_killed,
             retried: self.retried,
+            popped: self.queue.popped(),
+            wait_hist: self.queue.wait_hist(),
+            req_lag_n: self.req_lag_n,
+            req_lag_mean: if self.req_lag_n == 0 {
+                0.0
+            } else {
+                self.req_lag_sum / self.req_lag_n as f64
+            },
+            req_lag_max: self.req_lag_max,
             saw_shutdown: self.shutting_down,
         }
     }
@@ -803,6 +952,15 @@ impl BufferState {
     /// Tasks arrived from the parent.
     pub fn on_assign(&mut self, tasks: Vec<TaskSpec>) -> Vec<BufferAction> {
         self.msgs_in += 1;
+        // Close the request→grant round trip: the oldest unanswered
+        // upstream request is now answered. This is the per-node producer
+        // (parent) lag that drives adaptive tree shaping.
+        if let Some(t0) = self.request_sent_t.take() {
+            let lag = (self.now - t0).max(0.0);
+            self.req_lag_n += 1;
+            self.req_lag_sum += lag;
+            self.req_lag_max = self.req_lag_max.max(lag);
+        }
         self.outstanding_request = self.outstanding_request.saturating_sub(tasks.len().max(1));
         self.accept(tasks);
         let mut out = self.deliver();
@@ -1159,6 +1317,10 @@ impl BufferState {
         } else {
             self.outstanding_request += amount;
             self.msgs_out += 1;
+            // Stamp the start of the (oldest outstanding) round trip.
+            if self.request_sent_t.is_none() {
+                self.request_sent_t = Some(self.now);
+            }
             vec![BufferAction::RequestTasks { amount }]
         }
     }
@@ -2021,5 +2183,156 @@ mod tests {
                 ran.len() as u64 == n_tasks
             },
         );
+    }
+
+    fn cal(rtt: f64, task_s: f64) -> Calibration {
+        Calibration { producer_rtt: rtt, mean_task_s: task_s }
+    }
+
+    fn shape_cfg(np: usize, cpb: usize) -> SchedulerConfig {
+        SchedulerConfig { np, consumers_per_buffer: cpb, ..Default::default() }
+    }
+
+    #[test]
+    fn choose_shape_stays_flat_when_producer_is_fast() {
+        // Default-latency regime: microsecond round trips against
+        // second-scale tasks — the paper's flat layout is optimal and
+        // auto keeps it, at the K-computer ceiling and at mid scale.
+        let cfg = shape_cfg(100_000, 384);
+        assert_eq!(choose_shape(&cfg, &cal(1e-4, 5.0)).0, 1);
+        let cfg = shape_cfg(4096, 64);
+        assert_eq!(choose_shape(&cfg, &cal(1e-4, 0.5)).0, 1);
+    }
+
+    #[test]
+    fn choose_shape_deepens_when_producer_lag_dominates() {
+        // Millisecond producer round trips against sub-second tasks: the
+        // flat layout's request traffic saturates rank 0, so the
+        // controller must insert relay levels.
+        let cfg = shape_cfg(4096, 64);
+        let (depth, fanout) = choose_shape(&cfg, &cal(5e-3, 0.5));
+        assert!(depth >= 2, "depth={depth}");
+        // The balanced fanout bounds the producer's own fan-in too.
+        assert!(root_count(cfg.num_buffers(), depth, fanout) <= fanout);
+    }
+
+    #[test]
+    fn choose_shape_single_leaf_is_always_flat() {
+        let cfg = shape_cfg(64, 384);
+        assert_eq!(choose_shape(&cfg, &cal(10.0, 0.01)).0, 1);
+    }
+
+    #[test]
+    fn choose_shape_depth_is_monotone_in_producer_lag() {
+        // Utilization is linear in the per-message cost, so a slower
+        // producer can never yield a *shallower* tree.
+        use crate::testutil::{check, pair, u64_in, usize_in};
+        check(
+            "auto depth is monotone in producer rtt",
+            pair(pair(usize_in(64..5000), usize_in(1..65)), u64_in(1..1000)),
+            |&((np, cpb), rtt_us)| {
+                let cfg = shape_cfg(np, cpb);
+                let c = cal(rtt_us as f64 * 1e-5, 0.5);
+                let slower = cal(rtt_us as f64 * 1e-5 * 4.0, 0.5);
+                choose_shape(&cfg, &c).0 <= choose_shape(&cfg, &slower).0
+            },
+        );
+    }
+
+    #[test]
+    fn resolve_shape_manual_passes_through_and_calibrated_chooses() {
+        use crate::config::TreeShape;
+        let mut cfg = shape_cfg(4096, 64);
+        cfg.depth = 2;
+        cfg.fanout = 4;
+        assert_eq!(resolve_shape(&cfg, Calibration::fallback()), (2, 4));
+        cfg.shape = TreeShape::Calibrated(cal(1e-4, 5.0));
+        // The preset wins over whatever the runtime measured.
+        assert_eq!(resolve_shape(&cfg, cal(10.0, 0.01)).0, 1);
+    }
+
+    #[test]
+    fn request_grant_lag_is_measured_per_round_trip() {
+        let mut b = BufferState::new(2, 2, 100);
+        b.set_now(1.0);
+        b.on_start(); // request at t = 1
+        b.set_now(1.5);
+        b.on_assign(vec![task(0), task(1), task(2), task(3)]); // grant at t = 1.5
+        let s = b.stats(0, 1);
+        assert_eq!(s.req_lag_n, 1);
+        assert!((s.req_lag_mean - 0.5).abs() < 1e-12, "{}", s.req_lag_mean);
+        assert!((s.req_lag_max - 0.5).abs() < 1e-12);
+        // Dispatch both consumers, drain: the refill request opens a new
+        // round trip; a second assign closes it with a larger lag.
+        b.set_now(2.0);
+        b.on_done(0, result(0, 0));
+        b.on_done(1, result(1, 1));
+        b.set_now(4.0);
+        b.on_assign(vec![task(4)]);
+        let s = b.stats(0, 1);
+        assert_eq!(s.req_lag_n, 2);
+        assert!((s.req_lag_max - 2.0).abs() < 1e-12, "{}", s.req_lag_max);
+        assert!((s.req_lag_mean - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wait_hist_counts_conserve_pops_across_policies() {
+        // The satellite property at queue level: under every SchedPolicy,
+        // front pops are exactly what the per-band histograms count —
+        // steal surrenders (take_back) and cancellations (remove) are not.
+        use crate::testutil::{check, pair, u64_in, usize_in, vec_of};
+        check(
+            "Σ wait-hist counts == pops under every policy",
+            pair(vec_of(pair(usize_in(0..6), usize_in(0..4)), 1..60), u64_in(0..3)),
+            |case: &(Vec<(usize, usize)>, u64)| {
+                let (ops, policy_idx) = case;
+                let policy = [
+                    SchedPolicy::Strict,
+                    SchedPolicy::Deadline,
+                    SchedPolicy::Aging { step: 2.0 },
+                ][*policy_idx as usize];
+                let mut q = PrioQueue::with_policy(policy);
+                let mut pops = 0u64;
+                for (i, &(op, prio)) in ops.iter().enumerate() {
+                    q.set_now(i as f64 * 0.7);
+                    match op {
+                        // Weight pushes so queues actually fill.
+                        0 | 1 | 2 => q.push(prio_task(i as u64, prio as u8)),
+                        3 => pops += u64::from(q.pop().is_some()),
+                        4 => pops += q.pop_n(2).len() as u64,
+                        _ => {
+                            // Not dispatches: must not inflate the hist.
+                            q.take_back(1);
+                            q.remove(i as u64 / 2);
+                        }
+                    }
+                }
+                pops += q.pop_n(usize::MAX >> 1).len() as u64;
+                let hist_total: u64 =
+                    q.wait_hist().iter().map(|h| h.total()).sum();
+                q.popped() == pops && hist_total == pops
+            },
+        );
+    }
+
+    #[test]
+    fn wait_hist_bins_by_wait_and_band() {
+        let mut q = PrioQueue::new();
+        q.set_now(0.0);
+        q.push(prio_task(0, 3)); // will wait 5 s → the (1, 10] bin
+        q.push(prio_task(1, 0)); // will wait 5 s too, other band
+        q.set_now(5.0);
+        q.push(prio_task(2, 0)); // popped immediately → first bin
+        assert_eq!(q.pop().unwrap().id, 0);
+        q.pop();
+        q.pop();
+        let hist = q.wait_hist();
+        assert_eq!(hist.len(), 2);
+        let b0 = hist.iter().find(|h| h.band == 0).unwrap();
+        let b3 = hist.iter().find(|h| h.band == 3).unwrap();
+        assert_eq!(b3.counts[wait_bin(5.0)], 1);
+        assert_eq!(b0.counts[wait_bin(5.0)], 1);
+        assert_eq!(b0.counts[wait_bin(0.0)], 1);
+        assert_eq!(b0.total() + b3.total(), 3);
     }
 }

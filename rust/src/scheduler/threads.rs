@@ -30,9 +30,9 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use super::metrics::{FillingRate, LevelFill, NodeStats};
-use super::protocol::{BufferAction, BufferState, ProducerAction, ProducerState};
+use super::protocol::{resolve_shape, BufferAction, BufferState, ProducerAction, ProducerState};
 use crate::api::{JobSink, JobSpec};
-use crate::config::{SchedulerConfig, TreeNodeKind};
+use crate::config::{Calibration, SchedulerConfig, TreeNodeKind, TreeShape, TreeTopology};
 use crate::tasklib::{
     Payload, SearchEngine, TaskId, TaskResult, TaskSink, TaskSpec, RC_CANCELLED, RC_TIMEOUT,
 };
@@ -195,6 +195,11 @@ pub struct Report {
     /// Per-level filling statistics (mean/min subtree rate), mirroring
     /// the DES report so both runtimes expose the same observability.
     pub level_fill: Vec<LevelFill>,
+    /// Effective tree depth this run used (the auto controller's choice
+    /// under [`TreeShape::Auto`] / [`TreeShape::Calibrated`]).
+    pub depth: usize,
+    /// Effective interior fanout this run used.
+    pub fanout: usize,
 }
 
 impl Report {
@@ -245,7 +250,37 @@ pub fn run_scheduler(
     executor: Arc<dyn Executor>,
 ) -> Report {
     let np = cfg.np;
-    let topo = cfg.tree();
+    let t0 = Instant::now();
+    // Queue clocks run in *virtual* seconds (wall seconds ÷ time_scale),
+    // the unit `timeout_s`, deadlines and aging steps are expressed in —
+    // so policy ordering matches the DES exactly under time compression.
+    let clock_scale = 1.0 / cfg.time_scale.max(1e-9);
+
+    // Engine intake happens before the tree is built: under
+    // [`TreeShape::Auto`] the calibration phase below executes a few of
+    // the staged tasks inline to measure real durations.
+    let mut sink = ProducerSink { next_id: 0, staged: Vec::new(), cancels: Vec::new() };
+    let mut filling = FillingRate::new();
+    let mut all_results: Vec<TaskResult> = Vec::new();
+    engine.start(&mut sink);
+
+    // Mirror of the DES resolution path: only TreeShape::Auto pays for a
+    // measurement; everything funnels through the one shared resolver.
+    let measured = match cfg.shape {
+        TreeShape::Auto => calibrate_threaded(
+            np,
+            &mut sink,
+            &mut *engine,
+            &executor,
+            t0,
+            clock_scale,
+            &mut filling,
+            &mut all_results,
+        ),
+        _ => Calibration::fallback(),
+    };
+    let (depth, fanout) = resolve_shape(cfg, measured);
+    let topo = TreeTopology::build(np, cfg.consumers_per_buffer, depth, fanout);
     let n_nodes = topo.n_nodes();
     crate::debugln!(
         "scheduler: np={} nodes={} depth={} roots={:?}",
@@ -254,12 +289,6 @@ pub fn run_scheduler(
         topo.depth,
         topo.roots
     );
-
-    let t0 = Instant::now();
-    // Queue clocks run in *virtual* seconds (wall seconds ÷ time_scale),
-    // the unit `timeout_s`, deadlines and aging steps are expressed in —
-    // so policy ordering matches the DES exactly under time compression.
-    let clock_scale = 1.0 / cfg.time_scale.max(1e-9);
 
     // One channel per tree node, created up front so siblings/children can
     // be wired regardless of spawn order.
@@ -346,12 +375,8 @@ pub fn run_scheduler(
 
     // --- producer loop (runs on the caller thread) ---
     let mut state = ProducerState::new(topo.roots.len()).with_policy(cfg.policy);
-    let mut sink = ProducerSink { next_id: 0, staged: Vec::new(), cancels: Vec::new() };
-    let mut filling = FillingRate::new();
-    let mut all_results: Vec<TaskResult> = Vec::new();
 
     state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
-    engine.start(&mut sink);
     drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
     let done = engine.poll(&mut sink);
     drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
@@ -432,7 +457,149 @@ pub fn run_scheduler(
         producer_msgs_out: state.msgs_out,
         node_stats,
         level_fill,
+        depth,
+        fanout,
     }
+}
+
+/// How many staged tasks the threaded calibration phase executes inline
+/// to measure real durations, and how many channel echoes time the
+/// message round trip. Both are kept small: calibration must stay "short"
+/// even for minute-scale simulators.
+const CAL_TASKS: usize = 2;
+const CAL_PROBE_ROUNDS: u32 = 64;
+
+/// The threaded side of the [`TreeShape::Auto`] calibration phase.
+///
+/// * **Producer round trip** — timed over [`CAL_PROBE_ROUNDS`] echoes
+///   through a real channel pair to a peer thread: the same hop a root
+///   node's request/grant takes, minus the protocol work.
+/// * **Mean task duration** — up to [`CAL_TASKS`] of the engine's staged
+///   tasks are executed as probes, **concurrently** on their own threads,
+///   so the calibration stall is one task duration, not [`CAL_TASKS`].
+///   These are *real* completions: their results feed the engine and the
+///   final report exactly as scheduled executions would. A failed attempt
+///   with retry budget left is re-staged (attempt bumped) for the
+///   scheduler to retry transparently, so job semantics are preserved;
+///   only *successful* attempts contribute duration samples — a
+///   crash-fast simulator must not convince the controller that tasks are
+///   millisecond-scale.
+///
+/// Both measurements are converted to virtual seconds (`÷ time_scale`),
+/// the unit the shared controller — and the DES — work in, so identical
+/// calibration inputs yield identical shapes on both runtimes.
+#[allow(clippy::too_many_arguments)]
+fn calibrate_threaded(
+    np: usize,
+    sink: &mut ProducerSink,
+    engine: &mut dyn SearchEngine,
+    executor: &Arc<dyn Executor>,
+    t0: Instant,
+    clock_scale: f64,
+    filling: &mut FillingRate,
+    all_results: &mut Vec<TaskResult>,
+) -> Calibration {
+    // Round-trip probe: echo thread + channel pair.
+    let (req_tx, req_rx) = channel::<u32>();
+    let (rep_tx, rep_rx) = channel::<u32>();
+    let echo = thread::Builder::new()
+        .name("calibration-echo".into())
+        .stack_size(64 * 1024)
+        .spawn(move || {
+            while let Ok(x) = req_rx.recv() {
+                if rep_tx.send(x).is_err() {
+                    break;
+                }
+            }
+        })
+        .expect("spawn calibration echo");
+    let probe_t0 = Instant::now();
+    let mut rounds = 0u32;
+    for i in 0..CAL_PROBE_ROUNDS {
+        if req_tx.send(i).is_ok() && rep_rx.recv().is_ok() {
+            rounds += 1;
+        }
+    }
+    let rtt_wall = probe_t0.elapsed().as_secs_f64() / rounds.max(1) as f64;
+    drop(req_tx);
+    let _ = echo.join();
+
+    // Duration probe: run the first staged tasks concurrently on probe
+    // threads — skipping any task the engine already cancelled during
+    // `start()`, so a cancel issued before scheduling is honoured exactly
+    // as in Manual mode (the cancelled task stays staged and is dropped
+    // by the normal producer cancel path).
+    let cancelled: HashSet<TaskId> = sink.cancels.iter().copied().collect();
+    let mut sample: Vec<f64> = Vec::new();
+    let mut probes: Vec<TaskSpec> = Vec::new();
+    let mut i = 0;
+    // One distinct consumer rank per concurrent probe (a consumer runs one
+    // task at a time — the overlap invariant holds for probes too).
+    let n_probes = CAL_TASKS.min(np.max(1));
+    while probes.len() < n_probes && i < sink.staged.len() {
+        if cancelled.contains(&sink.staged[i].id) {
+            i += 1;
+        } else {
+            probes.push(sink.staged.remove(i));
+        }
+    }
+    let handles: Vec<_> = probes
+        .into_iter()
+        .enumerate()
+        .map(|(rank, task)| {
+            let exec = Arc::clone(executor);
+            thread::Builder::new()
+                .name("calibration-probe".into())
+                .spawn(move || {
+                    let begin = t0.elapsed().as_secs_f64();
+                    let out = exec.run_cancellable(&task, rank, &CancelSet::new());
+                    let finish = t0.elapsed().as_secs_f64();
+                    (rank, task, out, begin, finish)
+                })
+                .expect("spawn calibration probe")
+        })
+        .collect();
+    for handle in handles {
+        let (rank, task, out, begin, finish) =
+            handle.join().expect("calibration probe panicked");
+        if out.rc != 0 && task.attempt < task.max_retries {
+            let mut spec = task;
+            spec.attempt += 1;
+            sink.staged.insert(0, spec);
+            continue;
+        }
+        if out.rc == 0 {
+            sample.push((finish - begin) * clock_scale);
+        }
+        let result = TaskResult {
+            id: task.id,
+            consumer: rank,
+            results: out.results,
+            begin,
+            finish,
+            rc: out.rc,
+            attempt: task.attempt,
+            timed_out: out.timed_out,
+        };
+        if !result.cancelled() {
+            filling.record(&result);
+        }
+        engine.on_done(&result, sink);
+        all_results.push(result);
+    }
+    let mean_task_s = if sample.is_empty() {
+        Calibration::fallback().mean_task_s
+    } else {
+        sample.iter().sum::<f64>() / sample.len() as f64
+    };
+    let cal =
+        Calibration { producer_rtt: (rtt_wall * clock_scale).max(1e-9), mean_task_s };
+    crate::debugln!(
+        "calibration: rtt={:.3e}s mean_task={:.3}s (virtual)",
+        cal.producer_rtt,
+        cal.mean_task_s
+    );
+    cal
 }
 
 /// Flush everything the engine staged — submissions *and* cancellations —

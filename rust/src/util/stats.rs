@@ -50,11 +50,13 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
 }
 
 /// Quantile with linear interpolation (type-7, the numpy default).
-/// `q` in [0,1]; input need not be sorted.
+/// `q` in [0,1]; input need not be sorted. NaN values sort to the top
+/// (`total_cmp` order) instead of panicking the sort, so only the upper
+/// quantiles of NaN-contaminated data are themselves NaN.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "quantile of empty slice");
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -188,6 +190,24 @@ mod tests {
         assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-12);
         assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_tolerates_nan_without_panicking() {
+        // Regression: the sort comparator used to be
+        // `partial_cmp().unwrap()`, so one NaN measurement panicked any
+        // bench summary. NaN now sorts to the top; lower quantiles of the
+        // finite mass stay exact.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((quantile(&xs, 1.0 / 3.0) - 2.0).abs() < 1e-12);
+        assert!(quantile(&xs, 1.0).is_nan(), "NaN occupies the maximum");
+        let all_nan = [f64::NAN, f64::NAN];
+        assert!(quantile(&all_nan, 0.5).is_nan());
+        // Summary over NaN-contaminated data must not panic either.
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 4);
+        assert!((s.min - 1.0).abs() < 1e-12);
     }
 
     #[test]

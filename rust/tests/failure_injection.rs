@@ -116,6 +116,47 @@ fn moea_survives_failed_evaluations() {
 }
 
 #[test]
+fn nsga2_population_with_nan_objectives_completes_generations() {
+    // Regression for the NaN-panic class: a simulator that returns NaN
+    // objectives for every fourth task used to crash the whole MOEA run
+    // in `partial_cmp().unwrap()` (crowding sort / archive truncation).
+    // The run must now complete all generations, ranking NaN individuals
+    // strictly worst instead of panicking.
+    use caravan::des::DurationModel;
+
+    struct SometimesNan(ConstResults);
+    impl DurationModel for SometimesNan {
+        fn duration(&mut self, t: &TaskSpec) -> f64 {
+            self.0.duration(t)
+        }
+        fn results(&mut self, t: &TaskSpec) -> Vec<f64> {
+            let mut r = self.0.results(t);
+            if t.id % 4 == 0 {
+                if let Some(x) = r.first_mut() {
+                    *x = f64::NAN;
+                }
+            }
+            r
+        }
+    }
+
+    let mut cfg = MoeaConfig::small(vec![(0.0, 1.0); 3]);
+    cfg.generations = 3;
+    let (engine, outcome) = Nsga2Engine::new(cfg);
+    let mut dcfg = DesConfig::new(8);
+    dcfg.sched.consumers_per_buffer = 4;
+    let r = run_des(
+        &dcfg,
+        Box::new(engine),
+        Box::new(SometimesNan(ConstResults::new(1.0, 3.0, 2, 5))),
+    );
+    assert!(!r.results.is_empty());
+    let out = outcome.lock().unwrap();
+    assert_eq!(out.generations_done, 3, "NaN objectives must not stall the MOEA");
+    assert!(!out.archive.is_empty());
+}
+
+#[test]
 fn zero_duration_storm_des() {
     // 100k zero-length tasks: pure overhead — DES must terminate and
     // conserve all tasks.

@@ -12,9 +12,10 @@
 
 use std::sync::Arc;
 
-use caravan::config::SchedulerConfig;
+use caravan::config::{Calibration, SchedPolicy, SchedulerConfig, TreeShape};
 use caravan::des::{run_des, DesConfig, DesReport, SleepDurations};
 use caravan::scheduler::{run_scheduler, SleepExecutor};
+use caravan::tasklib::TaskSink;
 use caravan::testutil::{check, pair, usize_in};
 use caravan::util::rng::Pcg64;
 use caravan::workload::{TestCase, TestCaseEngine};
@@ -337,6 +338,226 @@ fn priority_inversion_is_bounded_under_stealing() {
             mean(true) < mean(false),
             "np={np} depth={depth}: high-priority mean begin must precede low"
         );
+    }
+}
+
+/// Engine submitting `n` fixed-length sleeps up front (the shape the
+/// calibration phase measures cleanly).
+struct FixedSleeps {
+    n: usize,
+    secs: f64,
+}
+
+impl caravan::tasklib::SearchEngine for FixedSleeps {
+    fn start(&mut self, sink: &mut dyn caravan::api::JobSink) {
+        for _ in 0..self.n {
+            sink.submit(caravan::tasklib::Payload::Sleep { seconds: self.secs });
+        }
+    }
+    fn on_done(
+        &mut self,
+        _r: &caravan::tasklib::TaskResult,
+        _s: &mut dyn caravan::api::JobSink,
+    ) {
+    }
+}
+
+#[test]
+fn auto_shape_stays_flat_when_producer_lag_is_negligible() {
+    // Satellite: deterministic DES calibration. Default latency model
+    // (microsecond messages) against second-scale tasks: the controller
+    // must keep the paper's flat layout — the user set no shape knob.
+    let mut dcfg = DesConfig::new(2048);
+    dcfg.sched.consumers_per_buffer = 128; // 16 leaves
+    dcfg.sched.shape = TreeShape::Auto;
+    let n = 2048 * 2;
+    let r = run_des(&dcfg, Box::new(FixedSleeps { n, secs: 5.0 }), Box::new(SleepDurations));
+    assert_eq!(r.depth, 1, "fast producer must keep the flat layout");
+    assert_eq!(r.results.len(), n);
+    assert!(r.rate(2048) > 0.9, "rate={}", r.rate(2048));
+}
+
+#[test]
+fn auto_shape_deepens_when_producer_lag_dominates() {
+    // Satellite: same workload, but the producer now takes 5 ms per
+    // message against half-second tasks — its round trip dominates, so
+    // the controller must insert relay levels (depth ≥ 2). Deterministic
+    // in virtual time: calibration = latency model + duration samples.
+    let mut dcfg = DesConfig::new(2048);
+    dcfg.sched.consumers_per_buffer = 128;
+    dcfg.sched.shape = TreeShape::Auto;
+    dcfg.lat.producer_service = 5e-3;
+    let n = 2048 * 2;
+    let r = run_des(&dcfg, Box::new(FixedSleeps { n, secs: 0.5 }), Box::new(SleepDurations));
+    assert!(r.depth >= 2, "lag-dominated producer must deepen: depth={}", r.depth);
+    assert_eq!(r.results.len(), n, "auto shape must still conserve tasks");
+    assert!(r.node_stats.iter().all(|s| s.saw_shutdown));
+}
+
+#[test]
+fn auto_shape_matches_best_manual_depth_sweep() {
+    // The acceptance sweep at test scale (the fig3_tree bench repeats it
+    // at 10⁵ consumers): Auto must land within 5% filling of the best
+    // manually-swept depth ∈ {1, 2, 3}.
+    let run = |shape: TreeShape, depth: usize| {
+        let mut dcfg = DesConfig::new(2048);
+        dcfg.sched.consumers_per_buffer = 128;
+        dcfg.sched.depth = depth;
+        dcfg.sched.fanout = 4;
+        dcfg.sched.shape = shape;
+        let r = run_des(
+            &dcfg,
+            Box::new(TestCaseEngine::new(TestCase::TC2, 2048 * 4, 13)),
+            Box::new(SleepDurations),
+        );
+        assert_eq!(r.results.len(), 2048 * 4);
+        r.rate(2048)
+    };
+    let best = (1..=3)
+        .map(|d| run(TreeShape::Manual, d))
+        .fold(f64::NEG_INFINITY, f64::max);
+    let auto = run(TreeShape::Auto, 1);
+    assert!(
+        auto >= best - 0.05,
+        "auto filling {auto:.4} more than 5% below best manual {best:.4}"
+    );
+}
+
+#[test]
+fn threaded_and_des_select_identical_shape_from_shared_calibration() {
+    // The controller is one pure function in the protocol layer: for the
+    // same calibration inputs, the threaded runtime and the DES must
+    // build the identical tree. This calibration forces a deep choice.
+    let cal = Calibration { producer_rtt: 1.0, mean_task_s: 1.0 };
+    let mut cfg = shape(8, 2, 1, 8, false);
+    cfg.shape = TreeShape::Calibrated(cal);
+    cfg.time_scale = 0.001;
+    cfg.flush_interval_ms = 2;
+
+    let threaded = run_scheduler(
+        &cfg,
+        Box::new(FixedSleeps { n: 16, secs: 1.0 }),
+        Arc::new(SleepExecutor { time_scale: 0.001 }),
+    );
+    let mut dcfg = DesConfig::new(cfg.np);
+    dcfg.sched = cfg.clone();
+    let des = run_des(&dcfg, Box::new(FixedSleeps { n: 16, secs: 1.0 }), Box::new(SleepDurations));
+
+    assert_eq!(
+        (threaded.depth, threaded.fanout),
+        (des.depth, des.fanout),
+        "both runtimes must shape identically from the same calibration"
+    );
+    assert!(threaded.depth >= 2, "this calibration must force relay levels");
+    assert_eq!(threaded.results.len(), 16);
+    assert_eq!(des.results.len(), 16);
+}
+
+#[test]
+fn threaded_auto_calibration_completes_and_conserves_tasks() {
+    // TreeShape::Auto on the real runtime: the calibration phase executes
+    // a couple of tasks inline — every task must still be accounted for
+    // exactly once in the final report.
+    let mut cfg = shape(4, 2, 1, 4, false);
+    cfg.shape = TreeShape::Auto;
+    cfg.time_scale = 0.001;
+    cfg.flush_interval_ms = 2;
+    let r = run_scheduler(
+        &cfg,
+        Box::new(FixedSleeps { n: 20, secs: 1.0 }),
+        Arc::new(SleepExecutor { time_scale: 0.001 }),
+    );
+    assert_eq!(r.results.len(), 20);
+    let mut ids: Vec<u64> = r.results.iter().map(|x| x.id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), 20, "calibration tasks must not duplicate or vanish");
+    assert!(r.depth >= 1 && r.filling.overlap_violations() == 0);
+}
+
+#[test]
+fn threaded_auto_calibration_honours_cancels_issued_in_start() {
+    // A task cancelled inside SearchEngine::start must come back
+    // RC_CANCELLED even under TreeShape::Auto — the calibration phase may
+    // not pick it as an inline probe and run it to completion.
+    struct CancelFirst;
+    impl caravan::tasklib::SearchEngine for CancelFirst {
+        fn start(&mut self, sink: &mut dyn caravan::api::JobSink) {
+            let id = sink.submit(caravan::tasklib::Payload::Sleep { seconds: 1.0 });
+            for _ in 0..7 {
+                sink.submit(caravan::tasklib::Payload::Sleep { seconds: 1.0 });
+            }
+            sink.cancel(id);
+        }
+        fn on_done(
+            &mut self,
+            _r: &caravan::tasklib::TaskResult,
+            _s: &mut dyn caravan::api::JobSink,
+        ) {
+        }
+    }
+
+    let mut cfg = shape(2, 2, 1, 4, false);
+    cfg.shape = TreeShape::Auto;
+    cfg.time_scale = 0.001;
+    cfg.flush_interval_ms = 2;
+    let r = run_scheduler(&cfg, Box::new(CancelFirst), Arc::new(SleepExecutor { time_scale: 0.001 }));
+    assert_eq!(r.results.len(), 8);
+    let first = r.results.iter().find(|x| x.id == 0).expect("one result per id");
+    assert!(first.cancelled(), "cancelled-in-start task executed anyway: rc={}", first.rc);
+    assert!(r.results.iter().filter(|x| x.id != 0).all(|x| x.ok()));
+}
+
+#[test]
+fn wait_histograms_conserve_dispatches_across_policies_and_shapes() {
+    // Satellite property: at every node, the per-band wait-time histogram
+    // counts exactly the tasks popped for dispatch (Σ counts == popped),
+    // and leaf-level pops sum to the task count — each task is dispatched
+    // to a consumer exactly once (stealing moves tasks sideways but never
+    // double-pops them; there are no retries in this workload).
+    for policy in [
+        SchedPolicy::Strict,
+        SchedPolicy::Deadline,
+        SchedPolicy::Aging { step: 5.0 },
+    ] {
+        for (depth, steal) in [(1, false), (2, true), (3, true)] {
+            let mut cfg = shape(48, 4, depth, 3, steal);
+            cfg.policy = policy;
+            let n = 48 * 5;
+            let r = des_run(&cfg, TestCase::TC2, n, 0xA11 + depth as u64);
+            assert_eq!(r.results.len(), n);
+            let mut leaf_pops = 0u64;
+            for s in &r.node_stats {
+                let hist_total: u64 = s.wait_hist.iter().map(|h| h.total()).sum();
+                assert_eq!(
+                    hist_total, s.popped,
+                    "node {} ({:?}, depth {depth}): histogram must conserve pops",
+                    s.node, policy
+                );
+                if s.level == depth {
+                    leaf_pops += s.popped;
+                }
+            }
+            assert_eq!(
+                leaf_pops, n as u64,
+                "{policy:?} depth {depth} steal {steal}: each task dispatched exactly once"
+            );
+        }
+    }
+}
+
+#[test]
+fn producer_lag_is_measured_at_every_level() {
+    // The request→grant instrumentation that feeds adaptive shaping:
+    // any node that requested and received work has a positive lag
+    // sample (in the DES the minimum is the modelled round trip).
+    let mut cfg = shape(64, 8, 2, 4, false);
+    cfg.flush_every = 4;
+    let r = des_run(&cfg, TestCase::TC1, 64 * 4, 3);
+    assert_eq!(r.results.len(), 64 * 4);
+    for s in &r.node_stats {
+        assert!(s.req_lag_n > 0, "node {} never completed a request round trip", s.node);
+        assert!(s.req_lag_mean > 0.0 && s.req_lag_max >= s.req_lag_mean);
     }
 }
 
