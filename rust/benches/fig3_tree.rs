@@ -19,7 +19,7 @@
 
 mod common;
 
-use caravan::config::TreeShape;
+use caravan::config::{fanout_label, TreeShape};
 use caravan::des::{run_des, DesConfig, SleepDurations};
 use caravan::scheduler::NodeStats;
 use caravan::util::cli::Args;
@@ -68,7 +68,7 @@ fn run_point(
 ) -> f64 {
     let n = tasks_per_proc * np;
     let mut cfg = DesConfig::new(np);
-    cfg.sched.fanout = 8;
+    cfg.sched.fanout = vec![8];
     cfg.sched.steal = steal;
     match depth {
         Some(d) => cfg.sched.depth = d,
@@ -108,9 +108,10 @@ fn run_point(
         })
         .collect();
     println!(
-        "{:>7} {:>6} {:>6} {:>9} | {:>7.2}% | {:>9} {:>7} {:>8.2} | {}",
+        "{:>7} {:>6} {:>6} {:>6} {:>9} | {:>7.2}% | {:>9} {:>7} {:>8.2} | {}",
         np,
         depth.map_or_else(|| format!("auto:{}", r.depth), |d| d.to_string()),
+        fanout_label(&r.fanout),
         if steal { "yes" } else { "no" },
         n,
         rate * 100.0,
@@ -137,7 +138,8 @@ fn run_point(
         ("np", Json::Num(np as f64)),
         ("auto", Json::Bool(depth.is_none())),
         ("depth", Json::Num(r.depth as f64)),
-        ("fanout", Json::Num(r.fanout as f64)),
+        // Per-level plan since v5 ("6x8" = narrow root, wide leaves).
+        ("fanout", Json::Str(fanout_label(&r.fanout))),
         ("steal", Json::Bool(steal)),
         ("n_tasks", Json::Num(n as f64)),
         ("fill", Json::Num(rate)),
@@ -236,8 +238,8 @@ fn main() {
         "per-level fill = mean/min subtree rate; prod-msgs = rank 0 messages in+out",
     );
     println!(
-        "{:>7} {:>6} {:>6} {:>9} | {:>8} | {:>9} {:>7} {:>8} | per-level fill",
-        "Np", "depth", "steal", "N", "fill", "prod-msg", "stolen", "bench-s"
+        "{:>7} {:>6} {:>6} {:>6} {:>9} | {:>8} | {:>9} {:>7} {:>8} | per-level fill",
+        "Np", "depth", "fanout", "steal", "N", "fill", "prod-msg", "stolen", "bench-s"
     );
     let mut rows: Vec<Json> = Vec::new();
     let quick = args.has_flag("quick");

@@ -138,7 +138,7 @@ fn main() {
     println!(
         "auto tree shaping (threaded)   : depth {} fanout {} chosen by calibration, {:>6.0} tasks/s",
         run.value.depth,
-        run.value.fanout,
+        caravan::config::fanout_label(&run.value.fanout),
         n as f64 / run.wall_secs
     );
 

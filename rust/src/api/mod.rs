@@ -40,13 +40,31 @@
 //!   `NodeStats::cancelled_killed`) and reports `RC_CANCELLED` without
 //!   consuming a retry.
 
+#![warn(missing_docs)]
+
 use std::collections::HashMap;
 
 use crate::tasklib::{Payload, SearchEngine, TaskId, TaskResult, TaskSink, TaskSpec};
 
 /// A typed job submission: what to run plus how to schedule it.
+///
+/// Built fluently; unset knobs keep scheduler defaults:
+///
+/// ```
+/// use caravan::api::JobSpec;
+///
+/// let spec = JobSpec::eval(vec![0.2, 0.8])
+///     .seed(7)        // RNG stream for the evaluation
+///     .priority(2)    // higher runs first
+///     .retries(3)     // transparent re-runs on rc != 0
+///     .timeout(30.0); // per-attempt budget in (virtual) seconds
+/// assert_eq!(spec.priority, 2);
+/// assert_eq!(spec.max_retries, 3);
+/// assert_eq!(spec.timeout_s, Some(30.0));
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct JobSpec {
+    /// What the consumer executes (evaluation point, sleep, command line).
     pub payload: Payload,
     /// Scheduling priority: higher runs first (default 0). Ties are FIFO.
     pub priority: u8,
@@ -62,6 +80,8 @@ pub struct JobSpec {
 }
 
 impl JobSpec {
+    /// A job with the given payload and default scheduling knobs
+    /// (priority 0, no retries, no timeout, no tag).
     pub fn new(payload: Payload) -> Self {
         Self { payload, priority: 0, max_retries: 0, timeout_s: None, tag: None }
     }
@@ -89,21 +109,27 @@ impl JobSpec {
         self
     }
 
+    /// Scheduling priority: higher runs first; ties are FIFO.
     pub fn priority(mut self, priority: u8) -> Self {
         self.priority = priority;
         self
     }
 
+    /// Transparent scheduler-side re-runs after a non-zero exit.
     pub fn retries(mut self, max_retries: u32) -> Self {
         self.max_retries = max_retries;
         self
     }
 
+    /// Per-attempt budget in (virtual) seconds; overrunning attempts are
+    /// killed with [`crate::tasklib::RC_TIMEOUT`] and retried if budget
+    /// remains.
     pub fn timeout(mut self, seconds: f64) -> Self {
         self.timeout_s = Some(seconds);
         self
     }
 
+    /// Free-form label carried on the task (logs and debugging).
     pub fn tag(mut self, tag: impl Into<String>) -> Self {
         self.tag = Some(tag.into());
         self
@@ -158,6 +184,7 @@ pub enum JobStatus {
 }
 
 impl JobStatus {
+    /// Classify a final [`TaskResult`] (done / failed / cancelled).
     pub fn from_result(r: &TaskResult) -> Self {
         if r.cancelled() {
             JobStatus::Cancelled
@@ -208,8 +235,11 @@ pub trait JobEngine: Send {
     /// Engine-owned per-job context (a parameter point, a walker index…).
     type Ctx: Send;
 
+    /// Called once before scheduling begins: stage the initial jobs.
     fn start(&mut self, jobs: &mut Jobs<'_, Self::Ctx>);
 
+    /// Called with every job's *final* result (retry survivor or
+    /// cancellation) and the context stored at submission.
     fn on_done(&mut self, result: &TaskResult, ctx: Self::Ctx, jobs: &mut Jobs<'_, Self::Ctx>);
 
     /// Polled between events by the threaded runtime (see
@@ -236,10 +266,12 @@ pub struct JobAdapter<E: JobEngine> {
 }
 
 impl<E: JobEngine> JobAdapter<E> {
+    /// Wrap `engine` with a fresh (empty) context map.
     pub fn new(engine: E) -> Self {
         Self { engine, ctx: HashMap::new() }
     }
 
+    /// The wrapped engine (also reachable through `Deref`).
     pub fn inner(&self) -> &E {
         &self.engine
     }

@@ -2,10 +2,20 @@
 //! application scenarios. All defaults follow the paper where it states
 //! them (e.g. one buffer per 384 consumers).
 
+#![warn(missing_docs)]
+
 /// How every queue in the scheduler (the producer's pending queue and
 /// each buffer-tree node's local queue) orders its tasks. Implemented once
 /// in [`crate::scheduler::protocol::PrioQueue`], so the threaded runtime
 /// and the DES can never disagree on scheduling semantics.
+///
+/// ```
+/// use caravan::config::SchedPolicy;
+///
+/// assert_eq!(SchedPolicy::parse("deadline"), Some(SchedPolicy::Deadline));
+/// assert_eq!(SchedPolicy::parse("aging:2.5"), Some(SchedPolicy::Aging { step: 2.5 }));
+/// assert_eq!(SchedPolicy::parse("bogus"), None);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SchedPolicy {
     /// Strict priority bands, FIFO within a band — the Job-API-v2
@@ -72,7 +82,55 @@ impl Calibration {
     }
 }
 
+/// When and how aggressively the scheduler re-shapes the buffer tree
+/// *online* (CLI: `--reshape`). A shape chosen once at calibration goes
+/// stale exactly when the workload gets interesting — e.g. an MOEA
+/// shifting from cheap to expensive generations — so the protocol layer
+/// periodically rebuilds a **rolling [`Calibration`]** from live
+/// measurements (per-root request→grant lag, observed task durations),
+/// re-runs the shape controller, and when the chosen shape diverges,
+/// executes a drain-and-graft transition: credit is withdrawn, every
+/// queued task is recalled to the producer with its `enqueued_t`
+/// preserved, the tree is rebuilt at the new shape, and the recalled
+/// tasks are re-granted — no task lost, duplicated, or re-ordered within
+/// its scheduling band.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReshapePolicy {
+    /// Width of the rolling measurement window in (virtual) seconds; the
+    /// controller re-evaluates the shape once per window.
+    pub window: f64,
+    /// Minimum relative drift of a calibration input (producer round
+    /// trip or mean task duration) against the calibration that chose
+    /// the current shape before a transition may fire. `0.25` = 25 %.
+    pub drift_threshold: f64,
+    /// Minimum (virtual) seconds between two transitions, so a noisy
+    /// boundary between regimes cannot thrash the tree.
+    pub cooldown: f64,
+}
+
+impl Default for ReshapePolicy {
+    fn default() -> Self {
+        Self { window: 10.0, drift_threshold: 0.25, cooldown: 30.0 }
+    }
+}
+
 /// How the buffer tree's depth and fanout are decided.
+///
+/// The controller behind the auto modes is one pure function shared by
+/// both runtimes:
+///
+/// ```
+/// use caravan::config::{Calibration, SchedulerConfig};
+/// use caravan::scheduler::choose_shape;
+///
+/// let cfg = SchedulerConfig { np: 4096, consumers_per_buffer: 64, ..Default::default() };
+/// // A fast producer keeps the paper's flat layout…
+/// let (depth, fans) = choose_shape(&cfg, &Calibration { producer_rtt: 1e-4, mean_task_s: 5.0 });
+/// assert_eq!((depth, fans.len()), (1, 0));
+/// // …a lag-dominated one inserts relay levels (narrow at the root).
+/// let (depth, _) = choose_shape(&cfg, &Calibration { producer_rtt: 5e-3, mean_task_s: 0.5 });
+/// assert!(depth >= 2);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum TreeShape {
     /// Use [`SchedulerConfig::depth`] / [`SchedulerConfig::fanout`] as
@@ -90,6 +148,7 @@ pub enum TreeShape {
 }
 
 impl TreeShape {
+    /// True when the controller (not the manual knobs) decides the shape.
     pub fn is_auto(&self) -> bool {
         !matches!(self, TreeShape::Manual)
     }
@@ -112,9 +171,24 @@ pub enum StealPolicy {
 ///
 /// The buffered layer generalizes to an *N-level tree*: `depth = 1` is the
 /// paper's fixed producer → buffer → consumer shape; `depth ≥ 2` inserts
-/// interior relay levels (fan-out `fanout`) between the producer and the
-/// leaf buffers, so rank 0 talks to `⌈num_buffers / fanout^(depth-1)⌉`
-/// children instead of to every buffer.
+/// interior relay levels between the producer and the leaf buffers (with
+/// a per-level fan-out plan), so rank 0 talks to a handful of children
+/// instead of to every buffer.
+///
+/// ```
+/// use caravan::config::SchedulerConfig;
+///
+/// let cfg = SchedulerConfig {
+///     np: 1000,
+///     consumers_per_buffer: 384,
+///     depth: 2,
+///     fanout: vec![4, 8], // narrow at the root, wide near the leaves
+///     ..Default::default()
+/// };
+/// assert_eq!(cfg.num_buffers(), 3);
+/// assert_eq!(cfg.fanout_at(1), 4); // level 1 = the producer's children
+/// assert_eq!(cfg.tree().depth, 2);
+/// ```
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
     /// Number of consumer processes N_p.
@@ -126,12 +200,22 @@ pub struct SchedulerConfig {
     /// `shape` is [`TreeShape::Manual`]; under auto shaping the controller
     /// overrides it.
     pub depth: usize,
-    /// Children per interior buffer node (levels above the leaves). Under
-    /// auto shaping this is the *upper bound* the controller may pick.
-    pub fanout: usize,
+    /// **Per-level** children per interior buffer node, ordered from the
+    /// root level downward: `fanout[0]` is the fan-in of the level-1
+    /// nodes (the producer's direct children), the last element repeats
+    /// for every deeper level. A single element is the uniform fanout of
+    /// v4 and earlier (`fanout: 8` → `fanout: vec![8]`). Narrower values
+    /// near the root keep fan-in small where request traffic
+    /// concentrates; wider values near the leaves are cheap because
+    /// results batch and leaf requests are low-rate. Under auto shaping
+    /// the maximum element is the *upper bound* the controller may pick.
+    pub fanout: Vec<usize>,
     /// How depth/fanout are decided: the manual knobs above, or the
     /// adaptive controller fed by a calibration measurement.
     pub shape: TreeShape,
+    /// Online tree re-shaping under lag drift (`None` = the v4 behaviour:
+    /// the shape picked at startup is final). See [`ReshapePolicy`].
+    pub reshape: Option<ReshapePolicy>,
     /// Allow starved buffer nodes to steal queued tasks from a sibling
     /// before escalating demand to their parent.
     pub steal: bool,
@@ -156,8 +240,9 @@ impl Default for SchedulerConfig {
             np: 8,
             consumers_per_buffer: 384,
             depth: 1,
-            fanout: 8,
+            fanout: vec![8],
             shape: TreeShape::Manual,
+            reshape: None,
             steal: false,
             steal_policy: StealPolicy::DeepestQueue,
             policy: SchedPolicy::Strict,
@@ -175,6 +260,24 @@ impl SchedulerConfig {
         self.np.div_ceil(self.consumers_per_buffer).max(1)
     }
 
+    /// Effective fanout of the interior nodes at buffer `level` (1 = the
+    /// producer's direct children): `fanout[level − 1]`, with the last
+    /// element repeating for deeper levels and an empty vector reading
+    /// as 1.
+    pub fn fanout_at(&self, level: usize) -> usize {
+        match self.fanout.as_slice() {
+            [] => 1,
+            f => *f.get(level.saturating_sub(1)).unwrap_or(f.last().expect("non-empty")),
+        }
+        .max(1)
+    }
+
+    /// Largest per-level fanout — the upper bound the auto-shape
+    /// controller may use at any level.
+    pub fn max_fanout(&self) -> usize {
+        self.fanout.iter().copied().max().unwrap_or(1).max(1)
+    }
+
     /// Consumers assigned to each leaf buffer (balanced; sums to `np`).
     pub fn buffer_layout(&self) -> Vec<usize> {
         let nb = self.num_buffers();
@@ -185,7 +288,19 @@ impl SchedulerConfig {
 
     /// Materialize the buffer tree this configuration describes.
     pub fn tree(&self) -> TreeTopology {
-        TreeTopology::build(self.np, self.consumers_per_buffer, self.depth, self.fanout)
+        TreeTopology::build(self.np, self.consumers_per_buffer, self.depth, &self.fanout)
+    }
+}
+
+/// Render a per-level fanout plan for reports and logs: `"6x8"` means
+/// fanout 6 at the root level and 8 below; `"-"` is the flat layout.
+/// The one spelling shared by the CLI, the benches and the tracked
+/// fig3 artifact.
+pub fn fanout_label(fans: &[usize]) -> String {
+    if fans.is_empty() {
+        "-".to_string()
+    } else {
+        fans.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("x")
     }
 }
 
@@ -194,13 +309,17 @@ impl SchedulerConfig {
 pub enum TreeNodeKind {
     /// Feeds consumer processes directly.
     Leaf {
+        /// Consumer processes attached to this leaf.
         n_consumers: usize,
         /// Global rank of this leaf's first consumer (ranks are contiguous).
         rank_base: usize,
     },
     /// Relays tasks downward and batches results upward between its parent
     /// and its child buffer nodes.
-    Interior { children: Vec<usize> },
+    Interior {
+        /// Node ids of the children, in slot order.
+        children: Vec<usize>,
+    },
 }
 
 /// One node of the buffer tree (the producer itself is not a node here —
@@ -213,6 +332,7 @@ pub struct TreeNode {
     pub slot: usize,
     /// Buffer level: 1 = directly under the producer, `depth` = leaf level.
     pub level: usize,
+    /// Leaf or interior role (and the corresponding wiring).
     pub kind: TreeNodeKind,
     /// Consumers in this node's subtree.
     pub subtree_consumers: usize,
@@ -221,6 +341,7 @@ pub struct TreeNode {
 }
 
 impl TreeNode {
+    /// True when this node feeds consumers directly.
     pub fn is_leaf(&self) -> bool {
         matches!(self.kind, TreeNodeKind::Leaf { .. })
     }
@@ -231,20 +352,31 @@ impl TreeNode {
 /// construction, so per-level filling rates reduce to rank ranges.
 #[derive(Clone, Debug)]
 pub struct TreeTopology {
+    /// Every buffer node: leaves first (consumer-rank order), then
+    /// interior levels bottom-up.
     pub nodes: Vec<TreeNode>,
     /// Node ids that are direct children of the producer (level 1).
     pub roots: Vec<usize>,
+    /// Number of buffer levels (1 = the paper's flat layout).
     pub depth: usize,
+    /// Total consumer processes under the tree.
     pub np: usize,
 }
 
 impl TreeTopology {
-    pub fn build(np: usize, consumers_per_buffer: usize, depth: usize, fanout: usize) -> Self {
+    /// Build the tree for `np` consumers grouped `consumers_per_buffer`
+    /// per leaf, with `depth` buffer levels and the given **per-level**
+    /// fanout plan (`fanout[0]` = fan-in of the level-1 nodes, last
+    /// element repeating for deeper levels; see
+    /// [`SchedulerConfig::fanout`]).
+    pub fn build(np: usize, consumers_per_buffer: usize, depth: usize, fanout: &[usize]) -> Self {
         let depth = depth.max(1);
-        let fanout = fanout.max(1);
+        // One source of truth for the plan semantics (root-down indexing,
+        // last element repeating, empty reads as 1): SchedulerConfig.
         let cfg = SchedulerConfig {
             np,
             consumers_per_buffer,
+            fanout: fanout.to_vec(),
             ..SchedulerConfig::default()
         };
         let layout = cfg.buffer_layout();
@@ -266,12 +398,13 @@ impl TreeTopology {
             level_nodes.push(id);
         }
 
-        // Interior levels from depth-1 down to 1, grouping `fanout` children
-        // per parent. Children stay contiguous in rank order.
+        // Interior levels from depth-1 down to 1, grouping the per-level
+        // fanout's worth of children per parent. Children stay contiguous
+        // in rank order.
         for level in (1..depth).rev() {
             let mut next_level = Vec::new();
             let groups: Vec<Vec<usize>> =
-                level_nodes.chunks(fanout).map(|c| c.to_vec()).collect();
+                level_nodes.chunks(cfg.fanout_at(level)).map(|c| c.to_vec()).collect();
             for children in groups {
                 let id = nodes.len();
                 let subtree: usize =
@@ -303,10 +436,12 @@ impl TreeTopology {
         TreeTopology { nodes, roots: level_nodes, depth, np }
     }
 
+    /// Total buffer nodes in the tree (leaves + interior relays).
     pub fn n_nodes(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Node ids of every leaf, in consumer-rank order.
     pub fn leaf_ids(&self) -> Vec<usize> {
         (0..self.nodes.len()).filter(|&i| self.nodes[i].is_leaf()).collect()
     }
@@ -386,6 +521,33 @@ mod tests {
     use super::*;
 
     #[test]
+    fn per_level_fanout_indexes_root_down_and_repeats_last() {
+        let c = SchedulerConfig { fanout: vec![4, 8], ..Default::default() };
+        assert_eq!(c.fanout_at(1), 4, "level 1 = the producer's direct children");
+        assert_eq!(c.fanout_at(2), 8);
+        assert_eq!(c.fanout_at(3), 8, "last element repeats for deeper levels");
+        assert_eq!(c.max_fanout(), 8);
+        let empty = SchedulerConfig { fanout: Vec::new(), ..Default::default() };
+        assert_eq!(empty.fanout_at(1), 1);
+        assert_eq!(empty.max_fanout(), 1);
+    }
+
+    #[test]
+    fn per_level_fanout_builds_narrow_root_wide_leaves() {
+        // 64 leaves; root level groups by 4, leaf-adjacent by 8:
+        // 64 → 8 (level 2, fanout 8) → 2 (level 1, fanout 4).
+        let t = TreeTopology::build(64, 1, 3, &[4, 8]);
+        assert_eq!(t.level_groups(3).len(), 64);
+        assert_eq!(t.level_groups(2).len(), 8);
+        assert_eq!(t.level_groups(1).len(), 2);
+        assert_eq!(t.roots.len(), 2);
+        // Uniform single-element plan matches the old scalar behaviour.
+        let u = TreeTopology::build(64, 1, 3, &[8]);
+        assert_eq!(u.level_groups(2).len(), 8);
+        assert_eq!(u.level_groups(1).len(), 1);
+    }
+
+    #[test]
     fn sched_policy_parses_cli_spellings() {
         assert_eq!(SchedPolicy::parse("strict"), Some(SchedPolicy::Strict));
         assert_eq!(SchedPolicy::parse("deadline"), Some(SchedPolicy::Deadline));
@@ -448,7 +610,7 @@ mod tests {
             np: 16384,
             consumers_per_buffer: 384,
             depth: 3,
-            fanout: 8,
+            fanout: vec![8],
             ..Default::default()
         };
         let t = c.tree();
@@ -472,7 +634,7 @@ mod tests {
             "tree partitions consumer ranks at every level",
             pair(pair(usize_in(1..300), usize_in(1..20)), pair(usize_in(1..5), usize_in(1..6))),
             |&((np, cpb), (depth, fanout))| {
-                let t = TreeTopology::build(np, cpb, depth, fanout);
+                let t = TreeTopology::build(np, cpb, depth, &[fanout]);
                 // Roots exist and subtree totals are consistent.
                 if t.roots.is_empty() {
                     return false;

@@ -27,6 +27,13 @@
 //! semantics — priority ordering, transparent retry (a failed attempt's
 //! `rc` comes from [`DurationModel::rc`]), per-attempt timeouts and
 //! cancellation — are all testable deterministically here.
+//!
+//! Online re-shaping ([`SchedulerConfig::reshape`]) runs here too: a
+//! periodic virtual-time tick feeds the shared reshape controller the
+//! roots' live request→grant lag and the observed task durations; a
+//! transition recalls the tree (drain), rebuilds it at the new shape
+//! (graft) and re-grants the recalled tasks — all in virtual time, so
+//! reshape runs are exactly reproducible.
 
 mod model;
 
@@ -43,6 +50,7 @@ use crate::scheduler::metrics::{FillingRate, LevelFill, NodeStats};
 use crate::scheduler::protocol::{
     resolve_shape, BufferAction, BufferState, ProducerAction, ProducerState,
 };
+use crate::scheduler::reshape::{ReshapeController, ReshapeEvent};
 use crate::tasklib::{
     Payload, SearchEngine, TaskId, TaskResult, TaskSink, TaskSpec, RC_CANCELLED, RC_TIMEOUT,
 };
@@ -82,6 +90,18 @@ enum Ev {
     NodeCancel { node: usize, id: TaskId },
     /// Shutdown notice arrives at a node.
     NodeShutdown { node: usize },
+    /// Recall notice (drain-and-graft transition) arrives at a node.
+    NodeRecall { node: usize },
+    /// Recalled tasks arrive at interior `node` from one of its children.
+    NodeReturned { node: usize, tasks: Vec<TaskSpec> },
+    /// Child slot `child` acked the recall to interior `node`.
+    NodeRecallAck { node: usize, child: usize },
+    /// Recalled tasks arrive back at the producer.
+    ProdReturned { tasks: Vec<TaskSpec> },
+    /// Root slot `slot` acked the recall to the producer.
+    ProdRecallAck { slot: usize },
+    /// Periodic reshape-controller wake-up (only with `--reshape`).
+    ReshapeTick,
 }
 
 struct Scheduled {
@@ -142,16 +162,24 @@ pub struct DesReport {
     /// saturation indicator for the naive ablation.
     pub max_producer_lag: f64,
     /// Per-node counters of the buffer tree (indexed like
-    /// [`TreeTopology::nodes`]).
+    /// [`TreeTopology::nodes`]) — of the *final* tree when online
+    /// re-shaping replaced it mid-run.
     pub node_stats: Vec<NodeStats>,
+    /// Counter snapshots of trees retired by drain-and-graft transitions
+    /// (in retirement order; empty without `--reshape`). Conservation
+    /// properties (Σ wait-hist counts == popped) hold per retired node.
+    pub retired_node_stats: Vec<NodeStats>,
     /// Per-level filling statistics (mean/min subtree rate).
     pub level_fill: Vec<LevelFill>,
-    /// Effective tree depth this run used (resolved from
+    /// Effective tree depth at the end of the run (resolved from
     /// [`crate::config::TreeShape`] — the auto controller's choice when
-    /// shaping adaptively).
+    /// shaping adaptively, possibly revised by `--reshape`).
     pub depth: usize,
-    /// Effective interior fanout this run used.
-    pub fanout: usize,
+    /// Effective per-level interior fanout at the end of the run
+    /// (root-down; empty for the flat layout).
+    pub fanout: Vec<usize>,
+    /// Drain-and-graft transitions executed by the reshape controller.
+    pub reshapes: Vec<ReshapeEvent>,
 }
 
 impl DesReport {
@@ -230,6 +258,10 @@ struct Des<'a> {
     events: u64,
     engine: Box<dyn SearchEngine>,
     durations: Box<dyn DurationModel>,
+    /// Online re-shaping (only with [`SchedulerConfig::reshape`]).
+    controller: Option<ReshapeController>,
+    /// Stats of trees retired by drain-and-graft transitions.
+    retired_stats: Vec<NodeStats>,
     /// `(node, consumer)` → (task id, begin, scheduled finish, attempt) of
     /// the attempt currently running there — the state kill-on-cancel
     /// needs to truncate an in-flight execution.
@@ -279,6 +311,12 @@ impl<'a> Des<'a> {
                     let roots = self.topo.roots.clone();
                     for node in roots {
                         self.push(t + lat, Ev::NodeCancel { node, id });
+                    }
+                }
+                ProducerAction::BroadcastRecall => {
+                    let roots = self.topo.roots.clone();
+                    for node in roots {
+                        self.push(t + lat, Ev::NodeRecall { node });
                     }
                 }
                 ProducerAction::BroadcastShutdown => {
@@ -420,6 +458,20 @@ impl<'a> Des<'a> {
                         self.push(t + lat, Ev::NodeShutdown { node: child_id });
                     }
                 }
+                BufferAction::ReturnTasks(tasks) => match parent {
+                    None => self.push(t + lat, Ev::ProdReturned { tasks }),
+                    Some(p) => self.push(t + lat, Ev::NodeReturned { node: p, tasks }),
+                },
+                BufferAction::RecallChildren => {
+                    let children = self.topo.children_of(n).to_vec();
+                    for child_id in children {
+                        self.push(t + lat, Ev::NodeRecall { node: child_id });
+                    }
+                }
+                BufferAction::AckRecall => match parent {
+                    None => self.push(t + lat, Ev::ProdRecallAck { slot }),
+                    Some(p) => self.push(t + lat, Ev::NodeRecallAck { node: p, child: slot }),
+                },
             }
         }
     }
@@ -458,6 +510,11 @@ impl<'a> Des<'a> {
     /// tasks to the producer.
     fn producer_ingest(&mut self, results: Vec<TaskResult>, t: f64) {
         self.producer.on_results(results.len());
+        if let Some(ctrl) = self.controller.as_mut() {
+            for r in &results {
+                ctrl.observe_result(r);
+            }
+        }
         {
             let mut sink = MintSink {
                 next_id: &mut self.next_id,
@@ -474,6 +531,51 @@ impl<'a> Des<'a> {
         }
         self.all_results.extend(results);
         self.pump_engine(t);
+    }
+
+    /// All roots acked the recall: the old tree is empty. Retire its
+    /// stats, rebuild at the controller's shape, rewire the producer and
+    /// prime the new nodes — the drain-and-graft "graft" half.
+    fn graft(&mut self, t: f64) {
+        let shape = match &self.controller {
+            Some(c) => c.shape().clone(),
+            None => return,
+        };
+        if self.producer.shutdown_sent() {
+            // The run finished while the drain completed: nothing to graft.
+            return;
+        }
+        let retiring: Vec<NodeStats> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| s.stats(i, self.topo.nodes[i].level))
+            .collect();
+        self.retired_stats.extend(retiring);
+        let (depth, fans) = shape;
+        self.topo = TreeTopology::build(
+            self.cfg.sched.np,
+            self.cfg.sched.consumers_per_buffer,
+            depth,
+            &fans,
+        );
+        let n_nodes = self.topo.n_nodes();
+        self.nodes =
+            (0..n_nodes).map(|i| BufferState::for_tree_node(&self.topo, i, &self.cfg.sched)).collect();
+        self.node_free = vec![0.0; n_nodes];
+        self.producer.rewire(self.topo.roots.len());
+        if let Some(c) = self.controller.as_mut() {
+            c.grafted(t);
+        }
+        for n in 0..n_nodes {
+            self.nodes[n].set_now(t);
+            let acts = self.nodes[n].on_start();
+            self.perform_node(n, acts, t);
+        }
+        // The producer may already be quiescent (everything completed
+        // while draining): re-check so the new tree still shuts down.
+        let sd = self.producer.maybe_shutdown();
+        self.perform_producer(sd, t);
     }
 }
 
@@ -524,8 +626,12 @@ pub fn run_des(
     }
     // Direct mode: a single leaf holding every consumer, with its message
     // handling charged to the producer's serial server.
-    let (topo, depth, fanout) = if cfg.direct {
-        (TreeTopology::build(np, np, 1, cfg.sched.fanout), 1, cfg.sched.fanout)
+    let (topo, shape, measured) = if cfg.direct {
+        (
+            TreeTopology::build(np, np, 1, &cfg.sched.fanout),
+            (1, Vec::new()),
+            Calibration::fallback(),
+        )
     } else {
         // Only TreeShape::Auto pays for a measurement (sampling advances
         // stochastic duration models); Manual and Calibrated resolve from
@@ -535,10 +641,25 @@ pub fn run_des(
         } else {
             Calibration::fallback()
         };
-        let (depth, fanout) = resolve_shape(&cfg.sched, measured);
-        (TreeTopology::build(np, cfg.sched.consumers_per_buffer, depth, fanout), depth, fanout)
+        let (depth, fans) = resolve_shape(&cfg.sched, measured);
+        let topo = TreeTopology::build(np, cfg.sched.consumers_per_buffer, depth, &fans);
+        (topo, (depth, fans), measured)
     };
     let n_nodes = topo.n_nodes();
+
+    // Online re-shaping: the controller's drift reference is whatever
+    // calibration chose the initial shape. Direct mode pins the topology
+    // (single-master ablation), so re-shaping is disabled there.
+    let reference_cal = match cfg.sched.shape {
+        TreeShape::Calibrated(c) => c,
+        _ => measured,
+    };
+    let controller = match (&cfg.sched.reshape, cfg.direct) {
+        (Some(p), false) => {
+            Some(ReshapeController::new(&cfg.sched, *p, shape.clone(), reference_cal, 0.0))
+        }
+        _ => None,
+    };
 
     let mut des = Des {
         cfg,
@@ -558,6 +679,8 @@ pub fn run_des(
         events: 0,
         engine,
         durations,
+        controller,
+        retired_stats: Vec::new(),
         running: HashMap::new(),
         voided: HashSet::new(),
     };
@@ -569,6 +692,10 @@ pub fn run_des(
     for n in 0..n_nodes {
         let acts = des.nodes[n].on_start();
         des.perform_node(n, acts, 0.0);
+    }
+    if des.controller.is_some() {
+        let window = cfg.sched.reshape.as_ref().map(|p| p.window).unwrap_or(1.0).max(1e-9);
+        des.push(window, Ev::ReshapeTick);
     }
 
     // Main loop.
@@ -641,6 +768,12 @@ pub fn run_des(
                 des.perform_node(node, acts, t);
             }
             Ev::NodeCancel { node, id } => {
+                // A cancel broadcast can race a drain-and-graft: notices
+                // addressed to a retired tree die with it (cancellation
+                // stays best-effort; the task is back at the producer).
+                if node >= des.nodes.len() {
+                    continue;
+                }
                 let t = des.node_serve(node, time);
                 des.nodes[node].set_now(t);
                 let acts = des.nodes[node].on_cancel(id);
@@ -651,6 +784,67 @@ pub fn run_des(
                 des.nodes[node].set_now(t);
                 let acts = des.nodes[node].on_shutdown();
                 des.perform_node(node, acts, t);
+            }
+            Ev::NodeRecall { node } => {
+                let t = des.node_serve(node, time);
+                des.nodes[node].set_now(t);
+                let acts = des.nodes[node].on_recall();
+                des.perform_node(node, acts, t);
+            }
+            Ev::NodeReturned { node, tasks } => {
+                let t = des.node_serve(node, time);
+                des.nodes[node].set_now(t);
+                let acts = des.nodes[node].on_child_returned(tasks);
+                des.perform_node(node, acts, t);
+            }
+            Ev::NodeRecallAck { node, child } => {
+                let t = des.node_serve(node, time);
+                des.nodes[node].set_now(t);
+                let acts = des.nodes[node].on_child_recall_ack(child);
+                des.perform_node(node, acts, t);
+            }
+            Ev::ProdReturned { tasks } => {
+                let t = des.producer_serve(time);
+                des.producer.set_now(t);
+                des.producer.on_returned(tasks);
+            }
+            Ev::ProdRecallAck { slot } => {
+                let t = des.producer_serve(time);
+                des.producer.set_now(t);
+                if des.producer.on_recall_ack(slot) {
+                    des.graft(t);
+                }
+            }
+            Ev::ReshapeTick => {
+                // Pure bookkeeping at rank 0: no server time is charged,
+                // and the cadence is fixed, so runs stay deterministic.
+                if des.heap.is_empty() {
+                    // Nothing else can ever happen: the run is over.
+                    continue;
+                }
+                let window =
+                    des.cfg.sched.reshape.as_ref().map(|p| p.window).unwrap_or(1.0).max(1e-9);
+                des.push(time + window, Ev::ReshapeTick);
+                if des.producer.is_recalling() || des.producer.shutdown_sent() {
+                    continue;
+                }
+                let (mut lag_n, mut lag_sum) = (0u64, 0.0f64);
+                for &r in &des.topo.roots {
+                    let (n, s) = des.nodes[r].req_lag_totals();
+                    lag_n += n;
+                    lag_sum += s;
+                }
+                let fire = match des.controller.as_mut() {
+                    Some(ctrl) => {
+                        ctrl.observe_root_lag(lag_n, lag_sum);
+                        ctrl.maybe_reshape(time).is_some()
+                    }
+                    None => false,
+                };
+                if fire {
+                    let acts = des.producer.begin_recall();
+                    des.perform_producer(acts, time);
+                }
             }
         }
     }
@@ -664,6 +858,11 @@ pub fn run_des(
         .map(|(i, s)| s.stats(i, des.topo.nodes[i].level))
         .collect();
     let level_fill = des.filling.level_fill(&des.topo);
+    let (depth, fanout) = match &des.controller {
+        Some(c) => c.shape().clone(),
+        None => shape,
+    };
+    let reshapes = des.controller.as_ref().map(|c| c.events().to_vec()).unwrap_or_default();
     DesReport {
         results: des.all_results,
         filling: des.filling,
@@ -673,9 +872,11 @@ pub fn run_des(
         producer_msgs_out: des.producer.msgs_out,
         max_producer_lag: des.max_producer_lag,
         node_stats,
+        retired_node_stats: des.retired_stats,
         level_fill,
         depth,
         fanout,
+        reshapes,
     }
 }
 
@@ -772,7 +973,7 @@ mod tests {
         let mut cfg = DesConfig::new(64);
         cfg.sched.consumers_per_buffer = 8; // 8 leaves
         cfg.sched.depth = 2;
-        cfg.sched.fanout = 4; // 2 relays above them
+        cfg.sched.fanout = vec![4]; // 2 relays above them
         let r = run_des(
             &cfg,
             Box::new(TestCaseEngine::new(TestCase::TC2, 6400, 3)),
@@ -795,7 +996,7 @@ mod tests {
         let mut cfg = DesConfig::new(128);
         cfg.sched.consumers_per_buffer = 8; // 16 leaves
         cfg.sched.depth = 3;
-        cfg.sched.fanout = 4; // 4 relays, then 1 root relay
+        cfg.sched.fanout = vec![4]; // 4 relays, then 1 root relay
         cfg.sched.steal = true;
         let r = run_des(
             &cfg,

@@ -409,7 +409,7 @@ mod tests {
                 np: 8,
                 consumers_per_buffer: 2, // 4 leaves
                 depth: 3,
-                fanout: 2,
+                fanout: vec![2],
                 steal: true,
                 flush_interval_ms: 2,
                 ..Default::default()

@@ -17,7 +17,7 @@
 use std::sync::Arc;
 
 use caravan::api::{JobSink, JobSpec};
-use caravan::config::{SchedPolicy, SchedulerConfig, TreeShape};
+use caravan::config::{fanout_label, ReshapePolicy, SchedPolicy, SchedulerConfig, TreeShape};
 use caravan::des::{run_des, DesConfig, SleepDurations};
 use caravan::evac::{build_scenario, EvacEvaluator, RustSimBackend, ScenarioParams, SimBackend};
 use caravan::extproc::CommandExecutor;
@@ -52,7 +52,7 @@ impl SearchEngine for RepeatCmd {
 
 fn usage() {
     eprintln!(
-        "usage: caravan <run|des|evac|info> [--options]
+        "usage: caravan <run|des|evac|info> [--options] (--help prints this)
 
   run '<cmdline>'   run an external command through the scheduler
       --n N           number of tasks (default 10)
@@ -71,18 +71,52 @@ fn usage() {
       --depth D|auto  buffer-tree depth; 'auto' runs a short calibration
                       (producer round trip + mean task duration) and lets
                       the controller pick depth and fanout
-      --fanout F      interior fanout (upper bound under --depth auto)
+      --fanout F[,F2,..]  per-level interior fanout, root level first,
+                      last value repeating deeper (one value = uniform;
+                      the maximum is the bound under --depth auto)
+      --reshape       re-shape the tree *online* when the measured lag or
+                      task duration drifts: queued work is recalled with
+                      its scheduling stamps intact, the tree is rebuilt,
+                      and the work re-granted (drain-and-graft)
+      --reshape-window S    rolling measurement window, virtual seconds
+                            (default 10)
+      --reshape-drift X     relative drift that may trigger a transition
+                            (default 0.25)
+      --reshape-cooldown S  minimum seconds between transitions
+                            (default 30)
 
   des               DES filling-rate experiment (Fig. 3 point)
-      --np N --tc 1|2|3 --tasks-per-proc N --depth D|auto --fanout F
-      --steal --steal-round-robin --direct --seed S
+      --np N --tc 1|2|3 --tasks-per-proc N --depth D|auto
+      --fanout F[,F2,..] --steal --steal-round-robin --direct --seed S
       --policy strict|deadline|aging[:SECONDS]
+      --reshape [--reshape-window S --reshape-drift X
+                 --reshape-cooldown S]   (as for run; virtual time)
 
   evac              evaluate one random evacuation plan
       --variant tiny|mini --backend rust|pjrt --seed S
+      --scenario-seed S   seed for the generated road network (default 1)
 
-  info              print artifact + scenario inventory"
+  info              print artifact + scenario inventory
+      --artifacts DIR     artifact directory to inspect (default
+                          'artifacts')"
     );
+}
+
+/// Apply `--reshape` (and its `--reshape-*` tuning knobs) to a scheduler
+/// config. Any tuning knob implies `--reshape` itself.
+fn apply_reshape(args: &Args, cfg: &mut SchedulerConfig) {
+    let tuned = args.get_opt("reshape-window").is_some()
+        || args.get_opt("reshape-drift").is_some()
+        || args.get_opt("reshape-cooldown").is_some();
+    if !args.has_flag("reshape") && !tuned {
+        return;
+    }
+    let d = ReshapePolicy::default();
+    cfg.reshape = Some(ReshapePolicy {
+        window: args.get_f64("reshape-window", d.window),
+        drift_threshold: args.get_f64("reshape-drift", d.drift_threshold),
+        cooldown: args.get_f64("reshape-cooldown", d.cooldown),
+    });
 }
 
 /// Apply `--depth D|auto` and `--fanout F` to a scheduler config.
@@ -90,7 +124,11 @@ fn usage() {
 /// phase measures the producer round trip and mean task duration, and the
 /// controller picks depth/fanout — the user never tunes the shape.
 fn apply_shape(args: &Args, cfg: &mut SchedulerConfig) {
-    cfg.fanout = args.get_usize("fanout", cfg.fanout);
+    cfg.fanout = args.get_list_usize("fanout", &cfg.fanout);
+    if cfg.fanout.is_empty() || cfg.fanout.iter().any(|&f| f == 0) {
+        eprintln!("--fanout: expected positive values, e.g. 8 or 4,8");
+        std::process::exit(2);
+    }
     match args.get_opt("depth") {
         None => {}
         Some("auto") => cfg.shape = TreeShape::Auto,
@@ -154,6 +192,7 @@ fn cmd_run(args: &Args) {
         ..Default::default()
     };
     apply_shape(args, &mut cfg);
+    apply_reshape(args, &mut cfg);
     let work = std::env::temp_dir().join(format!("caravan_run_{}", std::process::id()));
     let report = run_scheduler(
         &cfg,
@@ -168,11 +207,23 @@ fn cmd_run(args: &Args) {
         failures,
         retried,
         report.depth,
-        report.fanout,
+        fanout_label(&report.fanout),
         if cfg.shape.is_auto() { " (auto)" } else { "" },
         report.rate(np) * 100.0,
         report.wall_secs
     );
+    for ev in &report.reshapes {
+        println!(
+            "  reshape @{:.1}s: depth {} fanout {} -> depth {} fanout {} (rtt {:.2}ms, task {:.2}s)",
+            ev.t,
+            ev.from_depth,
+            fanout_label(&ev.from_fanout),
+            ev.to_depth,
+            fanout_label(&ev.to_fanout),
+            ev.cal.producer_rtt * 1e3,
+            ev.cal.mean_task_s
+        );
+    }
     let _ = std::fs::remove_dir_all(&work);
     if failures > 0 {
         std::process::exit(1);
@@ -186,6 +237,7 @@ fn cmd_des(args: &Args) {
     let mut cfg = DesConfig::new(np);
     cfg.direct = args.has_flag("direct");
     apply_shape(args, &mut cfg.sched);
+    apply_reshape(args, &mut cfg.sched);
     cfg.sched.steal = args.has_flag("steal") || args.has_flag("steal-round-robin");
     if args.has_flag("steal-round-robin") {
         cfg.sched.steal_policy = caravan::config::StealPolicy::RoundRobin;
@@ -203,7 +255,7 @@ fn cmd_des(args: &Args) {
     println!(
         "{case:?} np={np} n={n} depth={} fanout={}{shape_note}: filling {:.2}%, makespan {:.0}s (virtual), {} events in {:.2}s wall",
         r.depth,
-        r.fanout,
+        fanout_label(&r.fanout),
         r.rate(np) * 100.0,
         r.makespan,
         r.events_processed,
@@ -216,6 +268,18 @@ fn cmd_des(args: &Args) {
             lf.n_nodes,
             lf.mean_rate * 100.0,
             lf.min_rate * 100.0
+        );
+    }
+    for ev in &r.reshapes {
+        println!(
+            "  reshape @{:.1}s: depth {} fanout {} -> depth {} fanout {} (rtt {:.2}ms, task {:.2}s)",
+            ev.t,
+            ev.from_depth,
+            fanout_label(&ev.from_fanout),
+            ev.to_depth,
+            fanout_label(&ev.to_fanout),
+            ev.cal.producer_rtt * 1e3,
+            ev.cal.mean_task_s
         );
     }
     let stolen = r.tasks_stolen();

@@ -314,7 +314,7 @@ mod tests {
         assert!((f.rate_for_range(0, 2) - 1.0).abs() < 1e-12);
         assert!((f.rate_for_range(2, 4) - 0.5).abs() < 1e-12);
         assert!((f.rate(4) - 0.75).abs() < 1e-12);
-        let topo = crate::config::TreeTopology::build(4, 2, 2, 2);
+        let topo = crate::config::TreeTopology::build(4, 2, 2, &[2]);
         let lf = f.level_fill(&topo);
         assert_eq!(lf.len(), 2);
         // Leaf level (2 leaves of 2 ranks): mean (1.0 + 0.5)/2, min 0.5.

@@ -7,8 +7,10 @@
 
 pub mod metrics;
 pub mod protocol;
+pub mod reshape;
 pub mod threads;
 
 pub use metrics::{BandWaitHist, FillingRate, LevelFill, NodeStats, N_WAIT_BINS, WAIT_BUCKET_EDGES};
-pub use protocol::{choose_shape, resolve_shape, PrioQueue, MAX_AUTO_DEPTH};
+pub use protocol::{choose_shape, resolve_shape, shaped_fanouts, PrioQueue, MAX_AUTO_DEPTH};
+pub use reshape::{ReshapeController, ReshapeEvent};
 pub use threads::{run_scheduler, CancelSet, ExecOutcome, Executor, Report, SleepExecutor};

@@ -57,7 +57,14 @@
 //!   [`BufferAction::CancelRunning`] (the executor reports
 //!   `RC_CANCELLED`, exempt from retry); a notice that finds no local
 //!   target is kept as a tombstone and forwarded with steal grants, so a
-//!   cancel racing a sideways task move is applied when the task lands.
+//!   cancel racing a sideways task move is applied when the task lands;
+//! * **recall** (drain-and-graft re-shaping): on
+//!   [`ProducerState::begin_recall`] the whole tree quiesces — grants are
+//!   withheld, every node returns its queued tasks upstream with
+//!   `enqueued_t` preserved and acks once its subtree is drained — so
+//!   the runtime can rebuild the tree at a new depth/fanout and re-grant
+//!   the recalled work without losing, duplicating, or re-ordering (per
+//!   [`SchedPolicy`]) a single task.
 
 use super::metrics::{wait_bin, BandWaitHist, NodeStats, N_WAIT_BINS};
 use crate::config::{
@@ -311,24 +318,47 @@ pub const MAX_AUTO_DEPTH: usize = 3;
 /// shallowest tree whose predicted utilization clears this target wins.
 const TARGET_PRODUCER_UTIL: f64 = 0.5;
 
-/// Smallest fanout `f ≥ 2` (capped at `max_fanout`) such that `f^depth ≥
-/// nb`: with `nb` leaves spread over `depth` buffer levels, this bounds
-/// *every* fan-in — including the producer's own, since the root count
-/// `⌈nb / f^(depth−1)⌉` is then at most `f`.
-fn balanced_fanout(nb: usize, depth: usize, max_fanout: usize) -> usize {
-    let max_fanout = max_fanout.max(2);
-    (2..max_fanout)
-        .find(|f| f.saturating_pow(depth as u32) >= nb)
-        .unwrap_or(max_fanout)
+/// Per-level fanout plan for `nb` leaves over `depth` buffer levels:
+/// **wide near the leaves, narrow at the root**. The returned vector is
+/// ordered root-down ([`SchedulerConfig::fanout`] convention, length
+/// `depth − 1`; empty for the flat layout).
+///
+/// Every grouping stage below the top uses the full width `max_fanout` —
+/// leaf-side fan-in is cheap because results batch upward and leaf
+/// requests are low-rate. The top stage then picks the smallest fanout
+/// `f` that still bounds the producer's own fan-in (`⌈m / f⌉ ≤ f` for the
+/// `m` nodes left to group), so both the root count (which the request
+/// traffic scales with) and the level-1 fan-in stay small where the
+/// traffic concentrates.
+pub fn shaped_fanouts(nb: usize, depth: usize, max_fanout: usize) -> Vec<usize> {
+    if depth <= 1 {
+        return Vec::new();
+    }
+    let fmax = max_fanout.max(2);
+    // Nodes left to group after the wide lower stages.
+    let mut m = nb;
+    for _ in 0..depth - 2 {
+        m = m.div_ceil(fmax);
+    }
+    let f_top = (2..fmax).find(|&f| m.div_ceil(f) <= f).unwrap_or(fmax);
+    let mut fans = vec![fmax; depth - 1];
+    fans[0] = f_top;
+    fans
 }
 
-/// Producer direct children for `nb` leaves at the given depth/fanout.
-fn root_count(nb: usize, depth: usize, fanout: usize) -> usize {
-    nb.div_ceil(fanout.max(1).saturating_pow(depth as u32 - 1)).max(1)
+/// Producer direct children for `nb` leaves under a root-down per-level
+/// fanout plan (applied leaf-side first, exactly as
+/// [`crate::config::TreeTopology::build`] groups).
+pub fn root_count(nb: usize, fanouts: &[usize]) -> usize {
+    let mut m = nb;
+    for &f in fanouts.iter().rev() {
+        m = m.div_ceil(f.max(1));
+    }
+    m.max(1)
 }
 
-/// The adaptive tree-shaping controller: pick `(depth, fanout)` for the
-/// configured scale from a [`Calibration`] measurement. Pure and
+/// The adaptive tree-shaping controller: pick `(depth, per-level fanout)`
+/// for the configured scale from a [`Calibration`] measurement. Pure and
 /// deterministic — both runtimes call this one function, so the same
 /// calibration inputs always select the same shape (and the DES choice is
 /// deterministic in virtual time).
@@ -346,33 +376,30 @@ fn root_count(nb: usize, depth: usize, fanout: usize) -> usize {
 /// * the per-message producer cost is approximated as half the measured
 ///   request→grant round trip (the other half being the two wire hops).
 ///
-/// The controller walks depth 1 → [`MAX_AUTO_DEPTH`] with the balanced
-/// fanout for each depth and returns the first shape whose predicted
-/// producer utilization is at most the target — or the deepest candidate
-/// when the producer lag dominates so hard that no shape clears it
-/// (utilization still strictly improves with every level until the root
-/// count hits 1).
-pub fn choose_shape(cfg: &SchedulerConfig, cal: &Calibration) -> (usize, usize) {
+/// The controller walks depth 1 → [`MAX_AUTO_DEPTH`], each with its
+/// [`shaped_fanouts`] plan (wide at the leaves, narrow at the root), and
+/// returns the first shape whose predicted producer utilization is at
+/// most the target — or the deepest candidate when the producer lag
+/// dominates so hard that no shape clears it (utilization still strictly
+/// improves with every level until the root count hits 1).
+pub fn choose_shape(cfg: &SchedulerConfig, cal: &Calibration) -> (usize, Vec<usize>) {
     let nb = cfg.num_buffers();
     if nb <= 1 {
         // A single leaf: no layer to restructure.
-        return (1, cfg.fanout.max(1));
+        return (1, Vec::new());
     }
+    let fmax = cfg.max_fanout();
     let tau = cal.mean_task_s.max(1e-9);
     let per_msg_cost = (cal.producer_rtt / 2.0).max(0.0);
     let refill_window = (cfg.credit_factor.max(2) - 1) as f64 * tau;
     let result_rate = cfg.np as f64 / (tau * cfg.flush_every.max(1) as f64);
-    let mut chosen = (1, cfg.fanout.max(1));
+    let mut chosen = (1, Vec::new());
     for depth in 1..=MAX_AUTO_DEPTH {
-        let fanout = if depth == 1 {
-            cfg.fanout.max(1)
-        } else {
-            balanced_fanout(nb, depth, cfg.fanout)
-        };
-        let roots = root_count(nb, depth, fanout);
+        let fans = shaped_fanouts(nb, depth, fmax);
+        let roots = root_count(nb, &fans);
         let request_rate = 2.0 * roots as f64 / refill_window;
         let util = per_msg_cost * (result_rate + request_rate);
-        chosen = (depth, fanout);
+        chosen = (depth, fans);
         if util <= TARGET_PRODUCER_UTIL || roots == 1 {
             break;
         }
@@ -380,14 +407,18 @@ pub fn choose_shape(cfg: &SchedulerConfig, cal: &Calibration) -> (usize, usize) 
     chosen
 }
 
-/// Resolve a config's effective `(depth, fanout)`: manual knobs pass
-/// through; auto modes consult [`choose_shape`] with the given
-/// calibration (the runtime's own measurement for [`TreeShape::Auto`],
-/// the preset for [`TreeShape::Calibrated`]).
-pub fn resolve_shape(cfg: &SchedulerConfig, measured: Calibration) -> (usize, usize) {
+/// Resolve a config's effective `(depth, per-level fanout)`: manual knobs
+/// pass through (the per-level plan expanded to `depth − 1` entries);
+/// auto modes consult [`choose_shape`] with the given calibration (the
+/// runtime's own measurement for [`crate::config::TreeShape::Auto`], the
+/// preset for [`crate::config::TreeShape::Calibrated`]).
+pub fn resolve_shape(cfg: &SchedulerConfig, measured: Calibration) -> (usize, Vec<usize>) {
     use crate::config::TreeShape;
     match cfg.shape {
-        TreeShape::Manual => (cfg.depth, cfg.fanout),
+        TreeShape::Manual => {
+            let fans = (1..cfg.depth.max(1)).map(|l| cfg.fanout_at(l)).collect();
+            (cfg.depth.max(1), fans)
+        }
         TreeShape::Auto => choose_shape(cfg, &measured),
         TreeShape::Calibrated(cal) => choose_shape(cfg, &cal),
     }
@@ -402,6 +433,10 @@ pub enum ProducerAction {
     /// Forward a cancellation notice to every child (the producer does not
     /// know where — or whether — the task is queued).
     BroadcastCancel { id: TaskId },
+    /// Begin a drain-and-graft transition: tell every child to stop
+    /// requesting work, return its queued tasks upstream, and ack once
+    /// its subtree is drained (see [`BufferState::on_recall`]).
+    BroadcastRecall,
     /// All work is done: tell every child to shut down.
     BroadcastShutdown,
 }
@@ -445,6 +480,14 @@ pub enum BufferAction {
     ShutdownConsumers,
     /// Interior: forward the shutdown notice to all children.
     ShutdownChildren,
+    /// Recall: send these drained (or returned-by-a-child) tasks to the
+    /// parent, `enqueued_t` stamps intact, for re-enqueue at the producer.
+    ReturnTasks(Vec<TaskSpec>),
+    /// Interior: forward the recall notice to all children.
+    RecallChildren,
+    /// Tell the parent this node's subtree is drained: no queued tasks,
+    /// no running attempts, no outstanding steal, all children acked.
+    AckRecall,
 }
 
 /// Producer (rank 0) state: the global pending-task queue plus which
@@ -461,6 +504,11 @@ pub struct ProducerState {
     cancelled: u64,
     engine_done: bool,
     shutdown_sent: bool,
+    /// True while a drain-and-graft transition is in flight: grants are
+    /// withheld so the old tree can empty out.
+    recalling: bool,
+    /// Which direct children have acked the recall (drained subtrees).
+    recall_acks: Vec<bool>,
     /// Message-count instrumentation (drives the buffered-layer ablation).
     pub msgs_in: u64,
     pub msgs_out: u64,
@@ -478,6 +526,8 @@ impl ProducerState {
             cancelled: 0,
             engine_done: false,
             shutdown_sent: false,
+            recalling: false,
+            recall_acks: vec![false; num_buffers],
             msgs_in: 0,
             msgs_out: 0,
         }
@@ -577,7 +627,70 @@ impl ProducerState {
         }
     }
 
+    /// True once the shutdown broadcast went out.
+    pub fn shutdown_sent(&self) -> bool {
+        self.shutdown_sent
+    }
+
+    /// Begin a drain-and-graft transition: withhold further grants and
+    /// tell every direct child to drain its subtree and ack. No-op when a
+    /// recall is already in flight or the run is shutting down.
+    pub fn begin_recall(&mut self) -> Vec<ProducerAction> {
+        if self.recalling || self.shutdown_sent {
+            return Vec::new();
+        }
+        self.recalling = true;
+        for a in self.recall_acks.iter_mut() {
+            *a = false;
+        }
+        self.msgs_out += self.deficit.len() as u64;
+        vec![ProducerAction::BroadcastRecall]
+    }
+
+    /// True while a drain-and-graft transition is in flight.
+    pub fn is_recalling(&self) -> bool {
+        self.recalling
+    }
+
+    /// Recalled tasks arrive back from the tree. They re-enter the
+    /// pending queue with their original `enqueued_t` stamps (the queue
+    /// preserves existing stamps), so deadline slack and aging — and
+    /// therefore the [`SchedPolicy`] order — survive the transition.
+    /// Accounting is untouched: a recalled task was already counted
+    /// `submitted` and is simply pending again, so `in_flight` and the
+    /// Σcounts == popped conservation both hold across the graft.
+    pub fn on_returned(&mut self, tasks: Vec<TaskSpec>) {
+        self.msgs_in += 1;
+        self.pending.extend(tasks);
+    }
+
+    /// Direct child `slot` reports its subtree drained. Returns true once
+    /// every child has acked — the moment the runtime may tear down the
+    /// old tree and graft the new shape.
+    pub fn on_recall_ack(&mut self, slot: usize) -> bool {
+        self.msgs_in += 1;
+        if let Some(a) = self.recall_acks.get_mut(slot) {
+            *a = true;
+        }
+        self.recalling && self.recall_acks.iter().all(|&a| a)
+    }
+
+    /// Attach the producer to a rebuilt tree with `num_buffers` direct
+    /// children: deficits and the recall state reset, the pending queue
+    /// and the submitted/completed accounting carry over.
+    pub fn rewire(&mut self, num_buffers: usize) {
+        assert!(num_buffers > 0);
+        self.recalling = false;
+        self.deficit = vec![0; num_buffers];
+        self.recall_acks = vec![false; num_buffers];
+        self.cursor = 0;
+    }
+
     fn satisfy_deficits(&mut self) -> Vec<ProducerAction> {
+        if self.recalling {
+            // Credit withdrawal: grants resume once the graft completes.
+            return Vec::new();
+        }
         // Fairness under scarcity: when fewer tasks are pending than the
         // total outstanding deficit, granting each child its full credit
         // first-come-first-served would leave later children (and their
@@ -668,6 +781,14 @@ pub struct BufferState {
     credit_factor: usize,
     flush_every: usize,
     shutting_down: bool,
+    /// True after a recall notice: the node stops requesting and
+    /// dispatching, drains its queue upstream, and acks when empty.
+    recalling: bool,
+    /// The recall ack went out (guards against double-acks when late
+    /// steal traffic drains through an already-empty node).
+    recall_acked: bool,
+    /// Interior: which children have acked the recall.
+    children_acked: Vec<bool>,
     max_queue: usize,
     pub steals_attempted: u64,
     /// Steal attempts answered with an empty grant.
@@ -738,6 +859,9 @@ impl BufferState {
             credit_factor: credit_factor.max(1),
             flush_every: flush_every.max(1),
             shutting_down: false,
+            recalling: false,
+            recall_acked: false,
+            children_acked: Vec::new(),
             max_queue: 0,
             steals_attempted: 0,
             steals_failed: 0,
@@ -787,6 +911,9 @@ impl BufferState {
             credit_factor: credit_factor.max(1),
             flush_every: flush_every.max(1),
             shutting_down: false,
+            recalling: false,
+            recall_acked: false,
+            children_acked: vec![false; n_children],
             max_queue: 0,
             steals_attempted: 0,
             steals_failed: 0,
@@ -963,6 +1090,14 @@ impl BufferState {
         }
         self.outstanding_request = self.outstanding_request.saturating_sub(tasks.len().max(1));
         self.accept(tasks);
+        if self.recalling {
+            // A grant racing the recall notice: bounce the tasks straight
+            // back upstream (stamps intact) instead of dispatching.
+            let mut out = self.drain_queue_upstream();
+            out.extend(self.flush_if_due());
+            out.extend(self.maybe_ack_recall());
+            return out;
+        }
         let mut out = self.deliver();
         out.extend(self.request_if_low());
         // Tombstoned arrivals synthesize results straight into the store.
@@ -1014,7 +1149,10 @@ impl BufferState {
             None => self.store.push(result),
         }
         let mut out = Vec::new();
-        let next = self.queue.pop();
+        // While recalling, nothing is dispatched: the consumer goes idle
+        // and anything queued (e.g. a retry re-queued just above) drains
+        // back upstream for re-dispatch after the graft.
+        let next = if self.recalling { None } else { self.queue.pop() };
         match &mut self.children {
             Children::Consumers { idle, running, .. } => {
                 if let Some(task) = next {
@@ -1027,11 +1165,15 @@ impl BufferState {
             }
             Children::Buffers { .. } => unreachable!(),
         }
+        if self.recalling {
+            out.extend(self.drain_queue_upstream());
+        }
         out.extend(self.request_if_low());
         out.extend(self.flush_if_due());
         if self.shutting_down && self.busy_count() == 0 {
             out.extend(self.final_flush());
         }
+        out.extend(self.maybe_ack_recall());
         out
     }
 
@@ -1045,6 +1187,10 @@ impl BufferState {
             Children::Consumers { .. } => {
                 panic!("on_child_request called on a leaf buffer node")
             }
+        }
+        if self.recalling {
+            // Demand is remembered but not served: the child drains next.
+            return Vec::new();
         }
         let mut out = self.deliver();
         out.extend(self.request_if_low());
@@ -1120,7 +1266,11 @@ impl BufferState {
         if let Some(d) = self.sibling_depth.get_mut(thief_slot) {
             *d = 0;
         }
-        let give = if self.shutting_down { 0 } else { amount.min(self.queue.len() / 2) };
+        let give = if self.shutting_down || self.recalling {
+            0
+        } else {
+            amount.min(self.queue.len() / 2)
+        };
         let tasks = self.queue.take_back(give);
         self.steals_given += tasks.len() as u64;
         self.msgs_out += 1;
@@ -1166,6 +1316,14 @@ impl BufferState {
             self.steal_tried = false;
         }
         self.accept(tasks);
+        if self.recalling {
+            // Loot racing the recall: bounce it upstream and — with the
+            // last outstanding steal now answered — possibly ack.
+            let mut out = self.drain_queue_upstream();
+            out.extend(self.flush_if_due());
+            out.extend(self.maybe_ack_recall());
+            return out;
+        }
         let mut out = self.deliver();
         // An empty grant leaves steal_tried set, so this escalates upstream.
         out.extend(self.request_if_low());
@@ -1205,6 +1363,113 @@ impl BufferState {
         } else {
             self.flush_now()
         }
+    }
+
+    /// A recall notice arrived (drain-and-graft transition, see
+    /// [`ProducerState::begin_recall`]). The node stops requesting and
+    /// dispatching, returns its queued tasks upstream with `enqueued_t`
+    /// preserved, forwards the notice to child buffers, and acks once its
+    /// subtree is drained: a leaf waits for running attempts (their
+    /// results flow up the ordinary path) and any outstanding steal
+    /// reply; an interior node waits for every child's ack. Per-channel
+    /// FIFO (threads) / latency-ordered delivery (DES) guarantee that a
+    /// node's returned tasks and result flushes arrive at its parent
+    /// before its ack, so when the producer holds every root's ack the
+    /// old tree is provably empty.
+    pub fn on_recall(&mut self) -> Vec<BufferAction> {
+        self.msgs_in += 1;
+        self.recalling = true;
+        let mut out = self.drain_queue_upstream();
+        if let Children::Buffers { deficit, .. } = &mut self.children {
+            for d in deficit.iter_mut() {
+                *d = 0;
+            }
+            self.msgs_out += self.children_acked.len() as u64;
+            out.push(BufferAction::RecallChildren);
+        }
+        out.extend(self.flush_if_due());
+        out.extend(self.maybe_ack_recall());
+        out
+    }
+
+    /// Interior: a child returned recalled tasks. Tasks with a pending
+    /// cancellation notice here are dropped and reported cancelled (the
+    /// same conservation path as a tombstoned steal arrival); the rest
+    /// are forwarded upstream untouched.
+    pub fn on_child_returned(&mut self, tasks: Vec<TaskSpec>) -> Vec<BufferAction> {
+        self.msgs_in += 1;
+        let mut keep = Vec::with_capacity(tasks.len());
+        for t in tasks {
+            if self.consume_tombstone(t.id) {
+                self.cancelled_dropped += 1;
+                self.store.push(TaskResult::cancelled_for(&t));
+            } else {
+                keep.push(t);
+            }
+        }
+        let mut out = Vec::new();
+        if !keep.is_empty() {
+            self.msgs_out += 1;
+            out.push(BufferAction::ReturnTasks(keep));
+        }
+        out.extend(self.flush_if_due());
+        out
+    }
+
+    /// Interior: child slot `child` acked the recall.
+    pub fn on_child_recall_ack(&mut self, child: usize) -> Vec<BufferAction> {
+        self.msgs_in += 1;
+        if let Some(a) = self.children_acked.get_mut(child) {
+            *a = true;
+        }
+        self.maybe_ack_recall()
+    }
+
+    /// True after a recall notice was received (the node is draining).
+    pub fn is_recalling(&self) -> bool {
+        self.recalling
+    }
+
+    /// Cumulative request→grant lag totals `(count, sum of seconds)` —
+    /// the live signal the reshape controller rebuilds its rolling
+    /// [`Calibration`] from (summed over the producer's direct children).
+    pub fn req_lag_totals(&self) -> (u64, f64) {
+        (self.req_lag_n, self.req_lag_sum)
+    }
+
+    /// Move the entire local queue upstream (recall drain). Uses
+    /// `take_back`, not pops, so the per-band wait histograms keep
+    /// counting *dispatches* only and Σcounts == popped conservation
+    /// holds across the transition.
+    fn drain_queue_upstream(&mut self) -> Vec<BufferAction> {
+        let drained = self.queue.take_back(self.queue.len());
+        if drained.is_empty() {
+            return Vec::new();
+        }
+        self.msgs_out += 1;
+        vec![BufferAction::ReturnTasks(drained)]
+    }
+
+    /// Emit the recall ack exactly once, when this subtree is drained.
+    fn maybe_ack_recall(&mut self) -> Vec<BufferAction> {
+        if !self.recalling || self.recall_acked || self.steal_outstanding > 0 {
+            return Vec::new();
+        }
+        let drained = match &self.children {
+            Children::Consumers { n, idle, .. } => idle.len() == *n,
+            Children::Buffers { .. } => self.children_acked.iter().all(|&a| a),
+        };
+        if !drained || !self.queue.is_empty() {
+            return Vec::new();
+        }
+        self.recall_acked = true;
+        let mut out = Vec::new();
+        if !self.store.is_empty() {
+            out.extend(self.flush_now());
+        }
+        self.msgs_out += 1;
+        out.push(BufferAction::AckRecall);
+        out
     }
 
     /// Remember an unmatched cancellation notice, evicting the oldest
@@ -1298,7 +1563,7 @@ impl BufferState {
     }
 
     fn request_if_low(&mut self) -> Vec<BufferAction> {
-        if self.shutting_down {
+        if self.shutting_down || self.recalling {
             return Vec::new();
         }
         let low = self.subtree_consumers();
@@ -2210,10 +2475,46 @@ mod tests {
         // flat layout's request traffic saturates rank 0, so the
         // controller must insert relay levels.
         let cfg = shape_cfg(4096, 64);
-        let (depth, fanout) = choose_shape(&cfg, &cal(5e-3, 0.5));
+        let (depth, fans) = choose_shape(&cfg, &cal(5e-3, 0.5));
         assert!(depth >= 2, "depth={depth}");
-        // The balanced fanout bounds the producer's own fan-in too.
-        assert!(root_count(cfg.num_buffers(), depth, fanout) <= fanout);
+        assert_eq!(fans.len(), depth - 1);
+        // The top fanout bounds the producer's own fan-in too.
+        assert!(root_count(cfg.num_buffers(), &fans) <= fans[0]);
+    }
+
+    #[test]
+    fn shaped_fanouts_are_wide_at_leaves_narrow_at_root() {
+        // 261 leaves (the 10⁵-consumer scale) over 3 levels, bound 8:
+        // the lower stage takes the full width, the top stage shrinks to
+        // the smallest fanout that still bounds the producer's fan-in.
+        let fans = shaped_fanouts(261, 3, 8);
+        assert_eq!(fans.len(), 2);
+        assert!(fans[0] <= fans[1], "root level must not be wider: {fans:?}");
+        assert_eq!(fans[1], 8, "leaf-adjacent stage uses the full width");
+        let roots = root_count(261, &fans);
+        assert!(roots <= fans[0], "roots {roots} exceed top fan-in {}", fans[0]);
+        // Depth 1 has no interior level to plan.
+        assert!(shaped_fanouts(261, 1, 8).is_empty());
+        // Property: the plan always covers the leaves and keeps the
+        // narrow-at-root ordering, and root_count matches the grouping
+        // the topology builder performs.
+        use crate::config::TreeTopology;
+        use crate::testutil::{check, pair, usize_in};
+        check(
+            "shaped fanouts cover leaves, stay monotone, match the topology",
+            pair(usize_in(2..400), pair(usize_in(2..4), usize_in(2..17))),
+            |&(nb, (depth, fmax))| {
+                let fans = shaped_fanouts(nb, depth, fmax);
+                if fans.len() != depth - 1 {
+                    return false;
+                }
+                if fans.windows(2).any(|w| w[0] > w[1]) {
+                    return false;
+                }
+                let topo = TreeTopology::build(nb, 1, depth, &fans);
+                topo.roots.len() == root_count(nb, &fans)
+            },
+        );
     }
 
     #[test]
@@ -2244,8 +2545,14 @@ mod tests {
         use crate::config::TreeShape;
         let mut cfg = shape_cfg(4096, 64);
         cfg.depth = 2;
-        cfg.fanout = 4;
-        assert_eq!(resolve_shape(&cfg, Calibration::fallback()), (2, 4));
+        cfg.fanout = vec![4];
+        assert_eq!(resolve_shape(&cfg, Calibration::fallback()), (2, vec![4]));
+        // A manual per-level plan expands to depth − 1 effective entries.
+        cfg.depth = 3;
+        cfg.fanout = vec![4, 8];
+        assert_eq!(resolve_shape(&cfg, Calibration::fallback()), (3, vec![4, 8]));
+        cfg.fanout = vec![4];
+        assert_eq!(resolve_shape(&cfg, Calibration::fallback()), (3, vec![4, 4]));
         cfg.shape = TreeShape::Calibrated(cal(1e-4, 5.0));
         // The preset wins over whatever the runtime measured.
         assert_eq!(resolve_shape(&cfg, cal(10.0, 0.01)).0, 1);
@@ -2313,6 +2620,190 @@ mod tests {
                 q.popped() == pops && hist_total == pops
             },
         );
+    }
+
+    /// Collect the task ids inside every `ReturnTasks` action.
+    fn returned_ids(acts: &[BufferAction]) -> Vec<u64> {
+        acts.iter()
+            .flat_map(|a| match a {
+                BufferAction::ReturnTasks(ts) => ts.iter().map(|t| t.id).collect::<Vec<_>>(),
+                _ => Vec::new(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn leaf_recall_drains_queue_and_acks_after_running_finish() {
+        let mut b = BufferState::new(2, 4, 100);
+        b.set_now(1.0);
+        b.on_start();
+        b.on_assign((0..6).map(task).collect()); // 2 running, 4 queued
+        let acts = b.on_recall();
+        // The queue drains upstream with enqueue stamps preserved…
+        assert_eq!(returned_ids(&acts), vec![2, 3, 4, 5]);
+        assert!(
+            acts.iter().all(|a| !matches!(a, BufferAction::AckRecall)),
+            "busy consumers: ack must wait ({acts:?})"
+        );
+        assert_eq!(b.queue_len(), 0);
+        // …and a grant racing the recall bounces straight back.
+        let acts = b.on_assign(vec![task(9)]);
+        assert_eq!(returned_ids(&acts), vec![9]);
+        assert!(!acts.iter().any(|a| matches!(a, BufferAction::RunOn { .. })));
+        // Completions flow normally; nothing new is dispatched; the ack
+        // fires with the last running attempt.
+        let acts = b.on_done(0, result(0, 0));
+        assert!(!acts.iter().any(|a| matches!(a, BufferAction::RunOn { .. })));
+        assert!(!acts.iter().any(|a| matches!(a, BufferAction::AckRecall)));
+        let acts = b.on_done(1, result(1, 1));
+        assert!(
+            acts.iter().any(|a| matches!(a, BufferAction::FlushResults(_))),
+            "results drain before the ack: {acts:?}"
+        );
+        assert_eq!(
+            acts.last(),
+            Some(&BufferAction::AckRecall),
+            "ack must be the node's last upstream message"
+        );
+        // Idempotent: nothing re-acks.
+        assert!(b.on_tick().iter().all(|a| !matches!(a, BufferAction::AckRecall)));
+    }
+
+    #[test]
+    fn recall_preserves_enqueue_stamps_through_producer_reenqueue() {
+        // Buffer side: the drain ships tasks with their original stamps.
+        let mut b = BufferState::new(1, 8, 100).with_policy(SchedPolicy::Deadline);
+        b.set_now(0.0);
+        b.on_start();
+        b.on_assign(vec![task(99), deadline_task(7, 0, 0.0, 50.0)]); // 7 runs (least slack)
+        let acts = b.on_recall();
+        for a in &acts {
+            if let BufferAction::ReturnTasks(ts) = a {
+                assert_eq!(ts.len(), 1);
+                assert_eq!(ts[0].enqueued_t, Some(0.0), "stamp preserved through drain");
+            }
+        }
+        // Producer side: returned batches arrive in arbitrary per-leaf
+        // order, but the preserved stamps/deadlines — not arrival order —
+        // decide the re-grant sequence after the graft.
+        let mut p = ProducerState::new(2).with_policy(SchedPolicy::Deadline);
+        p.set_now(5.0);
+        p.on_returned(vec![deadline_task(1, 0, 0.0, 99.0)]);
+        p.on_returned(vec![deadline_task(2, 0, 0.0, 10.0), deadline_task(0, 0, 0.0, 50.0)]);
+        p.rewire(1);
+        let acts = p.on_request(0, 3);
+        let ids: Vec<u64> = acts
+            .iter()
+            .flat_map(|a| match a {
+                ProducerAction::SendTasks { tasks, .. } => {
+                    tasks.iter().map(|t| t.id).collect::<Vec<_>>()
+                }
+                _ => Vec::new(),
+            })
+            .collect();
+        assert_eq!(ids, vec![2, 0, 1], "SchedPolicy order survives the graft");
+    }
+
+    #[test]
+    fn interior_recall_forwards_returns_and_aggregates_acks() {
+        let mut r = BufferState::interior(2, 8, 2, 100);
+        r.on_start();
+        r.on_assign((0..3).map(task).collect()); // nothing requested below yet
+        let acts = r.on_recall();
+        assert_eq!(returned_ids(&acts), vec![0, 1, 2]);
+        assert!(acts.iter().any(|a| matches!(a, BufferAction::RecallChildren)));
+        assert!(!acts.iter().any(|a| matches!(a, BufferAction::AckRecall)));
+        // A child's returned tasks are relayed upstream…
+        let acts = r.on_child_returned(vec![task(10), task(11)]);
+        assert_eq!(returned_ids(&acts), vec![10, 11]);
+        // …unless a tombstone pends here: then the task dies with a
+        // cancelled result instead of travelling on.
+        r.on_cancel(12);
+        let acts = r.on_child_returned(vec![task(12), task(13)]);
+        assert_eq!(returned_ids(&acts), vec![13]);
+        assert!(
+            acts.iter().any(
+                |a| matches!(a, BufferAction::FlushResults(rs) if rs.iter().any(|x| x.id == 12 && x.cancelled()))
+            ),
+            "{acts:?}"
+        );
+        // The ack fires only once both children acked.
+        assert!(r.on_child_recall_ack(0).is_empty());
+        let acts = r.on_child_recall_ack(1);
+        assert_eq!(acts.last(), Some(&BufferAction::AckRecall));
+    }
+
+    #[test]
+    fn recall_bounces_steal_loot_and_victim_grants_nothing() {
+        // Thief recalls while a steal reply is in flight: the ack waits
+        // for the grant, and the loot is returned, not dispatched.
+        let mut thief = BufferState::new(1, 1, 100).with_stealing(0, 1, StealPolicy::RoundRobin);
+        thief.on_start();
+        thief.on_assign(vec![task(0), task(1)]); // dispatch 0, queue 1
+        thief.on_done(0, result(0, 0)); // dispatch 1, queue empty → steal
+        assert_eq!(thief.steals_attempted, 1);
+        let acts = thief.on_recall();
+        assert!(
+            !acts.iter().any(|a| matches!(a, BufferAction::AckRecall)),
+            "outstanding steal: ack must wait ({acts:?})"
+        );
+        thief.on_done(0, result(1, 0)); // consumer idle, still no ack
+        let acts = thief.on_steal_grant(1, 0, Vec::new(), vec![task(50)]);
+        assert_eq!(returned_ids(&acts), vec![50], "loot bounces upstream");
+        assert!(!acts.iter().any(|a| matches!(a, BufferAction::RunOn { .. })));
+        assert_eq!(acts.last(), Some(&BufferAction::AckRecall));
+        // A recalling victim surrenders nothing.
+        let mut victim = BufferState::new(1, 8, 100).with_stealing(1, 1, StealPolicy::RoundRobin);
+        victim.on_start();
+        victim.on_assign((0..6).map(task).collect());
+        victim.on_recall();
+        let acts = victim.on_steal_request(0, 0, 3);
+        let granted = acts
+            .iter()
+            .find_map(|a| match a {
+                BufferAction::StealGrant { tasks, .. } => Some(tasks.len()),
+                _ => None,
+            })
+            .expect("victim still replies so the thief can escalate");
+        assert_eq!(granted, 0);
+    }
+
+    #[test]
+    fn producer_recall_cycle_withholds_grants_then_rewires() {
+        let mut p = ProducerState::new(2);
+        p.push_tasks((0..8).map(task).collect());
+        p.on_request(0, 4); // 4 granted
+        assert_eq!(p.in_flight(), 8);
+        assert_eq!(p.pending_len(), 4);
+        let acts = p.begin_recall();
+        assert_eq!(acts, vec![ProducerAction::BroadcastRecall]);
+        assert!(p.is_recalling());
+        assert!(p.begin_recall().is_empty(), "recall is single-flight");
+        // Requests during the drain accumulate but are not served.
+        assert!(p.on_request(1, 4).is_empty());
+        // The granted-but-unstarted tasks come back; accounting holds.
+        p.on_returned((0..4).map(task).collect());
+        assert_eq!(p.pending_len(), 8);
+        assert_eq!(p.in_flight(), 8, "recalled tasks still count in flight");
+        assert!(!p.on_recall_ack(0), "one ack is not enough");
+        assert!(p.on_recall_ack(1), "all roots acked → graft may proceed");
+        // Graft onto a 3-root tree: grants flow again, fairly.
+        p.rewire(3);
+        assert!(!p.is_recalling());
+        let acts = p.on_request(2, 8);
+        let granted: usize = acts
+            .iter()
+            .map(|a| match a {
+                ProducerAction::SendTasks { tasks, .. } => tasks.len(),
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(granted, 8);
+        assert_eq!(p.pending_len(), 0);
+        // Conservation end to end: completions drain in_flight to zero.
+        p.set_engine_done(true);
+        p.on_results(8);
+        assert_eq!(p.maybe_shutdown(), vec![ProducerAction::BroadcastShutdown]);
     }
 
     #[test]

@@ -1,0 +1,377 @@
+//! Online buffer-tree re-shaping under lag drift.
+//!
+//! PR 4's `TreeShape::Auto` picks a shape **once**, from a startup
+//! calibration — which goes stale exactly when the workload gets
+//! interesting (an MOEA shifting from cheap to expensive generations, a
+//! sweep whose parameter ranges change task cost by orders of
+//! magnitude). This module closes the loop the PR 4 instrumentation
+//! opened: the [`ReshapeController`] rebuilds a **rolling
+//! [`Calibration`]** from live measurements —
+//!
+//! * *producer round trip* — the request→grant lag the producer's direct
+//!   children measure (`NodeStats::req_lag_*`, fed here as cumulative
+//!   totals and differenced per window), which inflates exactly when
+//!   rank 0 saturates;
+//! * *mean task duration* — the `begin → finish` span of every completed
+//!   result the producer ingests;
+//!
+//! — re-runs the same pure [`choose_shape`] controller both runtimes
+//! already share, and, when the chosen shape diverges and the inputs
+//! drifted beyond [`ReshapePolicy::drift_threshold`], asks the runtime
+//! to execute a **drain-and-graft transition** (see
+//! [`super::protocol::ProducerState::begin_recall`]): credit is
+//! withdrawn, every queued task returns to the producer with its
+//! `enqueued_t` stamp preserved, the tree is rebuilt at the new shape,
+//! and the recalled tasks are re-granted. Conservation (`Σcounts ==
+//! popped`, one result per task) and `SchedPolicy` ordering survive the
+//! transition by construction.
+//!
+//! The controller is pure bookkeeping over the observation stream: fed
+//! the same observations at the same (virtual) times, it makes the same
+//! decisions — which is how the threaded runtime and the DES resolve
+//! transitions identically, and why DES reshape runs are deterministic
+//! in virtual time (property-tested in `tests/tree_protocol.rs`).
+
+use crate::config::{Calibration, ReshapePolicy, SchedulerConfig};
+use crate::tasklib::TaskResult;
+
+use super::protocol::choose_shape;
+
+/// One executed drain-and-graft transition, for reports and benches.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReshapeEvent {
+    /// (Virtual) time the transition was decided.
+    pub t: f64,
+    /// Shape before the transition.
+    pub from_depth: usize,
+    /// Per-level fanout before the transition (root-down).
+    pub from_fanout: Vec<usize>,
+    /// Shape after the transition.
+    pub to_depth: usize,
+    /// Per-level fanout after the transition (root-down).
+    pub to_fanout: Vec<usize>,
+    /// The rolling calibration that triggered the change.
+    pub cal: Calibration,
+}
+
+/// Decides *when* to re-shape; the runtimes decide *how* (recall → drain
+/// → graft). Owned by whoever drives the producer state machine.
+#[derive(Debug)]
+pub struct ReshapeController {
+    policy: ReshapePolicy,
+    cfg: SchedulerConfig,
+    /// The shape currently grafted: `(depth, per-level fanout)`.
+    shape: (usize, Vec<usize>),
+    /// The calibration the current shape was chosen from — the reference
+    /// the drift threshold compares against.
+    shape_cal: Calibration,
+    window_start: f64,
+    last_transition: f64,
+    /// Task-duration accumulator for the current window.
+    dur_sum: f64,
+    dur_n: u64,
+    /// Root-lag totals at the previous window boundary (the baseline the
+    /// cumulative totals are differenced against).
+    lag_base: (u64, f64),
+    /// Most recent cumulative root-lag totals observed.
+    lag_latest: (u64, f64),
+    events: Vec<ReshapeEvent>,
+}
+
+impl ReshapeController {
+    /// A controller for a run that started `now` with `shape` chosen
+    /// from `cal`. `cfg` supplies the scale/flow-control constants the
+    /// shape model needs (`np`, buffers, credit, flush batching, the
+    /// fanout upper bound).
+    pub fn new(
+        cfg: &SchedulerConfig,
+        policy: ReshapePolicy,
+        shape: (usize, Vec<usize>),
+        cal: Calibration,
+        now: f64,
+    ) -> Self {
+        Self {
+            policy,
+            cfg: cfg.clone(),
+            shape,
+            shape_cal: cal,
+            window_start: now,
+            last_transition: f64::NEG_INFINITY,
+            dur_sum: 0.0,
+            dur_n: 0,
+            lag_base: (0, 0.0),
+            lag_latest: (0, 0.0),
+            events: Vec::new(),
+        }
+    }
+
+    /// The currently grafted `(depth, per-level fanout)`.
+    pub fn shape(&self) -> &(usize, Vec<usize>) {
+        &self.shape
+    }
+
+    /// Every transition executed so far, in order.
+    pub fn events(&self) -> &[ReshapeEvent] {
+        &self.events
+    }
+
+    /// Feed one final result the producer ingested. Cancelled results
+    /// never ran and carry no duration; non-finite spans (a defensive
+    /// guard — both runtimes stamp finite clocks) are ignored too.
+    pub fn observe_result(&mut self, r: &TaskResult) {
+        if r.cancelled() {
+            return;
+        }
+        let d = r.finish - r.begin;
+        if d.is_finite() && d >= 0.0 {
+            self.dur_sum += d;
+            self.dur_n += 1;
+        }
+    }
+
+    /// Feed the **cumulative** request→grant lag totals summed over the
+    /// current tree's root nodes (`Σ req_lag_n`, `Σ req_lag_sum`). The
+    /// controller differences consecutive snapshots itself, so callers
+    /// just report whatever the live `NodeStats` say.
+    pub fn observe_root_lag(&mut self, total_n: u64, total_sum: f64) {
+        self.lag_latest = (total_n, total_sum);
+    }
+
+    /// The runtime finished a drain-and-graft: the old tree's counters
+    /// are gone, so the lag baseline and the measurement window restart.
+    pub fn grafted(&mut self, now: f64) {
+        self.lag_base = (0, 0.0);
+        self.lag_latest = (0, 0.0);
+        self.window_start = now;
+        self.dur_sum = 0.0;
+        self.dur_n = 0;
+    }
+
+    /// Close the rolling window if it is due and decide whether to
+    /// re-shape. Returns the new `(depth, per-level fanout)` when a
+    /// transition should fire — the caller then runs the recall protocol
+    /// and calls [`ReshapeController::grafted`] once the new tree is up.
+    ///
+    /// A transition fires only when **all** hold:
+    /// 1. a full [`ReshapePolicy::window`] elapsed since the last check,
+    /// 2. a calibration input drifted ≥ `drift_threshold` (relative)
+    ///    against the calibration that chose the current shape,
+    /// 3. the pure [`choose_shape`] controller picks a different shape
+    ///    from the rolling calibration, and
+    /// 4. the previous transition is at least `cooldown` old.
+    ///
+    /// Windows with no fresh measurement of an input fall back to the
+    /// current reference value for that input (no spurious drift).
+    pub fn maybe_reshape(&mut self, now: f64) -> Option<(usize, Vec<usize>)> {
+        if now - self.window_start < self.policy.window {
+            return None;
+        }
+        let dn = self.lag_latest.0.saturating_sub(self.lag_base.0);
+        let dsum = (self.lag_latest.1 - self.lag_base.1).max(0.0);
+        let cal = Calibration {
+            producer_rtt: if dn > 0 { dsum / dn as f64 } else { self.shape_cal.producer_rtt },
+            mean_task_s: if self.dur_n > 0 {
+                (self.dur_sum / self.dur_n as f64).max(1e-9)
+            } else {
+                self.shape_cal.mean_task_s
+            },
+        };
+        // The window rolls regardless of the decision below.
+        self.window_start = now;
+        self.lag_base = self.lag_latest;
+        self.dur_sum = 0.0;
+        self.dur_n = 0;
+
+        let rel = |new: f64, old: f64| (new - old).abs() / old.abs().max(1e-12);
+        let drift = rel(cal.producer_rtt, self.shape_cal.producer_rtt)
+            .max(rel(cal.mean_task_s, self.shape_cal.mean_task_s));
+        if drift < self.policy.drift_threshold {
+            return None;
+        }
+        let new = choose_shape(&self.cfg, &cal);
+        if new == self.shape {
+            // The drifted inputs still select the current shape: adopt
+            // them as the new reference, so a regime that drifted once
+            // and then stabilized cannot fire a late transition.
+            self.shape_cal = cal;
+            return None;
+        }
+        if now - self.last_transition < self.policy.cooldown {
+            return None;
+        }
+        self.events.push(ReshapeEvent {
+            t: now,
+            from_depth: self.shape.0,
+            from_fanout: self.shape.1.clone(),
+            to_depth: new.0,
+            to_fanout: new.1.clone(),
+            cal,
+        });
+        self.shape = new.clone();
+        self.shape_cal = cal;
+        self.last_transition = now;
+        Some(new)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasklib::{Payload, TaskSpec, RC_CANCELLED};
+
+    fn cfg(np: usize, cpb: usize) -> SchedulerConfig {
+        SchedulerConfig { np, consumers_per_buffer: cpb, ..Default::default() }
+    }
+
+    fn policy(window: f64, drift: f64, cooldown: f64) -> ReshapePolicy {
+        ReshapePolicy { window, drift_threshold: drift, cooldown }
+    }
+
+    fn done(begin: f64, finish: f64) -> TaskResult {
+        TaskResult {
+            id: 0,
+            consumer: 0,
+            results: vec![],
+            begin,
+            finish,
+            rc: 0,
+            attempt: 0,
+            timed_out: false,
+        }
+    }
+
+    /// The long-task regime: a fast producer keeps the flat layout.
+    fn flat_cal() -> Calibration {
+        Calibration { producer_rtt: 1e-4, mean_task_s: 20.0 }
+    }
+
+    #[test]
+    fn no_transition_before_the_window_closes() {
+        let c = cfg(1024, 32);
+        let shape = choose_shape(&c, &flat_cal());
+        let mut ctrl = ReshapeController::new(&c, policy(10.0, 0.25, 0.0), shape, flat_cal(), 0.0);
+        ctrl.observe_result(&done(0.0, 0.01));
+        ctrl.observe_root_lag(100, 50.0);
+        assert_eq!(ctrl.maybe_reshape(9.9), None, "window not closed yet");
+    }
+
+    #[test]
+    fn duration_and_lag_drift_trigger_a_deeper_shape() {
+        let c = cfg(1024, 32); // 32 leaves
+        let shape = choose_shape(&c, &flat_cal());
+        assert_eq!(shape.0, 1, "long tasks + fast producer start flat");
+        let mut ctrl =
+            ReshapeController::new(&c, policy(10.0, 0.25, 0.0), shape.clone(), flat_cal(), 0.0);
+        // The workload shifts: 0.1-second tasks, and the producer's
+        // request→grant lag balloons to ~5 ms per round trip.
+        for i in 0..50 {
+            ctrl.observe_result(&done(i as f64, i as f64 + 0.1));
+        }
+        ctrl.observe_root_lag(200, 1.0);
+        let new = ctrl.maybe_reshape(10.0).expect("drifted inputs must re-shape");
+        assert!(new.0 >= 2, "short tasks + slow producer must deepen: {new:?}");
+        assert_eq!(ctrl.shape(), &new);
+        assert_eq!(ctrl.events().len(), 1);
+        let ev = &ctrl.events()[0];
+        assert_eq!((ev.from_depth, ev.to_depth), (1, new.0));
+        assert!((ev.cal.mean_task_s - 0.1).abs() < 1e-9);
+        assert!((ev.cal.producer_rtt - 5e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drift_below_threshold_never_fires() {
+        let c = cfg(1024, 32);
+        let shape = choose_shape(&c, &flat_cal());
+        let mut ctrl =
+            ReshapeController::new(&c, policy(10.0, 0.5, 0.0), shape, flat_cal(), 0.0);
+        // 10% duration drift — under the 50% threshold.
+        for i in 0..10 {
+            ctrl.observe_result(&done(i as f64, i as f64 + 22.0));
+        }
+        assert_eq!(ctrl.maybe_reshape(10.0), None);
+        // An empty window falls back to the reference: zero drift.
+        assert_eq!(ctrl.maybe_reshape(20.0), None);
+    }
+
+    #[test]
+    fn cooldown_blocks_back_to_back_transitions() {
+        let c = cfg(1024, 32);
+        let shape = choose_shape(&c, &flat_cal());
+        let mut ctrl =
+            ReshapeController::new(&c, policy(10.0, 0.25, 100.0), shape, flat_cal(), 0.0);
+        for i in 0..20 {
+            ctrl.observe_result(&done(i as f64, i as f64 + 0.1));
+        }
+        ctrl.observe_root_lag(200, 1.0);
+        assert!(ctrl.maybe_reshape(10.0).is_some(), "first transition is free");
+        ctrl.grafted(10.0);
+        // Drift back toward long tasks immediately: shape would change,
+        // but the cooldown gates it.
+        for i in 0..20 {
+            ctrl.observe_result(&done(i as f64, i as f64 + 20.0));
+        }
+        assert_eq!(ctrl.maybe_reshape(20.0), None, "cooldown must hold");
+        for i in 0..20 {
+            ctrl.observe_result(&done(i as f64, i as f64 + 20.0));
+        }
+        assert!(ctrl.maybe_reshape(115.0).is_some(), "cooldown expired");
+        assert_eq!(ctrl.events().len(), 2);
+    }
+
+    #[test]
+    fn lag_totals_are_differenced_per_window() {
+        let c = cfg(1024, 32);
+        let shape = choose_shape(&c, &flat_cal());
+        let mut ctrl =
+            ReshapeController::new(&c, policy(10.0, 0.25, 0.0), shape, flat_cal(), 0.0);
+        // Window 1: cumulative (100, 0.01) → mean 1e-4, no drift.
+        ctrl.observe_root_lag(100, 0.01);
+        assert_eq!(ctrl.maybe_reshape(10.0), None);
+        // Window 2: cumulative (200, 1.01) → the *delta* is 100 trips
+        // worth 1.0 s → mean 10 ms, a 100× drift.
+        for i in 0..20 {
+            ctrl.observe_result(&done(i as f64, i as f64 + 0.1));
+        }
+        ctrl.observe_root_lag(200, 1.01);
+        let new = ctrl.maybe_reshape(20.0).expect("windowed delta must drive the decision");
+        assert!((ctrl.events()[0].cal.producer_rtt - 10e-3).abs() < 1e-9);
+        assert!(new.0 >= 2);
+    }
+
+    #[test]
+    fn cancelled_results_carry_no_duration_signal() {
+        let c = cfg(1024, 32);
+        let shape = choose_shape(&c, &flat_cal());
+        let mut ctrl =
+            ReshapeController::new(&c, policy(10.0, 0.25, 0.0), shape, flat_cal(), 0.0);
+        let spec = TaskSpec::new(0, Payload::Sleep { seconds: 1.0 });
+        let mut cancelled = TaskResult::cancelled_for(&spec);
+        cancelled.rc = RC_CANCELLED;
+        for _ in 0..50 {
+            ctrl.observe_result(&cancelled);
+        }
+        // Only cancellations observed → duration falls back to the
+        // reference → no drift → no transition.
+        assert_eq!(ctrl.maybe_reshape(10.0), None);
+    }
+
+    #[test]
+    fn stabilized_drift_updates_the_reference_without_firing() {
+        // Inputs drift but choose_shape still picks the current shape:
+        // the reference follows, so the same inputs next window show no
+        // drift and can never fire a late transition.
+        let c = cfg(64, 32); // 2 leaves: every calibration stays flat
+        let shape = choose_shape(&c, &flat_cal());
+        let mut ctrl =
+            ReshapeController::new(&c, policy(10.0, 0.25, 0.0), shape.clone(), flat_cal(), 0.0);
+        for i in 0..10 {
+            ctrl.observe_result(&done(i as f64, i as f64 + 1.0)); // 20× drift
+        }
+        assert_eq!(ctrl.maybe_reshape(10.0), None);
+        for i in 0..10 {
+            ctrl.observe_result(&done(i as f64, i as f64 + 1.0)); // same regime
+        }
+        assert_eq!(ctrl.maybe_reshape(20.0), None, "reference absorbed the drift");
+        assert!(ctrl.events().is_empty());
+    }
+}

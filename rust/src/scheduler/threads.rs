@@ -19,6 +19,13 @@
 //! leaves, and cancelled-task results flow back through the ordinary
 //! result path.
 //!
+//! With [`SchedulerConfig::reshape`] the runtime runs in *epochs*: the
+//! reshape controller (fed live `NodeStats` lag counters and observed
+//! task durations) may at any window boundary trigger a drain-and-graft
+//! — recall the tree, join its threads, rebuild at the new shape — while
+//! the producer state (pending queue, accounting) carries across. See
+//! [`run_scheduler`].
+//!
 //! On a small host this is concurrency rather than parallelism, which is
 //! fine for the framework's own behaviour (dummy `Sleep` tasks idle, and
 //! in-process evaluations are serialized by the PJRT executor anyway).
@@ -31,6 +38,7 @@ use std::time::{Duration, Instant};
 
 use super::metrics::{FillingRate, LevelFill, NodeStats};
 use super::protocol::{resolve_shape, BufferAction, BufferState, ProducerAction, ProducerState};
+use super::reshape::{ReshapeController, ReshapeEvent};
 use crate::api::{JobSink, JobSpec};
 use crate::config::{Calibration, SchedulerConfig, TreeNodeKind, TreeShape, TreeTopology};
 use crate::tasklib::{
@@ -148,6 +156,10 @@ impl Executor for SleepExecutor {
 enum ToProducer {
     Request { buffer: usize, amount: usize },
     Results(Vec<TaskResult>),
+    /// Recalled tasks returning from a draining tree (stamps intact).
+    Returned(Vec<TaskSpec>),
+    /// Root slot `buffer` reports its subtree drained.
+    RecallAck { buffer: usize },
 }
 
 enum ToBuffer {
@@ -163,6 +175,14 @@ enum ToBuffer {
     Stolen { from_slot: usize, left: usize, cancels: Vec<TaskId>, tasks: Vec<TaskSpec> },
     /// Cancellation notice fanning out toward the leaves.
     Cancel { id: TaskId },
+    /// Recall notice (drain-and-graft transition) fanning out toward the
+    /// leaves: stop requesting, return queued tasks upstream, ack when
+    /// drained.
+    Recall,
+    /// Recalled tasks returned by a child buffer.
+    ChildReturned(Vec<TaskSpec>),
+    /// Child slot `child` acked the recall.
+    ChildRecallAck { child: usize },
     Shutdown,
 }
 
@@ -176,6 +196,11 @@ enum ParentLink {
     Producer(Sender<ToProducer>),
     Buffer(Sender<ToBuffer>),
 }
+
+/// Per-node counter snapshots shared between the node threads (writers)
+/// and the producer thread (reader: final report + the reshape
+/// controller's live lag measurement).
+type SharedStats = Arc<Mutex<Vec<Option<NodeStats>>>>;
 
 /// What a node feeds: consumer threads (leaf) or child node threads.
 enum ChildLink {
@@ -195,11 +220,16 @@ pub struct Report {
     /// Per-level filling statistics (mean/min subtree rate), mirroring
     /// the DES report so both runtimes expose the same observability.
     pub level_fill: Vec<LevelFill>,
-    /// Effective tree depth this run used (the auto controller's choice
-    /// under [`TreeShape::Auto`] / [`TreeShape::Calibrated`]).
+    /// Effective tree depth at the end of the run (the auto controller's
+    /// choice under [`TreeShape::Auto`] / [`TreeShape::Calibrated`],
+    /// possibly revised online by `--reshape`).
     pub depth: usize,
-    /// Effective interior fanout this run used.
-    pub fanout: usize,
+    /// Effective per-level interior fanout at the end of the run
+    /// (root-down; empty for the flat layout).
+    pub fanout: Vec<usize>,
+    /// Drain-and-graft transitions executed by the reshape controller
+    /// (empty without [`SchedulerConfig::reshape`]).
+    pub reshapes: Vec<ReshapeEvent>,
 }
 
 impl Report {
@@ -244,6 +274,17 @@ impl JobSink for ProducerSink {
 ///
 /// Blocks until every task (including dynamically created ones) completed,
 /// then returns the full result set and the schedule metrics.
+///
+/// With [`SchedulerConfig::reshape`] set, the run proceeds in **epochs**:
+/// one buffer tree per epoch, torn down and rebuilt at a new shape
+/// whenever the reshape controller fires. A transition is drain-and-graft:
+/// the producer broadcasts a recall, every node returns its queued tasks
+/// upstream (stamps intact) and acks once its subtree is drained — per
+/// mpsc FIFO, a node's returned tasks and result flushes always reach its
+/// parent before its ack, so when every root has acked the old tree is
+/// provably empty — then the old threads are joined and the next epoch's
+/// tree is spawned. The producer state (pending queue, conservation
+/// accounting) carries across epochs; only the wiring is rebuilt.
 pub fn run_scheduler(
     cfg: &SchedulerConfig,
     mut engine: Box<dyn SearchEngine>,
@@ -279,176 +320,285 @@ pub fn run_scheduler(
         ),
         _ => Calibration::fallback(),
     };
-    let (depth, fanout) = resolve_shape(cfg, measured);
-    let topo = TreeTopology::build(np, cfg.consumers_per_buffer, depth, fanout);
-    let n_nodes = topo.n_nodes();
-    crate::debugln!(
-        "scheduler: np={} nodes={} depth={} roots={:?}",
-        np,
-        n_nodes,
-        topo.depth,
-        topo.roots
-    );
+    let mut shape = resolve_shape(cfg, measured);
+    // Online re-shaping: the drift reference is whatever calibration
+    // chose the initial shape.
+    let reference_cal = match cfg.shape {
+        TreeShape::Calibrated(c) => c,
+        _ => measured,
+    };
+    let mut controller = cfg.reshape.map(|p| {
+        ReshapeController::new(
+            cfg,
+            p,
+            shape.clone(),
+            reference_cal,
+            t0.elapsed().as_secs_f64() * clock_scale,
+        )
+    });
+    // Live per-node stats publishing (for the controller's rolling lag
+    // measurement) is only paid for when re-shaping is on.
+    let live_stats = controller.is_some();
 
-    // One channel per tree node, created up front so siblings/children can
-    // be wired regardless of spawn order.
-    let (prod_tx, prod_rx) = channel::<ToProducer>();
-    let mut node_txs: Vec<Sender<ToBuffer>> = Vec::with_capacity(n_nodes);
-    let mut node_rxs: Vec<Option<Receiver<ToBuffer>>> = Vec::with_capacity(n_nodes);
-    for _ in 0..n_nodes {
-        let (tx, rx) = channel::<ToBuffer>();
-        node_txs.push(tx);
-        node_rxs.push(Some(rx));
-    }
-
-    let stats: Arc<Mutex<Vec<Option<NodeStats>>>> = Arc::new(Mutex::new(vec![None; n_nodes]));
-    let mut node_handles = Vec::new();
-    let mut consumer_handles = Vec::new();
     let flush_interval = Duration::from_millis(cfg.flush_interval_ms);
-
-    for id in 0..n_nodes {
-        let state = BufferState::for_tree_node(&topo, id, cfg);
-        let level = topo.nodes[id].level;
-        let slot = topo.nodes[id].slot;
-        let rx = node_rxs[id].take().expect("receiver taken once");
-        let parent = match topo.nodes[id].parent {
-            None => ParentLink::Producer(prod_tx.clone()),
-            Some(p) => ParentLink::Buffer(node_txs[p].clone()),
-        };
-        let siblings: Vec<Sender<ToBuffer>> =
-            topo.sibling_group(id).iter().map(|&s| node_txs[s].clone()).collect();
-        // Kill switch shared by this leaf and its consumers (unused but
-        // harmless at interior nodes).
-        let cancel = Arc::new(CancelSet::new());
-        let children = match &topo.nodes[id].kind {
-            TreeNodeKind::Leaf { n_consumers, rank_base } => {
-                let mut cons_txs = Vec::with_capacity(*n_consumers);
-                for local in 0..*n_consumers {
-                    let (ctx, crx) = channel::<ToConsumer>();
-                    cons_txs.push(ctx);
-                    let rank = rank_base + local;
-                    let exec = Arc::clone(&executor);
-                    let back = node_txs[id].clone();
-                    let cancel = Arc::clone(&cancel);
-                    let handle = thread::Builder::new()
-                        .name(format!("consumer-{rank}"))
-                        .stack_size(256 * 1024)
-                        .spawn(move || consumer_loop(crx, back, exec, rank, local, t0, cancel))
-                        .expect("spawn consumer");
-                    consumer_handles.push(handle);
-                }
-                ChildLink::Consumers(cons_txs)
-            }
-            TreeNodeKind::Interior { children } => {
-                ChildLink::Buffers(children.iter().map(|&c| node_txs[c].clone()).collect())
-            }
-        };
-        let stats = Arc::clone(&stats);
-        let handle = thread::Builder::new()
-            .name(format!("buffer-{id}"))
-            .stack_size(256 * 1024)
-            .spawn(move || {
-                node_loop(
-                    state,
-                    rx,
-                    parent,
-                    slot,
-                    siblings,
-                    children,
-                    cancel,
-                    flush_interval,
-                    t0,
-                    clock_scale,
-                    |s| {
-                        stats.lock().unwrap()[id] = Some(s.stats(id, level));
-                    },
-                )
-            })
-            .expect("spawn buffer node");
-        node_handles.push(handle);
-    }
-    drop(prod_tx);
-
-    // Senders to the producer's direct children, indexed by root slot.
-    let root_txs: Vec<Sender<ToBuffer>> =
-        topo.roots.iter().map(|&r| node_txs[r].clone()).collect();
-
-    // --- producer loop (runs on the caller thread) ---
-    let mut state = ProducerState::new(topo.roots.len()).with_policy(cfg.policy);
-
-    state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
-    drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
-    let done = engine.poll(&mut sink);
-    drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
-    state.set_engine_done(done);
-
     let poll_interval = Duration::from_millis(cfg.flush_interval_ms.max(1));
-    loop {
-        state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
-        // Shutdown check (engine may have submitted nothing at all).
-        let shutdown_acts = state.maybe_shutdown();
-        if perform_producer(shutdown_acts, &root_txs) {
-            break;
-        }
-        let msg = match prod_rx.recv_timeout(poll_interval) {
-            Ok(m) => m,
-            Err(RecvTimeoutError::Timeout) => {
-                // Give session-style engines a chance to inject work.
-                let done = engine.poll(&mut sink);
-                drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
-                state.set_engine_done(done);
-                continue;
-            }
-            Err(RecvTimeoutError::Disconnected) => break,
-        };
-        state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
-        match msg {
-            ToProducer::Request { buffer, amount } => {
-                let acts = state.on_request(buffer, amount);
-                perform_producer(acts, &root_txs);
-            }
-            ToProducer::Results(results) => {
-                state.on_results(results.len());
-                for r in &results {
-                    // Cancelled tasks never ran: keep them out of the
-                    // filling-rate trace.
-                    if !r.cancelled() {
-                        filling.record(r);
-                    }
-                    engine.on_done(r, &mut sink);
-                }
-                all_results.extend(results);
-                drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
-            }
-        }
+    // Producer state survives epochs; the channel wiring does not.
+    let mut carried: Option<ProducerState> = None;
+
+    enum Outcome {
+        Done,
+        Reshape,
     }
+
+    // --- epoch loop: one buffer tree per iteration ---
+    let (topo, node_stats, state) = loop {
+        let topo = TreeTopology::build(np, cfg.consumers_per_buffer, shape.0, &shape.1);
+        let n_nodes = topo.n_nodes();
+        crate::debugln!(
+            "scheduler: np={} nodes={} depth={} roots={:?}",
+            np,
+            n_nodes,
+            topo.depth,
+            topo.roots
+        );
+
+        // One channel per tree node, created up front so siblings/children
+        // can be wired regardless of spawn order.
+        let (prod_tx, prod_rx) = channel::<ToProducer>();
+        let mut node_txs: Vec<Sender<ToBuffer>> = Vec::with_capacity(n_nodes);
+        let mut node_rxs: Vec<Option<Receiver<ToBuffer>>> = Vec::with_capacity(n_nodes);
+        for _ in 0..n_nodes {
+            let (tx, rx) = channel::<ToBuffer>();
+            node_txs.push(tx);
+            node_rxs.push(Some(rx));
+        }
+
+        let stats: SharedStats = Arc::new(Mutex::new(vec![None; n_nodes]));
+        let mut node_handles = Vec::new();
+        let mut consumer_handles = Vec::new();
+
+        for id in 0..n_nodes {
+            let state = BufferState::for_tree_node(&topo, id, cfg);
+            let level = topo.nodes[id].level;
+            let slot = topo.nodes[id].slot;
+            let rx = node_rxs[id].take().expect("receiver taken once");
+            let parent = match topo.nodes[id].parent {
+                None => ParentLink::Producer(prod_tx.clone()),
+                Some(p) => ParentLink::Buffer(node_txs[p].clone()),
+            };
+            let siblings: Vec<Sender<ToBuffer>> =
+                topo.sibling_group(id).iter().map(|&s| node_txs[s].clone()).collect();
+            // Kill switch shared by this leaf and its consumers (unused but
+            // harmless at interior nodes).
+            let cancel = Arc::new(CancelSet::new());
+            let children = match &topo.nodes[id].kind {
+                TreeNodeKind::Leaf { n_consumers, rank_base } => {
+                    let mut cons_txs = Vec::with_capacity(*n_consumers);
+                    for local in 0..*n_consumers {
+                        let (ctx, crx) = channel::<ToConsumer>();
+                        cons_txs.push(ctx);
+                        let rank = rank_base + local;
+                        let exec = Arc::clone(&executor);
+                        let back = node_txs[id].clone();
+                        let cancel = Arc::clone(&cancel);
+                        let handle = thread::Builder::new()
+                            .name(format!("consumer-{rank}"))
+                            .stack_size(256 * 1024)
+                            .spawn(move || consumer_loop(crx, back, exec, rank, local, t0, cancel))
+                            .expect("spawn consumer");
+                        consumer_handles.push(handle);
+                    }
+                    ChildLink::Consumers(cons_txs)
+                }
+                TreeNodeKind::Interior { children } => {
+                    ChildLink::Buffers(children.iter().map(|&c| node_txs[c].clone()).collect())
+                }
+            };
+            let stats = Arc::clone(&stats);
+            let handle = thread::Builder::new()
+                .name(format!("buffer-{id}"))
+                .stack_size(256 * 1024)
+                .spawn(move || {
+                    node_loop(
+                        state,
+                        rx,
+                        parent,
+                        slot,
+                        siblings,
+                        children,
+                        cancel,
+                        flush_interval,
+                        t0,
+                        clock_scale,
+                        stats,
+                        id,
+                        level,
+                        live_stats,
+                    )
+                })
+                .expect("spawn buffer node");
+            node_handles.push(handle);
+        }
+        drop(prod_tx);
+
+        // Senders to the producer's direct children, indexed by root slot.
+        let root_txs: Vec<Sender<ToBuffer>> =
+            topo.roots.iter().map(|&r| node_txs[r].clone()).collect();
+
+        // --- producer loop (runs on the caller thread) ---
+        let mut state = match carried.take() {
+            Some(mut s) => {
+                s.rewire(topo.roots.len());
+                s
+            }
+            None => ProducerState::new(topo.roots.len()).with_policy(cfg.policy),
+        };
+
+        state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
+        drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
+        let done = engine.poll(&mut sink);
+        drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
+        state.set_engine_done(done);
+
+        let mut outcome = Outcome::Done;
+        loop {
+            state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
+            // Shutdown check (engine may have submitted nothing at all).
+            let shutdown_acts = state.maybe_shutdown();
+            if perform_producer(shutdown_acts, &root_txs) {
+                break;
+            }
+            let msg = match prod_rx.recv_timeout(poll_interval) {
+                Ok(m) => m,
+                Err(RecvTimeoutError::Timeout) => {
+                    // Give session-style engines a chance to inject work.
+                    let done = engine.poll(&mut sink);
+                    drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
+                    state.set_engine_done(done);
+                    // Reshape tick: rebuild the rolling calibration from
+                    // the roots' live lag counters and re-run the shape
+                    // controller (both in virtual seconds, mirroring the
+                    // DES exactly).
+                    if !state.is_recalling() && !state.shutdown_sent() {
+                        let now = t0.elapsed().as_secs_f64() * clock_scale;
+                        let fire = match controller.as_mut() {
+                            Some(ctrl) => {
+                                let (mut lag_n, mut lag_sum) = (0u64, 0.0f64);
+                                {
+                                    let rows = stats.lock().unwrap();
+                                    for &r in &topo.roots {
+                                        if let Some(s) = &rows[r] {
+                                            lag_n += s.req_lag_n;
+                                            lag_sum += s.req_lag_mean * s.req_lag_n as f64;
+                                        }
+                                    }
+                                }
+                                ctrl.observe_root_lag(lag_n, lag_sum);
+                                ctrl.maybe_reshape(now).is_some()
+                            }
+                            None => false,
+                        };
+                        if fire {
+                            let acts = state.begin_recall();
+                            perform_producer(acts, &root_txs);
+                        }
+                    }
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+            };
+            state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
+            match msg {
+                ToProducer::Request { buffer, amount } => {
+                    let acts = state.on_request(buffer, amount);
+                    perform_producer(acts, &root_txs);
+                }
+                ToProducer::Results(results) => {
+                    state.on_results(results.len());
+                    if let Some(ctrl) = controller.as_mut() {
+                        for r in &results {
+                            ctrl.observe_result(r);
+                        }
+                    }
+                    for r in &results {
+                        // Cancelled tasks never ran: keep them out of the
+                        // filling-rate trace.
+                        if !r.cancelled() {
+                            filling.record(r);
+                        }
+                        engine.on_done(r, &mut sink);
+                    }
+                    all_results.extend(results);
+                    drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
+                }
+                ToProducer::Returned(tasks) => {
+                    state.on_returned(tasks);
+                }
+                ToProducer::RecallAck { buffer } => {
+                    if state.on_recall_ack(buffer) {
+                        outcome = Outcome::Reshape;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // Teardown. After a drain every node is empty, so a shutdown
+        // notice walks the tree and stops every thread; after a normal
+        // completion the shutdown broadcast already did.
+        if matches!(outcome, Outcome::Reshape) {
+            for tx in &root_txs {
+                let _ = tx.send(ToBuffer::Shutdown);
+            }
+        }
+        drop(root_txs);
+        drop(node_txs);
+        for h in node_handles {
+            let _ = h.join();
+        }
+        for h in consumer_handles {
+            let _ = h.join();
+        }
+
+        let node_stats: Vec<NodeStats> = stats
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .map(|(id, s)| {
+                s.clone().unwrap_or_else(|| {
+                    // Node thread died without reporting; synthesize an
+                    // empty row so the report stays index-aligned with
+                    // the topology.
+                    BufferState::for_tree_node(&topo, id, cfg).stats(id, topo.nodes[id].level)
+                })
+            })
+            .collect();
+
+        match outcome {
+            Outcome::Done => break (topo, node_stats, state),
+            Outcome::Reshape => {
+                // Graft: adopt the controller's shape and spin up the
+                // next epoch with the carried producer state.
+                if let Some(ctrl) = controller.as_mut() {
+                    shape = ctrl.shape().clone();
+                    ctrl.grafted(t0.elapsed().as_secs_f64() * clock_scale);
+                }
+                carried = Some(state);
+            }
+        }
+    };
     engine.finish();
 
-    // Join everything.
-    drop(root_txs);
-    drop(node_txs);
-    for h in node_handles {
-        let _ = h.join();
-    }
-    for h in consumer_handles {
-        let _ = h.join();
-    }
-
-    let node_stats: Vec<NodeStats> = stats
-        .lock()
-        .unwrap()
-        .iter()
-        .enumerate()
-        .map(|(id, s)| {
-            s.clone().unwrap_or_else(|| {
-                // Node thread died without reporting; synthesize an empty row
-                // so the report stays index-aligned with the topology.
-                BufferState::for_tree_node(&topo, id, cfg).stats(id, topo.nodes[id].level)
-            })
-        })
-        .collect();
-
     let level_fill = filling.level_fill(&topo);
+    let reshapes = controller.as_ref().map(|c| c.events().to_vec()).unwrap_or_default();
+    // Report the controller's final shape (mirrors the DES): a transition
+    // decided in the run's last instants is reflected here even when the
+    // workload finished before the graft could complete.
+    let (depth, fanout) = match &controller {
+        Some(c) => c.shape().clone(),
+        None => shape,
+    };
     Report {
         results: all_results,
         filling,
@@ -459,6 +609,7 @@ pub fn run_scheduler(
         level_fill,
         depth,
         fanout,
+        reshapes,
     }
 }
 
@@ -642,6 +793,11 @@ fn perform_producer(actions: Vec<ProducerAction>, root_txs: &[Sender<ToBuffer>])
                     let _ = tx.send(ToBuffer::Cancel { id });
                 }
             }
+            ProducerAction::BroadcastRecall => {
+                for tx in root_txs {
+                    let _ = tx.send(ToBuffer::Recall);
+                }
+            }
             ProducerAction::BroadcastShutdown => {
                 for tx in root_txs {
                     let _ = tx.send(ToBuffer::Shutdown);
@@ -731,6 +887,29 @@ fn perform_node_actions(
                 }
                 stopping = true;
             }
+            BufferAction::ReturnTasks(tasks) => match parent {
+                ParentLink::Producer(tx) => {
+                    let _ = tx.send(ToProducer::Returned(tasks));
+                }
+                ParentLink::Buffer(tx) => {
+                    let _ = tx.send(ToBuffer::ChildReturned(tasks));
+                }
+            },
+            BufferAction::RecallChildren => {
+                if let ChildLink::Buffers(bufs) = children {
+                    for c in bufs {
+                        let _ = c.send(ToBuffer::Recall);
+                    }
+                }
+            }
+            BufferAction::AckRecall => match parent {
+                ParentLink::Producer(tx) => {
+                    let _ = tx.send(ToProducer::RecallAck { buffer: slot });
+                }
+                ParentLink::Buffer(tx) => {
+                    let _ = tx.send(ToBuffer::ChildRecallAck { child: slot });
+                }
+            },
         }
     }
     stopping
@@ -748,15 +927,27 @@ fn node_loop(
     flush_interval: Duration,
     t0: Instant,
     clock_scale: f64,
-    report_stats: impl FnOnce(&BufferState),
+    stats: SharedStats,
+    id: usize,
+    level: usize,
+    live_stats: bool,
 ) {
     let mut stopping = false;
     state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
     let acts = state.on_start();
     stopping |= perform_node_actions(acts, &parent, slot, &siblings, &children, &cancel);
+    // Live counter publishing for the reshape controller. Published on a
+    // wall-clock cadence *regardless of traffic* — a saturated node never
+    // hits the idle tick, and saturation is exactly the regime whose
+    // request→grant lag the controller must see.
+    let mut last_publish = Instant::now();
     while !stopping {
         let msg = rx.recv_timeout(flush_interval);
         state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
+        if live_stats && last_publish.elapsed() >= flush_interval {
+            stats.lock().unwrap()[id] = Some(state.stats(id, level));
+            last_publish = Instant::now();
+        }
         let acts = match msg {
             Ok(ToBuffer::Assign(tasks)) => state.on_assign(tasks),
             Ok(ToBuffer::Done { consumer, result }) => {
@@ -774,13 +965,16 @@ fn node_loop(
                 state.on_steal_grant(from_slot, left, cancels, tasks)
             }
             Ok(ToBuffer::Cancel { id }) => state.on_cancel(id),
+            Ok(ToBuffer::Recall) => state.on_recall(),
+            Ok(ToBuffer::ChildReturned(tasks)) => state.on_child_returned(tasks),
+            Ok(ToBuffer::ChildRecallAck { child }) => state.on_child_recall_ack(child),
             Ok(ToBuffer::Shutdown) => state.on_shutdown(),
             Err(RecvTimeoutError::Timeout) => state.on_tick(),
             Err(RecvTimeoutError::Disconnected) => break,
         };
         stopping |= perform_node_actions(acts, &parent, slot, &siblings, &children, &cancel);
     }
-    report_stats(&state);
+    stats.lock().unwrap()[id] = Some(state.stats(id, level));
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -925,7 +1119,7 @@ mod tests {
     fn depth2_tree_runs_all_tasks_through_relays() {
         let mut cfg = quick_cfg(8); // 2 leaves of 4 consumers
         cfg.depth = 2;
-        cfg.fanout = 2; // one relay over the two leaves
+        cfg.fanout = vec![2]; // one relay over the two leaves
         let report = run_scheduler(
             &cfg,
             Box::new(StaticSleeps { n: 60, secs: 1.0 }),
@@ -943,7 +1137,7 @@ mod tests {
     fn depth3_tree_with_stealing_conserves_tasks() {
         let mut cfg = quick_cfg(8); // 2 leaves of 4
         cfg.depth = 3;
-        cfg.fanout = 2;
+        cfg.fanout = vec![2];
         cfg.steal = true;
         let report = run_scheduler(
             &cfg,

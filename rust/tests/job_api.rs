@@ -97,7 +97,7 @@ fn des_retry_reports_attempts_in_deep_tree() {
     let mut cfg = DesConfig::new(16);
     cfg.sched.consumers_per_buffer = 4;
     cfg.sched.depth = 2;
-    cfg.sched.fanout = 2;
+    cfg.sched.fanout = vec![2];
     let r = run_des(&cfg, job_engine(NJobs { n: 64, retries: 2 }), Box::new(FailFirst {
         fail_attempts: 1,
     }));

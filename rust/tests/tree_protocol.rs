@@ -12,7 +12,7 @@
 
 use std::sync::Arc;
 
-use caravan::config::{Calibration, SchedPolicy, SchedulerConfig, TreeShape};
+use caravan::config::{Calibration, ReshapePolicy, SchedPolicy, SchedulerConfig, TreeShape};
 use caravan::des::{run_des, DesConfig, DesReport, SleepDurations};
 use caravan::scheduler::{run_scheduler, SleepExecutor};
 use caravan::tasklib::TaskSink;
@@ -26,7 +26,7 @@ fn shape(np: usize, cpb: usize, depth: usize, fanout: usize, steal: bool) -> Sch
         np,
         consumers_per_buffer: cpb,
         depth,
-        fanout,
+        fanout: vec![fanout],
         steal,
         ..Default::default()
     }
@@ -403,7 +403,7 @@ fn auto_shape_matches_best_manual_depth_sweep() {
         let mut dcfg = DesConfig::new(2048);
         dcfg.sched.consumers_per_buffer = 128;
         dcfg.sched.depth = depth;
-        dcfg.sched.fanout = 4;
+        dcfg.sched.fanout = vec![4];
         dcfg.sched.shape = shape;
         let r = run_des(
             &dcfg,
@@ -444,8 +444,8 @@ fn threaded_and_des_select_identical_shape_from_shared_calibration() {
     let des = run_des(&dcfg, Box::new(FixedSleeps { n: 16, secs: 1.0 }), Box::new(SleepDurations));
 
     assert_eq!(
-        (threaded.depth, threaded.fanout),
-        (des.depth, des.fanout),
+        (threaded.depth, threaded.fanout.clone()),
+        (des.depth, des.fanout.clone()),
         "both runtimes must shape identically from the same calibration"
     );
     assert!(threaded.depth >= 2, "this calibration must force relay levels");
@@ -506,6 +506,242 @@ fn threaded_auto_calibration_honours_cancels_issued_in_start() {
     let first = r.results.iter().find(|x| x.id == 0).expect("one result per id");
     assert!(first.cancelled(), "cancelled-in-start task executed anyway: rc={}", first.rc);
     assert!(r.results.iter().filter(|x| x.id != 0).all(|x| x.ok()));
+}
+
+/// Engine whose workload shifts regimes mid-run: `n_long` slow tasks up
+/// front, then — once every long task completed — a flood of `n_short`
+/// fast ones. The shape chosen for the long phase is stale for the short
+/// phase: short tasks multiply the producer's request/result traffic.
+struct PhaseShift {
+    n_long: usize,
+    n_short: usize,
+    long_s: f64,
+    short_s: f64,
+    long_done: usize,
+    fired: bool,
+}
+
+impl caravan::tasklib::SearchEngine for PhaseShift {
+    fn start(&mut self, sink: &mut dyn caravan::api::JobSink) {
+        for _ in 0..self.n_long {
+            sink.submit(caravan::tasklib::Payload::Sleep { seconds: self.long_s });
+        }
+    }
+    fn on_done(
+        &mut self,
+        r: &caravan::tasklib::TaskResult,
+        sink: &mut dyn caravan::api::JobSink,
+    ) {
+        if (r.id as usize) < self.n_long {
+            self.long_done += 1;
+        }
+        if self.long_done == self.n_long && !self.fired {
+            self.fired = true;
+            for _ in 0..self.n_short {
+                sink.submit(caravan::tasklib::Payload::Sleep { seconds: self.short_s });
+            }
+        }
+    }
+}
+
+const PS_LONG: usize = 512;
+const PS_SHORT: usize = 15_000;
+
+fn phase_engine() -> Box<dyn caravan::tasklib::SearchEngine> {
+    Box::new(PhaseShift {
+        n_long: PS_LONG,
+        n_short: PS_SHORT,
+        long_s: 20.0,
+        short_s: 0.2,
+        long_done: 0,
+        fired: false,
+    })
+}
+
+/// The duration-shift scenario: 256 consumers over 32 leaves, a slow
+/// producer (5 ms service), result flushes batched by 64. The initial
+/// shape is pinned flat via a `Calibrated` preset that matches the long
+/// phase; the short phase saturates rank 0 under that shape, so the
+/// rolling calibration must drive a drain-and-graft to a deeper tree.
+fn reshape_cfg(policy: SchedPolicy, reshape: bool) -> DesConfig {
+    let mut dcfg = DesConfig::new(256);
+    dcfg.sched.consumers_per_buffer = 8; // 32 leaves
+    dcfg.sched.flush_every = 64;
+    dcfg.sched.policy = policy;
+    dcfg.sched.shape = TreeShape::Calibrated(Calibration {
+        producer_rtt: 5.04e-3,
+        mean_task_s: 20.0,
+    });
+    if reshape {
+        dcfg.sched.reshape =
+            Some(ReshapePolicy { window: 3.0, drift_threshold: 0.5, cooldown: 3.0 });
+    }
+    dcfg.lat.producer_service = 5e-3;
+    dcfg
+}
+
+/// Σ wait-hist counts == popped at every node, including the nodes of
+/// trees retired by drain-and-graft transitions.
+fn hist_conserves(r: &DesReport) -> bool {
+    r.node_stats
+        .iter()
+        .chain(r.retired_node_stats.iter())
+        .all(|s| s.wait_hist.iter().map(|h| h.total()).sum::<u64>() == s.popped)
+}
+
+/// Completions per virtual second strictly after `t`.
+fn throughput_after(r: &DesReport, t: f64) -> f64 {
+    let finishes: Vec<f64> = r
+        .results
+        .iter()
+        .filter(|x| !x.cancelled() && x.finish > t)
+        .map(|x| x.finish)
+        .collect();
+    if finishes.is_empty() {
+        return 0.0;
+    }
+    let last = finishes.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    finishes.len() as f64 / (last - t).max(1e-9)
+}
+
+#[test]
+fn reshape_fires_and_conserves_across_policies() {
+    // The tentpole acceptance sweep: on the duration-shifting workload a
+    // transition fires, and conservation — one result per task, Σ
+    // wait-hist counts == popped at every (current and retired) node —
+    // holds across the transition for every SchedPolicy.
+    for policy in [
+        SchedPolicy::Strict,
+        SchedPolicy::Deadline,
+        SchedPolicy::Aging { step: 5.0 },
+    ] {
+        let r = run_des(&reshape_cfg(policy, true), phase_engine(), Box::new(SleepDurations));
+        let n = PS_LONG + PS_SHORT;
+        assert!(
+            !r.reshapes.is_empty(),
+            "{policy:?}: the duration shift must trigger a transition"
+        );
+        assert!(
+            r.reshapes[0].to_depth >= 2,
+            "{policy:?}: the stale flat shape must deepen: {:?}",
+            r.reshapes
+        );
+        assert_eq!(r.results.len(), n, "{policy:?}: conservation across the graft");
+        assert!(ids_complete(&r, n), "{policy:?}: exactly one result per id");
+        assert_eq!(r.filling.overlap_violations(), 0, "{policy:?}");
+        assert!(r.results.iter().all(|x| x.ok()), "{policy:?}: no task may fail");
+        assert!(hist_conserves(&r), "{policy:?}: wait-hist/popped drifted across the graft");
+        assert!(
+            !r.retired_node_stats.is_empty(),
+            "{policy:?}: the pre-transition tree must be retired"
+        );
+        assert_eq!(r.depth, r.reshapes.last().unwrap().to_depth, "{policy:?}: report shape");
+    }
+}
+
+#[test]
+fn reshape_beats_the_stale_shape_after_the_transition() {
+    // Acceptance: with --reshape on the duration-shifting workload,
+    // post-transition throughput must be at least the no-reshape
+    // baseline's over the same interval (the stale flat shape keeps
+    // rank 0 saturated; the grafted tree removes the request traffic).
+    let reshaped =
+        run_des(&reshape_cfg(SchedPolicy::Strict, true), phase_engine(), Box::new(SleepDurations));
+    let stale =
+        run_des(&reshape_cfg(SchedPolicy::Strict, false), phase_engine(), Box::new(SleepDurations));
+    assert!(!reshaped.reshapes.is_empty());
+    assert!(stale.reshapes.is_empty(), "baseline must not reshape");
+    assert_eq!(stale.results.len(), PS_LONG + PS_SHORT);
+    let t_star = reshaped.reshapes[0].t;
+    let thr_reshaped = throughput_after(&reshaped, t_star);
+    let thr_stale = throughput_after(&stale, t_star);
+    assert!(
+        thr_reshaped >= thr_stale,
+        "post-transition throughput {thr_reshaped:.1}/s must beat the stale shape's \
+         {thr_stale:.1}/s (transition at t={t_star:.1})"
+    );
+}
+
+#[test]
+fn reshape_transitions_are_deterministic_in_virtual_time() {
+    // The controller is pure bookkeeping over the DES's deterministic
+    // observation stream: two identical runs must execute identical
+    // transitions and produce identical schedules.
+    let a = run_des(&reshape_cfg(SchedPolicy::Strict, true), phase_engine(), Box::new(SleepDurations));
+    let b = run_des(&reshape_cfg(SchedPolicy::Strict, true), phase_engine(), Box::new(SleepDurations));
+    assert!(!a.reshapes.is_empty());
+    assert_eq!(a.reshapes, b.reshapes, "transition times and shapes must be identical");
+    assert_eq!(a.makespan, b.makespan, "virtual makespans must be bit-identical");
+    let key = |r: &DesReport| {
+        let mut k: Vec<(u64, u64)> =
+            r.results.iter().map(|x| (x.id, x.finish.to_bits())).collect();
+        k.sort();
+        k
+    };
+    assert_eq!(key(&a), key(&b), "schedules must be bit-identical");
+}
+
+#[test]
+fn threaded_reshape_conserves_under_steals_and_cancels() {
+    // The real runtime's drain-and-graft: start from a deliberately deep
+    // Calibrated shape, let the rolling measurement (real channel lag,
+    // real durations) pull the tree toward the workload, and prove
+    // conservation — exactly one result per id — with sibling stealing
+    // on and cancellations racing the transition.
+    use caravan::api::{JobEngine, JobSpec, Jobs};
+
+    struct CancelBlock {
+        n: usize,
+        fired: bool,
+    }
+    impl JobEngine for CancelBlock {
+        type Ctx = ();
+        fn start(&mut self, jobs: &mut Jobs<'_, ()>) {
+            for _ in 0..self.n {
+                jobs.submit(JobSpec::sleep(5.0), ());
+            }
+        }
+        fn on_done(
+            &mut self,
+            _r: &caravan::tasklib::TaskResult,
+            _ctx: (),
+            jobs: &mut Jobs<'_, ()>,
+        ) {
+            if !self.fired {
+                self.fired = true;
+                for id in 40..52u64 {
+                    jobs.cancel(id);
+                }
+            }
+        }
+    }
+
+    let n = 64;
+    let mut cfg = shape(8, 2, 1, 8, true); // 4 leaves, stealing on
+    cfg.shape = TreeShape::Calibrated(Calibration { producer_rtt: 1.0, mean_task_s: 0.5 });
+    cfg.reshape = Some(ReshapePolicy { window: 3.0, drift_threshold: 0.1, cooldown: 2.0 });
+    cfg.time_scale = 0.01; // 1 virtual s = 10 ms wall
+    cfg.flush_interval_ms = 2;
+    let r = run_scheduler(
+        &cfg,
+        caravan::api::job_engine(CancelBlock { n, fired: false }),
+        Arc::new(SleepExecutor { time_scale: 0.01 }),
+    );
+    assert_eq!(r.results.len(), n, "conservation across threaded transitions");
+    let mut ids: Vec<u64> = r.results.iter().map(|x| x.id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "exactly one result per id under reshape + steal + cancel");
+    assert!(
+        r.results.iter().all(|x| x.ok() || x.cancelled()),
+        "every result is a success or an honoured cancellation"
+    );
+    assert!(
+        !r.reshapes.is_empty(),
+        "the drifted measurements must re-shape the deliberately deep tree"
+    );
+    assert_eq!(r.depth, r.reshapes.last().unwrap().to_depth);
+    assert_eq!(r.filling.overlap_violations(), 0);
 }
 
 #[test]
