@@ -94,6 +94,10 @@ fn run_point(
         assert_eq!(hist_total, s.popped, "wait histogram drifted from pops at node {}", s.node);
     }
     let rate = r.rate(np);
+    // Throughput over the virtual makespan — the schema's guard against a
+    // run that conserves tasks but crawls. Null (not NaN — the artifact
+    // must stay valid JSON) if the makespan degenerates.
+    let tasks_per_sec = n as f64 / r.makespan;
     let levels: Vec<String> = r
         .level_fill
         .iter()
@@ -108,13 +112,14 @@ fn run_point(
         })
         .collect();
     println!(
-        "{:>7} {:>6} {:>6} {:>6} {:>9} | {:>7.2}% | {:>9} {:>7} {:>8.2} | {}",
+        "{:>7} {:>6} {:>6} {:>6} {:>9} | {:>7.2}% {:>9.0} | {:>9} {:>7} {:>8.2} | {}",
         np,
         depth.map_or_else(|| format!("auto:{}", r.depth), |d| d.to_string()),
         fanout_label(&r.fanout),
         if steal { "yes" } else { "no" },
         n,
         rate * 100.0,
+        tasks_per_sec,
         r.producer_msgs_in + r.producer_msgs_out,
         r.tasks_stolen(),
         run.wall_secs,
@@ -143,6 +148,10 @@ fn run_point(
         ("steal", Json::Bool(steal)),
         ("n_tasks", Json::Num(n as f64)),
         ("fill", Json::Num(rate)),
+        (
+            "tasks_per_sec",
+            if tasks_per_sec.is_finite() { Json::Num(tasks_per_sec) } else { Json::Null },
+        ),
         ("prod_msgs", Json::Num((r.producer_msgs_in + r.producer_msgs_out) as f64)),
         ("stolen", Json::Num(r.tasks_stolen() as f64)),
         ("max_req_lag_s", Json::Num(max_req_lag)),
@@ -192,7 +201,8 @@ fn schema_keys(v: &Json, prefix: &str, out: &mut std::collections::BTreeSet<Stri
 fn table_json(rows: Vec<Json>, config: &str) -> Json {
     Json::obj(vec![
         ("bench", Json::Str("fig3_tree".into())),
-        ("schema_version", Json::Num(1.0)),
+        // v2: rows gained `tasks_per_sec` (throughput over virtual makespan).
+        ("schema_version", Json::Num(2.0)),
         ("config", Json::Str(config.into())),
         ("workload", Json::Str("TC2".into())),
         ("generated_by", Json::Str("cargo bench --bench fig3_tree -- --json".into())),
@@ -238,8 +248,8 @@ fn main() {
         "per-level fill = mean/min subtree rate; prod-msgs = rank 0 messages in+out",
     );
     println!(
-        "{:>7} {:>6} {:>6} {:>6} {:>9} | {:>8} | {:>9} {:>7} {:>8} | per-level fill",
-        "Np", "depth", "fanout", "steal", "N", "fill", "prod-msg", "stolen", "bench-s"
+        "{:>7} {:>6} {:>6} {:>6} {:>9} | {:>8} {:>9} | {:>9} {:>7} {:>8} | per-level fill",
+        "Np", "depth", "fanout", "steal", "N", "fill", "tasks/s", "prod-msg", "stolen", "bench-s"
     );
     let mut rows: Vec<Json> = Vec::new();
     let quick = args.has_flag("quick");

@@ -502,6 +502,31 @@ pub struct DesLatencyConfig {
     /// running attempt actually dying — the virtual-time analogue of the
     /// external-process executor's cancellation poll interval.
     pub cancel_poll: f64,
+    /// Per-edge one-way latency of the buffer-tree links, root-down: index
+    /// 0 is the producer↔level-1 edge, index 1 the level-1↔level-2 edge,
+    /// and the last element repeats for deeper edges — the same indexing
+    /// convention as [`SchedulerConfig::fanout`]. Empty (the default)
+    /// means every tree edge costs [`DesLatencyConfig::msg_latency`].
+    /// Consumer-facing leaf edges always use `msg_latency`: consumers are
+    /// co-located with their leaf buffer, only tree links go over the
+    /// wire. This is what lets `choose_shape` see a multi-host topology —
+    /// a slow root edge raises the producer round trip, which deepens the
+    /// auto-shaped tree exactly as a remote `caravan worker` link would.
+    pub link_latency: Vec<f64>,
+}
+
+impl DesLatencyConfig {
+    /// Latency of the edge *above* a node at `level` (roots are level 1,
+    /// so `edge_latency(1)` is the producer↔root link). Indexes
+    /// [`DesLatencyConfig::link_latency`] root-down, repeating the last
+    /// element for deeper edges; with no per-edge overrides every edge is
+    /// [`DesLatencyConfig::msg_latency`].
+    pub fn edge_latency(&self, level: usize) -> f64 {
+        match self.link_latency.len() {
+            0 => self.msg_latency,
+            n => self.link_latency[level.saturating_sub(1).min(n - 1)],
+        }
+    }
 }
 
 impl Default for DesLatencyConfig {
@@ -512,6 +537,7 @@ impl Default for DesLatencyConfig {
             buffer_service: 50e-6,
             task_overhead: 0.05,
             cancel_poll: 0.01,
+            link_latency: Vec::new(),
         }
     }
 }
@@ -519,6 +545,18 @@ impl Default for DesLatencyConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn edge_latency_indexes_root_down_and_repeats_last() {
+        let uniform = DesLatencyConfig::default();
+        assert_eq!(uniform.edge_latency(1), uniform.msg_latency);
+        assert_eq!(uniform.edge_latency(3), uniform.msg_latency);
+        let lat =
+            DesLatencyConfig { link_latency: vec![5e-3, 1e-4], ..DesLatencyConfig::default() };
+        assert_eq!(lat.edge_latency(1), 5e-3, "index 0 = producer↔root edge");
+        assert_eq!(lat.edge_latency(2), 1e-4);
+        assert_eq!(lat.edge_latency(3), 1e-4, "last element repeats for deeper edges");
+    }
 
     #[test]
     fn per_level_fanout_indexes_root_down_and_repeats_last() {

@@ -8,7 +8,11 @@
 //! executes — with an explicit latency/overhead model
 //! ([`crate::config::DesLatencyConfig`]):
 //!
-//! * every point-to-point message takes `msg_latency` to arrive;
+//! * every point-to-point message takes `msg_latency` to arrive — unless
+//!   the edge it crosses has a per-edge override in
+//!   [`DesLatencyConfig::link_latency`] (root-down, like
+//!   [`SchedulerConfig::fanout`]), which models multi-host trees where
+//!   e.g. the producer↔root edge is a WAN link to a `caravan worker`;
 //! * the producer and each buffer-tree node are serial servers: handling a
 //!   message occupies them for `producer_service` / `buffer_service`
 //!   virtual seconds (messages queue while the entity is busy — this is
@@ -300,7 +304,8 @@ impl<'a> Des<'a> {
     }
 
     fn perform_producer(&mut self, acts: Vec<ProducerAction>, t: f64) {
-        let lat = self.cfg.lat.msg_latency;
+        // Everything the producer sends travels the producer↔root edge.
+        let lat = self.cfg.lat.edge_latency(1);
         for act in acts {
             match act {
                 ProducerAction::SendTasks { buffer, tasks } => {
@@ -330,6 +335,15 @@ impl<'a> Des<'a> {
     }
 
     fn perform_node(&mut self, n: usize, acts: Vec<BufferAction>, t: f64) {
+        // Three distinct links meet at a tree node: the edge up to its
+        // parent (which siblings also share for steal traffic), the edges
+        // down to its children, and — for leaves — the consumer-facing
+        // edge. Consumers are co-located with their leaf, so that last one
+        // always costs the baseline `msg_latency`; the tree edges take the
+        // per-edge override so a multi-host shape is visible to the model.
+        let level = self.topo.nodes[n].level;
+        let up = self.cfg.lat.edge_latency(level);
+        let down = self.cfg.lat.edge_latency(level + 1);
         let lat = self.cfg.lat.msg_latency;
         let overhead = self.cfg.lat.task_overhead;
         let parent = self.topo.nodes[n].parent;
@@ -377,35 +391,36 @@ impl<'a> Des<'a> {
                 }
                 BufferAction::SendToChild { child, tasks } => {
                     let child_id = self.topo.children_of(n)[child];
-                    self.push(t + lat, Ev::NodeAssign { node: child_id, tasks });
+                    self.push(t + down, Ev::NodeAssign { node: child_id, tasks });
                 }
                 BufferAction::RequestTasks { amount } => match parent {
-                    None => self.push(t + lat, Ev::ProdRequest { slot, amount }),
+                    None => self.push(t + up, Ev::ProdRequest { slot, amount }),
                     Some(p) => {
-                        self.push(t + lat, Ev::NodeRequest { node: p, child: slot, amount })
+                        self.push(t + up, Ev::NodeRequest { node: p, child: slot, amount })
                     }
                 },
                 BufferAction::FlushResults(results) => {
                     if !results.is_empty() {
                         match parent {
-                            None => self.push(t + lat, Ev::ProdResults { results }),
-                            Some(p) => self.push(t + lat, Ev::NodeResults { node: p, results }),
+                            None => self.push(t + up, Ev::ProdResults { results }),
+                            Some(p) => self.push(t + up, Ev::NodeResults { node: p, results }),
                         }
                     }
                 }
                 BufferAction::StealRequest { victim, amount } => {
+                    // Sideways traffic rides the shared parent-facing link.
                     let victim_id = match parent {
                         None => self.topo.roots[victim],
                         Some(p) => self.topo.children_of(p)[victim],
                     };
                     self.push(
-                        t + lat,
+                        t + up,
                         Ev::NodeSteal { node: victim_id, thief: n, thief_slot: slot, amount },
                     );
                 }
                 BufferAction::StealGrant { thief, from_slot, left, cancels, tasks } => {
                     self.push(
-                        t + lat,
+                        t + up,
                         Ev::NodeStolen { node: thief, from_slot, left, cancels, tasks },
                     );
                 }
@@ -446,7 +461,7 @@ impl<'a> Des<'a> {
                 BufferAction::CancelChildren { id } => {
                     let children = self.topo.children_of(n).to_vec();
                     for child_id in children {
-                        self.push(t + lat, Ev::NodeCancel { node: child_id, id });
+                        self.push(t + down, Ev::NodeCancel { node: child_id, id });
                     }
                 }
                 BufferAction::ShutdownConsumers => {
@@ -455,22 +470,22 @@ impl<'a> Des<'a> {
                 BufferAction::ShutdownChildren => {
                     let children = self.topo.children_of(n).to_vec();
                     for child_id in children {
-                        self.push(t + lat, Ev::NodeShutdown { node: child_id });
+                        self.push(t + down, Ev::NodeShutdown { node: child_id });
                     }
                 }
                 BufferAction::ReturnTasks(tasks) => match parent {
-                    None => self.push(t + lat, Ev::ProdReturned { tasks }),
-                    Some(p) => self.push(t + lat, Ev::NodeReturned { node: p, tasks }),
+                    None => self.push(t + up, Ev::ProdReturned { tasks }),
+                    Some(p) => self.push(t + up, Ev::NodeReturned { node: p, tasks }),
                 },
                 BufferAction::RecallChildren => {
                     let children = self.topo.children_of(n).to_vec();
                     for child_id in children {
-                        self.push(t + lat, Ev::NodeRecall { node: child_id });
+                        self.push(t + down, Ev::NodeRecall { node: child_id });
                     }
                 }
                 BufferAction::AckRecall => match parent {
-                    None => self.push(t + lat, Ev::ProdRecallAck { slot }),
-                    Some(p) => self.push(t + lat, Ev::NodeRecallAck { node: p, child: slot }),
+                    None => self.push(t + up, Ev::ProdRecallAck { slot }),
+                    Some(p) => self.push(t + up, Ev::NodeRecallAck { node: p, child: slot }),
                 },
             }
         }
@@ -594,7 +609,10 @@ fn des_calibration(
     staged: &[TaskSpec],
     durations: &mut dyn DurationModel,
 ) -> Calibration {
-    let producer_rtt = 2.0 * lat.msg_latency + lat.producer_service;
+    // The round trip crosses the producer↔root edge twice, so a slow root
+    // link (a remote worker host) raises the RTT and `choose_shape` buys
+    // more batching depth — the calibration sees the multi-host topology.
+    let producer_rtt = 2.0 * lat.edge_latency(1) + lat.producer_service;
     let sample: Vec<f64> = staged.iter().take(CAL_SAMPLE).map(|t| durations.duration(t)).collect();
     let mean_task_s = if sample.is_empty() {
         Calibration::fallback().mean_task_s
@@ -1011,6 +1029,45 @@ mod tests {
         // Rank 0 talks to exactly one child: its message counts stay tiny
         // relative to a flat layout (16 leaves × constant chatter).
         assert_eq!(r.level_fill.len(), 3);
+    }
+
+    #[test]
+    fn slow_root_edge_deepens_auto_shape_deterministically() {
+        // Per-edge link latency is how the DES models a multi-host tree:
+        // a 50 ms producer↔root link (a remote `caravan worker` over a
+        // WAN) blows up the calibrated round trip, so `choose_shape`
+        // must buy more depth than the uniform-20 µs in-host baseline —
+        // and, being driven purely by virtual time, do so identically on
+        // every run. (At ~18 producer msgs/s for this workload, a 50 ms
+        // per-message cost predicts ~90 % utilization at depth 1 — well
+        // past the 50 % target; 20 µs predicts well under 1 %.)
+        let mk = |link: Vec<f64>| {
+            let mut cfg = DesConfig::new(4096);
+            cfg.sched.consumers_per_buffer = 384; // the paper's 1:384
+            cfg.sched.shape = TreeShape::Auto;
+            cfg.lat.link_latency = link;
+            run_des(
+                &cfg,
+                Box::new(TestCaseEngine::new(TestCase::TC2, 4096 * 4, 7)),
+                Box::new(SleepDurations),
+            )
+        };
+        let uniform = mk(Vec::new());
+        let slow = mk(vec![50e-3]);
+        assert_eq!(uniform.results.len(), 4096 * 4);
+        assert_eq!(slow.results.len(), 4096 * 4);
+        assert!(
+            slow.depth > uniform.depth,
+            "50 ms root edge must deepen the auto shape: {} vs {}",
+            slow.depth,
+            uniform.depth
+        );
+        // Exact determinism: same config twice → bit-identical outcome.
+        let again = mk(vec![50e-3]);
+        assert_eq!(slow.depth, again.depth);
+        assert_eq!(slow.fanout, again.fanout);
+        assert_eq!(slow.makespan, again.makespan, "virtual time must be exactly reproducible");
+        assert_eq!(slow.events_processed, again.events_processed);
     }
 
     #[test]

@@ -145,7 +145,12 @@ mod tests {
             let node = sub.nodes[0];
             let mut order: Vec<usize> = (0..sc.shelters.len()).collect();
             order.sort_by(|&a, &b| {
-                sc.routing.distance(node, a).partial_cmp(&sc.routing.distance(node, b)).unwrap()
+                // nan_worst, not partial_cmp().unwrap(): an unreachable
+                // shelter column must not panic the sort.
+                crate::util::stats::nan_worst_f32(
+                    sc.routing.distance(node, a),
+                    sc.routing.distance(node, b),
+                )
             });
             split.dest_a[i] = order[0];
             split.dest_b[i] = order[1];

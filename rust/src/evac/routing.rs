@@ -13,6 +13,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use super::network::RoadNetwork;
+use crate::util::stats::nan_worst_f32;
 
 /// `next[node * n_shelters + s]` = outgoing link index leading toward
 /// shelter `s`, or `NO_ROUTE` when unreachable / already at the shelter.
@@ -55,12 +56,13 @@ impl RoutingTable {
         self.dist[node * self.n_shelters + shelter]
     }
 
-    /// Index of the nearest shelter from `node`.
+    /// Index of the nearest shelter from `node`. A NaN distance (a
+    /// poisoned table — e.g. loaded from a corrupt artifact) ranks worst
+    /// rather than panicking the comparator, so some reachable shelter
+    /// still wins whenever one exists.
     pub fn nearest_shelter(&self, node: usize) -> usize {
         (0..self.n_shelters)
-            .min_by(|&a, &b| {
-                self.distance(node, a).partial_cmp(&self.distance(node, b)).unwrap()
-            })
+            .min_by(|&a, &b| nan_worst_f32(self.distance(node, a), self.distance(node, b)))
             .unwrap()
     }
 }
@@ -135,6 +137,24 @@ mod tests {
         let rt = RoutingTable::build(&net, &[0, 3]);
         assert_eq!(rt.nearest_shelter(1), 0);
         assert_eq!(rt.nearest_shelter(2), 1);
+    }
+
+    #[test]
+    fn nearest_shelter_survives_nan_distances() {
+        // Regression: this used to be `partial_cmp().unwrap()`, which
+        // panics on the first NaN. Poison one shelter's distance column
+        // and the other (finite) shelter must still win.
+        let net = line_net();
+        let mut rt = RoutingTable::build(&net, &[0, 3]);
+        for node in 0..4 {
+            rt.dist[node * rt.n_shelters] = f32::NAN; // shelter 0 poisoned
+        }
+        for node in 0..4 {
+            assert_eq!(rt.nearest_shelter(node), 1, "NaN must rank worst, not win or panic");
+        }
+        // All-NaN row still returns *some* index without panicking.
+        rt.dist[rt.n_shelters + 1] = f32::NAN; // node 1, shelter 1
+        assert!(rt.nearest_shelter(1) < 2);
     }
 
     #[test]

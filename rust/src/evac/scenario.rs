@@ -14,6 +14,7 @@ use super::network::{grid_city, GridCityParams, RoadNetwork};
 use super::routing::RoutingTable;
 use super::sim::{SimArrays, SimParams, SENTINEL_LENGTH};
 use crate::util::rng::Pcg64;
+use crate::util::stats::nan_worst;
 
 #[derive(Clone, Debug)]
 pub struct Shelter {
@@ -231,7 +232,11 @@ pub fn apportion(total: usize, weights: &[f64]) -> Vec<usize> {
     let assigned: usize = out.iter().sum();
     let mut rema: Vec<(f64, usize)> =
         quotas.iter().enumerate().map(|(i, q)| (q - q.floor(), i)).collect();
-    rema.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    // Descending by remainder with NaN quotas last (negating flips the
+    // finite order while NaN stays NaN): an infinite weight turns its own
+    // quota into NaN — it must neither panic the sort (the old
+    // `partial_cmp().unwrap()`) nor soak up the leftover items first.
+    rema.sort_by(|a, b| nan_worst(-a.0, -b.0));
     for k in 0..(total - assigned) {
         out[rema[k % rema.len()].1] += 1;
     }
@@ -249,6 +254,20 @@ mod tests {
         assert_eq!(out, vec![25, 25, 50]);
         let out = apportion(7, &[0.5, 0.5]);
         assert_eq!(out.iter().sum::<usize>(), 7);
+    }
+
+    #[test]
+    fn apportion_survives_infinite_weight_nan_quota() {
+        // An infinite weight makes wsum infinite, so its own quota is
+        // inf/inf = NaN while every finite weight's quota collapses to 0.
+        // Regression: the remainder sort used `partial_cmp().unwrap()`
+        // and panicked here. Now the NaN ranks last, every item is still
+        // handed out, and nothing lands on the poisoned entry first.
+        let out = apportion(10, &[1.0, f64::INFINITY]);
+        assert_eq!(out.iter().sum::<usize>(), 10, "largest-remainder must conserve the total");
+        let out = apportion(3, &[f64::INFINITY, 2.0, 2.0]);
+        assert_eq!(out.iter().sum::<usize>(), 3);
+        assert!(out[1] >= 1 && out[2] >= 1, "finite weights are served before the NaN quota");
     }
 
     #[test]

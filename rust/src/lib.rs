@@ -26,6 +26,11 @@
 //!   evacuation model (`artifacts/*.hlo.txt`) and executes it on the hot path.
 //! * [`extproc`] — external-process simulator support (§2.2): command-line
 //!   arguments, per-task temporary directories, `_results.txt` parsing.
+//! * [`transport`] — the link layer under the distributed scheduler: a
+//!   length-prefixed binary codec for the protocol messages and a
+//!   [`transport::Transport`] trait with in-process channel, TCP and
+//!   Unix-domain-socket implementations (see `scheduler::net` for the
+//!   `caravan worker` runtime built on top).
 //! * [`workload`] — the TC1/TC2/TC3 synthetic workloads of §3.
 //! * [`util`] — self-contained infrastructure (deterministic RNG, statistics,
 //!   JSON, CLI, logging) so the crate builds offline.
@@ -40,5 +45,6 @@ pub mod engine;
 pub mod evac;
 pub mod runtime;
 pub mod extproc;
+pub mod transport;
 pub mod config;
 pub mod testutil;

@@ -3,13 +3,18 @@
 //! Subcommands:
 //!   run <cmdline>   run one external command N times through the scheduler
 //!                   (§2.2 contract: argv in, per-task temp dir,
-//!                   `_results.txt` out)
+//!                   `_results.txt` out); with --listen the buffer tree
+//!                   runs in remote `caravan worker` processes instead
+//!   worker <addr>   connect to a root's --listen endpoint and serve a
+//!                   remote subtree until the run shuts down
 //!   des             DES filling-rate experiment (Fig. 3 point)
 //!   evac            evaluate one random evacuation plan (tiny|mini)
 //!   info            print artifact + scenario inventory
 //!
 //! Examples:
 //!   caravan run "sh -c 'echo 1 > _results.txt'" --n 32 --np 4 --retries 2
+//!   caravan run "sh -c 'true'" --n 64 --np 8 --listen uds:/tmp/cv.sock --workers 2
+//!   caravan worker uds:/tmp/cv.sock
 //!   caravan des --np 1024 --tc 2 --tasks-per-proc 100
 //!   caravan evac --variant tiny --backend pjrt --seed 3
 //!   caravan info
@@ -22,8 +27,12 @@ use caravan::des::{run_des, DesConfig, SleepDurations};
 use caravan::evac::{build_scenario, EvacEvaluator, RustSimBackend, ScenarioParams, SimBackend};
 use caravan::extproc::CommandExecutor;
 use caravan::runtime::{ArtifactMeta, PjrtServer};
-use caravan::scheduler::run_scheduler;
-use caravan::tasklib::{SearchEngine, TaskResult};
+use caravan::scheduler::{
+    connect_worker, run_scheduler, serve_scheduler, CancelSet, ExecOutcome, Executor,
+    ServeOptions, SleepExecutor,
+};
+use caravan::tasklib::{Payload, SearchEngine, TaskResult, TaskSpec};
+use caravan::transport::{Endpoint, Listener};
 use caravan::util::cli::Args;
 use caravan::util::rng::Pcg64;
 use caravan::workload::{TestCase, TestCaseEngine};
@@ -50,9 +59,37 @@ impl SearchEngine for RepeatCmd {
     }
 }
 
+/// Worker-side payload dispatcher: dummy sleeps run through
+/// [`SleepExecutor`], external commands through [`CommandExecutor`].
+/// `Eval` payloads need an in-process evaluator the bare worker does not
+/// carry, so they fail cleanly with rc 1 instead of panicking the
+/// consumer thread.
+struct WorkerExecutor {
+    sleep: SleepExecutor,
+    command: CommandExecutor,
+}
+
+impl Executor for WorkerExecutor {
+    fn run(&self, task: &TaskSpec, consumer: usize) -> (Vec<f64>, i32) {
+        match &task.payload {
+            Payload::Sleep { .. } => self.sleep.run(task, consumer),
+            Payload::Command { .. } => self.command.run(task, consumer),
+            Payload::Eval { .. } => (Vec::new(), 1),
+        }
+    }
+
+    fn run_cancellable(&self, task: &TaskSpec, consumer: usize, cancel: &CancelSet) -> ExecOutcome {
+        match &task.payload {
+            Payload::Sleep { .. } => self.sleep.run_cancellable(task, consumer, cancel),
+            Payload::Command { .. } => self.command.run_cancellable(task, consumer, cancel),
+            Payload::Eval { .. } => ExecOutcome { results: Vec::new(), rc: 1, timed_out: false },
+        }
+    }
+}
+
 fn usage() {
     eprintln!(
-        "usage: caravan <run|des|evac|info> [--options] (--help prints this)
+        "usage: caravan <run|worker|des|evac|info> [--options] (--help prints this)
 
   run '<cmdline>'   run an external command through the scheduler
       --n N           number of tasks (default 10)
@@ -84,10 +121,26 @@ fn usage() {
                             (default 0.25)
       --reshape-cooldown S  minimum seconds between transitions
                             (default 30)
+      --listen ADDR   serve the buffer tree over the wire instead of
+                      in-process: bind ADDR (tcp:HOST:PORT or
+                      uds:/path.sock), wait for --workers `caravan
+                      worker` connections, and split the np consumers
+                      across them
+      --workers N     worker links to accept before starting (default 1)
+
+  worker <addr>     connect to a root's --listen endpoint and serve a
+                    remote subtree (buffer tree + consumers) until the
+                    root shuts the run down
+      --np N          consumer share to offer (default: root decides)
+      --time-scale S  real seconds per virtual second for dummy Sleep
+                      payloads; must match the root (default 1.0)
 
   des               DES filling-rate experiment (Fig. 3 point)
       --np N --tc 1|2|3 --tasks-per-proc N --depth D|auto
       --fanout F[,F2,..] --steal --steal-round-robin --direct --seed S
+      --link-latency S[,S2,..]  per-edge one-way latency in seconds,
+                      root-down (first = producer<->root edge, last
+                      repeats deeper); models multi-host trees
       --policy strict|deadline|aging[:SECONDS]
       --reshape [--reshape-window S --reshape-drift X
                  --reshape-cooldown S]   (as for run; virtual time)
@@ -159,6 +212,7 @@ fn main() {
     }
     match args.subcommand() {
         Some("run") => cmd_run(&args),
+        Some("worker") => cmd_worker(&args),
         Some("des") => cmd_des(&args),
         Some("evac") => cmd_evac(&args),
         Some("info") => cmd_info(&args),
@@ -194,11 +248,32 @@ fn cmd_run(args: &Args) {
     apply_shape(args, &mut cfg);
     apply_reshape(args, &mut cfg);
     let work = std::env::temp_dir().join(format!("caravan_run_{}", std::process::id()));
-    let report = run_scheduler(
-        &cfg,
-        Box::new(RepeatCmd { n, spec }),
-        Arc::new(CommandExecutor::new(&work)),
-    );
+    let report = if let Some(listen) = args.get_opt("listen") {
+        // Distributed mode: the tree lives in `caravan worker` processes;
+        // this process runs only the engine + producer loop.
+        let ep = Endpoint::parse(listen).unwrap_or_else(|e| {
+            eprintln!("--listen: {e}");
+            std::process::exit(2);
+        });
+        let listener = Listener::bind(&ep).unwrap_or_else(|e| {
+            eprintln!("--listen {ep}: {e}");
+            std::process::exit(2);
+        });
+        let workers = args.get_usize("workers", 1).max(1);
+        caravan::info!("listening on {ep} for {workers} worker(s)");
+        serve_scheduler(
+            &cfg,
+            Box::new(RepeatCmd { n, spec }),
+            &listener,
+            &ServeOptions { workers, ..Default::default() },
+        )
+        .unwrap_or_else(|e| {
+            eprintln!("serve: {e}");
+            std::process::exit(1);
+        })
+    } else {
+        run_scheduler(&cfg, Box::new(RepeatCmd { n, spec }), Arc::new(CommandExecutor::new(&work)))
+    };
     let failures = report.results.iter().filter(|r| !r.ok()).count();
     let retried: u64 = report.node_stats.iter().map(|s| s.retried).sum();
     println!(
@@ -224,9 +299,54 @@ fn cmd_run(args: &Args) {
             ev.cal.mean_task_s
         );
     }
+    for s in report.node_stats.iter().filter(|s| s.wire_msgs_in + s.wire_msgs_out > 0) {
+        println!(
+            "  link slot {}: {} consumers, {} frames in / {} out, {} bytes in / {} out",
+            s.node,
+            s.subtree_consumers,
+            s.wire_msgs_in,
+            s.wire_msgs_out,
+            s.wire_bytes_in,
+            s.wire_bytes_out
+        );
+    }
     let _ = std::fs::remove_dir_all(&work);
     if failures > 0 {
         std::process::exit(1);
+    }
+}
+
+fn cmd_worker(args: &Args) {
+    let Some(addr) = args.positional().first().cloned() else {
+        eprintln!("worker: missing <addr> (tcp:HOST:PORT or uds:/path.sock)");
+        std::process::exit(2);
+    };
+    let ep = Endpoint::parse(&addr).unwrap_or_else(|e| {
+        eprintln!("worker: {e}");
+        std::process::exit(2);
+    });
+    let work = std::env::temp_dir().join(format!("caravan_worker_{}", std::process::id()));
+    let exec = Arc::new(WorkerExecutor {
+        sleep: SleepExecutor { time_scale: args.get_f64("time-scale", 1.0) },
+        command: CommandExecutor::new(&work),
+    });
+    let outcome = connect_worker(&ep, exec, args.get_usize("np", 0));
+    let _ = std::fs::remove_dir_all(&work);
+    match outcome {
+        Ok(r) => println!(
+            "worker slot {}: {} consumers, {} results flushed, {} frames in / {} out ({} / {} bytes)",
+            r.slot,
+            r.np,
+            r.tasks_run,
+            r.link.msgs_in,
+            r.link.msgs_out,
+            r.link.bytes_in,
+            r.link.bytes_out
+        ),
+        Err(e) => {
+            eprintln!("worker: {e}");
+            std::process::exit(1);
+        }
     }
 }
 
@@ -243,6 +363,17 @@ fn cmd_des(args: &Args) {
         cfg.sched.steal_policy = caravan::config::StealPolicy::RoundRobin;
     }
     cfg.sched.policy = parse_policy(args);
+    if let Some(spec) = args.get_opt("link-latency") {
+        cfg.lat.link_latency = spec
+            .split(',')
+            .map(|s| {
+                s.trim().parse::<f64>().unwrap_or_else(|_| {
+                    eprintln!("--link-latency: {s:?} is not a number of seconds");
+                    std::process::exit(2);
+                })
+            })
+            .collect();
+    }
     let t0 = std::time::Instant::now();
     let r = run_des(
         &cfg,

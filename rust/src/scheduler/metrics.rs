@@ -87,6 +87,16 @@ pub struct NodeStats {
     pub req_lag_max: f64,
     /// Whether the shutdown broadcast reached this node.
     pub saw_shutdown: bool,
+    /// Frames received over a transport link feeding this node — zero for
+    /// in-process nodes; the root side of a `caravan worker` connection
+    /// reports its per-edge link traffic here.
+    pub wire_msgs_in: u64,
+    /// Frames sent over the node's transport link (zero in-process).
+    pub wire_msgs_out: u64,
+    /// Encoded bytes received over the node's transport link.
+    pub wire_bytes_in: u64,
+    /// Encoded bytes sent over the node's transport link.
+    pub wire_bytes_out: u64,
 }
 
 /// Filling-rate summary of one buffer level (see [`FillingRate::level_fill`]).

@@ -3,14 +3,19 @@
 //! and consumer processes, realized as pure protocol state machines
 //! ([`protocol`]) plus a threaded runtime ([`threads`]) that executes them
 //! for real. The DES in [`crate::des`] runs the *same* protocol in virtual
-//! time for K-computer-scale experiments.
+//! time for K-computer-scale experiments, and [`net`] carries it across
+//! real process boundaries: a serve loop on the producer side, remote
+//! worker subtrees over TCP / Unix-domain links, and dead-link handling
+//! that reuses the recall machinery.
 
 pub mod metrics;
+pub mod net;
 pub mod protocol;
 pub mod reshape;
 pub mod threads;
 
 pub use metrics::{BandWaitHist, FillingRate, LevelFill, NodeStats, N_WAIT_BINS, WAIT_BUCKET_EDGES};
+pub use net::{connect_worker, run_worker, serve_scheduler, ServeOptions, WorkerReport};
 pub use protocol::{choose_shape, resolve_shape, shaped_fanouts, PrioQueue, MAX_AUTO_DEPTH};
 pub use reshape::{ReshapeController, ReshapeEvent};
 pub use threads::{run_scheduler, CancelSet, ExecOutcome, Executor, Report, SleepExecutor};

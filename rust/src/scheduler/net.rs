@@ -1,0 +1,880 @@
+//! The distributed scheduler runtime: producer and buffer tree on
+//! opposite ends of a [`crate::transport`] link.
+//!
+//! The paper runs CARAVAN's roles across a massive parallel machine; this
+//! module is that split for real processes. The **root** side
+//! ([`serve_scheduler`] / [`serve_links`]) runs the search engine and the
+//! [`ProducerState`] machine, accepting one link per worker; each link is
+//! one direct child (one "root slot") of the producer. The **worker**
+//! side ([`run_worker`], the `caravan worker` subcommand) connects,
+//! handshakes, and grafts a locally-threaded buffer tree
+//! (`threads::spawn_tree`) under a *gateway* [`BufferState`]
+//! whose parent is the socket instead of a channel.
+//!
+//! ## Handshake
+//!
+//! ```text
+//! worker                          root
+//!   | -- Hello{version, np} ------> |   (version gate)
+//!   | <-- Welcome{slot, cfg} ------ |   (SchedulerConfig slice +
+//!   |                               |    level / rank_base assignment)
+//!   | -- Request{amount} ---------> |   gateway primes its credit
+//!   | <-- Assign[tasks] ----------- |
+//! ```
+//!
+//! ## Dead link = a recall that never acks
+//!
+//! The failure path reuses the drain-and-graft recall machinery
+//! (PR 5): when a link times out past the liveness budget or closes, the
+//! root treats the worker as recalled — [`ProducerState::on_child_dead`]
+//! withdraws its credit, and every task the root had granted to that
+//! worker and not yet seen complete is re-queued via
+//! [`ProducerState::on_returned`], stamps intact, to be re-granted to the
+//! surviving workers. Conservation holds: `submitted` and `completed`
+//! are untouched by a crash; the lost tasks are simply *pending* again.
+//! Duplicate results cannot arise because a worker's results are only
+//! ever read by its own (now dead) reader thread, and a task is only
+//! re-granted while absent from the set of results already processed.
+//!
+//! Workers heartbeat ([`WireMsg::Ping`]) so an idle-but-healthy link
+//! never trips the liveness budget.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::metrics::{FillingRate, NodeStats};
+use super::protocol::{BufferAction, BufferState, ProducerAction, ProducerState};
+use super::threads::{spawn_tree, Executor, ParentLink, ProducerSink, Report, ToBuffer};
+use crate::config::SchedulerConfig;
+use crate::tasklib::{SearchEngine, TaskId, TaskSpec};
+use crate::transport::wire::{WireConfig, WireMsg, PROTO_VERSION};
+use crate::transport::{Endpoint, LinkStats, Listener, Transport, TransportError};
+
+/// How long a worker may stay silent before the root declares its link
+/// dead. Workers ping at [`PING_EVERY`], so a healthy idle link shows
+/// traffic well inside this budget.
+pub const DEFAULT_LIVENESS: Duration = Duration::from_secs(10);
+
+/// Worker heartbeat cadence (must be comfortably under the liveness
+/// budget).
+pub const PING_EVERY: Duration = Duration::from_secs(2);
+
+/// How long each side waits for the other's half of the handshake.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Root-side knobs for a distributed run.
+pub struct ServeOptions {
+    /// Worker links to accept before the run starts.
+    pub workers: usize,
+    /// Silence budget per link before dead-link handling fires.
+    pub liveness: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { workers: 1, liveness: DEFAULT_LIVENESS }
+    }
+}
+
+/// One accepted worker link, root-side.
+struct WorkerLink {
+    /// Send half; `None` once the link died.
+    tx: Option<Box<dyn Transport>>,
+    /// Tasks granted to this worker whose results the root has not seen.
+    /// Drained back into the pending queue when the link dies.
+    outstanding: HashMap<TaskId, TaskSpec>,
+    /// Consumer processes this worker runs.
+    np: usize,
+    /// First global consumer rank of the worker's share.
+    rank_base: usize,
+    /// Peer label for logs.
+    peer: String,
+    /// Link counters, snapshotted at death or shutdown.
+    final_stats: LinkStats,
+    /// Whether the orderly shutdown notice reached this link.
+    saw_shutdown: bool,
+    dead: bool,
+}
+
+/// What the per-link reader threads feed the root loop.
+enum Up {
+    Msg { slot: usize, msg: WireMsg },
+    Dead { slot: usize, why: String },
+}
+
+/// Accept `opts.workers` links on `listener`, then run the engine's
+/// workload across them. Blocks until every task completed (or until no
+/// live worker remains to complete them).
+pub fn serve_scheduler(
+    cfg: &SchedulerConfig,
+    engine: Box<dyn SearchEngine>,
+    listener: &Listener,
+    opts: &ServeOptions,
+) -> Result<Report, String> {
+    let mut links = Vec::with_capacity(opts.workers);
+    for _ in 0..opts.workers {
+        let (t, peer) = listener.accept().map_err(|e| format!("accept: {e}"))?;
+        crate::info!("worker connected from {peer}");
+        links.push((t, peer));
+    }
+    serve_links(cfg, engine, links, opts)
+}
+
+/// Run the engine's workload across pre-established links (the
+/// socket-free entry used by tests via
+/// [`crate::transport::ChannelTransport`]). Each link must speak the
+/// worker handshake: `Hello` in, `Welcome` out.
+pub fn serve_links(
+    cfg: &SchedulerConfig,
+    mut engine: Box<dyn SearchEngine>,
+    links: Vec<(Box<dyn Transport>, String)>,
+    opts: &ServeOptions,
+) -> Result<Report, String> {
+    if links.is_empty() {
+        return Err("serve_links: no worker links".into());
+    }
+    let n_workers = links.len();
+    let t0 = Instant::now();
+    let clock_scale = 1.0 / cfg.time_scale.max(1e-9);
+    let poll = Duration::from_millis(cfg.flush_interval_ms.max(1));
+
+    // --- handshake: Hello in, Welcome (config slice) out ---
+    let base = cfg.np / n_workers;
+    let rem = cfg.np % n_workers;
+    let mut workers: Vec<WorkerLink> = Vec::with_capacity(n_workers);
+    let mut readers = Vec::with_capacity(n_workers);
+    let (up_tx, up_rx) = channel::<Up>();
+    let mut rank_base = 0usize;
+    for (slot, (mut t, peer)) in links.into_iter().enumerate() {
+        let hello = t
+            .recv_timeout(HANDSHAKE_TIMEOUT)
+            .map_err(|e| format!("handshake with {peer}: {e}"))?;
+        let requested = match hello {
+            WireMsg::Hello { version, requested_np } => {
+                if version != PROTO_VERSION {
+                    return Err(format!(
+                        "worker {peer} speaks protocol v{version}, expected v{PROTO_VERSION}"
+                    ));
+                }
+                requested_np as usize
+            }
+            other => return Err(format!("worker {peer} sent {other:?} instead of Hello")),
+        };
+        // Share: an explicit worker offer wins; otherwise an even split of
+        // the configured np (earlier slots absorb the remainder).
+        let share = if requested > 0 { requested } else { base + usize::from(slot < rem) }.max(1);
+        let wire_cfg = WireConfig::from_scheduler(cfg, share, 1, rank_base);
+        t.send(&WireMsg::Welcome { slot: slot as u64, cfg: wire_cfg })
+            .map_err(|e| format!("handshake with {peer}: {e}"))?;
+        let (tx_half, mut rx_half) = t.split().map_err(|e| format!("split {peer}: {e}"))?;
+        let up = up_tx.clone();
+        let liveness = opts.liveness;
+        readers.push(
+            thread::Builder::new()
+                .name(format!("link-reader-{slot}"))
+                .spawn(move || loop {
+                    match rx_half.recv_timeout(liveness) {
+                        Ok(WireMsg::Ping) => continue, // liveness only
+                        Ok(msg) => {
+                            if up.send(Up::Msg { slot, msg }).is_err() {
+                                break;
+                            }
+                        }
+                        Err(TransportError::Timeout) => {
+                            let _ = up.send(Up::Dead { slot, why: "liveness timeout".into() });
+                            break;
+                        }
+                        Err(TransportError::Closed(why)) => {
+                            let _ = up.send(Up::Dead { slot, why });
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn link reader"),
+        );
+        workers.push(WorkerLink {
+            tx: Some(tx_half),
+            outstanding: HashMap::new(),
+            np: share,
+            rank_base,
+            peer,
+            final_stats: LinkStats::default(),
+            saw_shutdown: false,
+            dead: false,
+        });
+        rank_base += share;
+    }
+    drop(up_tx); // readers hold the only clones
+    let np_total = rank_base;
+
+    // --- producer loop ---
+    let mut state = ProducerState::new(n_workers).with_policy(cfg.policy);
+    let mut sink = ProducerSink { next_id: 0, staged: Vec::new(), cancels: Vec::new() };
+    let mut filling = FillingRate::new();
+    let mut all_results = Vec::new();
+    engine.start(&mut sink);
+
+    state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
+    drain_engine_net(&mut state, &mut sink, &mut *engine, &mut workers, &mut all_results);
+    let done = engine.poll(&mut sink);
+    drain_engine_net(&mut state, &mut sink, &mut *engine, &mut workers, &mut all_results);
+    state.set_engine_done(done);
+
+    let mut newly_dead: Vec<usize> = Vec::new();
+    loop {
+        state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
+
+        // Bury links that died since the last iteration: withdraw credit,
+        // re-queue everything they still held, and re-grant it against
+        // the surviving workers' outstanding requests.
+        while let Some(slot) = newly_dead.pop() {
+            let w = &mut workers[slot];
+            if w.dead {
+                continue;
+            }
+            w.dead = true;
+            if let Some(tx) = w.tx.take() {
+                w.final_stats = tx.stats();
+            }
+            let lost: Vec<TaskSpec> = w.outstanding.drain().map(|(_, t)| t).collect();
+            crate::warnln!(
+                "worker {} (slot {slot}) died; re-queueing {} in-flight tasks",
+                w.peer,
+                lost.len()
+            );
+            state.on_child_dead(slot);
+            if !lost.is_empty() {
+                state.on_returned(lost);
+            }
+            // `push_tasks` with nothing new re-runs grant matching, so the
+            // recovered tasks flow out against already-recorded deficits.
+            let acts = state.push_tasks(Vec::new());
+            perform_wire(acts, &mut workers, &mut newly_dead);
+        }
+
+        if workers.iter().all(|w| w.dead) && !state.is_quiescent() {
+            return Err(format!(
+                "all {n_workers} worker links died with {} tasks unfinished",
+                state.in_flight()
+            ));
+        }
+
+        let shutdown_acts = state.maybe_shutdown();
+        if perform_wire(shutdown_acts, &mut workers, &mut newly_dead) {
+            break;
+        }
+
+        let msg = match up_rx.recv_timeout(poll) {
+            Ok(m) => m,
+            Err(RecvTimeoutError::Timeout) => {
+                let done = engine.poll(&mut sink);
+                drain_engine_net(&mut state, &mut sink, &mut *engine, &mut workers, &mut all_results);
+                state.set_engine_done(done);
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // Every reader exited; their Dead notices (already drained
+                // from the channel) decide quiescence on the next pass.
+                newly_dead.extend(workers.iter().enumerate().filter(|(_, w)| !w.dead).map(|(i, _)| i));
+                if newly_dead.is_empty() && state.is_quiescent() {
+                    break;
+                }
+                continue;
+            }
+        };
+        state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
+        match msg {
+            Up::Msg { slot, msg } => match msg {
+                WireMsg::Request { amount } => {
+                    let acts = state.on_request(slot, amount as usize);
+                    perform_wire(acts, &mut workers, &mut newly_dead);
+                }
+                WireMsg::Results(results) => {
+                    for r in &results {
+                        workers[slot].outstanding.remove(&r.id);
+                    }
+                    state.on_results(results.len());
+                    for r in &results {
+                        if !r.cancelled() {
+                            filling.record(r);
+                        }
+                        engine.on_done(r, &mut sink);
+                    }
+                    all_results.extend(results);
+                    drain_engine_net(
+                        &mut state,
+                        &mut sink,
+                        &mut *engine,
+                        &mut workers,
+                        &mut all_results,
+                    );
+                }
+                WireMsg::Returned(tasks) => {
+                    for t in &tasks {
+                        workers[slot].outstanding.remove(&t.id);
+                    }
+                    state.on_returned(tasks);
+                    let acts = state.push_tasks(Vec::new());
+                    perform_wire(acts, &mut workers, &mut newly_dead);
+                }
+                WireMsg::RecallAck => {
+                    let _ = state.on_recall_ack(slot);
+                }
+                // Root-bound links never legitimately carry these.
+                WireMsg::Hello { .. }
+                | WireMsg::Welcome { .. }
+                | WireMsg::Assign(_)
+                | WireMsg::Cancel { .. }
+                | WireMsg::Recall
+                | WireMsg::Shutdown
+                | WireMsg::Ping => {}
+            },
+            Up::Dead { slot, why } => {
+                crate::warnln!("link to worker slot {slot} failed: {why}");
+                newly_dead.push(slot);
+            }
+        }
+    }
+    engine.finish();
+
+    // Snapshot surviving links and synthesize the per-worker stats rows:
+    // one row per root slot, link traffic in the wire_* counters.
+    for w in workers.iter_mut() {
+        if let Some(tx) = w.tx.take() {
+            w.final_stats = tx.stats();
+        }
+    }
+    let node_stats: Vec<NodeStats> = workers
+        .iter()
+        .enumerate()
+        .map(|(slot, w)| NodeStats {
+            node: slot,
+            level: 1,
+            subtree_consumers: w.np,
+            credit_bound: cfg.credit_factor * w.np,
+            max_queue: 0,
+            msgs_in: w.final_stats.msgs_in,
+            msgs_out: w.final_stats.msgs_out,
+            steals_attempted: 0,
+            steals_failed: 0,
+            steals_received: 0,
+            steals_given: 0,
+            cancelled_dropped: 0,
+            cancelled_killed: 0,
+            retried: 0,
+            popped: 0,
+            wait_hist: Vec::new(),
+            req_lag_n: 0,
+            req_lag_mean: 0.0,
+            req_lag_max: 0.0,
+            saw_shutdown: w.saw_shutdown,
+            wire_msgs_in: w.final_stats.msgs_in,
+            wire_msgs_out: w.final_stats.msgs_out,
+            wire_bytes_in: w.final_stats.bytes_in,
+            wire_bytes_out: w.final_stats.bytes_out,
+        })
+        .collect();
+
+    // Level fill against the equivalent single-host topology (worker
+    // shares are contiguous rank ranges, so per-level aggregation is
+    // meaningful even though the physical split differs).
+    let mut eq_cfg = cfg.clone();
+    eq_cfg.np = np_total.max(1);
+    let topo = eq_cfg.tree();
+    let level_fill = filling.level_fill(&topo);
+    Ok(Report {
+        results: all_results,
+        filling,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        producer_msgs_in: state.msgs_in,
+        producer_msgs_out: state.msgs_out,
+        node_stats,
+        level_fill,
+        // The global tree is one level of worker gateways over each
+        // worker's local `cfg.depth` levels.
+        depth: cfg.depth + 1,
+        fanout: cfg.fanout.clone(),
+        reshapes: Vec::new(),
+    })
+}
+
+/// Flush engine submissions and cancellations into the producer state,
+/// routing the resulting grants/broadcasts over the wire (the
+/// `threads::drain_engine` shape, transported).
+fn drain_engine_net(
+    state: &mut ProducerState,
+    sink: &mut ProducerSink,
+    engine: &mut dyn SearchEngine,
+    workers: &mut [WorkerLink],
+    all_results: &mut Vec<crate::tasklib::TaskResult>,
+) {
+    let mut newly_dead = Vec::new();
+    while !sink.staged.is_empty() || !sink.cancels.is_empty() {
+        let acts = state.push_tasks(std::mem::take(&mut sink.staged));
+        perform_wire(acts, workers, &mut newly_dead);
+        for id in std::mem::take(&mut sink.cancels) {
+            let (dropped, acts) = state.on_cancel(id);
+            perform_wire(acts, workers, &mut newly_dead);
+            if let Some(spec) = dropped {
+                let r = crate::tasklib::TaskResult::cancelled_for(&spec);
+                engine.on_done(&r, sink);
+                all_results.push(r);
+            }
+        }
+    }
+    // Deaths noticed while sending are handled by the main loop; just
+    // mark them so no further sends target the corpse.
+    for slot in newly_dead {
+        if let Some(w) = workers.get_mut(slot) {
+            if !w.dead {
+                w.dead = true;
+                if let Some(tx) = w.tx.take() {
+                    w.final_stats = tx.stats();
+                }
+                let lost: Vec<TaskSpec> = w.outstanding.drain().map(|(_, t)| t).collect();
+                state.on_child_dead(slot);
+                if !lost.is_empty() {
+                    state.on_returned(lost);
+                }
+            }
+        }
+    }
+}
+
+/// Route producer actions over the worker links; send failures queue the
+/// slot in `newly_dead`. Returns true when shutdown was broadcast.
+fn perform_wire(
+    actions: Vec<ProducerAction>,
+    workers: &mut [WorkerLink],
+    newly_dead: &mut Vec<usize>,
+) -> bool {
+    let mut shutdown = false;
+    let mut send_to = |w: &mut WorkerLink, slot: usize, msg: &WireMsg, dead: &mut Vec<usize>| {
+        if w.dead {
+            return;
+        }
+        if let Some(tx) = w.tx.as_mut() {
+            if tx.send(msg).is_err() {
+                dead.push(slot);
+            }
+        }
+    };
+    for act in actions {
+        match act {
+            ProducerAction::SendTasks { buffer, tasks } => {
+                let w = &mut workers[buffer];
+                for t in &tasks {
+                    w.outstanding.insert(t.id, t.clone());
+                }
+                send_to(w, buffer, &WireMsg::Assign(tasks), newly_dead);
+            }
+            ProducerAction::BroadcastCancel { id } => {
+                for (slot, w) in workers.iter_mut().enumerate() {
+                    send_to(w, slot, &WireMsg::Cancel { id }, newly_dead);
+                }
+            }
+            ProducerAction::BroadcastRecall => {
+                for (slot, w) in workers.iter_mut().enumerate() {
+                    send_to(w, slot, &WireMsg::Recall, newly_dead);
+                }
+            }
+            ProducerAction::BroadcastShutdown => {
+                for (slot, w) in workers.iter_mut().enumerate() {
+                    if !w.dead {
+                        w.saw_shutdown = true;
+                    }
+                    send_to(w, slot, &WireMsg::Shutdown, newly_dead);
+                }
+                shutdown = true;
+            }
+        }
+    }
+    shutdown
+}
+
+/// What a worker run amounted to, for logs and tests.
+pub struct WorkerReport {
+    /// Root slot this worker occupied.
+    pub slot: usize,
+    /// Consumer processes run locally.
+    pub np: usize,
+    /// Results flushed upstream (cancelled drops included).
+    pub tasks_run: usize,
+    /// Link traffic counters.
+    pub link: LinkStats,
+}
+
+/// Connect to `endpoint` and serve as a remote subtree until the root
+/// shuts the run down (the `caravan worker` subcommand).
+pub fn connect_worker(
+    endpoint: &Endpoint,
+    executor: Arc<dyn Executor>,
+    requested_np: usize,
+) -> Result<WorkerReport, String> {
+    let t = endpoint.connect().map_err(|e| format!("connect {endpoint}: {e}"))?;
+    run_worker(t, executor, requested_np)
+}
+
+/// Serve as a remote subtree over an established link: handshake, build
+/// the local buffer tree from the `Welcome` config slice, and pump the
+/// gateway until the root's shutdown (or the link's death) tears it down.
+pub fn run_worker(
+    transport: Box<dyn Transport>,
+    executor: Arc<dyn Executor>,
+    requested_np: usize,
+) -> Result<WorkerReport, String> {
+    let mut t = transport;
+    t.send(&WireMsg::Hello { version: PROTO_VERSION, requested_np: requested_np as u64 })
+        .map_err(|e| format!("hello: {e}"))?;
+    let (slot, wire_cfg) = match t.recv_timeout(HANDSHAKE_TIMEOUT) {
+        Ok(WireMsg::Welcome { slot, cfg }) => (slot as usize, cfg),
+        Ok(other) => return Err(format!("expected Welcome, got {other:?}")),
+        Err(e) => return Err(format!("welcome: {e}")),
+    };
+    let cfg = wire_cfg.to_scheduler();
+    let rank_base = wire_cfg.rank_base as usize;
+    let topo = cfg.tree();
+    crate::info!(
+        "worker slot {slot}: np={} depth={} ranks {}..{}",
+        cfg.np,
+        cfg.depth,
+        rank_base,
+        rank_base + cfg.np
+    );
+
+    let t0 = Instant::now();
+    let clock_scale = 1.0 / cfg.time_scale.max(1e-9);
+    let (gw_tx, gw_rx) = channel::<ToBuffer>();
+    let reader_tx = gw_tx.clone();
+    let tree = spawn_tree(&topo, &cfg, &executor, &ParentLink::Buffer(gw_tx), t0, clock_scale, false);
+
+    let (mut wire_tx, mut wire_rx) =
+        t.split().map_err(|e| format!("split: {e}"))?;
+    let done = Arc::new(AtomicBool::new(false));
+    let reader_done = Arc::clone(&done);
+    let reader = thread::Builder::new()
+        .name("worker-link-reader".into())
+        .spawn(move || {
+            link_reader(&mut *wire_rx, &reader_tx, &reader_done);
+        })
+        .expect("spawn worker link reader");
+
+    // --- gateway loop: a BufferState whose parent is the wire ---
+    let mut gw = BufferState::interior(
+        topo.roots.len(),
+        cfg.np,
+        cfg.credit_factor,
+        cfg.flush_every,
+    )
+    .with_policy(cfg.policy);
+    let flush_interval = Duration::from_millis(cfg.flush_interval_ms.max(1));
+    let mut tasks_run = 0usize;
+    let mut stopping = false;
+    let mut last_ping = Instant::now();
+    gw.set_now(t0.elapsed().as_secs_f64() * clock_scale);
+    let acts = gw.on_start();
+    stopping |= route_gateway(acts, &mut wire_tx, &tree.root_txs, rank_base, &mut tasks_run);
+    while !stopping {
+        let msg = gw_rx.recv_timeout(flush_interval);
+        gw.set_now(t0.elapsed().as_secs_f64() * clock_scale);
+        if last_ping.elapsed() >= PING_EVERY {
+            if wire_tx.send(&WireMsg::Ping).is_err() {
+                break; // root is gone: tear the local tree down
+            }
+            last_ping = Instant::now();
+        }
+        let acts = match msg {
+            Ok(ToBuffer::Assign(tasks)) => gw.on_assign(tasks),
+            Ok(ToBuffer::ChildRequest { child, amount }) => gw.on_child_request(child, amount),
+            Ok(ToBuffer::ChildResults(rs)) => gw.on_child_results(rs),
+            Ok(ToBuffer::Cancel { id }) => gw.on_cancel(id),
+            Ok(ToBuffer::Recall) => gw.on_recall(),
+            Ok(ToBuffer::ChildReturned(tasks)) => gw.on_child_returned(tasks),
+            Ok(ToBuffer::ChildRecallAck { child }) => gw.on_child_recall_ack(child),
+            Ok(ToBuffer::Shutdown) => gw.on_shutdown(),
+            // Consumer-facing and sideways traffic never reaches the
+            // gateway (it has buffer children and no siblings).
+            Ok(_) => Vec::new(),
+            Err(RecvTimeoutError::Timeout) => gw.on_tick(),
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        stopping |= route_gateway(acts, &mut wire_tx, &tree.root_txs, rank_base, &mut tasks_run);
+    }
+    tree.join();
+    done.store(true, Ordering::Relaxed);
+    let link = wire_tx.stats();
+    drop(wire_tx); // close our half so the root's reader unblocks promptly
+    let _ = reader.join();
+    Ok(WorkerReport { slot, np: cfg.np, tasks_run, link })
+}
+
+/// Pump the worker's receive half into the gateway channel. Root silence
+/// is tolerated (the root only speaks when granting); a closed link
+/// injects `Shutdown` so the local tree drains and the worker exits.
+fn link_reader(rx: &mut dyn Transport, gw: &Sender<ToBuffer>, done: &AtomicBool) {
+    loop {
+        match rx.recv_timeout(Duration::from_millis(500)) {
+            Ok(msg) => {
+                let fwd = match msg {
+                    WireMsg::Assign(tasks) => Some(ToBuffer::Assign(tasks)),
+                    WireMsg::Cancel { id } => Some(ToBuffer::Cancel { id }),
+                    WireMsg::Recall => Some(ToBuffer::Recall),
+                    WireMsg::Shutdown => Some(ToBuffer::Shutdown),
+                    // Pings need no reply; anything else is not
+                    // worker-bound traffic.
+                    _ => None,
+                };
+                if let Some(m) = fwd {
+                    let shutdown = matches!(m, ToBuffer::Shutdown);
+                    if gw.send(m).is_err() || shutdown {
+                        break;
+                    }
+                }
+            }
+            Err(TransportError::Timeout) => {
+                if done.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Err(TransportError::Closed(_)) => {
+                let _ = gw.send(ToBuffer::Shutdown);
+                break;
+            }
+        }
+    }
+}
+
+/// Route gateway actions: grants and fan-out notices go down the local
+/// root channels; requests, result flushes (consumer ranks globalized),
+/// returns and acks go up the wire. Returns true when the gateway
+/// initiated its own stop.
+fn route_gateway(
+    acts: Vec<BufferAction>,
+    wire: &mut dyn Transport,
+    root_txs: &[Sender<ToBuffer>],
+    rank_base: usize,
+    tasks_run: &mut usize,
+) -> bool {
+    let mut stopping = false;
+    for act in acts {
+        match act {
+            BufferAction::SendToChild { child, tasks } => {
+                let _ = root_txs[child].send(ToBuffer::Assign(tasks));
+            }
+            BufferAction::RequestTasks { amount } => {
+                if wire.send(&WireMsg::Request { amount: amount as u64 }).is_err() {
+                    stopping = true;
+                }
+            }
+            BufferAction::FlushResults(mut rs) => {
+                if rs.is_empty() {
+                    continue;
+                }
+                for r in rs.iter_mut() {
+                    // Globalize consumer ranks; the synthesized rank of a
+                    // cancelled-before-running result stays sentinel.
+                    if r.consumer != usize::MAX {
+                        r.consumer += rank_base;
+                    }
+                }
+                *tasks_run += rs.len();
+                if wire.send(&WireMsg::Results(rs)).is_err() {
+                    stopping = true;
+                }
+            }
+            BufferAction::CancelChildren { id } => {
+                for tx in root_txs {
+                    let _ = tx.send(ToBuffer::Cancel { id });
+                }
+            }
+            BufferAction::ShutdownChildren => {
+                for tx in root_txs {
+                    let _ = tx.send(ToBuffer::Shutdown);
+                }
+                stopping = true;
+            }
+            BufferAction::ReturnTasks(tasks) => {
+                if wire.send(&WireMsg::Returned(tasks)).is_err() {
+                    stopping = true;
+                }
+            }
+            BufferAction::RecallChildren => {
+                for tx in root_txs {
+                    let _ = tx.send(ToBuffer::Recall);
+                }
+            }
+            BufferAction::AckRecall => {
+                if wire.send(&WireMsg::RecallAck).is_err() {
+                    stopping = true;
+                }
+            }
+            // The gateway has buffer children, no local consumers and no
+            // siblings: these actions cannot be emitted for it.
+            BufferAction::RunOn { .. }
+            | BufferAction::StealRequest { .. }
+            | BufferAction::StealGrant { .. }
+            | BufferAction::CancelRunning { .. }
+            | BufferAction::ShutdownConsumers => {}
+        }
+    }
+    stopping
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::JobSink;
+    use crate::scheduler::SleepExecutor;
+    use crate::tasklib::{Payload, TaskResult};
+
+    struct Sleeps(usize);
+    impl SearchEngine for Sleeps {
+        fn start(&mut self, sink: &mut dyn JobSink) {
+            for _ in 0..self.0 {
+                sink.submit(Payload::Sleep { seconds: 1.0 });
+            }
+        }
+        fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn JobSink) {}
+    }
+
+    fn quick(np: usize) -> SchedulerConfig {
+        SchedulerConfig {
+            np,
+            consumers_per_buffer: 4,
+            flush_interval_ms: 2,
+            time_scale: 0.001,
+            ..Default::default()
+        }
+    }
+
+    /// Two in-process workers over channel transports: the full
+    /// distributed loop without sockets.
+    #[test]
+    fn serve_two_channel_workers_end_to_end() {
+        use crate::transport::ChannelTransport;
+        let (a_root, a_worker) = ChannelTransport::pair();
+        let (b_root, b_worker) = ChannelTransport::pair();
+        let workers: Vec<_> = [a_worker, b_worker]
+            .into_iter()
+            .map(|t| {
+                thread::spawn(move || {
+                    run_worker(
+                        Box::new(t),
+                        Arc::new(SleepExecutor { time_scale: 0.001 }),
+                        0,
+                    )
+                })
+            })
+            .collect();
+        let report = serve_links(
+            &quick(8),
+            Box::new(Sleeps(60)),
+            vec![
+                (Box::new(a_root) as Box<dyn Transport>, "a".into()),
+                (Box::new(b_root) as Box<dyn Transport>, "b".into()),
+            ],
+            &ServeOptions { workers: 2, ..Default::default() },
+        )
+        .expect("distributed run");
+        assert_eq!(report.results.len(), 60);
+        let mut ids: Vec<u64> = report.results.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 60, "every task exactly once");
+        assert_eq!(report.node_stats.len(), 2);
+        assert!(report.node_stats.iter().all(|s| s.saw_shutdown));
+        // Each worker ran its share: ranks 0..4 and 4..8 both appear.
+        let ranks: std::collections::HashSet<usize> =
+            report.results.iter().map(|r| r.consumer).collect();
+        assert!(ranks.iter().any(|&r| r < 4) && ranks.iter().any(|&r| (4..8).contains(&r)));
+        for w in workers {
+            let wr = w.join().unwrap().expect("worker ok");
+            assert_eq!(wr.np, 4);
+            assert!(wr.tasks_run > 0);
+        }
+    }
+
+    /// Killing a worker's link mid-run must lose nothing: its tasks are
+    /// re-granted to the survivor (dead link = recall that never acks).
+    #[test]
+    fn dead_link_regrants_outstanding_tasks() {
+        use crate::transport::ChannelTransport;
+        let (a_root, a_worker) = ChannelTransport::pair();
+        let (b_root, b_worker) = ChannelTransport::pair();
+        let survivor = thread::spawn(move || {
+            run_worker(Box::new(a_worker), Arc::new(SleepExecutor { time_scale: 0.001 }), 0)
+        });
+        // Victim: handshake manually, accept one grant, then vanish
+        // without returning anything.
+        let victim = thread::spawn(move || {
+            let mut t: Box<dyn Transport> = Box::new(b_worker);
+            t.send(&WireMsg::Hello { version: PROTO_VERSION, requested_np: 0 }).unwrap();
+            let Ok(WireMsg::Welcome { .. }) = t.recv_timeout(Duration::from_secs(10)) else {
+                panic!("no welcome");
+            };
+            t.send(&WireMsg::Request { amount: 8 }).unwrap();
+            // Wait for at least one grant so tasks are genuinely lost.
+            loop {
+                match t.recv_timeout(Duration::from_secs(10)) {
+                    Ok(WireMsg::Assign(tasks)) if !tasks.is_empty() => break,
+                    Ok(_) => continue,
+                    Err(e) => panic!("victim link: {e}"),
+                }
+            }
+            // Drop the transport: the root's reader sees Closed.
+        });
+        let report = serve_links(
+            &quick(8),
+            Box::new(Sleeps(40)),
+            vec![
+                (Box::new(a_root) as Box<dyn Transport>, "survivor".into()),
+                (Box::new(b_root) as Box<dyn Transport>, "victim".into()),
+            ],
+            &ServeOptions { workers: 2, ..Default::default() },
+        )
+        .expect("run survives a dead worker");
+        victim.join().unwrap();
+        let _ = survivor.join().unwrap();
+        assert_eq!(report.results.len(), 40, "conservation across the crash");
+        let mut ids: Vec<u64> = report.results.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 40, "no duplicate completions");
+        // The dead slot's row survives with its link traffic accounted.
+        assert_eq!(report.node_stats.len(), 2);
+        assert!(report.node_stats[1].wire_msgs_out > 0);
+    }
+
+    /// A worker whose root disappears tears itself down instead of
+    /// hanging.
+    #[test]
+    fn worker_exits_when_root_vanishes() {
+        use crate::transport::ChannelTransport;
+        let (root_end, worker_end) = ChannelTransport::pair();
+        let worker = thread::spawn(move || {
+            run_worker(Box::new(worker_end), Arc::new(SleepExecutor { time_scale: 0.001 }), 0)
+        });
+        let mut t: Box<dyn Transport> = Box::new(root_end);
+        let hello = t.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(matches!(hello, WireMsg::Hello { .. }));
+        t.send(&WireMsg::Welcome {
+            slot: 0,
+            cfg: WireConfig::from_scheduler(&quick(4), 4, 1, 0),
+        })
+        .unwrap();
+        // Answer the first credit request with one grant, then vanish.
+        loop {
+            match t.recv_timeout(Duration::from_secs(10)).unwrap() {
+                WireMsg::Request { .. } => break,
+                _ => continue,
+            }
+        }
+        drop(t);
+        let wr = worker.join().unwrap().expect("worker exits cleanly");
+        assert_eq!(wr.slot, 0);
+    }
+}

@@ -675,6 +675,22 @@ impl ProducerState {
         self.recalling && self.recall_acks.iter().all(|&a| a)
     }
 
+    /// Direct child `slot`'s link died (remote worker crash or timeout).
+    /// The child is treated as a recall that can never ack on its own:
+    /// its outstanding credit is withdrawn so no further grants land on a
+    /// dead link, and any in-flight recall is considered acked for this
+    /// slot. The runtime re-queues whatever the child still held via
+    /// [`Self::on_returned`], so conservation (`submitted` vs `completed`)
+    /// is untouched — the lost tasks are simply pending again.
+    pub fn on_child_dead(&mut self, slot: usize) {
+        if let Some(d) = self.deficit.get_mut(slot) {
+            *d = 0;
+        }
+        if let Some(a) = self.recall_acks.get_mut(slot) {
+            *a = true;
+        }
+    }
+
     /// Attach the producer to a rebuilt tree with `num_buffers` direct
     /// children: deficits and the recall state reset, the pending queue
     /// and the submitted/completed accounting carry over.
@@ -1067,6 +1083,12 @@ impl BufferState {
             },
             req_lag_max: self.req_lag_max,
             saw_shutdown: self.shutting_down,
+            // Link-layer traffic is accounted where the link lives (the
+            // transport gateway), not in the protocol state machine.
+            wire_msgs_in: 0,
+            wire_msgs_out: 0,
+            wire_bytes_in: 0,
+            wire_bytes_out: 0,
         }
     }
 

@@ -153,7 +153,7 @@ impl Executor for SleepExecutor {
     }
 }
 
-enum ToProducer {
+pub(crate) enum ToProducer {
     Request { buffer: usize, amount: usize },
     Results(Vec<TaskResult>),
     /// Recalled tasks returning from a draining tree (stamps intact).
@@ -162,7 +162,7 @@ enum ToProducer {
     RecallAck { buffer: usize },
 }
 
-enum ToBuffer {
+pub(crate) enum ToBuffer {
     Assign(Vec<TaskSpec>),
     Done { consumer: usize, result: TaskResult },
     ChildRequest { child: usize, amount: usize },
@@ -191,8 +191,10 @@ enum ToConsumer {
     Stop,
 }
 
-/// Where a node's upstream messages go: rank 0 or an interior parent.
-enum ParentLink {
+/// Where a node's upstream messages go: rank 0, an interior parent, or
+/// (in a remote worker) the socket gateway standing in for the parent.
+#[derive(Clone)]
+pub(crate) enum ParentLink {
     Producer(Sender<ToProducer>),
     Buffer(Sender<ToBuffer>),
 }
@@ -200,7 +202,7 @@ enum ParentLink {
 /// Per-node counter snapshots shared between the node threads (writers)
 /// and the producer thread (reader: final report + the reshape
 /// controller's live lag measurement).
-type SharedStats = Arc<Mutex<Vec<Option<NodeStats>>>>;
+pub(crate) type SharedStats = Arc<Mutex<Vec<Option<NodeStats>>>>;
 
 /// What a node feeds: consumer threads (leaf) or child node threads.
 enum ChildLink {
@@ -244,11 +246,12 @@ impl Report {
 }
 
 /// Sink handing engine submissions (and cancellations) to the producer
-/// state machine.
-struct ProducerSink {
-    next_id: u64,
-    staged: Vec<TaskSpec>,
-    cancels: Vec<TaskId>,
+/// state machine. Shared with [`super::net`], whose root loop drives the
+/// same engine over socket links instead of channels.
+pub(crate) struct ProducerSink {
+    pub(crate) next_id: u64,
+    pub(crate) staged: Vec<TaskSpec>,
+    pub(crate) cancels: Vec<TaskId>,
 }
 
 impl TaskSink for ProducerSink {
@@ -340,7 +343,6 @@ pub fn run_scheduler(
     // measurement) is only paid for when re-shaping is on.
     let live_stats = controller.is_some();
 
-    let flush_interval = Duration::from_millis(cfg.flush_interval_ms);
     let poll_interval = Duration::from_millis(cfg.flush_interval_ms.max(1));
     // Producer state survives epochs; the channel wiring does not.
     let mut carried: Option<ProducerState> = None;
@@ -362,88 +364,20 @@ pub fn run_scheduler(
             topo.roots
         );
 
-        // One channel per tree node, created up front so siblings/children
-        // can be wired regardless of spawn order.
+        // Spawn the whole tree behind its channels; the producer keeps a
+        // sender per root plus the shared stats mirror.
         let (prod_tx, prod_rx) = channel::<ToProducer>();
-        let mut node_txs: Vec<Sender<ToBuffer>> = Vec::with_capacity(n_nodes);
-        let mut node_rxs: Vec<Option<Receiver<ToBuffer>>> = Vec::with_capacity(n_nodes);
-        for _ in 0..n_nodes {
-            let (tx, rx) = channel::<ToBuffer>();
-            node_txs.push(tx);
-            node_rxs.push(Some(rx));
-        }
-
-        let stats: SharedStats = Arc::new(Mutex::new(vec![None; n_nodes]));
-        let mut node_handles = Vec::new();
-        let mut consumer_handles = Vec::new();
-
-        for id in 0..n_nodes {
-            let state = BufferState::for_tree_node(&topo, id, cfg);
-            let level = topo.nodes[id].level;
-            let slot = topo.nodes[id].slot;
-            let rx = node_rxs[id].take().expect("receiver taken once");
-            let parent = match topo.nodes[id].parent {
-                None => ParentLink::Producer(prod_tx.clone()),
-                Some(p) => ParentLink::Buffer(node_txs[p].clone()),
-            };
-            let siblings: Vec<Sender<ToBuffer>> =
-                topo.sibling_group(id).iter().map(|&s| node_txs[s].clone()).collect();
-            // Kill switch shared by this leaf and its consumers (unused but
-            // harmless at interior nodes).
-            let cancel = Arc::new(CancelSet::new());
-            let children = match &topo.nodes[id].kind {
-                TreeNodeKind::Leaf { n_consumers, rank_base } => {
-                    let mut cons_txs = Vec::with_capacity(*n_consumers);
-                    for local in 0..*n_consumers {
-                        let (ctx, crx) = channel::<ToConsumer>();
-                        cons_txs.push(ctx);
-                        let rank = rank_base + local;
-                        let exec = Arc::clone(&executor);
-                        let back = node_txs[id].clone();
-                        let cancel = Arc::clone(&cancel);
-                        let handle = thread::Builder::new()
-                            .name(format!("consumer-{rank}"))
-                            .stack_size(256 * 1024)
-                            .spawn(move || consumer_loop(crx, back, exec, rank, local, t0, cancel))
-                            .expect("spawn consumer");
-                        consumer_handles.push(handle);
-                    }
-                    ChildLink::Consumers(cons_txs)
-                }
-                TreeNodeKind::Interior { children } => {
-                    ChildLink::Buffers(children.iter().map(|&c| node_txs[c].clone()).collect())
-                }
-            };
-            let stats = Arc::clone(&stats);
-            let handle = thread::Builder::new()
-                .name(format!("buffer-{id}"))
-                .stack_size(256 * 1024)
-                .spawn(move || {
-                    node_loop(
-                        state,
-                        rx,
-                        parent,
-                        slot,
-                        siblings,
-                        children,
-                        cancel,
-                        flush_interval,
-                        t0,
-                        clock_scale,
-                        stats,
-                        id,
-                        level,
-                        live_stats,
-                    )
-                })
-                .expect("spawn buffer node");
-            node_handles.push(handle);
-        }
-        drop(prod_tx);
-
-        // Senders to the producer's direct children, indexed by root slot.
-        let root_txs: Vec<Sender<ToBuffer>> =
-            topo.roots.iter().map(|&r| node_txs[r].clone()).collect();
+        let tree = spawn_tree(
+            &topo,
+            cfg,
+            &executor,
+            &ParentLink::Producer(prod_tx),
+            t0,
+            clock_scale,
+            live_stats,
+        );
+        let root_txs = tree.root_txs.clone();
+        let stats = Arc::clone(&tree.stats);
 
         // --- producer loop (runs on the caller thread) ---
         let mut state = match carried.take() {
@@ -552,13 +486,7 @@ pub fn run_scheduler(
             }
         }
         drop(root_txs);
-        drop(node_txs);
-        for h in node_handles {
-            let _ = h.join();
-        }
-        for h in consumer_handles {
-            let _ = h.join();
-        }
+        tree.join();
 
         let node_stats: Vec<NodeStats> = stats
             .lock()
@@ -611,6 +539,139 @@ pub fn run_scheduler(
         fanout,
         reshapes,
     }
+}
+
+/// A running buffer tree: the senders wiring it together plus the join
+/// handles of every node and consumer thread. Produced by [`spawn_tree`];
+/// consumed by [`SpawnedTree::join`] at teardown.
+///
+/// The local producer loop ([`run_scheduler`]) and the remote-worker
+/// gateway ([`super::net`]) both sit on top of this: the only difference
+/// is what the roots' [`ParentLink`] points at.
+pub(crate) struct SpawnedTree {
+    /// Senders to the roots, indexed by root slot.
+    pub(crate) root_txs: Vec<Sender<ToBuffer>>,
+    /// Per-node counter snapshots (written by node threads on a flush
+    /// cadence when `live_stats`, and always at stop).
+    pub(crate) stats: SharedStats,
+    node_txs: Vec<Sender<ToBuffer>>,
+    node_handles: Vec<thread::JoinHandle<()>>,
+    consumer_handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl SpawnedTree {
+    /// Drop every sender into the tree and join all of its threads.
+    /// Callers must have delivered (or implied, by disconnect) a shutdown
+    /// first; joining an active tree would block until its channels hang
+    /// up.
+    pub(crate) fn join(self) {
+        drop(self.root_txs);
+        drop(self.node_txs);
+        for h in self.node_handles {
+            let _ = h.join();
+        }
+        for h in self.consumer_handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Build the channel fabric for `topo` and spawn one thread per buffer
+/// node and per consumer. Root nodes report upstream to a clone of
+/// `root_parent` — the producer channel in-process, or the socket gateway
+/// in a remote worker.
+pub(crate) fn spawn_tree(
+    topo: &TreeTopology,
+    cfg: &SchedulerConfig,
+    executor: &Arc<dyn Executor>,
+    root_parent: &ParentLink,
+    t0: Instant,
+    clock_scale: f64,
+    live_stats: bool,
+) -> SpawnedTree {
+    let n_nodes = topo.n_nodes();
+    let flush_interval = Duration::from_millis(cfg.flush_interval_ms);
+
+    // One channel per tree node, created up front so siblings/children
+    // can be wired regardless of spawn order.
+    let mut node_txs: Vec<Sender<ToBuffer>> = Vec::with_capacity(n_nodes);
+    let mut node_rxs: Vec<Option<Receiver<ToBuffer>>> = Vec::with_capacity(n_nodes);
+    for _ in 0..n_nodes {
+        let (tx, rx) = channel::<ToBuffer>();
+        node_txs.push(tx);
+        node_rxs.push(Some(rx));
+    }
+
+    let stats: SharedStats = Arc::new(Mutex::new(vec![None; n_nodes]));
+    let mut node_handles = Vec::new();
+    let mut consumer_handles = Vec::new();
+
+    for id in 0..n_nodes {
+        let state = BufferState::for_tree_node(topo, id, cfg);
+        let level = topo.nodes[id].level;
+        let slot = topo.nodes[id].slot;
+        let rx = node_rxs[id].take().expect("receiver taken once");
+        let parent = match topo.nodes[id].parent {
+            None => root_parent.clone(),
+            Some(p) => ParentLink::Buffer(node_txs[p].clone()),
+        };
+        let siblings: Vec<Sender<ToBuffer>> =
+            topo.sibling_group(id).iter().map(|&s| node_txs[s].clone()).collect();
+        // Kill switch shared by this leaf and its consumers (unused but
+        // harmless at interior nodes).
+        let cancel = Arc::new(CancelSet::new());
+        let children = match &topo.nodes[id].kind {
+            TreeNodeKind::Leaf { n_consumers, rank_base } => {
+                let mut cons_txs = Vec::with_capacity(*n_consumers);
+                for local in 0..*n_consumers {
+                    let (ctx, crx) = channel::<ToConsumer>();
+                    cons_txs.push(ctx);
+                    let rank = rank_base + local;
+                    let exec = Arc::clone(executor);
+                    let back = node_txs[id].clone();
+                    let cancel = Arc::clone(&cancel);
+                    let handle = thread::Builder::new()
+                        .name(format!("consumer-{rank}"))
+                        .stack_size(256 * 1024)
+                        .spawn(move || consumer_loop(crx, back, exec, rank, local, t0, cancel))
+                        .expect("spawn consumer");
+                    consumer_handles.push(handle);
+                }
+                ChildLink::Consumers(cons_txs)
+            }
+            TreeNodeKind::Interior { children } => {
+                ChildLink::Buffers(children.iter().map(|&c| node_txs[c].clone()).collect())
+            }
+        };
+        let stats = Arc::clone(&stats);
+        let handle = thread::Builder::new()
+            .name(format!("buffer-{id}"))
+            .stack_size(256 * 1024)
+            .spawn(move || {
+                node_loop(
+                    state,
+                    rx,
+                    parent,
+                    slot,
+                    siblings,
+                    children,
+                    cancel,
+                    flush_interval,
+                    t0,
+                    clock_scale,
+                    stats,
+                    id,
+                    level,
+                    live_stats,
+                )
+            })
+            .expect("spawn buffer node");
+        node_handles.push(handle);
+    }
+
+    // Senders to the tree's direct upstream clients, indexed by root slot.
+    let root_txs: Vec<Sender<ToBuffer>> = topo.roots.iter().map(|&r| node_txs[r].clone()).collect();
+    SpawnedTree { root_txs, stats, node_txs, node_handles, consumer_handles }
 }
 
 /// How many staged tasks the threaded calibration phase executes inline

@@ -1,0 +1,514 @@
+//! Transport boundary behind the pure protocol layer.
+//!
+//! [`crate::scheduler::protocol`] is already a pure message-passing state
+//! machine; this module carries those messages across a *link*: the
+//! in-process channel pair the threaded runtime always used, or a real
+//! byte stream (TCP / Unix-domain socket) to a [`crate::scheduler::net`]
+//! worker process. One [`Transport`] trait covers all three, so the
+//! distributed serve loop and its tests are transport-agnostic.
+//!
+//! Framing lives in [`wire`]: length-prefixed binary frames, hand-rolled
+//! (no serde). Socket transports count frames and encoded bytes per
+//! direction ([`LinkStats`]); those counters surface as the per-edge
+//! `wire_*` fields of [`crate::scheduler::NodeStats`].
+//!
+//! Failure model: a link never *recovers*. A read timeout past the
+//! liveness budget, a peer close, or a codec error all surface as
+//! [`TransportError::Closed`]-class failures that the serve loop treats
+//! as "a recall that never acks" — the dead child's outstanding tasks are
+//! re-granted elsewhere (see `scheduler::net`).
+
+pub mod wire;
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use wire::{encode, FrameReader, WireMsg};
+
+/// Why a [`Transport`] call failed.
+#[derive(Debug)]
+pub enum TransportError {
+    /// No message within the timeout; the link may still be healthy.
+    Timeout,
+    /// The link is done: peer closed, I/O error, or a codec failure
+    /// (framing is unrecoverable past a corrupt frame).
+    Closed(String),
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Timeout => write!(f, "transport recv timed out"),
+            TransportError::Closed(why) => write!(f, "transport closed: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Per-link traffic counters (cumulative, both halves of a split share
+/// them). In-process channels move no bytes, so their byte counters stay
+/// zero while the message counters still tick.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LinkStats {
+    /// Messages received on this link.
+    pub msgs_in: u64,
+    /// Messages sent on this link.
+    pub msgs_out: u64,
+    /// Encoded frame bytes received (0 for in-process links).
+    pub bytes_in: u64,
+    /// Encoded frame bytes sent (0 for in-process links).
+    pub bytes_out: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    msgs_in: AtomicU64,
+    msgs_out: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> LinkStats {
+        LinkStats {
+            msgs_in: self.msgs_in.load(Ordering::Relaxed),
+            msgs_out: self.msgs_out.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One bidirectional message link. Implementations: the in-process
+/// [`ChannelTransport`] and the TCP / Unix-domain [`SocketTransport`].
+pub trait Transport: Send {
+    /// Send one message; blocks until handed to the OS (sockets) or the
+    /// peer's queue (channels).
+    fn send(&mut self, msg: &WireMsg) -> Result<(), TransportError>;
+
+    /// Receive the next message, waiting at most `timeout`.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<WireMsg, TransportError>;
+
+    /// Cumulative traffic counters for this link (shared across split
+    /// halves).
+    fn stats(&self) -> LinkStats;
+
+    /// Split into `(sender, receiver)` halves usable from different
+    /// threads — the serve loop writes grants while a reader thread
+    /// blocks on the link. Calling the missing direction on a half
+    /// returns [`TransportError::Closed`].
+    fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>), TransportError>;
+}
+
+/// In-process [`Transport`] over a pair of mpsc channels — the link the
+/// threaded runtime always was, now behind the trait so the distributed
+/// serve loop can be exercised without sockets.
+pub struct ChannelTransport {
+    tx: Option<Sender<WireMsg>>,
+    rx: Option<Receiver<WireMsg>>,
+    counters: Arc<Counters>,
+}
+
+impl ChannelTransport {
+    /// A connected pair: what one end sends, the other receives.
+    pub fn pair() -> (ChannelTransport, ChannelTransport) {
+        let (a_tx, a_rx) = channel::<WireMsg>();
+        let (b_tx, b_rx) = channel::<WireMsg>();
+        (
+            ChannelTransport {
+                tx: Some(a_tx),
+                rx: Some(b_rx),
+                counters: Arc::new(Counters::default()),
+            },
+            ChannelTransport {
+                tx: Some(b_tx),
+                rx: Some(a_rx),
+                counters: Arc::new(Counters::default()),
+            },
+        )
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, msg: &WireMsg) -> Result<(), TransportError> {
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| TransportError::Closed("send on receiver half".into()))?;
+        tx.send(msg.clone()).map_err(|_| TransportError::Closed("peer dropped".into()))?;
+        self.counters.msgs_out.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<WireMsg, TransportError> {
+        let rx = self
+            .rx
+            .as_ref()
+            .ok_or_else(|| TransportError::Closed("recv on sender half".into()))?;
+        match rx.recv_timeout(timeout) {
+            Ok(m) => {
+                self.counters.msgs_in.fetch_add(1, Ordering::Relaxed);
+                Ok(m)
+            }
+            Err(RecvTimeoutError::Timeout) => Err(TransportError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(TransportError::Closed("peer dropped".into()))
+            }
+        }
+    }
+
+    fn stats(&self) -> LinkStats {
+        self.counters.snapshot()
+    }
+
+    fn split(
+        mut self: Box<Self>,
+    ) -> Result<(Box<dyn Transport>, Box<dyn Transport>), TransportError> {
+        let counters = Arc::clone(&self.counters);
+        let sender = ChannelTransport { tx: self.tx.take(), rx: None, counters };
+        Ok((Box::new(sender), self))
+    }
+}
+
+enum Stream {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> io::Result<Stream> {
+        Ok(match self {
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+            Stream::Uds(s) => Stream::Uds(s.try_clone()?),
+        })
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(d),
+            Stream::Uds(s) => s.set_read_timeout(d),
+        }
+    }
+
+    fn read_some(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Uds(s) => s.read(buf),
+        }
+    }
+
+    fn write_all_bytes(&mut self, bytes: &[u8]) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.write_all(bytes),
+            Stream::Uds(s) => s.write_all(bytes),
+        }
+    }
+}
+
+/// [`Transport`] over a byte stream (TCP or Unix-domain socket), with
+/// [`wire`] framing and per-direction byte/message counters.
+pub struct SocketTransport {
+    stream: Stream,
+    reader: FrameReader,
+    counters: Arc<Counters>,
+}
+
+impl SocketTransport {
+    /// Wrap a connected TCP stream.
+    pub fn tcp(stream: TcpStream) -> Self {
+        let _ = stream.set_nodelay(true); // grants are latency-sensitive
+        SocketTransport {
+            stream: Stream::Tcp(stream),
+            reader: FrameReader::new(),
+            counters: Arc::new(Counters::default()),
+        }
+    }
+
+    /// Wrap a connected Unix-domain stream.
+    pub fn uds(stream: UnixStream) -> Self {
+        SocketTransport {
+            stream: Stream::Uds(stream),
+            reader: FrameReader::new(),
+            counters: Arc::new(Counters::default()),
+        }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn send(&mut self, msg: &WireMsg) -> Result<(), TransportError> {
+        let bytes = encode(msg);
+        self.stream
+            .write_all_bytes(&bytes)
+            .map_err(|e| TransportError::Closed(e.to_string()))?;
+        self.counters.msgs_out.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_out.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<WireMsg, TransportError> {
+        let deadline = Instant::now() + timeout;
+        let mut buf = [0u8; 8192];
+        loop {
+            if let Some(msg) =
+                self.reader.next_msg().map_err(|e| TransportError::Closed(e.to_string()))?
+            {
+                self.counters.msgs_in.fetch_add(1, Ordering::Relaxed);
+                return Ok(msg);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(TransportError::Timeout);
+            }
+            self.stream
+                .set_read_timeout(Some(deadline - now))
+                .map_err(|e| TransportError::Closed(e.to_string()))?;
+            match self.stream.read_some(&mut buf) {
+                Ok(0) => return Err(TransportError::Closed("peer closed".into())),
+                Ok(n) => {
+                    self.reader.push(&buf[..n]);
+                    self.counters.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+                }
+                Err(e)
+                    if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+                {
+                    return Err(TransportError::Timeout)
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(TransportError::Closed(e.to_string())),
+            }
+        }
+    }
+
+    fn stats(&self) -> LinkStats {
+        self.counters.snapshot()
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>), TransportError> {
+        let writer = self.stream.try_clone().map_err(|e| TransportError::Closed(e.to_string()))?;
+        let sender = SocketTransport {
+            stream: writer,
+            reader: FrameReader::new(),
+            counters: Arc::clone(&self.counters),
+        };
+        Ok((Box::new(sender), self))
+    }
+}
+
+/// A parsed link address: `tcp:HOST:PORT` or `uds:/path/to.sock`. Bare
+/// spellings are inferred — a `/` means a socket path, a `:` means
+/// host:port.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    /// TCP `HOST:PORT`.
+    Tcp(String),
+    /// Unix-domain socket path.
+    Uds(PathBuf),
+}
+
+impl Endpoint {
+    /// Parse an address spelling; errors name the expected forms.
+    pub fn parse(s: &str) -> Result<Endpoint, String> {
+        if let Some(rest) = s.strip_prefix("tcp:") {
+            if rest.contains(':') {
+                return Ok(Endpoint::Tcp(rest.to_string()));
+            }
+            return Err(format!("tcp endpoint needs HOST:PORT, got {rest:?}"));
+        }
+        if let Some(rest) = s.strip_prefix("uds:") {
+            if rest.is_empty() {
+                return Err("uds endpoint needs a socket path".to_string());
+            }
+            return Ok(Endpoint::Uds(PathBuf::from(rest)));
+        }
+        if s.contains('/') {
+            return Ok(Endpoint::Uds(PathBuf::from(s)));
+        }
+        if s.contains(':') {
+            return Ok(Endpoint::Tcp(s.to_string()));
+        }
+        Err(format!("cannot parse endpoint {s:?}: use tcp:HOST:PORT or uds:/path.sock"))
+    }
+
+    /// Connect to this endpoint as a client (the worker side).
+    pub fn connect(&self) -> io::Result<Box<dyn Transport>> {
+        Ok(match self {
+            Endpoint::Tcp(addr) => Box::new(SocketTransport::tcp(TcpStream::connect(addr)?)),
+            Endpoint::Uds(path) => Box::new(SocketTransport::uds(UnixStream::connect(path)?)),
+        })
+    }
+}
+
+impl fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Endpoint::Tcp(addr) => write!(f, "tcp:{addr}"),
+            Endpoint::Uds(path) => write!(f, "uds:{}", path.display()),
+        }
+    }
+}
+
+/// Server side of an [`Endpoint`]: accepts worker links.
+pub enum Listener {
+    /// Bound TCP listener.
+    Tcp(TcpListener),
+    /// Bound Unix-domain listener (the socket file is removed on bind if
+    /// a previous run left it behind).
+    Uds(UnixListener),
+}
+
+impl Listener {
+    /// Bind the endpoint for accepting workers.
+    pub fn bind(ep: &Endpoint) -> io::Result<Listener> {
+        Ok(match ep {
+            Endpoint::Tcp(addr) => Listener::Tcp(TcpListener::bind(addr)?),
+            Endpoint::Uds(path) => {
+                let _ = std::fs::remove_file(path); // stale socket from a crash
+                Listener::Uds(UnixListener::bind(path)?)
+            }
+        })
+    }
+
+    /// Block until one worker connects; returns the link and a peer label
+    /// for logs.
+    pub fn accept(&self) -> io::Result<(Box<dyn Transport>, String)> {
+        Ok(match self {
+            Listener::Tcp(l) => {
+                let (s, peer) = l.accept()?;
+                (Box::new(SocketTransport::tcp(s)) as Box<dyn Transport>, peer.to_string())
+            }
+            Listener::Uds(l) => {
+                let (s, _) = l.accept()?;
+                (Box::new(SocketTransport::uds(s)) as Box<dyn Transport>, "uds-peer".to_string())
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn channel_pair_exchanges_messages() {
+        let (mut a, mut b) = ChannelTransport::pair();
+        a.send(&WireMsg::Request { amount: 5 }).unwrap();
+        b.send(&WireMsg::Ping).unwrap();
+        assert_eq!(
+            b.recv_timeout(Duration::from_secs(1)).unwrap(),
+            WireMsg::Request { amount: 5 }
+        );
+        assert_eq!(a.recv_timeout(Duration::from_secs(1)).unwrap(), WireMsg::Ping);
+        assert!(matches!(
+            a.recv_timeout(Duration::from_millis(5)),
+            Err(TransportError::Timeout)
+        ));
+        let s = a.stats();
+        assert_eq!((s.msgs_out, s.msgs_in, s.bytes_out), (1, 1, 0));
+    }
+
+    #[test]
+    fn channel_split_halves_route_one_direction_each() {
+        let (a, mut b) = ChannelTransport::pair();
+        let (mut tx, mut rx) = (Box::new(a) as Box<dyn Transport>).split().unwrap();
+        tx.send(&WireMsg::RecallAck).unwrap();
+        assert_eq!(b.recv_timeout(Duration::from_secs(1)).unwrap(), WireMsg::RecallAck);
+        b.send(&WireMsg::Shutdown).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap(), WireMsg::Shutdown);
+        assert!(matches!(rx.send(&WireMsg::Ping), Err(TransportError::Closed(_))));
+        assert!(matches!(
+            tx.recv_timeout(Duration::from_millis(1)),
+            Err(TransportError::Closed(_))
+        ));
+    }
+
+    #[test]
+    fn channel_drop_surfaces_as_closed() {
+        let (mut a, b) = ChannelTransport::pair();
+        drop(b);
+        assert!(matches!(a.send(&WireMsg::Ping), Err(TransportError::Closed(_))));
+        assert!(matches!(
+            a.recv_timeout(Duration::from_millis(5)),
+            Err(TransportError::Closed(_))
+        ));
+    }
+
+    #[test]
+    fn tcp_loopback_roundtrip_counts_bytes() {
+        let listener = Listener::bind(&Endpoint::parse("tcp:127.0.0.1:0").unwrap()).unwrap();
+        let addr = match &listener {
+            Listener::Tcp(l) => l.local_addr().unwrap().to_string(),
+            _ => unreachable!(),
+        };
+        let client = thread::spawn(move || {
+            let mut t = Endpoint::Tcp(addr).connect().unwrap();
+            t.send(&WireMsg::Hello { version: wire::PROTO_VERSION, requested_np: 2 }).unwrap();
+            let got = t.recv_timeout(Duration::from_secs(5)).unwrap();
+            (got, t.stats())
+        });
+        let (mut server, _peer) = listener.accept().unwrap();
+        let hello = server.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(hello, WireMsg::Hello { version: wire::PROTO_VERSION, requested_np: 2 });
+        server.send(&WireMsg::Cancel { id: 9 }).unwrap();
+        let (got, cstats) = client.join().unwrap();
+        assert_eq!(got, WireMsg::Cancel { id: 9 });
+        let sstats = server.stats();
+        assert!(sstats.bytes_in > 0 && sstats.bytes_out > 0);
+        assert_eq!(sstats.bytes_in, cstats.bytes_out);
+        assert_eq!(sstats.bytes_out, cstats.bytes_in);
+        assert_eq!((sstats.msgs_in, sstats.msgs_out), (1, 1));
+    }
+
+    #[test]
+    fn uds_roundtrip_and_peer_close() {
+        let path = std::env::temp_dir().join(format!("caravan_t_{}.sock", std::process::id()));
+        let ep = Endpoint::Uds(path.clone());
+        let listener = Listener::bind(&ep).unwrap();
+        let ep2 = ep.clone();
+        let client = thread::spawn(move || {
+            let mut t = ep2.connect().unwrap();
+            t.send(&WireMsg::Request { amount: 1 }).unwrap();
+            // Drop without further traffic: the server sees a clean close.
+        });
+        let (mut server, _) = listener.accept().unwrap();
+        assert_eq!(
+            server.recv_timeout(Duration::from_secs(5)).unwrap(),
+            WireMsg::Request { amount: 1 }
+        );
+        client.join().unwrap();
+        assert!(matches!(
+            server.recv_timeout(Duration::from_secs(5)),
+            Err(TransportError::Closed(_))
+        ));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn endpoint_parsing_spellings() {
+        assert_eq!(
+            Endpoint::parse("tcp:10.0.0.1:7000"),
+            Ok(Endpoint::Tcp("10.0.0.1:7000".into()))
+        );
+        assert_eq!(
+            Endpoint::parse("uds:/tmp/x.sock"),
+            Ok(Endpoint::Uds(PathBuf::from("/tmp/x.sock")))
+        );
+        assert_eq!(
+            Endpoint::parse("/tmp/x.sock"),
+            Ok(Endpoint::Uds(PathBuf::from("/tmp/x.sock")))
+        );
+        assert_eq!(Endpoint::parse("host:9"), Ok(Endpoint::Tcp("host:9".into())));
+        assert!(Endpoint::parse("tcp:nohostport").is_err());
+        assert!(Endpoint::parse("garbage").is_err());
+        assert!(Endpoint::parse("uds:").is_err());
+        assert_eq!(Endpoint::parse("uds:/a/b").unwrap().to_string(), "uds:/a/b");
+    }
+}

@@ -65,11 +65,29 @@ impl Args {
     }
 
     pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
-        self.opts.get(key).map(String::as_str).unwrap_or(default)
+        self.get_opt(key).unwrap_or(default)
     }
 
     pub fn get_opt(&self, key: &str) -> Option<&str> {
-        self.opts.get(key).map(String::as_str)
+        self.try_opt(key).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        })
+    }
+
+    /// Fallible option lookup: `Ok(None)` when `--key` was not given at
+    /// all, `Err` (naming the flag) when it was given *bare* — at the end
+    /// of the argument list, or directly followed by another `--option` —
+    /// so the value it needed never arrived. Without this check a typo
+    /// like `caravan des --np --steal` silently ran with the default np.
+    pub fn try_opt(&self, key: &str) -> Result<Option<&str>, String> {
+        match self.opts.get(key) {
+            Some(v) => Ok(Some(v.as_str())),
+            None if self.has_flag(key) => {
+                Err(format!("--{key} requires a value (write `--{key} VALUE` or `--{key}=VALUE`)"))
+            }
+            None => Ok(None),
+        }
     }
 
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
@@ -85,14 +103,14 @@ impl Args {
     }
 
     fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
-        self.opts.get(key).map(|v| {
+        self.get_opt(key).map(|v| {
             v.parse().unwrap_or_else(|_| panic!("--{key}: cannot parse {v:?}"))
         })
     }
 
     /// Comma-separated list, e.g. `--np 256,1024,4096`.
     pub fn get_list_usize(&self, key: &str, default: &[usize]) -> Vec<usize> {
-        match self.opts.get(key) {
+        match self.get_opt(key) {
             None => default.to_vec(),
             Some(v) => v
                 .split(',')
@@ -142,5 +160,25 @@ mod tests {
     fn bad_numeric_panics() {
         let a = Args::parse_from(sv(&["--np", "abc"]));
         a.get_usize("np", 0);
+    }
+
+    #[test]
+    fn bare_value_flag_is_a_usage_error_naming_the_flag() {
+        // `--np` at the end of argv: the value never arrived.
+        let a = Args::parse_from(sv(&["des", "--np"]));
+        let err = a.try_opt("np").unwrap_err();
+        assert!(err.contains("--np"), "error must name the flag: {err}");
+        assert!(err.contains("requires a value"), "unexpected message: {err}");
+
+        // `--np --steal`: the next option swallowed the value slot.
+        let a = Args::parse_from(sv(&["des", "--np", "--steal"]));
+        assert!(a.try_opt("np").is_err());
+        // The genuine flag is still a flag, and untouched keys still miss.
+        assert!(a.has_flag("steal"));
+        assert_eq!(a.try_opt("fanout"), Ok(None));
+
+        // A key that did get a value is unaffected.
+        let a = Args::parse_from(sv(&["des", "--np", "4"]));
+        assert_eq!(a.try_opt("np"), Ok(Some("4")));
     }
 }

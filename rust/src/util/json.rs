@@ -18,12 +18,23 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+/// Parse failure with the byte offset where the parser gave up.
+/// Hand-rolled `Display`/`Error` impls keep the crate dependency-free
+/// (`Cargo.toml` declares no dependencies, so a `thiserror` derive here
+/// would not even build).
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
@@ -310,6 +321,14 @@ impl fmt::Display for Json {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parse_error_displays_position_and_message() {
+        let err = Json::parse("[1,").unwrap_err();
+        let shown = err.to_string();
+        assert!(shown.starts_with("json parse error at byte "), "got: {shown}");
+        let _dyn_err: &dyn std::error::Error = &err;
+    }
 
     #[test]
     fn roundtrip_object() {

@@ -3,6 +3,33 @@
 //! upper-triangle numbers), histograms (the Fig. 5 diagonal panels) and
 //! five-number summaries for bench reports.
 
+/// Total order on `f64` that ranks NaN strictly *worst* (largest) — the
+/// comparator to use wherever "smallest wins": a NaN score can then never
+/// panic the sort (`partial_cmp().unwrap()`) nor win a `min_by`.
+/// `f64::total_cmp` alone is not enough: it orders by bit pattern, so a
+/// *negative* NaN would rank below `-inf` and win. Both NaN signs land at
+/// the top here, and NaN==NaN keeps the order total.
+pub fn nan_worst(a: f64, b: f64) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.total_cmp(&b),
+    }
+}
+
+/// [`nan_worst`] for `f32`.
+pub fn nan_worst_f32(a: f32, b: f32) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.total_cmp(&b),
+    }
+}
+
 /// Arithmetic mean; 0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -157,6 +184,25 @@ impl std::fmt::Display for Summary {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn nan_worst_ranks_both_nan_signs_last() {
+        use std::cmp::Ordering;
+        for bad in [f64::NAN, -f64::NAN] {
+            assert_eq!(nan_worst(bad, f64::INFINITY), Ordering::Greater);
+            assert_eq!(nan_worst(f64::NEG_INFINITY, bad), Ordering::Less);
+            assert_eq!(nan_worst(bad, bad), Ordering::Equal);
+        }
+        assert_eq!(nan_worst(1.0, 2.0), Ordering::Less);
+        for bad in [f32::NAN, -f32::NAN] {
+            assert_eq!(nan_worst_f32(bad, 0.0), Ordering::Greater);
+            assert_eq!(nan_worst_f32(0.0, bad), Ordering::Less);
+        }
+        let mut v = vec![3.0, f64::NAN, 1.0, -f64::NAN, 2.0];
+        v.sort_by(|a, b| nan_worst(*a, *b));
+        assert_eq!(&v[..3], &[1.0, 2.0, 3.0], "finite values first, NaNs at the end");
+        assert!(v[3].is_nan() && v[4].is_nan());
+    }
 
     #[test]
     fn mean_variance_basics() {

@@ -1,0 +1,163 @@
+//! End-to-end distributed runs with the real `caravan` binary: a root
+//! process (`caravan run --listen`) and `caravan worker` processes joined
+//! over Unix-domain sockets. These are the process-boundary counterparts
+//! of the in-crate `scheduler::net` tests — same protocol, real
+//! `fork`/`exec`, real sockets, real crashes.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_caravan")
+}
+
+fn sock_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("caravan_{tag}_{}.sock", std::process::id()))
+}
+
+/// Wait for the root to bind its listening socket (it is created by
+/// `Listener::bind` before `accept`, so existence means workers may dial).
+fn wait_for_socket(sock: &PathBuf) {
+    let t0 = Instant::now();
+    while !sock.exists() {
+        assert!(t0.elapsed() < Duration::from_secs(30), "root never bound {}", sock.display());
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn spawn_worker(sock: &PathBuf) -> Child {
+    Command::new(bin())
+        .args(["worker", &format!("uds:{}", sock.display())])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn caravan worker")
+}
+
+#[test]
+fn uds_two_worker_sweep_completes_end_to_end() {
+    let sock = sock_path("dist");
+    let _ = std::fs::remove_file(&sock);
+    let root = Command::new(bin())
+        .args([
+            "run",
+            "sh -c 'true'",
+            "--n",
+            "24",
+            "--np",
+            "4",
+            "--listen",
+            &format!("uds:{}", sock.display()),
+            "--workers",
+            "2",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn caravan run --listen");
+    wait_for_socket(&sock);
+    let workers = [spawn_worker(&sock), spawn_worker(&sock)];
+
+    let out = root.wait_with_output().expect("wait root");
+    assert!(
+        out.status.success(),
+        "root failed: status {:?}\nstdout: {}\nstderr: {}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("24 tasks, 0 failures"),
+        "unexpected root summary:\n{stdout}"
+    );
+    // Both links carried traffic and made it into the summary.
+    assert_eq!(stdout.matches("link slot").count(), 2, "summary:\n{stdout}");
+
+    for w in workers {
+        let o = w.wait_with_output().expect("wait worker");
+        let wout = String::from_utf8_lossy(&o.stdout);
+        assert!(
+            o.status.success(),
+            "worker failed: {}\n{}",
+            wout,
+            String::from_utf8_lossy(&o.stderr)
+        );
+        assert!(wout.contains("worker slot"), "unexpected worker output:\n{wout}");
+    }
+    let _ = std::fs::remove_file(&sock);
+}
+
+#[test]
+fn uds_run_survives_sigkilled_worker() {
+    // The acceptance criterion of the dead-link design, at the process
+    // level: SIGKILL one of three workers mid-run; the root must re-grant
+    // that subtree's tasks over the surviving links and still report every
+    // task completed. Timing is best-effort — if the kill lands after the
+    // run drained, the test degenerates to the happy path and still holds.
+    let sock = sock_path("kill");
+    let _ = std::fs::remove_file(&sock);
+    let root = Command::new(bin())
+        .args([
+            "run",
+            "sh -c 'sleep 0.1'",
+            "--n",
+            "40",
+            "--np",
+            "6",
+            "--listen",
+            &format!("uds:{}", sock.display()),
+            "--workers",
+            "3",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn caravan run --listen");
+    wait_for_socket(&sock);
+    let survivor_a = spawn_worker(&sock);
+    let survivor_b = spawn_worker(&sock);
+    let mut victim = spawn_worker(&sock);
+
+    // Let the victim handshake and take some grants, then kill -9 it.
+    std::thread::sleep(Duration::from_millis(600));
+    victim.kill().expect("SIGKILL victim");
+    let _ = victim.wait();
+
+    let out = root.wait_with_output().expect("wait root");
+    assert!(
+        out.status.success(),
+        "root failed after worker kill: status {:?}\nstdout: {}\nstderr: {}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("40 tasks, 0 failures"),
+        "killed worker lost tasks:\n{stdout}"
+    );
+
+    for w in [survivor_a, survivor_b] {
+        let o = w.wait_with_output().expect("wait worker");
+        assert!(
+            o.status.success(),
+            "surviving worker failed: {}\n{}",
+            String::from_utf8_lossy(&o.stdout),
+            String::from_utf8_lossy(&o.stderr)
+        );
+    }
+    let _ = std::fs::remove_file(&sock);
+}
+
+#[test]
+fn worker_refuses_bad_address() {
+    let out = Command::new(bin())
+        .args(["worker", "not-an-endpoint:::"])
+        .output()
+        .expect("run caravan worker");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("worker:"), "stderr should explain the parse failure: {err}");
+}

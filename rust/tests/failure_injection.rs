@@ -283,6 +283,79 @@ fn des_conserves_tasks_under_random_topologies_property() {
 }
 
 #[test]
+fn killing_a_worker_mid_run_loses_zero_tasks() {
+    // Distributed dead-link handling: two remote subtrees serve a root;
+    // one takes a grant of tasks and vanishes without running a single
+    // one. The root must treat the dead link as a recall that never acks,
+    // re-grant every outstanding task to the survivor, and finish with
+    // exactly-once completions.
+    use std::time::Duration;
+
+    use caravan::scheduler::net::{serve_links, ServeOptions};
+    use caravan::scheduler::run_worker;
+    use caravan::transport::wire::{WireMsg, PROTO_VERSION};
+    use caravan::transport::{ChannelTransport, Transport};
+
+    struct Sleeps(usize);
+    impl SearchEngine for Sleeps {
+        fn start(&mut self, sink: &mut dyn JobSink) {
+            for _ in 0..self.0 {
+                sink.submit(Payload::Sleep { seconds: 5.0 });
+            }
+        }
+        fn on_done(&mut self, _r: &TaskResult, _s: &mut dyn JobSink) {}
+    }
+
+    let (srv_a, cli_a) = ChannelTransport::pair();
+    let (srv_b, cli_b) = ChannelTransport::pair();
+
+    let survivor = std::thread::spawn(move || {
+        run_worker(Box::new(cli_a), Arc::new(SleepExecutor { time_scale: 0.001 }), 0)
+    });
+    let victim = std::thread::spawn(move || {
+        let mut t: Box<dyn Transport> = Box::new(cli_b);
+        t.send(&WireMsg::Hello { version: PROTO_VERSION, requested_np: 0 }).unwrap();
+        loop {
+            if let WireMsg::Welcome { .. } = t.recv_timeout(Duration::from_secs(10)).unwrap() {
+                break;
+            }
+        }
+        t.send(&WireMsg::Request { amount: 8 }).unwrap();
+        loop {
+            match t.recv_timeout(Duration::from_secs(10)) {
+                // The interesting path: take a grant, then crash on it.
+                Ok(WireMsg::Assign(tasks)) if !tasks.is_empty() => break,
+                // Degenerate race: the survivor drained everything first.
+                Ok(WireMsg::Shutdown) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+        // Drop the transport with those tasks outstanding: a worker crash.
+    });
+
+    let n = 60;
+    let report = serve_links(
+        &quick(8),
+        Box::new(Sleeps(n)),
+        vec![
+            (Box::new(srv_a) as Box<dyn Transport>, "mem:survivor".into()),
+            (Box::new(srv_b) as Box<dyn Transport>, "mem:victim".into()),
+        ],
+        &ServeOptions { workers: 2, liveness: Duration::from_secs(5) },
+    )
+    .unwrap();
+    victim.join().unwrap();
+    let wr = survivor.join().unwrap().unwrap();
+
+    assert_eq!(report.results.len(), n, "worker crash must lose zero tasks");
+    let mut ids: Vec<u64> = report.results.iter().map(|r| r.id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "re-granted tasks must complete exactly once");
+    assert_eq!(wr.tasks_run, n, "every task ends up on the surviving worker");
+}
+
+#[test]
 fn eval_results_deterministic_under_retry() {
     // ConstResults must be a pure function of (input, seed) so engines can
     // safely resubmit failed tasks.
