@@ -77,13 +77,25 @@ pub struct JobSpec {
     pub timeout_s: Option<f64>,
     /// Free-form label carried on the task (for logs and debugging).
     pub tag: Option<String>,
+    /// Tenant class ([`crate::tenancy::ClassId`]): selects the job's
+    /// queue lane (per-class policy + fair-share weight, see
+    /// [`crate::config::SchedulerConfig::classes`]) and its admission
+    /// quota at the session boundary. Default 0 (the default class).
+    pub class: crate::tenancy::ClassId,
 }
 
 impl JobSpec {
     /// A job with the given payload and default scheduling knobs
     /// (priority 0, no retries, no timeout, no tag).
     pub fn new(payload: Payload) -> Self {
-        Self { payload, priority: 0, max_retries: 0, timeout_s: None, tag: None }
+        Self {
+            payload,
+            priority: 0,
+            max_retries: 0,
+            timeout_s: None,
+            tag: None,
+            class: crate::tenancy::DEFAULT_CLASS,
+        }
     }
 
     /// In-process evaluation of a parameter point (seed 0; see [`Self::seed`]).
@@ -135,6 +147,13 @@ impl JobSpec {
         self
     }
 
+    /// Tenant class the job belongs to (see
+    /// [`crate::config::SchedulerConfig::classes`]).
+    pub fn class(mut self, class: crate::tenancy::ClassId) -> Self {
+        self.class = class;
+        self
+    }
+
     /// Materialize as a scheduler task with the given id (attempt 0; the
     /// scheduler stamps `enqueued_t` when the task first enters a queue).
     pub fn into_task(self, id: TaskId) -> TaskSpec {
@@ -146,6 +165,7 @@ impl JobSpec {
             attempt: 0,
             timeout_s: self.timeout_s,
             tag: self.tag,
+            class: self.class,
             enqueued_t: None,
         }
     }

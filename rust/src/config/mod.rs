@@ -222,7 +222,15 @@ pub struct SchedulerConfig {
     /// Victim-selection policy when `steal` is enabled.
     pub steal_policy: StealPolicy,
     /// Queue-ordering policy at every level (producer + buffer tree).
+    /// With a non-empty [`Self::classes`] registry this is the *default*
+    /// for unregistered class ids; registered classes bring their own.
     pub policy: SchedPolicy,
+    /// Tenant-class registry: [`crate::tenancy::JobClass`] N here defines
+    /// class id N (name, per-class [`SchedPolicy`], fair-share weight,
+    /// admission quota). Empty (the default) = single-tenant behaviour:
+    /// one implicit class using [`Self::policy`] with weight 1 and no
+    /// quota. See [`crate::tenancy`].
+    pub classes: Vec<crate::tenancy::JobClass>,
     /// A buffer keeps `credit_factor × subtree-consumers` tasks on hand.
     pub credit_factor: usize,
     /// Result-store batch size before a flush to the parent.
@@ -246,6 +254,7 @@ impl Default for SchedulerConfig {
             steal: false,
             steal_policy: StealPolicy::DeepestQueue,
             policy: SchedPolicy::Strict,
+            classes: Vec::new(),
             credit_factor: 2,
             flush_every: 16,
             time_scale: 1.0,
@@ -289,6 +298,17 @@ impl SchedulerConfig {
     /// Materialize the buffer tree this configuration describes.
     pub fn tree(&self) -> TreeTopology {
         TreeTopology::build(self.np, self.consumers_per_buffer, self.depth, &self.fanout)
+    }
+
+    /// The compact per-class `(weight, policy)` table every scheduler
+    /// queue is built from (see [`crate::tenancy::ClassTable`]).
+    pub fn class_table(&self) -> crate::tenancy::ClassTable {
+        crate::tenancy::ClassTable::from_registry(&self.classes)
+    }
+
+    /// Name of class `id` for reports (`"default"` when unregistered).
+    pub fn class_name(&self, id: crate::tenancy::ClassId) -> &str {
+        self.classes.get(id as usize).map_or("default", |c| c.name.as_str())
     }
 }
 

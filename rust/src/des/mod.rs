@@ -681,7 +681,9 @@ pub fn run_des(
 
     let mut des = Des {
         cfg,
-        producer: ProducerState::new(topo.roots.len()).with_policy(cfg.sched.policy),
+        producer: ProducerState::new(topo.roots.len())
+            .with_policy(cfg.sched.policy)
+            .with_classes(cfg.sched.class_table()),
         nodes: (0..n_nodes).map(|i| BufferState::for_tree_node(&topo, i, &cfg.sched)).collect(),
         topo,
         heap: BinaryHeap::new(),
@@ -855,6 +857,7 @@ pub fn run_des(
                 let fire = match des.controller.as_mut() {
                     Some(ctrl) => {
                         ctrl.observe_root_lag(lag_n, lag_sum);
+                        ctrl.observe_class_mix(&des.producer.class_stats());
                         ctrl.maybe_reshape(time).is_some()
                     }
                     None => false,

@@ -51,6 +51,7 @@ use crate::api::{JobAdapter, JobEngine, JobSpec, JobStatus, Jobs};
 use crate::config::SchedulerConfig;
 use crate::scheduler::threads::{run_scheduler, Executor, Report};
 use crate::tasklib::{Payload, TaskId, TaskResult};
+use crate::tenancy::{Admission, AdmissionController, ClassId};
 
 /// Callback invoked on the scheduler thread when a task completes. It may
 /// submit follow-up tasks through the provided handle.
@@ -103,16 +104,27 @@ impl Drop for TaskHandle {
     }
 }
 
+/// One submission parked at the admission boundary (or in flight on the
+/// control channel): everything the engine needs to register it.
+struct PendingSubmit {
+    spec: JobSpec,
+    waiter: Sender<TaskResult>,
+    reply: Arc<OnceLock<TaskId>>,
+    callback: Option<Callback>,
+}
+
+/// The shared per-class admission state: consulted synchronously by
+/// submitters, released by the engine as final results arrive.
+type SharedAdmission = Arc<Mutex<AdmissionController<PendingSubmit>>>;
+
 enum Ctl {
-    Submit {
-        spec: JobSpec,
-        waiter: Sender<TaskResult>,
-        reply: Arc<OnceLock<TaskId>>,
-        callback: Option<Callback>,
-    },
-    /// Cancel the task whose id lives in the shared cell. The cell is
-    /// always filled by the time this is drained: the corresponding
-    /// `Submit` precedes it on this same FIFO channel.
+    /// A submission the admission controller already counted in flight.
+    Submit(PendingSubmit),
+    /// Cancel the task whose id lives in the shared cell. For a directly
+    /// admitted task the cell is always filled by the time this is
+    /// drained (its `Submit` precedes it on this same FIFO channel); a
+    /// submission still parked at the admission boundary has no id yet —
+    /// cancellation of parked work is a no-op (it runs when released).
     Cancel { id: Arc<OnceLock<TaskId>> },
     /// A handle was dropped: retire its status entry.
     Forget { id: TaskId },
@@ -123,24 +135,41 @@ enum Ctl {
 #[derive(Clone)]
 pub struct SessionHandle {
     ctl: Sender<Ctl>,
+    adm: SharedAdmission,
 }
 
 impl SessionHandle {
-    /// Submit a typed job (the v2 entry point).
+    /// Submit a typed job (the v2 entry point). Quota-blind: a job of a
+    /// class at quota is *held back* at the session boundary and released
+    /// as earlier jobs of the class finish — never rejected — so the
+    /// pre-tenancy fire-and-forget semantics are preserved while the
+    /// scheduler-side in-flight count stays bounded. Use
+    /// [`SessionHandle::try_submit`] to observe the admission decision.
     pub fn submit(&self, spec: JobSpec) -> TaskHandle {
-        self.submit_with(spec, None)
+        let (_, handle) = self.submit_admission(spec, None, true);
+        handle.expect("quota-blind submit always yields a handle")
+    }
+
+    /// Submit with typed admission control: [`Admission::Accepted`] jobs
+    /// enter the scheduler immediately, [`Admission::Queued`] jobs are
+    /// held at the boundary (their handle resolves once released), and
+    /// [`Admission::Rejected`] jobs — the class's bounded backlog is full
+    /// — are **not** submitted and yield no handle.
+    pub fn try_submit(&self, spec: JobSpec) -> (Admission, Option<TaskHandle>) {
+        self.submit_admission(spec, None, false)
     }
 
     pub fn create_task(&self, payload: Payload) -> TaskHandle {
-        self.submit_with(JobSpec::new(payload), None)
+        self.submit(JobSpec::new(payload))
     }
 
     pub fn create_task_with_callback(&self, payload: Payload, cb: Callback) -> TaskHandle {
-        self.submit_with(JobSpec::new(payload), Some(cb))
+        self.submit_with_callback(JobSpec::new(payload), cb)
     }
 
     pub fn submit_with_callback(&self, spec: JobSpec, cb: Callback) -> TaskHandle {
-        self.submit_with(spec, Some(cb))
+        let (_, handle) = self.submit_admission(spec, Some(cb), true);
+        handle.expect("quota-blind submit always yields a handle")
     }
 
     /// Request best-effort cancellation. Never blocks — the id resolution
@@ -149,21 +178,44 @@ impl SessionHandle {
         let _ = self.ctl.send(Ctl::Cancel { id: Arc::clone(&task.id) });
     }
 
-    fn submit_with(&self, spec: JobSpec, callback: Option<Callback>) -> TaskHandle {
+    /// The shared admission path. `quota_blind` parks at-quota
+    /// submissions instead of ever rejecting them (the legacy `submit`
+    /// contract); `try_submit` exposes the full three-way decision.
+    fn submit_admission(
+        &self,
+        spec: JobSpec,
+        callback: Option<Callback>,
+        quota_blind: bool,
+    ) -> (Admission, Option<TaskHandle>) {
         let (wtx, wrx) = channel();
         let id = Arc::new(OnceLock::new());
-        self.ctl
-            .send(Ctl::Submit { spec, waiter: wtx, reply: Arc::clone(&id), callback })
-            .expect("session closed");
-        TaskHandle { id, rx: Mutex::new(wrx), ctl: self.ctl.clone() }
+        let class = spec.class;
+        let pending = PendingSubmit { spec, waiter: wtx, reply: Arc::clone(&id), callback };
+        let (decision, released) = {
+            let mut adm = self.adm.lock().unwrap();
+            if quota_blind {
+                adm.offer_unbounded(class, pending)
+            } else {
+                adm.offer(class, pending)
+            }
+        };
+        if decision == Admission::Rejected {
+            return (Admission::Rejected, None);
+        }
+        if let Some(p) = released {
+            self.ctl.send(Ctl::Submit(p)).expect("session closed");
+        }
+        (decision, Some(TaskHandle { id, rx: Mutex::new(wrx), ctl: self.ctl.clone() }))
     }
 }
 
 /// Per-job context the session engine attaches to every submission: who is
-/// waiting for the result, and what (if anything) to run on completion.
+/// waiting for the result, what (if anything) to run on completion, and
+/// which tenant class to credit back at the admission boundary.
 struct SessionCtx {
     waiter: Sender<TaskResult>,
     callback: Option<Callback>,
+    class: ClassId,
 }
 
 /// The session engine: a [`JobEngine`] that pulls submissions from the
@@ -172,6 +224,7 @@ struct SessionEngine {
     ctl_rx: Receiver<Ctl>,
     handle: SessionHandle,
     status: Arc<Mutex<HashMap<TaskId, JobStatus>>>,
+    adm: SharedAdmission,
     closed: bool,
 }
 
@@ -195,23 +248,37 @@ impl JobEngine for SessionEngine {
             *slot = JobStatus::from_result(result);
         }
         let _ = ctx.waiter.send(result.clone());
+        // Credit the class back at the admission boundary; a held-back
+        // submission of the class (if any) takes the freed slot now.
+        let released = self.adm.lock().unwrap().complete(ctx.class);
+        if let Some(p) = released {
+            self.register(p, jobs);
+        }
     }
 
     fn poll(&mut self, jobs: &mut Jobs<'_, SessionCtx>) -> bool {
         self.drain(jobs);
-        self.closed
+        // Submissions parked at the admission boundary are invisible to
+        // the scheduler's own quiescence accounting: the session is only
+        // done when none remain.
+        self.closed && !self.adm.lock().unwrap().any_waiting()
     }
 }
 
 impl SessionEngine {
+    /// Hand one admitted submission to the scheduler and resolve its id.
+    fn register(&self, p: PendingSubmit, jobs: &mut Jobs<'_, SessionCtx>) {
+        let class = p.spec.class;
+        let id =
+            jobs.submit(p.spec, SessionCtx { waiter: p.waiter, callback: p.callback, class });
+        self.status.lock().unwrap().insert(id, JobStatus::Queued);
+        let _ = p.reply.set(id);
+    }
+
     fn drain(&mut self, jobs: &mut Jobs<'_, SessionCtx>) {
         while let Ok(msg) = self.ctl_rx.try_recv() {
             match msg {
-                Ctl::Submit { spec, waiter, reply, callback } => {
-                    let id = jobs.submit(spec, SessionCtx { waiter, callback });
-                    self.status.lock().unwrap().insert(id, JobStatus::Queued);
-                    let _ = reply.set(id);
-                }
+                Ctl::Submit(p) => self.register(p, jobs),
                 Ctl::Cancel { id } => {
                     // The Submit that fills the cell precedes this message
                     // on the FIFO control channel, so it is always set.
@@ -238,15 +305,20 @@ pub struct Session {
 }
 
 impl Session {
-    /// Start the scheduler with `cfg` on a background thread.
+    /// Start the scheduler with `cfg` on a background thread. The
+    /// [`crate::tenancy::JobClass`] registry in
+    /// [`SchedulerConfig::classes`] drives both the in-tree fair-share
+    /// lanes and the per-class admission quotas at this boundary.
     pub fn start(cfg: SchedulerConfig, executor: Arc<dyn Executor>) -> Session {
         let (ctl_tx, ctl_rx) = channel();
-        let handle = SessionHandle { ctl: ctl_tx };
+        let adm: SharedAdmission = Arc::new(Mutex::new(AdmissionController::new(&cfg.classes)));
+        let handle = SessionHandle { ctl: ctl_tx, adm: Arc::clone(&adm) };
         let status: Arc<Mutex<HashMap<TaskId, JobStatus>>> = Arc::new(Mutex::new(HashMap::new()));
         let engine = SessionEngine {
             ctl_rx,
             handle: handle.clone(),
             status: Arc::clone(&status),
+            adm: Arc::clone(&adm),
             closed: false,
         };
         let thread = std::thread::Builder::new()
@@ -261,8 +333,23 @@ impl Session {
     }
 
     /// Submit a typed job: `session.submit(JobSpec::sleep(1.0).priority(2))`.
+    /// Quota-blind (see [`SessionHandle::submit`]): at-quota submissions
+    /// are held back, never rejected.
     pub fn submit(&self, spec: JobSpec) -> TaskHandle {
         self.handle.submit(spec)
+    }
+
+    /// Submit with typed admission control (see
+    /// [`SessionHandle::try_submit`]): returns the [`Admission`] decision
+    /// and a handle unless the job was rejected.
+    pub fn try_submit(&self, spec: JobSpec) -> (Admission, Option<TaskHandle>) {
+        self.handle.try_submit(spec)
+    }
+
+    /// Admission-boundary load of `class`: `(in_flight, held_back)`.
+    pub fn admission_load(&self, class: ClassId) -> (usize, usize) {
+        let adm = self.handle.adm.lock().unwrap();
+        (adm.in_flight(class), adm.queued(class))
     }
 
     /// `Task.create` — submit a task with default scheduling.
@@ -545,6 +632,76 @@ mod tests {
         assert_eq!(report.cancelled(), 1);
         let killed: u64 = report.node_stats.iter().map(|st| st.cancelled_killed).sum();
         assert_eq!(killed, 1, "the leaf must have requested exactly one kill");
+    }
+
+    #[test]
+    fn admission_bounds_per_class_in_flight() {
+        use crate::tenancy::JobClass;
+        // One registered class with quota 2: of six submissions, two are
+        // accepted, two parked at the boundary, two rejected — the
+        // scheduler-side in-flight count never exceeds the quota and the
+        // backlog is bounded, not buffered without limit.
+        let s = Session::start(
+            SchedulerConfig {
+                np: 2,
+                consumers_per_buffer: 2,
+                flush_interval_ms: 2,
+                classes: vec![JobClass::new("quota", 1).quota(2)],
+                ..Default::default()
+            },
+            Arc::new(SleepExecutor { time_scale: 0.001 }),
+        );
+        let mut accepted = Vec::new();
+        let mut parked = Vec::new();
+        let mut rejected = 0;
+        for _ in 0..6 {
+            let (d, h) = s.try_submit(JobSpec::sleep(50.0));
+            match d {
+                Admission::Accepted => accepted.push(h.expect("accepted jobs have handles")),
+                Admission::Queued => parked.push(h.expect("parked jobs have handles")),
+                Admission::Rejected => {
+                    assert!(h.is_none(), "rejected jobs must not get a handle");
+                    rejected += 1;
+                }
+            }
+        }
+        assert_eq!(accepted.len(), 2);
+        assert_eq!(parked.len(), 2);
+        assert_eq!(rejected, 2);
+        assert_eq!(s.admission_load(0), (2, 2));
+        // Everything admitted — parked included — still completes.
+        for t in accepted.iter().chain(parked.iter()) {
+            assert!(s.await_task(t).ok());
+        }
+        assert_eq!(s.admission_load(0), (0, 0));
+        let report = s.shutdown();
+        assert_eq!(report.results.len(), 4, "rejected jobs never entered the scheduler");
+    }
+
+    #[test]
+    fn quota_blind_submit_parks_and_survives_close() {
+        use crate::tenancy::JobClass;
+        // The legacy `submit` never rejects: beyond quota 1 the rest park
+        // at the boundary and drain one at a time. Closing the session
+        // with work still parked must not lose it — the engine only
+        // reports done when the boundary is empty.
+        let s = Session::start(
+            SchedulerConfig {
+                np: 1,
+                consumers_per_buffer: 1,
+                flush_interval_ms: 2,
+                classes: vec![JobClass::new("solo", 1).quota(1)],
+                ..Default::default()
+            },
+            Arc::new(SleepExecutor { time_scale: 0.001 }),
+        );
+        let tasks: Vec<TaskHandle> = (0..5).map(|_| s.submit(JobSpec::sleep(5.0))).collect();
+        let (in_flight, held) = s.admission_load(0);
+        assert!(in_flight <= 1, "quota must bound scheduler-side in-flight");
+        assert!(held >= 3, "the rest wait at the boundary");
+        let report = s.shutdown();
+        assert_eq!(report.results.len(), 5, "parked submissions drain before shutdown");
+        drop(tasks);
     }
 
     #[test]

@@ -31,6 +31,10 @@
 //!   [`transport::Transport`] trait with in-process channel, TCP and
 //!   Unix-domain-socket implementations (see `scheduler::net` for the
 //!   `caravan worker` runtime built on top).
+//! * [`tenancy`] — multi-tenant serving: the [`tenancy::JobClass`]
+//!   registry (per-class policy, fair-share weight, in-flight quota),
+//!   the `ClassId` carried on every job/task, and the typed
+//!   [`tenancy::Admission`] backpressure signal at the session boundary.
 //! * [`workload`] — the TC1/TC2/TC3 synthetic workloads of §3.
 //! * [`util`] — self-contained infrastructure (deterministic RNG, statistics,
 //!   JSON, CLI, logging) so the crate builds offline.
@@ -39,6 +43,7 @@ pub mod util;
 pub mod api;
 pub mod tasklib;
 pub mod scheduler;
+pub mod tenancy;
 pub mod des;
 pub mod workload;
 pub mod engine;

@@ -14,6 +14,7 @@
 //! Examples:
 //!   caravan run "sh -c 'echo 1 > _results.txt'" --n 32 --np 4 --retries 2
 //!   caravan run "sh -c 'true'" --n 64 --np 8 --listen uds:/tmp/cv.sock --workers 2
+//!   caravan run "sh -c 'true'" --n 64 --np 8 --class web=4:strict:64,batch=1:aging:30
 //!   caravan worker uds:/tmp/cv.sock
 //!   caravan des --np 1024 --tc 2 --tasks-per-proc 100
 //!   caravan evac --variant tiny --backend pjrt --seed 3
@@ -32,6 +33,7 @@ use caravan::scheduler::{
     ServeOptions, SleepExecutor,
 };
 use caravan::tasklib::{Payload, SearchEngine, TaskResult, TaskSpec};
+use caravan::tenancy::{parse_policy_flag, JobClass};
 use caravan::transport::{Endpoint, Listener};
 use caravan::util::cli::Args;
 use caravan::util::rng::Pcg64;
@@ -39,13 +41,20 @@ use caravan::workload::{TestCase, TestCaseEngine};
 
 struct RepeatCmd {
     n: usize,
+    /// Registered class count; tasks are dealt round-robin over the
+    /// classes so a `--class a=...,b=...` run exercises every lane.
+    n_classes: usize,
     spec: JobSpec,
 }
 
 impl SearchEngine for RepeatCmd {
     fn start(&mut self, sink: &mut dyn JobSink) {
-        for _ in 0..self.n {
-            sink.submit_job(self.spec.clone());
+        for i in 0..self.n {
+            let mut spec = self.spec.clone();
+            if self.n_classes > 0 {
+                spec = spec.class((i % self.n_classes) as u8);
+            }
+            sink.submit_job(spec);
         }
     }
     fn on_done(&mut self, r: &TaskResult, _s: &mut dyn JobSink) {
@@ -105,6 +114,14 @@ fn usage() {
                       timeout slack within a priority band), aging or
                       aging:SECONDS (deadline order + priority aging, one
                       level per SECONDS waited; prevents starvation)
+      --class SPECS   comma-separated tenant classes, each
+                      NAME=WEIGHT:POLICY[:QUOTA] (e.g.
+                      'web=4:strict:64,batch=1:aging:30'): tasks are
+                      dealt round-robin over the classes, queue pops
+                      interleave proportionally to WEIGHT (weighted
+                      fair share), POLICY orders each class's lane,
+                      and QUOTA bounds the class's in-flight tasks
+                      (0 or omitted = unbounded)
       --depth D|auto  buffer-tree depth; 'auto' runs a short calibration
                       (producer round trip + mean task duration) and lets
                       the controller pick depth and fanout
@@ -197,10 +214,31 @@ fn apply_shape(args: &Args, cfg: &mut SchedulerConfig) {
 fn parse_policy(args: &Args) -> SchedPolicy {
     match args.get_opt("policy") {
         None => SchedPolicy::Strict,
-        Some(s) => SchedPolicy::parse(s).unwrap_or_else(|| {
-            eprintln!("--policy: expected strict|deadline|aging[:SECONDS], got {s:?}");
+        Some(s) => parse_policy_flag("--policy", s).unwrap_or_else(|e| {
+            eprintln!("{e}");
             std::process::exit(2);
         }),
+    }
+}
+
+/// Render a policy the way the CLI accepts it (`--policy` / `--class`).
+fn policy_label(p: SchedPolicy) -> String {
+    match p {
+        SchedPolicy::Strict => "strict".to_string(),
+        SchedPolicy::Deadline => "deadline".to_string(),
+        SchedPolicy::Aging { step } => format!("aging:{step}"),
+    }
+}
+
+/// Apply `--class NAME=WEIGHT:POLICY[:QUOTA],...` to a scheduler config.
+/// Class N in the list gets `ClassId` N; a bad spec (including an unknown
+/// policy token) exits 2 naming the flag and the offending token.
+fn apply_classes(args: &Args, cfg: &mut SchedulerConfig) {
+    if let Some(spec) = args.get_opt("class") {
+        cfg.classes = JobClass::parse_list(spec).unwrap_or_else(|e| {
+            eprintln!("--class: {e}");
+            std::process::exit(2);
+        });
     }
 }
 
@@ -247,6 +285,8 @@ fn cmd_run(args: &Args) {
     };
     apply_shape(args, &mut cfg);
     apply_reshape(args, &mut cfg);
+    apply_classes(args, &mut cfg);
+    let n_classes = cfg.classes.len();
     let work = std::env::temp_dir().join(format!("caravan_run_{}", std::process::id()));
     let report = if let Some(listen) = args.get_opt("listen") {
         // Distributed mode: the tree lives in `caravan worker` processes;
@@ -263,7 +303,7 @@ fn cmd_run(args: &Args) {
         caravan::info!("listening on {ep} for {workers} worker(s)");
         serve_scheduler(
             &cfg,
-            Box::new(RepeatCmd { n, spec }),
+            Box::new(RepeatCmd { n, n_classes, spec }),
             &listener,
             &ServeOptions { workers, ..Default::default() },
         )
@@ -272,7 +312,11 @@ fn cmd_run(args: &Args) {
             std::process::exit(1);
         })
     } else {
-        run_scheduler(&cfg, Box::new(RepeatCmd { n, spec }), Arc::new(CommandExecutor::new(&work)))
+        run_scheduler(
+            &cfg,
+            Box::new(RepeatCmd { n, n_classes, spec }),
+            Arc::new(CommandExecutor::new(&work)),
+        )
     };
     let failures = report.results.iter().filter(|r| !r.ok()).count();
     let retried: u64 = report.node_stats.iter().map(|s| s.retried).sum();
@@ -287,6 +331,27 @@ fn cmd_run(args: &Args) {
         report.rate(np) * 100.0,
         report.wall_secs
     );
+    // Per-class dispatch summary: level-1 (root) nodes see every granted
+    // task exactly once, so their per-class popped counts are the
+    // dispatch totals. The CI multi-tenant smoke greps these lines.
+    for (id, c) in cfg.classes.iter().enumerate() {
+        let popped: u64 = report
+            .node_stats
+            .iter()
+            .filter(|s| s.level == 1)
+            .flat_map(|s| &s.class_stats)
+            .filter(|cs| cs.class as usize == id)
+            .map(|cs| cs.popped)
+            .sum();
+        println!(
+            "  class {id} '{}': weight {}, policy {}, quota {}, {} dispatched",
+            c.name,
+            c.weight,
+            policy_label(c.policy),
+            c.quota.map_or_else(|| "-".to_string(), |q| q.to_string()),
+            popped
+        );
+    }
     for ev in &report.reshapes {
         println!(
             "  reshape @{:.1}s: depth {} fanout {} -> depth {} fanout {} (rtt {:.2}ms, task {:.2}s)",

@@ -44,6 +44,23 @@ impl BandWaitHist {
     }
 }
 
+/// Per-tenant-class slice of one node's queue counters: how many tasks of
+/// the class this node popped for dispatch and their per-band wait
+/// histograms. Exact decomposition of the node totals — Σ over classes of
+/// `popped` equals [`NodeStats::popped`], and within each class Σ of all
+/// histogram counts equals the class's `popped` — so tenant isolation is
+/// observable (and conservation-checkable) at every tree level.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClassNodeStats {
+    /// Tenant class this slice counts ([`crate::tenancy::ClassId`]).
+    pub class: crate::tenancy::ClassId,
+    /// Tasks of this class popped from the node's queue for dispatch.
+    pub popped: u64,
+    /// Per-band queue-wait histograms of this class, ascending band
+    /// order. Σ of all counts equals `popped`.
+    pub wait_hist: Vec<BandWaitHist>,
+}
+
 /// Counter snapshot of one buffer-tree node after a run (threaded runtime
 /// or DES). `node` indexes [`crate::config::TreeTopology::nodes`].
 #[derive(Clone, Debug)]
@@ -78,6 +95,9 @@ pub struct NodeStats {
     /// Per-band queue-wait histograms, ascending band order. Σ of all
     /// counts equals `popped`.
     pub wait_hist: Vec<BandWaitHist>,
+    /// Per-tenant-class decomposition of `popped` / `wait_hist`, ascending
+    /// class order. Empty when the node only ever saw the default class.
+    pub class_stats: Vec<ClassNodeStats>,
     /// Completed parent-request→first-grant round trips observed here —
     /// the per-node producer-lag measurement driving adaptive shaping.
     pub req_lag_n: u64,

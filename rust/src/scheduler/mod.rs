@@ -14,7 +14,10 @@ pub mod protocol;
 pub mod reshape;
 pub mod threads;
 
-pub use metrics::{BandWaitHist, FillingRate, LevelFill, NodeStats, N_WAIT_BINS, WAIT_BUCKET_EDGES};
+pub use metrics::{
+    BandWaitHist, ClassNodeStats, FillingRate, LevelFill, NodeStats, N_WAIT_BINS,
+    WAIT_BUCKET_EDGES,
+};
 pub use net::{connect_worker, run_worker, serve_scheduler, ServeOptions, WorkerReport};
 pub use protocol::{choose_shape, resolve_shape, shaped_fanouts, PrioQueue, MAX_AUTO_DEPTH};
 pub use reshape::{ReshapeController, ReshapeEvent};

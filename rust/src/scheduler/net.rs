@@ -212,7 +212,8 @@ pub fn serve_links(
     let np_total = rank_base;
 
     // --- producer loop ---
-    let mut state = ProducerState::new(n_workers).with_policy(cfg.policy);
+    let mut state =
+        ProducerState::new(n_workers).with_policy(cfg.policy).with_classes(cfg.class_table());
     let mut sink = ProducerSink { next_id: 0, staged: Vec::new(), cancels: Vec::new() };
     let mut filling = FillingRate::new();
     let mut all_results = Vec::new();
@@ -368,6 +369,7 @@ pub fn serve_links(
             retried: 0,
             popped: 0,
             wait_hist: Vec::new(),
+            class_stats: Vec::new(),
             req_lag_n: 0,
             req_lag_mean: 0.0,
             req_lag_max: 0.0,
@@ -570,7 +572,8 @@ pub fn run_worker(
         cfg.credit_factor,
         cfg.flush_every,
     )
-    .with_policy(cfg.policy);
+    .with_policy(cfg.policy)
+    .with_classes(cfg.class_table());
     let flush_interval = Duration::from_millis(cfg.flush_interval_ms.max(1));
     let mut tasks_run = 0usize;
     let mut stopping = false;

@@ -66,11 +66,12 @@
 //!   the recalled work without losing, duplicating, or re-ordering (per
 //!   [`SchedPolicy`]) a single task.
 
-use super::metrics::{wait_bin, BandWaitHist, NodeStats, N_WAIT_BINS};
+use super::metrics::{wait_bin, BandWaitHist, ClassNodeStats, NodeStats, N_WAIT_BINS};
 use crate::config::{
     Calibration, SchedPolicy, SchedulerConfig, StealPolicy, TreeNodeKind, TreeTopology,
 };
 use crate::tasklib::{TaskId, TaskResult, TaskSpec, RC_CANCELLED};
+use crate::tenancy::{ClassId, ClassTable, DEFAULT_CLASS};
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
@@ -112,11 +113,35 @@ type BandKey = (OrdF64, u64);
 /// order tasks identically.
 #[derive(Debug)]
 pub struct PrioQueue {
-    bands: BTreeMap<Reverse<u8>, BTreeMap<BandKey, TaskSpec>>,
+    /// One lane per tenant class that has ever queued here, keyed by
+    /// [`ClassId`]. Lanes are created on demand; a single-tenant run only
+    /// ever materializes the [`DEFAULT_CLASS`] lane, whose behaviour is
+    /// bit-identical to the pre-tenancy queue.
+    lanes: BTreeMap<ClassId, Lane>,
     seq: u64,
     len: usize,
-    policy: SchedPolicy,
+    /// Ordering policy for lanes whose class is not in the registry.
+    default_policy: SchedPolicy,
+    /// Per-class weight/policy view (empty = single-tenant fallback).
+    classes: ClassTable,
     now: f64,
+    /// Deficit-round-robin state: the lane currently being served…
+    cursor: Option<ClassId>,
+    /// …and how many pops it has left before the rotor advances. A lane
+    /// earns `weight` pops per visit, so over any busy interval classes
+    /// share dispatches proportionally to weight.
+    quantum: u64,
+}
+
+/// One tenant class's slice of a [`PrioQueue`]: its own priority bands,
+/// ordering policy and dispatch counters. All invariants of the old
+/// single-tenant queue (FIFO-within-band, Σ wait-hist counts == popped)
+/// hold *per lane*, so they also hold for the aggregated view.
+#[derive(Debug)]
+struct Lane {
+    bands: BTreeMap<Reverse<u8>, BTreeMap<BandKey, TaskSpec>>,
+    len: usize,
+    policy: SchedPolicy,
     /// Tasks popped for dispatch (front pops only — steal surrenders and
     /// cancellation removals are not dispatches).
     popped: u64,
@@ -126,50 +151,9 @@ pub struct PrioQueue {
     wait_hist: BTreeMap<u8, [u64; N_WAIT_BINS]>,
 }
 
-impl Default for PrioQueue {
-    fn default() -> Self {
-        Self {
-            bands: BTreeMap::new(),
-            seq: 0,
-            len: 0,
-            policy: SchedPolicy::Strict,
-            now: 0.0,
-            popped: 0,
-            wait_hist: BTreeMap::new(),
-        }
-    }
-}
-
-impl PrioQueue {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn with_policy(policy: SchedPolicy) -> Self {
-        Self { policy, ..Self::default() }
-    }
-
-    /// Switch the ordering policy (only sensible while empty — existing
-    /// keys are not rebuilt).
-    pub fn set_policy(&mut self, policy: SchedPolicy) {
-        self.policy = policy;
-    }
-
-    pub fn policy(&self) -> SchedPolicy {
-        self.policy
-    }
-
-    /// Advance the queue's clock (drives enqueue stamps, slack and aging).
-    pub fn set_now(&mut self, now: f64) {
-        self.now = now;
-    }
-
-    pub fn len(&self) -> usize {
-        self.len
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len == 0
+impl Lane {
+    fn new(policy: SchedPolicy) -> Self {
+        Self { bands: BTreeMap::new(), len: 0, policy, popped: 0, wait_hist: BTreeMap::new() }
     }
 
     fn band_key(&self, task: &TaskSpec, seq: u64) -> BandKey {
@@ -179,20 +163,10 @@ impl PrioQueue {
         }
     }
 
-    pub fn push(&mut self, mut task: TaskSpec) {
-        self.seq += 1;
-        if task.enqueued_t.is_none() {
-            task.enqueued_t = Some(self.now);
-        }
-        let key = self.band_key(&task, self.seq);
+    fn push(&mut self, task: TaskSpec, seq: u64) {
+        let key = self.band_key(&task, seq);
         self.bands.entry(Reverse(task.priority)).or_default().insert(key, task);
         self.len += 1;
-    }
-
-    pub fn extend(&mut self, tasks: Vec<TaskSpec>) {
-        for t in tasks {
-            self.push(t);
-        }
     }
 
     /// The band the next pop comes from: the highest base priority, or —
@@ -200,14 +174,14 @@ impl PrioQueue {
     /// one level per `step` seconds its head task has been queued. Ties go
     /// to the higher base band (iteration order), keeping aging a strict
     /// generalization of the static policies.
-    fn pop_band(&self) -> Option<Reverse<u8>> {
+    fn pop_band(&self, now: f64) -> Option<Reverse<u8>> {
         match self.policy {
             SchedPolicy::Strict | SchedPolicy::Deadline => self.bands.keys().next().copied(),
             SchedPolicy::Aging { step } => {
                 let mut best: Option<(u64, Reverse<u8>)> = None;
                 for (band, sub) in &self.bands {
                     let head = sub.values().next().expect("bands are never empty");
-                    let wait = (self.now - head.enqueued_t.unwrap_or(self.now)).max(0.0);
+                    let wait = (now - head.enqueued_t.unwrap_or(now)).max(0.0);
                     let boost =
                         if step > 0.0 { ((wait / step) as u64).min(u8::MAX as u64) } else { 0 };
                     let eff = band.0 as u64 + boost;
@@ -220,7 +194,8 @@ impl PrioQueue {
         }
     }
 
-    fn pop_from(&mut self, band: Reverse<u8>) -> Option<TaskSpec> {
+    fn pop_front(&mut self, now: f64) -> Option<TaskSpec> {
+        let band = self.pop_band(now)?;
         let sub = self.bands.get_mut(&band)?;
         let (_, task) = sub.pop_first()?;
         if sub.is_empty() {
@@ -228,65 +203,24 @@ impl PrioQueue {
         }
         self.len -= 1;
         self.popped += 1;
-        let wait = (self.now - task.enqueued_t.unwrap_or(self.now)).max(0.0);
+        let wait = (now - task.enqueued_t.unwrap_or(now)).max(0.0);
         self.wait_hist.entry(task.priority).or_insert([0; N_WAIT_BINS])[wait_bin(wait)] += 1;
         Some(task)
     }
 
-    /// Tasks popped for dispatch so far (the wait histograms' total).
-    pub fn popped(&self) -> u64 {
-        self.popped
-    }
-
-    /// Per-band queue-wait histograms, ascending band order.
-    pub fn wait_hist(&self) -> Vec<BandWaitHist> {
-        self.wait_hist
-            .iter()
-            .map(|(&band, &counts)| BandWaitHist { band, counts })
-            .collect()
-    }
-
-    /// Next task per the policy (see [`PrioQueue::pop_band`]).
-    pub fn pop(&mut self) -> Option<TaskSpec> {
-        let band = self.pop_band()?;
-        self.pop_from(band)
-    }
-
-    /// Up to `n` tasks off the front (policy order).
-    pub fn pop_n(&mut self, n: usize) -> Vec<TaskSpec> {
-        let mut out = Vec::with_capacity(n.min(self.len));
-        for _ in 0..n {
-            match self.pop() {
-                Some(t) => out.push(t),
-                None => break,
-            }
+    /// One task off the coldest end (no dispatch accounting).
+    fn take_back_one(&mut self) -> Option<TaskSpec> {
+        let band = *self.bands.keys().next_back()?;
+        let sub = self.bands.get_mut(&band).expect("band key just observed");
+        let (_, t) = sub.pop_last().expect("bands are never empty");
+        if sub.is_empty() {
+            self.bands.remove(&band);
         }
-        out
+        self.len -= 1;
+        Some(t)
     }
 
-    /// Up to `n` tasks off the back — the coldest work (lowest band,
-    /// loosest deadline, latest arrival), surrendered to sibling steals.
-    pub fn take_back(&mut self, n: usize) -> Vec<TaskSpec> {
-        let mut out = Vec::with_capacity(n.min(self.len));
-        for _ in 0..n {
-            let band = match self.bands.keys().next_back() {
-                Some(&b) => b,
-                None => break,
-            };
-            let sub = self.bands.get_mut(&band).expect("band key just observed");
-            let (_, t) = sub.pop_last().expect("bands are never empty");
-            if sub.is_empty() {
-                self.bands.remove(&band);
-            }
-            self.len -= 1;
-            out.push(t);
-        }
-        out.reverse();
-        out
-    }
-
-    /// Remove the task with the given id, if queued here.
-    pub fn remove(&mut self, id: TaskId) -> Option<TaskSpec> {
+    fn remove(&mut self, id: TaskId) -> Option<TaskSpec> {
         let mut hit: Option<(Reverse<u8>, BandKey)> = None;
         'scan: for (band, sub) in &self.bands {
             for (key, t) in sub {
@@ -306,6 +240,233 @@ impl PrioQueue {
             self.len -= 1;
         }
         task
+    }
+
+    fn wait_hist(&self) -> Vec<BandWaitHist> {
+        self.wait_hist.iter().map(|(&band, &counts)| BandWaitHist { band, counts }).collect()
+    }
+}
+
+impl Default for PrioQueue {
+    fn default() -> Self {
+        Self {
+            lanes: BTreeMap::new(),
+            seq: 0,
+            len: 0,
+            default_policy: SchedPolicy::Strict,
+            classes: ClassTable::default(),
+            now: 0.0,
+            cursor: None,
+            quantum: 0,
+        }
+    }
+}
+
+impl PrioQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_policy(policy: SchedPolicy) -> Self {
+        Self { default_policy: policy, ..Self::default() }
+    }
+
+    /// Attach the per-class weight/policy table (builder). Lanes created
+    /// afterwards order by their class's registered policy; the
+    /// deficit-round-robin pop rule uses the registered weights.
+    pub fn with_classes(mut self, classes: ClassTable) -> Self {
+        self.classes = classes;
+        let default = self.default_policy;
+        for (&class, lane) in self.lanes.iter_mut() {
+            lane.policy = self.classes.policy_or(class, default);
+        }
+        self
+    }
+
+    /// Switch the default ordering policy (only sensible while empty —
+    /// existing keys are not rebuilt). Lanes of *registered* classes keep
+    /// their class policy; unregistered lanes follow the default.
+    pub fn set_policy(&mut self, policy: SchedPolicy) {
+        self.default_policy = policy;
+        for (&class, lane) in self.lanes.iter_mut() {
+            if !self.classes.is_registered(class) {
+                lane.policy = policy;
+            }
+        }
+    }
+
+    pub fn policy(&self) -> SchedPolicy {
+        self.default_policy
+    }
+
+    /// Advance the queue's clock (drives enqueue stamps, slack and aging).
+    pub fn set_now(&mut self, now: f64) {
+        self.now = now;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn push(&mut self, mut task: TaskSpec) {
+        self.seq += 1;
+        if task.enqueued_t.is_none() {
+            task.enqueued_t = Some(self.now);
+        }
+        let lane = match self.lanes.entry(task.class) {
+            std::collections::btree_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::btree_map::Entry::Vacant(v) => {
+                let policy = self.classes.policy_or(task.class, self.default_policy);
+                v.insert(Lane::new(policy))
+            }
+        };
+        lane.push(task, self.seq);
+        self.len += 1;
+    }
+
+    pub fn extend(&mut self, tasks: Vec<TaskSpec>) {
+        for t in tasks {
+            self.push(t);
+        }
+    }
+
+    /// Tasks popped for dispatch so far (the wait histograms' total).
+    pub fn popped(&self) -> u64 {
+        self.lanes.values().map(|l| l.popped).sum()
+    }
+
+    /// Per-band queue-wait histograms, ascending band order, merged across
+    /// all class lanes.
+    pub fn wait_hist(&self) -> Vec<BandWaitHist> {
+        let mut merged: BTreeMap<u8, [u64; N_WAIT_BINS]> = BTreeMap::new();
+        for lane in self.lanes.values() {
+            for (&band, counts) in &lane.wait_hist {
+                let m = merged.entry(band).or_insert([0; N_WAIT_BINS]);
+                for (slot, c) in m.iter_mut().zip(counts.iter()) {
+                    *slot += c;
+                }
+            }
+        }
+        merged.iter().map(|(&band, &counts)| BandWaitHist { band, counts }).collect()
+    }
+
+    /// Per-class dispatch counters, ascending class order — the exact
+    /// decomposition of [`PrioQueue::popped`] / [`PrioQueue::wait_hist`].
+    /// Empty for a single-tenant queue (no registry, only the default
+    /// lane), so pre-tenancy reports stay unchanged.
+    pub fn class_stats(&self) -> Vec<ClassNodeStats> {
+        let single_tenant =
+            self.classes.is_empty() && self.lanes.keys().all(|&c| c == DEFAULT_CLASS);
+        if single_tenant {
+            return Vec::new();
+        }
+        self.lanes
+            .iter()
+            .map(|(&class, lane)| ClassNodeStats {
+                class,
+                popped: lane.popped,
+                wait_hist: lane.wait_hist(),
+            })
+            .collect()
+    }
+
+    /// The next non-empty lane strictly after `cur` in ascending class
+    /// order, wrapping around (`cur` itself is eligible again on wrap).
+    fn next_nonempty(&self, cur: Option<ClassId>) -> Option<ClassId> {
+        use std::ops::Bound::{Excluded, Unbounded};
+        let first = || self.lanes.iter().find(|(_, l)| l.len > 0).map(|(&c, _)| c);
+        match cur {
+            None => first(),
+            Some(c) => self
+                .lanes
+                .range((Excluded(c), Unbounded))
+                .find(|(_, l)| l.len > 0)
+                .map(|(&c2, _)| c2)
+                .or_else(first),
+        }
+    }
+
+    /// Next task: deficit round-robin across class lanes — the serving
+    /// lane pops until its quantum (= fair-share weight) or its backlog is
+    /// exhausted, then the rotor advances to the next non-empty lane in
+    /// ascending class order. Within a lane, the class's [`SchedPolicy`]
+    /// picks the band exactly as the single-tenant queue did. With one
+    /// lane this degenerates to the pre-tenancy behaviour.
+    pub fn pop(&mut self) -> Option<TaskSpec> {
+        if self.len == 0 {
+            return None;
+        }
+        let serving = self
+            .cursor
+            .filter(|c| self.quantum > 0 && self.lanes.get(c).map_or(false, |l| l.len > 0));
+        let class = match serving {
+            Some(c) => c,
+            None => {
+                let c = self.next_nonempty(self.cursor).expect("len > 0 ⇒ a non-empty lane");
+                self.cursor = Some(c);
+                self.quantum = self.classes.weight(c);
+                c
+            }
+        };
+        self.quantum -= 1;
+        let lane = self.lanes.get_mut(&class).expect("serving lane exists");
+        let task = lane.pop_front(self.now).expect("serving lane is non-empty");
+        self.len -= 1;
+        Some(task)
+    }
+
+    /// Up to `n` tasks off the front (fair-share + policy order).
+    pub fn pop_n(&mut self, n: usize) -> Vec<TaskSpec> {
+        let mut out = Vec::with_capacity(n.min(self.len));
+        for _ in 0..n {
+            match self.pop() {
+                Some(t) => out.push(t),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Up to `n` tasks off the back — the coldest work, surrendered to
+    /// sibling steals. Per step the victim lane is the longest backlog
+    /// (ties to the higher class id), and within it the coldest task
+    /// (lowest band, loosest deadline, latest arrival) — the multi-tenant
+    /// generalization of the single-class coldest-end rule.
+    pub fn take_back(&mut self, n: usize) -> Vec<TaskSpec> {
+        let mut out = Vec::with_capacity(n.min(self.len));
+        for _ in 0..n {
+            let victim = self
+                .lanes
+                .iter()
+                .filter(|(_, l)| l.len > 0)
+                .max_by(|(ca, la), (cb, lb)| la.len.cmp(&lb.len).then(ca.cmp(cb)))
+                .map(|(&c, _)| c);
+            let class = match victim {
+                Some(c) => c,
+                None => break,
+            };
+            let lane = self.lanes.get_mut(&class).expect("victim lane exists");
+            let t = lane.take_back_one().expect("victim lane is non-empty");
+            self.len -= 1;
+            out.push(t);
+        }
+        out.reverse();
+        out
+    }
+
+    /// Remove the task with the given id, if queued here.
+    pub fn remove(&mut self, id: TaskId) -> Option<TaskSpec> {
+        for lane in self.lanes.values_mut() {
+            if let Some(t) = lane.remove(id) {
+                self.len -= 1;
+                return Some(t);
+            }
+        }
+        None
     }
 }
 
@@ -537,6 +698,21 @@ impl ProducerState {
     pub fn with_policy(mut self, policy: SchedPolicy) -> Self {
         self.pending.set_policy(policy);
         self
+    }
+
+    /// Attach the tenant-class table to the pending queue (builder): class
+    /// lanes order by their registered policy and grants interleave by
+    /// fair-share weight.
+    pub fn with_classes(mut self, classes: crate::tenancy::ClassTable) -> Self {
+        self.pending = std::mem::take(&mut self.pending).with_classes(classes);
+        self
+    }
+
+    /// Per-class grant counters of the pending queue (how many tasks of
+    /// each class the producer has granted downstream) — the live class
+    /// mix fed to the reshape controller. Empty for single-tenant runs.
+    pub fn class_stats(&self) -> Vec<ClassNodeStats> {
+        self.pending.class_stats()
     }
 
     /// Advance the producer's clock: newly pushed tasks are stamped with
@@ -956,6 +1132,14 @@ impl BufferState {
         self
     }
 
+    /// Attach the tenant-class table to the local queue (builder): class
+    /// lanes order by their registered policy and pops interleave by
+    /// fair-share weight at this node like everywhere else in the tree.
+    pub fn with_classes(mut self, classes: crate::tenancy::ClassTable) -> Self {
+        self.queue = std::mem::take(&mut self.queue).with_classes(classes);
+        self
+    }
+
     /// Advance this node's clock (forwarded to the local queue: enqueue
     /// stamps, deadline slack, aging, and the request→grant lag
     /// measurement are all evaluated against it).
@@ -992,7 +1176,7 @@ impl BufferState {
                 cfg.flush_every,
             ),
         };
-        let state = state.with_policy(cfg.policy);
+        let state = state.with_policy(cfg.policy).with_classes(cfg.class_table());
         if cfg.steal {
             state.with_stealing(n.slot, n.n_siblings, cfg.steal_policy)
         } else {
@@ -1075,6 +1259,7 @@ impl BufferState {
             retried: self.retried,
             popped: self.queue.popped(),
             wait_hist: self.queue.wait_hist(),
+            class_stats: self.queue.class_stats(),
             req_lag_n: self.req_lag_n,
             req_lag_mean: if self.req_lag_n == 0 {
                 0.0
@@ -1810,6 +1995,94 @@ mod tests {
         let b = q.pop().unwrap();
         assert_eq!(a.enqueued_t, Some(7.5));
         assert_eq!(b.enqueued_t, Some(2.0));
+    }
+
+    /// A task in the given tenant class.
+    fn class_task(id: u64, class: ClassId) -> TaskSpec {
+        let mut t = task(id);
+        t.class = class;
+        t
+    }
+
+    fn two_classes(wa: u32, wb: u32) -> ClassTable {
+        use crate::tenancy::JobClass;
+        ClassTable::from_registry(&[JobClass::new("a", wa), JobClass::new("b", wb)])
+    }
+
+    #[test]
+    fn fair_share_interleaves_pops_by_weight() {
+        // Weights 2:1 — over any busy interval class 0 gets two pops per
+        // class-1 pop, and the rotor skips drained lanes.
+        let mut q = PrioQueue::new().with_classes(two_classes(2, 1));
+        for i in 0..6 {
+            q.push(class_task(i, 0));
+        }
+        for i in 10..16 {
+            q.push(class_task(i, 1));
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|t| t.id).collect();
+        assert_eq!(order, vec![0, 1, 10, 2, 3, 11, 4, 5, 12, 13, 14, 15]);
+    }
+
+    #[test]
+    fn class_stats_decompose_dispatch_counters() {
+        let mut q = PrioQueue::new().with_classes(two_classes(1, 1));
+        for i in 0..4 {
+            q.push(class_task(i, 0));
+        }
+        for i in 10..13 {
+            q.push(class_task(i, 1));
+        }
+        while q.pop().is_some() {}
+        let stats = q.class_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats.iter().map(|s| s.popped).sum::<u64>(), q.popped());
+        for s in &stats {
+            let hist: u64 = s.wait_hist.iter().flat_map(|h| h.counts.iter()).sum();
+            assert_eq!(hist, s.popped, "class {} wait-hist must cover its pops", s.class);
+        }
+        assert_eq!(stats[0].popped, 4);
+        assert_eq!(stats[1].popped, 3);
+    }
+
+    #[test]
+    fn single_tenant_queue_reports_no_class_stats() {
+        let mut q = PrioQueue::new();
+        q.push(task(0));
+        q.pop();
+        assert!(q.class_stats().is_empty(), "pre-tenancy reports must not grow class rows");
+    }
+
+    #[test]
+    fn take_back_surrenders_from_the_longest_lane() {
+        let mut q = PrioQueue::new().with_classes(two_classes(1, 1));
+        for i in 0..3 {
+            q.push(class_task(i, 0));
+        }
+        q.push(class_task(10, 1));
+        // Lane 0 holds the most backlog, so steals drain its cold end
+        // first; the short lane keeps its work.
+        let back = q.take_back(2);
+        assert_eq!(back.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().unwrap().id, 0);
+    }
+
+    #[test]
+    fn registered_class_policy_survives_set_policy() {
+        use crate::tenancy::JobClass;
+        let classes = ClassTable::from_registry(&[
+            JobClass::new("s", 1),
+            JobClass::new("d", 1).policy(SchedPolicy::Deadline),
+        ]);
+        let mut q = PrioQueue::new().with_classes(classes);
+        q.push(class_task(0, 0));
+        q.push(class_task(1, 1));
+        q.push(class_task(2, 7)); // unregistered: follows the default
+        q.set_policy(SchedPolicy::Aging { step: 5.0 });
+        assert_eq!(q.lanes[&0].policy, SchedPolicy::Strict);
+        assert_eq!(q.lanes[&1].policy, SchedPolicy::Deadline);
+        assert_eq!(q.lanes[&7].policy, SchedPolicy::Aging { step: 5.0 });
     }
 
     #[test]

@@ -32,9 +32,13 @@
 //! transitions identically, and why DES reshape runs are deterministic
 //! in virtual time (property-tested in `tests/tree_protocol.rs`).
 
+use std::collections::BTreeMap;
+
 use crate::config::{Calibration, ReshapePolicy, SchedulerConfig};
 use crate::tasklib::TaskResult;
+use crate::tenancy::ClassId;
 
+use super::metrics::ClassNodeStats;
 use super::protocol::choose_shape;
 
 /// One executed drain-and-graft transition, for reports and benches.
@@ -75,6 +79,14 @@ pub struct ReshapeController {
     lag_base: (u64, f64),
     /// Most recent cumulative root-lag totals observed.
     lag_latest: (u64, f64),
+    /// Most recent cumulative per-class grant counts from the producer's
+    /// pending queue (empty for single-tenant runs).
+    mix_latest: BTreeMap<ClassId, u64>,
+    /// Per-class grant counts at the previous window boundary.
+    mix_base: BTreeMap<ClassId, u64>,
+    /// The per-class *share* vector the current reference was adopted
+    /// under; `None` until a window with multi-tenant traffic closes.
+    mix_ref: Option<BTreeMap<ClassId, f64>>,
     events: Vec<ReshapeEvent>,
 }
 
@@ -101,6 +113,9 @@ impl ReshapeController {
             dur_n: 0,
             lag_base: (0, 0.0),
             lag_latest: (0, 0.0),
+            mix_latest: BTreeMap::new(),
+            mix_base: BTreeMap::new(),
+            mix_ref: None,
             events: Vec::new(),
         }
     }
@@ -137,11 +152,57 @@ impl ReshapeController {
         self.lag_latest = (total_n, total_sum);
     }
 
+    /// Feed the **cumulative** per-class grant counters of the producer's
+    /// pending queue (its `class_stats()`). Like the lag totals, the
+    /// controller differences consecutive snapshots per window and treats
+    /// a shift of the class *mix* — total-variation distance of the
+    /// windowed share vector against the reference mix ≥
+    /// [`ReshapePolicy::drift_threshold`] — as calibration drift: a new
+    /// tenant arriving (or one going quiet) changes the effective task
+    /// profile, so the shape decision deserves a re-check. Single-tenant
+    /// runs feed nothing and are unaffected.
+    pub fn observe_class_mix(&mut self, stats: &[ClassNodeStats]) {
+        for s in stats {
+            self.mix_latest.insert(s.class, s.popped);
+        }
+    }
+
+    /// The windowed class-share vector (`None`: fewer than two classes or
+    /// no grants this window — no mix signal).
+    fn window_mix(&self) -> Option<BTreeMap<ClassId, f64>> {
+        let deltas: BTreeMap<ClassId, u64> = self
+            .mix_latest
+            .iter()
+            .map(|(&c, &n)| (c, n.saturating_sub(self.mix_base.get(&c).copied().unwrap_or(0))))
+            .collect();
+        let total: u64 = deltas.values().sum();
+        if total == 0 || self.mix_latest.len() < 2 {
+            return None;
+        }
+        Some(deltas.into_iter().map(|(c, n)| (c, n as f64 / total as f64)).collect())
+    }
+
+    /// Total-variation distance between two share vectors (½ Σ |a − b|,
+    /// in `[0, 1]`; absent classes count as share 0).
+    fn mix_distance(a: &BTreeMap<ClassId, f64>, b: &BTreeMap<ClassId, f64>) -> f64 {
+        let keys: std::collections::BTreeSet<ClassId> =
+            a.keys().chain(b.keys()).copied().collect();
+        0.5 * keys
+            .into_iter()
+            .map(|k| {
+                (a.get(&k).copied().unwrap_or(0.0) - b.get(&k).copied().unwrap_or(0.0)).abs()
+            })
+            .sum::<f64>()
+    }
+
     /// The runtime finished a drain-and-graft: the old tree's counters
     /// are gone, so the lag baseline and the measurement window restart.
     pub fn grafted(&mut self, now: f64) {
         self.lag_base = (0, 0.0);
         self.lag_latest = (0, 0.0);
+        // The producer (and its cumulative per-class counters) survives a
+        // graft — only the window restarts, from the latest snapshot.
+        self.mix_base = self.mix_latest.clone();
         self.window_start = now;
         self.dur_sum = 0.0;
         self.dur_n = 0;
@@ -176,16 +237,27 @@ impl ReshapeController {
                 self.shape_cal.mean_task_s
             },
         };
+        let mix = self.window_mix();
         // The window rolls regardless of the decision below.
         self.window_start = now;
         self.lag_base = self.lag_latest;
+        self.mix_base = self.mix_latest.clone();
         self.dur_sum = 0.0;
         self.dur_n = 0;
 
         let rel = |new: f64, old: f64| (new - old).abs() / old.abs().max(1e-12);
-        let drift = rel(cal.producer_rtt, self.shape_cal.producer_rtt)
+        let cal_drift = rel(cal.producer_rtt, self.shape_cal.producer_rtt)
             .max(rel(cal.mean_task_s, self.shape_cal.mean_task_s));
-        if drift < self.policy.drift_threshold {
+        // Tenant-mix drift: the first multi-tenant window just sets the
+        // reference; later windows compare against it.
+        let mix_drift = match (&mix, &self.mix_ref) {
+            (Some(m), Some(r)) => Self::mix_distance(m, r),
+            _ => 0.0,
+        };
+        if mix.is_some() && self.mix_ref.is_none() {
+            self.mix_ref = mix.clone();
+        }
+        if cal_drift.max(mix_drift) < self.policy.drift_threshold {
             return None;
         }
         let new = choose_shape(&self.cfg, &cal);
@@ -194,6 +266,9 @@ impl ReshapeController {
             // them as the new reference, so a regime that drifted once
             // and then stabilized cannot fire a late transition.
             self.shape_cal = cal;
+            if mix.is_some() {
+                self.mix_ref = mix;
+            }
             return None;
         }
         if now - self.last_transition < self.policy.cooldown {
@@ -209,6 +284,9 @@ impl ReshapeController {
         });
         self.shape = new.clone();
         self.shape_cal = cal;
+        if mix.is_some() {
+            self.mix_ref = mix;
+        }
         self.last_transition = now;
         Some(new)
     }
@@ -353,6 +431,62 @@ mod tests {
         // Only cancellations observed → duration falls back to the
         // reference → no drift → no transition.
         assert_eq!(ctrl.maybe_reshape(10.0), None);
+    }
+
+    #[test]
+    fn mix_distance_is_total_variation() {
+        let a: BTreeMap<ClassId, f64> = [(0u8, 0.5), (1u8, 0.5)].into_iter().collect();
+        let b: BTreeMap<ClassId, f64> = [(0u8, 1.0)].into_iter().collect();
+        assert!((ReshapeController::mix_distance(&a, &b) - 0.5).abs() < 1e-12);
+        assert_eq!(ReshapeController::mix_distance(&a, &a), 0.0);
+        let c: BTreeMap<ClassId, f64> = [(1u8, 1.0)].into_iter().collect();
+        assert!((ReshapeController::mix_distance(&b, &c) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn class_mix_shift_opens_the_drift_gate() {
+        let c = cfg(1024, 32);
+        let shape = choose_shape(&c, &flat_cal());
+        let mut ctrl =
+            ReshapeController::new(&c, policy(10.0, 0.25, 0.0), shape, flat_cal(), 0.0);
+        let mix = |a: u64, b: u64| {
+            vec![
+                ClassNodeStats { class: 0, popped: a, wait_hist: vec![] },
+                ClassNodeStats { class: 1, popped: b, wait_hist: vec![] },
+            ]
+        };
+        // Window 1: all grants to class 0 — just sets the reference mix.
+        ctrl.observe_class_mix(&mix(100, 0));
+        assert_eq!(ctrl.maybe_reshape(10.0), None);
+        assert_eq!(ctrl.mix_ref.as_ref().and_then(|r| r.get(&0)).copied(), Some(1.0));
+        // Window 2: the windowed mix flips entirely to class 1 (total
+        // variation 1.0 ≥ 0.25). The calibration inputs are untouched, so
+        // the forced re-check keeps the current shape and the absorb
+        // branch adopts the new mix as reference — observable proof the
+        // gate opened, with no spurious transition.
+        ctrl.observe_class_mix(&mix(100, 300));
+        assert_eq!(ctrl.maybe_reshape(20.0), None);
+        assert!(ctrl.events().is_empty());
+        assert_eq!(ctrl.mix_ref.as_ref().and_then(|r| r.get(&1)).copied(), Some(1.0));
+        // Window 3: the same mix again — distance 0, the gate stays shut
+        // and the reference is untouched.
+        ctrl.observe_class_mix(&mix(100, 600));
+        assert_eq!(ctrl.maybe_reshape(30.0), None);
+        assert_eq!(ctrl.mix_ref.as_ref().and_then(|r| r.get(&1)).copied(), Some(1.0));
+    }
+
+    #[test]
+    fn single_tenant_runs_feed_no_mix_signal() {
+        let c = cfg(1024, 32);
+        let shape = choose_shape(&c, &flat_cal());
+        let mut ctrl =
+            ReshapeController::new(&c, policy(10.0, 0.25, 0.0), shape, flat_cal(), 0.0);
+        // One class (or none at all) can never produce a share *shift*.
+        ctrl.observe_class_mix(&[]);
+        assert_eq!(ctrl.maybe_reshape(10.0), None);
+        ctrl.observe_class_mix(&[ClassNodeStats { class: 0, popped: 500, wait_hist: vec![] }]);
+        assert_eq!(ctrl.maybe_reshape(20.0), None);
+        assert!(ctrl.mix_ref.is_none());
     }
 
     #[test]

@@ -385,7 +385,9 @@ pub fn run_scheduler(
                 s.rewire(topo.roots.len());
                 s
             }
-            None => ProducerState::new(topo.roots.len()).with_policy(cfg.policy),
+            None => ProducerState::new(topo.roots.len())
+                .with_policy(cfg.policy)
+                .with_classes(cfg.class_table()),
         };
 
         state.set_now(t0.elapsed().as_secs_f64() * clock_scale);
@@ -428,6 +430,7 @@ pub fn run_scheduler(
                                     }
                                 }
                                 ctrl.observe_root_lag(lag_n, lag_sum);
+                                ctrl.observe_class_mix(&state.class_stats());
                                 ctrl.maybe_reshape(now).is_some()
                             }
                             None => false,

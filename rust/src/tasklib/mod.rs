@@ -86,6 +86,11 @@ pub struct TaskSpec {
     pub timeout_s: Option<f64>,
     /// Free-form label from [`JobSpec::tag`].
     pub tag: Option<String>,
+    /// Tenant class ([`crate::tenancy::ClassId`]) — the index into
+    /// [`crate::config::SchedulerConfig::classes`] that selects the
+    /// task's queue lane (per-class policy, fair-share weight) at every
+    /// tree level. 0 = default class.
+    pub class: crate::tenancy::ClassId,
     /// When the task first entered a scheduler queue, in *virtual*
     /// seconds since run start — the unit `timeout_s` and aging steps are
     /// expressed in (the threaded runtime divides wall time by its
@@ -108,6 +113,7 @@ impl TaskSpec {
             attempt: 0,
             timeout_s: None,
             tag: None,
+            class: crate::tenancy::DEFAULT_CLASS,
             enqueued_t: None,
         }
     }

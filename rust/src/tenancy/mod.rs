@@ -1,0 +1,467 @@
+//! Multi-tenant serving: job classes, weighted fair-share, admission.
+//!
+//! CARAVAN's premise is *many users* driving dynamic parameter-space
+//! exploration on one shared machine, but through v6 the scheduler served
+//! exactly one sweep at a time — policy, priority and shape were per-run
+//! globals. This module introduces the tenancy vocabulary the rest of the
+//! stack speaks:
+//!
+//! * [`JobClass`] — a named tenant class: its default
+//!   [`SchedPolicy`], its fair-share `weight`, and an optional
+//!   `quota` bounding how many of its jobs may be in flight at once.
+//!   The registry lives in [`crate::config::SchedulerConfig::classes`];
+//!   jobs and tasks carry a [`ClassId`] index into it
+//!   ([`crate::api::JobSpec::class`], [`crate::tasklib::TaskSpec::class`]).
+//! * [`ClassTable`] — the compact `(weight, policy)` view of the registry
+//!   every [`crate::scheduler::protocol::PrioQueue`] keeps, so each queue
+//!   lane orders by its class's policy and the deficit-round-robin pop
+//!   rule interleaves lanes proportionally to weight.
+//! * [`Admission`] + [`AdmissionController`] — the typed backpressure
+//!   signal at the [`crate::engine::Session`] boundary: a submission
+//!   beyond a class's quota is *queued* (held back, released as the
+//!   class's in-flight count drops) and, beyond a bounded backlog,
+//!   *rejected* — never buffered without bound.
+//!
+//! Everything here is pure bookkeeping: no clocks, no I/O, no
+//! randomness — so the DES multi-tenant scenarios stay bit-identically
+//! reproducible.
+
+#![warn(missing_docs)]
+
+use std::collections::VecDeque;
+
+use crate::config::SchedPolicy;
+
+/// Index of a job's class in [`crate::config::SchedulerConfig::classes`].
+/// Class 0 is the default class: a run with an empty registry behaves
+/// exactly like the single-tenant scheduler (one lane, run-level policy,
+/// weight 1, no quota).
+pub type ClassId = u8;
+
+/// The default class every unclassed job belongs to.
+pub const DEFAULT_CLASS: ClassId = 0;
+
+/// One tenant class in the registry: who it is and how it is served.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobClass {
+    /// Human-readable class name (CLI `--class NAME=...`, reports).
+    pub name: String,
+    /// Queue-ordering policy for this class's lane at every tree level.
+    pub policy: SchedPolicy,
+    /// Fair-share weight: pops interleave proportionally to weight
+    /// across non-empty lanes (clamped to ≥ 1).
+    pub weight: u32,
+    /// Max jobs in flight at the session boundary (`None` = unbounded).
+    /// Submissions beyond it are queued; beyond a backlog of the same
+    /// size again, rejected.
+    pub quota: Option<usize>,
+}
+
+impl JobClass {
+    /// A class with the given name and weight, [`SchedPolicy::Strict`]
+    /// ordering and no quota.
+    pub fn new(name: impl Into<String>, weight: u32) -> Self {
+        Self { name: name.into(), policy: SchedPolicy::Strict, weight, quota: None }
+    }
+
+    /// Set the class's queue-ordering policy (builder).
+    pub fn policy(mut self, policy: SchedPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Set the class's in-flight quota (builder); 0 means unbounded.
+    pub fn quota(mut self, quota: usize) -> Self {
+        self.quota = if quota == 0 { None } else { Some(quota) };
+        self
+    }
+
+    /// Parse one CLI class spec `NAME=WEIGHT:POLICY:QUOTA`.
+    ///
+    /// `POLICY` is any [`SchedPolicy::parse`] token — including
+    /// `aging:SECONDS`, which is why the spec is parsed from the *ends*:
+    /// the first `:`-field is the weight, the last is the quota, and
+    /// everything between is the policy. `QUOTA` may be omitted
+    /// (`NAME=WEIGHT:POLICY`) or 0, both meaning unbounded.
+    ///
+    /// ```
+    /// use caravan::tenancy::JobClass;
+    /// use caravan::config::SchedPolicy;
+    ///
+    /// let c = JobClass::parse_spec("burst=4:aging:30:256").unwrap();
+    /// assert_eq!(c.name, "burst");
+    /// assert_eq!(c.weight, 4);
+    /// assert_eq!(c.policy, SchedPolicy::Aging { step: 30.0 });
+    /// assert_eq!(c.quota, Some(256));
+    /// assert!(JobClass::parse_spec("x=1:bogus:0").is_err());
+    /// ```
+    pub fn parse_spec(spec: &str) -> Result<JobClass, String> {
+        let (name, rest) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("class spec '{spec}' is not NAME=WEIGHT:POLICY:QUOTA"))?;
+        if name.is_empty() {
+            return Err(format!("class spec '{spec}' has an empty name"));
+        }
+        let fields: Vec<&str> = rest.split(':').collect();
+        if fields.len() < 2 {
+            return Err(format!(
+                "class spec '{spec}' needs at least WEIGHT:POLICY after '{name}='"
+            ));
+        }
+        let weight: u32 = fields[0]
+            .parse()
+            .map_err(|_| format!("class '{name}': bad weight '{}'", fields[0]))?;
+        // Try the longest policy first (everything after the weight —
+        // quota omitted), then shrink by one trailing field which must
+        // then be the quota. This keeps `aging:30` unambiguous: in
+        // `b=1:aging:30:64` the policy is `aging:30` and the quota 64; in
+        // `b=1:aging:30` the policy is `aging:30` with no quota.
+        let all = fields[1..].join(":");
+        if let Some(policy) = SchedPolicy::parse(&all) {
+            return Ok(JobClass::new(name, weight).policy(policy));
+        }
+        if fields.len() >= 3 {
+            let policy_str = fields[1..fields.len() - 1].join(":");
+            let quota_str = fields[fields.len() - 1];
+            if let Some(policy) = SchedPolicy::parse(&policy_str) {
+                let quota: usize = quota_str
+                    .parse()
+                    .map_err(|_| format!("class '{name}': bad quota '{quota_str}'"))?;
+                return Ok(JobClass::new(name, weight).policy(policy).quota(quota));
+            }
+        }
+        Err(format!(
+            "class '{name}': unknown policy '{all}' (strict, deadline, aging[:SECONDS])"
+        ))
+    }
+
+    /// Parse a comma-separated list of class specs (the `--class` flag
+    /// value). Class N in the list gets [`ClassId`] N.
+    pub fn parse_list(specs: &str) -> Result<Vec<JobClass>, String> {
+        let classes: Vec<JobClass> = specs
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| JobClass::parse_spec(s.trim()))
+            .collect::<Result<_, _>>()?;
+        if classes.len() > ClassId::MAX as usize + 1 {
+            return Err(format!("at most {} classes supported", ClassId::MAX as usize + 1));
+        }
+        Ok(classes)
+    }
+}
+
+/// Parse a policy token for the named CLI flag, yielding an error message
+/// that names both the flag and the bad token — the fallible counterpart
+/// of the old "unknown policy silently falls back" path.
+pub fn parse_policy_flag(flag: &str, token: &str) -> Result<SchedPolicy, String> {
+    SchedPolicy::parse(token).ok_or_else(|| {
+        format!("{flag}: unknown policy '{token}' (expected strict, deadline, aging[:SECONDS])")
+    })
+}
+
+/// The compact per-class `(weight, policy)` view of a registry that every
+/// scheduler queue keeps: cheap to clone per tree node, total over any
+/// [`ClassId`] (ids beyond the registry fall back to weight 1 and the
+/// run-level default policy).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClassTable {
+    rows: Vec<(u64, SchedPolicy)>,
+}
+
+impl ClassTable {
+    /// Build from a registry. An empty registry yields an empty table:
+    /// every class falls back to weight 1 + the queue's default policy,
+    /// which is exactly the single-tenant behaviour.
+    pub fn from_registry(classes: &[JobClass]) -> Self {
+        Self { rows: classes.iter().map(|c| (c.weight.max(1) as u64, c.policy)).collect() }
+    }
+
+    /// True when no classes are registered (single-tenant run).
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Number of registered classes.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when `class` has its own registry row (its lane keeps the
+    /// registered policy across [`SchedPolicy`] changes to the default).
+    pub fn is_registered(&self, class: ClassId) -> bool {
+        (class as usize) < self.rows.len()
+    }
+
+    /// Fair-share weight of `class` (≥ 1; unregistered ids weigh 1).
+    pub fn weight(&self, class: ClassId) -> u64 {
+        self.rows.get(class as usize).map_or(1, |&(w, _)| w)
+    }
+
+    /// Queue policy of `class`, or `default` for unregistered ids.
+    pub fn policy_or(&self, class: ClassId, default: SchedPolicy) -> SchedPolicy {
+        self.rows.get(class as usize).map_or(default, |&(_, p)| p)
+    }
+}
+
+/// Typed admission signal returned with every session submission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// The job entered the scheduler immediately (under quota).
+    Accepted,
+    /// The class is at quota: the job is held at the session boundary and
+    /// released automatically as earlier jobs of the class finish.
+    Queued,
+    /// The class's bounded backlog is also full: the job was **not**
+    /// submitted. The caller owns retry/shed policy.
+    Rejected,
+}
+
+/// Per-class bounded admission: at most `quota` jobs in flight, at most
+/// `quota` more held back, everything beyond rejected. Generic over the
+/// held-back payload so the session can park its full submission record.
+///
+/// Pure state machine — the owner decides when [`Self::offer`] /
+/// [`Self::complete`] fire, making it usable from the threaded session
+/// (under a mutex) and from deterministic DES engines alike.
+#[derive(Debug)]
+pub struct AdmissionController<T> {
+    lanes: Vec<AdmissionLane<T>>,
+}
+
+#[derive(Debug)]
+struct AdmissionLane<T> {
+    quota: Option<usize>,
+    in_flight: usize,
+    waiting: VecDeque<T>,
+}
+
+impl<T> AdmissionController<T> {
+    /// A controller for the given registry. An empty registry means one
+    /// unbounded default lane; unregistered [`ClassId`]s are unbounded
+    /// too (they grow lanes on demand).
+    pub fn new(classes: &[JobClass]) -> Self {
+        let mut lanes: Vec<AdmissionLane<T>> = classes
+            .iter()
+            .map(|c| AdmissionLane { quota: c.quota, in_flight: 0, waiting: VecDeque::new() })
+            .collect();
+        if lanes.is_empty() {
+            lanes.push(AdmissionLane { quota: None, in_flight: 0, waiting: VecDeque::new() });
+        }
+        Self { lanes }
+    }
+
+    fn lane(&mut self, class: ClassId) -> &mut AdmissionLane<T> {
+        let idx = class as usize;
+        while self.lanes.len() <= idx {
+            self.lanes.push(AdmissionLane { quota: None, in_flight: 0, waiting: VecDeque::new() });
+        }
+        &mut self.lanes[idx]
+    }
+
+    /// Offer a submission. Returns the admission decision and, for
+    /// [`Admission::Accepted`], the item back (submit it now); a queued
+    /// item is parked until [`Self::complete`] releases it; a rejected
+    /// item is returned so the caller can dispose of it.
+    pub fn offer(&mut self, class: ClassId, item: T) -> (Admission, Option<T>) {
+        let lane = self.lane(class);
+        match lane.quota {
+            Some(q) if lane.in_flight >= q => {
+                if lane.waiting.len() >= q {
+                    (Admission::Rejected, Some(item))
+                } else {
+                    lane.waiting.push_back(item);
+                    (Admission::Queued, None)
+                }
+            }
+            _ => {
+                lane.in_flight += 1;
+                (Admission::Accepted, Some(item))
+            }
+        }
+    }
+
+    /// Force a submission in regardless of quota (the compatibility path
+    /// behind the admission-unaware `submit`): it is queued if the class
+    /// is at quota — never rejected — so legacy callers keep their
+    /// fire-and-forget semantics while still being metered.
+    pub fn offer_unbounded(&mut self, class: ClassId, item: T) -> (Admission, Option<T>) {
+        let lane = self.lane(class);
+        match lane.quota {
+            Some(q) if lane.in_flight >= q => {
+                lane.waiting.push_back(item);
+                (Admission::Queued, None)
+            }
+            _ => {
+                lane.in_flight += 1;
+                (Admission::Accepted, Some(item))
+            }
+        }
+    }
+
+    /// A job of `class` reached its final result. Decrements the class's
+    /// in-flight count and, if a held-back submission can now enter,
+    /// returns it (already counted in flight) for the caller to submit.
+    pub fn complete(&mut self, class: ClassId) -> Option<T> {
+        let lane = self.lane(class);
+        lane.in_flight = lane.in_flight.saturating_sub(1);
+        let below = lane.quota.map_or(true, |q| lane.in_flight < q);
+        if below {
+            if let Some(item) = lane.waiting.pop_front() {
+                lane.in_flight += 1;
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    /// Jobs of `class` currently in flight (admitted, not yet finished).
+    pub fn in_flight(&self, class: ClassId) -> usize {
+        self.lanes.get(class as usize).map_or(0, |l| l.in_flight)
+    }
+
+    /// Submissions of `class` held back at the boundary.
+    pub fn queued(&self, class: ClassId) -> usize {
+        self.lanes.get(class as usize).map_or(0, |l| l.waiting.len())
+    }
+
+    /// True when any lane still holds back submissions — the session must
+    /// keep polling even if its control channel is drained.
+    pub fn any_waiting(&self) -> bool {
+        self.lanes.iter().any(|l| !l.waiting.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spec_full_and_partial_arity() {
+        let c = JobClass::parse_spec("steady=2:strict:64").unwrap();
+        assert_eq!(
+            c,
+            JobClass {
+                name: "steady".into(),
+                weight: 2,
+                policy: SchedPolicy::Strict,
+                quota: Some(64)
+            }
+        );
+        // Quota omitted.
+        let c = JobClass::parse_spec("bg=1:deadline").unwrap();
+        assert_eq!(c.quota, None);
+        assert_eq!(c.policy, SchedPolicy::Deadline);
+        // Quota 0 = unbounded.
+        let c = JobClass::parse_spec("bg=1:strict:0").unwrap();
+        assert_eq!(c.quota, None);
+    }
+
+    #[test]
+    fn parse_spec_aging_colon_is_unambiguous() {
+        // Trailing number binds to aging when there is no quota field...
+        let c = JobClass::parse_spec("b=1:aging:30").unwrap();
+        assert_eq!(c.policy, SchedPolicy::Aging { step: 30.0 });
+        assert_eq!(c.quota, None);
+        // ...and to the quota when there is one.
+        let c = JobClass::parse_spec("b=1:aging:30:64").unwrap();
+        assert_eq!(c.policy, SchedPolicy::Aging { step: 30.0 });
+        assert_eq!(c.quota, Some(64));
+        // Bare `aging` keeps its default step.
+        let c = JobClass::parse_spec("b=1:aging:64").unwrap();
+        assert_eq!(c.policy, SchedPolicy::Aging { step: 64.0 }, "longest-policy-first");
+    }
+
+    #[test]
+    fn parse_spec_errors_name_the_problem() {
+        for (spec, needle) in [
+            ("noequals", "NAME=WEIGHT"),
+            ("=1:strict", "empty name"),
+            ("x=1", "WEIGHT:POLICY"),
+            ("x=abc:strict", "bad weight"),
+            ("x=1:bogus", "unknown policy 'bogus'"),
+            ("x=1:bogus:10", "unknown policy"),
+            ("x=1:strict:notanum", "unknown policy"),
+        ] {
+            let err = JobClass::parse_spec(spec).unwrap_err();
+            assert!(err.contains(needle), "spec {spec:?}: error {err:?} missing {needle:?}");
+        }
+    }
+
+    #[test]
+    fn parse_list_splits_on_commas() {
+        let cs = JobClass::parse_list("steady=2:strict:64, burst=4:deadline:256").unwrap();
+        assert_eq!(cs.len(), 2);
+        assert_eq!(cs[0].name, "steady");
+        assert_eq!(cs[1].name, "burst");
+        assert_eq!(cs[1].quota, Some(256));
+        assert!(JobClass::parse_list("a=1:strict,b=1:nope").is_err());
+        assert!(JobClass::parse_list("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_policy_flag_names_flag_and_token() {
+        assert_eq!(parse_policy_flag("--policy", "deadline"), Ok(SchedPolicy::Deadline));
+        let err = parse_policy_flag("--policy", "wrong").unwrap_err();
+        assert!(err.contains("--policy") && err.contains("'wrong'"), "{err}");
+    }
+
+    #[test]
+    fn class_table_falls_back_for_unregistered_ids() {
+        let t = ClassTable::from_registry(&[
+            JobClass::new("a", 3).policy(SchedPolicy::Deadline),
+            JobClass::new("b", 0), // weight clamps to 1
+        ]);
+        assert_eq!(t.weight(0), 3);
+        assert_eq!(t.weight(1), 1);
+        assert_eq!(t.weight(9), 1);
+        assert_eq!(t.policy_or(0, SchedPolicy::Strict), SchedPolicy::Deadline);
+        assert_eq!(t.policy_or(9, SchedPolicy::Strict), SchedPolicy::Strict);
+        assert!(ClassTable::from_registry(&[]).is_empty());
+    }
+
+    #[test]
+    fn admission_bounds_in_flight_and_backlog() {
+        let reg = [JobClass::new("q", 1).quota(2)];
+        let mut adm: AdmissionController<u32> = AdmissionController::new(&reg);
+        // Quota 2: two accepted, two queued, rest rejected.
+        assert_eq!(adm.offer(0, 10), (Admission::Accepted, Some(10)));
+        assert_eq!(adm.offer(0, 11), (Admission::Accepted, Some(11)));
+        assert_eq!(adm.offer(0, 12), (Admission::Queued, None));
+        assert_eq!(adm.offer(0, 13), (Admission::Queued, None));
+        assert_eq!(adm.offer(0, 14), (Admission::Rejected, Some(14)));
+        assert_eq!(adm.in_flight(0), 2);
+        assert_eq!(adm.queued(0), 2);
+        assert!(adm.any_waiting());
+        // Completions release the backlog FIFO, never exceeding quota.
+        assert_eq!(adm.complete(0), Some(12));
+        assert_eq!(adm.in_flight(0), 2);
+        assert_eq!(adm.complete(0), Some(13));
+        assert_eq!(adm.complete(0), None);
+        assert_eq!(adm.in_flight(0), 1);
+        assert!(!adm.any_waiting());
+    }
+
+    #[test]
+    fn admission_unbounded_classes_always_accept() {
+        let mut adm: AdmissionController<u32> = AdmissionController::new(&[]);
+        for i in 0..1000 {
+            assert_eq!(adm.offer(0, i).0, Admission::Accepted);
+        }
+        assert_eq!(adm.in_flight(0), 1000);
+        // Unregistered class ids are unbounded too.
+        assert_eq!(adm.offer(7, 0).0, Admission::Accepted);
+        assert_eq!(adm.in_flight(7), 1);
+    }
+
+    #[test]
+    fn offer_unbounded_queues_but_never_rejects() {
+        let reg = [JobClass::new("q", 1).quota(1)];
+        let mut adm: AdmissionController<u32> = AdmissionController::new(&reg);
+        assert_eq!(adm.offer_unbounded(0, 1), (Admission::Accepted, Some(1)));
+        for i in 2..20 {
+            assert_eq!(adm.offer_unbounded(0, i), (Admission::Queued, None));
+        }
+        assert_eq!(adm.queued(0), 18);
+        assert_eq!(adm.in_flight(0), 1);
+    }
+}

@@ -20,7 +20,9 @@ use crate::config::{SchedPolicy, SchedulerConfig, StealPolicy, TreeShape};
 use crate::tasklib::{Payload, TaskId, TaskResult, TaskSpec};
 
 /// Version carried in [`WireMsg::Hello`]; a root refuses mismatches.
-pub const PROTO_VERSION: u32 = 1;
+/// v2 added multi-tenancy: the class byte on every task and the class
+/// registry in [`WireConfig`].
+pub const PROTO_VERSION: u32 = 2;
 
 /// Upper bound on one frame's body, to fail fast on stream corruption
 /// (a garbage length prefix) instead of attempting a huge allocation.
@@ -129,6 +131,9 @@ pub struct WireConfig {
     /// First global consumer rank of this worker's share; the gateway
     /// offsets local ranks by this before flushing results upstream.
     pub rank_base: u64,
+    /// Tenant-class registry (empty = single-tenant): workers rebuild the
+    /// same per-class lanes, weights and policies as the root's subtree.
+    pub classes: Vec<crate::tenancy::JobClass>,
 }
 
 impl WireConfig {
@@ -149,6 +154,7 @@ impl WireConfig {
             flush_interval_ms: cfg.flush_interval_ms,
             level: level as u64,
             rank_base: rank_base as u64,
+            classes: cfg.classes.clone(),
         }
     }
 
@@ -169,6 +175,7 @@ impl WireConfig {
             flush_every: (self.flush_every as usize).max(1),
             time_scale: self.time_scale,
             flush_interval_ms: self.flush_interval_ms.max(1),
+            classes: self.classes.clone(),
         }
     }
 }
@@ -400,6 +407,7 @@ impl Enc {
         self.opt_f64(t.timeout_s);
         self.opt_str(&t.tag);
         self.opt_f64(t.enqueued_t);
+        self.u8(t.class);
     }
 
     fn tasks(&mut self, ts: &[TaskSpec]) {
@@ -447,6 +455,26 @@ impl Enc {
         self.u64(c.flush_interval_ms);
         self.u64(c.level);
         self.u64(c.rank_base);
+        self.u32(c.classes.len() as u32);
+        for class in &c.classes {
+            self.str(&class.name);
+            self.u32(class.weight);
+            match class.policy {
+                SchedPolicy::Strict => self.u8(0),
+                SchedPolicy::Deadline => self.u8(1),
+                SchedPolicy::Aging { step } => {
+                    self.u8(2);
+                    self.f64(step);
+                }
+            }
+            match class.quota {
+                None => self.u8(0),
+                Some(q) => {
+                    self.u8(1);
+                    self.u64(q as u64);
+                }
+            }
+        }
     }
 }
 
@@ -544,6 +572,7 @@ impl<'a> Dec<'a> {
             timeout_s: self.opt_f64()?,
             tag: self.opt_str()?,
             enqueued_t: self.opt_f64()?,
+            class: self.u8()?,
         })
     }
 
@@ -590,6 +619,26 @@ impl<'a> Dec<'a> {
             2 => SchedPolicy::Aging { step: self.f64()? },
             t => return Err(self.err(&format!("unknown sched policy tag {t}"))),
         };
+        let credit_factor = self.u64()?;
+        let flush_every = self.u64()?;
+        let time_scale = self.f64()?;
+        let flush_interval_ms = self.u64()?;
+        let level = self.u64()?;
+        let rank_base = self.u64()?;
+        let n_classes = self.u32()? as usize;
+        let mut classes = Vec::with_capacity(n_classes.min(256));
+        for _ in 0..n_classes {
+            let name = self.str()?;
+            let weight = self.u32()?;
+            let policy = match self.u8()? {
+                0 => SchedPolicy::Strict,
+                1 => SchedPolicy::Deadline,
+                2 => SchedPolicy::Aging { step: self.f64()? },
+                t => return Err(self.err(&format!("unknown class policy tag {t}"))),
+            };
+            let quota = if self.bool()? { Some(self.u64()? as usize) } else { None };
+            classes.push(crate::tenancy::JobClass { name, policy, weight, quota });
+        }
         Ok(WireConfig {
             np,
             consumers_per_buffer,
@@ -598,12 +647,13 @@ impl<'a> Dec<'a> {
             steal,
             steal_policy,
             policy,
-            credit_factor: self.u64()?,
-            flush_every: self.u64()?,
-            time_scale: self.f64()?,
-            flush_interval_ms: self.u64()?,
-            level: self.u64()?,
-            rank_base: self.u64()?,
+            credit_factor,
+            flush_every,
+            time_scale,
+            flush_interval_ms,
+            level,
+            rank_base,
+            classes,
         })
     }
 }
@@ -634,6 +684,7 @@ mod tests {
             timeout_s: Some(12.5),
             tag: Some("band-a".to_string()),
             enqueued_t: Some(0.25),
+            class: 1,
         }
     }
 
@@ -744,6 +795,7 @@ mod tests {
                 timeout_s: if next() % 2 == 0 { Some(f64::from_bits(next())) } else { None },
                 tag: if next() % 2 == 0 { Some(format!("t{}", next() % 100)) } else { None },
                 enqueued_t: if next() % 2 == 0 { Some(f64::from_bits(next())) } else { None },
+                class: (next() % 256) as u8,
             };
             let r = TaskResult {
                 id: next(),
@@ -846,18 +898,27 @@ mod tests {
 
     #[test]
     fn wire_config_roundtrips_to_scheduler() {
+        use crate::tenancy::JobClass;
         let cfg = SchedulerConfig {
             steal: true,
             policy: SchedPolicy::Aging { step: 7.5 },
             fanout: vec![4, 8],
+            classes: vec![
+                JobClass::new("steady", 2).quota(64),
+                JobClass::new("burst", 4).policy(SchedPolicy::Deadline),
+            ],
             ..Default::default()
         };
         let w = WireConfig::from_scheduler(&cfg, 96, 1, 384);
+        // The registry survives the binary codec bit-identically...
+        roundtrip(&WireMsg::Welcome { slot: 0, cfg: w.clone() });
+        // ...and the worker-side materialization.
         let back = w.to_scheduler();
         assert_eq!(back.np, 96);
         assert_eq!(back.fanout, vec![4, 8]);
         assert_eq!(back.policy, SchedPolicy::Aging { step: 7.5 });
         assert!(back.steal);
+        assert_eq!(back.classes, cfg.classes);
         assert_eq!(w.rank_base, 384);
         assert_eq!(w.level, 1);
     }

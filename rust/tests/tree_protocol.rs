@@ -797,6 +797,130 @@ fn producer_lag_is_measured_at_every_level() {
     }
 }
 
+/// Engine dealing `n` sleeps round-robin over `n_classes` tenant classes.
+struct ClassedSleeps {
+    n: usize,
+    n_classes: usize,
+    secs: f64,
+}
+
+impl caravan::tasklib::SearchEngine for ClassedSleeps {
+    fn start(&mut self, sink: &mut dyn caravan::api::JobSink) {
+        for i in 0..self.n {
+            sink.submit_job(
+                caravan::api::JobSpec::sleep(self.secs).class((i % self.n_classes) as u8),
+            );
+        }
+    }
+    fn on_done(
+        &mut self,
+        _r: &caravan::tasklib::TaskResult,
+        _s: &mut dyn caravan::api::JobSink,
+    ) {
+    }
+}
+
+/// Per-node tenancy conservation: per-class popped counts decompose the
+/// node total exactly, and each class's wait histogram counts exactly its
+/// own pops.
+fn class_stats_conserve(stats: &[caravan::scheduler::NodeStats], label: &str) {
+    for s in stats {
+        let class_pop: u64 = s.class_stats.iter().map(|c| c.popped).sum();
+        assert_eq!(
+            class_pop, s.popped,
+            "{label} node {}: per-class pops must sum to the node total",
+            s.node
+        );
+        for c in &s.class_stats {
+            let hist: u64 = c.wait_hist.iter().map(|h| h.total()).sum();
+            assert_eq!(
+                hist, c.popped,
+                "{label} node {} class {}: wait-hist must conserve class pops",
+                s.node, c.class
+            );
+        }
+    }
+}
+
+#[test]
+fn class_stats_conserve_dispatches_per_class_in_des() {
+    // Satellite property: with two registered classes, at every node (and
+    // every retired node) the per-class dispatch counters decompose the
+    // totals exactly — across every SchedPolicy, with stealing on.
+    use caravan::tenancy::JobClass;
+    for policy in [
+        SchedPolicy::Strict,
+        SchedPolicy::Deadline,
+        SchedPolicy::Aging { step: 5.0 },
+    ] {
+        let depth = 2;
+        let mut cfg = shape(24, 4, depth, 3, true);
+        cfg.policy = policy;
+        cfg.classes = vec![
+            JobClass::new("a", 3),
+            JobClass::new("b", 1).policy(SchedPolicy::Deadline),
+        ];
+        let n = 24 * 5;
+        let mut dcfg = DesConfig::new(cfg.np);
+        dcfg.sched = cfg;
+        let r = run_des(
+            &dcfg,
+            Box::new(ClassedSleeps { n, n_classes: 2, secs: 1.0 }),
+            Box::new(SleepDurations),
+        );
+        let label = format!("{policy:?}");
+        assert_eq!(r.results.len(), n, "{label}");
+        class_stats_conserve(&r.node_stats, &label);
+        class_stats_conserve(&r.retired_node_stats, &label);
+        // Leaf-level per-class pops recover the submitted split exactly:
+        // each task is dispatched once, in its own class's lane.
+        for class in 0..2u8 {
+            let leaf: u64 = r
+                .node_stats
+                .iter()
+                .filter(|s| s.level == depth)
+                .flat_map(|s| &s.class_stats)
+                .filter(|c| c.class == class)
+                .map(|c| c.popped)
+                .sum();
+            assert_eq!(
+                leaf,
+                n as u64 / 2,
+                "{label} class {class}: each task dispatched exactly once"
+            );
+        }
+    }
+}
+
+#[test]
+fn threaded_class_stats_conserve_dispatches() {
+    // The same decomposition on the real runtime.
+    use caravan::tenancy::JobClass;
+    let mut cfg = shape(4, 2, 1, 4, false);
+    cfg.classes = vec![JobClass::new("a", 2), JobClass::new("b", 1)];
+    cfg.time_scale = 0.001;
+    cfg.flush_interval_ms = 2;
+    let n = 24;
+    let r = run_scheduler(
+        &cfg,
+        Box::new(ClassedSleeps { n, n_classes: 2, secs: 1.0 }),
+        Arc::new(SleepExecutor { time_scale: 0.001 }),
+    );
+    assert_eq!(r.results.len(), n);
+    class_stats_conserve(&r.node_stats, "threaded");
+    for class in 0..2u8 {
+        let leaf: u64 = r
+            .node_stats
+            .iter()
+            .filter(|s| s.level == 1)
+            .flat_map(|s| &s.class_stats)
+            .filter(|c| c.class == class)
+            .map(|c| c.popped)
+            .sum();
+        assert_eq!(leaf, n as u64 / 2, "class {class}: dispatched exactly once");
+    }
+}
+
 #[test]
 fn threaded_runtime_and_des_agree_on_tasks_executed() {
     // The two runtimes drive the same state machines; on identical
