@@ -44,7 +44,10 @@ mod model;
 pub use model::{ConstResults, DurationModel, SleepDurations};
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+// BTreeMap/BTreeSet, not HashMap/HashSet: the DES promises bit-identical
+// replay, so every collection on an event path iterates in a fixed order
+// (the `hash-iter` lint rule enforces this for the whole module).
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
 use crate::api::{JobSink, JobSpec};
 use crate::config::{
@@ -127,7 +130,9 @@ impl PartialOrd for Scheduled {
 }
 impl Ord for Scheduled {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.time.partial_cmp(&other.time).unwrap().then(self.seq.cmp(&other.seq))
+        // total_cmp, not partial_cmp().unwrap(): event times are never
+        // NaN today, but the heap's total order must not depend on that.
+        self.time.total_cmp(&other.time).then(self.seq.cmp(&other.seq))
     }
 }
 
@@ -269,10 +274,10 @@ struct Des<'a> {
     /// `(node, consumer)` → (task id, begin, scheduled finish, attempt) of
     /// the attempt currently running there — the state kill-on-cancel
     /// needs to truncate an in-flight execution.
-    running: HashMap<(usize, usize), (TaskId, f64, f64, u32)>,
+    running: BTreeMap<(usize, usize), (TaskId, f64, f64, u32)>,
     /// Completions voided by a kill: the original `NodeDone` is skipped
     /// when it surfaces (the synthetic cancelled one already delivered).
-    voided: HashSet<(usize, usize, TaskId)>,
+    voided: BTreeSet<(usize, usize, TaskId)>,
 }
 
 impl<'a> Des<'a> {
@@ -701,8 +706,8 @@ pub fn run_des(
         durations,
         controller,
         retired_stats: Vec::new(),
-        running: HashMap::new(),
-        voided: HashSet::new(),
+        running: BTreeMap::new(),
+        voided: BTreeSet::new(),
     };
 
     // Bootstrap: producer intake, buffer credit requests.

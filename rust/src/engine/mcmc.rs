@@ -187,6 +187,7 @@ mod tests {
     use super::*;
     use crate::des::{run_des, DesConfig, DurationModel};
     use crate::tasklib::{Payload, TaskSpec};
+    use crate::util::stats::nan_worst;
 
     /// Quadratic bowl: f = Σ (x−0.7)² — chains should concentrate near 0.7.
     struct Bowl;
@@ -245,12 +246,28 @@ mod tests {
             events.push((iv.begin, 1));
             events.push((iv.finish, -1));
         }
-        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        // nan_worst, not `partial_cmp().unwrap()`: a NaN timestamp must
+        // sort deterministically instead of panicking (float-ord rule).
+        events.sort_by(|a, b| nan_worst(a.0, b.0).then(a.1.cmp(&b.1)));
         let (mut cur, mut max) = (0, 0);
         for (_, d) in events {
             cur += d;
             max = max.max(cur);
         }
         assert!(max <= 3, "max concurrency {max}");
+    }
+
+    #[test]
+    fn schedule_event_sort_survives_nan_timestamps() {
+        // Regression (mirrors the PR 4/6 NaN sweeps): the schedule-trace
+        // sort above used `partial_cmp().unwrap()`, so a single NaN
+        // begin/finish stamp panicked the analysis. With nan_worst the
+        // NaN event sorts last and the finite prefix keeps its order.
+        let mut events: Vec<(f64, i32)> =
+            vec![(2.0, -1), (f64::NAN, 1), (1.0, 1), (2.0, 1), (1.0, -1)];
+        events.sort_by(|a, b| nan_worst(a.0, b.0).then(a.1.cmp(&b.1)));
+        assert_eq!(events[0], (1.0, -1));
+        assert_eq!(events[1], (1.0, 1));
+        assert!(events[4].0.is_nan(), "NaN event sorts last, never panics");
     }
 }

@@ -41,7 +41,10 @@
 //! carries the waiter channel and the optional callback — the framework's
 //! context map replaces the session's old `waiters`/`callbacks` HashMaps.
 
-use std::collections::HashMap;
+// BTreeMap, not HashMap: the session surfaces per-task status to callers
+// and sits in a deterministic-output path (the `hash-iter` lint rule
+// covers this file).
+use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
@@ -223,7 +226,7 @@ struct SessionCtx {
 struct SessionEngine {
     ctl_rx: Receiver<Ctl>,
     handle: SessionHandle,
-    status: Arc<Mutex<HashMap<TaskId, JobStatus>>>,
+    status: Arc<Mutex<BTreeMap<TaskId, JobStatus>>>,
     adm: SharedAdmission,
     closed: bool,
 }
@@ -300,7 +303,7 @@ impl SessionEngine {
 /// A running scheduler session (the `Server.start()` context).
 pub struct Session {
     handle: SessionHandle,
-    status: Arc<Mutex<HashMap<TaskId, JobStatus>>>,
+    status: Arc<Mutex<BTreeMap<TaskId, JobStatus>>>,
     thread: Mutex<Option<JoinHandle<Report>>>,
 }
 
@@ -313,7 +316,7 @@ impl Session {
         let (ctl_tx, ctl_rx) = channel();
         let adm: SharedAdmission = Arc::new(Mutex::new(AdmissionController::new(&cfg.classes)));
         let handle = SessionHandle { ctl: ctl_tx, adm: Arc::clone(&adm) };
-        let status: Arc<Mutex<HashMap<TaskId, JobStatus>>> = Arc::new(Mutex::new(HashMap::new()));
+        let status: Arc<Mutex<BTreeMap<TaskId, JobStatus>>> = Arc::new(Mutex::new(BTreeMap::new()));
         let engine = SessionEngine {
             ctl_rx,
             handle: handle.clone(),

@@ -117,6 +117,7 @@ impl JobEngine for RandomEngine {
 mod tests {
     use super::*;
     use crate::des::{run_des, ConstResults, DesConfig};
+    use crate::util::stats::nan_worst_slice;
 
     #[test]
     fn grid_enumerates_cartesian_product() {
@@ -131,7 +132,9 @@ mod tests {
         let got = outcome.lock().unwrap();
         assert_eq!(got.len(), 6);
         let mut points: Vec<Vec<f64>> = got.iter().map(|(p, _)| p.clone()).collect();
-        points.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // nan_worst_slice, not `partial_cmp().unwrap()`: one NaN
+        // coordinate must never panic a result sort (float-ord rule).
+        points.sort_by(|a, b| nan_worst_slice(a, b));
         assert_eq!(points[0], vec![0.0, 0.0]);
         assert_eq!(points[5], vec![1.0, 1.0]);
         assert!(got.iter().all(|(_, res)| res.len() == 2));
@@ -152,5 +155,26 @@ mod tests {
             assert!((-1.0..1.0).contains(&p[0]));
             assert!((10.0..20.0).contains(&p[1]));
         }
+    }
+
+    #[test]
+    fn grid_point_sort_survives_nan_coordinates() {
+        // Regression (mirrors the PR 4/6 NaN sweeps): a grid axis fed a
+        // NaN — e.g. a bound computed from a failed calibration — used to
+        // panic the result sort via `Vec<f64>::partial_cmp().unwrap()`.
+        // The nan_worst_slice comparator must order it deterministically
+        // to the back instead.
+        let (engine, outcome) = GridEngine::new(vec![vec![0.0, f64::NAN], vec![1.0]], 0);
+        let r = run_des(
+            &DesConfig::new(2),
+            Box::new(engine),
+            Box::new(ConstResults::new(1.0, 2.0, 1, 0)),
+        );
+        assert_eq!(r.results.len(), 2);
+        let got = outcome.lock().unwrap();
+        let mut points: Vec<Vec<f64>> = got.iter().map(|(p, _)| p.clone()).collect();
+        points.sort_by(|a, b| nan_worst_slice(a, b));
+        assert_eq!(points[0], vec![0.0, 1.0]);
+        assert!(points[1][0].is_nan(), "NaN point sorts last, never panics");
     }
 }

@@ -36,8 +36,16 @@
 //!   the `ClassId` carried on every job/task, and the typed
 //!   [`tenancy::Admission`] backpressure signal at the session boundary.
 //! * [`workload`] — the TC1/TC2/TC3 synthetic workloads of §3.
+//! * [`lint`] — `caravan lint`: a dependency-free static-analysis pass
+//!   over the crate's own sources enforcing the determinism and
+//!   NaN-safety invariants (float ordering, virtual-time purity,
+//!   iteration-order determinism, panic budgets, no unsafe).
 //! * [`util`] — self-contained infrastructure (deterministic RNG, statistics,
 //!   JSON, CLI, logging) so the crate builds offline.
+
+// The whole crate is safe Rust; the `no-unsafe` lint rule checks this
+// attribute is present so the guarantee cannot silently rot.
+#![forbid(unsafe_code)]
 
 pub mod util;
 pub mod api;
@@ -52,4 +60,5 @@ pub mod runtime;
 pub mod extproc;
 pub mod transport;
 pub mod config;
+pub mod lint;
 pub mod testutil;

@@ -1,0 +1,420 @@
+//! A lightweight Rust tokenizer for the lint pass.
+//!
+//! This is *not* a full lexer: it produces just enough structure for the
+//! token-pattern rules in [`super::rules`] — identifiers, numbers and
+//! single-character punctuation, with comments, string/char literals and
+//! lifetimes correctly skipped so a `partial_cmp` inside a doc comment or
+//! a `"HashMap"` inside a string literal can never trip a rule.
+//!
+//! Two extras ride on top of raw tokenization:
+//!
+//! * comments are collected separately (the `lint:allow` escape hatch
+//!   lives in them), and
+//! * every token is tagged `in_test` when it sits inside a `#[test]` fn
+//!   or `#[cfg(test)]` module, so rules scoped to production code can
+//!   skip test regions without parsing items.
+
+/// One lexed token: its 1-based source line, its text, and whether it is
+/// inside a `#[test]` / `#[cfg(test)]` region.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tok {
+    /// 1-based line the token starts on.
+    pub line: u32,
+    /// Token text (identifier, number, or a single punctuation char).
+    pub text: String,
+    /// True when the token sits inside a `#[test]` or `#[cfg(test)]`
+    /// brace region.
+    pub in_test: bool,
+}
+
+/// One comment (line or block), with the 1-based line it starts on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: u32,
+    /// Full comment text including the `//` / `/*` introducer.
+    pub text: String,
+}
+
+/// The result of lexing one source file.
+#[derive(Clone, Debug, Default)]
+pub struct Lexed {
+    /// Code tokens in source order.
+    pub tokens: Vec<Tok>,
+    /// Comments in source order (not part of `tokens`).
+    pub comments: Vec<Comment>,
+}
+
+/// Tokenize `src`. Never fails: unterminated literals simply consume to
+/// end-of-file, which is good enough for a lint that runs on code the
+/// compiler already accepted.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut tokens: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also `///` and `//!` doc comments).
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment { line, text: b[start..i].iter().collect() });
+            continue;
+        }
+        // Block comment, nested per Rust rules.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut text = String::from("/*");
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    text.push_str("/*");
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    text.push_str("*/");
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    text.push(b[i]);
+                    i += 1;
+                }
+            }
+            comments.push(Comment { line: start_line, text });
+            continue;
+        }
+        // Raw / byte / byte-raw strings: r"..", r#".."#, b"..", br#".."#.
+        if c == 'r' || c == 'b' {
+            if let Some(next_i) = skip_raw_or_byte_string(&b, i, &mut line) {
+                i = next_i;
+                continue;
+            }
+        }
+        // Plain string literal.
+        if c == '"' {
+            i = skip_string(&b, i, &mut line);
+            continue;
+        }
+        // Char literal or lifetime.
+        if c == '\'' {
+            i = skip_char_or_lifetime(&b, i, &mut line);
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            tokens.push(Tok { line, text: b[start..i].iter().collect(), in_test: false });
+            continue;
+        }
+        // Number (loose: handles 0x1f, 1_000, 1.5e3; splitting oddities
+        // like `1e-3` into two tokens is harmless for our rules).
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            if i + 1 < n && b[i] == '.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+            }
+            tokens.push(Tok { line, text: b[start..i].iter().collect(), in_test: false });
+            continue;
+        }
+        // Everything else: single-character punctuation token.
+        tokens.push(Tok { line, text: c.to_string(), in_test: false });
+        i += 1;
+    }
+
+    mark_test_regions(&mut tokens);
+    Lexed { tokens, comments }
+}
+
+/// Skip a `"..."` literal starting at `i` (which holds the opening
+/// quote); returns the index one past the closing quote.
+fn skip_string(b: &[char], mut i: usize, line: &mut u32) -> usize {
+    let n = b.len();
+    i += 1; // opening quote
+    while i < n {
+        match b[i] {
+            '\\' => i += 2,
+            '"' => return i + 1,
+            c => {
+                if c == '\n' {
+                    *line += 1;
+                }
+                i += 1;
+            }
+        }
+    }
+    i
+}
+
+/// Try to skip a raw string `r#".."#`, byte string `b".."` or byte-raw
+/// string `br#".."#` starting at `i`. Returns `None` when the characters
+/// at `i` are not actually a string introducer (e.g. the identifier `r`
+/// or `b` used as a variable name), in which case the caller falls
+/// through to identifier lexing.
+fn skip_raw_or_byte_string(b: &[char], start: usize, line: &mut u32) -> Option<usize> {
+    let n = b.len();
+    let mut i = start;
+    if b[i] == 'b' {
+        i += 1;
+        if i < n && b[i] == 'r' {
+            i += 1;
+        } else if i < n && b[i] == '"' {
+            return Some(skip_string(b, i, line)); // b"..." — escapes as usual
+        } else {
+            return None;
+        }
+    } else {
+        i += 1; // the 'r'
+    }
+    let mut hashes = 0usize;
+    while i < n && b[i] == '#' {
+        hashes += 1;
+        i += 1;
+    }
+    if i >= n || b[i] != '"' {
+        return None; // `r` / `br` was an identifier after all
+    }
+    i += 1; // opening quote; raw strings have no escapes
+    while i < n {
+        if b[i] == '\n' {
+            *line += 1;
+            i += 1;
+            continue;
+        }
+        if b[i] == '"' {
+            let mut j = i + 1;
+            let mut seen = 0usize;
+            while j < n && b[j] == '#' && seen < hashes {
+                seen += 1;
+                j += 1;
+            }
+            if seen == hashes {
+                return Some(j);
+            }
+        }
+        i += 1;
+    }
+    Some(i)
+}
+
+/// Skip a char literal (`'x'`, `'\n'`) or a lifetime (`'a`, `'static`)
+/// starting at the `'` at `i`; returns the index one past it.
+fn skip_char_or_lifetime(b: &[char], i: usize, line: &mut u32) -> usize {
+    let n = b.len();
+    if i + 1 < n && b[i + 1] == '\\' {
+        // Escaped char literal: consume to the closing quote.
+        let mut j = i + 2;
+        while j < n {
+            match b[j] {
+                '\\' => j += 2,
+                '\'' => return j + 1,
+                c => {
+                    if c == '\n' {
+                        *line += 1;
+                    }
+                    j += 1;
+                }
+            }
+        }
+        return j;
+    }
+    if i + 2 < n && b[i + 2] == '\'' {
+        return i + 3; // 'x'
+    }
+    // Lifetime: consume the quote plus the identifier.
+    let mut j = i + 1;
+    while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+        j += 1;
+    }
+    j
+}
+
+/// Tag tokens inside `#[test]` fns and `#[cfg(test)]` modules.
+///
+/// Heuristic, not a parser: after an attribute whose tokens are `test` or
+/// `cfg(.. test ..)`, the next `{`-balanced region is a test region. A
+/// `;` before the `{` cancels (e.g. `#[cfg(test)] use foo;`). Regions
+/// nest; brace depth is tracked globally.
+fn mark_test_regions(tokens: &mut [Tok]) {
+    let mut depth: i64 = 0;
+    // Depths at which currently-open test regions were entered.
+    let mut open_regions: Vec<i64> = Vec::new();
+    let mut pending_test_attr = false;
+    let mut i = 0usize;
+    while i < tokens.len() {
+        let is_attr_start = tokens[i].text == "#"
+            && tokens.get(i + 1).map_or(false, |t| t.text == "[");
+        if is_attr_start {
+            // Scan to the matching ']'.
+            let mut j = i + 2;
+            let mut bd = 1i64;
+            let mut first_ident: Option<String> = None;
+            let mut mentions_test = false;
+            while j < tokens.len() && bd > 0 {
+                let t = tokens[j].text.as_str();
+                if t == "[" {
+                    bd += 1;
+                } else if t == "]" {
+                    bd -= 1;
+                } else {
+                    if first_ident.is_none() && t.chars().all(|c| c.is_alphanumeric() || c == '_')
+                    {
+                        first_ident = Some(t.to_string());
+                    }
+                    if t == "test" {
+                        mentions_test = true;
+                    }
+                }
+                if !open_regions.is_empty() {
+                    tokens[j].in_test = true;
+                }
+                j += 1;
+            }
+            if mentions_test
+                && matches!(first_ident.as_deref(), Some("test") | Some("cfg"))
+            {
+                pending_test_attr = true;
+            }
+            i = j;
+            continue;
+        }
+        match tokens[i].text.as_str() {
+            "{" => {
+                depth += 1;
+                if pending_test_attr {
+                    open_regions.push(depth);
+                    pending_test_attr = false;
+                }
+            }
+            "}" => {
+                if open_regions.last() == Some(&depth) {
+                    open_regions.pop();
+                }
+                depth -= 1;
+            }
+            ";" => pending_test_attr = false,
+            _ => {}
+        }
+        if !open_regions.is_empty() {
+            tokens[i].in_test = true;
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).tokens.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_not_tokens() {
+        let src = r##"
+// partial_cmp in a line comment
+/* HashMap in /* a nested */ block */
+let s = "Instant::now() in a string";
+let r = r#"SystemTime in a raw "string""#;
+let c = 'x';
+let nl = '\n';
+"##;
+        let t = texts(src);
+        assert!(!t.iter().any(|x| x == "partial_cmp"));
+        assert!(!t.iter().any(|x| x == "HashMap"));
+        assert!(!t.iter().any(|x| x == "Instant"));
+        assert!(!t.iter().any(|x| x == "SystemTime"));
+        assert!(t.iter().any(|x| x == "let"));
+        let lexed = lex(src);
+        assert_eq!(lexed.comments.len(), 2);
+        assert!(lexed.comments[0].text.contains("partial_cmp"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let t = texts("fn f<'a>(x: &'a str, y: &'static str) -> char { 'q' }");
+        assert!(t.iter().any(|x| x == "str"));
+        assert!(t.iter().any(|x| x == "char"));
+        // The 'q' literal is skipped, the lifetime names are skipped.
+        assert!(!t.iter().any(|x| x == "q"));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines_inside_literals() {
+        let src = "let a = \"two\nlines\";\nlet target = 1;\n";
+        let lexed = lex(src);
+        let tok = lexed.tokens.iter().find(|t| t.text == "target").expect("target token");
+        assert_eq!(tok.line, 3);
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "
+fn prod() { hot(); }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { cold(); }
+}
+fn prod2() { hot2(); }
+";
+        let lexed = lex(src);
+        let find = |name: &str| lexed.tokens.iter().find(|t| t.text == name).expect("token");
+        assert!(!find("hot").in_test);
+        assert!(find("cold").in_test);
+        assert!(!find("hot2").in_test);
+    }
+
+    #[test]
+    fn cfg_test_on_use_item_does_not_poison_the_next_brace() {
+        let src = "
+#[cfg(test)]
+use std::fmt;
+fn prod() { hot(); }
+";
+        let lexed = lex(src);
+        let hot = lexed.tokens.iter().find(|t| t.text == "hot").expect("token");
+        assert!(!hot.in_test);
+    }
+
+    #[test]
+    fn test_attr_on_fn_marks_only_its_body() {
+        let src = "
+#[test]
+fn t() { cold(); }
+fn prod() { hot(); }
+";
+        let lexed = lex(src);
+        let find = |name: &str| lexed.tokens.iter().find(|t| t.text == name).expect("token");
+        assert!(find("cold").in_test);
+        assert!(!find("hot").in_test);
+    }
+}

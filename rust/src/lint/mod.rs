@@ -1,0 +1,269 @@
+//! `caravan lint` — a dependency-free static-analysis pass over the
+//! crate's own sources, enforcing the determinism and NaN-safety
+//! invariants the rest of the system is built on.
+//!
+//! The repo's correctness story (bit-identical DES replay, NaN-hardened
+//! result paths, a panic-free buffer tree) kept regressing through the
+//! same bug classes: `partial_cmp().unwrap()` NaN panics were hand-fixed
+//! in two separate PRs, wall-clock reads crept toward virtual-time code,
+//! and `HashMap` iteration orders leaked into reports. This module turns
+//! those one-off fixes into enforced invariants:
+//!
+//! | rule | what it forbids |
+//! |------|-----------------|
+//! | `float-ord` | `partial_cmp(..).unwrap()` and `partial_cmp` inside sort/min/max comparators |
+//! | `wall-clock` | `Instant::now` / `SystemTime` outside the I/O allowlist |
+//! | `hash-iter` | `HashMap`/`HashSet` in deterministic-output paths |
+//! | `unwrap-budget` | `.unwrap()` / `.expect()` in protocol/transport/tenancy non-test code |
+//! | `no-unsafe` | any `unsafe`, plus a missing `#![forbid(unsafe_code)]` in the crate root |
+//!
+//! A violation can be waived in place with an escape hatch that *must*
+//! carry a justification:
+//!
+//! ```text
+//! // lint:allow(wall-clock) -- socket read deadline: real I/O, not sim time
+//! let deadline = Instant::now() + timeout;
+//! ```
+//!
+//! The directive suppresses matching diagnostics on its own line and the
+//! line directly below it; an allow without justification text after
+//! `--` is itself reported (rule `lint-allow`), as is an unknown rule
+//! name. Run `caravan lint [--fix-hints] [PATHS]` — exit 0 on a clean
+//! tree, 1 on violations, 2 on usage/IO errors.
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeSet;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use rules::{all_rules, Rule, Violation};
+
+/// An in-source `// lint:allow(rule, ...) -- justification` directive.
+#[derive(Clone, Debug)]
+struct Allow {
+    line: u32,
+    rules: Vec<String>,
+    justified: bool,
+}
+
+/// Parse every `lint:allow` directive out of a file's comments. Returns
+/// the directives plus hygiene violations (missing justification,
+/// unknown rule names) — an unjustified allow does *not* suppress.
+fn parse_directives(comments: &[lexer::Comment], known: &[&'static str]) -> (Vec<Allow>, Vec<Violation>) {
+    let mut allows = Vec::new();
+    let mut bad = Vec::new();
+    for c in comments {
+        let Some(at) = c.text.find("lint:allow(") else { continue };
+        let rest = &c.text[at + "lint:allow(".len()..];
+        let Some(close) = rest.find(')') else {
+            bad.push(Violation {
+                rule: "lint-allow",
+                line: c.line,
+                msg: "malformed lint:allow directive (missing `)`)".into(),
+                hint: "write `// lint:allow(rule) -- justification`",
+            });
+            continue;
+        };
+        let names: Vec<String> = rest[..close]
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        for n in &names {
+            if !known.contains(&n.as_str()) {
+                bad.push(Violation {
+                    rule: "lint-allow",
+                    line: c.line,
+                    msg: format!("lint:allow names unknown rule {n:?}"),
+                    hint: "valid rules: float-ord, wall-clock, hash-iter, unwrap-budget, \
+                           no-unsafe",
+                });
+            }
+        }
+        let justification = rest[close + 1..]
+            .split_once("--")
+            .map(|(_, j)| j.trim())
+            .unwrap_or("");
+        let justified = !justification.is_empty();
+        if !justified {
+            bad.push(Violation {
+                rule: "lint-allow",
+                line: c.line,
+                msg: "lint:allow without a justification".into(),
+                hint: "append ` -- <why this exception is sound>` to the directive",
+            });
+        }
+        allows.push(Allow { line: c.line, rules: names, justified });
+    }
+    (allows, bad)
+}
+
+/// Lint one source file given its path label (used for rule scoping —
+/// pass paths like `src/des/mod.rs`) and contents. Returns the
+/// unsuppressed violations, sorted by line then rule.
+pub fn lint_source(path_label: &str, src: &str) -> Vec<Violation> {
+    let path = path_label.replace('\\', "/");
+    let lexed = lexer::lex(src);
+    let rules = all_rules();
+    let known: Vec<&'static str> = rules.iter().map(|r| r.name()).collect();
+    let (allows, mut out) = parse_directives(&lexed.comments, &known);
+    for rule in &rules {
+        if !rule.applies(&path) {
+            continue;
+        }
+        for v in rule.check(&path, &lexed) {
+            let suppressed = allows.iter().any(|a| {
+                a.justified
+                    && a.rules.iter().any(|r| r == v.rule)
+                    && (v.line == a.line || v.line == a.line + 1)
+            });
+            if !suppressed {
+                out.push(v);
+            }
+        }
+    }
+    out.sort_by(|a, b| a.line.cmp(&b.line).then(a.rule.cmp(b.rule)));
+    out
+}
+
+/// The outcome of linting a set of paths.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// `(path, violation)` pairs, sorted by path then line.
+    pub violations: Vec<(String, Violation)>,
+}
+
+impl LintReport {
+    /// True when no violation was found.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Number of distinct files with at least one violation.
+    pub fn files_with_violations(&self) -> usize {
+        self.violations.iter().map(|(p, _)| p.as_str()).collect::<BTreeSet<_>>().len()
+    }
+}
+
+/// Recursively collect `.rs` files under `root` (or `root` itself when
+/// it is a file), sorted by path so output and exit codes are
+/// deterministic. `target/` and dot-directories are skipped.
+pub fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if root.is_file() {
+        if root.extension().map_or(false, |e| e == "rs") {
+            out.push(root.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(root)?.map(|e| e.map(|e| e.path())).collect::<Result<_, _>>()?;
+    entries.sort();
+    for path in entries {
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if path.is_dir() {
+            if name == "target" || name.starts_with('.') {
+                continue;
+            }
+            collect_rs_files(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under the given paths. Errors (missing path,
+/// unreadable file) surface as `Err` — the CLI maps them to exit 2.
+pub fn lint_paths(paths: &[PathBuf]) -> io::Result<LintReport> {
+    let mut files = Vec::new();
+    for p in paths {
+        if !p.exists() {
+            return Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                format!("no such path: {}", p.display()),
+            ));
+        }
+        collect_rs_files(p, &mut files)?;
+    }
+    let mut report = LintReport::default();
+    for f in &files {
+        let src = std::fs::read_to_string(f)?;
+        let label = f.to_string_lossy().replace('\\', "/");
+        report.files_scanned += 1;
+        for v in lint_source(&label, &src) {
+            report.violations.push((label.clone(), v));
+        }
+    }
+    report.violations.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.line.cmp(&b.1.line)));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_with_justification_suppresses_same_and_next_line() {
+        let src = "
+// lint:allow(wall-clock) -- CLI elapsed-time print, outermost shell
+let t0 = Instant::now();
+let t1 = Instant::now(); // lint:allow(wall-clock) -- same-line form
+let t2 = Instant::now();
+";
+        let got = lint_source("src/des/mod.rs", src);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].line, 5);
+    }
+
+    #[test]
+    fn allow_without_justification_is_itself_flagged_and_does_not_suppress() {
+        let src = "
+// lint:allow(wall-clock)
+let t0 = Instant::now();
+";
+        let got = lint_source("src/des/mod.rs", src);
+        let rules: Vec<&str> = got.iter().map(|v| v.rule).collect();
+        assert!(rules.contains(&"lint-allow"), "{got:?}");
+        assert!(rules.contains(&"wall-clock"), "unjustified allow must not suppress: {got:?}");
+    }
+
+    #[test]
+    fn allow_with_unknown_rule_is_flagged() {
+        let src = "// lint:allow(no-such-rule) -- oops\n";
+        let got = lint_source("src/x.rs", src);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].rule, "lint-allow");
+        assert!(got[0].msg.contains("no-such-rule"));
+    }
+
+    #[test]
+    fn violations_are_sorted_and_multi_rule() {
+        let src = "
+use std::collections::HashMap;
+fn f(v: &mut Vec<f64>) {
+    let t = Instant::now();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+";
+        let got = lint_source("src/des/mod.rs", src);
+        let rules: Vec<&str> = got.iter().map(|v| v.rule).collect();
+        assert_eq!(rules, vec!["hash-iter", "wall-clock", "float-ord"]);
+        let lines: Vec<u32> = got.iter().map(|v| v.line).collect();
+        assert!(lines.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn clean_source_is_clean() {
+        let src = "
+use std::collections::BTreeMap;
+fn f(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| a.total_cmp(b));
+}
+";
+        assert!(lint_source("src/des/mod.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,412 @@
+//! The five lint rules, each a token-pattern visitor over a lexed file.
+//!
+//! Every rule here is grounded in a bug class this repo has actually
+//! fixed by hand at least once (see `docs/ARCHITECTURE.md`, "Determinism
+//! invariants & lint rules"): the rules exist so the next regression is
+//! caught at lint time, not in a panic trace from a 10^5-consumer run.
+
+use super::lexer::Lexed;
+
+/// One rule violation: the rule name, the 1-based line, a message, and a
+/// `--fix-hints` suggestion.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    /// Rule identifier, e.g. `float-ord` (also the `lint:allow` key).
+    pub rule: &'static str,
+    /// 1-based source line of the offending token.
+    pub line: u32,
+    /// Human-readable description of what was matched.
+    pub msg: String,
+    /// Suggested fix, printed under `--fix-hints`.
+    pub hint: &'static str,
+}
+
+/// A lint rule: a name, a path scope, and a token-level check.
+pub trait Rule {
+    /// Stable rule identifier (used in output and in `lint:allow(...)`).
+    fn name(&self) -> &'static str;
+    /// Whether the rule runs on this file at all (path scoping).
+    fn applies(&self, path: &str) -> bool;
+    /// Scan a lexed file and return violations (unsuppressed; the engine
+    /// applies `lint:allow` afterwards).
+    fn check(&self, path: &str, lexed: &Lexed) -> Vec<Violation>;
+}
+
+/// The full rule registry, in reporting order.
+pub fn all_rules() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(FloatOrd),
+        Box::new(WallClock),
+        Box::new(HashIter),
+        Box::new(UnwrapBudget),
+        Box::new(NoUnsafe),
+    ]
+}
+
+/// True for integration-test and bench sources, which are wall-clock and
+/// panic-happy by nature; production-only rules skip them wholesale.
+pub fn is_test_path(path: &str) -> bool {
+    path.starts_with("tests/")
+        || path.contains("/tests/")
+        || path.starts_with("benches/")
+        || path.contains("/benches/")
+}
+
+fn path_in(path: &str, needles: &[&str]) -> bool {
+    needles.iter().any(|n| path.contains(n) || path.ends_with(n.trim_end_matches('/')))
+}
+
+/// Skip a balanced `(..)` group; `open` indexes the `(`. Returns the
+/// index one past the matching `)`.
+fn skip_paren_group(toks: &[super::lexer::Tok], open: usize) -> usize {
+    let mut j = open + 1;
+    let mut depth = 1i64;
+    while j < toks.len() && depth > 0 {
+        match toks[j].text.as_str() {
+            "(" => depth += 1,
+            ")" => depth -= 1,
+            _ => {}
+        }
+        j += 1;
+    }
+    j
+}
+
+/// **float-ord** — the NaN-panic rule.
+///
+/// Flags `partial_cmp(..).unwrap()` / `.expect(..)` chains anywhere
+/// (tests included: both live sites fixed in this PR were in test mods),
+/// plus any `partial_cmp` used inside a `sort_by` / `min_by` / `max_by`
+/// comparator, where a NaN either panics the comparator or silently
+/// breaks the total order the sort relies on.
+pub struct FloatOrd;
+
+const COMPARATOR_SINKS: &[&str] =
+    &["sort_by", "sort_unstable_by", "min_by", "max_by", "binary_search_by"];
+
+impl Rule for FloatOrd {
+    fn name(&self) -> &'static str {
+        "float-ord"
+    }
+    fn applies(&self, _path: &str) -> bool {
+        true
+    }
+    fn check(&self, _path: &str, lexed: &Lexed) -> Vec<Violation> {
+        let toks = &lexed.tokens;
+        let mut lines: Vec<u32> = Vec::new();
+        for i in 0..toks.len() {
+            let t = toks[i].text.as_str();
+            if t == "partial_cmp" {
+                // `fn partial_cmp` is the PartialOrd impl itself, not a use.
+                if i > 0 && toks[i - 1].text == "fn" {
+                    continue;
+                }
+                if toks.get(i + 1).map_or(true, |n| n.text != "(") {
+                    continue;
+                }
+                let after = skip_paren_group(toks, i + 1);
+                let dot = toks.get(after).map_or(false, |n| n.text == ".");
+                let panics = toks
+                    .get(after + 1)
+                    .map_or(false, |n| n.text == "unwrap" || n.text == "expect");
+                if dot && panics {
+                    lines.push(toks[i].line);
+                }
+            } else if COMPARATOR_SINKS.contains(&t)
+                && toks.get(i + 1).map_or(false, |n| n.text == "(")
+            {
+                let end = skip_paren_group(toks, i + 1);
+                for tok in &toks[i + 2..end.min(toks.len())] {
+                    if tok.text == "partial_cmp" {
+                        lines.push(tok.line);
+                    }
+                }
+            }
+        }
+        lines.sort_unstable();
+        lines.dedup();
+        lines
+            .into_iter()
+            .map(|line| Violation {
+                rule: self.name(),
+                line,
+                msg: "float comparison that panics or loses totality on NaN (partial_cmp in a \
+                      sort/min/max comparator or followed by unwrap/expect)"
+                    .into(),
+                hint: "order floats with f64::total_cmp, util::stats::nan_worst / \
+                       nan_worst_slice, or sort by a non-float key",
+            })
+            .collect()
+    }
+}
+
+/// **wall-clock** — the virtual-time determinism rule.
+///
+/// `Instant::now` / `SystemTime` reads are only meaningful in the
+/// real-I/O shell of the system. Inside the DES, the protocol state
+/// machines, the reshape controller or the engines they silently couple
+/// results to host timing and break bit-identical replay.
+pub struct WallClock;
+
+/// Modules allowed to read the wall clock: the external-process runner,
+/// the socket serving loop, the threaded runtime (real time *is* its
+/// clock), and log timestamping. Everything else gets time handed to it
+/// via `set_now`.
+pub const WALL_CLOCK_ALLOWLIST: &[&str] =
+    &["src/extproc/", "src/scheduler/net.rs", "src/scheduler/threads.rs", "src/util/log.rs"];
+
+impl Rule for WallClock {
+    fn name(&self) -> &'static str {
+        "wall-clock"
+    }
+    fn applies(&self, path: &str) -> bool {
+        !is_test_path(path) && !path_in(path, WALL_CLOCK_ALLOWLIST)
+    }
+    fn check(&self, _path: &str, lexed: &Lexed) -> Vec<Violation> {
+        let toks = &lexed.tokens;
+        let mut out = Vec::new();
+        for i in 0..toks.len() {
+            if toks[i].in_test {
+                continue;
+            }
+            let t = toks[i].text.as_str();
+            let instant_now = t == "Instant"
+                && toks.get(i + 1).map_or(false, |n| n.text == ":")
+                && toks.get(i + 2).map_or(false, |n| n.text == ":")
+                && toks.get(i + 3).map_or(false, |n| n.text == "now");
+            if instant_now || t == "SystemTime" {
+                out.push(Violation {
+                    rule: self.name(),
+                    line: toks[i].line,
+                    msg: format!(
+                        "wall-clock read ({}) outside the I/O allowlist breaks virtual-time \
+                         determinism",
+                        if instant_now { "Instant::now" } else { "SystemTime" }
+                    ),
+                    hint: "take time from the scheduler clock (set_now / DES virtual time) or \
+                           move the code into an allowlisted I/O module",
+                });
+            }
+        }
+        out
+    }
+}
+
+/// **hash-iter** — the iteration-order determinism rule.
+///
+/// `HashMap`/`HashSet` iteration order varies per process, so any use in
+/// a path that feeds DES event order or report output is a
+/// nondeterminism seed. The scoped files must use `BTreeMap`/`BTreeSet`
+/// (or justify a lookup-only map with `lint:allow`).
+pub struct HashIter;
+
+/// Deterministic-output paths: the DES, metrics/report building, and the
+/// session status surface.
+pub const HASH_ITER_SCOPE: &[&str] =
+    &["src/des/", "src/scheduler/metrics.rs", "src/engine/session.rs"];
+
+impl Rule for HashIter {
+    fn name(&self) -> &'static str {
+        "hash-iter"
+    }
+    fn applies(&self, path: &str) -> bool {
+        !is_test_path(path) && path_in(path, HASH_ITER_SCOPE)
+    }
+    fn check(&self, _path: &str, lexed: &Lexed) -> Vec<Violation> {
+        lexed
+            .tokens
+            .iter()
+            .filter(|t| !t.in_test && (t.text == "HashMap" || t.text == "HashSet"))
+            .map(|t| Violation {
+                rule: self.name(),
+                line: t.line,
+                msg: format!(
+                    "{} in a deterministic-output path: its iteration order is randomized per \
+                     process",
+                    t.text
+                ),
+                hint: "use BTreeMap/BTreeSet, or collect and sort before iterating",
+            })
+            .collect()
+    }
+}
+
+/// **unwrap-budget** — the no-panic-in-the-tree rule.
+///
+/// A panic in the protocol state machines, the wire codec or the tenancy
+/// layer tears down a whole subtree and loses every queued task in it.
+/// Non-test code there must bubble errors (`?`, `let .. else`, `match`)
+/// instead of `unwrap()`/`expect(..)`.
+pub struct UnwrapBudget;
+
+/// Panic-free zones: protocol state machines, transport, tenancy.
+pub const UNWRAP_BUDGET_SCOPE: &[&str] =
+    &["src/scheduler/protocol.rs", "src/transport/", "src/tenancy/"];
+
+impl Rule for UnwrapBudget {
+    fn name(&self) -> &'static str {
+        "unwrap-budget"
+    }
+    fn applies(&self, path: &str) -> bool {
+        !is_test_path(path) && path_in(path, UNWRAP_BUDGET_SCOPE)
+    }
+    fn check(&self, _path: &str, lexed: &Lexed) -> Vec<Violation> {
+        let toks = &lexed.tokens;
+        let mut out = Vec::new();
+        for i in 1..toks.len() {
+            if toks[i].in_test {
+                continue;
+            }
+            let t = toks[i].text.as_str();
+            if (t == "unwrap" || t == "expect")
+                && toks[i - 1].text == "."
+                && toks.get(i + 1).map_or(false, |n| n.text == "(")
+            {
+                out.push(Violation {
+                    rule: self.name(),
+                    line: toks[i].line,
+                    msg: format!(".{t}() in panic-free scheduler/transport/tenancy code"),
+                    hint: "bubble the error with `?`, `let .. else`, Option::filter or a match \
+                           — a panic here tears down the subtree and drops its queue",
+                });
+            }
+        }
+        out
+    }
+}
+
+/// **no-unsafe** — the memory-safety lock-in rule.
+///
+/// The crate is 100% safe Rust today; this keeps it that way by flagging
+/// any `unsafe` token and requiring `#![forbid(unsafe_code)]` in the
+/// crate root so the compiler enforces the same invariant.
+pub struct NoUnsafe;
+
+impl Rule for NoUnsafe {
+    fn name(&self) -> &'static str {
+        "no-unsafe"
+    }
+    fn applies(&self, _path: &str) -> bool {
+        true
+    }
+    fn check(&self, path: &str, lexed: &Lexed) -> Vec<Violation> {
+        let mut out = Vec::new();
+        for t in &lexed.tokens {
+            if t.text == "unsafe" {
+                out.push(Violation {
+                    rule: self.name(),
+                    line: t.line,
+                    msg: "`unsafe` in a crate that forbids unsafe_code".into(),
+                    hint: "find a safe formulation; the crate root sets #![forbid(unsafe_code)]",
+                });
+            }
+        }
+        if path.ends_with("src/lib.rs") {
+            let toks = &lexed.tokens;
+            let has_forbid = (0..toks.len()).any(|i| {
+                toks[i].text == "forbid"
+                    && toks.get(i + 1).map_or(false, |n| n.text == "(")
+                    && toks.get(i + 2).map_or(false, |n| n.text == "unsafe_code")
+            });
+            if !has_forbid {
+                out.push(Violation {
+                    rule: self.name(),
+                    line: 1,
+                    msg: "crate root is missing #![forbid(unsafe_code)]".into(),
+                    hint: "add `#![forbid(unsafe_code)]` at the top of src/lib.rs",
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn run(rule: &dyn Rule, path: &str, src: &str) -> Vec<Violation> {
+        if !rule.applies(path) {
+            return Vec::new();
+        }
+        rule.check(path, &lex(src))
+    }
+
+    #[test]
+    fn float_ord_flags_partial_cmp_unwrap_and_comparator_use() {
+        let bad = "fn f(v: &mut Vec<f64>) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }";
+        let got = run(&FloatOrd, "src/engine/x.rs", bad);
+        assert_eq!(got.len(), 1, "{got:?}");
+        // partial_cmp inside a comparator is flagged even without unwrap.
+        let sneaky =
+            "fn f(v: &mut Vec<f64>) { v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)); }";
+        assert_eq!(run(&FloatOrd, "src/engine/x.rs", sneaky).len(), 1);
+        let clean = "fn f(v: &mut Vec<f64>) { v.sort_by(|a, b| a.total_cmp(b)); }";
+        assert!(run(&FloatOrd, "src/engine/x.rs", clean).is_empty());
+        // The PartialOrd impl itself is not a use.
+        let imp = "impl PartialOrd for X { fn partial_cmp(&self, o: &X) -> Option<Ordering> { Some(self.cmp(o)) } }";
+        assert!(run(&FloatOrd, "src/x.rs", imp).is_empty());
+        // Applies inside test mods too: that is where both live sites were.
+        let in_test =
+            "#[cfg(test)] mod tests { fn t() { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); } }";
+        assert_eq!(run(&FloatOrd, "src/x.rs", in_test).len(), 1);
+    }
+
+    #[test]
+    fn wall_clock_respects_allowlist_and_test_code() {
+        let bad = "fn f() { let t = Instant::now(); }";
+        assert_eq!(run(&WallClock, "src/des/mod.rs", bad).len(), 1);
+        assert_eq!(run(&WallClock, "src/scheduler/protocol.rs", bad).len(), 1);
+        assert!(run(&WallClock, "src/scheduler/threads.rs", bad).is_empty());
+        assert!(run(&WallClock, "src/util/log.rs", bad).is_empty());
+        assert!(run(&WallClock, "tests/integration.rs", bad).is_empty());
+        assert!(run(&WallClock, "benches/overhead.rs", bad).is_empty());
+        let in_test = "#[cfg(test)] mod tests { fn t() { let t = Instant::now(); } }";
+        assert!(run(&WallClock, "src/des/mod.rs", in_test).is_empty());
+        let sys = "fn f() { let t = SystemTime::now(); }";
+        assert_eq!(run(&WallClock, "src/engine/sweep.rs", sys).len(), 1);
+    }
+
+    #[test]
+    fn hash_iter_is_scoped_to_deterministic_paths() {
+        let bad = "use std::collections::HashMap; struct S { m: HashMap<u32, u32> }";
+        assert_eq!(run(&HashIter, "src/des/mod.rs", bad).len(), 2);
+        assert_eq!(run(&HashIter, "src/scheduler/metrics.rs", bad).len(), 2);
+        assert_eq!(run(&HashIter, "src/engine/session.rs", bad).len(), 2);
+        // Out of scope: fine.
+        assert!(run(&HashIter, "src/engine/nsga2.rs", bad).is_empty());
+        let clean = "use std::collections::BTreeMap; struct S { m: BTreeMap<u32, u32> }";
+        assert!(run(&HashIter, "src/des/mod.rs", clean).is_empty());
+    }
+
+    #[test]
+    fn unwrap_budget_skips_tests_and_other_modules() {
+        let bad = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        assert_eq!(run(&UnwrapBudget, "src/scheduler/protocol.rs", bad).len(), 1);
+        assert_eq!(run(&UnwrapBudget, "src/transport/wire.rs", bad).len(), 1);
+        assert_eq!(run(&UnwrapBudget, "src/tenancy/mod.rs", bad).len(), 1);
+        assert!(run(&UnwrapBudget, "src/engine/sweep.rs", bad).is_empty());
+        let in_test = "#[cfg(test)] mod tests { fn t() { x.unwrap(); y.expect(\"msg\"); } }";
+        assert!(run(&UnwrapBudget, "src/scheduler/protocol.rs", in_test).is_empty());
+        // unwrap_or and friends are fine.
+        let ok = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }";
+        assert!(run(&UnwrapBudget, "src/scheduler/protocol.rs", ok).is_empty());
+        let exp = "fn f(x: Option<u32>) -> u32 { x.expect(\"always\") }";
+        assert_eq!(run(&UnwrapBudget, "src/scheduler/protocol.rs", exp).len(), 1);
+    }
+
+    #[test]
+    fn no_unsafe_flags_blocks_and_missing_forbid() {
+        let bad = "fn f() { unsafe { std::hint::unreachable_unchecked() } }";
+        assert_eq!(run(&NoUnsafe, "src/util/rng.rs", bad).len(), 1);
+        // A lib.rs without the forbid attribute is itself a violation.
+        let plain_lib = "pub mod util;";
+        let got = run(&NoUnsafe, "src/lib.rs", plain_lib);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].msg.contains("forbid"));
+        let good_lib = "#![forbid(unsafe_code)]\npub mod util;";
+        assert!(run(&NoUnsafe, "src/lib.rs", good_lib).is_empty());
+        // `unsafe_code` inside the attribute is not the `unsafe` keyword.
+    }
+}

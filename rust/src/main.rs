@@ -10,6 +10,8 @@
 //!   des             DES filling-rate experiment (Fig. 3 point)
 //!   evac            evaluate one random evacuation plan (tiny|mini)
 //!   info            print artifact + scenario inventory
+//!   lint            determinism & NaN-safety static analysis over the
+//!                   crate's own sources (exit 1 on violations; CI gates)
 //!
 //! Examples:
 //!   caravan run "sh -c 'echo 1 > _results.txt'" --n 32 --np 4 --retries 2
@@ -19,6 +21,7 @@
 //!   caravan des --np 1024 --tc 2 --tasks-per-proc 100
 //!   caravan evac --variant tiny --backend pjrt --seed 3
 //!   caravan info
+//!   caravan lint --fix-hints rust/src
 
 use std::sync::Arc;
 
@@ -98,7 +101,7 @@ impl Executor for WorkerExecutor {
 
 fn usage() {
     eprintln!(
-        "usage: caravan <run|worker|des|evac|info> [--options] (--help prints this)
+        "usage: caravan <run|worker|des|evac|info|lint> [--options] (--help prints this)
 
   run '<cmdline>'   run an external command through the scheduler
       --n N           number of tasks (default 10)
@@ -168,7 +171,16 @@ fn usage() {
 
   info              print artifact + scenario inventory
       --artifacts DIR     artifact directory to inspect (default
-                          'artifacts')"
+                          'artifacts')
+
+  lint [PATHS..]    static-analysis pass over the crate's own sources:
+                    determinism & NaN-safety rules (float-ord,
+                    wall-clock, hash-iter, unwrap-budget, no-unsafe).
+                    With no PATHS, scans rust/src + rust/tests +
+                    rust/benches (or src/tests/benches from inside
+                    rust/). Exit 0 clean, 1 on violations, 2 on
+                    usage/IO errors.
+      --fix-hints     print a suggested fix under every violation"
     );
 }
 
@@ -254,6 +266,7 @@ fn main() {
         Some("des") => cmd_des(&args),
         Some("evac") => cmd_evac(&args),
         Some("info") => cmd_info(&args),
+        Some("lint") => cmd_lint(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}");
@@ -439,6 +452,7 @@ fn cmd_des(args: &Args) {
             })
             .collect();
     }
+    // lint:allow(wall-clock) -- outermost CLI shell timing the whole DES run for display; never feeds results
     let t0 = std::time::Instant::now();
     let r = run_des(
         &cfg,
@@ -502,6 +516,7 @@ fn cmd_evac(args: &Args) {
     let ev = EvacEvaluator::new(Arc::clone(&sc), backend);
     let mut rng = Pcg64::new(args.get_u64("seed", 0));
     let genome: Vec<f64> = ev.bounds().iter().map(|&(lo, hi)| rng.range_f64(lo, hi)).collect();
+    // lint:allow(wall-clock) -- outermost CLI shell timing one evaluation for display; never feeds results
     let t0 = std::time::Instant::now();
     let [f1, f2, f3] = ev.evaluate(&genome, args.get_u64("seed", 0));
     println!(
@@ -541,5 +556,60 @@ fn cmd_info(args: &Args) {
             sc.total_population(),
             sc.total_capacity()
         );
+    }
+}
+
+/// `caravan lint [--fix-hints] [PATHS..]` — run the determinism &
+/// NaN-safety static-analysis pass (see `caravan::lint`). With no PATHS
+/// it scans the crate's own sources relative to the current directory:
+/// `rust/{src,tests,benches}` from the repo root, `{src,tests,benches}`
+/// from inside `rust/`. Exit 0 on a clean tree, 1 on violations, 2 on
+/// usage or IO errors — CI gates on this.
+fn cmd_lint(args: &Args) {
+    let mut fix_hints = args.has_flag("fix-hints");
+    let mut roots: Vec<std::path::PathBuf> =
+        args.positional().iter().map(std::path::PathBuf::from).collect();
+    // `lint --fix-hints PATH`: the parser reads PATH as the flag's value;
+    // reclaim it as a root so both argument orders work.
+    if let Ok(Some(v)) = args.try_opt("fix-hints") {
+        fix_hints = true;
+        roots.push(std::path::PathBuf::from(v));
+    }
+    if roots.is_empty() {
+        for cand in ["rust/src", "rust/tests", "rust/benches", "src", "tests", "benches"] {
+            let p = std::path::PathBuf::from(cand);
+            if p.is_dir() {
+                roots.push(p);
+            }
+        }
+    }
+    if roots.is_empty() {
+        eprintln!("caravan lint: no sources found here (pass PATHS explicitly)");
+        std::process::exit(2);
+    }
+    match caravan::lint::lint_paths(&roots) {
+        Err(e) => {
+            eprintln!("caravan lint: {e}");
+            std::process::exit(2);
+        }
+        Ok(report) => {
+            for (path, v) in &report.violations {
+                println!("{path}:{}: [{}] {}", v.line, v.rule, v.msg);
+                if fix_hints {
+                    println!("    hint: {}", v.hint);
+                }
+            }
+            if report.is_clean() {
+                println!("caravan lint: clean ({} files)", report.files_scanned);
+            } else {
+                println!(
+                    "caravan lint: {} violation(s) in {} file(s) ({} files scanned)",
+                    report.violations.len(),
+                    report.files_with_violations(),
+                    report.files_scanned
+                );
+                std::process::exit(1);
+            }
+        }
     }
 }

@@ -260,8 +260,10 @@ impl FillingRate {
     /// consumer may overlap (a consumer runs one task at a time).
     /// Returns the number of violations.
     pub fn overlap_violations(&self) -> usize {
-        let mut by_consumer: std::collections::HashMap<usize, Vec<(f64, f64)>> =
-            std::collections::HashMap::new();
+        // BTreeMap so the scan order (and any future tie-broken output)
+        // is deterministic — this module builds report data.
+        let mut by_consumer: std::collections::BTreeMap<usize, Vec<(f64, f64)>> =
+            std::collections::BTreeMap::new();
         for iv in &self.intervals {
             by_consumer.entry(iv.consumer).or_default().push((iv.begin, iv.finish));
         }

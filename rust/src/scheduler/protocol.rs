@@ -180,7 +180,7 @@ impl Lane {
             SchedPolicy::Aging { step } => {
                 let mut best: Option<(u64, Reverse<u8>)> = None;
                 for (band, sub) in &self.bands {
-                    let head = sub.values().next().expect("bands are never empty");
+                    let Some(head) = sub.values().next() else { continue };
                     let wait = (now - head.enqueued_t.unwrap_or(now)).max(0.0);
                     let boost =
                         if step > 0.0 { ((wait / step) as u64).min(u8::MAX as u64) } else { 0 };
@@ -211,8 +211,8 @@ impl Lane {
     /// One task off the coldest end (no dispatch accounting).
     fn take_back_one(&mut self) -> Option<TaskSpec> {
         let band = *self.bands.keys().next_back()?;
-        let sub = self.bands.get_mut(&band).expect("band key just observed");
-        let (_, t) = sub.pop_last().expect("bands are never empty");
+        let sub = self.bands.get_mut(&band)?;
+        let (_, t) = sub.pop_last()?;
         if sub.is_empty() {
             self.bands.remove(&band);
         }
@@ -231,7 +231,7 @@ impl Lane {
             }
         }
         let (band, key) = hit?;
-        let sub = self.bands.get_mut(&band).expect("band key just observed");
+        let sub = self.bands.get_mut(&band)?;
         let task = sub.remove(&key);
         if sub.is_empty() {
             self.bands.remove(&band);
@@ -406,15 +406,15 @@ impl PrioQueue {
         let class = match serving {
             Some(c) => c,
             None => {
-                let c = self.next_nonempty(self.cursor).expect("len > 0 ⇒ a non-empty lane");
+                let c = self.next_nonempty(self.cursor)?;
                 self.cursor = Some(c);
                 self.quantum = self.classes.weight(c);
                 c
             }
         };
         self.quantum -= 1;
-        let lane = self.lanes.get_mut(&class).expect("serving lane exists");
-        let task = lane.pop_front(self.now).expect("serving lane is non-empty");
+        let lane = self.lanes.get_mut(&class)?;
+        let task = lane.pop_front(self.now)?;
         self.len -= 1;
         Some(task)
     }
@@ -449,8 +449,8 @@ impl PrioQueue {
                 Some(c) => c,
                 None => break,
             };
-            let lane = self.lanes.get_mut(&class).expect("victim lane exists");
-            let t = lane.take_back_one().expect("victim lane is non-empty");
+            let Some(lane) = self.lanes.get_mut(&class) else { break };
+            let Some(t) = lane.take_back_one() else { break };
             self.len -= 1;
             out.push(t);
         }
@@ -1331,24 +1331,25 @@ impl BufferState {
             Some(slot) => {
                 result.attempt = slot.attempt;
                 // Cancelled (killed) attempts are exempt from retry.
+                // `retry_spec` is Some exactly when the attempt failed
+                // *and* the tracked spec still has retry budget.
                 let failed = result.rc != 0 && result.rc != RC_CANCELLED;
-                let has_budget =
-                    slot.spec.as_ref().map_or(false, |s| s.attempt < s.max_retries);
-                if failed && has_budget && cancel_pending {
-                    // The attempt failed naturally while a cancel was
-                    // pending: honour the cancel instead of burning a
-                    // retry on a dead task.
-                    let spec = slot.spec.expect("retry budget implies tracked spec");
-                    self.cancelled_dropped += 1;
-                    self.store.push(TaskResult::cancelled_for(&spec));
-                } else if failed && has_budget {
-                    let mut spec = slot.spec.expect("retry budget implies tracked spec");
-                    spec.attempt += 1;
-                    self.retried += 1;
-                    self.queue.push(spec);
-                    self.max_queue = self.max_queue.max(self.queue.len());
-                } else {
-                    self.store.push(result);
+                let retry_spec = slot.spec.filter(|s| failed && s.attempt < s.max_retries);
+                match retry_spec {
+                    Some(spec) if cancel_pending => {
+                        // The attempt failed naturally while a cancel was
+                        // pending: honour the cancel instead of burning a
+                        // retry on a dead task.
+                        self.cancelled_dropped += 1;
+                        self.store.push(TaskResult::cancelled_for(&spec));
+                    }
+                    Some(mut spec) => {
+                        spec.attempt += 1;
+                        self.retried += 1;
+                        self.queue.push(spec);
+                        self.max_queue = self.max_queue.max(self.queue.len());
+                    }
+                    None => self.store.push(result),
                 }
             }
             // No tracked slot (e.g. a unit test driving Done directly):
@@ -1730,9 +1731,12 @@ impl BufferState {
         match &mut self.children {
             Children::Consumers { idle, running, .. } => {
                 let mut out = Vec::new();
-                while !self.queue.is_empty() && !idle.is_empty() {
-                    let consumer = idle.pop_front().unwrap();
-                    let task = self.queue.pop().unwrap();
+                while !self.queue.is_empty() {
+                    let Some(consumer) = idle.pop_front() else { break };
+                    let Some(task) = self.queue.pop() else {
+                        idle.push_front(consumer);
+                        break;
+                    };
                     running[consumer] = Some(RunningTask::track(&task));
                     self.msgs_out += 1;
                     out.push(BufferAction::RunOn { consumer, task });
@@ -1780,27 +1784,33 @@ impl BufferState {
         }
         let amount = self.credit_bound() - level;
         if self.steal_enabled && !self.steal_tried && self.steal_outstanding == 0 {
+            // One steal probe per low-water episode; with no sibling to
+            // rob (next_victim None) fall through to a parent request.
             self.steal_tried = true;
-            self.steal_outstanding = amount;
-            self.steals_attempted += 1;
-            let victim = self.next_victim();
-            self.msgs_out += 1;
-            vec![BufferAction::StealRequest { victim, amount }]
-        } else {
-            self.outstanding_request += amount;
-            self.msgs_out += 1;
-            // Stamp the start of the (oldest outstanding) round trip.
-            if self.request_sent_t.is_none() {
-                self.request_sent_t = Some(self.now);
+            if let Some(victim) = self.next_victim() {
+                self.steal_outstanding = amount;
+                self.steals_attempted += 1;
+                self.msgs_out += 1;
+                return vec![BufferAction::StealRequest { victim, amount }];
             }
-            vec![BufferAction::RequestTasks { amount }]
         }
+        self.outstanding_request += amount;
+        self.msgs_out += 1;
+        // Stamp the start of the (oldest outstanding) round trip.
+        if self.request_sent_t.is_none() {
+            self.request_sent_t = Some(self.now);
+        }
+        vec![BufferAction::RequestTasks { amount }]
     }
 
     /// Pick the steal victim: blind rotation (`RoundRobin`) or the sibling
     /// with the deepest known queue (`DeepestQueue`; unknown = deepest, so
     /// early attempts explore in rotation before exploiting estimates).
-    fn next_victim(&mut self) -> usize {
+    /// `None` when the node has no sibling to rob.
+    fn next_victim(&mut self) -> Option<usize> {
+        if self.n_siblings == 0 {
+            return None;
+        }
         let total = self.n_siblings + 1;
         match self.steal_policy {
             StealPolicy::RoundRobin => {
@@ -1808,7 +1818,7 @@ impl BufferState {
                 if self.steal_cursor == self.my_slot {
                     self.steal_cursor = (self.steal_cursor + 1) % total;
                 }
-                self.steal_cursor
+                Some(self.steal_cursor)
             }
             StealPolicy::DeepestQueue => {
                 let mut best: Option<usize> = None;
@@ -1824,9 +1834,9 @@ impl BufferState {
                         best_depth = d;
                     }
                 }
-                let victim = best.expect("stealing enabled implies at least one sibling");
+                let victim = best?;
                 self.steal_cursor = victim;
-                victim
+                Some(victim)
             }
         }
     }
@@ -2653,7 +2663,7 @@ mod tests {
         let mut b = BufferState::new(1, 1, 100).with_stealing(1, 3, StealPolicy::RoundRobin);
         let mut seen = Vec::new();
         for _ in 0..6 {
-            seen.push(b.next_victim());
+            seen.push(b.next_victim().expect("3 siblings"));
         }
         assert!(!seen.contains(&1), "{seen:?}");
         assert_eq!(seen, vec![2, 3, 0, 2, 3, 0]);
@@ -2663,18 +2673,18 @@ mod tests {
     fn deepest_queue_explores_then_picks_deepest_known() {
         let mut b = BufferState::new(1, 1, 100).with_stealing(1, 3, StealPolicy::DeepestQueue);
         // All unknown: explores in rotation, skipping self.
-        assert_eq!(b.next_victim(), 2);
-        assert_eq!(b.next_victim(), 3);
-        assert_eq!(b.next_victim(), 0);
+        assert_eq!(b.next_victim(), Some(2));
+        assert_eq!(b.next_victim(), Some(3));
+        assert_eq!(b.next_victim(), Some(0));
         // Learn depths from grants: slot 2 empty, slot 0 deep, slot 3 shallow.
         b.on_steal_grant(2, 0, Vec::new(), Vec::new());
         b.on_steal_grant(0, 4, Vec::new(), vec![task(90)]);
         b.on_steal_grant(3, 1, Vec::new(), vec![task(91)]);
-        assert_eq!(b.next_victim(), 0);
-        assert_eq!(b.next_victim(), 0, "sticks to the deepest known sibling");
+        assert_eq!(b.next_victim(), Some(0));
+        assert_eq!(b.next_victim(), Some(0), "sticks to the deepest known sibling");
         // An incoming steal request marks that thief as starved.
         b.on_steal_request(0, 0, 1);
-        assert_eq!(b.next_victim(), 3);
+        assert_eq!(b.next_victim(), Some(3));
     }
 
     #[test]

@@ -254,6 +254,7 @@ impl Transport for SocketTransport {
     }
 
     fn recv_timeout(&mut self, timeout: Duration) -> Result<WireMsg, TransportError> {
+        // lint:allow(wall-clock) -- socket read deadline: real I/O budget, not simulation time
         let deadline = Instant::now() + timeout;
         let mut buf = [0u8; 8192];
         loop {
@@ -263,6 +264,7 @@ impl Transport for SocketTransport {
                 self.counters.msgs_in.fetch_add(1, Ordering::Relaxed);
                 return Ok(msg);
             }
+            // lint:allow(wall-clock) -- socket read deadline: real I/O budget, not simulation time
             let now = Instant::now();
             if now >= deadline {
                 return Err(TransportError::Timeout);

@@ -19,6 +19,22 @@ pub fn nan_worst(a: f64, b: f64) -> std::cmp::Ordering {
     }
 }
 
+/// Lexicographic [`nan_worst`] over `f64` slices: element-wise total
+/// order with NaN ranked worst at every position, shorter prefix first.
+/// The comparator to hand `sort_by` for point lists (`Vec<Vec<f64>>`)
+/// where `partial_cmp().unwrap()` would panic on a single NaN
+/// coordinate.
+pub fn nan_worst_slice(a: &[f64], b: &[f64]) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let o = nan_worst(*x, *y);
+        if o != Ordering::Equal {
+            return o;
+        }
+    }
+    a.len().cmp(&b.len())
+}
+
 /// [`nan_worst`] for `f32`.
 pub fn nan_worst_f32(a: f32, b: f32) -> std::cmp::Ordering {
     use std::cmp::Ordering;
@@ -254,6 +270,22 @@ mod tests {
         let s = Summary::of(&xs);
         assert_eq!(s.n, 4);
         assert!((s.min - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_worst_slice_is_lexicographic_and_nan_safe() {
+        use std::cmp::Ordering;
+        assert_eq!(nan_worst_slice(&[0.0, 1.0], &[0.0, 2.0]), Ordering::Less);
+        assert_eq!(nan_worst_slice(&[1.0], &[1.0]), Ordering::Equal);
+        // Shorter prefix ranks first.
+        assert_eq!(nan_worst_slice(&[1.0], &[1.0, 0.0]), Ordering::Less);
+        // NaN ranks worst at any position instead of panicking the sort.
+        assert_eq!(nan_worst_slice(&[f64::NAN, 0.0], &[9.0, 9.0]), Ordering::Greater);
+        assert_eq!(nan_worst_slice(&[0.0, f64::NAN], &[0.0, 9.0]), Ordering::Greater);
+        let mut pts = vec![vec![1.0, f64::NAN], vec![0.0, 0.0], vec![f64::NAN, 0.0]];
+        pts.sort_by(|a, b| nan_worst_slice(a, b));
+        assert_eq!(pts[0], vec![0.0, 0.0]);
+        assert!(pts[2][0].is_nan(), "whole-slice NaN head sorts last");
     }
 
     #[test]

@@ -1,0 +1,272 @@
+//! Integration tests for `caravan lint` (Issue 8): fixture snippets per
+//! rule (violating / clean / allow-escaped), the CLI exit-code contract,
+//! the self-check that the lint passes on the repo's own sources, and
+//! the DES determinism property the `hash-iter` rule exists to protect.
+//!
+//! The fixtures live in `tests/fixtures/lint/*.txt` — a non-`.rs`
+//! extension, so the directory walker never scans them and the
+//! violations they contain can't fail the self-check. Rule scoping is
+//! path-based, so each fixture is linted under a representative label
+//! like `src/des/mod.rs`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use caravan::des::{run_des, ConstResults, DesConfig};
+use caravan::engine::{GridEngine, McmcConfig, McmcEngine};
+use caravan::lint::{lint_paths, lint_source};
+
+// ---------------------------------------------------------------- fixtures
+
+/// Lint a fixture under a path label and return the rule names hit.
+fn rules_hit(label: &str, src: &str) -> Vec<&'static str> {
+    lint_source(label, src).into_iter().map(|v| v.rule).collect()
+}
+
+#[test]
+fn float_ord_fixtures() {
+    let bad = include_str!("fixtures/lint/float_ord_violation.txt");
+    let got = lint_source("src/engine/sweep.rs", bad);
+    assert_eq!(got.len(), 1, "{got:?}");
+    assert_eq!(got[0].rule, "float-ord");
+    assert_eq!(got[0].line, 3);
+    let clean = include_str!("fixtures/lint/float_ord_clean.txt");
+    assert!(rules_hit("src/engine/sweep.rs", clean).is_empty());
+    let allowed = include_str!("fixtures/lint/float_ord_allowed.txt");
+    assert!(rules_hit("src/engine/sweep.rs", allowed).is_empty());
+}
+
+#[test]
+fn wall_clock_fixtures() {
+    let bad = include_str!("fixtures/lint/wall_clock_violation.txt");
+    let got = lint_source("src/des/mod.rs", bad);
+    assert_eq!(got.len(), 1, "{got:?}");
+    assert_eq!(got[0].rule, "wall-clock");
+    // The same source is fine in an allowlisted I/O module.
+    assert!(rules_hit("src/scheduler/net.rs", bad).is_empty());
+    let clean = include_str!("fixtures/lint/wall_clock_clean.txt");
+    assert!(rules_hit("src/des/mod.rs", clean).is_empty());
+    let allowed = include_str!("fixtures/lint/wall_clock_allowed.txt");
+    assert!(rules_hit("src/des/mod.rs", allowed).is_empty());
+}
+
+#[test]
+fn hash_iter_fixtures() {
+    let bad = include_str!("fixtures/lint/hash_iter_violation.txt");
+    let got = lint_source("src/des/mod.rs", bad);
+    assert_eq!(got.len(), 3, "one per HashMap token: {got:?}");
+    assert!(got.iter().all(|v| v.rule == "hash-iter"));
+    // Out of the deterministic-output scope the rule does not run.
+    assert!(rules_hit("src/transport/wire.rs", bad).is_empty());
+    let clean = include_str!("fixtures/lint/hash_iter_clean.txt");
+    assert!(rules_hit("src/des/mod.rs", clean).is_empty());
+    let allowed = include_str!("fixtures/lint/hash_iter_allowed.txt");
+    assert!(rules_hit("src/des/mod.rs", allowed).is_empty());
+}
+
+#[test]
+fn unwrap_budget_fixtures() {
+    let bad = include_str!("fixtures/lint/unwrap_budget_violation.txt");
+    let got = lint_source("src/transport/wire.rs", bad);
+    assert_eq!(got.len(), 1, "{got:?}");
+    assert_eq!(got[0].rule, "unwrap-budget");
+    // The budget only applies to the panic-free zones.
+    assert!(rules_hit("src/engine/sweep.rs", bad).is_empty());
+    let clean = include_str!("fixtures/lint/unwrap_budget_clean.txt");
+    assert!(rules_hit("src/transport/wire.rs", clean).is_empty());
+    let allowed = include_str!("fixtures/lint/unwrap_budget_allowed.txt");
+    assert!(rules_hit("src/transport/wire.rs", allowed).is_empty());
+}
+
+#[test]
+fn no_unsafe_fixtures() {
+    let bad = include_str!("fixtures/lint/no_unsafe_violation.txt");
+    let got = lint_source("src/util/rng.rs", bad);
+    assert_eq!(got.len(), 1, "{got:?}");
+    assert_eq!(got[0].rule, "no-unsafe");
+    let clean = include_str!("fixtures/lint/no_unsafe_clean.txt");
+    assert!(rules_hit("src/lib.rs", clean).is_empty());
+    let allowed = include_str!("fixtures/lint/no_unsafe_allowed.txt");
+    assert!(rules_hit("src/util/rng.rs", allowed).is_empty());
+    // A crate root without the forbid attribute is itself a violation.
+    let bare_root = lint_source("src/lib.rs", "pub mod util;\n");
+    assert_eq!(bare_root.len(), 1);
+    assert_eq!(bare_root[0].rule, "no-unsafe");
+    assert!(bare_root[0].msg.contains("forbid"));
+}
+
+// ------------------------------------------------------- exit-code contract
+
+/// A throwaway source tree under the OS temp dir, removed on drop.
+struct TempTree(PathBuf);
+
+impl TempTree {
+    fn new(name: &str, files: &[(&str, &str)]) -> Self {
+        let root =
+            std::env::temp_dir().join(format!("caravan-lint-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        for (rel, contents) in files {
+            let path = root.join(rel);
+            fs::create_dir_all(path.parent().expect("file under root")).expect("mkdir");
+            fs::write(&path, contents).expect("write fixture");
+        }
+        fs::create_dir_all(&root).expect("mkdir root");
+        TempTree(root)
+    }
+
+    fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for TempTree {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.0);
+    }
+}
+
+fn lint_cmd() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_caravan"))
+}
+
+const VIOLATING_RS: &str = "fn f() -> u64 {\n    let t0 = Instant::now();\n    let _ = t0;\n    0\n}\n";
+const CLEAN_RS: &str = "pub fn add(a: u64, b: u64) -> u64 {\n    a + b\n}\n";
+
+#[test]
+fn cli_exits_one_on_violations() {
+    let tree = TempTree::new("violating", &[("src/bad.rs", VIOLATING_RS)]);
+    let out = lint_cmd().arg("lint").arg(tree.path()).output().expect("spawn caravan");
+    assert_eq!(out.status.code(), Some(1), "{out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("[wall-clock]"), "{stdout}");
+    assert!(stdout.contains("violation"), "{stdout}");
+    assert!(!stdout.contains("hint:"), "hints are opt-in: {stdout}");
+}
+
+#[test]
+fn cli_exits_zero_on_clean_tree() {
+    let tree = TempTree::new("clean", &[("src/ok.rs", CLEAN_RS)]);
+    let out = lint_cmd().arg("lint").arg(tree.path()).output().expect("spawn caravan");
+    assert_eq!(out.status.code(), Some(0), "{out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("clean (1 files)"), "{stdout}");
+}
+
+#[test]
+fn cli_exits_two_on_missing_path() {
+    let missing = std::env::temp_dir().join("caravan-lint-no-such-dir-zzz");
+    let _ = fs::remove_dir_all(&missing);
+    let out = lint_cmd().arg("lint").arg(&missing).output().expect("spawn caravan");
+    assert_eq!(out.status.code(), Some(2), "{out:?}");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("no such path"), "{stderr}");
+}
+
+#[test]
+fn cli_exits_two_when_no_sources_found() {
+    let tree = TempTree::new("empty", &[]);
+    let out = lint_cmd()
+        .arg("lint")
+        .current_dir(tree.path())
+        .output()
+        .expect("spawn caravan");
+    assert_eq!(out.status.code(), Some(2), "{out:?}");
+}
+
+#[test]
+fn cli_fix_hints_prints_hints_in_either_arg_order() {
+    let tree = TempTree::new("hints", &[("src/bad.rs", VIOLATING_RS)]);
+    for argv in [
+        vec!["lint".to_string(), tree.path().display().to_string(), "--fix-hints".into()],
+        vec!["lint".to_string(), "--fix-hints".into(), tree.path().display().to_string()],
+    ] {
+        let out = lint_cmd().args(&argv).output().expect("spawn caravan");
+        assert_eq!(out.status.code(), Some(1), "{argv:?}: {out:?}");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(stdout.contains("hint:"), "{argv:?}: {stdout}");
+    }
+}
+
+// --------------------------------------------------------------- self-check
+
+/// `caravan lint` must pass on the repo's own sources — the tree this PR
+/// swept clean stays clean, or this test (and the CI gate) fails.
+#[test]
+fn lint_is_clean_on_own_sources() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut paths = vec![manifest.join("src")];
+    for extra in ["tests", "benches"] {
+        let p = manifest.join(extra);
+        if p.is_dir() {
+            paths.push(p);
+        }
+    }
+    let report = lint_paths(&paths).expect("lint own tree");
+    assert!(report.files_scanned > 40, "walked the real tree: {}", report.files_scanned);
+    let mut listing = String::new();
+    for (path, v) in &report.violations {
+        listing.push_str(&format!("{path}:{}: [{}] {}\n", v.line, v.rule, v.msg));
+    }
+    assert!(report.is_clean(), "caravan lint must pass on its own sources:\n{listing}");
+}
+
+// ------------------------------------------------- determinism (satellite 2)
+
+/// Everything a report prints, folded into one comparable string.
+fn report_fingerprint(r: &caravan::des::DesReport) -> String {
+    format!(
+        "{:?}|{:?}|{}|{}|{}|{}|{}|{:?}|{:?}|{:?}|{}",
+        r.results,
+        r.filling.intervals(),
+        r.makespan,
+        r.events_processed,
+        r.producer_msgs_in,
+        r.producer_msgs_out,
+        r.max_producer_lag,
+        r.node_stats,
+        r.retired_node_stats,
+        r.level_fill,
+        r.filling.overlap_violations(),
+    )
+}
+
+/// Two identical runs must produce byte-identical reports — the
+/// determinism property the BTreeMap sweep (des/, metrics, session)
+/// protects. A reintroduced HashMap iteration would flake this test.
+#[test]
+fn des_report_is_identical_across_grid_runs() {
+    let run = || {
+        let (engine, outcome) = GridEngine::new(vec![vec![0.0, 0.5, 1.0]; 3], 7);
+        let r = run_des(
+            &DesConfig::new(16),
+            Box::new(engine),
+            Box::new(ConstResults::new(1.0, 2.0, 2, 0)),
+        );
+        let points = format!("{:?}", outcome.lock().expect("outcome"));
+        (report_fingerprint(&r), points)
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.0, b.0, "grid DES report must be bit-identical");
+    assert_eq!(a.1, b.1, "grid outcome order must be bit-identical");
+}
+
+#[test]
+fn des_report_is_identical_across_mcmc_runs() {
+    // MCMC exercises the dynamic callback path: every completion submits
+    // the next proposal, so event ordering feeds back into the schedule.
+    let run = || {
+        let mut cfg = McmcConfig::new(vec![(0.0, 1.0); 2]);
+        cfg.walkers = 3;
+        cfg.steps = 25;
+        cfg.seed = 5;
+        let (engine, _outcome) = McmcEngine::new(cfg);
+        let r = run_des(
+            &DesConfig::new(8),
+            Box::new(engine),
+            Box::new(ConstResults::new(1.0, 2.0, 1, 0)),
+        );
+        report_fingerprint(&r)
+    };
+    assert_eq!(run(), run(), "MCMC DES report must be bit-identical");
+}
