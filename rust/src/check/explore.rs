@@ -1,0 +1,883 @@
+//! The model harness and state-space exploration: a [`Model`] holds the
+//! pure protocol state machines plus per-directed-edge message FIFOs,
+//! [`Event`]s advance it one atomic step at a time, and [`dfs`]/[`fuzz`]
+//! drive the interleavings.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::rc::Rc;
+
+use crate::config::{SchedulerConfig, TreeNodeKind, TreeTopology};
+use crate::scheduler::protocol::{
+    route_buffer_actions, route_producer_actions, BufferState, LocalEffect, ProducerState,
+    Party, ProtoMsg,
+};
+use crate::tasklib::{Payload, TaskId, TaskResult, TaskSpec, RC_CANCELLED};
+
+use super::{oracle, FaultSet, Fnv64, SeededBug, Violation};
+
+/// One atomic model step. Deliveries pop the head of a per-directed-edge
+/// FIFO — the model preserves per-channel ordering exactly like the
+/// threaded runtime's channels and the DES's latency-ordered events, but
+/// lets distinct edges interleave arbitrarily.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Event {
+    /// Deliver the oldest in-flight message on edge `from → to`.
+    Deliver {
+        /// Sending party.
+        from: Party,
+        /// Receiving party.
+        to: Party,
+    },
+    /// A running consumer attempt completes (success, or `RC_CANCELLED`
+    /// if a kill reached it first).
+    Finish {
+        /// Leaf node id.
+        node: usize,
+        /// Local consumer index on that leaf.
+        consumer: usize,
+    },
+    /// The engine cancels task `id` (fault event, budgeted).
+    Cancel {
+        /// Task to cancel.
+        id: TaskId,
+    },
+    /// Root subtree at producer slot `slot` dies — link and all (fault
+    /// event, budgeted).
+    Kill {
+        /// Producer-level child slot to kill.
+        slot: usize,
+    },
+    /// The runtime begins a drain-and-graft recall (fault event,
+    /// budgeted).
+    Recall,
+}
+
+/// The whole protocol model: producer + buffer tree + in-flight
+/// messages + the harness's own ground-truth bookkeeping the oracles
+/// compare the protocol against.
+#[derive(Clone)]
+pub struct Model {
+    pub(crate) topo: Rc<TreeTopology>,
+    pub(crate) cfg: SchedulerConfig,
+    pub(crate) n_tasks: usize,
+    pub(crate) faults: FaultSet,
+    pub(crate) bug: Option<SeededBug>,
+    pub(crate) producer: ProducerState,
+    /// `None` = the node (and its link) is dead.
+    pub(crate) nodes: Vec<Option<BufferState>>,
+    /// Per-directed-edge FIFO of in-flight messages.
+    pub(crate) edges: BTreeMap<(Party, Party), VecDeque<ProtoMsg>>,
+    /// Ground truth of running attempts: `running[node][consumer]` is
+    /// the dispatched task plus a killed flag (kill ⇒ `RC_CANCELLED`).
+    pub(crate) running: Vec<Vec<Option<(TaskSpec, bool)>>>,
+    /// Tasks granted through each producer slot and not yet accounted
+    /// back — what a dead link must re-feed (dead-link zero-loss).
+    pub(crate) granted_root: Vec<BTreeMap<TaskId, TaskSpec>>,
+    /// Every task currently granted below the producer (double-grant
+    /// oracle).
+    pub(crate) granted_live: BTreeSet<TaskId>,
+    /// Engine-visible results per task (duplicate-result oracle).
+    pub(crate) results_seen: BTreeMap<TaskId, u32>,
+    /// `Returned` batches delivered so far (drives [`SeededBug`]).
+    pub(crate) returned_seen: u32,
+    pub(crate) cancels_left: u32,
+    pub(crate) kills_left: u32,
+    pub(crate) recalls_left: u32,
+    /// The single task the budgeted cancel fault targets.
+    pub(crate) cancel_candidate: TaskId,
+}
+
+impl Model {
+    /// Build the initial model state: tree constructed, every node
+    /// started (initial credit requests in flight), all `n_tasks`
+    /// submitted, engine marked done.
+    pub fn new(
+        cfg: &SchedulerConfig,
+        n_tasks: usize,
+        faults: FaultSet,
+        bug: Option<SeededBug>,
+    ) -> Result<Model, Violation> {
+        let topo = Rc::new(cfg.tree());
+        let n_roots = topo.roots.len();
+        let mut producer = ProducerState::new(n_roots).with_policy(cfg.policy);
+        producer.set_engine_done(true);
+        let mut m = Model {
+            topo,
+            cfg: cfg.clone(),
+            n_tasks,
+            faults,
+            bug,
+            producer,
+            nodes: Vec::new(),
+            edges: BTreeMap::new(),
+            running: Vec::new(),
+            granted_root: vec![BTreeMap::new(); n_roots],
+            granted_live: BTreeSet::new(),
+            results_seen: BTreeMap::new(),
+            returned_seen: 0,
+            cancels_left: u32::from(faults.cancel),
+            kills_left: u32::from(faults.kill),
+            recalls_left: u32::from(faults.recall),
+            cancel_candidate: (n_tasks / 2) as TaskId,
+        };
+        m.build_nodes()?;
+        let tasks: Vec<TaskSpec> = (0..n_tasks as TaskId)
+            .map(|id| TaskSpec::new(id, Payload::Sleep { seconds: 1.0 }))
+            .collect();
+        let acts = m.producer.push_tasks(tasks);
+        let steps = route_producer_actions(&m.topo, acts);
+        m.send(steps)?;
+        Ok(m)
+    }
+
+    /// (Re)build every buffer node fresh and start it. Used at init and
+    /// at graft time (when a recall completes, the old tree is torn down
+    /// and the new one started — reviving any killed subtree, exactly
+    /// like the runtimes' drain-and-graft).
+    fn build_nodes(&mut self) -> Result<(), Violation> {
+        // When the kill fault is armed, producer-level subtrees model
+        // separate worker processes: no root-level stealing (the
+        // distributed runtime has no worker→worker steal links, and a
+        // sideways task move across a dying link would genuinely lose
+        // the dead-link re-feed accounting).
+        let mut nosteal = self.cfg.clone();
+        nosteal.steal = false;
+        let topo = self.topo.clone();
+        self.nodes.clear();
+        self.running.clear();
+        let mut all_steps = Vec::new();
+        for id in 0..topo.nodes.len() {
+            let is_root = topo.roots.contains(&id);
+            let node_cfg = if self.faults.kill && is_root { &nosteal } else { &self.cfg };
+            let mut st = BufferState::for_tree_node(&topo, id, node_cfg);
+            self.running.push(vec![None; st.n_consumers()]);
+            let acts = st.on_start();
+            self.nodes.push(Some(st));
+            let (steps, effects) = route_buffer_actions(&topo, id, acts);
+            self.apply_effects(id, effects)?;
+            all_steps.extend(steps);
+        }
+        self.send(all_steps)
+    }
+
+    fn alive(&self, p: Party) -> bool {
+        match p {
+            Party::Producer => true,
+            Party::Node(id) => self.nodes.get(id).is_some_and(|n| n.is_some()),
+        }
+    }
+
+    /// Producer slot of direct-child node `id` (`None` for non-roots).
+    fn root_slot(&self, p: Party) -> Option<usize> {
+        match p {
+            Party::Node(id) => {
+                let n = self.topo.nodes.get(id)?;
+                n.parent.is_none().then_some(n.slot)
+            }
+            Party::Producer => None,
+        }
+    }
+
+    /// Enqueue routed steps onto the edge FIFOs. Traffic to or from a
+    /// dead node is dropped (the link is gone). Producer grants feed the
+    /// double-grant oracle and the per-slot dead-link ledger.
+    fn send(&mut self, steps: Vec<crate::scheduler::protocol::ModelStep>) -> Result<(), Violation> {
+        for s in steps {
+            if !self.alive(s.from) || !self.alive(s.to) {
+                continue;
+            }
+            if s.from == Party::Producer {
+                if let ProtoMsg::Assign(ts) = &s.msg {
+                    let slot = self.root_slot(s.to);
+                    for t in ts {
+                        if !self.granted_live.insert(t.id) {
+                            return Err(Violation::new(
+                                "double-grant",
+                                format!(
+                                    "producer granted task {} while an earlier grant of it \
+                                     is still live in the tree",
+                                    t.id
+                                ),
+                            ));
+                        }
+                        if let Some(gr) = slot.and_then(|sl| self.granted_root.get_mut(sl)) {
+                            gr.insert(t.id, t.clone());
+                        }
+                    }
+                }
+            }
+            self.edges.entry((s.from, s.to)).or_default().push_back(s.msg);
+        }
+        Ok(())
+    }
+
+    /// Absorb node-local side effects into the harness's running-attempt
+    /// ground truth (this is where double-dispatch would show).
+    fn apply_effects(&mut self, id: usize, effects: Vec<LocalEffect>) -> Result<(), Violation> {
+        for e in effects {
+            match e {
+                LocalEffect::RunOn { consumer, task } => {
+                    let tid = task.id;
+                    match self.running.get_mut(id).and_then(|r| r.get_mut(consumer)) {
+                        Some(slot) => {
+                            if slot.is_some() {
+                                return Err(Violation::new(
+                                    "double-dispatch",
+                                    format!(
+                                        "node n{id} dispatched task {tid} onto consumer \
+                                         {consumer} which is already running an attempt"
+                                    ),
+                                ));
+                            }
+                            *slot = Some((task, false));
+                        }
+                        None => {
+                            return Err(Violation::new(
+                                "double-dispatch",
+                                format!(
+                                    "node n{id} dispatched task {tid} to nonexistent \
+                                     consumer {consumer}"
+                                ),
+                            ));
+                        }
+                    }
+                }
+                LocalEffect::CancelRunning { consumer, id: tid } => {
+                    if let Some(Some((t, killed))) =
+                        self.running.get_mut(id).and_then(|r| r.get_mut(consumer))
+                    {
+                        if t.id == tid {
+                            *killed = true;
+                        }
+                    }
+                }
+                LocalEffect::ShutdownConsumers => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// All events enabled in this state. With `por` set, when no fault
+    /// event is pending and no recall is draining, a partial-order
+    /// reduction keeps only the events targeting the smallest party:
+    /// deliveries to (and completions at) distinct parties commute, so
+    /// exploring one canonical target first covers the same reachable
+    /// states. The reduction is heuristic (it is what makes the
+    /// exhaustive phase tractable); the fuzz phase samples the full
+    /// event set with no reduction to compensate.
+    pub fn enabled_events(&self, por: bool) -> Vec<Event> {
+        let mut evs = Vec::new();
+        for (&(from, to), q) in &self.edges {
+            if !q.is_empty() {
+                evs.push(Event::Deliver { from, to });
+            }
+        }
+        for (node, slots) in self.running.iter().enumerate() {
+            if !self.alive(Party::Node(node)) {
+                continue;
+            }
+            for (consumer, s) in slots.iter().enumerate() {
+                if s.is_some() {
+                    evs.push(Event::Finish { node, consumer });
+                }
+            }
+        }
+        let mut fault_evs = Vec::new();
+        if self.cancels_left > 0 && !self.producer.shutdown_sent() {
+            fault_evs.push(Event::Cancel { id: self.cancel_candidate });
+        }
+        if self.kills_left > 0
+            && !self.producer.shutdown_sent()
+            && self.topo.roots.len() > 1
+            && self.topo.roots.get(1).is_some_and(|&r| self.alive(Party::Node(r)))
+        {
+            fault_evs.push(Event::Kill { slot: 1 });
+        }
+        if self.recalls_left > 0 && !self.producer.is_recalling() && !self.producer.shutdown_sent()
+        {
+            fault_evs.push(Event::Recall);
+        }
+        if por && fault_evs.is_empty() && !self.producer.is_recalling() {
+            if let Some(min_target) = evs.iter().map(Self::target).min() {
+                evs.retain(|e| Self::target(e) == min_target);
+            }
+            return evs;
+        }
+        evs.extend(fault_evs);
+        evs
+    }
+
+    /// The party an event acts on (the POR equivalence key).
+    fn target(e: &Event) -> Party {
+        match *e {
+            Event::Deliver { to, .. } => to,
+            Event::Finish { node, .. } => Party::Node(node),
+            Event::Cancel { .. } | Event::Kill { .. } | Event::Recall => Party::Producer,
+        }
+    }
+
+    /// Whether `ev` can fire right now. Used by trace replay to
+    /// skip-repair steps that drifted out of enabledness; deliberately
+    /// looser than what [`Self::enabled_events`] generates (any task id
+    /// may be cancelled, any live root slot killed).
+    pub fn is_enabled(&self, ev: Event) -> bool {
+        match ev {
+            Event::Deliver { from, to } => {
+                self.edges.get(&(from, to)).is_some_and(|q| !q.is_empty())
+            }
+            Event::Finish { node, consumer } => {
+                self.alive(Party::Node(node))
+                    && self
+                        .running
+                        .get(node)
+                        .and_then(|r| r.get(consumer))
+                        .is_some_and(|s| s.is_some())
+            }
+            Event::Cancel { .. } => self.cancels_left > 0 && !self.producer.shutdown_sent(),
+            Event::Kill { slot } => {
+                self.kills_left > 0
+                    && !self.producer.shutdown_sent()
+                    && self.topo.roots.len() > 1
+                    && self.topo.roots.get(slot).is_some_and(|&r| self.alive(Party::Node(r)))
+            }
+            Event::Recall => {
+                self.recalls_left > 0
+                    && !self.producer.is_recalling()
+                    && !self.producer.shutdown_sent()
+            }
+        }
+    }
+
+    /// Apply one event. `Err` = an oracle with an inline detection point
+    /// fired (double-grant, double-dispatch, duplicate-result,
+    /// recall-quiescence); the step-wise oracles run separately via
+    /// [`Self::check_invariants`].
+    pub fn apply(&mut self, ev: Event) -> Result<(), Violation> {
+        match ev {
+            Event::Deliver { from, to } => self.deliver(from, to),
+            Event::Finish { node, consumer } => self.finish(node, consumer),
+            Event::Cancel { id } => self.cancel(id),
+            Event::Kill { slot } => self.kill(slot),
+            Event::Recall => self.recall(),
+        }
+    }
+
+    /// Step-wise invariants: task conservation and the credit bound.
+    pub fn check_invariants(&self) -> Option<Violation> {
+        oracle::conservation(self).or_else(|| oracle::credit_bound(self))
+    }
+
+    /// End-state oracle, valid only when no event is enabled: either the
+    /// run shut down with every task completed exactly once, or this is
+    /// a deadlock / lost-task terminal state.
+    pub fn check_terminal(&self) -> Option<Violation> {
+        oracle::terminal(self)
+    }
+
+    fn deliver(&mut self, from: Party, to: Party) -> Result<(), Violation> {
+        let msg = {
+            let Some(q) = self.edges.get_mut(&(from, to)) else { return Ok(()) };
+            let msg = q.pop_front();
+            if q.is_empty() {
+                self.edges.remove(&(from, to));
+            }
+            match msg {
+                Some(m) => m,
+                None => return Ok(()),
+            }
+        };
+        match to {
+            Party::Producer => self.deliver_to_producer(from, msg),
+            Party::Node(id) => self.deliver_to_node(id, from, msg),
+        }
+    }
+
+    fn deliver_to_producer(&mut self, from: Party, msg: ProtoMsg) -> Result<(), Violation> {
+        let slot = self.root_slot(from).unwrap_or(0);
+        let mut steps = Vec::new();
+        match msg {
+            ProtoMsg::Request { amount } => {
+                steps.extend(route_producer_actions(
+                    &self.topo,
+                    self.producer.on_request(slot, amount),
+                ));
+            }
+            ProtoMsg::Results(rs) => {
+                for r in &rs {
+                    let n = self.results_seen.entry(r.id).or_insert(0);
+                    *n += 1;
+                    if *n > 1 {
+                        return Err(Violation::new(
+                            "duplicate-result",
+                            format!("the engine received {n} results for task {}", r.id),
+                        ));
+                    }
+                    self.granted_live.remove(&r.id);
+                    if let Some(gr) = self.granted_root.get_mut(slot) {
+                        gr.remove(&r.id);
+                    }
+                }
+                self.producer.on_results(rs.len());
+            }
+            ProtoMsg::Returned(ts) => {
+                self.returned_seen += 1;
+                let swallowed = matches!(
+                    self.bug,
+                    Some(SeededBug::DropReturned { nth }) if nth == self.returned_seen
+                );
+                if swallowed {
+                    // Seeded bug: the batch vanishes — the ledgers are
+                    // deliberately left stale too, exactly as a missing
+                    // on_returned call would leave the real producer.
+                } else {
+                    for t in &ts {
+                        self.granted_live.remove(&t.id);
+                        if let Some(gr) = self.granted_root.get_mut(slot) {
+                            gr.remove(&t.id);
+                        }
+                    }
+                    self.producer.on_returned(ts);
+                }
+            }
+            ProtoMsg::RecallAck => {
+                if self.producer.on_recall_ack(slot) {
+                    return self.graft();
+                }
+            }
+            other => {
+                return Err(Violation::new(
+                    "bad-route",
+                    format!("producer received unroutable message {other:?}"),
+                ));
+            }
+        }
+        steps.extend(route_producer_actions(&self.topo, self.producer.maybe_shutdown()));
+        self.send(steps)
+    }
+
+    fn deliver_to_node(&mut self, id: usize, from: Party, msg: ProtoMsg) -> Result<(), Violation> {
+        let from_slot = match from {
+            Party::Node(f) => self.topo.nodes.get(f).map_or(0, |n| n.slot),
+            Party::Producer => 0,
+        };
+        let Some(node) = self.nodes.get_mut(id).and_then(|n| n.as_mut()) else {
+            return Ok(());
+        };
+        let acts = match msg {
+            ProtoMsg::Assign(ts) => node.on_assign(ts),
+            ProtoMsg::Cancel { id: tid } => node.on_cancel(tid),
+            ProtoMsg::Recall => node.on_recall(),
+            ProtoMsg::Shutdown => node.on_shutdown(),
+            ProtoMsg::Request { amount } => node.on_child_request(from_slot, amount),
+            ProtoMsg::Results(rs) => node.on_child_results(rs),
+            ProtoMsg::Returned(ts) => node.on_child_returned(ts),
+            ProtoMsg::RecallAck => node.on_child_recall_ack(from_slot),
+            ProtoMsg::StealRequest { thief, thief_slot, amount } => {
+                node.on_steal_request(thief, thief_slot, amount)
+            }
+            ProtoMsg::StealGrant { from_slot: fs, left, cancels, tasks } => {
+                node.on_steal_grant(fs, left, cancels, tasks)
+            }
+        };
+        let (steps, effects) = route_buffer_actions(&self.topo, id, acts);
+        self.apply_effects(id, effects)?;
+        self.send(steps)
+    }
+
+    fn finish(&mut self, node: usize, consumer: usize) -> Result<(), Violation> {
+        let Some((task, killed)) =
+            self.running.get_mut(node).and_then(|r| r.get_mut(consumer)).and_then(Option::take)
+        else {
+            return Ok(());
+        };
+        let result = TaskResult {
+            id: task.id,
+            consumer,
+            results: Vec::new(),
+            begin: 0.0,
+            finish: 0.0,
+            rc: if killed { RC_CANCELLED } else { 0 },
+            attempt: task.attempt,
+            timed_out: false,
+        };
+        let Some(st) = self.nodes.get_mut(node).and_then(|n| n.as_mut()) else {
+            return Ok(());
+        };
+        let acts = st.on_done(consumer, result);
+        let (steps, effects) = route_buffer_actions(&self.topo, node, acts);
+        self.apply_effects(node, effects)?;
+        self.send(steps)
+    }
+
+    fn cancel(&mut self, id: TaskId) -> Result<(), Violation> {
+        if self.cancels_left == 0 {
+            return Ok(());
+        }
+        self.cancels_left -= 1;
+        let (dropped, acts) = self.producer.on_cancel(id);
+        if dropped.is_some() {
+            // Pending hit: the producer completed the task as cancelled
+            // and the runtime synthesizes the engine's RC_CANCELLED
+            // result on the spot — exactly one engine-visible result.
+            let n = self.results_seen.entry(id).or_insert(0);
+            *n += 1;
+            if *n > 1 {
+                return Err(Violation::new(
+                    "duplicate-result",
+                    format!("cancel of pending task {id} synthesized a second result"),
+                ));
+            }
+        }
+        let mut steps = route_producer_actions(&self.topo, acts);
+        steps.extend(route_producer_actions(&self.topo, self.producer.maybe_shutdown()));
+        self.send(steps)
+    }
+
+    fn kill(&mut self, slot: usize) -> Result<(), Violation> {
+        if self.kills_left == 0 {
+            return Ok(());
+        }
+        let Some(&root) = self.topo.roots.get(slot) else { return Ok(()) };
+        if !self.alive(Party::Node(root)) {
+            return Ok(());
+        }
+        self.kills_left -= 1;
+        // The whole worker subtree dies with its link.
+        let mut dead = vec![root];
+        let mut i = 0;
+        while i < dead.len() {
+            if let Some(TreeNodeKind::Interior { children }) =
+                self.topo.nodes.get(dead[i]).map(|n| &n.kind)
+            {
+                dead.extend(children.iter().copied());
+            }
+            i += 1;
+        }
+        let dead_set: BTreeSet<usize> = dead.iter().copied().collect();
+        for &d in &dead {
+            if let Some(n) = self.nodes.get_mut(d) {
+                *n = None;
+            }
+            if let Some(r) = self.running.get_mut(d) {
+                for s in r.iter_mut() {
+                    *s = None;
+                }
+            }
+        }
+        // Everything in flight on a dead link is lost with it. In-flight
+        // results from the dead subtree were never counted by the
+        // producer, so their ids are still in the slot ledger and get
+        // re-fed below — exactly-once survives the crash.
+        let touches_dead = |p: Party| matches!(p, Party::Node(n) if dead_set.contains(&n));
+        self.edges.retain(|&(f, t), _| !touches_dead(f) && !touches_dead(t));
+        self.producer.on_child_dead(slot);
+        let outstanding: Vec<TaskSpec> = self
+            .granted_root
+            .get_mut(slot)
+            .map(std::mem::take)
+            .unwrap_or_default()
+            .into_values()
+            .collect();
+        for t in &outstanding {
+            self.granted_live.remove(&t.id);
+        }
+        self.producer.on_returned(outstanding);
+        if self.producer.recall_complete() {
+            // The dead link supplied the final implicit recall ack.
+            return self.graft();
+        }
+        let mut steps = route_producer_actions(&self.topo, self.producer.push_tasks(Vec::new()));
+        steps.extend(route_producer_actions(&self.topo, self.producer.maybe_shutdown()));
+        self.send(steps)
+    }
+
+    fn recall(&mut self) -> Result<(), Violation> {
+        if self.recalls_left == 0 || self.producer.is_recalling() || self.producer.shutdown_sent()
+        {
+            return Ok(());
+        }
+        self.recalls_left -= 1;
+        let steps = route_producer_actions(&self.topo, self.producer.begin_recall());
+        self.send(steps)?;
+        // A dead link can never ack; mark it immediately, as the serve
+        // loop does for links it already knows are down.
+        let dead_slots: Vec<usize> = self
+            .topo
+            .roots
+            .iter()
+            .enumerate()
+            .filter(|&(_, &r)| !self.alive(Party::Node(r)))
+            .map(|(slot, _)| slot)
+            .collect();
+        for slot in dead_slots {
+            self.producer.on_child_dead(slot);
+        }
+        if self.producer.recall_complete() {
+            return self.graft();
+        }
+        Ok(())
+    }
+
+    /// All recall acks are in: verify quiescence, then tear down the old
+    /// tree and start a fresh one (same shape; a dead subtree revives —
+    /// the model's stand-in for the runtimes' graft / worker restart).
+    fn graft(&mut self) -> Result<(), Violation> {
+        if let Some(v) = oracle::recall_quiescence(self) {
+            return Err(v);
+        }
+        self.producer.rewire(self.topo.roots.len());
+        self.edges.clear();
+        self.granted_root = vec![BTreeMap::new(); self.topo.roots.len()];
+        self.build_nodes()?;
+        let mut steps = route_producer_actions(&self.topo, self.producer.push_tasks(Vec::new()));
+        steps.extend(route_producer_actions(&self.topo, self.producer.maybe_shutdown()));
+        self.send(steps)
+    }
+
+    /// Deterministic fingerprint of the protocol-visible state (FNV-1a
+    /// over the producer, every node, every in-flight message, the
+    /// running ground truth and the fault budgets). Drives the DFS
+    /// visited set.
+    pub fn state_hash(&self) -> u64 {
+        use std::hash::Hasher;
+        fn hash_party(p: Party, h: &mut Fnv64) {
+            match p {
+                Party::Producer => h.write_u8(0),
+                Party::Node(id) => {
+                    h.write_u8(1);
+                    h.write_usize(id);
+                }
+            }
+        }
+        let mut h = Fnv64::new();
+        self.producer.model_hash(&mut h);
+        for (id, n) in self.nodes.iter().enumerate() {
+            h.write_usize(id);
+            match n {
+                Some(st) => {
+                    h.write_u8(1);
+                    st.model_hash(&mut h);
+                }
+                None => h.write_u8(0),
+            }
+        }
+        for ((from, to), q) in &self.edges {
+            hash_party(*from, &mut h);
+            hash_party(*to, &mut h);
+            h.write_usize(q.len());
+            for m in q {
+                m.model_hash(&mut h);
+            }
+        }
+        for (node, slots) in self.running.iter().enumerate() {
+            for (consumer, s) in slots.iter().enumerate() {
+                if let Some((t, killed)) = s {
+                    h.write_usize(node);
+                    h.write_usize(consumer);
+                    h.write_u64(t.id);
+                    h.write_u8(u8::from(*killed));
+                }
+            }
+        }
+        h.write_u32(self.cancels_left);
+        h.write_u32(self.kills_left);
+        h.write_u32(self.recalls_left);
+        h.write_u32(self.returned_seen);
+        for (&id, &n) in &self.results_seen {
+            h.write_u64(id);
+            h.write_u32(n);
+        }
+        h.finish()
+    }
+}
+
+/// Linked trace cell: the DFS shares schedule prefixes across branches.
+struct TraceNode {
+    ev: Event,
+    prev: Option<Rc<TraceNode>>,
+}
+
+fn unwind(mut t: Option<Rc<TraceNode>>) -> Vec<Event> {
+    let mut out = Vec::new();
+    while let Some(n) = t {
+        out.push(n.ev);
+        t = n.prev.clone();
+    }
+    out.reverse();
+    out
+}
+
+/// Result of the exhaustive phase.
+pub(crate) struct DfsOutcome {
+    pub(crate) states: u64,
+    pub(crate) exhausted: bool,
+    pub(crate) depth_pruned: u64,
+    pub(crate) violation: Option<(Violation, Vec<Event>)>,
+}
+
+/// Depth-first exploration with a visited set over [`Model::state_hash`]
+/// and the partial-order reduction of [`Model::enabled_events`]. Stops
+/// at the first violation (schedule returned for shrinking) or when the
+/// frontier drains / the state budget is hit.
+pub(crate) fn dfs(init: &Model, max_depth: usize, max_states: u64) -> DfsOutcome {
+    let mut visited: BTreeSet<u64> = BTreeSet::new();
+    let mut states: u64 = 0;
+    let mut depth_pruned: u64 = 0;
+    let mut budget_hit = false;
+    // Entries carry a parent model plus the event to apply on pop, so
+    // memory stays O(frontier) models, not O(stack) models.
+    type Entry = (Rc<Model>, Option<Rc<TraceNode>>, usize, Option<Event>);
+    let mut stack: Vec<Entry> = vec![(Rc::new(init.clone()), None, 0, None)];
+    while let Some((base, trace, depth, ev)) = stack.pop() {
+        let (m, trace) = match ev {
+            None => ((*base).clone(), trace),
+            Some(ev) => {
+                let mut m = (*base).clone();
+                let trace = Some(Rc::new(TraceNode { ev, prev: trace }));
+                if let Some(v) = m.apply(ev).err().or_else(|| m.check_invariants()) {
+                    return DfsOutcome {
+                        states,
+                        exhausted: false,
+                        depth_pruned,
+                        violation: Some((v, unwind(trace))),
+                    };
+                }
+                (m, trace)
+            }
+        };
+        if !visited.insert(m.state_hash()) {
+            continue;
+        }
+        states += 1;
+        if states >= max_states {
+            budget_hit = true;
+            break;
+        }
+        let evs = m.enabled_events(true);
+        if evs.is_empty() {
+            if let Some(v) = m.check_terminal() {
+                return DfsOutcome {
+                    states,
+                    exhausted: false,
+                    depth_pruned,
+                    violation: Some((v, unwind(trace))),
+                };
+            }
+            continue;
+        }
+        if depth >= max_depth {
+            depth_pruned += 1;
+            continue;
+        }
+        let base = Rc::new(m);
+        for ev in evs.into_iter().rev() {
+            stack.push((base.clone(), trace.clone(), depth + 1, Some(ev)));
+        }
+    }
+    DfsOutcome { states, exhausted: !budget_hit, depth_pruned, violation: None }
+}
+
+/// Result of the fuzz phase.
+pub(crate) struct FuzzOutcome {
+    pub(crate) schedules: u64,
+    pub(crate) violation: Option<(Violation, Vec<Event>)>,
+}
+
+fn lcg(x: u64) -> u64 {
+    x.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(1_442_695_040_888_963_407)
+}
+
+/// Seeded random-schedule sampling over the *full* (unreduced) event
+/// set — the backstop for interleavings the POR heuristic prunes and
+/// for budgets the exhaustive phase cannot reach. Deterministic: seed
+/// `k` always replays the same schedule.
+pub(crate) fn fuzz(init: &Model, seeds: u64, max_steps: usize) -> FuzzOutcome {
+    for seed in 0..seeds {
+        let mut x = lcg(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1));
+        let mut m = init.clone();
+        let mut schedule = Vec::new();
+        for _ in 0..max_steps {
+            let evs = m.enabled_events(false);
+            if evs.is_empty() {
+                if let Some(v) = m.check_terminal() {
+                    return FuzzOutcome { schedules: seed + 1, violation: Some((v, schedule)) };
+                }
+                break;
+            }
+            x = lcg(x);
+            let pick = evs[(x >> 33) as usize % evs.len()];
+            schedule.push(pick);
+            if let Some(v) = m.apply(pick).err().or_else(|| m.check_invariants()) {
+                return FuzzOutcome { schedules: seed + 1, violation: Some((v, schedule)) };
+            }
+        }
+    }
+    FuzzOutcome { schedules: seeds, violation: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{scenario, CheckConfig, FaultSet};
+    use super::*;
+
+    fn flat2_model(n_tasks: usize, faults: FaultSet) -> Model {
+        let sc = scenario("flat2").expect("flat2 registered");
+        Model::new(&sc.cfg, n_tasks, faults, None).expect("clean init")
+    }
+
+    #[test]
+    fn init_satisfies_invariants() {
+        let m = flat2_model(3, FaultSet::default());
+        assert!(m.check_invariants().is_none());
+        assert!(m.producer.pending_len() == 3);
+        // Both leaves sent their initial credit request.
+        assert!(m.enabled_events(false).len() >= 2);
+    }
+
+    #[test]
+    fn state_hash_is_deterministic_and_step_sensitive() {
+        let m1 = flat2_model(2, FaultSet::default());
+        let m2 = flat2_model(2, FaultSet::default());
+        assert_eq!(m1.state_hash(), m2.state_hash());
+        let mut m3 = m2.clone();
+        let ev = *m3.enabled_events(false).first().expect("events at init");
+        m3.apply(ev).expect("clean step");
+        assert_ne!(m1.state_hash(), m3.state_hash());
+    }
+
+    #[test]
+    fn faultless_flat2_runs_to_clean_termination() {
+        let m = flat2_model(2, FaultSet::default());
+        let out = dfs(&m, 400, 200_000);
+        assert!(out.violation.is_none(), "violation: {:?}", out.violation);
+        assert!(out.exhausted);
+        assert!(out.states > 10);
+    }
+
+    #[test]
+    fn recall_and_cancel_flat2_explores_clean() {
+        let faults = FaultSet { steal: true, cancel: true, recall: true, kill: false };
+        let m = flat2_model(2, faults);
+        let out = dfs(&m, 400, CheckConfig::default().max_states);
+        assert!(out.violation.is_none(), "violation: {:?}", out.violation);
+    }
+
+    #[test]
+    fn kill_during_recall_on_deep4_is_lossless() {
+        let sc = scenario("deep4").expect("deep4 registered");
+        let faults = FaultSet { steal: true, cancel: false, recall: true, kill: true };
+        let m = Model::new(&sc.cfg, 2, faults, None).expect("clean init");
+        let out = dfs(&m, 400, 150_000);
+        assert!(out.violation.is_none(), "violation: {:?}", out.violation);
+    }
+
+    #[test]
+    fn fuzz_is_deterministic() {
+        let faults = FaultSet { steal: true, cancel: true, recall: true, kill: false };
+        let m = flat2_model(3, faults);
+        let a = fuzz(&m, 16, 5_000);
+        let b = fuzz(&m, 16, 5_000);
+        assert_eq!(a.schedules, b.schedules);
+        assert!(a.violation.is_none(), "violation: {:?}", a.violation);
+    }
+}

@@ -1,0 +1,555 @@
+//! `caravan check` — a bounded model checker for the credit/steal/cancel/
+//! recall protocol in [`crate::scheduler::protocol`].
+//!
+//! The checker drives the *pure* [`ProducerState`] and [`BufferState`]
+//! handlers — the exact state machines both runtimes execute — through a
+//! small model harness ([`Model`]): N tasks, a small tree, and one
+//! per-directed-edge FIFO of in-flight [`ProtoMsg`]s. Every pending
+//! delivery (plus consumer completions and injected fault events) is an
+//! explorable [`Event`]; DFS over the event interleavings with a
+//! partial-order reduction and a state-hash visited set enumerates the
+//! reachable protocol states up to a budget, and a seeded LCG schedule
+//! fuzzer (no `rand`) samples beyond it.
+//!
+//! After every step the invariant oracles in [`oracle`] run:
+//!
+//! | oracle              | property                                            |
+//! |---------------------|-----------------------------------------------------|
+//! | `conservation`      | pending + queued + running + in-flight + done == N  |
+//! | `double-grant`      | a `TaskId` is never granted while a grant is live   |
+//! | `duplicate-result`  | the engine sees at most one result per task         |
+//! | `double-dispatch`   | a consumer is never handed two concurrent attempts  |
+//! | `credit-bound`      | no queue exceeds `credit_factor × subtree_consumers`|
+//! | `recall-quiescence` | at graft time nothing is stranded below the recall  |
+//! | `deadlock`          | no enabled event implies shutdown was broadcast     |
+//! | `termination`       | at quiescence every task completed exactly once     |
+//!
+//! On a violation the offending schedule is shrunk with delta debugging
+//! ([`trace`]) to a minimal event list and printed as a replayable
+//! artifact (`caravan check --replay FILE`).
+//!
+//! [`ProducerState`]: crate::scheduler::protocol::ProducerState
+//! [`BufferState`]: crate::scheduler::protocol::BufferState
+//! [`ProtoMsg`]: crate::scheduler::protocol::ProtoMsg
+
+pub mod explore;
+pub mod oracle;
+pub mod trace;
+
+pub use explore::{Event, Model};
+pub use trace::{format_trace, parse_trace, ParsedTrace};
+
+use crate::config::SchedulerConfig;
+
+/// Which fault events the exploration may inject on top of ordinary
+/// message deliveries and completions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct FaultSet {
+    /// Sibling work stealing enabled in the scenario tree.
+    pub steal: bool,
+    /// One engine-driven cancellation of a mid-range task.
+    pub cancel: bool,
+    /// One drain-and-graft recall.
+    pub recall: bool,
+    /// One dead link: a root subtree is killed mid-run.
+    pub kill: bool,
+}
+
+impl FaultSet {
+    /// Parse a comma-separated fault list (`steal,cancel,recall,kill`;
+    /// `none` or the empty string = no faults).
+    pub fn parse(s: &str) -> Result<FaultSet, String> {
+        let mut f = FaultSet::default();
+        let s = s.trim();
+        if s.is_empty() || s == "none" {
+            return Ok(f);
+        }
+        for tok in s.split(',') {
+            match tok.trim() {
+                "steal" => f.steal = true,
+                "cancel" => f.cancel = true,
+                "recall" => f.recall = true,
+                "kill" => f.kill = true,
+                other => {
+                    return Err(format!(
+                        "unknown fault '{other}' (valid: steal, cancel, recall, kill)"
+                    ))
+                }
+            }
+        }
+        Ok(f)
+    }
+}
+
+impl std::fmt::Display for FaultSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut toks = Vec::new();
+        if self.steal {
+            toks.push("steal");
+        }
+        if self.cancel {
+            toks.push("cancel");
+        }
+        if self.recall {
+            toks.push("recall");
+        }
+        if self.kill {
+            toks.push("kill");
+        }
+        if toks.is_empty() {
+            write!(f, "none")
+        } else {
+            write!(f, "{}", toks.join(","))
+        }
+    }
+}
+
+/// A deliberately seeded protocol fault, used to prove the oracles can
+/// catch real bugs (and in CI, that a red check stays red).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeededBug {
+    /// Silently drop the `nth` (1-based) `Returned` batch at the
+    /// producer instead of re-queueing it — the exact bug a missing
+    /// `on_returned` call would be. Conservation breaks on any schedule
+    /// where a recall (or dead link) sends tasks upstream.
+    DropReturned {
+        /// Which `Returned` delivery (1-based) to swallow.
+        nth: u32,
+    },
+}
+
+impl SeededBug {
+    /// Parse a bug spec: `drop-returned` or `drop-returned:N`.
+    pub fn parse(s: &str) -> Result<SeededBug, String> {
+        let (kind, arg) = match s.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (s, None),
+        };
+        match kind.trim() {
+            "drop-returned" => {
+                let nth = match arg {
+                    None => 1,
+                    Some(a) => a
+                        .trim()
+                        .parse::<u32>()
+                        .map_err(|_| format!("bad drop-returned index '{a}'"))?,
+                };
+                if nth == 0 {
+                    return Err("drop-returned index is 1-based".to_string());
+                }
+                Ok(SeededBug::DropReturned { nth })
+            }
+            other => Err(format!("unknown bug '{other}' (valid: drop-returned[:N])")),
+        }
+    }
+}
+
+impl std::fmt::Display for SeededBug {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SeededBug::DropReturned { nth } => write!(f, "drop-returned:{nth}"),
+        }
+    }
+}
+
+/// One invariant-oracle violation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    /// Which oracle fired (stable machine-readable name).
+    pub oracle: &'static str,
+    /// Human-readable description of what went wrong.
+    pub detail: String,
+}
+
+impl Violation {
+    pub(crate) fn new(oracle: &'static str, detail: String) -> Violation {
+        Violation { oracle, detail }
+    }
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.oracle, self.detail)
+    }
+}
+
+/// A violating schedule, shrunk to a (locally) minimal event list.
+#[derive(Clone, Debug)]
+pub struct Counterexample {
+    /// The oracle violation the minimized schedule reproduces.
+    pub violation: Violation,
+    /// Minimized event schedule (replayable via [`replay_trace_text`]).
+    pub events: Vec<Event>,
+    /// Length of the schedule before delta-debugging shrank it.
+    pub original_len: usize,
+}
+
+/// A named model topology the checker can explore.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Registry name (`--scenario NAME`).
+    pub name: &'static str,
+    /// One-line description for `--help`-style listings.
+    pub summary: &'static str,
+    /// Whether the `kill` fault is meaningful here: killing a root
+    /// subtree is only modelled for trees with ≥ 2 roots and no
+    /// root-level stealing (matching the distributed runtime, where
+    /// root subtrees live in separate worker processes that cannot
+    /// steal from each other).
+    pub kill_ok: bool,
+    /// Scheduler configuration the model tree is built from.
+    pub cfg: SchedulerConfig,
+}
+
+/// Every registered scenario.
+pub fn scenarios() -> Vec<Scenario> {
+    let flat2 = Scenario {
+        name: "flat2",
+        summary: "2 leaf buffers under the producer, 1 consumer each, stealing siblings",
+        kill_ok: false,
+        cfg: SchedulerConfig {
+            np: 2,
+            consumers_per_buffer: 1,
+            depth: 1,
+            fanout: vec![2],
+            steal: true,
+            credit_factor: 2,
+            flush_every: 2,
+            ..SchedulerConfig::default()
+        },
+    };
+    let deep4 = Scenario {
+        name: "deep4",
+        summary: "2 interior roots x 2 leaves, 1 consumer each; kill-capable",
+        kill_ok: true,
+        cfg: SchedulerConfig {
+            np: 4,
+            consumers_per_buffer: 1,
+            depth: 2,
+            fanout: vec![2],
+            steal: true,
+            credit_factor: 2,
+            flush_every: 2,
+            ..SchedulerConfig::default()
+        },
+    };
+    vec![flat2, deep4]
+}
+
+/// Look up a scenario by name.
+pub fn scenario(name: &str) -> Option<Scenario> {
+    scenarios().into_iter().find(|s| s.name == name)
+}
+
+/// Checker run parameters (the `caravan check` CLI surface).
+#[derive(Clone, Debug)]
+pub struct CheckConfig {
+    /// Scenario name (see [`scenarios`]).
+    pub scenario: String,
+    /// Tasks the model engine submits (`--max-tasks`).
+    pub n_tasks: usize,
+    /// DFS depth bound; deeper schedules are pruned (`--max-depth`).
+    pub max_depth: usize,
+    /// Unique-state budget for the exhaustive phase (`--max-states`).
+    pub max_states: u64,
+    /// Fuzz schedules after a clean exhaustive phase; 0 disables
+    /// (`--seeds`).
+    pub seeds: u64,
+    /// Per-schedule event cap for the fuzzer (`--fuzz-steps`).
+    pub fuzz_steps: usize,
+    /// Fault events to inject (`--faults`).
+    pub faults: FaultSet,
+    /// Deliberately seeded bug, if any (`--inject-bug`).
+    pub bug: Option<SeededBug>,
+}
+
+impl Default for CheckConfig {
+    fn default() -> Self {
+        CheckConfig {
+            scenario: "flat2".to_string(),
+            n_tasks: 3,
+            max_depth: 400,
+            max_states: 200_000,
+            seeds: 64,
+            fuzz_steps: 5_000,
+            faults: FaultSet { steal: true, cancel: true, recall: true, kill: false },
+            bug: None,
+        }
+    }
+}
+
+/// Outcome of one checker run (exhaustive phase + optional fuzz phase,
+/// or a single trace replay).
+#[derive(Clone, Debug)]
+pub struct CheckReport {
+    /// Scenario explored.
+    pub scenario: String,
+    /// Faults injected.
+    pub faults: FaultSet,
+    /// Tasks submitted to the model.
+    pub n_tasks: usize,
+    /// Seeded bug, if one was armed.
+    pub bug: Option<SeededBug>,
+    /// Unique states visited by the exhaustive phase.
+    pub states: u64,
+    /// True when DFS drained the whole (depth-bounded) state space
+    /// without hitting the state budget.
+    pub exhausted: bool,
+    /// Schedules pruned at the depth bound (0 ⇒ the bound never bit).
+    pub depth_pruned: u64,
+    /// Fuzz schedules executed after the exhaustive phase.
+    pub fuzz_schedules: u64,
+    /// The minimized violating schedule, if any oracle fired.
+    pub counterexample: Option<Counterexample>,
+}
+
+impl CheckReport {
+    /// True when every oracle held on every explored schedule.
+    pub fn passed(&self) -> bool {
+        self.counterexample.is_none()
+    }
+
+    /// The minimized counterexample as a replayable trace artifact.
+    pub fn counterexample_trace(&self) -> Option<String> {
+        self.counterexample
+            .as_ref()
+            .map(|c| format_trace(&self.scenario, self.faults, self.n_tasks, self.bug, &c.events))
+    }
+}
+
+/// FNV-1a 64 — a fixed-key hasher for the visited-state set. `std`'s
+/// default hasher is seeded per process, which would make visited-set
+/// pruning (and therefore state counts) nondeterministic across runs.
+pub(crate) struct Fnv64(u64);
+
+impl Fnv64 {
+    pub(crate) fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl std::hash::Hasher for Fnv64 {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+}
+
+/// Run the checker: exhaustive DFS up to the budgets, then (when clean
+/// and `seeds > 0`) seeded schedule fuzzing. `Err` is a usage error
+/// (unknown scenario, bad bounds) — distinct from an oracle violation,
+/// which comes back inside the report.
+pub fn run_check(cfg: &CheckConfig) -> Result<CheckReport, String> {
+    let sc = scenario(&cfg.scenario).ok_or_else(|| {
+        let names: Vec<&str> = scenarios().iter().map(|s| s.name).collect();
+        format!("unknown scenario '{}' (known: {})", cfg.scenario, names.join(", "))
+    })?;
+    if cfg.faults.kill && !sc.kill_ok {
+        return Err(format!(
+            "scenario '{}' cannot model the kill fault (needs >= 2 producer-level \
+             subtrees with no root-level stealing; try --scenario deep4)",
+            sc.name
+        ));
+    }
+    if cfg.n_tasks == 0 || cfg.n_tasks > 16 {
+        return Err(format!("--max-tasks must be in 1..=16, got {}", cfg.n_tasks));
+    }
+    if cfg.max_depth == 0 {
+        return Err("--max-depth must be positive".to_string());
+    }
+
+    let mut report = CheckReport {
+        scenario: sc.name.to_string(),
+        faults: cfg.faults,
+        n_tasks: cfg.n_tasks,
+        bug: cfg.bug,
+        states: 0,
+        exhausted: false,
+        depth_pruned: 0,
+        fuzz_schedules: 0,
+        counterexample: None,
+    };
+
+    let init = match Model::new(&sc.cfg, cfg.n_tasks, cfg.faults, cfg.bug) {
+        Ok(m) => m,
+        Err(v) => {
+            report.counterexample =
+                Some(Counterexample { violation: v, events: Vec::new(), original_len: 0 });
+            return Ok(report);
+        }
+    };
+
+    let dfs = explore::dfs(&init, cfg.max_depth, cfg.max_states);
+    report.states = dfs.states;
+    report.exhausted = dfs.exhausted;
+    report.depth_pruned = dfs.depth_pruned;
+    if let Some((violation, events)) = dfs.violation {
+        report.counterexample = Some(minimize(&init, violation, events));
+        return Ok(report);
+    }
+
+    if cfg.seeds > 0 {
+        let fz = explore::fuzz(&init, cfg.seeds, cfg.fuzz_steps);
+        report.fuzz_schedules = fz.schedules;
+        if let Some((violation, events)) = fz.violation {
+            report.counterexample = Some(minimize(&init, violation, events));
+        }
+    }
+    Ok(report)
+}
+
+/// Shrink a violating schedule with ddmin and re-derive the violation
+/// the minimized schedule actually reproduces (shrinking may surface an
+/// earlier — sometimes different — oracle on the shorter schedule).
+fn minimize(init: &Model, violation: Violation, events: Vec<Event>) -> Counterexample {
+    let original_len = events.len();
+    let min = trace::shrink(init, events);
+    let violation = trace::replay(init, &min).unwrap_or(violation);
+    Counterexample { violation, events: min, original_len }
+}
+
+/// Parse and replay a trace artifact (`caravan check --replay FILE`).
+/// The report's counterexample is `Some` iff the replay violates an
+/// oracle; traces are skip-repaired, so steps that are not enabled in
+/// the replayed state (e.g. after a protocol change reorders messages)
+/// are ignored rather than fatal.
+pub fn replay_trace_text(text: &str) -> Result<CheckReport, String> {
+    let parsed = parse_trace(text)?;
+    let sc = scenario(&parsed.scenario).ok_or_else(|| {
+        format!("trace names unknown scenario '{}'", parsed.scenario)
+    })?;
+    if parsed.n_tasks == 0 || parsed.n_tasks > 16 {
+        return Err(format!("trace task count {} out of range 1..=16", parsed.n_tasks));
+    }
+    let mut report = CheckReport {
+        scenario: parsed.scenario.clone(),
+        faults: parsed.faults,
+        n_tasks: parsed.n_tasks,
+        bug: parsed.bug,
+        states: 0,
+        exhausted: false,
+        depth_pruned: 0,
+        fuzz_schedules: 0,
+        counterexample: None,
+    };
+    let init = match Model::new(&sc.cfg, parsed.n_tasks, parsed.faults, parsed.bug) {
+        Ok(m) => m,
+        Err(v) => {
+            report.counterexample =
+                Some(Counterexample { violation: v, events: Vec::new(), original_len: 0 });
+            return Ok(report);
+        }
+    };
+    let original_len = parsed.events.len();
+    if let Some(violation) = trace::replay(&init, &parsed.events) {
+        report.counterexample =
+            Some(Counterexample { violation, events: parsed.events, original_len });
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_set_parses_and_displays() {
+        let f = FaultSet::parse("steal,recall").unwrap();
+        assert!(f.steal && f.recall && !f.cancel && !f.kill);
+        assert_eq!(f.to_string(), "steal,recall");
+        assert_eq!(FaultSet::parse("none").unwrap(), FaultSet::default());
+        assert_eq!(FaultSet::default().to_string(), "none");
+        assert_eq!(
+            FaultSet::parse(&FaultSet::parse("kill,cancel").unwrap().to_string()).unwrap(),
+            FaultSet::parse("cancel,kill").unwrap()
+        );
+        assert!(FaultSet::parse("explode").is_err());
+    }
+
+    #[test]
+    fn seeded_bug_parses() {
+        assert_eq!(SeededBug::parse("drop-returned").unwrap(), SeededBug::DropReturned { nth: 1 });
+        assert_eq!(
+            SeededBug::parse("drop-returned:3").unwrap(),
+            SeededBug::DropReturned { nth: 3 }
+        );
+        assert!(SeededBug::parse("drop-returned:0").is_err());
+        assert!(SeededBug::parse("segfault").is_err());
+    }
+
+    #[test]
+    fn scenario_registry_resolves() {
+        assert!(scenario("flat2").is_some());
+        let deep = scenario("deep4").unwrap();
+        assert!(deep.kill_ok);
+        assert_eq!(deep.cfg.tree().roots.len(), 2);
+        assert!(scenario("nope").is_none());
+    }
+
+    #[test]
+    fn run_check_rejects_bad_usage() {
+        let mut cfg = CheckConfig { scenario: "nope".to_string(), ..CheckConfig::default() };
+        assert!(run_check(&cfg).is_err());
+        cfg.scenario = "flat2".to_string();
+        cfg.faults.kill = true;
+        assert!(run_check(&cfg).is_err());
+        cfg.faults.kill = false;
+        cfg.n_tasks = 0;
+        assert!(run_check(&cfg).is_err());
+    }
+
+    #[test]
+    fn clean_flat2_exhausts_without_violation() {
+        let cfg = CheckConfig {
+            n_tasks: 2,
+            seeds: 8,
+            ..CheckConfig::default()
+        };
+        let report = run_check(&cfg).unwrap();
+        assert!(report.passed(), "unexpected violation: {:?}", report.counterexample);
+        assert!(report.exhausted, "state budget hit at {} states", report.states);
+        assert!(report.states > 0);
+        assert_eq!(report.fuzz_schedules, 8);
+    }
+
+    #[test]
+    fn seeded_drop_returned_is_caught_and_minimized() {
+        let cfg = CheckConfig {
+            n_tasks: 2,
+            faults: FaultSet { steal: true, cancel: false, recall: true, kill: false },
+            bug: Some(SeededBug::DropReturned { nth: 1 }),
+            seeds: 8,
+            ..CheckConfig::default()
+        };
+        let report = run_check(&cfg).unwrap();
+        let cex = report.counterexample.expect("seeded bug must be caught");
+        assert_eq!(cex.violation.oracle, "conservation");
+        assert!(!cex.events.is_empty());
+        assert!(cex.events.len() <= cex.original_len);
+        // The artifact round-trips and still reproduces on replay.
+        let text = report.counterexample_trace().unwrap();
+        let replayed = replay_trace_text(&text).unwrap();
+        let rv = replayed.counterexample.expect("replay must reproduce");
+        assert_eq!(rv.violation.oracle, "conservation");
+    }
+
+    #[test]
+    fn fnv64_is_stable() {
+        use std::hash::Hasher;
+        let mut h = Fnv64::new();
+        h.write(b"caravan");
+        let a = h.finish();
+        let mut h2 = Fnv64::new();
+        h2.write(b"caravan");
+        assert_eq!(a, h2.finish());
+        let mut h3 = Fnv64::new();
+        h3.write(b"caravan!");
+        assert_ne!(a, h3.finish());
+    }
+}

@@ -1,0 +1,262 @@
+//! Invariant oracles over a [`Model`] snapshot. The step-wise oracles
+//! ([`conservation`], [`credit_bound`]) run after every event; the
+//! [`recall_quiescence`] oracle runs at graft time; [`terminal`] runs
+//! when no event is enabled. The remaining oracles (double-grant,
+//! duplicate-result, double-dispatch) have natural single detection
+//! points and live inline in [`Model`]'s apply paths.
+
+use crate::scheduler::protocol::ProtoMsg;
+
+use super::{Model, Violation};
+
+/// Tasks a message carries (`Results` count as their tasks: a result is
+/// the task's terminal form travelling up to the engine).
+fn msg_task_count(msg: &ProtoMsg) -> usize {
+    match msg {
+        ProtoMsg::Assign(ts) | ProtoMsg::Returned(ts) => ts.len(),
+        ProtoMsg::Results(rs) => rs.len(),
+        ProtoMsg::StealGrant { tasks, .. } => tasks.len(),
+        _ => 0,
+    }
+}
+
+/// Task conservation: every submitted task is in exactly one place —
+/// completed at the producer, pending at the producer, queued or stored
+/// in a live node, running on a consumer, or inside an in-flight
+/// message. Σ(all places) must equal the number submitted. This is the
+/// paper's "no task is ever lost" claim, and the oracle that catches a
+/// missing `on_returned` (dropped recall batch) or a dead link leaking
+/// its outstanding grants.
+pub(crate) fn conservation(m: &Model) -> Option<Violation> {
+    let mut acc: u64 = m.producer.completed() + m.producer.pending_len() as u64;
+    let mut queued: u64 = 0;
+    let mut stored: u64 = 0;
+    for st in m.nodes.iter().flatten() {
+        queued += st.queue_len() as u64;
+        stored += st.store_len() as u64;
+    }
+    acc += queued + stored;
+    let mut running: u64 = 0;
+    for slots in &m.running {
+        running += slots.iter().filter(|s| s.is_some()).count() as u64;
+    }
+    acc += running;
+    let mut in_flight: u64 = 0;
+    for q in m.edges.values() {
+        for msg in q {
+            in_flight += msg_task_count(msg) as u64;
+        }
+    }
+    acc += in_flight;
+    if acc != m.n_tasks as u64 {
+        Some(Violation::new(
+            "conservation",
+            format!(
+                "accounted {acc} tasks but {} were submitted (completed {} + pending {} + \
+                 queued {queued} + stored {stored} + running {running} + in-flight {in_flight})",
+                m.n_tasks,
+                m.producer.completed(),
+                m.producer.pending_len(),
+            ),
+        ))
+    } else {
+        None
+    }
+}
+
+/// Credit bound: no node's queue may exceed `credit_factor ×
+/// subtree_consumers` — the flow-control property that keeps memory
+/// bounded at every tree level (request amounts are `bound − level`, so
+/// a correct protocol can never overshoot; the model runs with zero
+/// retries, which is the only sanctioned source of transient overshoot
+/// in the runtimes).
+pub(crate) fn credit_bound(m: &Model) -> Option<Violation> {
+    for (id, st) in m.nodes.iter().enumerate() {
+        let Some(st) = st else { continue };
+        if st.queue_len() > st.credit_bound() {
+            return Some(Violation::new(
+                "credit-bound",
+                format!(
+                    "node n{id} queued {} tasks, over its credit bound {}",
+                    st.queue_len(),
+                    st.credit_bound()
+                ),
+            ));
+        }
+    }
+    None
+}
+
+/// Recall quiescence, checked at the all-acks moment (graft time): the
+/// producer holds every root's ack, so the old tree must be provably
+/// empty — nothing queued, stored or running at any live node, no task
+/// or result still in flight, and no grant unaccounted for. A task
+/// found here would be stranded below the recall root and silently lost
+/// by the graft.
+pub(crate) fn recall_quiescence(m: &Model) -> Option<Violation> {
+    for (id, st) in m.nodes.iter().enumerate() {
+        let Some(st) = st else { continue };
+        if st.queue_len() > 0 || st.store_len() > 0 {
+            return Some(Violation::new(
+                "recall-quiescence",
+                format!(
+                    "all recall acks held, but node n{id} still has {} queued / {} stored",
+                    st.queue_len(),
+                    st.store_len()
+                ),
+            ));
+        }
+    }
+    for (node, slots) in m.running.iter().enumerate() {
+        for (consumer, s) in slots.iter().enumerate() {
+            if let Some((t, _)) = s {
+                return Some(Violation::new(
+                    "recall-quiescence",
+                    format!(
+                        "all recall acks held, but task {} is still running on \
+                         n{node}/consumer {consumer}",
+                        t.id
+                    ),
+                ));
+            }
+        }
+    }
+    for ((from, to), q) in &m.edges {
+        for msg in q {
+            if msg_task_count(msg) > 0 {
+                return Some(Violation::new(
+                    "recall-quiescence",
+                    format!(
+                        "all recall acks held, but {} task(s) are still in flight \
+                         {from} -> {to}",
+                        msg_task_count(msg)
+                    ),
+                ));
+            }
+        }
+    }
+    if let Some(&id) = m.granted_live.iter().next() {
+        return Some(Violation::new(
+            "recall-quiescence",
+            format!("all recall acks held, but granted task {id} was never accounted back"),
+        ));
+    }
+    None
+}
+
+/// End-state oracle, meaningful only when no event is enabled: the run
+/// must have reached orderly shutdown with every task completed exactly
+/// once. Anything else is a deadlock (progress wedged) or a lost /
+/// multiplied task.
+pub(crate) fn terminal(m: &Model) -> Option<Violation> {
+    if !m.producer.shutdown_sent() {
+        return Some(Violation::new(
+            "deadlock",
+            format!(
+                "no event is enabled but shutdown never happened (completed {}/{}, \
+                 pending {}, in-flight {})",
+                m.producer.completed(),
+                m.n_tasks,
+                m.producer.pending_len(),
+                m.producer.in_flight(),
+            ),
+        ));
+    }
+    if m.producer.completed() != m.n_tasks as u64 {
+        return Some(Violation::new(
+            "termination",
+            format!(
+                "run shut down with {} of {} tasks completed",
+                m.producer.completed(),
+                m.n_tasks
+            ),
+        ));
+    }
+    if m.results_seen.len() != m.n_tasks {
+        return Some(Violation::new(
+            "termination",
+            format!(
+                "run shut down but the engine saw results for {} of {} tasks",
+                m.results_seen.len(),
+                m.n_tasks
+            ),
+        ));
+    }
+    if let Some(&id) = m.granted_live.iter().next() {
+        return Some(Violation::new(
+            "termination",
+            format!("run shut down with task {id} still granted into the tree"),
+        ));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{scenario, FaultSet};
+    use super::*;
+    use crate::scheduler::protocol::Party;
+    use crate::tasklib::{Payload, TaskSpec};
+
+    fn model() -> Model {
+        let sc = scenario("flat2").expect("flat2 registered");
+        Model::new(&sc.cfg, 2, FaultSet::default(), None).expect("clean init")
+    }
+
+    #[test]
+    fn clean_init_passes_stepwise_oracles() {
+        let m = model();
+        assert!(conservation(&m).is_none());
+        assert!(credit_bound(&m).is_none());
+        assert!(recall_quiescence(&m).is_none());
+    }
+
+    #[test]
+    fn conservation_catches_a_lost_task() {
+        let mut m = model();
+        // Pretend a third task was submitted that no ledger holds.
+        m.n_tasks += 1;
+        let v = conservation(&m).expect("must fire");
+        assert_eq!(v.oracle, "conservation");
+    }
+
+    #[test]
+    fn credit_bound_catches_an_overflowed_queue() {
+        let mut m = model();
+        // Forge an oversized grant straight onto the wire (bypassing the
+        // producer), bumping n_tasks so conservation stays neutral and
+        // the credit oracle is what fires.
+        let extra: Vec<TaskSpec> = (100..110)
+            .map(|id| TaskSpec::new(id, Payload::Sleep { seconds: 1.0 }))
+            .collect();
+        m.n_tasks += extra.len();
+        let to = Party::Node(m.topo.roots[0]);
+        m.edges
+            .entry((Party::Producer, to))
+            .or_default()
+            .push_back(ProtoMsg::Assign(extra));
+        assert!(conservation(&m).is_none());
+        let ev = super::super::Event::Deliver { from: Party::Producer, to };
+        m.apply(ev).expect("delivery itself is clean");
+        let v = credit_bound(&m).expect("must fire");
+        assert_eq!(v.oracle, "credit-bound");
+    }
+
+    #[test]
+    fn quiescence_catches_an_in_flight_task() {
+        let mut m = model();
+        let to = Party::Node(m.topo.roots[0]);
+        m.edges.entry((Party::Producer, to)).or_default().push_back(ProtoMsg::Assign(vec![
+            TaskSpec::new(0, Payload::Sleep { seconds: 1.0 }),
+        ]));
+        let v = recall_quiescence(&m).expect("must fire");
+        assert_eq!(v.oracle, "recall-quiescence");
+    }
+
+    #[test]
+    fn terminal_on_unfinished_state_is_a_deadlock() {
+        let m = model();
+        let v = terminal(&m).expect("init is far from done");
+        assert_eq!(v.oracle, "deadlock");
+    }
+}

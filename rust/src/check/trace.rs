@@ -1,0 +1,329 @@
+//! Replayable trace artifacts and counterexample minimization.
+//!
+//! Trace format v1 — line-oriented, self-describing, diff-friendly:
+//!
+//! ```text
+//! # caravan check trace v1
+//! scenario flat2
+//! faults steal,cancel,recall
+//! tasks 3
+//! bug drop-returned:1        (only when a seeded bug was armed)
+//! step deliver producer->n0
+//! step finish n1 0
+//! step cancel 1
+//! step kill 1
+//! step recall
+//! end
+//! ```
+//!
+//! A `deliver` step names only the edge — it delivers whatever message
+//! is at that edge's FIFO head — so traces stay replayable across
+//! protocol-internal changes that re-batch or re-order payloads.
+//! Replay skip-repairs: a step that is not enabled in the replayed
+//! state is skipped, not fatal.
+
+use crate::scheduler::protocol::Party;
+
+use super::{Event, FaultSet, Model, SeededBug, Violation};
+
+/// Header comment of format v1 (also the version sentinel on parse).
+pub const TRACE_HEADER: &str = "# caravan check trace v1";
+
+/// A parsed trace artifact: the model coordinates plus the schedule.
+#[derive(Clone, Debug)]
+pub struct ParsedTrace {
+    /// Scenario name the trace was recorded against.
+    pub scenario: String,
+    /// Faults that were armed.
+    pub faults: FaultSet,
+    /// Tasks the model engine submits.
+    pub n_tasks: usize,
+    /// Seeded bug to re-arm, if any.
+    pub bug: Option<SeededBug>,
+    /// The event schedule.
+    pub events: Vec<Event>,
+}
+
+fn fmt_event(ev: &Event) -> String {
+    match *ev {
+        Event::Deliver { from, to } => format!("deliver {from}->{to}"),
+        Event::Finish { node, consumer } => format!("finish n{node} {consumer}"),
+        Event::Cancel { id } => format!("cancel {id}"),
+        Event::Kill { slot } => format!("kill {slot}"),
+        Event::Recall => "recall".to_string(),
+    }
+}
+
+/// Render a schedule as a replayable trace artifact.
+pub fn format_trace(
+    scenario: &str,
+    faults: FaultSet,
+    n_tasks: usize,
+    bug: Option<SeededBug>,
+    events: &[Event],
+) -> String {
+    let mut out = String::new();
+    out.push_str(TRACE_HEADER);
+    out.push('\n');
+    out.push_str(&format!("scenario {scenario}\n"));
+    out.push_str(&format!("faults {faults}\n"));
+    out.push_str(&format!("tasks {n_tasks}\n"));
+    if let Some(b) = bug {
+        out.push_str(&format!("bug {b}\n"));
+    }
+    for ev in events {
+        out.push_str(&format!("step {}\n", fmt_event(ev)));
+    }
+    out.push_str("end\n");
+    out
+}
+
+fn parse_party(s: &str) -> Result<Party, String> {
+    if s == "producer" {
+        return Ok(Party::Producer);
+    }
+    match s.strip_prefix('n').and_then(|n| n.parse::<usize>().ok()) {
+        Some(id) => Ok(Party::Node(id)),
+        None => Err(format!("bad party '{s}' (expected 'producer' or 'nID')")),
+    }
+}
+
+fn parse_step(rest: &str) -> Result<Event, String> {
+    let mut toks = rest.split_whitespace();
+    let kind = toks.next().ok_or_else(|| "empty step".to_string())?;
+    let ev = match kind {
+        "deliver" => {
+            let edge = toks.next().ok_or_else(|| "deliver needs FROM->TO".to_string())?;
+            let (from, to) = edge
+                .split_once("->")
+                .ok_or_else(|| format!("bad deliver edge '{edge}' (expected FROM->TO)"))?;
+            Event::Deliver { from: parse_party(from)?, to: parse_party(to)? }
+        }
+        "finish" => {
+            let node = toks.next().ok_or_else(|| "finish needs a node".to_string())?;
+            let Party::Node(node) = parse_party(node)? else {
+                return Err("finish needs a buffer node, not the producer".to_string());
+            };
+            let consumer = toks
+                .next()
+                .and_then(|c| c.parse::<usize>().ok())
+                .ok_or_else(|| "finish needs a consumer index".to_string())?;
+            Event::Finish { node, consumer }
+        }
+        "cancel" => {
+            let id = toks
+                .next()
+                .and_then(|t| t.parse::<u64>().ok())
+                .ok_or_else(|| "cancel needs a task id".to_string())?;
+            Event::Cancel { id }
+        }
+        "kill" => {
+            let slot = toks
+                .next()
+                .and_then(|t| t.parse::<usize>().ok())
+                .ok_or_else(|| "kill needs a root slot".to_string())?;
+            Event::Kill { slot }
+        }
+        "recall" => Event::Recall,
+        other => return Err(format!("unknown step kind '{other}'")),
+    };
+    if let Some(extra) = toks.next() {
+        return Err(format!("trailing token '{extra}' after {kind} step"));
+    }
+    Ok(ev)
+}
+
+/// Parse a trace artifact (inverse of [`format_trace`]).
+pub fn parse_trace(text: &str) -> Result<ParsedTrace, String> {
+    let mut scenario: Option<String> = None;
+    let mut faults: Option<FaultSet> = None;
+    let mut n_tasks: Option<usize> = None;
+    let mut bug: Option<SeededBug> = None;
+    let mut events = Vec::new();
+    let mut saw_end = false;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        let at = |e: String| format!("trace line {}: {e}", lineno + 1);
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if saw_end {
+            return Err(at(format!("content after 'end': '{line}'")));
+        }
+        let (key, rest) = match line.split_once(' ') {
+            Some((k, r)) => (k, r.trim()),
+            None => (line, ""),
+        };
+        match key {
+            "scenario" => scenario = Some(rest.to_string()),
+            "faults" => faults = Some(FaultSet::parse(rest).map_err(at)?),
+            "tasks" => {
+                n_tasks =
+                    Some(rest.parse::<usize>().map_err(|e| at(format!("bad task count: {e}")))?);
+            }
+            "bug" => bug = Some(SeededBug::parse(rest).map_err(at)?),
+            "step" => events.push(parse_step(rest).map_err(at)?),
+            "end" => saw_end = true,
+            other => return Err(at(format!("unknown directive '{other}'"))),
+        }
+    }
+    if !saw_end {
+        return Err("trace is missing its 'end' line (truncated?)".to_string());
+    }
+    Ok(ParsedTrace {
+        scenario: scenario.ok_or("trace is missing a 'scenario' line")?,
+        faults: faults.ok_or("trace is missing a 'faults' line")?,
+        n_tasks: n_tasks.ok_or("trace is missing a 'tasks' line")?,
+        bug,
+        events,
+    })
+}
+
+/// Replay a schedule from `init`, skip-repairing steps that are not
+/// enabled. Returns the first oracle violation, including — when the
+/// schedule runs to a state with nothing enabled — the terminal oracle.
+pub(crate) fn replay(init: &Model, events: &[Event]) -> Option<Violation> {
+    let mut m = init.clone();
+    for &ev in events {
+        if !m.is_enabled(ev) {
+            continue;
+        }
+        if let Some(v) = m.apply(ev).err().or_else(|| m.check_invariants()) {
+            return Some(v);
+        }
+    }
+    if m.enabled_events(false).is_empty() {
+        return m.check_terminal();
+    }
+    None
+}
+
+/// Delta-debugging (ddmin) shrink: remove event chunks at doubling
+/// granularity while the shortened schedule still reproduces *a*
+/// violation under [`replay`]. Returns a 1-minimal schedule — removing
+/// any single remaining event loses the violation.
+pub(crate) fn shrink(init: &Model, events: Vec<Event>) -> Vec<Event> {
+    if replay(init, &events).is_none() {
+        // Not reproducible from a cold replay (should not happen — the
+        // schedule came from this very model); return it unshrunk.
+        return events;
+    }
+    let mut cur = events;
+    let mut n: usize = 2;
+    while cur.len() >= 2 {
+        let chunk = cur.len().div_ceil(n);
+        let mut reduced = false;
+        let mut start = 0;
+        while start < cur.len() {
+            let end = (start + chunk).min(cur.len());
+            let mut cand = Vec::with_capacity(cur.len() - (end - start));
+            cand.extend_from_slice(&cur[..start]);
+            cand.extend_from_slice(&cur[end..]);
+            if !cand.is_empty() && replay(init, &cand).is_some() {
+                cur = cand;
+                n = (n - 1).max(2);
+                reduced = true;
+                break;
+            }
+            start = end;
+        }
+        if !reduced {
+            if chunk == 1 {
+                break;
+            }
+            n = (n * 2).min(cur.len());
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{scenario, SeededBug};
+    use super::*;
+
+    fn events() -> Vec<Event> {
+        vec![
+            Event::Deliver { from: Party::Node(0), to: Party::Producer },
+            Event::Deliver { from: Party::Producer, to: Party::Node(0) },
+            Event::Finish { node: 0, consumer: 0 },
+            Event::Cancel { id: 1 },
+            Event::Kill { slot: 1 },
+            Event::Recall,
+        ]
+    }
+
+    #[test]
+    fn trace_round_trips() {
+        let faults = FaultSet { steal: true, cancel: true, recall: true, kill: true };
+        let text = format_trace(
+            "deep4",
+            faults,
+            3,
+            Some(SeededBug::DropReturned { nth: 2 }),
+            &events(),
+        );
+        assert!(text.starts_with(TRACE_HEADER));
+        assert!(text.ends_with("end\n"));
+        let parsed = parse_trace(&text).expect("round trip");
+        assert_eq!(parsed.scenario, "deep4");
+        assert_eq!(parsed.faults, faults);
+        assert_eq!(parsed.n_tasks, 3);
+        assert_eq!(parsed.bug, Some(SeededBug::DropReturned { nth: 2 }));
+        assert_eq!(parsed.events, events());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_traces() {
+        assert!(parse_trace("").is_err());
+        assert!(parse_trace("scenario flat2\nfaults none\ntasks 2\n").is_err());
+        assert!(parse_trace("scenario flat2\nfaults none\ntasks 2\nstep levitate\nend\n").is_err());
+        assert!(
+            parse_trace("scenario flat2\nfaults none\ntasks 2\nstep deliver producer\nend\n")
+                .is_err()
+        );
+        assert!(parse_trace("scenario flat2\nfaults bogus\ntasks 2\nend\n").is_err());
+        assert!(parse_trace("scenario flat2\nfaults none\ntasks 2\nend\nstep recall\n").is_err());
+    }
+
+    #[test]
+    fn replay_skip_repairs_disabled_steps() {
+        let sc = scenario("flat2").expect("flat2 registered");
+        let init = Model::new(&sc.cfg, 2, FaultSet::default(), None).expect("clean init");
+        // A schedule of entirely disabled steps: nothing fires, nothing
+        // terminal — replay is green.
+        let bogus = vec![
+            Event::Finish { node: 0, consumer: 0 },
+            Event::Deliver { from: Party::Node(7), to: Party::Node(9) },
+            Event::Recall,
+            Event::Kill { slot: 1 },
+        ];
+        assert!(replay(&init, &bogus).is_none());
+    }
+
+    #[test]
+    fn shrink_produces_a_minimal_reproducing_schedule() {
+        let sc = scenario("flat2").expect("flat2 registered");
+        let faults = FaultSet { steal: true, cancel: false, recall: true, kill: false };
+        let init = Model::new(&sc.cfg, 2, faults, Some(SeededBug::DropReturned { nth: 1 }))
+            .expect("clean init");
+        // Find a violating schedule via the fuzzer, then shrink it.
+        let out = super::super::explore::fuzz(&init, 64, 5_000);
+        let (_, schedule) = out.violation.expect("seeded bug must be caught by fuzzing");
+        let min = shrink(&init, schedule.clone());
+        assert!(!min.is_empty());
+        assert!(min.len() <= schedule.len());
+        assert!(replay(&init, &min).is_some(), "minimized schedule must still reproduce");
+        // 1-minimality: dropping any single event loses the violation.
+        for i in 0..min.len() {
+            let mut cand = min.clone();
+            cand.remove(i);
+            if !cand.is_empty() {
+                assert!(
+                    replay(&init, &cand).is_none(),
+                    "schedule not 1-minimal: event {i} is removable"
+                );
+            }
+        }
+    }
+}

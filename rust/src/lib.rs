@@ -39,7 +39,13 @@
 //! * [`lint`] — `caravan lint`: a dependency-free static-analysis pass
 //!   over the crate's own sources enforcing the determinism and
 //!   NaN-safety invariants (float ordering, virtual-time purity,
-//!   iteration-order determinism, panic budgets, no unsafe).
+//!   iteration-order determinism, panic budgets, panic-free protocol
+//!   paths, no unsafe).
+//! * [`check`] — `caravan check`: a bounded model checker that drives
+//!   the pure protocol state machines through every message
+//!   interleaving at a small bound (DFS + partial-order reduction,
+//!   seeded schedule fuzzing beyond it), with invariant oracles and
+//!   delta-debugged, replayable counterexample traces.
 //! * [`util`] — self-contained infrastructure (deterministic RNG, statistics,
 //!   JSON, CLI, logging) so the crate builds offline.
 
@@ -61,4 +67,5 @@ pub mod extproc;
 pub mod transport;
 pub mod config;
 pub mod lint;
+pub mod check;
 pub mod testutil;

@@ -15,6 +15,7 @@
 //! | `wall-clock` | `Instant::now` / `SystemTime` outside the I/O allowlist |
 //! | `hash-iter` | `HashMap`/`HashSet` in deterministic-output paths |
 //! | `unwrap-budget` | `.unwrap()` / `.expect()` in protocol/transport/tenancy non-test code |
+//! | `panic-path` | `panic!` / `unreachable!` / `assert!`-family / `expr[index]` in the same panic-free zones |
 //! | `no-unsafe` | any `unsafe`, plus a missing `#![forbid(unsafe_code)]` in the crate root |
 //!
 //! A violation can be waived in place with an escape hatch that *must*
@@ -78,7 +79,7 @@ fn parse_directives(comments: &[lexer::Comment], known: &[&'static str]) -> (Vec
                     line: c.line,
                     msg: format!("lint:allow names unknown rule {n:?}"),
                     hint: "valid rules: float-ord, wall-clock, hash-iter, unwrap-budget, \
-                           no-unsafe",
+                           panic-path, no-unsafe",
                 });
             }
         }

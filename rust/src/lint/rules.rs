@@ -39,6 +39,7 @@ pub fn all_rules() -> Vec<Box<dyn Rule>> {
         Box::new(WallClock),
         Box::new(HashIter),
         Box::new(UnwrapBudget),
+        Box::new(PanicPath),
         Box::new(NoUnsafe),
     ]
 }
@@ -200,10 +201,11 @@ impl Rule for WallClock {
 /// (or justify a lookup-only map with `lint:allow`).
 pub struct HashIter;
 
-/// Deterministic-output paths: the DES, metrics/report building, and the
-/// session status surface.
+/// Deterministic-output paths: the DES, metrics/report building, the
+/// session status surface, and the model checker (whose state counts and
+/// visited-set pruning must be bit-identical run to run).
 pub const HASH_ITER_SCOPE: &[&str] =
-    &["src/des/", "src/scheduler/metrics.rs", "src/engine/session.rs"];
+    &["src/des/", "src/scheduler/metrics.rs", "src/engine/session.rs", "src/check/"];
 
 impl Rule for HashIter {
     fn name(&self) -> &'static str {
@@ -269,6 +271,80 @@ impl Rule for UnwrapBudget {
                     hint: "bubble the error with `?`, `let .. else`, Option::filter or a match \
                            — a panic here tears down the subtree and drops its queue",
                 });
+            }
+        }
+        out
+    }
+}
+
+/// **panic-path** — the no-panicking-construct rule.
+///
+/// Complements `unwrap-budget` in the same panic-free zones: `panic!`,
+/// `unreachable!`, the `assert!` family and direct `expr[index]`
+/// indexing all abort the thread on bad input, and in the buffer tree a
+/// thread abort drops every queued task in its subtree. Non-test code in
+/// the scoped paths must bubble errors and use `.get(..)`-style access
+/// (or waive a structurally-safe site with `lint:allow(panic-path)`).
+pub struct PanicPath;
+
+const PANIC_MACROS: &[&str] =
+    &["panic", "unreachable", "assert", "assert_eq", "assert_ne", "todo", "unimplemented"];
+
+/// Identifier-shaped keywords after which a `[` opens a slice/array
+/// literal, pattern or type — not an indexing expression.
+const NON_INDEX_KEYWORDS: &[&str] = &[
+    "as", "box", "break", "const", "continue", "dyn", "else", "fn", "for", "if", "impl", "in",
+    "let", "loop", "match", "mod", "move", "mut", "pub", "ref", "return", "static", "struct",
+    "trait", "type", "use", "where", "while",
+];
+
+fn is_ident_like(t: &str) -> bool {
+    t.chars().next().map_or(false, |c| c.is_alphabetic() || c == '_')
+}
+
+impl Rule for PanicPath {
+    fn name(&self) -> &'static str {
+        "panic-path"
+    }
+    fn applies(&self, path: &str) -> bool {
+        !is_test_path(path) && path_in(path, UNWRAP_BUDGET_SCOPE)
+    }
+    fn check(&self, _path: &str, lexed: &Lexed) -> Vec<Violation> {
+        let toks = &lexed.tokens;
+        let mut out = Vec::new();
+        for i in 0..toks.len() {
+            if toks[i].in_test {
+                continue;
+            }
+            let t = toks[i].text.as_str();
+            if PANIC_MACROS.contains(&t) && toks.get(i + 1).map_or(false, |n| n.text == "!") {
+                out.push(Violation {
+                    rule: self.name(),
+                    line: toks[i].line,
+                    msg: format!("{t}! in panic-free scheduler/transport/tenancy code"),
+                    hint: "return an error or a safe default instead — a panic here tears down \
+                           the subtree and drops its queue",
+                });
+                continue;
+            }
+            // `expr[index]`: a `[` directly after a call/index result or a
+            // plain identifier is an indexing expression; after `#`, `!`,
+            // punctuation or a slice-position keyword it is an attribute,
+            // macro-bracket, literal, pattern or type.
+            if t == "[" && i > 0 {
+                let p = toks[i - 1].text.as_str();
+                let indexes =
+                    p == ")" || p == "]" || (is_ident_like(p) && !NON_INDEX_KEYWORDS.contains(&p));
+                if indexes {
+                    out.push(Violation {
+                        rule: self.name(),
+                        line: toks[i].line,
+                        msg: "direct `expr[index]` in panic-free code (out-of-range panics)"
+                            .into(),
+                        hint: "use .get(..) / .get_mut(..) and handle the None, or \
+                               split_first / split_last / iterators for structural access",
+                    });
+                }
             }
         }
         out
@@ -394,6 +470,49 @@ mod tests {
         assert!(run(&UnwrapBudget, "src/scheduler/protocol.rs", ok).is_empty());
         let exp = "fn f(x: Option<u32>) -> u32 { x.expect(\"always\") }";
         assert_eq!(run(&UnwrapBudget, "src/scheduler/protocol.rs", exp).len(), 1);
+    }
+
+    #[test]
+    fn panic_path_flags_macros_and_indexing_in_scope() {
+        for bad in [
+            "fn f() { panic!(\"boom\"); }",
+            "fn f(x: u32) { if x > 3 { unreachable!() } }",
+            "fn f(a: usize, b: usize) { assert_eq!(a, b); }",
+            "fn f(v: &[u32], i: usize) -> u32 { v[i] }",
+            "fn f(v: &[u32]) -> &[u32] { &v[1..] }",
+            "fn f(m: &M, i: usize) -> u32 { m.cells()[i] }",
+        ] {
+            assert_eq!(run(&PanicPath, "src/scheduler/protocol.rs", bad).len(), 1, "{bad}");
+            assert_eq!(run(&PanicPath, "src/transport/wire.rs", bad).len(), 1, "{bad}");
+        }
+        // Chained indexing flags each `[`.
+        let twice = "fn f(g: &[Vec<u32>], i: usize, j: usize) -> u32 { g[i][j] }";
+        assert_eq!(run(&PanicPath, "src/tenancy/mod.rs", twice).len(), 2);
+        // Out of scope and test code are exempt.
+        let bad = "fn f(v: &[u32], i: usize) -> u32 { v[i] }";
+        assert!(run(&PanicPath, "src/engine/sweep.rs", bad).is_empty());
+        assert!(run(&PanicPath, "tests/check.rs", bad).is_empty());
+        let in_test = "#[cfg(test)] mod tests { fn t(v: &[u32]) -> u32 { assert!(true); v[0] } }";
+        assert!(run(&PanicPath, "src/scheduler/protocol.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn panic_path_ignores_non_indexing_brackets() {
+        for clean in [
+            "#[derive(Clone, Debug)] struct S { v: Vec<u32> }",
+            "fn f() -> [u8; 4] { [0, 1, 2, 3] }",
+            "fn f(v: &[u8]) -> Vec<u8> { vec![0; v.len()] }",
+            "fn f(x: &[u8]) -> Option<u8> { x.get(0).copied() }",
+            "fn f() { let pair = [1, 2]; let _ = pair.iter().sum::<u32>(); }",
+            "fn f(x: &[u8]) -> bool { matches!(x, [1, ..]) }",
+            "fn f(a: u8) -> [u8; 1] { return [a]; }",
+            "fn f(v: &mut [u8]) -> Option<&mut u8> { v.get_mut(0) }",
+        ] {
+            assert!(run(&PanicPath, "src/scheduler/protocol.rs", clean).is_empty(), "{clean}");
+        }
+        // debug_assert is its own identifier, not part of the macro list.
+        let dbg = "fn f(a: usize) { debug_assert_ne(a, 0); }";
+        assert!(run(&PanicPath, "src/scheduler/protocol.rs", dbg).is_empty());
     }
 
     #[test]

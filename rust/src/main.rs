@@ -12,6 +12,10 @@
 //!   info            print artifact + scenario inventory
 //!   lint            determinism & NaN-safety static analysis over the
 //!                   crate's own sources (exit 1 on violations; CI gates)
+//!   check           bounded model checking of the scheduler protocol:
+//!                   exhaustive interleaving search + seeded schedule
+//!                   fuzzing with invariant oracles; violations shrink
+//!                   to minimal replayable traces (exit 1; CI gates)
 //!
 //! Examples:
 //!   caravan run "sh -c 'echo 1 > _results.txt'" --n 32 --np 4 --retries 2
@@ -22,6 +26,7 @@
 //!   caravan evac --variant tiny --backend pjrt --seed 3
 //!   caravan info
 //!   caravan lint --fix-hints rust/src
+//!   caravan check --scenario deep4 --faults steal,cancel,recall,kill --max-tasks 2
 
 use std::sync::Arc;
 
@@ -101,7 +106,7 @@ impl Executor for WorkerExecutor {
 
 fn usage() {
     eprintln!(
-        "usage: caravan <run|worker|des|evac|info|lint> [--options] (--help prints this)
+        "usage: caravan <run|worker|des|evac|info|lint|check> [--options] (--help prints this)
 
   run '<cmdline>'   run an external command through the scheduler
       --n N           number of tasks (default 10)
@@ -180,7 +185,29 @@ fn usage() {
                     rust/benches (or src/tests/benches from inside
                     rust/). Exit 0 clean, 1 on violations, 2 on
                     usage/IO errors.
-      --fix-hints     print a suggested fix under every violation"
+      --fix-hints     print a suggested fix under every violation
+
+  check             bounded model checking of the scheduler protocol:
+                    exhaustive DFS over message interleavings (with
+                    partial-order reduction), then seeded schedule
+                    fuzzing, with invariant oracles after every step.
+                    Exit 0 when every oracle held, 1 on a violation
+                    (with a minimized replayable trace), 2 on usage/IO
+                    errors — CI gates on this.
+      --scenario S    model topology: flat2 (default), deep4, or 'all'
+      --max-tasks N   tasks the model engine submits (1..=16, default 3)
+      --max-depth D   DFS schedule-depth bound (default 400)
+      --max-states N  unique-state budget for the DFS (default 200000)
+      --faults LIST   comma-separated fault events to inject:
+                      steal,cancel,recall,kill or 'none' (default
+                      steal,cancel,recall; kill needs --scenario deep4)
+      --seeds N       fuzz schedules after a clean DFS (default 64;
+                      0 disables fuzzing)
+      --fuzz-steps N  per-schedule event cap for the fuzzer (default 5000)
+      --inject-bug B  arm a deliberately seeded protocol bug
+                      (drop-returned[:N]) to prove the oracles catch it
+      --replay FILE   replay a trace artifact instead of exploring
+      --trace-out F   also write the minimized counterexample trace to F"
     );
 }
 
@@ -267,6 +294,7 @@ fn main() {
         Some("evac") => cmd_evac(&args),
         Some("info") => cmd_info(&args),
         Some("lint") => cmd_lint(&args),
+        Some("check") => cmd_check(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}");
@@ -611,5 +639,121 @@ fn cmd_lint(args: &Args) {
                 std::process::exit(1);
             }
         }
+    }
+}
+
+/// Print one checker report, writing the minimized counterexample trace
+/// to `trace_out` when given. Returns whether the run passed.
+fn print_check_report(report: &caravan::check::CheckReport, trace_out: Option<&str>) -> bool {
+    let phase = if report.exhausted { "exhaustive" } else { "state budget hit" };
+    println!(
+        "caravan check: scenario {} [faults {}] tasks={} — {} states ({phase}, \
+         {} depth-pruned), {} fuzz schedule(s)",
+        report.scenario,
+        report.faults,
+        report.n_tasks,
+        report.states,
+        report.depth_pruned,
+        report.fuzz_schedules
+    );
+    let Some(cex) = &report.counterexample else {
+        println!("caravan check: {}: all oracles held", report.scenario);
+        return true;
+    };
+    println!("caravan check: VIOLATION [{}] {}", cex.violation.oracle, cex.violation.detail);
+    println!(
+        "caravan check: minimized schedule: {} event(s) (from {})",
+        cex.events.len(),
+        cex.original_len
+    );
+    let trace = report.counterexample_trace().unwrap_or_default();
+    println!("--- replay trace (caravan check --replay FILE) ---");
+    print!("{trace}");
+    println!("--- end trace ---");
+    if let Some(path) = trace_out {
+        if let Err(e) = std::fs::write(path, &trace) {
+            eprintln!("caravan check: --trace-out {path}: {e}");
+            std::process::exit(2);
+        }
+        println!("caravan check: trace written to {path}");
+    }
+    false
+}
+
+/// `caravan check [--options]` — run the bounded protocol model checker
+/// (see `caravan::check`): exhaustive DFS with partial-order reduction
+/// over message interleavings, then seeded schedule fuzzing, with
+/// invariant oracles after every step. Exit 0 when every oracle held,
+/// 1 on a violation (printing a delta-debugged, replayable trace), 2 on
+/// usage or IO errors — CI gates on this.
+fn cmd_check(args: &Args) {
+    use caravan::check::{replay_trace_text, run_check, scenarios, CheckConfig, FaultSet, SeededBug};
+
+    let trace_out = args.get_opt("trace-out");
+
+    if let Some(path) = args.get_opt("replay") {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("caravan check: --replay {path}: {e}");
+            std::process::exit(2);
+        });
+        let report = replay_trace_text(&text).unwrap_or_else(|e| {
+            eprintln!("caravan check: {e}");
+            std::process::exit(2);
+        });
+        if !print_check_report(&report, trace_out) {
+            std::process::exit(1);
+        }
+        return;
+    }
+
+    let defaults = CheckConfig::default();
+    let scenario_arg = args.get_str("scenario", &defaults.scenario).to_string();
+    let mut cfg = CheckConfig {
+        n_tasks: args.get_usize("max-tasks", defaults.n_tasks),
+        max_depth: args.get_usize("max-depth", defaults.max_depth),
+        max_states: args.get_u64("max-states", defaults.max_states),
+        seeds: args.get_u64("seeds", defaults.seeds),
+        fuzz_steps: args.get_usize("fuzz-steps", defaults.fuzz_steps),
+        ..defaults
+    };
+    if let Some(spec) = args.get_opt("faults") {
+        cfg.faults = FaultSet::parse(spec).unwrap_or_else(|e| {
+            eprintln!("caravan check: --faults: {e}");
+            std::process::exit(2);
+        });
+    }
+    if let Some(spec) = args.get_opt("inject-bug") {
+        cfg.bug = Some(SeededBug::parse(spec).unwrap_or_else(|e| {
+            eprintln!("caravan check: --inject-bug: {e}");
+            std::process::exit(2);
+        }));
+    }
+
+    let runs: Vec<(String, FaultSet)> = if scenario_arg == "all" {
+        // Under `all`, the kill fault only applies to scenarios that can
+        // model it — it is silently dropped elsewhere rather than erroring.
+        scenarios()
+            .iter()
+            .map(|sc| {
+                let mut f = cfg.faults;
+                f.kill = f.kill && sc.kill_ok;
+                (sc.name.to_string(), f)
+            })
+            .collect()
+    } else {
+        vec![(scenario_arg, cfg.faults)]
+    };
+
+    let mut all_passed = true;
+    for (name, faults) in runs {
+        let run_cfg = CheckConfig { scenario: name, faults, ..cfg.clone() };
+        let report = run_check(&run_cfg).unwrap_or_else(|e| {
+            eprintln!("caravan check: {e}");
+            std::process::exit(2);
+        });
+        all_passed &= print_check_report(&report, trace_out);
+    }
+    if !all_passed {
+        std::process::exit(1);
     }
 }

@@ -19,6 +19,9 @@ pub use metrics::{
     WAIT_BUCKET_EDGES,
 };
 pub use net::{connect_worker, run_worker, serve_scheduler, ServeOptions, WorkerReport};
-pub use protocol::{choose_shape, resolve_shape, shaped_fanouts, PrioQueue, MAX_AUTO_DEPTH};
+pub use protocol::{
+    choose_shape, resolve_shape, route_buffer_actions, route_producer_actions, shaped_fanouts,
+    LocalEffect, ModelStep, Party, PrioQueue, ProtoMsg, MAX_AUTO_DEPTH,
+};
 pub use reshape::{ReshapeController, ReshapeEvent};
 pub use threads::{run_scheduler, CancelSet, ExecOutcome, Executor, Report, SleepExecutor};

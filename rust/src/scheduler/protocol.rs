@@ -111,7 +111,7 @@ type BandKey = (OrdF64, u64);
 /// clock its owner advances via [`PrioQueue::set_now`] (wall-clock in the
 /// threaded runtime, virtual time in the DES), so both runtimes age and
 /// order tasks identically.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct PrioQueue {
     /// One lane per tenant class that has ever queued here, keyed by
     /// [`ClassId`]. Lanes are created on demand; a single-tenant run only
@@ -137,7 +137,7 @@ pub struct PrioQueue {
 /// ordering policy and dispatch counters. All invariants of the old
 /// single-tenant queue (FIFO-within-band, Σ wait-hist counts == popped)
 /// hold *per lane*, so they also hold for the aggregated view.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 struct Lane {
     bands: BTreeMap<Reverse<u8>, BTreeMap<BandKey, TaskSpec>>,
     len: usize,
@@ -204,7 +204,10 @@ impl Lane {
         self.len -= 1;
         self.popped += 1;
         let wait = (now - task.enqueued_t.unwrap_or(now)).max(0.0);
-        self.wait_hist.entry(task.priority).or_insert([0; N_WAIT_BINS])[wait_bin(wait)] += 1;
+        let hist = self.wait_hist.entry(task.priority).or_insert([0; N_WAIT_BINS]);
+        if let Some(slot) = hist.get_mut(wait_bin(wait)) {
+            *slot += 1;
+        }
         Some(task)
     }
 
@@ -458,6 +461,35 @@ impl PrioQueue {
         out
     }
 
+    /// Every queued task, in deterministic pop-order-compatible iteration
+    /// order (class lane, then priority band, then band key). Part of the
+    /// model-checker seam: [`crate::check`] uses it for its conservation
+    /// oracle and state fingerprints.
+    pub fn iter_tasks(&self) -> impl Iterator<Item = &TaskSpec> + '_ {
+        self.lanes.values().flat_map(|l| l.bands.values().flat_map(|sub| sub.values()))
+    }
+
+    /// Feed the scheduling-relevant queue state into `h` (model-checker
+    /// seam). Instrumentation — pop counters, wait histograms — and the
+    /// absolute arrival sequence are excluded, so states differing only
+    /// in metrics or in when (not in what order) tasks arrived collapse
+    /// to one fingerprint in the checker's visited set.
+    pub fn model_hash(&self, h: &mut impl std::hash::Hasher) {
+        h.write_usize(self.len);
+        h.write_u8(u8::from(self.cursor.is_some()));
+        h.write_u8(self.cursor.unwrap_or(0));
+        h.write_u64(self.quantum);
+        for (&class, lane) in &self.lanes {
+            h.write_u8(class);
+            h.write_usize(lane.len);
+            for sub in lane.bands.values() {
+                for t in sub.values() {
+                    hash_task(t, h);
+                }
+            }
+        }
+    }
+
     /// Remove the task with the given id, if queued here.
     pub fn remove(&mut self, id: TaskId) -> Option<TaskSpec> {
         for lane in self.lanes.values_mut() {
@@ -468,6 +500,29 @@ impl PrioQueue {
         }
         None
     }
+}
+
+/// Hash the scheduling-relevant fields of one task (model-checker seam).
+/// The payload is skipped: two model states whose queues hold the same
+/// ids in the same order behave identically regardless of payload bytes.
+fn hash_task(t: &TaskSpec, h: &mut impl std::hash::Hasher) {
+    h.write_u64(t.id);
+    h.write_u8(t.priority);
+    h.write_u32(t.attempt);
+    h.write_u32(t.max_retries);
+    h.write_u8(t.class);
+    h.write_u8(u8::from(t.timeout_s.is_some()));
+    h.write_u64(t.timeout_s.map_or(0, f64::to_bits));
+    h.write_u8(u8::from(t.enqueued_t.is_some()));
+    h.write_u64(t.enqueued_t.map_or(0, f64::to_bits));
+}
+
+/// Hash the protocol-relevant fields of one result (model-checker seam).
+fn hash_result(r: &TaskResult, h: &mut impl std::hash::Hasher) {
+    h.write_u64(r.id);
+    h.write_i32(r.rc);
+    h.write_u32(r.attempt);
+    h.write_usize(r.consumer);
 }
 
 /// Deepest tree the auto-shaping controller will pick. Each level adds a
@@ -503,7 +558,9 @@ pub fn shaped_fanouts(nb: usize, depth: usize, max_fanout: usize) -> Vec<usize> 
     }
     let f_top = (2..fmax).find(|&f| m.div_ceil(f) <= f).unwrap_or(fmax);
     let mut fans = vec![fmax; depth - 1];
-    fans[0] = f_top;
+    if let Some(top) = fans.first_mut() {
+        *top = f_top;
+    }
     fans
 }
 
@@ -653,7 +710,7 @@ pub enum BufferAction {
 
 /// Producer (rank 0) state: the global pending-task queue plus which
 /// children are waiting for work.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct ProducerState {
     pending: PrioQueue,
     /// `deficit[b]` = number of tasks child `b` asked for but hasn't received.
@@ -677,7 +734,9 @@ pub struct ProducerState {
 
 impl ProducerState {
     pub fn new(num_buffers: usize) -> Self {
-        assert!(num_buffers > 0);
+        // Clamp rather than assert: a zero-child producer is a caller bug,
+        // but panicking here would tear down the whole run.
+        let num_buffers = num_buffers.max(1);
         Self {
             pending: PrioQueue::new(),
             deficit: vec![0; num_buffers],
@@ -752,7 +811,9 @@ impl ProducerState {
     /// A child asked for `amount` more tasks.
     pub fn on_request(&mut self, buffer: usize, amount: usize) -> Vec<ProducerAction> {
         self.msgs_in += 1;
-        self.deficit[buffer] = self.deficit[buffer].saturating_add(amount);
+        if let Some(d) = self.deficit.get_mut(buffer) {
+            *d = d.saturating_add(amount);
+        }
         self.satisfy_deficits()
     }
 
@@ -871,11 +932,45 @@ impl ProducerState {
     /// children: deficits and the recall state reset, the pending queue
     /// and the submitted/completed accounting carry over.
     pub fn rewire(&mut self, num_buffers: usize) {
-        assert!(num_buffers > 0);
+        let num_buffers = num_buffers.max(1);
         self.recalling = false;
         self.deficit = vec![0; num_buffers];
         self.recall_acks = vec![false; num_buffers];
         self.cursor = 0;
+    }
+
+    /// Every pending task (model-checker seam: conservation oracle and
+    /// state fingerprints; see [`crate::check`]).
+    pub fn iter_pending(&self) -> impl Iterator<Item = &TaskSpec> + '_ {
+        self.pending.iter_tasks()
+    }
+
+    /// True when a recall is in flight and every direct child has acked —
+    /// the all-acks moment [`Self::on_recall_ack`] reports, queryable
+    /// after the fact (e.g. when [`Self::on_child_dead`] supplies the
+    /// final implicit ack).
+    pub fn recall_complete(&self) -> bool {
+        self.recalling && self.recall_acks.iter().all(|&a| a)
+    }
+
+    /// Feed the protocol-visible producer state into `h` (model-checker
+    /// seam). Message counters are excluded; everything that determines
+    /// future behaviour — the pending queue, per-child deficits, the
+    /// grant cursor, accounting, and the recall/shutdown flags — is in.
+    pub fn model_hash(&self, h: &mut impl std::hash::Hasher) {
+        self.pending.model_hash(h);
+        for &d in &self.deficit {
+            h.write_usize(d);
+        }
+        h.write_usize(self.cursor);
+        h.write_u64(self.submitted);
+        h.write_u64(self.completed);
+        h.write_u8(u8::from(self.engine_done));
+        h.write_u8(u8::from(self.shutdown_sent));
+        h.write_u8(u8::from(self.recalling));
+        for &a in &self.recall_acks {
+            h.write_u8(u8::from(a));
+        }
     }
 
     fn satisfy_deficits(&mut self) -> Vec<ProducerAction> {
@@ -899,12 +994,15 @@ impl ProducerState {
             let b = self.cursor;
             self.cursor = (self.cursor + 1) % nb;
             scanned += 1;
-            if self.deficit[b] == 0 {
+            // `b < nb` by the modulus above; Option::zip keeps that fact
+            // local (no indexing, no task ever popped without a home).
+            let Some((d, g)) = self.deficit.get_mut(b).zip(granted.get_mut(b)) else { break };
+            if *d == 0 {
                 continue;
             }
-            let take = self.deficit[b].min(GRANT_CHUNK).min(self.pending.len());
-            granted[b].extend(self.pending.pop_n(take));
-            self.deficit[b] -= take;
+            let take = (*d).min(GRANT_CHUNK).min(self.pending.len());
+            g.extend(self.pending.pop_n(take));
+            *d -= take;
             scanned = 0; // keep scanning while anyone still has deficit
         }
         let mut out = Vec::new();
@@ -932,7 +1030,7 @@ struct RunningTask {
 /// What a buffer node feeds: consumers (leaf) or child buffers (interior).
 /// A leaf remembers what each consumer is executing so failed attempts can
 /// be retried transparently and running attempts can be cancelled.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 enum Children {
     Consumers { n: usize, idle: VecDeque<usize>, running: Vec<Option<RunningTask>> },
     Buffers { deficit: Vec<usize>, cursor: usize, subtree: usize },
@@ -950,7 +1048,7 @@ impl RunningTask {
 
 /// Buffer-node state: local task queue, children, result store, and the
 /// demand-driven credit held against the parent.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct BufferState {
     children: Children,
     queue: PrioQueue,
@@ -1030,7 +1128,8 @@ impl BufferState {
     /// A leaf buffer feeding `n_consumers` consumers (stealing disabled) —
     /// the original two-level role.
     pub fn new(n_consumers: usize, credit_factor: usize, flush_every: usize) -> Self {
-        assert!(n_consumers > 0);
+        // Clamp rather than assert (see ProducerState::new).
+        let n_consumers = n_consumers.max(1);
         Self {
             children: Children::Consumers {
                 n: n_consumers,
@@ -1082,7 +1181,9 @@ impl BufferState {
         credit_factor: usize,
         flush_every: usize,
     ) -> Self {
-        assert!(n_children > 0 && subtree_consumers > 0);
+        // Clamp rather than assert (see ProducerState::new).
+        let n_children = n_children.max(1);
+        let subtree_consumers = subtree_consumers.max(1);
         Self {
             children: Children::Buffers {
                 deficit: vec![0; n_children],
@@ -1164,7 +1265,13 @@ impl BufferState {
     /// constructor both runtimes (threads, DES) use, so they can never
     /// disagree on a node's role, credit, or steal wiring.
     pub fn for_tree_node(topo: &TreeTopology, id: usize, cfg: &SchedulerConfig) -> Self {
-        let n = &topo.nodes[id];
+        let Some(n) = topo.nodes.get(id) else {
+            // Out-of-range id is a caller bug; degrade to a 1-consumer
+            // leaf rather than panicking the tree down.
+            return BufferState::new(1, cfg.credit_factor, cfg.flush_every)
+                .with_policy(cfg.policy)
+                .with_classes(cfg.class_table());
+        };
         let state = match &n.kind {
             TreeNodeKind::Leaf { n_consumers, .. } => {
                 BufferState::new(*n_consumers, cfg.credit_factor, cfg.flush_every)
@@ -1316,12 +1423,18 @@ impl BufferState {
     /// for more). A failed attempt with retries left is re-queued here —
     /// transparently to everything upstream.
     pub fn on_done(&mut self, consumer: usize, mut result: TaskResult) -> Vec<BufferAction> {
+        if !self.is_leaf() {
+            // A mis-routed Done at an interior node (no local consumers)
+            // degrades to a one-result child flush instead of a panic —
+            // the result still flows upstream, so conservation holds.
+            return self.on_child_results(vec![result]);
+        }
         self.msgs_in += 1;
         let slot = match &mut self.children {
             Children::Consumers { running, .. } => {
                 running.get_mut(consumer).and_then(|slot| slot.take())
             }
-            Children::Buffers { .. } => panic!("on_done called on an interior buffer node"),
+            Children::Buffers { .. } => None,
         };
         // A pending cancel for this id (kill requested while the attempt
         // raced to completion) is consumed by the final Done: it must
@@ -1361,17 +1474,16 @@ impl BufferState {
         // and anything queued (e.g. a retry re-queued just above) drains
         // back upstream for re-dispatch after the graft.
         let next = if self.recalling { None } else { self.queue.pop() };
-        match &mut self.children {
-            Children::Consumers { idle, running, .. } => {
-                if let Some(task) = next {
-                    running[consumer] = Some(RunningTask::track(&task));
-                    self.msgs_out += 1;
-                    out.push(BufferAction::RunOn { consumer, task });
-                } else {
-                    idle.push_back(consumer);
+        if let Children::Consumers { idle, running, .. } = &mut self.children {
+            if let Some(task) = next {
+                if let Some(slot) = running.get_mut(consumer) {
+                    *slot = Some(RunningTask::track(&task));
                 }
+                self.msgs_out += 1;
+                out.push(BufferAction::RunOn { consumer, task });
+            } else {
+                idle.push_back(consumer);
             }
-            Children::Buffers { .. } => unreachable!(),
         }
         if self.recalling {
             out.extend(self.drain_queue_upstream());
@@ -1390,11 +1502,13 @@ impl BufferState {
         self.msgs_in += 1;
         match &mut self.children {
             Children::Buffers { deficit, .. } => {
-                deficit[child] = deficit[child].saturating_add(amount);
+                if let Some(d) = deficit.get_mut(child) {
+                    *d = d.saturating_add(amount);
+                }
             }
-            Children::Consumers { .. } => {
-                panic!("on_child_request called on a leaf buffer node")
-            }
+            // A leaf has no child buffers: drop the stray request rather
+            // than panic (nothing was promised, so nothing is lost).
+            Children::Consumers { .. } => return Vec::new(),
         }
         if self.recalling {
             // Demand is remembered but not served: the child drains next.
@@ -1645,6 +1759,85 @@ impl BufferState {
         (self.req_lag_n, self.req_lag_sum)
     }
 
+    /// Every locally queued task (model-checker seam).
+    pub fn iter_queue(&self) -> impl Iterator<Item = &TaskSpec> + '_ {
+        self.queue.iter_tasks()
+    }
+
+    /// Every result buffered in the local store (model-checker seam).
+    pub fn iter_store(&self) -> impl Iterator<Item = &TaskResult> + '_ {
+        self.store.iter()
+    }
+
+    /// `(consumer, id, attempt)` for every attempt running on this leaf
+    /// (empty for interior nodes). Model-checker seam: the uniqueness and
+    /// conservation oracles count running attempts through this.
+    pub fn running_tasks(&self) -> Vec<(usize, TaskId, u32)> {
+        match &self.children {
+            Children::Consumers { running, .. } => running
+                .iter()
+                .enumerate()
+                .filter_map(|(c, slot)| slot.as_ref().map(|r| (c, r.id, r.attempt)))
+                .collect(),
+            Children::Buffers { .. } => Vec::new(),
+        }
+    }
+
+    /// Feed the protocol-visible node state into `h` (model-checker
+    /// seam). Pure instrumentation (message/steal/cancel counters,
+    /// `max_queue`, request-lag accumulators) is excluded so states that
+    /// differ only in metrics share a fingerprint.
+    pub fn model_hash(&self, h: &mut impl std::hash::Hasher) {
+        match &self.children {
+            Children::Consumers { n, idle, running } => {
+                h.write_u8(0);
+                h.write_usize(*n);
+                for &c in idle {
+                    h.write_usize(c);
+                }
+                for slot in running {
+                    match slot {
+                        None => h.write_u8(0),
+                        Some(r) => {
+                            h.write_u8(1);
+                            h.write_u64(r.id);
+                            h.write_u32(r.attempt);
+                            h.write_u8(u8::from(r.spec.is_some()));
+                        }
+                    }
+                }
+            }
+            Children::Buffers { deficit, cursor, subtree } => {
+                h.write_u8(1);
+                for &d in deficit {
+                    h.write_usize(d);
+                }
+                h.write_usize(*cursor);
+                h.write_usize(*subtree);
+            }
+        }
+        self.queue.model_hash(h);
+        for r in &self.store {
+            hash_result(r, h);
+        }
+        h.write_usize(self.outstanding_request);
+        h.write_usize(self.steal_outstanding);
+        h.write_u8(u8::from(self.steal_tried));
+        for &d in &self.sibling_depth {
+            h.write_usize(d);
+        }
+        h.write_usize(self.steal_cursor);
+        h.write_u8(u8::from(self.shutting_down));
+        h.write_u8(u8::from(self.recalling));
+        h.write_u8(u8::from(self.recall_acked));
+        for &a in &self.children_acked {
+            h.write_u8(u8::from(a));
+        }
+        for &t in &self.tombstones {
+            h.write_u64(t);
+        }
+    }
+
     /// Move the entire local queue upstream (recall drain). Uses
     /// `take_back`, not pops, so the per-band wait histograms keep
     /// counting *dispatches* only and Σcounts == popped conservation
@@ -1737,7 +1930,9 @@ impl BufferState {
                         idle.push_front(consumer);
                         break;
                     };
-                    running[consumer] = Some(RunningTask::track(&task));
+                    if let Some(slot) = running.get_mut(consumer) {
+                        *slot = Some(RunningTask::track(&task));
+                    }
                     self.msgs_out += 1;
                     out.push(BufferAction::RunOn { consumer, task });
                 }
@@ -1753,12 +1948,14 @@ impl BufferState {
                     let b = *cursor;
                     *cursor = (*cursor + 1) % nb;
                     scanned += 1;
-                    if deficit[b] == 0 {
+                    // `b < nb` by the modulus above (see satisfy_deficits).
+                    let Some((d, g)) = deficit.get_mut(b).zip(granted.get_mut(b)) else { break };
+                    if *d == 0 {
                         continue;
                     }
-                    let take = deficit[b].min(GRANT_CHUNK).min(self.queue.len());
-                    granted[b].extend(self.queue.pop_n(take));
-                    deficit[b] -= take;
+                    let take = (*d).min(GRANT_CHUNK).min(self.queue.len());
+                    g.extend(self.queue.pop_n(take));
+                    *d -= take;
                     scanned = 0;
                 }
                 let mut out = Vec::new();
@@ -1866,6 +2063,328 @@ impl BufferState {
         out.push(BufferAction::ShutdownConsumers);
         out
     }
+}
+
+// --- model-checker seam (`caravan check`) --------------------------------
+//
+// The bounded model checker in [`crate::check`] drives ProducerState and
+// BufferState directly, one message delivery at a time. The types and
+// routing functions below are pure data plumbing — addressed protocol
+// messages plus the action→message routing both runtimes already perform
+// implicitly — and change no behaviour.
+
+/// A protocol party: the rank-0 producer, or buffer-tree node `id`
+/// (an index into [`TreeTopology::nodes`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Party {
+    /// The rank-0 producer.
+    Producer,
+    /// Buffer-tree node by topology index.
+    Node(usize),
+}
+
+impl std::fmt::Display for Party {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Party::Producer => write!(f, "producer"),
+            Party::Node(id) => write!(f, "n{id}"),
+        }
+    }
+}
+
+/// A protocol-level message in flight between two parties — the payload
+/// of one [`ModelStep`]. `Assign`/`Cancel`/`Recall`/`Shutdown` travel
+/// parent→child, `Request`/`Results`/`Returned`/`RecallAck` child→parent,
+/// and the steal pair sideways between siblings. This mirrors
+/// [`crate::transport::wire::WireMsg`] one-to-one where the link protocol
+/// overlaps.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProtoMsg {
+    /// Parent → child: task grant.
+    Assign(Vec<TaskSpec>),
+    /// Parent → child: cancellation notice fanning toward the leaves.
+    Cancel {
+        /// Task to drop (queued), kill (running) or tombstone.
+        id: TaskId,
+    },
+    /// Parent → child: drain-and-graft recall notice.
+    Recall,
+    /// Parent → child: orderly shutdown after quiescence.
+    Shutdown,
+    /// Child → parent: credit request.
+    Request {
+        /// Tasks wanted to refill the subtree's credit.
+        amount: usize,
+    },
+    /// Child → parent: batched results.
+    Results(Vec<TaskResult>),
+    /// Child → parent: recalled tasks returned upstream, stamps intact.
+    Returned(Vec<TaskSpec>),
+    /// Child → parent: the subtree is drained.
+    RecallAck,
+    /// Sibling → sibling: steal probe. `thief` is the requesting node's
+    /// topology id (the routing token echoed back in the grant).
+    StealRequest {
+        /// Topology id of the requesting node.
+        thief: usize,
+        /// The thief's slot among the shared parent's children.
+        thief_slot: usize,
+        /// Upper bound on tasks wanted.
+        amount: usize,
+    },
+    /// Sibling → sibling: steal reply (possibly empty).
+    StealGrant {
+        /// The victim's own slot.
+        from_slot: usize,
+        /// The victim's remaining queue depth.
+        left: usize,
+        /// The victim's pending cancellation notices, forwarded.
+        cancels: Vec<TaskId>,
+        /// The surrendered tasks.
+        tasks: Vec<TaskSpec>,
+    },
+}
+
+impl ProtoMsg {
+    /// Feed this message's protocol-relevant content into `h` (a variant
+    /// tag plus per-variant fields; payload bytes excluded, like
+    /// [`PrioQueue::model_hash`]). The checker's visited-state fingerprint
+    /// covers every in-flight message through this.
+    pub fn model_hash(&self, h: &mut impl std::hash::Hasher) {
+        match self {
+            ProtoMsg::Assign(ts) => {
+                h.write_u8(1);
+                h.write_usize(ts.len());
+                for t in ts {
+                    hash_task(t, h);
+                }
+            }
+            ProtoMsg::Cancel { id } => {
+                h.write_u8(2);
+                h.write_u64(*id);
+            }
+            ProtoMsg::Recall => h.write_u8(3),
+            ProtoMsg::Shutdown => h.write_u8(4),
+            ProtoMsg::Request { amount } => {
+                h.write_u8(5);
+                h.write_usize(*amount);
+            }
+            ProtoMsg::Results(rs) => {
+                h.write_u8(6);
+                h.write_usize(rs.len());
+                for r in rs {
+                    hash_result(r, h);
+                }
+            }
+            ProtoMsg::Returned(ts) => {
+                h.write_u8(7);
+                h.write_usize(ts.len());
+                for t in ts {
+                    hash_task(t, h);
+                }
+            }
+            ProtoMsg::RecallAck => h.write_u8(8),
+            ProtoMsg::StealRequest { thief, thief_slot, amount } => {
+                h.write_u8(9);
+                h.write_usize(*thief);
+                h.write_usize(*thief_slot);
+                h.write_usize(*amount);
+            }
+            ProtoMsg::StealGrant { from_slot, left, cancels, tasks } => {
+                h.write_u8(10);
+                h.write_usize(*from_slot);
+                h.write_usize(*left);
+                h.write_usize(cancels.len());
+                for c in cancels {
+                    h.write_u64(*c);
+                }
+                h.write_usize(tasks.len());
+                for t in tasks {
+                    hash_task(t, h);
+                }
+            }
+        }
+    }
+}
+
+/// One addressed protocol message: `msg` travelling `from → to`. The
+/// model checker's unit of scheduling — each in-flight `ModelStep` sits
+/// in a per-directed-edge FIFO, exactly like a channel (threads) or a
+/// latency-ordered event (DES).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelStep {
+    /// Sending party.
+    pub from: Party,
+    /// Receiving party.
+    pub to: Party,
+    /// The protocol payload.
+    pub msg: ProtoMsg,
+}
+
+/// A node-local side effect of a [`BufferAction`] that does not travel
+/// between tree parties: consumer dispatch and teardown at a leaf. The
+/// model harness absorbs these into its own running-attempt bookkeeping;
+/// the real runtimes act on the original actions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LocalEffect {
+    /// Start `task` on local consumer `consumer`.
+    RunOn {
+        /// Local consumer index.
+        consumer: usize,
+        /// The dispatched task.
+        task: TaskSpec,
+    },
+    /// Kill the attempt running on `consumer`; it reports `RC_CANCELLED`.
+    CancelRunning {
+        /// Local consumer index.
+        consumer: usize,
+        /// The cancelled task's id.
+        id: TaskId,
+    },
+    /// Stop all local consumers.
+    ShutdownConsumers,
+}
+
+/// Node id of `parent`'s child at `slot` (`None` if out of range or the
+/// party has no children).
+fn child_of(topo: &TreeTopology, parent: Party, slot: usize) -> Option<usize> {
+    match parent {
+        Party::Producer => topo.roots.get(slot).copied(),
+        Party::Node(id) => match &topo.nodes.get(id)?.kind {
+            TreeNodeKind::Interior { children } => children.get(slot).copied(),
+            TreeNodeKind::Leaf { .. } => None,
+        },
+    }
+}
+
+/// Node `id`'s parent as a party (the producer for level-1 nodes).
+fn parent_of(topo: &TreeTopology, id: usize) -> Party {
+    match topo.nodes.get(id).and_then(|n| n.parent) {
+        Some(p) => Party::Node(p),
+        None => Party::Producer,
+    }
+}
+
+/// Child node ids of interior node `id` (empty for leaves).
+fn children_of(topo: &TreeTopology, id: usize) -> &[usize] {
+    match topo.nodes.get(id).map(|n| &n.kind) {
+        Some(TreeNodeKind::Interior { children }) => children,
+        _ => &[],
+    }
+}
+
+/// Translate [`ProducerAction`]s into addressed [`ModelStep`]s for the
+/// given topology. Broadcasts fan out to every direct child in slot
+/// order, exactly as both runtimes route them.
+pub fn route_producer_actions(topo: &TreeTopology, actions: Vec<ProducerAction>) -> Vec<ModelStep> {
+    let mut out = Vec::new();
+    let mut bcast = |out: &mut Vec<ModelStep>, msg: ProtoMsg| {
+        for &r in &topo.roots {
+            out.push(ModelStep { from: Party::Producer, to: Party::Node(r), msg: msg.clone() });
+        }
+    };
+    for a in actions {
+        match a {
+            ProducerAction::SendTasks { buffer, tasks } => {
+                if let Some(dst) = child_of(topo, Party::Producer, buffer) {
+                    out.push(ModelStep {
+                        from: Party::Producer,
+                        to: Party::Node(dst),
+                        msg: ProtoMsg::Assign(tasks),
+                    });
+                }
+            }
+            ProducerAction::BroadcastCancel { id } => bcast(&mut out, ProtoMsg::Cancel { id }),
+            ProducerAction::BroadcastRecall => bcast(&mut out, ProtoMsg::Recall),
+            ProducerAction::BroadcastShutdown => bcast(&mut out, ProtoMsg::Shutdown),
+        }
+    }
+    out
+}
+
+/// Translate node `id`'s [`BufferAction`]s into addressed [`ModelStep`]s
+/// plus leaf-local [`LocalEffect`]s for the given topology. Sideways
+/// steal traffic resolves sibling slots through the shared parent; the
+/// steal-grant reply routes by the `thief` token (the requesting node's
+/// topology id, stamped by this function on the way out).
+pub fn route_buffer_actions(
+    topo: &TreeTopology,
+    id: usize,
+    actions: Vec<BufferAction>,
+) -> (Vec<ModelStep>, Vec<LocalEffect>) {
+    let me = Party::Node(id);
+    let parent = parent_of(topo, id);
+    let my_slot = topo.nodes.get(id).map_or(0, |n| n.slot);
+    let mut steps = Vec::new();
+    let mut effects = Vec::new();
+    for a in actions {
+        match a {
+            BufferAction::RunOn { consumer, task } => {
+                effects.push(LocalEffect::RunOn { consumer, task });
+            }
+            BufferAction::CancelRunning { consumer, id } => {
+                effects.push(LocalEffect::CancelRunning { consumer, id });
+            }
+            BufferAction::ShutdownConsumers => effects.push(LocalEffect::ShutdownConsumers),
+            BufferAction::SendToChild { child, tasks } => {
+                if let Some(dst) = child_of(topo, me, child) {
+                    steps.push(ModelStep {
+                        from: me,
+                        to: Party::Node(dst),
+                        msg: ProtoMsg::Assign(tasks),
+                    });
+                }
+            }
+            BufferAction::RequestTasks { amount } => {
+                steps.push(ModelStep { from: me, to: parent, msg: ProtoMsg::Request { amount } });
+            }
+            BufferAction::FlushResults(results) => {
+                steps.push(ModelStep { from: me, to: parent, msg: ProtoMsg::Results(results) });
+            }
+            BufferAction::ReturnTasks(tasks) => {
+                steps.push(ModelStep { from: me, to: parent, msg: ProtoMsg::Returned(tasks) });
+            }
+            BufferAction::AckRecall => {
+                steps.push(ModelStep { from: me, to: parent, msg: ProtoMsg::RecallAck });
+            }
+            BufferAction::CancelChildren { id: cid } => {
+                for &c in children_of(topo, id) {
+                    steps.push(ModelStep {
+                        from: me,
+                        to: Party::Node(c),
+                        msg: ProtoMsg::Cancel { id: cid },
+                    });
+                }
+            }
+            BufferAction::RecallChildren => {
+                for &c in children_of(topo, id) {
+                    steps.push(ModelStep { from: me, to: Party::Node(c), msg: ProtoMsg::Recall });
+                }
+            }
+            BufferAction::ShutdownChildren => {
+                for &c in children_of(topo, id) {
+                    steps.push(ModelStep { from: me, to: Party::Node(c), msg: ProtoMsg::Shutdown });
+                }
+            }
+            BufferAction::StealRequest { victim, amount } => {
+                if let Some(dst) = child_of(topo, parent, victim) {
+                    steps.push(ModelStep {
+                        from: me,
+                        to: Party::Node(dst),
+                        msg: ProtoMsg::StealRequest { thief: id, thief_slot: my_slot, amount },
+                    });
+                }
+            }
+            BufferAction::StealGrant { thief, from_slot, left, cancels, tasks } => {
+                steps.push(ModelStep {
+                    from: me,
+                    to: Party::Node(thief),
+                    msg: ProtoMsg::StealGrant { from_slot, left, cancels, tasks },
+                });
+            }
+        }
+    }
+    (steps, effects)
 }
 
 #[cfg(test)]

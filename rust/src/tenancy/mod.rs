@@ -103,31 +103,37 @@ impl JobClass {
             return Err(format!("class spec '{spec}' has an empty name"));
         }
         let fields: Vec<&str> = rest.split(':').collect();
-        if fields.len() < 2 {
+        let Some((&weight_str, policy_fields)) = fields.split_first() else {
+            return Err(format!(
+                "class spec '{spec}' needs at least WEIGHT:POLICY after '{name}='"
+            ));
+        };
+        if policy_fields.is_empty() {
             return Err(format!(
                 "class spec '{spec}' needs at least WEIGHT:POLICY after '{name}='"
             ));
         }
-        let weight: u32 = fields[0]
+        let weight: u32 = weight_str
             .parse()
-            .map_err(|_| format!("class '{name}': bad weight '{}'", fields[0]))?;
+            .map_err(|_| format!("class '{name}': bad weight '{weight_str}'"))?;
         // Try the longest policy first (everything after the weight —
         // quota omitted), then shrink by one trailing field which must
         // then be the quota. This keeps `aging:30` unambiguous: in
         // `b=1:aging:30:64` the policy is `aging:30` and the quota 64; in
         // `b=1:aging:30` the policy is `aging:30` with no quota.
-        let all = fields[1..].join(":");
+        let all = policy_fields.join(":");
         if let Some(policy) = SchedPolicy::parse(&all) {
             return Ok(JobClass::new(name, weight).policy(policy));
         }
-        if fields.len() >= 3 {
-            let policy_str = fields[1..fields.len() - 1].join(":");
-            let quota_str = fields[fields.len() - 1];
-            if let Some(policy) = SchedPolicy::parse(&policy_str) {
-                let quota: usize = quota_str
-                    .parse()
-                    .map_err(|_| format!("class '{name}': bad quota '{quota_str}'"))?;
-                return Ok(JobClass::new(name, weight).policy(policy).quota(quota));
+        if let Some((&quota_str, policy_head)) = policy_fields.split_last() {
+            if !policy_head.is_empty() {
+                let policy_str = policy_head.join(":");
+                if let Some(policy) = SchedPolicy::parse(&policy_str) {
+                    let quota: usize = quota_str
+                        .parse()
+                        .map_err(|_| format!("class '{name}': bad quota '{quota_str}'"))?;
+                    return Ok(JobClass::new(name, weight).policy(policy).quota(quota));
+                }
             }
         }
         Err(format!(
@@ -255,6 +261,7 @@ impl<T> AdmissionController<T> {
         while self.lanes.len() <= idx {
             self.lanes.push(AdmissionLane { quota: None, in_flight: 0, waiting: VecDeque::new() });
         }
+        // lint:allow(panic-path) -- the loop above just grew lanes past idx
         &mut self.lanes[idx]
     }
 

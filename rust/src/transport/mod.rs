@@ -275,7 +275,7 @@ impl Transport for SocketTransport {
             match self.stream.read_some(&mut buf) {
                 Ok(0) => return Err(TransportError::Closed("peer closed".into())),
                 Ok(n) => {
-                    self.reader.push(&buf[..n]);
+                    self.reader.push(buf.get(..n).unwrap_or(&[]));
                     self.counters.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
                 }
                 Err(e)

@@ -235,8 +235,10 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
         WireMsg::RecallAck => e.u8(TAG_RECALL_ACK),
         WireMsg::Ping => e.u8(TAG_PING),
     }
-    let body_len = (e.out.len() - 4) as u32;
-    e.out[..4].copy_from_slice(&body_len.to_le_bytes());
+    let body_len = e.out.len().saturating_sub(4) as u32;
+    if let Some(prefix) = e.out.get_mut(..4) {
+        prefix.copy_from_slice(&body_len.to_le_bytes());
+    }
     e.out
 }
 
@@ -253,8 +255,8 @@ pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
         TAG_SHUTDOWN => WireMsg::Shutdown,
         TAG_REQUEST => WireMsg::Request { amount: d.u64()? },
         TAG_RESULTS => {
-            let n = d.u32()? as usize;
-            let mut out = Vec::with_capacity(n.min(65_536));
+            let n = d.count("results")?;
+            let mut out = Vec::with_capacity(n);
             for _ in 0..n {
                 out.push(d.result()?);
             }
@@ -300,17 +302,18 @@ impl FrameReader {
     /// a partial frame. A malformed frame (oversized length prefix or
     /// undecodable body) is an error; the stream is unrecoverable past it.
     pub fn next_msg(&mut self) -> Result<Option<WireMsg>, WireError> {
-        if self.buf.len() < 4 {
+        let Some(prefix) = self.buf.get(..4).and_then(|s| <[u8; 4]>::try_from(s).ok()) else {
             return Ok(None);
-        }
-        let len = u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+        };
+        let len = u32::from_le_bytes(prefix) as usize;
         if len > MAX_FRAME {
             return Err(WireError { pos: 0, msg: format!("frame length {len} exceeds MAX_FRAME") });
         }
-        if self.buf.len() < 4 + len {
+        // `len <= MAX_FRAME`, so `4 + len` cannot overflow.
+        let Some(body) = self.buf.get(4..4 + len) else {
             return Ok(None);
-        }
-        let msg = decode_body(&self.buf[4..4 + len])?;
+        };
+        let msg = decode_body(body)?;
         self.buf.drain(..4 + len);
         Ok(Some(msg))
     }
@@ -490,17 +493,43 @@ impl<'a> Dec<'a> {
         WireError { pos: self.pos, msg: msg.to_string() }
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
-        if self.pos + n > self.b.len() {
-            return Err(self.err("truncated message body"));
+    fn remaining(&self) -> usize {
+        self.b.len().saturating_sub(self.pos)
+    }
+
+    /// Read a `u32` element count and reject it when it exceeds the
+    /// bytes left in the body: every element encodes to at least one
+    /// byte, so a larger count is a corrupt (or hostile) length bomb —
+    /// failing here keeps allocations bounded by the input size.
+    fn count(&mut self, what: &str) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        if n > self.remaining() {
+            return Err(self.err(&format!(
+                "{what} count {n} exceeds the {} bytes left in the body",
+                self.remaining()
+            )));
         }
-        let s = &self.b[self.pos..self.pos + n];
+        Ok(n)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let s = self
+            .pos
+            .checked_add(n)
+            .filter(|&end| end <= self.b.len())
+            .and_then(|end| self.b.get(self.pos..end));
+        let Some(s) = s else {
+            return Err(self.err("truncated message body"));
+        };
         self.pos += n;
         Ok(s)
     }
 
     fn u8(&mut self) -> Result<u8, WireError> {
-        Ok(self.take(1)?[0])
+        match self.take(1)?.first() {
+            Some(&v) => Ok(v),
+            None => Err(self.err("truncated message body")),
+        }
     }
 
     fn bool(&mut self) -> Result<bool, WireError> {
@@ -513,17 +542,20 @@ impl<'a> Dec<'a> {
 
     fn u32(&mut self) -> Result<u32, WireError> {
         let s = self.take(4)?;
-        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+        let arr: [u8; 4] = s.try_into().map_err(|_| self.err("truncated message body"))?;
+        Ok(u32::from_le_bytes(arr))
     }
 
     fn i32(&mut self) -> Result<i32, WireError> {
         let s = self.take(4)?;
-        Ok(i32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+        let arr: [u8; 4] = s.try_into().map_err(|_| self.err("truncated message body"))?;
+        Ok(i32::from_le_bytes(arr))
     }
 
     fn u64(&mut self) -> Result<u64, WireError> {
         let s = self.take(8)?;
-        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+        let arr: [u8; 8] = s.try_into().map_err(|_| self.err("truncated message body"))?;
+        Ok(u64::from_le_bytes(arr))
     }
 
     fn f64(&mut self) -> Result<f64, WireError> {
@@ -545,8 +577,8 @@ impl<'a> Dec<'a> {
     }
 
     fn vec_f64(&mut self) -> Result<Vec<f64>, WireError> {
-        let n = self.u32()? as usize;
-        let mut out = Vec::with_capacity(n.min(65_536));
+        let n = self.count("f64 vector")?;
+        let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             out.push(self.f64()?);
         }
@@ -577,8 +609,8 @@ impl<'a> Dec<'a> {
     }
 
     fn tasks(&mut self) -> Result<Vec<TaskSpec>, WireError> {
-        let n = self.u32()? as usize;
-        let mut out = Vec::with_capacity(n.min(65_536));
+        let n = self.count("task list")?;
+        let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             out.push(self.task()?);
         }
@@ -602,8 +634,8 @@ impl<'a> Dec<'a> {
         let np = self.u64()?;
         let consumers_per_buffer = self.u64()?;
         let depth = self.u64()?;
-        let n_fans = self.u32()? as usize;
-        let mut fanout = Vec::with_capacity(n_fans.min(64));
+        let n_fans = self.count("fanout list")?;
+        let mut fanout = Vec::with_capacity(n_fans);
         for _ in 0..n_fans {
             fanout.push(self.u64()?);
         }
@@ -625,8 +657,8 @@ impl<'a> Dec<'a> {
         let flush_interval_ms = self.u64()?;
         let level = self.u64()?;
         let rank_base = self.u64()?;
-        let n_classes = self.u32()? as usize;
-        let mut classes = Vec::with_capacity(n_classes.min(256));
+        let n_classes = self.count("class registry")?;
+        let mut classes = Vec::with_capacity(n_classes);
         for _ in 0..n_classes {
             let name = self.str()?;
             let weight = self.u32()?;
@@ -893,6 +925,103 @@ mod tests {
         long.push(0);
         let mut r = FrameReader::new();
         r.push(&long);
+        assert!(r.next_msg().is_err());
+    }
+
+    #[test]
+    fn decoder_survives_truncation_corruption_and_count_bombs() {
+        // Adversarial-input property: for a corpus covering every variant,
+        // (a) every strict prefix of the body decodes to Err — the codec
+        // reads exactly the declared structure and rejects both missing
+        // and trailing bytes, so no truncation point can succeed;
+        // (b) flipping any single body byte returns Ok or Err, never a
+        // panic or a huge allocation;
+        // (c) u32::MAX stamped over any 4-byte window never panics or
+        // over-allocates, and stamped over an *element-count* field is
+        // rejected outright (the length-bomb shape).
+        let cfg = WireConfig::from_scheduler(&SchedulerConfig::default(), 4, 1, 12);
+        let corpus = vec![
+            WireMsg::Hello { version: PROTO_VERSION, requested_np: 7 },
+            WireMsg::Welcome { slot: 3, cfg },
+            WireMsg::Assign(vec![
+                spec(1, Payload::Sleep { seconds: 1.5 }),
+                spec(2, Payload::Command { cmdline: "echo hi".into() }),
+                spec(3, Payload::Eval { input: vec![0.5, -0.25], seed: 9 }),
+            ]),
+            WireMsg::Cancel { id: 11 },
+            WireMsg::Recall,
+            WireMsg::Shutdown,
+            WireMsg::Request { amount: 384 },
+            WireMsg::Results(vec![TaskResult {
+                id: 9,
+                consumer: 3,
+                results: vec![1.0, -2.5],
+                begin: 0.5,
+                finish: 1.25,
+                rc: 0,
+                attempt: 1,
+                timed_out: false,
+            }]),
+            WireMsg::Returned(vec![spec(5, Payload::Sleep { seconds: 2.0 })]),
+            WireMsg::RecallAck,
+            WireMsg::Ping,
+        ];
+        for msg in &corpus {
+            let frame = encode(msg);
+            let body = &frame[4..];
+            // (a) truncation at every point strictly inside the body.
+            for cut in 0..body.len() {
+                assert!(
+                    decode_body(&body[..cut]).is_err(),
+                    "{msg:?}: truncated body of {cut}/{} bytes must not decode",
+                    body.len()
+                );
+            }
+            // (b) single-byte corruption: any outcome but a panic. When it
+            // decodes, the result must re-encode without panicking too.
+            for i in 0..body.len() {
+                let mut bad = body.to_vec();
+                bad[i] ^= 0xFF;
+                if let Ok(m) = decode_body(&bad) {
+                    let _ = encode(&m);
+                }
+            }
+            // (c) u32::MAX stamped over every 4-byte window — when it
+            // lands on a count or length field this is the length-bomb
+            // shape (a claim of ~4 billion elements backed by a tiny
+            // body). Any window may instead hit a plain integer field and
+            // decode fine; the property is that *no* window panics or
+            // triggers a huge allocation — the `count`/`take` guards
+            // bound every allocation by the bytes actually present.
+            for i in 0..body.len().saturating_sub(3) {
+                let mut bomb = body.to_vec();
+                bomb[i..i + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+                if let Ok(m) = decode_body(&bomb) {
+                    let _ = encode(&m);
+                }
+            }
+        }
+        // Targeted count bombs: the element count of every vec-carrying
+        // top-level message sits at body bytes 1..5 (right after the
+        // tag). A bombed count MUST be rejected — each element encodes at
+        // least one byte, so the claim can never fit the body.
+        for msg in [
+            WireMsg::Assign(vec![spec(1, Payload::Sleep { seconds: 0.5 })]),
+            WireMsg::Returned(vec![spec(2, Payload::Sleep { seconds: 0.5 })]),
+            WireMsg::Results(vec![]),
+        ] {
+            let frame = encode(&msg);
+            let mut bomb = frame[4..].to_vec();
+            bomb[1..5].copy_from_slice(&u32::MAX.to_le_bytes());
+            assert!(
+                decode_body(&bomb).is_err(),
+                "{msg:?}: count bomb in the element-count field must be rejected"
+            );
+        }
+        // The FrameReader path: a length prefix just over MAX_FRAME is
+        // rejected without buffering gigabytes.
+        let mut r = FrameReader::new();
+        r.push(&((MAX_FRAME as u32) + 1).to_le_bytes());
         assert!(r.next_msg().is_err());
     }
 

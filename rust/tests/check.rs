@@ -1,0 +1,152 @@
+//! Acceptance tests for `caravan check` (Issue 9): the bounded model
+//! checker must hold every oracle over the CI-sized state space, and a
+//! deliberately seeded protocol bug must be *caught* — with a
+//! minimized, replayable counterexample trace — not merely detected.
+//!
+//! Both the library seam ([`caravan::check`]) and the CLI contract
+//! (exit 0 clean / 1 violation / 2 usage) are exercised.
+
+use std::fs;
+use std::process::Command;
+
+use caravan::check::{replay_trace_text, run_check, CheckConfig, FaultSet, SeededBug};
+
+fn check_cmd() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_caravan"))
+}
+
+/// A CI-speed configuration: small task count, a handful of fuzz seeds.
+fn small(scenario: &str, faults: FaultSet) -> CheckConfig {
+    CheckConfig {
+        scenario: scenario.to_string(),
+        n_tasks: 2,
+        seeds: 8,
+        fuzz_steps: 800,
+        faults,
+        ..CheckConfig::default()
+    }
+}
+
+#[test]
+fn exhaustive_flat2_holds_all_oracles() {
+    let cfg = small("flat2", FaultSet { steal: true, cancel: true, recall: true, kill: false });
+    let report = run_check(&cfg).expect("valid config");
+    assert!(report.passed(), "violation: {:?}", report.counterexample);
+    assert!(report.exhausted, "CI bound must drain the state space, not hit the budget");
+    assert!(report.states > 0);
+    assert_eq!(report.fuzz_schedules, 8, "fuzz phase runs after a clean exhaustive phase");
+}
+
+#[test]
+fn exhaustive_deep4_with_kill_holds_all_oracles() {
+    let cfg = small("deep4", FaultSet { steal: true, cancel: false, recall: true, kill: true });
+    let report = run_check(&cfg).expect("valid config");
+    assert!(report.passed(), "violation: {:?}", report.counterexample);
+    assert!(report.states > 0);
+}
+
+#[test]
+fn seeded_drop_returned_is_caught_minimized_and_replayable() {
+    // Arm the exact bug a missing `on_returned` call would be: the
+    // producer swallows the first Returned batch. Any schedule with a
+    // recall then breaks task conservation.
+    let cfg = CheckConfig {
+        bug: Some(SeededBug::DropReturned { nth: 1 }),
+        ..small("flat2", FaultSet { steal: true, cancel: false, recall: true, kill: false })
+    };
+    let report = run_check(&cfg).expect("valid config");
+    let cex = report.counterexample.as_ref().expect("the seeded bug must be caught");
+    assert!(
+        cex.events.len() <= cex.original_len,
+        "shrinking must never grow the schedule: {} > {}",
+        cex.events.len(),
+        cex.original_len
+    );
+
+    // The emitted artifact must replay to a violation of the same oracle.
+    let trace = report.counterexample_trace().expect("trace accompanies the counterexample");
+    let replayed = replay_trace_text(&trace).expect("emitted trace must parse");
+    let rcex = replayed.counterexample.expect("replay must reproduce the violation");
+    assert_eq!(rcex.violation.oracle, cex.violation.oracle, "replay disagrees with the find");
+}
+
+#[test]
+fn usage_errors_are_reported_not_explored() {
+    let bad_tasks = CheckConfig { n_tasks: 0, ..CheckConfig::default() };
+    assert!(run_check(&bad_tasks).is_err());
+    let bad_scenario = CheckConfig { scenario: "ring9".into(), ..CheckConfig::default() };
+    assert!(run_check(&bad_scenario).unwrap_err().contains("unknown scenario"));
+    let kill_on_flat = CheckConfig {
+        faults: FaultSet { kill: true, ..FaultSet::default() },
+        ..CheckConfig::default()
+    };
+    assert!(run_check(&kill_on_flat).unwrap_err().contains("kill"));
+}
+
+#[test]
+fn cli_clean_run_exits_zero() {
+    let out = check_cmd()
+        .args(["check", "--max-tasks", "2", "--seeds", "4", "--fuzz-steps", "500"])
+        .output()
+        .expect("spawn caravan");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(0), "stdout: {stdout}\nstderr: {:?}", out.stderr);
+    assert!(stdout.contains("all oracles held"), "{stdout}");
+}
+
+#[test]
+fn cli_seeded_bug_exits_one_and_trace_replays_red() {
+    let trace_path = std::env::temp_dir().join("caravan-check-cex-test.trace");
+    let _ = fs::remove_file(&trace_path);
+
+    let out = check_cmd()
+        .args(["check", "--max-tasks", "2", "--faults", "steal,recall"])
+        .args(["--inject-bug", "drop-returned:1", "--seeds", "4"])
+        .arg("--trace-out")
+        .arg(&trace_path)
+        .output()
+        .expect("spawn caravan");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(1), "{stdout}");
+    assert!(stdout.contains("VIOLATION"), "{stdout}");
+    assert!(stdout.contains("minimized schedule"), "{stdout}");
+
+    // The written artifact replays through `--replay` to the same red
+    // verdict — the counterexample is self-contained.
+    let out = check_cmd()
+        .arg("check")
+        .arg("--replay")
+        .arg(&trace_path)
+        .output()
+        .expect("spawn caravan");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(1), "{stdout}");
+    assert!(stdout.contains("VIOLATION"), "{stdout}");
+
+    let _ = fs::remove_file(&trace_path);
+}
+
+#[test]
+fn cli_usage_errors_exit_two() {
+    let out = check_cmd().args(["check", "--faults", "bogus"]).output().expect("spawn caravan");
+    assert_eq!(out.status.code(), Some(2), "{out:?}");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown fault"), "{stderr}");
+
+    let out = check_cmd()
+        .args(["check", "--scenario", "flat2", "--faults", "kill"])
+        .output()
+        .expect("spawn caravan");
+    assert_eq!(out.status.code(), Some(2), "{out:?}");
+}
+
+#[test]
+fn cli_replay_accepts_committed_fixtures() {
+    for fixture in ["steal_cancel_recall_overlap.trace", "dead_link_during_recall.trace"] {
+        let path = format!("{}/tests/fixtures/check/{fixture}", env!("CARGO_MANIFEST_DIR"));
+        let out = check_cmd().args(["check", "--replay", &path]).output().expect("spawn caravan");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert_eq!(out.status.code(), Some(0), "{fixture}: {stdout}");
+        assert!(stdout.contains("all oracles held"), "{fixture}: {stdout}");
+    }
+}

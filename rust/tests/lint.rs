@@ -80,6 +80,23 @@ fn unwrap_budget_fixtures() {
 }
 
 #[test]
+fn panic_path_fixtures() {
+    let bad = include_str!("fixtures/lint/panic_path_violation.txt");
+    let got = lint_source("src/scheduler/protocol.rs", bad);
+    assert_eq!(got.len(), 2, "one for panic!, one for the indexing: {got:?}");
+    assert!(got.iter().all(|v| v.rule == "panic-path"), "{got:?}");
+    // The rule shares the unwrap-budget scope: transport and tenancy too.
+    assert_eq!(rules_hit("src/transport/wire.rs", bad).len(), 2);
+    assert_eq!(rules_hit("src/tenancy/mod.rs", bad).len(), 2);
+    // Outside the panic-free zones the same code is fine.
+    assert!(rules_hit("src/engine/sweep.rs", bad).is_empty());
+    let clean = include_str!("fixtures/lint/panic_path_clean.txt");
+    assert!(rules_hit("src/scheduler/protocol.rs", clean).is_empty());
+    let allowed = include_str!("fixtures/lint/panic_path_allowed.txt");
+    assert!(rules_hit("src/scheduler/protocol.rs", allowed).is_empty());
+}
+
+#[test]
 fn no_unsafe_fixtures() {
     let bad = include_str!("fixtures/lint/no_unsafe_violation.txt");
     let got = lint_source("src/util/rng.rs", bad);

@@ -961,3 +961,30 @@ fn threaded_runtime_and_des_agree_on_tasks_executed() {
         assert!(threaded.node_stats.iter().all(|s| s.max_queue <= s.credit_bound));
     }
 }
+
+// ------------------------------------------------ model-checker trace fixtures
+
+/// The committed interleaving fixtures — steal+cancel+recall overlap on
+/// flat2, and a dead link landing mid-recall on deep4 — must replay
+/// green through the model checker: every step-wise oracle holds along
+/// the schedule. The replayer skip-repairs steps that drift out of
+/// enabledness, so protocol-internal re-batching cannot break these; a
+/// real conservation or quiescence regression still will.
+#[test]
+fn committed_check_traces_replay_green() {
+    for (name, text) in [
+        (
+            "steal_cancel_recall_overlap",
+            include_str!("fixtures/check/steal_cancel_recall_overlap.trace"),
+        ),
+        ("dead_link_during_recall", include_str!("fixtures/check/dead_link_during_recall.trace")),
+    ] {
+        let report = caravan::check::replay_trace_text(text)
+            .unwrap_or_else(|e| panic!("fixture {name} failed to parse: {e}"));
+        assert!(
+            report.passed(),
+            "fixture {name} tripped an oracle: {:?}",
+            report.counterexample.map(|c| c.violation)
+        );
+    }
+}
