@@ -68,8 +68,11 @@ pub struct Model {
     /// Per-directed-edge FIFO of in-flight messages.
     pub(crate) edges: BTreeMap<(Party, Party), VecDeque<ProtoMsg>>,
     /// Ground truth of running attempts: `running[node][consumer]` is
-    /// the dispatched task plus a killed flag (kill ⇒ `RC_CANCELLED`).
-    pub(crate) running: Vec<Vec<Option<(TaskSpec, bool)>>>,
+    /// the consumer's dispatched batch in execution order, each task
+    /// paired with a killed flag (kill ⇒ `RC_CANCELLED`). With
+    /// `dispatch_batch = 1` every queue holds at most one item — the
+    /// pre-batching model, unchanged.
+    pub(crate) running: Vec<Vec<VecDeque<(TaskSpec, bool)>>>,
     /// Tasks granted through each producer slot and not yet accounted
     /// back — what a dead link must re-feed (dead-link zero-loss).
     pub(crate) granted_root: Vec<BTreeMap<TaskId, TaskSpec>>,
@@ -150,7 +153,7 @@ impl Model {
             let is_root = topo.roots.contains(&id);
             let node_cfg = if self.faults.kill && is_root { &nosteal } else { &self.cfg };
             let mut st = BufferState::for_tree_node(&topo, id, node_cfg);
-            self.running.push(vec![None; st.n_consumers()]);
+            self.running.push(vec![VecDeque::new(); st.n_consumers()]);
             let acts = st.on_start();
             self.nodes.push(Some(st));
             let (steps, effects) = route_buffer_actions(&topo, id, acts);
@@ -216,38 +219,42 @@ impl Model {
     fn apply_effects(&mut self, id: usize, effects: Vec<LocalEffect>) -> Result<(), Violation> {
         for e in effects {
             match e {
-                LocalEffect::RunOn { consumer, task } => {
-                    let tid = task.id;
+                LocalEffect::RunBatch { consumer, tasks } => {
+                    let first = tasks.first().map(|t| t.id).unwrap_or_default();
                     match self.running.get_mut(id).and_then(|r| r.get_mut(consumer)) {
-                        Some(slot) => {
-                            if slot.is_some() {
+                        Some(q) => {
+                            if !q.is_empty() {
                                 return Err(Violation::new(
                                     "double-dispatch",
                                     format!(
-                                        "node n{id} dispatched task {tid} onto consumer \
-                                         {consumer} which is already running an attempt"
+                                        "node n{id} dispatched a batch (first task {first}) \
+                                         onto consumer {consumer} which is already running \
+                                         a batch"
                                     ),
                                 ));
                             }
-                            *slot = Some((task, false));
+                            q.extend(tasks.into_iter().map(|t| (t, false)));
                         }
                         None => {
                             return Err(Violation::new(
                                 "double-dispatch",
                                 format!(
-                                    "node n{id} dispatched task {tid} to nonexistent \
-                                     consumer {consumer}"
+                                    "node n{id} dispatched a batch (first task {first}) to \
+                                     nonexistent consumer {consumer}"
                                 ),
                             ));
                         }
                     }
                 }
                 LocalEffect::CancelRunning { consumer, id: tid } => {
-                    if let Some(Some((t, killed))) =
-                        self.running.get_mut(id).and_then(|r| r.get_mut(consumer))
-                    {
-                        if t.id == tid {
-                            *killed = true;
+                    // The kill may land on the running attempt or a
+                    // not-yet-started item queued behind it in the batch;
+                    // either way that attempt reports RC_CANCELLED.
+                    if let Some(q) = self.running.get_mut(id).and_then(|r| r.get_mut(consumer)) {
+                        for (t, killed) in q.iter_mut() {
+                            if t.id == tid {
+                                *killed = true;
+                            }
                         }
                     }
                 }
@@ -276,8 +283,8 @@ impl Model {
             if !self.alive(Party::Node(node)) {
                 continue;
             }
-            for (consumer, s) in slots.iter().enumerate() {
-                if s.is_some() {
+            for (consumer, q) in slots.iter().enumerate() {
+                if !q.is_empty() {
                     evs.push(Event::Finish { node, consumer });
                 }
             }
@@ -331,7 +338,7 @@ impl Model {
                         .running
                         .get(node)
                         .and_then(|r| r.get(consumer))
-                        .is_some_and(|s| s.is_some())
+                        .is_some_and(|q| !q.is_empty())
             }
             Event::Cancel { .. } => self.cancels_left > 0 && !self.producer.shutdown_sent(),
             Event::Kill { slot } => {
@@ -419,6 +426,34 @@ impl Model {
                 }
                 self.producer.on_results(rs.len());
             }
+            ProtoMsg::Flush { amount, results } => {
+                // The coalesced uplink carries both halves: the results get
+                // the same per-result duplicate/ledger treatment as a
+                // Results frame, the amount the same grant matching as a
+                // Request frame.
+                for r in &results {
+                    let n = self.results_seen.entry(r.id).or_insert(0);
+                    *n += 1;
+                    if *n > 1 {
+                        return Err(Violation::new(
+                            "duplicate-result",
+                            format!(
+                                "the engine received {n} results for task {} (via Flush)",
+                                r.id
+                            ),
+                        ));
+                    }
+                    self.granted_live.remove(&r.id);
+                    if let Some(gr) = self.granted_root.get_mut(slot) {
+                        gr.remove(&r.id);
+                    }
+                }
+                let n_results = results.len();
+                steps.extend(route_producer_actions(
+                    &self.topo,
+                    self.producer.on_flush(slot, amount, n_results),
+                ));
+            }
             ProtoMsg::Returned(ts) => {
                 self.returned_seen += 1;
                 let swallowed = matches!(
@@ -470,6 +505,7 @@ impl Model {
             ProtoMsg::Shutdown => node.on_shutdown(),
             ProtoMsg::Request { amount } => node.on_child_request(from_slot, amount),
             ProtoMsg::Results(rs) => node.on_child_results(rs),
+            ProtoMsg::Flush { amount, results } => node.on_child_flush(from_slot, amount, results),
             ProtoMsg::Returned(ts) => node.on_child_returned(ts),
             ProtoMsg::RecallAck => node.on_child_recall_ack(from_slot),
             ProtoMsg::StealRequest { thief, thief_slot, amount } => {
@@ -485,25 +521,31 @@ impl Model {
     }
 
     fn finish(&mut self, node: usize, consumer: usize) -> Result<(), Violation> {
-        let Some((task, killed)) =
-            self.running.get_mut(node).and_then(|r| r.get_mut(consumer)).and_then(Option::take)
-        else {
-            return Ok(());
-        };
-        let result = TaskResult {
-            id: task.id,
-            consumer,
-            results: Vec::new(),
-            begin: 0.0,
-            finish: 0.0,
-            rc: if killed { RC_CANCELLED } else { 0 },
-            attempt: task.attempt,
-            timed_out: false,
-        };
+        // The consumer runs its whole dispatched batch back to back and
+        // reports once — Finish drains the queue into one on_done_batch,
+        // mirroring the threaded consumer's single DoneBatch send.
+        let batch: Vec<(TaskSpec, bool)> =
+            match self.running.get_mut(node).and_then(|r| r.get_mut(consumer)) {
+                Some(q) if !q.is_empty() => q.drain(..).collect(),
+                _ => return Ok(()),
+            };
+        let results: Vec<TaskResult> = batch
+            .into_iter()
+            .map(|(task, killed)| TaskResult {
+                id: task.id,
+                consumer,
+                results: Vec::new(),
+                begin: 0.0,
+                finish: 0.0,
+                rc: if killed { RC_CANCELLED } else { 0 },
+                attempt: task.attempt,
+                timed_out: false,
+            })
+            .collect();
         let Some(st) = self.nodes.get_mut(node).and_then(|n| n.as_mut()) else {
             return Ok(());
         };
-        let acts = st.on_done(consumer, result);
+        let acts = st.on_done_batch(consumer, results);
         let (steps, effects) = route_buffer_actions(&self.topo, node, acts);
         self.apply_effects(node, effects)?;
         self.send(steps)
@@ -559,8 +601,8 @@ impl Model {
                 *n = None;
             }
             if let Some(r) = self.running.get_mut(d) {
-                for s in r.iter_mut() {
-                    *s = None;
+                for q in r.iter_mut() {
+                    q.clear();
                 }
             }
         }
@@ -670,10 +712,14 @@ impl Model {
             }
         }
         for (node, slots) in self.running.iter().enumerate() {
-            for (consumer, s) in slots.iter().enumerate() {
-                if let Some((t, killed)) = s {
-                    h.write_usize(node);
-                    h.write_usize(consumer);
+            for (consumer, q) in slots.iter().enumerate() {
+                if q.is_empty() {
+                    continue;
+                }
+                h.write_usize(node);
+                h.write_usize(consumer);
+                h.write_usize(q.len());
+                for (t, killed) in q {
                     h.write_u64(t.id);
                     h.write_u8(u8::from(*killed));
                 }

@@ -218,6 +218,23 @@ pub fn scenarios() -> Vec<Scenario> {
             ..SchedulerConfig::default()
         },
     };
+    let batched2 = Scenario {
+        name: "batched2",
+        summary: "flat2 with dispatch_batch=2 and ascent coalescing: the batched hot path",
+        kill_ok: false,
+        cfg: SchedulerConfig {
+            np: 2,
+            consumers_per_buffer: 1,
+            depth: 1,
+            fanout: vec![2],
+            steal: true,
+            credit_factor: 2,
+            flush_every: 2,
+            dispatch_batch: 2,
+            coalesce_flush: true,
+            ..SchedulerConfig::default()
+        },
+    };
     let deep4 = Scenario {
         name: "deep4",
         summary: "2 interior roots x 2 leaves, 1 consumer each; kill-capable",
@@ -233,7 +250,7 @@ pub fn scenarios() -> Vec<Scenario> {
             ..SchedulerConfig::default()
         },
     };
-    vec![flat2, deep4]
+    vec![flat2, batched2, deep4]
 }
 
 /// Look up a scenario by name.
@@ -516,6 +533,23 @@ mod tests {
         assert!(report.exhausted, "state budget hit at {} states", report.states);
         assert!(report.states > 0);
         assert_eq!(report.fuzz_schedules, 8);
+    }
+
+    #[test]
+    fn batched_hot_path_explores_clean() {
+        // The batched2 scenario routes every dispatch through RunBatch
+        // with dispatch_batch=2 and every ascent through the coalesced
+        // Flush frame — the oracles must hold across all interleavings.
+        let cfg = CheckConfig {
+            scenario: "batched2".to_string(),
+            n_tasks: 2,
+            seeds: 8,
+            ..CheckConfig::default()
+        };
+        let report = run_check(&cfg).unwrap();
+        assert!(report.passed(), "unexpected violation: {:?}", report.counterexample);
+        assert!(report.exhausted, "state budget hit at {} states", report.states);
+        assert!(report.states > 0);
     }
 
     #[test]

@@ -15,6 +15,7 @@ fn msg_task_count(msg: &ProtoMsg) -> usize {
     match msg {
         ProtoMsg::Assign(ts) | ProtoMsg::Returned(ts) => ts.len(),
         ProtoMsg::Results(rs) => rs.len(),
+        ProtoMsg::Flush { results, .. } => results.len(),
         ProtoMsg::StealGrant { tasks, .. } => tasks.len(),
         _ => 0,
     }
@@ -38,7 +39,7 @@ pub(crate) fn conservation(m: &Model) -> Option<Violation> {
     acc += queued + stored;
     let mut running: u64 = 0;
     for slots in &m.running {
-        running += slots.iter().filter(|s| s.is_some()).count() as u64;
+        running += slots.iter().map(|q| q.len() as u64).sum::<u64>();
     }
     acc += running;
     let mut in_flight: u64 = 0;
@@ -108,8 +109,8 @@ pub(crate) fn recall_quiescence(m: &Model) -> Option<Violation> {
         }
     }
     for (node, slots) in m.running.iter().enumerate() {
-        for (consumer, s) in slots.iter().enumerate() {
-            if let Some((t, _)) = s {
+        for (consumer, q) in slots.iter().enumerate() {
+            if let Some((t, _)) = q.front() {
                 return Some(Violation::new(
                     "recall-quiescence",
                     format!(

@@ -240,6 +240,18 @@ pub struct SchedulerConfig {
     pub time_scale: f64,
     /// Buffer tick interval (threaded mode) for flushing stale results.
     pub flush_interval_ms: u64,
+    /// Run-ahead dispatch depth: how many queued tasks a leaf node may
+    /// hand a consumer in one `RunBatch` message. The consumer executes
+    /// them back to back and reports one batched completion, so N tasks
+    /// pay one message round trip. 1 (the default) is per-task dispatch —
+    /// exactly the pre-v10 behaviour.
+    pub dispatch_batch: usize,
+    /// Merge a credit request and a result flush emitted in the same
+    /// protocol step into one upstream `Flush` message (request + results
+    /// ride one send). Purely a transport coalescing: the receiver
+    /// processes the two halves in the same order the separate messages
+    /// would have arrived.
+    pub coalesce_flush: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -259,6 +271,8 @@ impl Default for SchedulerConfig {
             flush_every: 16,
             time_scale: 1.0,
             flush_interval_ms: 50,
+            dispatch_batch: 1,
+            coalesce_flush: true,
         }
     }
 }

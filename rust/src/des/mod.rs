@@ -19,7 +19,14 @@
 //!   what breaks a single-master design at scale, §3);
 //! * starting a task costs `task_overhead` on the consumer (temp dir +
 //!   `fork`/`exec` + result parsing, §3's reason sub-second tasks are out
-//!   of scope).
+//!   of scope);
+//! * a batched dispatch ([`SchedulerConfig::dispatch_batch`] > 1) pays
+//!   the message latency **once per batch** each way: the tasks run back
+//!   to back (each still charged `task_overhead`), and all their results
+//!   ride one `DoneBatch` event — so the throughput win of batching is
+//!   modelled honestly and `choose_shape` calibration stays truthful.
+//!   Likewise a coalesced `Flush` (credit request + result ascent,
+//!   [`SchedulerConfig::coalesce_flush`]) is one message, not two.
 //!
 //! The buffer layer is an N-level tree ([`SchedulerConfig::depth`]): relay
 //! nodes hold credit against their parent, batch results upstream, and may
@@ -47,7 +54,7 @@ use std::cmp::Reverse;
 // BTreeMap/BTreeSet, not HashMap/HashSet: the DES promises bit-identical
 // replay, so every collection on an event path iterates in a fixed order
 // (the `hash-iter` lint rule enforces this for the whole module).
-use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
+use std::collections::{BTreeMap, BinaryHeap};
 
 use crate::api::{JobSink, JobSpec};
 use crate::config::{
@@ -71,12 +78,18 @@ enum Ev {
     ProdResults { results: Vec<TaskResult> },
     /// Tasks arrive at a node (from its parent or the producer).
     NodeAssign { node: usize, tasks: Vec<TaskSpec> },
-    /// Leaf consumer finished; `Done` arrives at its leaf node.
-    NodeDone { node: usize, consumer: usize, result: TaskResult },
-    /// Synthetic completion of an attempt killed by cancellation. A
-    /// separate variant so the voided *original* `NodeDone` (same node /
-    /// consumer / id) can be skipped without swallowing this one.
-    NodeKilled { node: usize, consumer: usize, result: TaskResult },
+    /// Leaf consumer finished its whole dispatched batch; one `DoneBatch`
+    /// arrives at its leaf node carrying every result. `epoch` matches
+    /// the batch's [`RunningBatch::epoch`] — a kill-on-cancel truncates
+    /// the batch, bumps the epoch and re-schedules this event, so a stale
+    /// completion (the pre-kill schedule) is recognised and skipped.
+    NodeDoneBatch { node: usize, consumer: usize, epoch: u64 },
+    /// Coalesced credit request + result flush from child slot `child`
+    /// arrives at its parent `node`.
+    NodeFlush { node: usize, child: usize, amount: usize, results: Vec<TaskResult> },
+    /// Coalesced credit request + result flush from root slot `slot`
+    /// arrives at the producer.
+    ProdFlush { slot: usize, amount: usize, results: Vec<TaskResult> },
     /// Interior child (slot `child`) asks its parent `node` for tasks.
     NodeRequest { node: usize, child: usize, amount: usize },
     /// Interior child flushes results to its parent `node`.
@@ -271,13 +284,32 @@ struct Des<'a> {
     controller: Option<ReshapeController>,
     /// Stats of trees retired by drain-and-graft transitions.
     retired_stats: Vec<NodeStats>,
-    /// `(node, consumer)` → (task id, begin, scheduled finish, attempt) of
-    /// the attempt currently running there — the state kill-on-cancel
-    /// needs to truncate an in-flight execution.
-    running: BTreeMap<(usize, usize), (TaskId, f64, f64, u32)>,
-    /// Completions voided by a kill: the original `NodeDone` is skipped
-    /// when it surfaces (the synthetic cancelled one already delivered).
-    voided: BTreeSet<(usize, usize, TaskId)>,
+    /// `(node, consumer)` → the batch of attempts currently dispatched
+    /// there, in execution order — the state kill-on-cancel needs to
+    /// truncate an in-flight (or skip a still-queued) execution.
+    running: BTreeMap<(usize, usize), RunningBatch>,
+    /// Monotonic counter minting [`RunningBatch::epoch`] values.
+    next_epoch: u64,
+}
+
+/// One consumer's dispatched batch: the pre-computed outcome of every
+/// attempt, executed back to back in virtual time.
+struct RunningBatch {
+    /// Guard against stale [`Ev::NodeDoneBatch`] events: bumped whenever a
+    /// kill re-times the batch.
+    epoch: u64,
+    items: Vec<BatchItem>,
+}
+
+/// Pre-computed outcome of one attempt inside a [`RunningBatch`].
+struct BatchItem {
+    id: TaskId,
+    attempt: u32,
+    begin: f64,
+    finish: f64,
+    rc: i32,
+    results: Vec<f64>,
+    timed_out: bool,
 }
 
 impl<'a> Des<'a> {
@@ -355,44 +387,50 @@ impl<'a> Des<'a> {
         let slot = self.topo.nodes[n].slot;
         for act in acts {
             match act {
-                BufferAction::RunOn { consumer, task } => {
-                    let rank_base = match &self.topo.nodes[n].kind {
-                        TreeNodeKind::Leaf { rank_base, .. } => *rank_base,
-                        TreeNodeKind::Interior { .. } => unreachable!("RunOn from interior"),
-                    };
-                    let begin = t + lat + overhead;
-                    let mut dur = self.durations.duration(&task);
-                    let mut rc = self.durations.rc(&task);
-                    let mut results =
-                        if rc == 0 { self.durations.results(&task) } else { Vec::new() };
-                    // Per-attempt budget: the attempt is cut short and
-                    // reported as a timeout failure (retryable like any
-                    // other failure). Only this executor-side truncation
-                    // sets `timed_out` — a duration model returning
-                    // RC_TIMEOUT of its own accord simulates a user
-                    // simulator that happens to exit 124.
-                    let mut timed_out = false;
-                    if let Some(to) = task.timeout_s {
-                        if dur > to {
-                            dur = to;
-                            rc = RC_TIMEOUT;
-                            results = Vec::new();
-                            timed_out = true;
+                BufferAction::RunBatch { consumer, tasks } => {
+                    // The batch pays the dispatch latency once; tasks then
+                    // run back to back, each charged `task_overhead` — the
+                    // honestly-modelled win of batched dispatch. One
+                    // `NodeDoneBatch` rides back after the last finish.
+                    let mut begin = t + lat + overhead;
+                    let mut items = Vec::with_capacity(tasks.len());
+                    for task in tasks {
+                        let mut dur = self.durations.duration(&task);
+                        let mut rc = self.durations.rc(&task);
+                        let mut results =
+                            if rc == 0 { self.durations.results(&task) } else { Vec::new() };
+                        // Per-attempt budget: the attempt is cut short and
+                        // reported as a timeout failure (retryable like any
+                        // other failure). Only this executor-side truncation
+                        // sets `timed_out` — a duration model returning
+                        // RC_TIMEOUT of its own accord simulates a user
+                        // simulator that happens to exit 124.
+                        let mut timed_out = false;
+                        if let Some(to) = task.timeout_s {
+                            if dur > to {
+                                dur = to;
+                                rc = RC_TIMEOUT;
+                                results = Vec::new();
+                                timed_out = true;
+                            }
                         }
+                        let finish = begin + dur;
+                        items.push(BatchItem {
+                            id: task.id,
+                            attempt: task.attempt,
+                            begin,
+                            finish,
+                            rc,
+                            results,
+                            timed_out,
+                        });
+                        begin = finish + overhead;
                     }
-                    let finish = begin + dur;
-                    self.running.insert((n, consumer), (task.id, begin, finish, task.attempt));
-                    let result = TaskResult {
-                        id: task.id,
-                        consumer: rank_base + consumer,
-                        results,
-                        begin,
-                        finish,
-                        rc,
-                        attempt: task.attempt,
-                        timed_out,
-                    };
-                    self.push(finish + lat, Ev::NodeDone { node: n, consumer, result });
+                    let Some(last_finish) = items.last().map(|it| it.finish) else { continue };
+                    self.next_epoch += 1;
+                    let epoch = self.next_epoch;
+                    self.running.insert((n, consumer), RunningBatch { epoch, items });
+                    self.push(last_finish + lat, Ev::NodeDoneBatch { node: n, consumer, epoch });
                 }
                 BufferAction::SendToChild { child, tasks } => {
                     let child_id = self.topo.children_of(n)[child];
@@ -412,6 +450,12 @@ impl<'a> Des<'a> {
                         }
                     }
                 }
+                BufferAction::Flush { amount, results } => match parent {
+                    None => self.push(t + up, Ev::ProdFlush { slot, amount, results }),
+                    Some(p) => {
+                        self.push(t + up, Ev::NodeFlush { node: p, child: slot, amount, results })
+                    }
+                },
                 BufferAction::StealRequest { victim, amount } => {
                     // Sideways traffic rides the shared parent-facing link.
                     let victim_id = match parent {
@@ -432,35 +476,48 @@ impl<'a> Des<'a> {
                 BufferAction::CancelRunning { consumer, id } => {
                     // Kill-on-cancel in virtual time: if the targeted
                     // attempt is still in flight once the cancellation
-                    // poll fires, void its scheduled completion and
-                    // deliver a truncated RC_CANCELLED one instead. A
-                    // kill arriving after the natural finish loses the
-                    // race — the attempt completes normally, exactly as
-                    // in the threaded runtime.
-                    let rank_base = match &self.topo.nodes[n].kind {
-                        TreeNodeKind::Leaf { rank_base, .. } => *rank_base,
-                        TreeNodeKind::Interior { .. } => {
-                            unreachable!("CancelRunning from interior")
+                    // poll fires, truncate it to a RC_CANCELLED outcome
+                    // at the poll instant; if it is still *queued* inside
+                    // the batch, it is skipped at its turn (zero-duration
+                    // cancelled result — the consumer-side pre-run check
+                    // of the threaded runtime). Later items shift earlier
+                    // by the time saved, the epoch is bumped and the
+                    // batch completion re-scheduled; the stale one is
+                    // skipped on arrival. A kill arriving after the
+                    // natural finish loses the race — the attempt
+                    // completes normally, exactly as in the threaded
+                    // runtime.
+                    let kill_t = t + self.cfg.lat.cancel_poll;
+                    if let Some(batch) = self.running.get_mut(&(n, consumer)) {
+                        let Some(pos) = batch.items.iter().position(|it| it.id == id) else {
+                            continue;
+                        };
+                        if kill_t >= batch.items[pos].finish {
+                            continue; // lost the race to the natural finish
                         }
-                    };
-                    if let Some(&(rid, begin, finish, attempt)) = self.running.get(&(n, consumer))
-                    {
-                        let kill_t = t + self.cfg.lat.cancel_poll;
-                        if rid == id && kill_t < finish {
-                            self.voided.insert((n, consumer, id));
-                            self.running.remove(&(n, consumer));
-                            let result = TaskResult {
-                                id,
-                                consumer: rank_base + consumer,
-                                results: Vec::new(),
-                                begin,
-                                finish: kill_t,
-                                rc: RC_CANCELLED,
-                                attempt,
-                                timed_out: false,
-                            };
-                            self.push(kill_t + lat, Ev::NodeKilled { node: n, consumer, result });
+                        {
+                            let it = &mut batch.items[pos];
+                            it.finish = kill_t.max(it.begin);
+                            it.rc = RC_CANCELLED;
+                            it.results = Vec::new();
+                            it.timed_out = false;
                         }
+                        let mut begin = batch.items[pos].finish + overhead;
+                        for it in batch.items.iter_mut().skip(pos + 1) {
+                            let dur = it.finish - it.begin;
+                            it.begin = begin;
+                            it.finish = begin + dur;
+                            begin = it.finish + overhead;
+                        }
+                        self.next_epoch += 1;
+                        batch.epoch = self.next_epoch;
+                        let epoch = batch.epoch;
+                        let last_finish =
+                            batch.items.last().map(|it| it.finish).unwrap_or(kill_t);
+                        self.push(
+                            last_finish + lat,
+                            Ev::NodeDoneBatch { node: n, consumer, epoch },
+                        );
                     }
                 }
                 BufferAction::CancelChildren { id } => {
@@ -530,6 +587,12 @@ impl<'a> Des<'a> {
     /// tasks to the producer.
     fn producer_ingest(&mut self, results: Vec<TaskResult>, t: f64) {
         self.producer.on_results(results.len());
+        self.ingest_results(results, t);
+    }
+
+    /// Engine-side half of result ingestion — the producer state machine
+    /// has already accounted for the message (`on_results` or `on_flush`).
+    fn ingest_results(&mut self, results: Vec<TaskResult>, t: f64) {
         if let Some(ctrl) = self.controller.as_mut() {
             for r in &results {
                 ctrl.observe_result(r);
@@ -707,7 +770,7 @@ pub fn run_des(
         controller,
         retired_stats: Vec::new(),
         running: BTreeMap::new(),
-        voided: BTreeSet::new(),
+        next_epoch: 0,
     };
 
     // Bootstrap: producer intake, buffer credit requests.
@@ -746,27 +809,50 @@ pub fn run_des(
                 let acts = des.nodes[node].on_assign(tasks);
                 des.perform_node(node, acts, t);
             }
-            Ev::NodeDone { node, consumer, result } => {
-                // A completion voided by kill-on-cancel: the synthetic
-                // cancelled Done already went through; skip the original
-                // (and do not touch `running` — the consumer may already
-                // be executing its next task).
-                if des.voided.remove(&(node, consumer, result.id)) {
-                    continue;
+            Ev::NodeDoneBatch { node, consumer, epoch } => {
+                // A completion re-timed by kill-on-cancel: the bumped
+                // epoch identifies the live schedule; stale events (the
+                // pre-kill timing) are skipped here.
+                match des.running.get(&(node, consumer)) {
+                    Some(b) if b.epoch == epoch => {}
+                    _ => continue,
                 }
-                if des.running.get(&(node, consumer)).is_some_and(|&(id, ..)| id == result.id) {
-                    des.running.remove(&(node, consumer));
-                }
+                let Some(batch) = des.running.remove(&(node, consumer)) else { continue };
+                let rank_base = match &des.topo.nodes[node].kind {
+                    TreeNodeKind::Leaf { rank_base, .. } => *rank_base,
+                    TreeNodeKind::Interior { .. } => unreachable!("DoneBatch at interior"),
+                };
+                let results: Vec<TaskResult> = batch
+                    .items
+                    .into_iter()
+                    .map(|it| TaskResult {
+                        id: it.id,
+                        consumer: rank_base + consumer,
+                        results: it.results,
+                        begin: it.begin,
+                        finish: it.finish,
+                        rc: it.rc,
+                        attempt: it.attempt,
+                        timed_out: it.timed_out,
+                    })
+                    .collect();
                 let t = des.node_serve(node, time);
                 des.nodes[node].set_now(t);
-                let acts = des.nodes[node].on_done(consumer, result);
+                let acts = des.nodes[node].on_done_batch(consumer, results);
                 des.perform_node(node, acts, t);
             }
-            Ev::NodeKilled { node, consumer, result } => {
+            Ev::NodeFlush { node, child, amount, results } => {
                 let t = des.node_serve(node, time);
                 des.nodes[node].set_now(t);
-                let acts = des.nodes[node].on_done(consumer, result);
+                let acts = des.nodes[node].on_child_flush(child, amount, results);
                 des.perform_node(node, acts, t);
+            }
+            Ev::ProdFlush { slot, amount, results } => {
+                let t = des.producer_serve(time);
+                des.producer.set_now(t);
+                let acts = des.producer.on_flush(slot, amount, results.len());
+                des.perform_producer(acts, t);
+                des.ingest_results(results, t);
             }
             Ev::NodeRequest { node, child, amount } => {
                 let t = des.node_serve(node, time);

@@ -146,6 +146,10 @@ fn usage() {
                             (default 0.25)
       --reshape-cooldown S  minimum seconds between transitions
                             (default 30)
+      --dispatch-batch N  tasks handed to a consumer per dispatch (v10
+                      batched hot path; default 1 = one task per message)
+      --no-coalesce   one ascent send per event instead of merging credit
+                      requests and result batches into `Flush` frames
       --listen ADDR   serve the buffer tree over the wire instead of
                       in-process: bind ADDR (tcp:HOST:PORT or
                       uds:/path.sock), wait for --workers `caravan
@@ -163,6 +167,8 @@ fn usage() {
   des               DES filling-rate experiment (Fig. 3 point)
       --np N --tc 1|2|3 --tasks-per-proc N --depth D|auto
       --fanout F[,F2,..] --steal --steal-round-robin --direct --seed S
+      --dispatch-batch N --no-coalesce  (as for run; the batched hot
+                      path is modelled event-for-event in the DES)
       --link-latency S[,S2,..]  per-edge one-way latency in seconds,
                       root-down (first = producer<->root edge, last
                       repeats deeper); models multi-host trees
@@ -194,7 +200,9 @@ fn usage() {
                     Exit 0 when every oracle held, 1 on a violation
                     (with a minimized replayable trace), 2 on usage/IO
                     errors — CI gates on this.
-      --scenario S    model topology: flat2 (default), deep4, or 'all'
+      --scenario S    model topology: flat2 (default), batched2 (the
+                      dispatch_batch=2 + coalesced-ascent hot path),
+                      deep4, or 'all'
       --max-tasks N   tasks the model engine submits (1..=16, default 3)
       --max-depth D   DFS schedule-depth bound (default 400)
       --max-states N  unique-state budget for the DFS (default 200000)
@@ -269,6 +277,17 @@ fn policy_label(p: SchedPolicy) -> String {
     }
 }
 
+/// Apply the hot-path batching knobs: `--dispatch-batch N` (tasks per
+/// consumer dispatch; 1 restores the pre-v10 one-message-per-task path)
+/// and `--no-coalesce` (one ascent send per event instead of merged
+/// credit+result `Flush` frames).
+fn apply_batching(args: &Args, cfg: &mut SchedulerConfig) {
+    cfg.dispatch_batch = args.get_usize("dispatch-batch", cfg.dispatch_batch).max(1);
+    if args.has_flag("no-coalesce") {
+        cfg.coalesce_flush = false;
+    }
+}
+
 /// Apply `--class NAME=WEIGHT:POLICY[:QUOTA],...` to a scheduler config.
 /// Class N in the list gets `ClassId` N; a bad spec (including an unknown
 /// policy token) exits 2 naming the flag and the offending token.
@@ -327,6 +346,7 @@ fn cmd_run(args: &Args) {
     apply_shape(args, &mut cfg);
     apply_reshape(args, &mut cfg);
     apply_classes(args, &mut cfg);
+    apply_batching(args, &mut cfg);
     let n_classes = cfg.classes.len();
     let work = std::env::temp_dir().join(format!("caravan_run_{}", std::process::id()));
     let report = if let Some(listen) = args.get_opt("listen") {
@@ -469,6 +489,7 @@ fn cmd_des(args: &Args) {
         cfg.sched.steal_policy = caravan::config::StealPolicy::RoundRobin;
     }
     cfg.sched.policy = parse_policy(args);
+    apply_batching(args, &mut cfg.sched);
     if let Some(spec) = args.get_opt("link-latency") {
         cfg.lat.link_latency = spec
             .split(',')

@@ -92,6 +92,12 @@ pub struct NodeStats {
     /// Tasks popped from this node's local queue for dispatch — the unit
     /// the wait histograms count.
     pub popped: u64,
+    /// Multi-task `RunBatch` dispatches sent to consumers (batches of
+    /// length ≥ 2; single-task sends are not counted).
+    pub dispatch_batches: u64,
+    /// Credit-request/result-flush pairs merged into one upstream `Flush`
+    /// message by ascent coalescing.
+    pub coalesced_flushes: u64,
     /// Per-band queue-wait histograms, ascending band order. Σ of all
     /// counts equals `popped`.
     pub wait_hist: Vec<BandWaitHist>,

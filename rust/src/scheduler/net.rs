@@ -314,6 +314,30 @@ pub fn serve_links(
                         &mut all_results,
                     );
                 }
+                WireMsg::Flush { amount, results } => {
+                    // The coalesced uplink: one frame carrying a credit
+                    // request and a result batch. Ledger and engine see the
+                    // same per-result effects as separate frames would.
+                    for r in &results {
+                        workers[slot].outstanding.remove(&r.id);
+                    }
+                    let acts = state.on_flush(slot, amount as usize, results.len());
+                    perform_wire(acts, &mut workers, &mut newly_dead);
+                    for r in &results {
+                        if !r.cancelled() {
+                            filling.record(r);
+                        }
+                        engine.on_done(r, &mut sink);
+                    }
+                    all_results.extend(results);
+                    drain_engine_net(
+                        &mut state,
+                        &mut sink,
+                        &mut *engine,
+                        &mut workers,
+                        &mut all_results,
+                    );
+                }
                 WireMsg::Returned(tasks) => {
                     for t in &tasks {
                         workers[slot].outstanding.remove(&t.id);
@@ -368,6 +392,8 @@ pub fn serve_links(
             cancelled_killed: 0,
             retried: 0,
             popped: 0,
+            dispatch_batches: 0,
+            coalesced_flushes: 0,
             wait_hist: Vec::new(),
             class_stats: Vec::new(),
             req_lag_n: 0,
@@ -573,7 +599,8 @@ pub fn run_worker(
         cfg.flush_every,
     )
     .with_policy(cfg.policy)
-    .with_classes(cfg.class_table());
+    .with_classes(cfg.class_table())
+    .with_batching(cfg.dispatch_batch, cfg.coalesce_flush);
     let flush_interval = Duration::from_millis(cfg.flush_interval_ms.max(1));
     let mut tasks_run = 0usize;
     let mut stopping = false;
@@ -594,6 +621,9 @@ pub fn run_worker(
             Ok(ToBuffer::Assign(tasks)) => gw.on_assign(tasks),
             Ok(ToBuffer::ChildRequest { child, amount }) => gw.on_child_request(child, amount),
             Ok(ToBuffer::ChildResults(rs)) => gw.on_child_results(rs),
+            Ok(ToBuffer::ChildFlush { child, amount, results }) => {
+                gw.on_child_flush(child, amount, results)
+            }
             Ok(ToBuffer::Cancel { id }) => gw.on_cancel(id),
             Ok(ToBuffer::Recall) => gw.on_recall(),
             Ok(ToBuffer::ChildReturned(tasks)) => gw.on_child_returned(tasks),
@@ -689,6 +719,18 @@ fn route_gateway(
                     stopping = true;
                 }
             }
+            BufferAction::Flush { amount, results } => {
+                let mut rs = results;
+                for r in rs.iter_mut() {
+                    if r.consumer != usize::MAX {
+                        r.consumer += rank_base;
+                    }
+                }
+                *tasks_run += rs.len();
+                if wire.send(&WireMsg::Flush { amount: amount as u64, results: rs }).is_err() {
+                    stopping = true;
+                }
+            }
             BufferAction::CancelChildren { id } => {
                 for tx in root_txs {
                     let _ = tx.send(ToBuffer::Cancel { id });
@@ -717,7 +759,7 @@ fn route_gateway(
             }
             // The gateway has buffer children, no local consumers and no
             // siblings: these actions cannot be emitted for it.
-            BufferAction::RunOn { .. }
+            BufferAction::RunBatch { .. }
             | BufferAction::StealRequest { .. }
             | BufferAction::StealGrant { .. }
             | BufferAction::CancelRunning { .. }

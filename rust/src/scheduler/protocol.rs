@@ -600,6 +600,13 @@ pub fn root_count(nb: usize, fanouts: &[usize]) -> usize {
 /// most the target — or the deepest candidate when the producer lag
 /// dominates so hard that no shape clears it (utilization still strictly
 /// improves with every level until the root count hits 1).
+///
+/// With `coalesce_flush` on (the v10 default) a request and a result
+/// flush emitted in the same step ride one message, so the modelled
+/// `result_rate + request_rate` load is an *upper bound* on what rank 0
+/// actually serves. The formula is deliberately left uncoalesced: a
+/// conservative producer-load estimate can only deepen the tree a step
+/// early, never leave the producer saturated.
 pub fn choose_shape(cfg: &SchedulerConfig, cal: &Calibration) -> (usize, Vec<usize>) {
     let nb = cfg.num_buffers();
     if nb <= 1 {
@@ -662,14 +669,22 @@ pub enum ProducerAction {
 /// Actions a buffer node asks its runtime to carry out.
 #[derive(Clone, Debug, PartialEq)]
 pub enum BufferAction {
-    /// Leaf: start `task` on local consumer index `consumer`.
-    RunOn { consumer: usize, task: TaskSpec },
+    /// Leaf: start `tasks` on local consumer index `consumer`, in order.
+    /// The consumer executes them back to back and reports one batched
+    /// completion — N tasks ride one message each way. A single-element
+    /// batch is the pre-v10 per-task dispatch.
+    RunBatch { consumer: usize, tasks: Vec<TaskSpec> },
     /// Interior: forward these tasks to child slot `child`.
     SendToChild { child: usize, tasks: Vec<TaskSpec> },
     /// Ask the parent for up to `amount` more tasks.
     RequestTasks { amount: usize },
     /// Ship these results to the parent.
     FlushResults(Vec<TaskResult>),
+    /// Coalesced ascent: a credit request for `amount` more tasks *and* a
+    /// result flush riding one upstream send (emitted instead of separate
+    /// `RequestTasks` + `FlushResults` when the node's `coalesce_flush`
+    /// knob is on and one protocol step produced both).
+    Flush { amount: usize, results: Vec<TaskResult> },
     /// Ask sibling slot `victim` (within the shared parent) for queued
     /// tasks. `thief` in the reply is an opaque token echoed back by the
     /// victim — the runtime chooses what it routes by.
@@ -687,10 +702,11 @@ pub enum BufferAction {
         cancels: Vec<TaskId>,
         tasks: Vec<TaskSpec>,
     },
-    /// Leaf: the cancelled task is *running* on local consumer index
-    /// `consumer` — the runtime must kill the attempt; the consumer then
-    /// reports `RC_CANCELLED` through the ordinary `Done` path (which is
-    /// exempt from retry).
+    /// Leaf: the cancelled task is *running* (or queued behind the
+    /// running attempt in a dispatched batch) on local consumer index
+    /// `consumer` — the runtime must kill or skip the attempt; the
+    /// consumer then reports `RC_CANCELLED` in the task's batch position
+    /// through the ordinary `Done` path (which is exempt from retry).
     CancelRunning { consumer: usize, id: TaskId },
     /// Interior: forward a cancellation notice to all children.
     CancelChildren { id: TaskId },
@@ -824,6 +840,19 @@ impl ProducerState {
     pub fn on_results(&mut self, n_results: usize) {
         self.msgs_in += 1;
         self.completed += n_results as u64;
+    }
+
+    /// A child's coalesced ascent arrived: a credit request for `amount`
+    /// more tasks and `n_results` flushed results in one message (see
+    /// [`BufferAction::Flush`]). Exactly `on_results` followed by
+    /// `on_request`, but counted as the single message it travelled as.
+    pub fn on_flush(&mut self, buffer: usize, amount: usize, n_results: usize) -> Vec<ProducerAction> {
+        self.msgs_in += 1;
+        self.completed += n_results as u64;
+        if let Some(d) = self.deficit.get_mut(buffer) {
+            *d = d.saturating_add(amount);
+        }
+        self.satisfy_deficits()
     }
 
     /// The engine asked to cancel `id`. If the task is still pending here
@@ -1029,10 +1058,13 @@ struct RunningTask {
 
 /// What a buffer node feeds: consumers (leaf) or child buffers (interior).
 /// A leaf remembers what each consumer is executing so failed attempts can
-/// be retried transparently and running attempts can be cancelled.
+/// be retried transparently and running attempts can be cancelled. Each
+/// consumer holds a *queue* of dispatched attempts (front = executing,
+/// the rest run-ahead work granted in the same `RunBatch`); with
+/// `dispatch_batch == 1` the queue never exceeds one entry.
 #[derive(Clone, Debug)]
 enum Children {
-    Consumers { n: usize, idle: VecDeque<usize>, running: Vec<Option<RunningTask>> },
+    Consumers { n: usize, idle: VecDeque<usize>, running: Vec<VecDeque<RunningTask>> },
     Buffers { deficit: Vec<usize>, cursor: usize, subtree: usize },
 }
 
@@ -1070,6 +1102,12 @@ pub struct BufferState {
     steal_cursor: usize,
     credit_factor: usize,
     flush_every: usize,
+    /// Run-ahead dispatch depth: max tasks per `RunBatch` to one consumer
+    /// (1 = pre-v10 per-task dispatch; see `SchedulerConfig::dispatch_batch`).
+    dispatch_batch: usize,
+    /// Merge a same-step credit request + result flush into one upstream
+    /// `Flush` message (see `SchedulerConfig::coalesce_flush`).
+    coalesce_flush: bool,
     shutting_down: bool,
     /// True after a recall notice: the node stops requesting and
     /// dispatching, drains its queue upstream, and acks when empty.
@@ -1095,6 +1133,12 @@ pub struct BufferState {
     pub cancelled_killed: u64,
     /// Failed attempts transparently re-queued here.
     pub retried: u64,
+    /// Multi-task `RunBatch` dispatches sent (batches of ≥ 2 tasks; a
+    /// batch of 1 is ordinary per-task dispatch and is not counted).
+    pub dispatch_batches: u64,
+    /// Upstream sends saved by coalescing a credit request and a result
+    /// flush into one `Flush` message.
+    pub coalesced_flushes: u64,
     /// Pending cancellation notices: ids cancelled while not locally
     /// queued — the task may be in flight *sideways* (inside a steal
     /// grant), so a later arrival is dropped on sight, or *running* here,
@@ -1134,7 +1178,7 @@ impl BufferState {
             children: Children::Consumers {
                 n: n_consumers,
                 idle: (0..n_consumers).collect(),
-                running: vec![None; n_consumers],
+                running: vec![VecDeque::new(); n_consumers],
             },
             queue: PrioQueue::new(),
             store: Vec::new(),
@@ -1149,6 +1193,8 @@ impl BufferState {
             steal_cursor: 0,
             credit_factor: credit_factor.max(1),
             flush_every: flush_every.max(1),
+            dispatch_batch: 1,
+            coalesce_flush: false,
             shutting_down: false,
             recalling: false,
             recall_acked: false,
@@ -1161,6 +1207,8 @@ impl BufferState {
             cancelled_dropped: 0,
             cancelled_killed: 0,
             retried: 0,
+            dispatch_batches: 0,
+            coalesced_flushes: 0,
             tombstones: BTreeSet::new(),
             tombstone_order: VecDeque::new(),
             now: 0.0,
@@ -1203,6 +1251,8 @@ impl BufferState {
             steal_cursor: 0,
             credit_factor: credit_factor.max(1),
             flush_every: flush_every.max(1),
+            dispatch_batch: 1,
+            coalesce_flush: false,
             shutting_down: false,
             recalling: false,
             recall_acked: false,
@@ -1215,6 +1265,8 @@ impl BufferState {
             cancelled_dropped: 0,
             cancelled_killed: 0,
             retried: 0,
+            dispatch_batches: 0,
+            coalesced_flushes: 0,
             tombstones: BTreeSet::new(),
             tombstone_order: VecDeque::new(),
             now: 0.0,
@@ -1249,6 +1301,19 @@ impl BufferState {
         self.queue.set_now(now);
     }
 
+    /// Configure the hot-path batching knobs (builder): `dispatch_batch`
+    /// run-ahead tasks per consumer dispatch (clamped to ≥ 1; 1 = per-task
+    /// dispatch) and whether same-step request + flush pairs coalesce into
+    /// one upstream `Flush` send. The raw constructors default to
+    /// `(1, false)` — the pre-v10 message economy — so unit tests driving
+    /// handlers directly see the historical per-action behaviour unless
+    /// they opt in.
+    pub fn with_batching(mut self, dispatch_batch: usize, coalesce_flush: bool) -> Self {
+        self.dispatch_batch = dispatch_batch.max(1);
+        self.coalesce_flush = coalesce_flush;
+        self
+    }
+
     /// Enable sibling work stealing. `my_slot` is this node's index among
     /// its parent's `n_siblings + 1` children.
     pub fn with_stealing(mut self, my_slot: usize, n_siblings: usize, policy: StealPolicy) -> Self {
@@ -1269,6 +1334,7 @@ impl BufferState {
             // Out-of-range id is a caller bug; degrade to a 1-consumer
             // leaf rather than panicking the tree down.
             return BufferState::new(1, cfg.credit_factor, cfg.flush_every)
+                .with_batching(cfg.dispatch_batch, cfg.coalesce_flush)
                 .with_policy(cfg.policy)
                 .with_classes(cfg.class_table());
         };
@@ -1283,7 +1349,10 @@ impl BufferState {
                 cfg.flush_every,
             ),
         };
-        let state = state.with_policy(cfg.policy).with_classes(cfg.class_table());
+        let state = state
+            .with_batching(cfg.dispatch_batch, cfg.coalesce_flush)
+            .with_policy(cfg.policy)
+            .with_classes(cfg.class_table());
         if cfg.steal {
             state.with_stealing(n.slot, n.n_siblings, cfg.steal_policy)
         } else {
@@ -1364,6 +1433,8 @@ impl BufferState {
             cancelled_dropped: self.cancelled_dropped,
             cancelled_killed: self.cancelled_killed,
             retried: self.retried,
+            dispatch_batches: self.dispatch_batches,
+            coalesced_flushes: self.coalesced_flushes,
             popped: self.queue.popped(),
             wait_hist: self.queue.wait_hist(),
             class_stats: self.queue.class_stats(),
@@ -1416,72 +1487,96 @@ impl BufferState {
         out.extend(self.request_if_low());
         // Tombstoned arrivals synthesize results straight into the store.
         out.extend(self.flush_if_due());
-        out
+        self.seal(out)
     }
 
     /// Leaf: a local consumer finished a task (and is implicitly asking
     /// for more). A failed attempt with retries left is re-queued here —
-    /// transparently to everything upstream.
-    pub fn on_done(&mut self, consumer: usize, mut result: TaskResult) -> Vec<BufferAction> {
+    /// transparently to everything upstream. Single-result wrapper around
+    /// [`Self::on_done_batch`].
+    pub fn on_done(&mut self, consumer: usize, result: TaskResult) -> Vec<BufferAction> {
+        self.on_done_batch(consumer, vec![result])
+    }
+
+    /// Leaf: a local consumer finished the whole batch it was dispatched
+    /// (one result per task, in dispatch order) and is implicitly asking
+    /// for more. One message carries every completion, so the per-message
+    /// cost is paid once per batch. Each result is processed exactly as a
+    /// per-task `Done` would be: retry/tombstone decisions are per result.
+    pub fn on_done_batch(&mut self, consumer: usize, results: Vec<TaskResult>) -> Vec<BufferAction> {
         if !self.is_leaf() {
             // A mis-routed Done at an interior node (no local consumers)
-            // degrades to a one-result child flush instead of a panic —
-            // the result still flows upstream, so conservation holds.
-            return self.on_child_results(vec![result]);
+            // degrades to a child flush instead of a panic — the results
+            // still flow upstream, so conservation holds.
+            return self.on_child_results(results);
         }
         self.msgs_in += 1;
-        let slot = match &mut self.children {
-            Children::Consumers { running, .. } => {
-                running.get_mut(consumer).and_then(|slot| slot.take())
-            }
-            Children::Buffers { .. } => None,
-        };
-        // A pending cancel for this id (kill requested while the attempt
-        // raced to completion) is consumed by the final Done: it must
-        // suppress any retry, and is moot once a result is in.
-        let cancel_pending = self.consume_tombstone(result.id);
-        match slot {
-            Some(slot) => {
-                result.attempt = slot.attempt;
-                // Cancelled (killed) attempts are exempt from retry.
-                // `retry_spec` is Some exactly when the attempt failed
-                // *and* the tracked spec still has retry budget.
-                let failed = result.rc != 0 && result.rc != RC_CANCELLED;
-                let retry_spec = slot.spec.filter(|s| failed && s.attempt < s.max_retries);
-                match retry_spec {
-                    Some(spec) if cancel_pending => {
-                        // The attempt failed naturally while a cancel was
-                        // pending: honour the cancel instead of burning a
-                        // retry on a dead task.
-                        self.cancelled_dropped += 1;
-                        self.store.push(TaskResult::cancelled_for(&spec));
-                    }
-                    Some(mut spec) => {
-                        spec.attempt += 1;
-                        self.retried += 1;
-                        self.queue.push(spec);
-                        self.max_queue = self.max_queue.max(self.queue.len());
-                    }
-                    None => self.store.push(result),
+        for mut result in results {
+            let slot = match &mut self.children {
+                Children::Consumers { running, .. } => {
+                    running.get_mut(consumer).and_then(|q| q.pop_front())
                 }
+                Children::Buffers { .. } => None,
+            };
+            // A pending cancel for this id (kill requested while the
+            // attempt raced to completion) is consumed by the final Done:
+            // it must suppress any retry, and is moot once a result is in.
+            let cancel_pending = self.consume_tombstone(result.id);
+            match slot {
+                Some(slot) => {
+                    result.attempt = slot.attempt;
+                    // Cancelled (killed) attempts are exempt from retry.
+                    // `retry_spec` is Some exactly when the attempt failed
+                    // *and* the tracked spec still has retry budget.
+                    let failed = result.rc != 0 && result.rc != RC_CANCELLED;
+                    let retry_spec = slot.spec.filter(|s| failed && s.attempt < s.max_retries);
+                    match retry_spec {
+                        Some(spec) if cancel_pending => {
+                            // The attempt failed naturally while a cancel
+                            // was pending: honour the cancel instead of
+                            // burning a retry on a dead task.
+                            self.cancelled_dropped += 1;
+                            self.store.push(TaskResult::cancelled_for(&spec));
+                        }
+                        Some(mut spec) => {
+                            spec.attempt += 1;
+                            self.retried += 1;
+                            self.queue.push(spec);
+                            self.max_queue = self.max_queue.max(self.queue.len());
+                        }
+                        None => self.store.push(result),
+                    }
+                }
+                // No tracked slot (e.g. a unit test driving Done directly):
+                // the result passes through with the consumer-stamped attempt.
+                None => self.store.push(result),
             }
-            // No tracked slot (e.g. a unit test driving Done directly):
-            // the result passes through with the consumer-stamped attempt.
-            None => self.store.push(result),
         }
         let mut out = Vec::new();
         // While recalling, nothing is dispatched: the consumer goes idle
         // and anything queued (e.g. a retry re-queued just above) drains
-        // back upstream for re-dispatch after the graft.
-        let next = if self.recalling { None } else { self.queue.pop() };
+        // back upstream for re-dispatch after the graft. A consumer still
+        // holding run-ahead work (partial completions never happen — the
+        // batch reports as one message — but unit tests may drive this)
+        // stays busy rather than idling.
+        let next = if self.recalling {
+            Vec::new()
+        } else {
+            let want = self.dispatch_batch.min(self.queue.len());
+            self.queue.pop_n(want)
+        };
         if let Children::Consumers { idle, running, .. } = &mut self.children {
-            if let Some(task) = next {
-                if let Some(slot) = running.get_mut(consumer) {
-                    *slot = Some(RunningTask::track(&task));
+            let backlog = running.get(consumer).map_or(0, |q| q.len());
+            if !next.is_empty() {
+                if let Some(q) = running.get_mut(consumer) {
+                    q.extend(next.iter().map(RunningTask::track));
                 }
                 self.msgs_out += 1;
-                out.push(BufferAction::RunOn { consumer, task });
-            } else {
+                if next.len() > 1 {
+                    self.dispatch_batches += 1;
+                }
+                out.push(BufferAction::RunBatch { consumer, tasks: next });
+            } else if backlog == 0 {
                 idle.push_back(consumer);
             }
         }
@@ -1494,7 +1589,7 @@ impl BufferState {
             out.extend(self.final_flush());
         }
         out.extend(self.maybe_ack_recall());
-        out
+        self.seal(out)
     }
 
     /// Interior: child slot `child` asked for `amount` more tasks.
@@ -1530,6 +1625,41 @@ impl BufferState {
         }
     }
 
+    /// Interior: child slot `child`'s coalesced ascent arrived — a credit
+    /// request for `amount` more tasks plus flushed results in one message
+    /// (see [`BufferAction::Flush`]). Semantically `on_child_results`
+    /// followed by `on_child_request`, counted as the single message it
+    /// travelled as; the store extension and the deficit registration are
+    /// applied atomically before any downstream delivery.
+    pub fn on_child_flush(
+        &mut self,
+        child: usize,
+        amount: usize,
+        results: Vec<TaskResult>,
+    ) -> Vec<BufferAction> {
+        self.msgs_in += 1;
+        self.store.extend(results);
+        if let Children::Buffers { deficit, .. } = &mut self.children {
+            if let Some(d) = deficit.get_mut(child) {
+                *d = d.saturating_add(amount);
+            }
+        }
+        let mut out = Vec::new();
+        if !self.recalling {
+            // Demand is served immediately unless we are draining — a
+            // recalling node remembers the deficit for after the graft,
+            // exactly as `on_child_request` does.
+            out = self.deliver();
+            out.extend(self.request_if_low());
+        }
+        if self.shutting_down {
+            out.extend(self.flush_now());
+        } else {
+            out.extend(self.flush_if_due());
+        }
+        self.seal(out)
+    }
+
     /// A cancellation notice arrived. If the task is queued here, drop it
     /// and emit an `RC_CANCELLED` result through the normal result path.
     /// If it is *running* on a local consumer, ask the runtime to kill the
@@ -1547,12 +1677,14 @@ impl BufferState {
             let mut out = self.flush_if_due();
             // Losing queue depth may put us below the low-water mark.
             out.extend(self.request_if_low());
-            return out;
+            return self.seal(out);
         }
         if let Children::Consumers { running, .. } = &self.children {
-            if let Some(consumer) = running
-                .iter()
-                .position(|slot| slot.as_ref().is_some_and(|r| r.id == id))
+            // The target may be mid-execution *or* run-ahead work queued
+            // behind it in a dispatched batch — either way the runtime
+            // kills/skips it and reports RC_CANCELLED in its position.
+            if let Some(consumer) =
+                running.iter().position(|q| q.iter().any(|r| r.id == id))
             {
                 self.cancelled_killed += 1;
                 self.msgs_out += 1;
@@ -1651,7 +1783,7 @@ impl BufferState {
         out.extend(self.request_if_low());
         // Tombstoned loot synthesizes results straight into the store.
         out.extend(self.flush_if_due());
-        out
+        self.seal(out)
     }
 
     /// Parent announced shutdown. A leaf waits for running consumers; an
@@ -1769,15 +1901,17 @@ impl BufferState {
         self.store.iter()
     }
 
-    /// `(consumer, id, attempt)` for every attempt running on this leaf
-    /// (empty for interior nodes). Model-checker seam: the uniqueness and
-    /// conservation oracles count running attempts through this.
+    /// `(consumer, id, attempt)` for every attempt dispatched to this
+    /// leaf's consumers — the executing front plus any run-ahead batch
+    /// tail, in execution order (empty for interior nodes). Model-checker
+    /// seam: the uniqueness and conservation oracles count dispatched
+    /// attempts through this.
     pub fn running_tasks(&self) -> Vec<(usize, TaskId, u32)> {
         match &self.children {
             Children::Consumers { running, .. } => running
                 .iter()
                 .enumerate()
-                .filter_map(|(c, slot)| slot.as_ref().map(|r| (c, r.id, r.attempt)))
+                .flat_map(|(c, q)| q.iter().map(move |r| (c, r.id, r.attempt)))
                 .collect(),
             Children::Buffers { .. } => Vec::new(),
         }
@@ -1795,15 +1929,12 @@ impl BufferState {
                 for &c in idle {
                     h.write_usize(c);
                 }
-                for slot in running {
-                    match slot {
-                        None => h.write_u8(0),
-                        Some(r) => {
-                            h.write_u8(1);
-                            h.write_u64(r.id);
-                            h.write_u32(r.attempt);
-                            h.write_u8(u8::from(r.spec.is_some()));
-                        }
+                for q in running {
+                    h.write_usize(q.len());
+                    for r in q {
+                        h.write_u64(r.id);
+                        h.write_u32(r.attempt);
+                        h.write_u8(u8::from(r.spec.is_some()));
                     }
                 }
             }
@@ -1923,18 +2054,35 @@ impl BufferState {
     fn deliver(&mut self) -> Vec<BufferAction> {
         match &mut self.children {
             Children::Consumers { idle, running, .. } => {
+                // Batched dispatch with a fairness floor: never give one
+                // consumer more run-ahead than an even split of the
+                // current queue over the currently idle consumers would
+                // (`fair = ceil(q0/m)`), so batching cannot starve idle
+                // siblings of a short queue. With `dispatch_batch == 1`
+                // this is exactly the historical one-task-per-idler loop.
+                let q0 = self.queue.len();
+                let m = idle.len();
+                if q0 == 0 || m == 0 {
+                    return Vec::new();
+                }
+                let fair = q0.div_ceil(m);
+                let k = self.dispatch_batch.min(fair).max(1);
                 let mut out = Vec::new();
                 while !self.queue.is_empty() {
                     let Some(consumer) = idle.pop_front() else { break };
-                    let Some(task) = self.queue.pop() else {
+                    let tasks = self.queue.pop_n(k.min(self.queue.len()));
+                    if tasks.is_empty() {
                         idle.push_front(consumer);
                         break;
-                    };
-                    if let Some(slot) = running.get_mut(consumer) {
-                        *slot = Some(RunningTask::track(&task));
+                    }
+                    if let Some(q) = running.get_mut(consumer) {
+                        q.extend(tasks.iter().map(RunningTask::track));
                     }
                     self.msgs_out += 1;
-                    out.push(BufferAction::RunOn { consumer, task });
+                    if tasks.len() > 1 {
+                        self.dispatch_batches += 1;
+                    }
+                    out.push(BufferAction::RunBatch { consumer, tasks });
                 }
                 out
             }
@@ -2054,6 +2202,37 @@ impl BufferState {
         vec![BufferAction::FlushResults(std::mem::take(&mut self.store))]
     }
 
+    /// Coalesce one same-step `RequestTasks` + non-empty `FlushResults`
+    /// pair into a single [`BufferAction::Flush`] at the earlier action's
+    /// position (handlers emit the pair in either order). Both halves
+    /// still travel upstream and the receiver applies them atomically, so
+    /// this changes only the message economy — one send instead of two —
+    /// never the protocol outcome. No-op unless `coalesce_flush` is on.
+    fn seal(&mut self, out: Vec<BufferAction>) -> Vec<BufferAction> {
+        if !self.coalesce_flush {
+            return out;
+        }
+        let req = out.iter().position(|a| matches!(a, BufferAction::RequestTasks { .. }));
+        let flush = out
+            .iter()
+            .position(|a| matches!(a, BufferAction::FlushResults(rs) if !rs.is_empty()));
+        let (Some(ri), Some(fi)) = (req, flush) else { return out };
+        let mut amount = 0;
+        let mut results = Vec::new();
+        let mut sealed = Vec::with_capacity(out.len() - 1);
+        for (i, a) in out.into_iter().enumerate() {
+            match a {
+                BufferAction::RequestTasks { amount: x } if i == ri => amount = x,
+                BufferAction::FlushResults(rs) if i == fi => results = rs,
+                other => sealed.push(other),
+            }
+        }
+        sealed.insert(ri.min(fi), BufferAction::Flush { amount, results });
+        self.msgs_out -= 1;
+        self.coalesced_flushes += 1;
+        sealed
+    }
+
     fn final_flush(&mut self) -> Vec<BufferAction> {
         let mut out = Vec::new();
         if !self.store.is_empty() {
@@ -2118,6 +2297,15 @@ pub enum ProtoMsg {
     },
     /// Child → parent: batched results.
     Results(Vec<TaskResult>),
+    /// Child → parent: coalesced ascent — a credit request for `amount`
+    /// more tasks and a result flush riding one message (wire v3; see
+    /// [`BufferAction::Flush`]).
+    Flush {
+        /// Tasks wanted to refill the subtree's credit.
+        amount: usize,
+        /// The flushed results.
+        results: Vec<TaskResult>,
+    },
     /// Child → parent: recalled tasks returned upstream, stamps intact.
     Returned(Vec<TaskSpec>),
     /// Child → parent: the subtree is drained.
@@ -2190,6 +2378,14 @@ impl ProtoMsg {
                 h.write_usize(*thief_slot);
                 h.write_usize(*amount);
             }
+            ProtoMsg::Flush { amount, results } => {
+                h.write_u8(11);
+                h.write_usize(*amount);
+                h.write_usize(results.len());
+                for r in results {
+                    hash_result(r, h);
+                }
+            }
             ProtoMsg::StealGrant { from_slot, left, cancels, tasks } => {
                 h.write_u8(10);
                 h.write_usize(*from_slot);
@@ -2227,14 +2423,15 @@ pub struct ModelStep {
 /// the real runtimes act on the original actions.
 #[derive(Clone, Debug, PartialEq)]
 pub enum LocalEffect {
-    /// Start `task` on local consumer `consumer`.
-    RunOn {
+    /// Start `tasks` on local consumer `consumer`, back to back.
+    RunBatch {
         /// Local consumer index.
         consumer: usize,
-        /// The dispatched task.
-        task: TaskSpec,
+        /// The dispatched tasks, in execution order.
+        tasks: Vec<TaskSpec>,
     },
-    /// Kill the attempt running on `consumer`; it reports `RC_CANCELLED`.
+    /// Kill (or skip, if still queued in its batch) the attempt dispatched
+    /// to `consumer`; it reports `RC_CANCELLED` in its batch position.
     CancelRunning {
         /// Local consumer index.
         consumer: usize,
@@ -2319,8 +2516,8 @@ pub fn route_buffer_actions(
     let mut effects = Vec::new();
     for a in actions {
         match a {
-            BufferAction::RunOn { consumer, task } => {
-                effects.push(LocalEffect::RunOn { consumer, task });
+            BufferAction::RunBatch { consumer, tasks } => {
+                effects.push(LocalEffect::RunBatch { consumer, tasks });
             }
             BufferAction::CancelRunning { consumer, id } => {
                 effects.push(LocalEffect::CancelRunning { consumer, id });
@@ -2340,6 +2537,13 @@ pub fn route_buffer_actions(
             }
             BufferAction::FlushResults(results) => {
                 steps.push(ModelStep { from: me, to: parent, msg: ProtoMsg::Results(results) });
+            }
+            BufferAction::Flush { amount, results } => {
+                steps.push(ModelStep {
+                    from: me,
+                    to: parent,
+                    msg: ProtoMsg::Flush { amount, results },
+                });
             }
             BufferAction::ReturnTasks(tasks) => {
                 steps.push(ModelStep { from: me, to: parent, msg: ProtoMsg::Returned(tasks) });
@@ -2754,7 +2958,7 @@ mod tests {
         let acts = b.on_assign((0..8).map(task).collect());
         let runs = acts
             .iter()
-            .filter(|a| matches!(a, BufferAction::RunOn { .. }))
+            .filter(|a| matches!(a, BufferAction::RunBatch { .. }))
             .count();
         assert_eq!(runs, 4); // all four consumers started
         assert_eq!(b.queue_len(), 4);
@@ -2768,7 +2972,7 @@ mod tests {
         b.on_assign(vec![task(0), task(1), task(2)]);
         // queue=1, outstanding=1 (asked 4, got 3): level 2 == n_consumers, no request.
         let acts = b.on_done(0, result(0, 0));
-        assert!(acts.iter().any(|a| matches!(a, BufferAction::RunOn { consumer: 0, .. })));
+        assert!(acts.iter().any(|a| matches!(a, BufferAction::RunBatch { consumer: 0, .. })));
         // After dispatch queue=0, level=1 < 2 → request to restore credit 4.
         assert!(acts.iter().any(|a| matches!(a, BufferAction::RequestTasks { amount: 3 })));
         // Queue empty → results flush immediately.
@@ -2785,11 +2989,11 @@ mod tests {
         // The single consumer gets the priority-7 task first.
         assert!(acts
             .iter()
-            .any(|a| matches!(a, BufferAction::RunOn { consumer: 0, task } if task.id == 1)));
+            .any(|a| matches!(a, BufferAction::RunBatch { consumer: 0, tasks } if tasks.iter().any(|t| t.id == 1))));
         let acts = b.on_done(0, result(1, 0));
         assert!(acts
             .iter()
-            .any(|a| matches!(a, BufferAction::RunOn { consumer: 0, task } if task.id == 2)));
+            .any(|a| matches!(a, BufferAction::RunBatch { consumer: 0, tasks } if tasks.iter().any(|t| t.id == 2))));
     }
 
     #[test]
@@ -2804,14 +3008,14 @@ mod tests {
         let acts = b.on_done(0, failed(0, 0));
         assert!(!acts.iter().any(|a| matches!(a, BufferAction::FlushResults(_))), "{acts:?}");
         let redisp = acts.iter().find_map(|a| match a {
-            BufferAction::RunOn { task, .. } => Some(task.clone()),
+            BufferAction::RunBatch { tasks, .. } => tasks.first().cloned(),
             _ => None,
         });
         assert_eq!(redisp.as_ref().map(|t| t.attempt), Some(1));
         assert_eq!(b.retried, 1);
         // Attempt 1 fails: one retry left.
         let acts = b.on_done(0, failed(0, 0));
-        assert!(acts.iter().any(|a| matches!(a, BufferAction::RunOn { task, .. } if task.attempt == 2)));
+        assert!(acts.iter().any(|a| matches!(a, BufferAction::RunBatch { tasks, .. } if tasks.iter().any(|t| t.attempt == 2))));
         // Attempt 2 fails: retries exhausted → the failure is flushed with
         // the attempt count on it.
         let acts = b.on_done(0, failed(0, 0));
@@ -3150,7 +3354,7 @@ mod tests {
         thief.on_done(0, result(102, 0));
         thief.on_done(1, result(101, 1));
         let acts = thief.on_steal_grant(1, left, Vec::new(), granted);
-        assert!(acts.iter().any(|a| matches!(a, BufferAction::RunOn { .. })), "{acts:?}");
+        assert!(acts.iter().any(|a| matches!(a, BufferAction::RunBatch { .. })), "{acts:?}");
         assert_eq!(thief.steals_received, 3);
         assert_eq!(thief.steals_failed, 0);
         assert_eq!(victim.steals_given, 3);
@@ -3246,8 +3450,10 @@ mod tests {
                 next += n_tasks.min(7);
                 loop {
                     for a in actions.drain(..) {
-                        if let BufferAction::RunOn { consumer, task } = a {
-                            running.push((consumer, task.id));
+                        if let BufferAction::RunBatch { consumer, tasks } = a {
+                            for t in tasks {
+                                running.push((consumer, t.id));
+                            }
                         }
                     }
                     if let Some((c, id)) = running.pop() {
@@ -3473,11 +3679,11 @@ mod tests {
         // …and a grant racing the recall bounces straight back.
         let acts = b.on_assign(vec![task(9)]);
         assert_eq!(returned_ids(&acts), vec![9]);
-        assert!(!acts.iter().any(|a| matches!(a, BufferAction::RunOn { .. })));
+        assert!(!acts.iter().any(|a| matches!(a, BufferAction::RunBatch { .. })));
         // Completions flow normally; nothing new is dispatched; the ack
         // fires with the last running attempt.
         let acts = b.on_done(0, result(0, 0));
-        assert!(!acts.iter().any(|a| matches!(a, BufferAction::RunOn { .. })));
+        assert!(!acts.iter().any(|a| matches!(a, BufferAction::RunBatch { .. })));
         assert!(!acts.iter().any(|a| matches!(a, BufferAction::AckRecall)));
         let acts = b.on_done(1, result(1, 1));
         assert!(
@@ -3574,7 +3780,7 @@ mod tests {
         thief.on_done(0, result(1, 0)); // consumer idle, still no ack
         let acts = thief.on_steal_grant(1, 0, Vec::new(), vec![task(50)]);
         assert_eq!(returned_ids(&acts), vec![50], "loot bounces upstream");
-        assert!(!acts.iter().any(|a| matches!(a, BufferAction::RunOn { .. })));
+        assert!(!acts.iter().any(|a| matches!(a, BufferAction::RunBatch { .. })));
         assert_eq!(acts.last(), Some(&BufferAction::AckRecall));
         // A recalling victim surrenders nothing.
         let mut victim = BufferState::new(1, 8, 100).with_stealing(1, 1, StealPolicy::RoundRobin);

@@ -32,7 +32,7 @@
 
 use std::collections::HashSet;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -45,32 +45,48 @@ use crate::tasklib::{
     Payload, SearchEngine, TaskId, TaskResult, TaskSink, TaskSpec, RC_CANCELLED, RC_TIMEOUT,
 };
 
+/// Shard count of [`CancelSet`]. Eight spreads the consumers of even the
+/// widest leaf across enough locks that the per-slice `is_cancelled`
+/// polls of busy executors stop serializing on one mutex.
+const CANCEL_SHARDS: u64 = 8;
+
 /// Kill switch shared between a leaf node and its consumers: ids whose
 /// *running* attempt should be aborted. The leaf's node thread marks an
 /// id when the protocol emits [`BufferAction::CancelRunning`]; executors
 /// poll [`CancelSet::is_cancelled`] from their wait loops and report
 /// [`RC_CANCELLED`] when it fires. Executors that never poll simply let
 /// the attempt finish — cancellation stays best-effort for them.
+///
+/// This set — not the task queue, which is owned by its node thread — is
+/// the leaf's only cross-thread hot-path lock: every polling executor
+/// hits it once per wait slice. It is therefore sharded by `id %
+/// CANCEL_SHARDS` under reader/writer locks, so concurrent polls (the
+/// overwhelmingly common case) never contend with each other, only with
+/// the rare mark/clear writes to the same shard.
 #[derive(Default)]
-pub struct CancelSet(Mutex<HashSet<TaskId>>);
+pub struct CancelSet([RwLock<HashSet<TaskId>>; CANCEL_SHARDS as usize]);
 
 impl CancelSet {
     pub fn new() -> Self {
         Self::default()
     }
 
+    fn shard(&self, id: TaskId) -> &RwLock<HashSet<TaskId>> {
+        &self.0[(id % CANCEL_SHARDS) as usize]
+    }
+
     /// Mark `id`: its running attempt should be killed.
     pub fn request(&self, id: TaskId) {
-        self.0.lock().unwrap().insert(id);
+        self.shard(id).write().unwrap().insert(id);
     }
 
     pub fn is_cancelled(&self, id: TaskId) -> bool {
-        self.0.lock().unwrap().contains(&id)
+        self.shard(id).read().unwrap().contains(&id)
     }
 
     /// Retire the mark once the attempt finished (killed or not).
     pub fn clear(&self, id: TaskId) {
-        self.0.lock().unwrap().remove(&id);
+        self.shard(id).write().unwrap().remove(&id);
     }
 }
 
@@ -156,6 +172,9 @@ impl Executor for SleepExecutor {
 pub(crate) enum ToProducer {
     Request { buffer: usize, amount: usize },
     Results(Vec<TaskResult>),
+    /// Coalesced credit request + result flush from root slot `buffer`:
+    /// one channel send where an uncoalesced root would pay two.
+    Flush { buffer: usize, amount: usize, results: Vec<TaskResult> },
     /// Recalled tasks returning from a draining tree (stamps intact).
     Returned(Vec<TaskSpec>),
     /// Root slot `buffer` reports its subtree drained.
@@ -164,9 +183,13 @@ pub(crate) enum ToProducer {
 
 pub(crate) enum ToBuffer {
     Assign(Vec<TaskSpec>),
-    Done { consumer: usize, result: TaskResult },
+    /// A consumer finished its whole dispatched batch: every result rides
+    /// one channel send (batch length 1 under `dispatch_batch = 1`).
+    DoneBatch { consumer: usize, results: Vec<TaskResult> },
     ChildRequest { child: usize, amount: usize },
     ChildResults(Vec<TaskResult>),
+    /// Coalesced credit request + result flush from child slot `child`.
+    ChildFlush { child: usize, amount: usize, results: Vec<TaskResult> },
     /// Steal request from the sibling at slot `thief`.
     Steal { thief: usize, amount: usize },
     /// Reply to our steal request (possibly empty): the victim's slot, its
@@ -187,7 +210,9 @@ pub(crate) enum ToBuffer {
 }
 
 enum ToConsumer {
-    Run(TaskSpec),
+    /// Run the tasks back to back, reporting all results in one
+    /// [`ToBuffer::DoneBatch`] — N executions per channel round trip.
+    RunBatch(Vec<TaskSpec>),
     Stop,
 }
 
@@ -460,6 +485,23 @@ pub fn run_scheduler(
                     for r in &results {
                         // Cancelled tasks never ran: keep them out of the
                         // filling-rate trace.
+                        if !r.cancelled() {
+                            filling.record(r);
+                        }
+                        engine.on_done(r, &mut sink);
+                    }
+                    all_results.extend(results);
+                    drain_engine(&mut state, &mut sink, &mut *engine, &root_txs, &mut all_results);
+                }
+                ToProducer::Flush { buffer, amount, results } => {
+                    let acts = state.on_flush(buffer, amount, results.len());
+                    perform_producer(acts, &root_txs);
+                    if let Some(ctrl) = controller.as_mut() {
+                        for r in &results {
+                            ctrl.observe_result(r);
+                        }
+                    }
+                    for r in &results {
                         if !r.cancelled() {
                             filling.record(r);
                         }
@@ -886,9 +928,9 @@ fn perform_node_actions(
     let mut stopping = false;
     for act in acts {
         match act {
-            BufferAction::RunOn { consumer, task } => {
+            BufferAction::RunBatch { consumer, tasks } => {
                 if let ChildLink::Consumers(cons) = children {
-                    let _ = cons[consumer].send(ToConsumer::Run(task));
+                    let _ = cons[consumer].send(ToConsumer::RunBatch(tasks));
                 }
             }
             BufferAction::SendToChild { child, tasks } => {
@@ -916,6 +958,14 @@ fn perform_node_actions(
                     }
                 }
             }
+            BufferAction::Flush { amount, results } => match parent {
+                ParentLink::Producer(tx) => {
+                    let _ = tx.send(ToProducer::Flush { buffer: slot, amount, results });
+                }
+                ParentLink::Buffer(tx) => {
+                    let _ = tx.send(ToBuffer::ChildFlush { child: slot, amount, results });
+                }
+            },
             BufferAction::StealRequest { victim, amount } => {
                 let _ = siblings[victim].send(ToBuffer::Steal { thief: slot, amount });
             }
@@ -1014,15 +1064,20 @@ fn node_loop(
         }
         let acts = match msg {
             Ok(ToBuffer::Assign(tasks)) => state.on_assign(tasks),
-            Ok(ToBuffer::Done { consumer, result }) => {
-                // Retire any kill mark that lost the race to this
-                // completion — the consumer-side clear can run *before*
+            Ok(ToBuffer::DoneBatch { consumer, results }) => {
+                // Retire any kill marks that lost the race to these
+                // completions — the consumer-side clear can run *before*
                 // the mark is even set, which would leak it forever.
-                cancel.clear(result.id);
-                state.on_done(consumer, result)
+                for r in &results {
+                    cancel.clear(r.id);
+                }
+                state.on_done_batch(consumer, results)
             }
             Ok(ToBuffer::ChildRequest { child, amount }) => state.on_child_request(child, amount),
             Ok(ToBuffer::ChildResults(rs)) => state.on_child_results(rs),
+            Ok(ToBuffer::ChildFlush { child, amount, results }) => {
+                state.on_child_flush(child, amount, results)
+            }
             // In the threaded runtime the routing token IS the slot.
             Ok(ToBuffer::Steal { thief, amount }) => state.on_steal_request(thief, thief, amount),
             Ok(ToBuffer::Stolen { from_slot, left, cancels, tasks }) => {
@@ -1053,24 +1108,34 @@ fn consumer_loop(
 ) {
     while let Ok(msg) = rx.recv() {
         match msg {
-            ToConsumer::Run(task) => {
-                let begin = t0.elapsed().as_secs_f64();
-                let out = exec.run_cancellable(&task, rank, &cancel);
-                // Retire any kill mark: it either fired (rc is
-                // RC_CANCELLED) or lost the race to completion.
-                cancel.clear(task.id);
-                let finish = t0.elapsed().as_secs_f64();
-                let result = TaskResult {
-                    id: task.id,
-                    consumer: rank,
-                    results: out.results,
-                    begin,
-                    finish,
-                    rc: out.rc,
-                    attempt: task.attempt,
-                    timed_out: out.timed_out,
-                };
-                if back.send(ToBuffer::Done { consumer: local, result }).is_err() {
+            ToConsumer::RunBatch(tasks) => {
+                let mut results = Vec::with_capacity(tasks.len());
+                for task in tasks {
+                    let begin = t0.elapsed().as_secs_f64();
+                    // A kill mark landing between dispatch and execution
+                    // aborts the queued attempt before it starts — the
+                    // batched equivalent of killing a running task.
+                    let out = if cancel.is_cancelled(task.id) {
+                        ExecOutcome { results: Vec::new(), rc: RC_CANCELLED, timed_out: false }
+                    } else {
+                        exec.run_cancellable(&task, rank, &cancel)
+                    };
+                    // Retire any kill mark: it either fired (rc is
+                    // RC_CANCELLED) or lost the race to completion.
+                    cancel.clear(task.id);
+                    let finish = t0.elapsed().as_secs_f64();
+                    results.push(TaskResult {
+                        id: task.id,
+                        consumer: rank,
+                        results: out.results,
+                        begin,
+                        finish,
+                        rc: out.rc,
+                        attempt: task.attempt,
+                        timed_out: out.timed_out,
+                    });
+                }
+                if back.send(ToBuffer::DoneBatch { consumer: local, results }).is_err() {
                     break;
                 }
             }

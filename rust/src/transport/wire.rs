@@ -21,8 +21,10 @@ use crate::tasklib::{Payload, TaskId, TaskResult, TaskSpec};
 
 /// Version carried in [`WireMsg::Hello`]; a root refuses mismatches.
 /// v2 added multi-tenancy: the class byte on every task and the class
-/// registry in [`WireConfig`].
-pub const PROTO_VERSION: u32 = 2;
+/// registry in [`WireConfig`]. v3 added the batched hot path: the
+/// coalesced [`WireMsg::Flush`] uplink frame and the
+/// `dispatch_batch`/`coalesce_flush` knobs in [`WireConfig`].
+pub const PROTO_VERSION: u32 = 3;
 
 /// Upper bound on one frame's body, to fail fast on stream corruption
 /// (a garbage length prefix) instead of attempting a huge allocation.
@@ -88,6 +90,15 @@ pub enum WireMsg {
     },
     /// Worker → root: batched results (consumer ranks already globalized).
     Results(Vec<TaskResult>),
+    /// Worker → root: coalesced credit request + result flush — the
+    /// gateway's `Flush` protocol step rides one frame instead of a
+    /// `Request` plus a `Results` (consumer ranks already globalized).
+    Flush {
+        /// Tasks wanted to refill the subtree's credit.
+        amount: u64,
+        /// Completed results ascending with the request (possibly empty).
+        results: Vec<TaskResult>,
+    },
     /// Worker → root: queued tasks returned by a recall, stamps intact.
     Returned(Vec<TaskSpec>),
     /// Worker → root: the subtree is drained.
@@ -134,6 +145,11 @@ pub struct WireConfig {
     /// Tenant-class registry (empty = single-tenant): workers rebuild the
     /// same per-class lanes, weights and policies as the root's subtree.
     pub classes: Vec<crate::tenancy::JobClass>,
+    /// Run-ahead dispatch depth per consumer (1 = per-task dispatch).
+    pub dispatch_batch: u64,
+    /// Merge same-step credit requests and result flushes into one
+    /// upstream [`WireMsg::Flush`].
+    pub coalesce_flush: bool,
 }
 
 impl WireConfig {
@@ -155,6 +171,8 @@ impl WireConfig {
             level: level as u64,
             rank_base: rank_base as u64,
             classes: cfg.classes.clone(),
+            dispatch_batch: cfg.dispatch_batch as u64,
+            coalesce_flush: cfg.coalesce_flush,
         }
     }
 
@@ -176,6 +194,8 @@ impl WireConfig {
             time_scale: self.time_scale,
             flush_interval_ms: self.flush_interval_ms.max(1),
             classes: self.classes.clone(),
+            dispatch_batch: (self.dispatch_batch as usize).max(1),
+            coalesce_flush: self.coalesce_flush,
         }
     }
 }
@@ -191,6 +211,7 @@ const TAG_REQUEST: u8 = 0x20;
 const TAG_RESULTS: u8 = 0x21;
 const TAG_RETURNED: u8 = 0x22;
 const TAG_RECALL_ACK: u8 = 0x23;
+const TAG_FLUSH: u8 = 0x24;
 const TAG_PING: u8 = 0x30;
 
 /// Encode `msg` as one complete frame (length prefix included).
@@ -232,6 +253,14 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
             e.u8(TAG_RETURNED);
             e.tasks(tasks);
         }
+        WireMsg::Flush { amount, results } => {
+            e.u8(TAG_FLUSH);
+            e.u64(*amount);
+            e.u32(results.len() as u32);
+            for r in results {
+                e.result(r);
+            }
+        }
         WireMsg::RecallAck => e.u8(TAG_RECALL_ACK),
         WireMsg::Ping => e.u8(TAG_PING),
     }
@@ -263,6 +292,15 @@ pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
             WireMsg::Results(out)
         }
         TAG_RETURNED => WireMsg::Returned(d.tasks()?),
+        TAG_FLUSH => {
+            let amount = d.u64()?;
+            let n = d.count("flush results")?;
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                out.push(d.result()?);
+            }
+            WireMsg::Flush { amount, results: out }
+        }
         TAG_RECALL_ACK => WireMsg::RecallAck,
         TAG_PING => WireMsg::Ping,
         t => return Err(d.err(&format!("unknown message tag 0x{t:02x}"))),
@@ -478,6 +516,8 @@ impl Enc {
                 }
             }
         }
+        self.u64(c.dispatch_batch);
+        self.bool(c.coalesce_flush);
     }
 }
 
@@ -671,6 +711,8 @@ impl<'a> Dec<'a> {
             let quota = if self.bool()? { Some(self.u64()? as usize) } else { None };
             classes.push(crate::tenancy::JobClass { name, policy, weight, quota });
         }
+        let dispatch_batch = self.u64()?;
+        let coalesce_flush = self.bool()?;
         Ok(WireConfig {
             np,
             consumers_per_buffer,
@@ -686,6 +728,8 @@ impl<'a> Dec<'a> {
             level,
             rank_base,
             classes,
+            dispatch_batch,
+            coalesce_flush,
         })
     }
 }
@@ -759,6 +803,32 @@ mod tests {
                 },
             ]),
             WireMsg::Returned(vec![spec(5, Payload::Sleep { seconds: 2.0 })]),
+            WireMsg::Flush {
+                amount: 96,
+                results: vec![
+                    TaskResult {
+                        id: 11,
+                        consumer: 7,
+                        results: vec![f64::NAN, 3.5],
+                        begin: 2.0,
+                        finish: 2.5,
+                        rc: 0,
+                        attempt: 1,
+                        timed_out: false,
+                    },
+                    TaskResult {
+                        id: 12,
+                        consumer: usize::MAX,
+                        results: vec![],
+                        begin: 0.0,
+                        finish: 0.0,
+                        rc: crate::tasklib::RC_CANCELLED,
+                        attempt: 0,
+                        timed_out: false,
+                    },
+                ],
+            },
+            WireMsg::Flush { amount: 0, results: vec![] },
             WireMsg::RecallAck,
             WireMsg::Ping,
         ];
@@ -963,6 +1033,19 @@ mod tests {
                 timed_out: false,
             }]),
             WireMsg::Returned(vec![spec(5, Payload::Sleep { seconds: 2.0 })]),
+            WireMsg::Flush {
+                amount: 48,
+                results: vec![TaskResult {
+                    id: 21,
+                    consumer: 5,
+                    results: vec![0.25],
+                    begin: 1.0,
+                    finish: 1.5,
+                    rc: 0,
+                    attempt: 1,
+                    timed_out: false,
+                }],
+            },
             WireMsg::RecallAck,
             WireMsg::Ping,
         ];
@@ -1018,6 +1101,19 @@ mod tests {
                 "{msg:?}: count bomb in the element-count field must be rejected"
             );
         }
+        // Flush carries its result count at body bytes 9..13 (after the
+        // tag byte and the u64 credit amount), so the 1..5 sweep above
+        // misses it — bomb that field directly.
+        {
+            let frame = encode(&WireMsg::Flush { amount: 7, results: vec![] });
+            let mut bomb = frame[4..].to_vec();
+            assert_eq!(bomb.len(), 13, "tag + u64 amount + u32 count");
+            bomb[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+            assert!(
+                decode_body(&bomb).is_err(),
+                "Flush: count bomb in the result-count field must be rejected"
+            );
+        }
         // The FrameReader path: a length prefix just over MAX_FRAME is
         // rejected without buffering gigabytes.
         let mut r = FrameReader::new();
@@ -1036,6 +1132,8 @@ mod tests {
                 JobClass::new("steady", 2).quota(64),
                 JobClass::new("burst", 4).policy(SchedPolicy::Deadline),
             ],
+            dispatch_batch: 8,
+            coalesce_flush: true,
             ..Default::default()
         };
         let w = WireConfig::from_scheduler(&cfg, 96, 1, 384);
@@ -1048,6 +1146,8 @@ mod tests {
         assert_eq!(back.policy, SchedPolicy::Aging { step: 7.5 });
         assert!(back.steal);
         assert_eq!(back.classes, cfg.classes);
+        assert_eq!(back.dispatch_batch, 8, "v3 batching knob survives the wire");
+        assert!(back.coalesce_flush);
         assert_eq!(w.rank_base, 384);
         assert_eq!(w.level, 1);
     }

@@ -46,6 +46,18 @@ fn exhaustive_deep4_with_kill_holds_all_oracles() {
 }
 
 #[test]
+fn exhaustive_batched2_holds_all_oracles() {
+    // The batched hot path (dispatch_batch=2, coalesced Flush ascent)
+    // must satisfy the same oracles as the unbatched protocol across
+    // every CI-sized interleaving, faults included.
+    let cfg = small("batched2", FaultSet { steal: true, cancel: true, recall: true, kill: false });
+    let report = run_check(&cfg).expect("valid config");
+    assert!(report.passed(), "violation: {:?}", report.counterexample);
+    assert!(report.exhausted, "CI bound must drain the state space, not hit the budget");
+    assert!(report.states > 0);
+}
+
+#[test]
 fn seeded_drop_returned_is_caught_minimized_and_replayable() {
     // Arm the exact bug a missing `on_returned` call would be: the
     // producer swallows the first Returned batch. Any schedule with a
@@ -142,7 +154,11 @@ fn cli_usage_errors_exit_two() {
 
 #[test]
 fn cli_replay_accepts_committed_fixtures() {
-    for fixture in ["steal_cancel_recall_overlap.trace", "dead_link_during_recall.trace"] {
+    for fixture in [
+        "steal_cancel_recall_overlap.trace",
+        "dead_link_during_recall.trace",
+        "batched_dispatch_coalesced_ascent.trace",
+    ] {
         let path = format!("{}/tests/fixtures/check/{fixture}", env!("CARGO_MANIFEST_DIR"));
         let out = check_cmd().args(["check", "--replay", &path]).output().expect("spawn caravan");
         let stdout = String::from_utf8_lossy(&out.stdout);

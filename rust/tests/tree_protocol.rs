@@ -892,6 +892,197 @@ fn class_stats_conserve_dispatches_per_class_in_des() {
     }
 }
 
+/// Order-insensitive fingerprint of a full DES report: makespan bits,
+/// every result field bit-for-bit, and the per-node counters. Two runs
+/// with equal fingerprints produced the same report.
+fn report_fingerprint(r: &DesReport) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: u64| {
+        h = (h ^ v).wrapping_mul(0x1000_0000_01b3);
+    };
+    mix(r.makespan.to_bits());
+    let mut rows: Vec<&caravan::tasklib::TaskResult> = r.results.iter().collect();
+    rows.sort_by_key(|x| x.id);
+    for x in rows {
+        mix(x.id);
+        mix(x.consumer as u64);
+        mix(x.begin.to_bits());
+        mix(x.finish.to_bits());
+        mix(x.rc as u64);
+        mix(x.attempt as u64);
+        mix(x.timed_out as u64);
+        for v in &x.results {
+            mix(v.to_bits());
+        }
+    }
+    for s in &r.node_stats {
+        mix(s.node as u64);
+        mix(s.popped);
+        mix(s.msgs_in);
+        mix(s.msgs_out);
+        mix(s.max_queue as u64);
+        mix(s.dispatch_batches);
+        mix(s.coalesced_flushes);
+    }
+    h
+}
+
+/// Outcome projection of a report: everything the *engine* can observe
+/// about each task — id, exit status, final attempt index, and the
+/// result values, bit-for-bit. Timing (begin/finish/makespan) and
+/// placement (which consumer) are deliberately excluded: batching is a
+/// transport optimisation and is allowed to move work in time and
+/// space, but never to change what happened to a task.
+fn outcome_projection(r: &DesReport) -> Vec<(u64, i32, u32, Vec<u64>)> {
+    let mut k: Vec<(u64, i32, u32, Vec<u64>)> = r
+        .results
+        .iter()
+        .map(|x| (x.id, x.rc, x.attempt, x.results.iter().map(|v| v.to_bits()).collect()))
+        .collect();
+    k.sort();
+    k
+}
+
+#[test]
+fn dispatch_batching_preserves_outcomes_bit_for_bit() {
+    // Tentpole equivalence property (Issue 10): the batched hot path
+    // (dispatch_batch > 1 + coalesced Flush ascent) and the pre-batching
+    // protocol (dispatch_batch = 1, per-message ascent) are the *same
+    // scheduler* as far as outcomes go. Each mode is deterministic —
+    // repeat runs produce bit-identical full reports — and across modes
+    // the sorted outcome projections are identical, for every
+    // SchedPolicy and for a two-class tenant mix.
+    use caravan::tenancy::JobClass;
+    for policy in [
+        SchedPolicy::Strict,
+        SchedPolicy::Deadline,
+        SchedPolicy::Aging { step: 30.0 },
+    ] {
+        for classed in [false, true] {
+            let n = 24 * 6;
+            let run = |batch: usize, coalesce: bool| {
+                let mut cfg = shape(24, 4, 2, 3, true);
+                cfg.policy = policy;
+                cfg.flush_every = 4;
+                cfg.dispatch_batch = batch;
+                cfg.coalesce_flush = coalesce;
+                if classed {
+                    cfg.classes = vec![
+                        JobClass::new("a", 3),
+                        JobClass::new("b", 1).policy(SchedPolicy::Deadline),
+                    ];
+                }
+                let mut dcfg = DesConfig::new(cfg.np);
+                dcfg.sched = cfg;
+                run_des(
+                    &dcfg,
+                    Box::new(ClassedSleeps { n, n_classes: if classed { 2 } else { 1 }, secs: 1.0 }),
+                    Box::new(SleepDurations),
+                )
+            };
+            let label = format!("{policy:?} classed={classed}");
+
+            // Determinism within each mode: the whole report, bit-for-bit.
+            let batched = run(4, true);
+            assert_eq!(
+                report_fingerprint(&batched),
+                report_fingerprint(&run(4, true)),
+                "{label}: batched runs must be bit-identical"
+            );
+            let unbatched = run(1, false);
+            assert_eq!(
+                report_fingerprint(&unbatched),
+                report_fingerprint(&run(1, false)),
+                "{label}: batch-size-1 runs must be bit-identical"
+            );
+
+            // Equivalence across modes: identical outcome projections.
+            assert_eq!(
+                outcome_projection(&batched),
+                outcome_projection(&unbatched),
+                "{label}: batching changed a task's outcome"
+            );
+
+            // Both modes complete every task exactly once, cleanly.
+            for (mode, r) in [("batched", &batched), ("batch-1", &unbatched)] {
+                assert_eq!(r.results.len(), n, "{label} {mode}");
+                assert!(ids_complete(r, n), "{label} {mode}");
+                assert_eq!(r.filling.overlap_violations(), 0, "{label} {mode}");
+                if classed {
+                    class_stats_conserve(&r.node_stats, &format!("{label} {mode}"));
+                }
+            }
+
+            // The knobs actually engaged: the batched run coalesced, the
+            // batch-1 run stayed on the one-message-per-event path.
+            let batches = |r: &DesReport| -> u64 {
+                r.node_stats.iter().map(|s| s.dispatch_batches).sum()
+            };
+            let coalesced = |r: &DesReport| -> u64 {
+                r.node_stats.iter().map(|s| s.coalesced_flushes).sum()
+            };
+            assert!(batches(&batched) > 0, "{label}: no multi-task dispatch ever formed");
+            assert!(coalesced(&batched) > 0, "{label}: no ascent frame was ever coalesced");
+            assert_eq!(batches(&unbatched), 0, "{label}: batch-1 must never batch");
+            assert_eq!(coalesced(&unbatched), 0, "{label}: coalescing was off");
+        }
+    }
+}
+
+/// Shared body for the large-scale DES soaks: `np` consumers, two
+/// tenant classes, ~2 tasks per consumer, the batched hot path on. The
+/// assertions are pure conservation — exactly one result per id, zero
+/// overlap violations, per-class pops decomposing every node total, and
+/// the leaf-level class split recovering the submitted mix — plus proof
+/// that batching engaged at scale.
+fn soak(np: usize) {
+    use caravan::tenancy::JobClass;
+    let mut cfg = shape(np, 384, 2, 64, false);
+    cfg.classes = vec![JobClass::new("steady", 3), JobClass::new("burst", 1)];
+    cfg.dispatch_batch = 8;
+    cfg.coalesce_flush = true;
+    cfg.flush_every = 16;
+    let n = np * 2;
+    let mut dcfg = DesConfig::new(cfg.np);
+    dcfg.sched = cfg;
+    let r = run_des(
+        &dcfg,
+        Box::new(ClassedSleeps { n, n_classes: 2, secs: 1.0 }),
+        Box::new(SleepDurations),
+    );
+    assert_eq!(r.results.len(), n, "np={np}: every submitted task must report");
+    assert!(ids_complete(&r, n), "np={np}: ids must be 0..n exactly once");
+    assert_eq!(r.filling.overlap_violations(), 0, "np={np}");
+    class_stats_conserve(&r.node_stats, &format!("soak np={np}"));
+    for class in 0..2u8 {
+        let leaf: u64 = r
+            .node_stats
+            .iter()
+            .filter(|s| s.level == 2)
+            .flat_map(|s| &s.class_stats)
+            .filter(|c| c.class == class)
+            .map(|c| c.popped)
+            .sum();
+        assert_eq!(leaf, n as u64 / 2, "np={np} class {class}: dispatched exactly once");
+    }
+    let batches: u64 = r.node_stats.iter().map(|s| s.dispatch_batches).sum();
+    let coalesced: u64 = r.node_stats.iter().map(|s| s.coalesced_flushes).sum();
+    assert!(batches > 0, "np={np}: batching never engaged");
+    assert!(coalesced > 0, "np={np}: ascent coalescing never engaged");
+}
+
+#[test]
+#[ignore = "full-scale soak (10^6 consumers, 2x10^6 tasks); run explicitly"]
+fn soak_million_consumers_conserves_tasks() {
+    soak(1_000_000);
+}
+
+#[test]
+#[ignore = "large soak (10^5 consumers); run by the CI bench-smoke job via --ignored"]
+fn soak_hundred_thousand_consumers_conserves_tasks() {
+    soak(100_000);
+}
+
 #[test]
 fn threaded_class_stats_conserve_dispatches() {
     // The same decomposition on the real runtime.
@@ -965,7 +1156,8 @@ fn threaded_runtime_and_des_agree_on_tasks_executed() {
 // ------------------------------------------------ model-checker trace fixtures
 
 /// The committed interleaving fixtures — steal+cancel+recall overlap on
-/// flat2, and a dead link landing mid-recall on deep4 — must replay
+/// flat2, a dead link landing mid-recall on deep4, and a cancel racing
+/// a two-task RunBatch with coalesced ascent on batched2 — must replay
 /// green through the model checker: every step-wise oracle holds along
 /// the schedule. The replayer skip-repairs steps that drift out of
 /// enabledness, so protocol-internal re-batching cannot break these; a
@@ -978,6 +1170,10 @@ fn committed_check_traces_replay_green() {
             include_str!("fixtures/check/steal_cancel_recall_overlap.trace"),
         ),
         ("dead_link_during_recall", include_str!("fixtures/check/dead_link_during_recall.trace")),
+        (
+            "batched_dispatch_coalesced_ascent",
+            include_str!("fixtures/check/batched_dispatch_coalesced_ascent.trace"),
+        ),
     ] {
         let report = caravan::check::replay_trace_text(text)
             .unwrap_or_else(|e| panic!("fixture {name} failed to parse: {e}"));
